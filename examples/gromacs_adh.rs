@@ -1,0 +1,75 @@
+//! Fig. 2 driver: Gromacs/ADH checkpoint time vs. rank count, Burst Buffer
+//! vs. Lustre (CSCRATCH).
+//!
+//! Reproduces the figure's three series for 4→64 ranks × 8 OpenMP threads:
+//! aggregate memory (blue), checkpoint time on Burst Buffers (purple), and
+//! on CSCRATCH (green). The paper's reading: "performance on the Burst
+//! Buffers is superior to that on the CSCRATCH and also scales better."
+//!
+//! Run: cargo run --release --example gromacs_adh
+
+use anyhow::Result;
+
+use mana::config::{AppKind, RunConfig};
+use mana::fs::FsKind;
+use mana::sim::JobSim;
+use mana::util::bytes::human;
+
+fn ckpt_time(ranks: u32, fs: FsKind) -> Result<(u64, f64, f64)> {
+    let mut cfg = RunConfig::new(AppKind::Gromacs, ranks);
+    cfg.job = format!("adh-{ranks}r-{fs:?}");
+    cfg.fs = fs;
+    // ADH-analog footprint: the app default (1.5 GiB/rank).
+    let mut sim = JobSim::launch(cfg, None)?;
+    sim.run_steps(3)?;
+    let rep = sim
+        .checkpoint()
+        .map_err(|e| anyhow::anyhow!("ckpt: {e}"))?;
+    let restart_secs = {
+        let cfg = sim.cfg.clone();
+        let fs = sim.kill();
+        let (_, rrep) = JobSim::restart_from(cfg, None, fs)
+            .map_err(|e| anyhow::anyhow!("restart: {e}"))?;
+        rrep.read_secs
+    };
+    Ok((rep.image_bytes, rep.write_secs, restart_secs))
+}
+
+fn main() -> Result<()> {
+    println!("=== Fig. 2: Gromacs(ADH) checkpoint time with MANA on Cori ===");
+    println!("    (ranks x 8 OpenMP threads; virtual time from the calibrated FS models)\n");
+    println!(
+        "{:>6} {:>6} {:>12} {:>14} {:>14} {:>9}",
+        "ranks", "nodes", "agg memory", "BB ckpt (s)", "Lustre ckpt (s)", "speedup"
+    );
+
+    let mut bb_series = Vec::new();
+    let mut lu_series = Vec::new();
+    for &ranks in &[4u32, 8, 16, 32, 64] {
+        let (mem, bb_w, _bb_r) = ckpt_time(ranks, FsKind::BurstBuffer)?;
+        let (_, lu_w, _lu_r) = ckpt_time(ranks, FsKind::Lustre)?;
+        bb_series.push(bb_w);
+        lu_series.push(lu_w);
+        println!(
+            "{ranks:>6} {:>6} {:>12} {bb_w:>14.2} {lu_w:>15.2} {:>8.1}x",
+            ranks.div_ceil(8),
+            human(mem),
+            lu_w / bb_w
+        );
+    }
+
+    // The figure's qualitative claims, checked.
+    let bb_flat = bb_series.iter().cloned().fold(0.0, f64::max)
+        / bb_series.iter().cloned().fold(f64::MAX, f64::min);
+    let lu_growth = lu_series.last().unwrap() / lu_series.first().unwrap();
+    println!(
+        "\nBB max/min = {bb_flat:.2} (near-flat); Lustre 64r/4r = {lu_growth:.2} (grows)"
+    );
+    assert!(
+        bb_series.iter().zip(&lu_series).all(|(b, l)| b < l),
+        "BB must beat Lustre at every scale"
+    );
+    assert!(bb_flat < 3.0 && lu_growth > 1.2);
+    println!("OK: Burst Buffer is superior and scales better (paper's Fig. 2 shape).");
+    Ok(())
+}

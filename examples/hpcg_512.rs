@@ -1,0 +1,70 @@
+//! The paper's HPCG evaluation (in-text table): 512 ranks x 8 threads,
+//! 5.8 TB aggregate memory.
+//!
+//! Paper numbers: checkpoint ~30 s on Burst Buffers vs >600 s on CSCRATCH
+//! (>20x); restart speedup "more modest at about 2.5 times".
+//!
+//! Run: cargo run --release --example hpcg_512
+
+use anyhow::Result;
+
+use mana::config::{AppKind, RunConfig};
+use mana::fs::FsKind;
+use mana::sim::JobSim;
+use mana::util::bytes::human;
+
+struct Row {
+    fs: &'static str,
+    ckpt_secs: f64,
+    restart_secs: f64,
+}
+
+fn measure(fs: FsKind) -> Result<(u64, Row)> {
+    let mut cfg = RunConfig::new(AppKind::Hpcg, 512);
+    cfg.job = format!("hpcg-512r-{fs:?}");
+    cfg.fs = fs;
+    let mut sim = JobSim::launch(cfg, None)?;
+    sim.run_steps(2)?;
+    let agg = sim.aggregate_memory();
+    let rep = sim
+        .checkpoint()
+        .map_err(|e| anyhow::anyhow!("ckpt: {e}"))?;
+    let cfg = sim.cfg.clone();
+    let fsim = sim.kill();
+    let (_, rrep) =
+        JobSim::restart_from(cfg, None, fsim).map_err(|e| anyhow::anyhow!("restart: {e}"))?;
+    Ok((
+        agg,
+        Row {
+            fs: match fs {
+                FsKind::BurstBuffer => "Burst Buffer",
+                FsKind::Lustre => "CSCRATCH",
+            },
+            ckpt_secs: rep.write_secs,
+            restart_secs: rrep.read_secs,
+        },
+    ))
+}
+
+fn main() -> Result<()> {
+    println!("=== HPCG with MANA: 512 ranks x 8 threads ===\n");
+    let (agg, bb) = measure(FsKind::BurstBuffer)?;
+    let (_, lu) = measure(FsKind::Lustre)?;
+    println!("aggregate memory: {} (paper: 5.8 TB)\n", human(agg));
+    println!("{:>14} {:>14} {:>14}", "file system", "ckpt (s)", "restart (s)");
+    for r in [&bb, &lu] {
+        println!("{:>14} {:>14.1} {:>14.1}", r.fs, r.ckpt_secs, r.restart_secs);
+    }
+    let ckpt_speedup = lu.ckpt_secs / bb.ckpt_secs;
+    let restart_speedup = lu.restart_secs / bb.restart_secs;
+    println!(
+        "\ncheckpoint speedup BB/CSCRATCH: {ckpt_speedup:.1}x (paper: >20x)\nrestart    speedup BB/CSCRATCH: {restart_speedup:.1}x (paper: ~2.5x)"
+    );
+
+    assert!((25.0..40.0).contains(&bb.ckpt_secs), "BB ckpt ~30s");
+    assert!(lu.ckpt_secs > 600.0, "Lustre ckpt >600s");
+    assert!(ckpt_speedup > 20.0);
+    assert!((1.8..3.5).contains(&restart_speedup));
+    println!("\nOK: matches the paper's HPCG table.");
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! Preempt queue for real-time workloads (the paper's Future Work,
+//! implemented): a real-time job preempts a low-priority VASP job via MANA
+//! checkpoint, runs to completion, and the VASP job resumes with zero lost
+//! work.
+//!
+//! Run: cargo run --release --example preempt_queue
+
+use anyhow::Result;
+
+use mana::config::{AppKind, RunConfig};
+use mana::preempt::run_preemption_scenario;
+
+fn main() -> Result<()> {
+    println!("=== Preempt queue: real-time job displaces a low-priority job ===\n");
+
+    let mut low = RunConfig::new(AppKind::VaspRpa, 8);
+    low.job = "lowpri-vasp".into();
+    low.mem_per_rank = Some(128 << 20);
+
+    let mut rt = RunConfig::new(AppKind::Gromacs, 8);
+    rt.job = "realtime-md".into();
+    rt.mem_per_rank = Some(64 << 20);
+
+    let rep = run_preemption_scenario(low, rt, None, 4, 6, 8)?;
+
+    println!("low-priority job preempted at step {}", rep.lowpri_steps_at_preempt);
+    println!("  MANA checkpoint (realtime launch delay): {:>8.2}s", rep.ckpt_secs);
+    println!("  real-time job makespan:                  {:>8.2}s", rep.realtime_secs);
+    println!("  low-priority restart:                    {:>8.2}s", rep.restart_secs);
+    println!("  low-priority final step:                 {:>8}", rep.lowpri_steps_final);
+    println!("  deterministic resume:                    {:>8}", rep.deterministic);
+
+    assert!(rep.deterministic, "preempted job lost work or corrupted state");
+    assert_eq!(rep.lowpri_steps_final, 12);
+    println!("\nOK: preemption cycle complete, zero work lost beyond the checkpoint.");
+    Ok(())
+}

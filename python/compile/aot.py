@@ -1,0 +1,79 @@
+"""AOT compile path: lower every L2 graph to HLO text + write the manifest.
+
+HLO **text** is the interchange format, NOT ``.serialize()``: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which the xla crate's
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Outputs (``make artifacts``):
+  artifacts/<name>.hlo.txt   — one per registry entry in model.py
+  artifacts/manifest.txt     — line-based I/O description parsed by
+                               rust/src/runtime/manifest.rs:
+
+      artifact <name> <file>
+      in <argname> <dtype> <d0>x<d1>...
+      out <idx> <dtype> <d0>x<d1>...
+
+Usage: (cd python && python -m compile.aot --out-dir ../artifacts)
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile.model import registry
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _dims(shape) -> str:
+    return "x".join(str(d) for d in shape) if shape else "scalar"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact names (default: all)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    names = set(args.only.split(",")) if args.only else None
+    manifest_lines = []
+    for name, (fn, in_specs) in registry().items():
+        if names and name not in names:
+            continue
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest_lines.append(f"artifact {name} {fname}")
+        argnames = fn.__code__.co_varnames[: len(in_specs)]
+        for argname, spec in zip(argnames, in_specs):
+            manifest_lines.append(
+                f"in {argname} {spec.dtype} {_dims(spec.shape)}")
+        outs = jax.eval_shape(fn, *in_specs)
+        if not isinstance(outs, tuple):
+            outs = (outs,)
+        for idx, o in enumerate(outs):
+            manifest_lines.append(f"out {idx} {o.dtype} {_dims(o.shape)}")
+        print(f"lowered {name}: {len(text)} chars -> {fname}")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote manifest with {len(manifest_lines)} lines")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Structural performance analysis of the L1 Pallas kernels.
+
+interpret=True gives CPU-numpy timings, which are NOT a TPU proxy; what we
+can reason about soundly at build time is the *structure*: per-grid-program
+VMEM footprint (block residency + temporaries) and the MXU/VPU work mix.
+This module computes those estimates from the same block parameters the
+kernels use, and the pytest suite pins them against the VMEM budget — the
+L1 half of the performance deliverable (see DESIGN.md §Perf).
+
+TPU constants are v4-generation (16 MiB VMEM/core, 128x128 MXU, 8x128 VPU).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+VMEM_BYTES = 16 * 2**20          # per-core VMEM
+MXU_DIM = 128                    # systolic array edge
+MXU_FLOPS_PER_CYCLE = 2 * MXU_DIM * MXU_DIM  # MAC = 2 flops
+VPU_LANES = 8 * 128
+
+
+@dataclass
+class KernelEstimate:
+    name: str
+    vmem_bytes: int
+    """Per-program VMEM residency (inputs + outputs + temporaries)."""
+    flops_per_program: float
+    bytes_per_program: float
+    """HBM traffic per program (block loads + stores)."""
+    mxu_bound: bool
+
+    @property
+    def vmem_fraction(self) -> float:
+        return self.vmem_bytes / VMEM_BYTES
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops_per_program / max(self.bytes_per_program, 1.0)
+
+    def mxu_utilization(self, m: int, n: int, k: int) -> float:
+        """Fraction of MXU MACs doing useful work for an (m,n,k) tile
+        (padding waste when tiles are not 128-aligned)."""
+        pad = lambda d: ((d + MXU_DIM - 1) // MXU_DIM) * MXU_DIM
+        useful = m * n * k
+        issued = pad(m) * pad(n) * pad(k)
+        return useful / issued
+
+
+def lj_forces_estimate(n: int, tile: int = 128) -> KernelEstimate:
+    """Row-tiled LJ: program holds (tile,3) rows + (n,3) all-positions and
+    (tile,n) pair temporaries (r2, coef) plus the (tile,n,3) displacement."""
+    f32 = 4
+    blocks = (tile * 3 + n * 3 + tile * 3) * f32
+    temps = (tile * n * 3 + 2 * tile * n) * f32
+    # ~30 flops per pair (displacement, min-image, r2, s6/s12, coef, fma).
+    flops = 30.0 * tile * n
+    traffic = (tile * 3 + n * 3 + tile * 3) * f32
+    return KernelEstimate("lj_forces", blocks + temps, flops, traffic, mxu_bound=False)
+
+
+def stencil27_estimate(nx: int, ny: int, nz: int, slab: int = 8) -> KernelEstimate:
+    """Slab-blocked stencil: program holds the haloed input window and the
+    output slab; 27 shifted FMAs per point."""
+    f32 = 4
+    win = (slab + 2) * (ny + 2) * (nz + 2) * f32
+    out = slab * ny * nz * f32
+    flops = 27.0 * 2 * slab * ny * nz
+    traffic = win + out
+    return KernelEstimate("stencil27", win + 2 * out, flops, traffic, mxu_bound=False)
+
+
+def rpa_block_estimate(bm: int = 128, bn: int = 128, bk: int = 128) -> KernelEstimate:
+    """MXU matmul tile: three (128,128) blocks resident; 2*m*n*k flops."""
+    f32 = 4
+    blocks = (bm * bk + bn * bk + bm * bn) * f32
+    flops = 2.0 * bm * bn * bk
+    traffic = (bm * bk + bn * bk + bm * bn) * f32
+    return KernelEstimate("rpa_block", blocks, flops, traffic, mxu_bound=True)
+
+
+def all_estimates() -> list[KernelEstimate]:
+    # Shapes as AOT-lowered (model.py constants).
+    return [
+        lj_forces_estimate(n=256, tile=128),
+        stencil27_estimate(16, 16, 16, slab=8),
+        rpa_block_estimate(),
+    ]
+
+
+def report() -> str:
+    lines = [
+        f"{'kernel':<12} {'VMEM/prog':>12} {'%VMEM':>7} {'AI(flop/B)':>11} {'unit':>5}"
+    ]
+    for e in all_estimates():
+        lines.append(
+            f"{e.name:<12} {e.vmem_bytes:>10}B {e.vmem_fraction*100:>6.2f}% "
+            f"{e.arithmetic_intensity:>11.1f} {'MXU' if e.mxu_bound else 'VPU':>5}"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report())

@@ -1,0 +1,92 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle to float tolerance under pytest (including the
+hypothesis shape/dtype sweeps in python/tests/).
+
+The three kernels are the compute hot spots of the three analog workloads
+used to reproduce the paper's evaluation (see DESIGN.md):
+
+* ``lj_forces_ref``   — Gromacs/ADH analog (molecular dynamics).
+* ``stencil27_ref``   — HPCG analog (27-point stencil SpMV).
+* ``rpa_block_ref``   — VASP/RPA analog (scaled blocked matmul).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lj_forces_ref(pos: jnp.ndarray, box: float, eps: float, sigma: float,
+                  rcut: float) -> jnp.ndarray:
+    """Lennard-Jones forces with minimum-image convention.
+
+    Args:
+      pos: ``(N, 3)`` particle positions in a cubic box ``[0, box)^3``.
+      box: cubic box edge length.
+      eps/sigma: LJ well depth and zero-crossing distance.
+      rcut: cutoff radius; pairs beyond it contribute zero force.
+
+    Returns:
+      ``(N, 3)`` forces, same dtype as ``pos`` (accumulated in f32).
+    """
+    p = pos.astype(jnp.float32)
+    # Pairwise displacement with minimum image: r_ij = p_i - p_j.
+    d = p[:, None, :] - p[None, :, :]                      # (N, N, 3)
+    d = d - box * jnp.round(d / box)
+    r2 = jnp.sum(d * d, axis=-1)                           # (N, N)
+    n = p.shape[0]
+    eye = jnp.eye(n, dtype=bool)
+    # Avoid 0/0 on the diagonal; the mask zeroes it out after.
+    r2_safe = jnp.where(eye, 1.0, r2)
+    inv_r2 = 1.0 / r2_safe
+    s2 = (sigma * sigma) * inv_r2
+    s6 = s2 * s2 * s2
+    # F_ij = 24 eps (2 s^12 - s^6) / r^2 * d_ij
+    coef = 24.0 * eps * (2.0 * s6 * s6 - s6) * inv_r2
+    mask = (~eye) & (r2 <= rcut * rcut)
+    coef = jnp.where(mask, coef, 0.0)
+    f = jnp.sum(coef[:, :, None] * d, axis=1)              # (N, 3)
+    return f.astype(pos.dtype)
+
+
+def stencil27_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """HPCG-style 27-point stencil SpMV: y = A x on a 3-D grid.
+
+    A has 26.0 on the diagonal and -1.0 for each of the 26 neighbours,
+    with zero (Dirichlet) boundary — exactly the HPCG operator.
+
+    Args:
+      x: ``(nx, ny, nz)`` grid vector.
+    Returns:
+      ``(nx, ny, nz)`` result, same dtype (accumulated in f32).
+    """
+    xf = x.astype(jnp.float32)
+    xp = jnp.pad(xf, 1)                                    # zero boundary
+    acc = jnp.zeros_like(xf)
+    nx, ny, nz = xf.shape
+    for di in (0, 1, 2):
+        for dj in (0, 1, 2):
+            for dk in (0, 1, 2):
+                sub = xp[di:di + nx, dj:dj + ny, dk:dk + nz]
+                if di == 1 and dj == 1 and dk == 1:
+                    acc = acc + 26.0 * sub
+                else:
+                    acc = acc - sub
+    return acc.astype(x.dtype)
+
+
+def rpa_block_ref(occ: jnp.ndarray, virt: jnp.ndarray,
+                  scale: float) -> jnp.ndarray:
+    """VASP/RPA analog: scaled response-matrix product chi0 = scale * O V^T.
+
+    Args:
+      occ:  ``(M, K)`` occupied-orbital block.
+      virt: ``(N, K)`` virtual-orbital block.
+      scale: frequency-quadrature weight.
+    Returns:
+      ``(M, N)`` chi0 block in f32.
+    """
+    o = occ.astype(jnp.float32)
+    v = virt.astype(jnp.float32)
+    return (scale * (o @ v.T)).astype(jnp.float32)

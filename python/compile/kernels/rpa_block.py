@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: blocked, scaled matmul for the RPA chi0 block
+(VASP analog).
+
+The paper's top application is VASP; its RPA (Random Phase Approximation)
+jobs are the long-running workloads that motivated MANA C/R at NERSC. The
+RPA hot spot is the independent-particle polarizability chi0 = w * O V^T —
+a large dense matmul chain. This kernel is the MXU-shaped building block:
+128x128x128 tiles matching the TPU systolic array, k-accumulation done
+in-place in the revisited output block (the classic Pallas matmul pattern,
+no scratch needed), with the quadrature weight fused into the final store.
+
+Lowered with ``interpret=True`` (see lj_forces.py for why).
+
+Correctness oracle: :func:`kernels.ref.rpa_block_ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-native tile. The TPU MXU is a 128x128 systolic array; bf16 inputs with
+# f32 accumulation is its native mode, which this kernel mirrors.
+BM = BN = BK = 128
+
+
+def _rpa_kernel(o_ref, v_ref, out_ref, *, scale: float, k_steps: int):
+    """Grid (M/BM, N/BN, K/BK); k is the innermost (sequential) axis.
+
+    o_ref:   (BM, BK) occupied block for (i, k).
+    v_ref:   (BN, BK) virtual block for (j, k).
+    out_ref: (BM, BN) chi0 block for (i, j) — revisited across k.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    o = o_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    # MXU contraction with f32 accumulation.
+    out_ref[...] += jax.lax.dot_general(
+        o, v, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _finalize():
+        out_ref[...] *= scale
+
+
+def rpa_block(occ: jnp.ndarray, virt: jnp.ndarray, *, scale: float,
+              bm: int = BM, bn: int = BN, bk: int = BK) -> jnp.ndarray:
+    """Pallas chi0 block: ``scale * occ @ virt.T`` with f32 accumulation.
+
+    ``occ`` is ``(M, K)``, ``virt`` is ``(N, K)``. Dimensions are padded to
+    the block sizes (zero padding is exact for a matmul).
+    """
+    m, k = occ.shape
+    n, k2 = virt.shape
+    assert k == k2, f"contraction mismatch: {k} vs {k2}"
+    mp = ((m + bm - 1) // bm) * bm
+    np_ = ((n + bn - 1) // bn) * bn
+    kp = ((k + bk - 1) // bk) * bk
+    o = jnp.pad(occ.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    v = jnp.pad(virt.astype(jnp.float32), ((0, np_ - n), (0, kp - k)))
+
+    kernel = functools.partial(_rpa_kernel, scale=float(scale),
+                               k_steps=kp // bk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(o, v)
+    return out[:m, :n]

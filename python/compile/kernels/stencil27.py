@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: 27-point stencil SpMV (HPCG analog).
+
+HPCG's dominant kernel is the sparse matrix-vector product with the 3-D
+27-point operator (diag 26, neighbours -1, zero Dirichlet boundary). On a
+structured grid that SpMV is a stencil; this kernel blocks the x dimension
+into slabs (one grid program per slab) and loads a halo of one plane on
+each side via ``pl.dynamic_slice`` from the padded input kept in ANY/HBM.
+
+BlockSpec expresses the HBM->VMEM schedule for the *output*; the input is
+left unblocked because overlapping (haloed) input windows cannot be
+expressed as disjoint BlockSpec tiles — the explicit ``pl.load`` with a
+dynamic slice is the Pallas idiom for halos.
+
+Lowered with ``interpret=True`` (see lj_forces.py for why).
+
+Correctness oracle: :func:`kernels.ref.stencil27_ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_SLAB = 8
+
+
+def _stencil_kernel(xp_ref, out_ref, *, slab: int):
+    """One x-slab of y = A x.
+
+    xp_ref:  (nx+2, ny+2, nz+2) zero-padded input, unblocked.
+    out_ref: (slab, ny, nz) output slab.
+    """
+    i = pl.program_id(0)
+    ny2 = xp_ref.shape[1]
+    nz2 = xp_ref.shape[2]
+    # Load the slab plus one halo plane on each side: rows
+    # [i*slab, i*slab + slab + 2) of the padded array.
+    win = xp_ref[pl.ds(i * slab, slab + 2), :, :]          # (slab+2, ny+2, nz+2)
+    win = win.astype(jnp.float32)
+    ny = ny2 - 2
+    nz = nz2 - 2
+    acc = jnp.zeros((slab, ny, nz), jnp.float32)
+    for di in (0, 1, 2):
+        for dj in (0, 1, 2):
+            for dk in (0, 1, 2):
+                sub = win[di:di + slab, dj:dj + ny, dk:dk + nz]
+                if di == 1 and dj == 1 and dk == 1:
+                    acc = acc + 26.0 * sub
+                else:
+                    acc = acc - sub
+    out_ref[...] = acc
+
+
+def stencil27(x: jnp.ndarray, *, slab: int = DEFAULT_SLAB) -> jnp.ndarray:
+    """Pallas 27-point stencil. ``x`` is ``(nx, ny, nz)`` with nx % slab == 0."""
+    nx, ny, nz = x.shape
+    if nx % slab != 0:
+        # Fall back to a slab that divides nx (worst case 1: plane-by-plane).
+        slab = next(s for s in range(min(slab, nx), 0, -1) if nx % s == 0)
+    xp = jnp.pad(x.astype(jnp.float32), 1)                 # zero boundary
+    kernel = functools.partial(_stencil_kernel, slab=slab)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nx // slab,),
+        in_specs=[pl.BlockSpec((nx + 2, ny + 2, nz + 2), lambda i: (0, 0, 0))],
+        out_specs=pl.BlockSpec((slab, ny, nz), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nx, ny, nz), jnp.float32),
+        interpret=True,
+    )(xp)
+    return out.astype(x.dtype)

@@ -1,0 +1,114 @@
+"""L2: JAX compute graphs for the three analog applications (build time).
+
+Each function is a *pure* step function over arrays — the checkpointable
+application state lives in rust (the upper half); these graphs are lowered
+once to HLO text by ``aot.py`` and executed from the rust hot path via PJRT.
+Python never runs at request time.
+
+Workloads (see DESIGN.md §Experiment index):
+
+* ``md_step``  — Gromacs/ADH analog: leapfrog MD with the Pallas LJ kernel.
+* ``cg_step``  — HPCG analog: one CG iteration with the Pallas stencil SpMV.
+* ``rpa_step`` — VASP/RPA analog: chi0 accumulation with the Pallas matmul.
+
+Scalar inputs/outputs use shape ``(1,)`` so the rust side can build every
+literal with ``Literal::vec1`` (the xla 0.1.6 crate has no scalar helper).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.lj_forces import lj_forces
+from compile.kernels.stencil27 import stencil27
+from compile.kernels.rpa_block import rpa_block
+
+# ---------------------------------------------------------------------------
+# Static problem shapes per MPI rank (baked at AOT time; see aot.py).
+# ---------------------------------------------------------------------------
+MD_N_ATOMS = 256          # local atoms per rank (ADH analog shard)
+MD_BOX = 12.0             # cubic box edge
+MD_DT = 0.0005            # leapfrog timestep
+MD_RCUT = 2.5
+MD_INNER_STEPS = 4        # MD steps fused per PJRT call
+
+CG_GRID = (16, 16, 16)    # local HPCG subdomain per rank
+
+RPA_M = 256               # occupied-block rows per rank
+RPA_N = 256               # virtual-block rows per rank
+RPA_K = 256               # orbital contraction dim
+
+
+def md_step(pos: jnp.ndarray, vel: jnp.ndarray):
+    """``MD_INNER_STEPS`` leapfrog steps of LJ dynamics.
+
+    pos, vel: ``(MD_N_ATOMS, 3)`` f32.
+    Returns (pos', vel', ke) with ke shaped ``(1,)`` — the kinetic energy,
+    which the rust driver logs and folds into the drain-safe progress hash.
+    """
+
+    def one(carry, _):
+        p, v = carry
+        f = lj_forces(p, box=MD_BOX, rcut=MD_RCUT)
+        v2 = v + MD_DT * f
+        p2 = jnp.mod(p + MD_DT * v2, MD_BOX)
+        return (p2, v2), None
+
+    (pos2, vel2), _ = jax.lax.scan(one, (pos, vel), None,
+                                   length=MD_INNER_STEPS)
+    ke = 0.5 * jnp.sum(vel2 * vel2)
+    return pos2, vel2, jnp.reshape(ke, (1,))
+
+
+def cg_step(x: jnp.ndarray, r: jnp.ndarray, p: jnp.ndarray,
+            rz: jnp.ndarray):
+    """One (unpreconditioned) CG iteration on the 27-point operator.
+
+    x, r, p: ``CG_GRID`` f32 grids; rz: ``(1,)`` = <r, r> from the previous
+    iteration. Returns (x', r', p', rz', resid) — resid shaped ``(1,)`` is
+    sqrt(rz') for convergence logging in rust.
+
+    HPCG proper is preconditioned CG (symmetric Gauss-Seidel); the analog
+    keeps the same SpMV-dominated profile, which is what the checkpoint
+    evaluation exercises (memory footprint + compute cadence).
+    """
+    ap = stencil27(p)
+    pap = jnp.sum(p * ap)
+    alpha = rz[0] / pap
+    x2 = x + alpha * p
+    r2 = r - alpha * ap
+    rz2 = jnp.sum(r2 * r2)
+    beta = rz2 / rz[0]
+    p2 = r2 + beta * p
+    resid = jnp.sqrt(rz2)
+    return x2, r2, p2, jnp.reshape(rz2, (1,)), jnp.reshape(resid, (1,))
+
+
+def rpa_step(occ: jnp.ndarray, virt: jnp.ndarray, chi: jnp.ndarray,
+             w: jnp.ndarray):
+    """One RPA frequency-quadrature point: chi += w * occ @ virt^T.
+
+    occ ``(RPA_M, RPA_K)``, virt ``(RPA_N, RPA_K)``, chi ``(RPA_M, RPA_N)``,
+    w ``(1,)`` quadrature weight. Returns (chi', ecorr) where ecorr ``(1,)``
+    is the running correlation-energy surrogate tr-like sum(chi'^2).
+    """
+    block = rpa_block(occ, virt, scale=1.0)
+    chi2 = chi + w[0] * block
+    ecorr = jnp.sum(chi2 * chi2)
+    return chi2, jnp.reshape(ecorr, (1,))
+
+
+# ---------------------------------------------------------------------------
+# AOT registry: name -> (fn, input ShapeDtypeStructs)
+# ---------------------------------------------------------------------------
+def registry():
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    return {
+        "md_step": (md_step, (s((MD_N_ATOMS, 3), f32), s((MD_N_ATOMS, 3), f32))),
+        "cg_step": (cg_step, (s(CG_GRID, f32), s(CG_GRID, f32),
+                              s(CG_GRID, f32), s((1,), f32))),
+        "rpa_step": (rpa_step, (s((RPA_M, RPA_K), f32), s((RPA_N, RPA_K), f32),
+                                s((RPA_M, RPA_N), f32), s((1,), f32))),
+    }

@@ -1,0 +1,48 @@
+"""Structural L1 perf estimates: the kernels must fit VMEM with headroom
+and the MXU kernel must use systolic-array-native tiles (DESIGN §Perf)."""
+
+from compile.kernels import analysis
+
+
+class TestVmemBudget:
+    def test_all_kernels_fit_vmem(self):
+        for e in analysis.all_estimates():
+            assert e.vmem_bytes < analysis.VMEM_BYTES, e.name
+
+    def test_headroom_for_double_buffering(self):
+        # >= 2x headroom lets Pallas double-buffer HBM<->VMEM transfers.
+        for e in analysis.all_estimates():
+            assert e.vmem_fraction < 0.5, f"{e.name}: {e.vmem_fraction:.2f}"
+
+    def test_lj_dominated_by_pair_temporaries(self):
+        small = analysis.lj_forces_estimate(n=128)
+        big = analysis.lj_forces_estimate(n=1024)
+        assert big.vmem_bytes > small.vmem_bytes
+        # Quadratic pair-matrix growth with N.
+        assert big.vmem_bytes / small.vmem_bytes > 4
+
+
+class TestMxu:
+    def test_rpa_tile_is_mxu_native(self):
+        e = analysis.rpa_block_estimate()
+        assert e.mxu_bound
+        assert e.mxu_utilization(128, 128, 128) == 1.0
+
+    def test_padding_waste_quantified(self):
+        e = analysis.rpa_block_estimate()
+        # The AOT shape 256^3 is perfectly tiled.
+        assert e.mxu_utilization(256, 256, 256) == 1.0
+        # A ragged tile wastes MACs — the estimate must see it.
+        assert e.mxu_utilization(100, 60, 130) < 0.25
+
+    def test_matmul_ai_beats_stencil(self):
+        rpa = analysis.rpa_block_estimate()
+        st = analysis.stencil27_estimate(16, 16, 16)
+        assert rpa.arithmetic_intensity > st.arithmetic_intensity
+
+
+class TestReport:
+    def test_report_lists_all_kernels(self):
+        r = analysis.report()
+        for name in ["lj_forces", "stencil27", "rpa_block"]:
+            assert name in r

@@ -1,0 +1,166 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Each Pallas kernel must match its pure-jnp reference to float tolerance on
+fixed representative shapes; the hypothesis sweeps live in
+test_kernels_prop.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.lj_forces import lj_forces
+from compile.kernels.stencil27 import stencil27
+from compile.kernels.rpa_block import rpa_block
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------- LJ
+class TestLJForces:
+    @pytest.mark.parametrize("n", [1, 7, 64, 128, 200, 256])
+    def test_matches_ref(self, n):
+        pos = jnp.asarray(_rng(n).uniform(0, 12.0, (n, 3)), jnp.float32)
+        got = lj_forces(pos, box=12.0)
+        want = ref.lj_forces_ref(pos, 12.0, 1.0, 1.0, 2.5)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_newton_third_law(self):
+        """Net force on an isolated pair is zero (actio = reactio)."""
+        pos = jnp.asarray([[1.0, 1.0, 1.0], [2.2, 1.0, 1.0]], jnp.float32)
+        f = lj_forces(pos, box=50.0)
+        np.testing.assert_allclose(f[0], -f[1], rtol=1e-5, atol=1e-6)
+
+    def test_cutoff_zeroes_far_pairs(self):
+        pos = jnp.asarray([[1.0, 1.0, 1.0], [9.0, 9.0, 9.0]], jnp.float32)
+        f = lj_forces(pos, box=50.0, rcut=2.5)
+        np.testing.assert_array_equal(np.asarray(f), 0.0)
+
+    def test_minimum_image_wraps(self):
+        """Particles near opposite box faces interact through the boundary."""
+        box = 10.0
+        pos = jnp.asarray([[0.2, 5.0, 5.0], [9.9, 5.0, 5.0]], jnp.float32)
+        f = lj_forces(pos, box=box)
+        assert np.abs(np.asarray(f)).max() > 0.0
+
+    def test_tile_size_invariance(self):
+        pos = jnp.asarray(_rng(3).uniform(0, 12.0, (96, 3)), jnp.float32)
+        a = lj_forces(pos, box=12.0, tile=32)
+        b = lj_forces(pos, box=12.0, tile=128)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+    def test_repulsive_at_short_range(self):
+        pos = jnp.asarray([[1.0, 1.0, 1.0], [1.8, 1.0, 1.0]], jnp.float32)
+        f = lj_forces(pos, box=50.0)
+        # closer than sigma*2^(1/6): repulsion pushes particle 0 in -x.
+        assert float(f[0, 0]) < 0.0 and float(f[1, 0]) > 0.0
+
+    def test_dtype_preserved(self):
+        pos = jnp.asarray(_rng(5).uniform(0, 12.0, (32, 3)), jnp.float32)
+        assert lj_forces(pos, box=12.0).dtype == jnp.float32
+
+
+# ----------------------------------------------------------------- stencil
+class TestStencil27:
+    @pytest.mark.parametrize("shape", [(4, 4, 4), (8, 8, 8), (16, 16, 16),
+                                       (8, 12, 10), (5, 6, 7), (1, 3, 3)])
+    def test_matches_ref(self, shape):
+        x = jnp.asarray(_rng(sum(shape)).normal(size=shape), jnp.float32)
+        got = stencil27(x)
+        want = ref.stencil27_ref(x)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_constant_interior(self):
+        """On an all-ones grid the interior rows give 26 - 26 = 0."""
+        x = jnp.ones((8, 8, 8), jnp.float32)
+        y = np.asarray(stencil27(x))
+        np.testing.assert_allclose(y[2:-2, 2:-2, 2:-2], 0.0, atol=1e-5)
+
+    def test_operator_is_symmetric(self):
+        """<Ax, y> == <x, Ay> — the HPCG operator is SPD-symmetric."""
+        rng = _rng(11)
+        x = jnp.asarray(rng.normal(size=(6, 6, 6)), jnp.float32)
+        y = jnp.asarray(rng.normal(size=(6, 6, 6)), jnp.float32)
+        lhs = float(jnp.sum(stencil27(x) * y))
+        rhs = float(jnp.sum(x * stencil27(y)))
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-4)
+
+    def test_positive_definite_quadform(self):
+        x = jnp.asarray(_rng(13).normal(size=(8, 8, 8)), jnp.float32)
+        assert float(jnp.sum(x * stencil27(x))) > 0.0
+
+    def test_slab_invariance(self):
+        x = jnp.asarray(_rng(17).normal(size=(16, 8, 8)), jnp.float32)
+        a = stencil27(x, slab=2)
+        b = stencil27(x, slab=8)
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+# -------------------------------------------------------------------- RPA
+class TestRpaBlock:
+    @pytest.mark.parametrize("m,n,k", [(128, 128, 128), (256, 128, 384),
+                                       (100, 60, 130), (1, 1, 1),
+                                       (129, 257, 127)])
+    def test_matches_ref(self, m, n, k):
+        rng = _rng(m * 3 + n * 5 + k)
+        occ = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        virt = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+        got = rpa_block(occ, virt, scale=0.37)
+        want = ref.rpa_block_ref(occ, virt, 0.37)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+    def test_scale_is_linear(self):
+        rng = _rng(23)
+        occ = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+        virt = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+        a = rpa_block(occ, virt, scale=1.0)
+        b = rpa_block(occ, virt, scale=-2.5)
+        np.testing.assert_allclose(np.asarray(b), -2.5 * np.asarray(a),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_zero_padding_exact(self):
+        """Padding to block multiples must not perturb the result."""
+        rng = _rng(29)
+        occ = jnp.asarray(rng.normal(size=(130, 131)), jnp.float32)
+        virt = jnp.asarray(rng.normal(size=(133, 131)), jnp.float32)
+        got = rpa_block(occ, virt, scale=1.0)
+        want = ref.rpa_block_ref(occ, virt, 1.0)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+    def test_block_size_invariance(self):
+        rng = _rng(31)
+        occ = jnp.asarray(rng.normal(size=(128, 256)), jnp.float32)
+        virt = jnp.asarray(rng.normal(size=(128, 256)), jnp.float32)
+        a = rpa_block(occ, virt, scale=1.0, bm=64, bn=64, bk=64)
+        b = rpa_block(occ, virt, scale=1.0)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-4)
+
+
+# ------------------------------------------------------- jit composability
+class TestJitComposition:
+    """The kernels must lower inside jax.jit (the AOT path requirement)."""
+
+    def test_lj_under_jit(self):
+        pos = jnp.asarray(_rng(41).uniform(0, 12.0, (64, 3)), jnp.float32)
+        f = jax.jit(lambda p: lj_forces(p, box=12.0))(pos)
+        np.testing.assert_allclose(
+            f, ref.lj_forces_ref(pos, 12.0, 1.0, 1.0, 2.5),
+            rtol=2e-4, atol=2e-4)
+
+    def test_stencil_under_jit(self):
+        x = jnp.asarray(_rng(43).normal(size=(8, 8, 8)), jnp.float32)
+        y = jax.jit(stencil27)(x)
+        np.testing.assert_allclose(y, ref.stencil27_ref(x), rtol=1e-5,
+                                   atol=1e-5)
+
+    def test_rpa_under_jit(self):
+        rng = _rng(47)
+        occ = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+        virt = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+        got = jax.jit(lambda a, b: rpa_block(a, b, scale=2.0))(occ, virt)
+        np.testing.assert_allclose(got, ref.rpa_block_ref(occ, virt, 2.0),
+                                   rtol=1e-4, atol=1e-3)

@@ -1,0 +1,63 @@
+"""Hypothesis sweeps over kernel shapes/dtypes vs the pure-jnp oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.lj_forces import lj_forces
+from compile.kernels.stencil27 import stencil27
+from compile.kernels.rpa_block import rpa_block
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@settings(**_SETTINGS)
+@given(n=st.integers(1, 96), seed=st.integers(0, 2**31 - 1),
+       box=st.floats(6.0, 20.0))
+def test_lj_shape_sweep(n, seed, box):
+    rng = np.random.default_rng(seed)
+    pos = jnp.asarray(rng.uniform(0, box, (n, 3)), jnp.float32)
+    got = lj_forces(pos, box=box, tile=32)
+    want = ref.lj_forces_ref(pos, box, 1.0, 1.0, 2.5)
+    # Forces diverge as r -> 0; random placements can land arbitrarily close,
+    # so compare with a magnitude-relative tolerance.
+    scale = max(1.0, float(np.abs(np.asarray(want)).max()))
+    np.testing.assert_allclose(np.asarray(got) / scale,
+                               np.asarray(want) / scale, atol=5e-4)
+
+
+@settings(**_SETTINGS)
+@given(nx=st.integers(1, 12), ny=st.integers(1, 12), nz=st.integers(1, 12),
+       seed=st.integers(0, 2**31 - 1))
+def test_stencil_shape_sweep(nx, ny, nz, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(nx, ny, nz)), jnp.float32)
+    np.testing.assert_allclose(stencil27(x, slab=4), ref.stencil27_ref(x),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(**_SETTINGS)
+@given(m=st.integers(1, 160), n=st.integers(1, 160), k=st.integers(1, 200),
+       scale=st.floats(-3.0, 3.0), seed=st.integers(0, 2**31 - 1))
+def test_rpa_shape_sweep(m, n, k, scale, seed):
+    rng = np.random.default_rng(seed)
+    occ = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    virt = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    got = rpa_block(occ, virt, scale=scale, bm=64, bn=64, bk=64)
+    want = ref.rpa_block_ref(occ, virt, scale)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_rpa_dtype_sweep_bf16(seed):
+    """bf16 inputs with f32 accumulation — the MXU-native mode."""
+    rng = np.random.default_rng(seed)
+    occ = jnp.asarray(rng.normal(size=(64, 64)), jnp.bfloat16)
+    virt = jnp.asarray(rng.normal(size=(64, 64)), jnp.bfloat16)
+    got = rpa_block(occ, virt, scale=1.0, bm=64, bn=64, bk=64)
+    want = ref.rpa_block_ref(occ, virt, 1.0)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-2, atol=3e-1)

@@ -1,0 +1,159 @@
+"""L2 model tests: shapes, physics sanity, determinism, AOT round-trip."""
+
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _md_state(seed=0):
+    rng = _rng(seed)
+    pos = jnp.asarray(rng.uniform(0, model.MD_BOX,
+                                  (model.MD_N_ATOMS, 3)), jnp.float32)
+    vel = jnp.asarray(rng.normal(0, 0.1, (model.MD_N_ATOMS, 3)), jnp.float32)
+    return pos, vel
+
+
+class TestMdStep:
+    def test_shapes(self):
+        pos, vel = _md_state()
+        p2, v2, ke = model.md_step(pos, vel)
+        assert p2.shape == pos.shape and v2.shape == vel.shape
+        assert ke.shape == (1,)
+
+    def test_positions_stay_in_box(self):
+        pos, vel = _md_state(1)
+        p2, _, _ = model.md_step(pos, vel)
+        arr = np.asarray(p2)
+        assert (arr >= 0).all() and (arr < model.MD_BOX).all()
+
+    def test_deterministic(self):
+        """Same state in, bitwise-same state out — the C/R determinism
+        requirement behind the paper's Gromacs claim."""
+        pos, vel = _md_state(2)
+        a = model.md_step(pos, vel)
+        b = model.md_step(pos, vel)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_ke_positive(self):
+        pos, vel = _md_state(3)
+        _, _, ke = model.md_step(pos, vel)
+        assert float(ke[0]) > 0.0
+
+
+class TestCgStep:
+    def _setup(self, seed=0):
+        rng = _rng(seed)
+        b = jnp.asarray(rng.normal(size=model.CG_GRID), jnp.float32)
+        x = jnp.zeros(model.CG_GRID, jnp.float32)
+        r = b  # r0 = b - A*0
+        p = r
+        rz = jnp.reshape(jnp.sum(r * r), (1,))
+        return x, r, p, rz, b
+
+    def test_shapes(self):
+        x, r, p, rz, _ = self._setup()
+        x2, r2, p2, rz2, resid = model.cg_step(x, r, p, rz)
+        assert x2.shape == model.CG_GRID
+        assert rz2.shape == (1,) and resid.shape == (1,)
+
+    def test_residual_decreases(self):
+        """CG on an SPD operator must reduce ||r|| monotonically in the
+        A-norm; on this well-conditioned operator plain ||r|| drops too."""
+        x, r, p, rz, b = self._setup(1)
+        res = [float(jnp.sqrt(rz[0]))]
+        for _ in range(10):
+            x, r, p, rz, resid = model.cg_step(x, r, p, rz)
+            res.append(float(resid[0]))
+        assert res[-1] < res[0] * 1e-2
+
+    def test_converges_to_solution(self):
+        x, r, p, rz, b = self._setup(2)
+        for _ in range(60):
+            x, r, p, rz, _ = model.cg_step(x, r, p, rz)
+        ax = ref.stencil27_ref(x)
+        np.testing.assert_allclose(np.asarray(ax), np.asarray(b),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_deterministic(self):
+        x, r, p, rz, _ = self._setup(3)
+        a = model.cg_step(x, r, p, rz)
+        b2 = model.cg_step(x, r, p, rz)
+        for u, v in zip(a, b2):
+            np.testing.assert_array_equal(np.asarray(u), np.asarray(v))
+
+
+class TestRpaStep:
+    def _setup(self, seed=0):
+        rng = _rng(seed)
+        occ = jnp.asarray(rng.normal(size=(model.RPA_M, model.RPA_K)),
+                          jnp.float32)
+        virt = jnp.asarray(rng.normal(size=(model.RPA_N, model.RPA_K)),
+                           jnp.float32)
+        chi = jnp.zeros((model.RPA_M, model.RPA_N), jnp.float32)
+        w = jnp.asarray([0.25], jnp.float32)
+        return occ, virt, chi, w
+
+    def test_shapes(self):
+        occ, virt, chi, w = self._setup()
+        chi2, e = model.rpa_step(occ, virt, chi, w)
+        assert chi2.shape == chi.shape and e.shape == (1,)
+
+    def test_accumulation_matches_ref(self):
+        occ, virt, chi, w = self._setup(1)
+        chi2, _ = model.rpa_step(occ, virt, chi, w)
+        want = ref.rpa_block_ref(occ, virt, float(w[0]))
+        np.testing.assert_allclose(np.asarray(chi2), np.asarray(want),
+                                   rtol=1e-4, atol=1e-2)
+
+    def test_two_point_quadrature_adds(self):
+        occ, virt, chi, w = self._setup(2)
+        chi1, _ = model.rpa_step(occ, virt, chi, w)
+        chi2, _ = model.rpa_step(occ, virt, chi1, w)
+        want = ref.rpa_block_ref(occ, virt, 2 * float(w[0]))
+        np.testing.assert_allclose(np.asarray(chi2), np.asarray(want),
+                                   rtol=1e-4, atol=5e-2)
+
+
+class TestRegistryAndAot:
+    def test_registry_entries(self):
+        reg = model.registry()
+        assert set(reg) == {"md_step", "cg_step", "rpa_step"}
+        for name, (fn, specs) in reg.items():
+            outs = jax.eval_shape(fn, *specs)
+            assert isinstance(outs, tuple) and len(outs) >= 2
+
+    def test_all_lower_to_hlo_text(self):
+        from compile.aot import to_hlo_text
+        for name, (fn, specs) in model.registry().items():
+            text = to_hlo_text(jax.jit(fn).lower(*specs))
+            assert "HloModule" in text, name
+            # custom-calls would be unloadable by the CPU PJRT client
+            assert "custom-call" not in text.lower(), (
+                f"{name} lowered with a custom-call; interpret=True missing?")
+
+    def test_aot_cli_writes_manifest(self):
+        with tempfile.TemporaryDirectory() as td:
+            env = dict(os.environ)
+            subprocess.run(
+                [sys.executable, "-m", "compile.aot", "--out-dir", td,
+                 "--only", "cg_step"],
+                check=True, env=env,
+                cwd=os.path.join(os.path.dirname(__file__), ".."))
+            man = open(os.path.join(td, "manifest.txt")).read()
+            assert "artifact cg_step cg_step.hlo.txt" in man
+            assert "in x float32 16x16x16" in man
+            assert os.path.exists(os.path.join(td, "cg_step.hlo.txt"))

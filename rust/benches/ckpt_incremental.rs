@@ -1,0 +1,80 @@
+//! INC — ablation: full vs incremental checkpointing (the paper's
+//! "reducing the checkpoint overhead for large-scale applications" future
+//! work, implemented and measured).
+//!
+//! Workload: Gromacs-analog, where the live MD state is a few KB per step
+//! while the 1.5 GiB/rank heap never changes after initialization — the
+//! typical production profile that makes incremental C/R pay off.
+
+use mana::benchkit::{fsecs, Report};
+use mana::config::{AppKind, RunConfig};
+use mana::fs::FsKind;
+use mana::sim::JobSim;
+use mana::util::bytes::human;
+
+fn series(ranks: u32, incremental: bool) -> (u64, f64, u64, f64) {
+    let mut cfg = RunConfig::new(AppKind::Gromacs, ranks);
+    cfg.job = format!("inc-{ranks}-{incremental}");
+    cfg.fs = FsKind::Lustre; // where checkpoint cost hurts most
+    cfg.incremental = incremental;
+    let mut sim = JobSim::launch(cfg, None).expect("launch");
+    sim.run_steps(2).expect("steps");
+    let first = sim.checkpoint().expect("first ckpt");
+    sim.run_steps(2).expect("steps");
+    let second = sim.checkpoint().expect("second ckpt");
+    (
+        first.image_bytes,
+        first.write_secs,
+        second.image_bytes,
+        second.write_secs,
+    )
+}
+
+fn main() {
+    let mut rep = Report::new(
+        "INC: full vs incremental checkpoint (Gromacs-analog on Lustre)",
+        vec![
+            "ranks",
+            "mode",
+            "first_ckpt",
+            "first_secs",
+            "second_ckpt",
+            "second_secs",
+        ],
+    );
+    let mut reductions = Vec::new();
+    for &ranks in &[8u32, 64] {
+        let (f1, t1, f2, t2) = series(ranks, false);
+        rep.row(vec![
+            ranks.to_string(),
+            "full".into(),
+            human(f1),
+            fsecs(t1),
+            human(f2),
+            fsecs(t2),
+        ]);
+        let (i1, it1, i2, it2) = series(ranks, true);
+        rep.row(vec![
+            ranks.to_string(),
+            "incremental".into(),
+            human(i1),
+            fsecs(it1),
+            human(i2),
+            fsecs(it2),
+        ]);
+        reductions.push((f2 as f64 / i2 as f64, t2 / it2));
+    }
+    rep.finish();
+
+    for (i, (bytes_x, time_x)) in reductions.iter().enumerate() {
+        println!(
+            "ranks={}: steady-state ckpt bytes reduced {bytes_x:.0}x, time reduced {time_x:.0}x",
+            [8, 64][i]
+        );
+    }
+    assert!(
+        reductions.iter().all(|(b, t)| *b > 100.0 && *t > 5.0),
+        "incremental mode must slash steady-state checkpoint cost"
+    );
+    println!("INC OK");
+}

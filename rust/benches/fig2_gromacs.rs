@@ -1,0 +1,83 @@
+//! FIG2 — Gromacs/ADH checkpoint time on Burst Buffers vs CSCRATCH
+//! (paper Fig. 2).
+//!
+//! Regenerates the figure's series for 4→64 ranks x 8 threads: aggregate
+//! memory, BB checkpoint time, Lustre checkpoint time, plus restart times.
+//! The paper's qualitative claims are asserted: BB superior everywhere,
+//! BB near-flat while Lustre grows with scale.
+
+use mana::benchkit::{fsecs, Report};
+use mana::config::{AppKind, RunConfig};
+use mana::fs::FsKind;
+use mana::sim::JobSim;
+use mana::util::bytes::human;
+
+struct Point {
+    agg: u64,
+    ckpt: f64,
+    restart: f64,
+}
+
+fn measure(ranks: u32, fs: FsKind) -> Point {
+    let mut cfg = RunConfig::new(AppKind::Gromacs, ranks);
+    cfg.job = format!("fig2-{ranks}-{fs:?}");
+    cfg.fs = fs;
+    let mut sim = JobSim::launch(cfg, None).expect("launch");
+    sim.run_steps(3).expect("steps");
+    let agg = sim.aggregate_memory();
+    let rep = sim.checkpoint().expect("ckpt");
+    let cfg = sim.cfg.clone();
+    let fsim = sim.kill();
+    let (_, rrep) = JobSim::restart_from(cfg, None, fsim).expect("restart");
+    Point {
+        agg,
+        ckpt: rep.write_secs,
+        restart: rrep.read_secs,
+    }
+}
+
+fn main() {
+    let mut rep = Report::new(
+        "FIG2: Gromacs(ADH) C/R time, 4-64 ranks x 8 threads",
+        vec![
+            "ranks",
+            "nodes",
+            "agg_memory",
+            "bb_ckpt_s",
+            "lustre_ckpt_s",
+            "ckpt_speedup",
+            "bb_restart_s",
+            "lustre_restart_s",
+        ],
+    );
+    let mut bb_ckpts = Vec::new();
+    let mut lu_ckpts = Vec::new();
+    for &ranks in &[4u32, 8, 16, 32, 64] {
+        let bb = measure(ranks, FsKind::BurstBuffer);
+        let lu = measure(ranks, FsKind::Lustre);
+        bb_ckpts.push(bb.ckpt);
+        lu_ckpts.push(lu.ckpt);
+        rep.row(vec![
+            ranks.to_string(),
+            ranks.div_ceil(8).to_string(),
+            human(bb.agg),
+            fsecs(bb.ckpt),
+            fsecs(lu.ckpt),
+            format!("{:.1}x", lu.ckpt / bb.ckpt),
+            fsecs(bb.restart),
+            fsecs(lu.restart),
+        ]);
+    }
+    rep.finish();
+
+    // Paper: "performance on the Burst Buffers is superior to that on the
+    // CSCRATCH and also scales better."
+    assert!(bb_ckpts.iter().zip(&lu_ckpts).all(|(b, l)| b < l));
+    let bb_spread = bb_ckpts.iter().cloned().fold(0.0, f64::max)
+        / bb_ckpts.iter().cloned().fold(f64::MAX, f64::min);
+    let lu_growth = lu_ckpts.last().unwrap() / lu_ckpts.first().unwrap();
+    println!("\nBB spread (max/min) = {bb_spread:.2}; Lustre growth (64r/4r) = {lu_growth:.2}");
+    assert!(bb_spread < 3.0, "BB should be near-flat");
+    assert!(lu_growth > 1.2, "Lustre should grow with scale");
+    println!("FIG2 OK");
+}

@@ -1,0 +1,65 @@
+//! HPCG-T — the paper's in-text HPCG numbers.
+//!
+//! "checkpoint time for Burst Buffers at 30 seconds and CSCRATCH at over
+//! 600 seconds for 512 ranks with eight OpenMP threads per task. The
+//! aggregate memory used was 5.8 TB. The speedup for Burst Buffers over
+//! CSCRATCH on restart was more modest at about 2.5 times whereas the
+//! speedup for checkpointing was more than 20 times."
+
+use mana::benchkit::{fsecs, Report};
+use mana::config::{AppKind, RunConfig};
+use mana::fs::FsKind;
+use mana::sim::JobSim;
+use mana::util::bytes::human;
+
+fn measure(fs: FsKind) -> (u64, f64, f64) {
+    let mut cfg = RunConfig::new(AppKind::Hpcg, 512);
+    cfg.job = format!("hpcgt-{fs:?}");
+    cfg.fs = fs;
+    let mut sim = JobSim::launch(cfg, None).expect("launch");
+    sim.run_steps(2).expect("steps");
+    let agg = sim.aggregate_memory();
+    let ckpt = sim.checkpoint().expect("ckpt").write_secs;
+    let cfg = sim.cfg.clone();
+    let fsim = sim.kill();
+    let (_, rrep) = JobSim::restart_from(cfg, None, fsim).expect("restart");
+    (agg, ckpt, rrep.read_secs)
+}
+
+fn main() {
+    let (agg, bb_c, bb_r) = measure(FsKind::BurstBuffer);
+    let (_, lu_c, lu_r) = measure(FsKind::Lustre);
+
+    let mut rep = Report::new(
+        "HPCG-T: 512 ranks x 8 threads, MANA C/R",
+        vec!["metric", "paper", "measured"],
+    );
+    rep.row(vec!["aggregate memory".into(), "5.8 TB".into(), human(agg)]);
+    rep.row(vec![
+        "BB checkpoint".into(),
+        "~30 s".into(),
+        format!("{} s", fsecs(bb_c)),
+    ]);
+    rep.row(vec![
+        "CSCRATCH checkpoint".into(),
+        ">600 s".into(),
+        format!("{} s", fsecs(lu_c)),
+    ]);
+    rep.row(vec![
+        "ckpt speedup BB/CSCRATCH".into(),
+        ">20x".into(),
+        format!("{:.1}x", lu_c / bb_c),
+    ]);
+    rep.row(vec![
+        "restart speedup BB/CSCRATCH".into(),
+        "~2.5x".into(),
+        format!("{:.1}x", lu_r / bb_r),
+    ]);
+    rep.finish();
+
+    assert!((25.0..40.0).contains(&bb_c), "BB ckpt {bb_c}");
+    assert!(lu_c > 600.0, "Lustre ckpt {lu_c}");
+    assert!(lu_c / bb_c > 20.0);
+    assert!((1.8..3.5).contains(&(lu_r / bb_r)));
+    println!("HPCG-T OK");
+}

@@ -1,0 +1,47 @@
+//! SRUN — the argv-packet overflow and its manifest fix.
+//!
+//! "Due to the limit on packet sizes, srun was unable to pass all
+//! checkpoint file names to its workers, leading to a crash. We resolved
+//! this by changing the way we provide the file names."
+//!
+//! Sweeps rank counts and reports the srun packet size under the legacy
+//! scheme (every image path in argv) vs. the manifest scheme (one path),
+//! locating the legacy crash crossover.
+
+use mana::benchkit::Report;
+use mana::launcher::{argv_packet_bytes, check_argv, restart_argv, SRUN_PACKET_LIMIT};
+
+fn main() {
+    let mut rep = Report::new(
+        "SRUN: restart argv packet vs rank count",
+        vec!["ranks", "legacy_bytes", "legacy_ok", "manifest_bytes", "manifest_ok"],
+    );
+    let mut crossover = None;
+    for &ranks in &[4u32, 16, 64, 128, 160, 256, 512, 1024, 4096] {
+        let legacy = restart_argv("job", ranks, false);
+        let manifest = restart_argv("job", ranks, true);
+        let lb = argv_packet_bytes(&legacy);
+        let mb = argv_packet_bytes(&manifest);
+        let lok = check_argv(&legacy).is_ok();
+        if !lok && crossover.is_none() {
+            crossover = Some(ranks);
+        }
+        rep.row(vec![
+            ranks.to_string(),
+            lb.to_string(),
+            if lok { "ok" } else { "CRASH" }.to_string(),
+            mb.to_string(),
+            if check_argv(&manifest).is_ok() { "ok" } else { "CRASH" }.to_string(),
+        ]);
+    }
+    rep.finish();
+
+    println!(
+        "\npacket limit {} bytes; legacy scheme first crashes at {} ranks; manifest scheme never does",
+        SRUN_PACKET_LIMIT,
+        crossover.unwrap()
+    );
+    assert!(crossover.is_some(), "legacy must crash at scale");
+    assert!(check_argv(&restart_argv("job", 4096, true)).is_ok());
+    println!("SRUN OK");
+}

@@ -1,0 +1,46 @@
+//! LINK — startup time at scale: dynamically linked MANA/DMTCP vs the
+//! planned statically linked build.
+//!
+//! "We also began to see startup time performance issues with our
+//! dynamically linked MANA/DMTCP executables, as static linking is
+//! preferred at scale. … it is recommended to broadcast a statically
+//! linked executable to all nodes."
+
+use mana::benchkit::{fsecs, Report};
+use mana::config::LinkMode;
+use mana::launcher::startup_secs;
+use mana::topology::Topology;
+
+fn main() {
+    let mut rep = Report::new(
+        "LINK: job startup time, dynamic vs static linking",
+        vec!["ranks", "nodes", "dynamic_s", "static_s", "speedup"],
+    );
+    let mut last_speedup = 0.0;
+    let mut first_speedup = 0.0;
+    for &ranks in &[8u32, 32, 128, 512, 2048] {
+        let topo = Topology::new(ranks, 8);
+        let d = startup_secs(&topo, LinkMode::Dynamic);
+        let s = startup_secs(&topo, LinkMode::Static);
+        let speedup = d / s;
+        if first_speedup == 0.0 {
+            first_speedup = speedup;
+        }
+        last_speedup = speedup;
+        rep.row(vec![
+            ranks.to_string(),
+            topo.nodes().to_string(),
+            fsecs(d),
+            fsecs(s),
+            format!("{speedup:.1}x"),
+        ]);
+    }
+    rep.finish();
+
+    println!(
+        "\nstatic-linking advantage grows with scale: {first_speedup:.1}x at 1 node -> {last_speedup:.1}x at 256 nodes"
+    );
+    assert!(last_speedup > first_speedup, "advantage must grow with scale");
+    assert!(last_speedup > 3.0);
+    println!("LINK OK");
+}

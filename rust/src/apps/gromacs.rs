@@ -1,0 +1,83 @@
+//! Gromacs/ADH analog: Lennard-Jones molecular dynamics.
+//!
+//! The paper's Fig. 2 workload. Per-rank state: 256 atoms (positions +
+//! velocities) evolved by the `md_step` artifact — leapfrog MD whose force
+//! loop is the L1 Pallas LJ kernel — plus a ~1.5 GiB (virtual) heap that
+//! dominates the checkpoint image, matching the ADH benchmark's per-rank
+//! footprint on Cori.
+//!
+//! Gromacs has internal C/R, but the paper's point is that MANA can
+//! checkpoint it *at any point* and resume "to generate exactly the same
+//! results as an uninterrupted run" — the E2E quickstart asserts that
+//! bitwise property on this app.
+
+use anyhow::{Context, Result};
+
+use super::{bytes_to_f32, f32_to_bytes, map_common_regions, synth_evolve, App, StepCtx};
+use crate::config::{AppKind, ComputeMode};
+use crate::mem::Payload;
+use crate::splitproc::SplitProcess;
+
+/// Atoms per rank (matches python/compile/model.py::MD_N_ATOMS).
+pub const N_ATOMS: usize = 256;
+/// Box edge (matches MD_BOX).
+pub const BOX: f32 = 12.0;
+
+pub struct GromacsAdh;
+
+impl App for GromacsAdh {
+    fn kind(&self) -> AppKind {
+        AppKind::Gromacs
+    }
+
+    fn artifact(&self) -> Option<&'static str> {
+        Some("md_step")
+    }
+
+    fn default_mem_per_rank(&self) -> u64 {
+        3 * (1 << 30) / 2 // 1.5 GiB: ADH-analog per-rank footprint
+    }
+
+    fn compute_secs(&self) -> f64 {
+        0.35 // ~4 MD inner steps per superstep at ADH scale
+    }
+
+    fn init(&self, proc: &mut SplitProcess, _ranks: u32, mem_per_rank: u64) -> Result<()> {
+        // Deterministic initial condition from the rank's seeded PRNG.
+        let mut pos = Vec::with_capacity(N_ATOMS * 3);
+        let mut vel = Vec::with_capacity(N_ATOMS * 3);
+        for _ in 0..N_ATOMS * 3 {
+            pos.push(proc.rng.next_f32() * BOX);
+            vel.push((proc.rng.next_f32() - 0.5) * 0.2);
+        }
+        let state_bytes = (pos.len() + vel.len()) as u64 * 4 + 4;
+        proc.map_app_region("pos", pos.len() as u64 * 4, Payload::Real(f32_to_bytes(&pos)))?;
+        proc.map_app_region("vel", vel.len() as u64 * 4, Payload::Real(f32_to_bytes(&vel)))?;
+        proc.map_app_region("ke", 4, Payload::Real(vec![0u8; 4]))?;
+        map_common_regions(proc, mem_per_rank, state_bytes)?;
+        // The trajectory output file the descriptor-conflict bug needs.
+        proc.open_app_fd("traj.xtc");
+        Ok(())
+    }
+
+    fn compute(&self, ctx: &mut StepCtx) -> Result<()> {
+        match ctx.mode {
+            ComputeMode::Real => {
+                let pos = bytes_to_f32(ctx.proc.app_state("pos").context("pos")?);
+                let vel = bytes_to_f32(ctx.proc.app_state("vel").context("vel")?);
+                let out = ctx.engine()?.run("md_step", &[&pos, &vel])?;
+                ctx.proc.store_app_state("pos", f32_to_bytes(&out[0]))?;
+                ctx.proc.store_app_state("vel", f32_to_bytes(&out[1]))?;
+                ctx.proc.store_app_state("ke", f32_to_bytes(&out[2]))?;
+            }
+            ComputeMode::Synthetic => {
+                for name in ["pos", "vel"] {
+                    let mut b = ctx.proc.app_state(name).context(name)?.to_vec();
+                    synth_evolve(&mut b);
+                    ctx.proc.store_app_state(name, b)?;
+                }
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,88 @@
+//! HPCG analog: conjugate gradient on the 27-point stencil operator.
+//!
+//! The paper's in-text table workload: 512 ranks x 8 threads, 5.8 TB
+//! aggregate memory; checkpoint 30 s on Burst Buffers vs >600 s on
+//! CSCRATCH. Per-rank compute is the `cg_step` artifact — one CG iteration
+//! whose SpMV is the L1 Pallas stencil kernel. The default per-rank
+//! footprint is 5.8 TB / 512 so the 512-rank bench writes exactly the
+//! paper's aggregate.
+
+use anyhow::{Context, Result};
+
+use super::{bytes_to_f32, f32_to_bytes, map_common_regions, synth_evolve, App, StepCtx};
+use crate::config::{AppKind, ComputeMode};
+use crate::mem::Payload;
+use crate::splitproc::SplitProcess;
+
+/// Local grid (matches python/compile/model.py::CG_GRID).
+pub const GRID: usize = 16;
+const N: usize = GRID * GRID * GRID;
+
+pub struct Hpcg;
+
+impl App for Hpcg {
+    fn kind(&self) -> AppKind {
+        AppKind::Hpcg
+    }
+
+    fn artifact(&self) -> Option<&'static str> {
+        Some("cg_step")
+    }
+
+    fn default_mem_per_rank(&self) -> u64 {
+        5_800_000_000_000 / 512 // the paper's 5.8 TB aggregate at 512 ranks
+    }
+
+    fn compute_secs(&self) -> f64 {
+        0.6
+    }
+
+    fn init(&self, proc: &mut SplitProcess, _ranks: u32, mem_per_rank: u64) -> Result<()> {
+        // b random; x0 = 0; r0 = b; p0 = r0; rz0 = <r0, r0>.
+        let mut b = Vec::with_capacity(N);
+        for _ in 0..N {
+            b.push(proc.rng.next_f32() - 0.5);
+        }
+        let x = vec![0.0f32; N];
+        let rz: f32 = b.iter().map(|v| v * v).sum();
+        let state_bytes = (3 * N + 1) as u64 * 4;
+        proc.map_app_region("x", (N * 4) as u64, Payload::Real(f32_to_bytes(&x)))?;
+        proc.map_app_region("r", (N * 4) as u64, Payload::Real(f32_to_bytes(&b)))?;
+        proc.map_app_region("p", (N * 4) as u64, Payload::Real(f32_to_bytes(&b)))?;
+        proc.map_app_region("rz", 4, Payload::Real(f32_to_bytes(&[rz])))?;
+        map_common_regions(proc, mem_per_rank, state_bytes)?;
+        proc.open_app_fd("hpcg_output.yaml");
+        Ok(())
+    }
+
+    fn compute(&self, ctx: &mut StepCtx) -> Result<()> {
+        match ctx.mode {
+            ComputeMode::Real => {
+                let x = bytes_to_f32(ctx.proc.app_state("x").context("x")?);
+                let r = bytes_to_f32(ctx.proc.app_state("r").context("r")?);
+                let p = bytes_to_f32(ctx.proc.app_state("p").context("p")?);
+                let rz = bytes_to_f32(ctx.proc.app_state("rz").context("rz")?);
+                let out = ctx.engine()?.run("cg_step", &[&x, &r, &p, &rz])?;
+                ctx.proc.store_app_state("x", f32_to_bytes(&out[0]))?;
+                ctx.proc.store_app_state("r", f32_to_bytes(&out[1]))?;
+                ctx.proc.store_app_state("p", f32_to_bytes(&out[2]))?;
+                ctx.proc.store_app_state("rz", f32_to_bytes(&out[3]))?;
+                // out[4] is the residual — exposed for convergence logging.
+            }
+            ComputeMode::Synthetic => {
+                let mut b = ctx.proc.app_state("x").context("x")?.to_vec();
+                synth_evolve(&mut b);
+                ctx.proc.store_app_state("x", b)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Hpcg {
+    /// Current residual sqrt(<r,r>) — convergence telemetry for examples.
+    pub fn residual(proc: &SplitProcess) -> Option<f32> {
+        let rz = bytes_to_f32(proc.app_state("rz")?);
+        Some(rz[0].sqrt())
+    }
+}

@@ -1,0 +1,202 @@
+//! Analog applications: the workloads the paper evaluates MANA with.
+//!
+//! Each app is a per-rank state machine whose compute is the real AOT
+//! artifact (L2 JAX graph + L1 Pallas kernel, run via PJRT) or a
+//! deterministic synthetic evolution (for 512-rank benches). State lives in
+//! upper-half memory regions of the rank's [`SplitProcess`] — which is what
+//! makes it checkpointable by MANA without the app's cooperation
+//! (*transparent* checkpointing).
+//!
+//! Every superstep a rank also exchanges halo chunks with its ring
+//! neighbours through the MANA wrapper layer: the traffic exercises the
+//! drain protocol, and the halo fold makes lost or clobbered messages
+//! corrupt the final state fingerprint (detectably).
+
+pub mod gromacs;
+pub mod hpcg;
+pub mod synthetic;
+pub mod vasp_rpa;
+
+use anyhow::Result;
+
+use crate::config::{AppKind, ComputeMode};
+use crate::runtime::Engine;
+use crate::splitproc::SplitProcess;
+use crate::topology::RankId;
+
+/// Bytes of one halo chunk (two are sent per superstep, same tag — which
+/// is what trips the careless blocking→non-blocking conversion).
+pub const HALO_BYTES: usize = 64;
+/// Virtual bytes charged to the fabric per halo chunk (the real ADH/HPCG
+/// halos are MBs; the payload we carry is a digest of it).
+pub const HALO_VIRTUAL_BYTES: u64 = 2 << 20;
+
+/// One application = init + compute rules.
+pub trait App: Send + Sync {
+    fn kind(&self) -> AppKind;
+    /// AOT artifact name (None for the synthetic app).
+    fn artifact(&self) -> Option<&'static str>;
+    /// Default upper-half footprint per rank (virtual bytes).
+    fn default_mem_per_rank(&self) -> u64;
+    /// Modeled compute time per superstep (virtual seconds).
+    fn compute_secs(&self) -> f64;
+    /// Map the app's regions into a fresh rank process and set initial state.
+    fn init(&self, proc: &mut SplitProcess, ranks: u32, mem_per_rank: u64) -> Result<()>;
+    /// Advance one rank's state by one superstep.
+    fn compute(&self, ctx: &mut StepCtx) -> Result<()>;
+}
+
+/// Per-rank compute context.
+pub struct StepCtx<'a> {
+    pub rank: RankId,
+    pub ranks: u32,
+    pub proc: &'a mut SplitProcess,
+    pub engine: Option<&'a Engine>,
+    pub mode: ComputeMode,
+}
+
+impl StepCtx<'_> {
+    /// Engine handle, or error if Real mode was requested without one.
+    pub fn engine(&self) -> Result<&Engine> {
+        self.engine
+            .ok_or_else(|| anyhow::anyhow!("Real compute mode requires a loaded Engine"))
+    }
+}
+
+/// Instantiate an app by kind.
+pub fn make_app(kind: AppKind) -> Box<dyn App> {
+    match kind {
+        AppKind::Gromacs => Box::new(gromacs::GromacsAdh),
+        AppKind::Hpcg => Box::new(hpcg::Hpcg),
+        AppKind::VaspRpa => Box::new(vasp_rpa::VaspRpa),
+        AppKind::Synthetic => Box::new(synthetic::Synthetic),
+    }
+}
+
+// ------------------------------------------------------------------ helpers
+
+/// f32 slice -> LE bytes.
+pub fn f32_to_bytes(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// LE bytes -> f32 vec.
+pub fn bytes_to_f32(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+/// Deterministic synthetic state evolution: next = H(state)-keyed stream
+/// XOR state. Pure function of the bytes, so C/R determinism checks hold
+/// in Synthetic mode too.
+pub fn synth_evolve(bytes: &mut [u8]) {
+    use crate::util::{fnv1a, prng::Xoshiro256};
+    let mut rng = Xoshiro256::new(fnv1a(bytes));
+    for b in bytes.iter_mut() {
+        *b ^= (rng.next_u64() & 0xff) as u8;
+    }
+}
+
+/// The halo payload a rank emits: a digest of its primary state region.
+pub fn halo_payload(state: &[u8], step: u64, chunk: u8) -> Vec<u8> {
+    halo_payload_from_hash(crate::util::fnv1a(state), step, chunk)
+}
+
+/// Expand a precomputed state hash into the halo payload (hot-path variant:
+/// lets the superstep hash the state once per rank instead of cloning it
+/// and hashing per chunk).
+pub fn halo_payload_from_hash(state_hash: u64, step: u64, chunk: u8) -> Vec<u8> {
+    use crate::util::hash_combine;
+    let h = hash_combine(state_hash, hash_combine(step, chunk as u64));
+    let mut out = Vec::with_capacity(HALO_BYTES);
+    let mut x = h;
+    while out.len() < HALO_BYTES {
+        out.extend_from_slice(&x.to_le_bytes());
+        x = x.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1);
+    }
+    out.truncate(HALO_BYTES);
+    out
+}
+
+/// Fold a received halo chunk into the rank's halo accumulator region.
+pub fn fold_halo(proc: &mut SplitProcess, payload: &[u8]) -> Result<()> {
+    let acc = proc
+        .app_state("halo_acc")
+        .ok_or_else(|| anyhow::anyhow!("no halo_acc region"))?;
+    let mut acc = acc.to_vec();
+    for (a, b) in acc.iter_mut().zip(payload) {
+        *a ^= *b;
+    }
+    proc.store_app_state("halo_acc", acc)
+}
+
+/// Common region setup shared by all apps: the halo accumulator plus the
+/// big pattern-backed heap that dominates the checkpoint footprint.
+pub fn map_common_regions(
+    proc: &mut SplitProcess,
+    mem_per_rank: u64,
+    state_bytes: u64,
+) -> Result<()> {
+    use crate::mem::Payload;
+    proc.map_app_region("halo_acc", HALO_BYTES as u64, Payload::Real(vec![0u8; HALO_BYTES]))?;
+    let heap = mem_per_rank.saturating_sub(state_bytes + HALO_BYTES as u64);
+    if heap > 0 {
+        let seed = 0xADE0 ^ proc.rank.0 as u64;
+        proc.map_app_region("heap", heap, Payload::Pattern(seed))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_bytes_roundtrip() {
+        let v = vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE];
+        assert_eq!(bytes_to_f32(&f32_to_bytes(&v)), v);
+    }
+
+    #[test]
+    fn synth_evolve_deterministic_and_changing() {
+        let mut a = vec![1u8, 2, 3, 4, 5, 6, 7, 8];
+        let mut b = a.clone();
+        synth_evolve(&mut a);
+        synth_evolve(&mut b);
+        assert_eq!(a, b);
+        assert_ne!(a, vec![1u8, 2, 3, 4, 5, 6, 7, 8]);
+        // Two steps differ from one step.
+        let one = a.clone();
+        synth_evolve(&mut a);
+        assert_ne!(a, one);
+    }
+
+    #[test]
+    fn halo_payload_is_step_and_chunk_dependent() {
+        let s = [9u8; 128];
+        assert_eq!(halo_payload(&s, 3, 0).len(), HALO_BYTES);
+        assert_ne!(halo_payload(&s, 3, 0), halo_payload(&s, 3, 1));
+        assert_ne!(halo_payload(&s, 3, 0), halo_payload(&s, 4, 0));
+        assert_eq!(halo_payload(&s, 3, 0), halo_payload(&s, 3, 0));
+    }
+
+    #[test]
+    fn make_app_covers_all_kinds() {
+        for kind in [
+            AppKind::Gromacs,
+            AppKind::Hpcg,
+            AppKind::VaspRpa,
+            AppKind::Synthetic,
+        ] {
+            let app = make_app(kind);
+            assert_eq!(app.kind(), kind);
+            assert!(app.default_mem_per_rank() > 0);
+            assert!(app.compute_secs() > 0.0);
+        }
+    }
+}

@@ -1,0 +1,53 @@
+//! Pure-synthetic workload: deterministic state evolution, no PJRT.
+//!
+//! Used by substrate tests and the biggest benches, where the point is the
+//! checkpoint data path, not the physics. Also the stand-in for "tens of
+//! thousands of different application binaries" in the Fig. 1 census.
+
+use anyhow::{Context, Result};
+
+use super::{map_common_regions, synth_evolve, App, StepCtx};
+use crate::config::AppKind;
+use crate::mem::Payload;
+use crate::splitproc::SplitProcess;
+
+const STATE_BYTES: usize = 4096;
+
+pub struct Synthetic;
+
+impl App for Synthetic {
+    fn kind(&self) -> AppKind {
+        AppKind::Synthetic
+    }
+
+    fn artifact(&self) -> Option<&'static str> {
+        None
+    }
+
+    fn default_mem_per_rank(&self) -> u64 {
+        256 << 20 // 256 MiB
+    }
+
+    fn compute_secs(&self) -> f64 {
+        0.1
+    }
+
+    fn init(&self, proc: &mut SplitProcess, _ranks: u32, mem_per_rank: u64) -> Result<()> {
+        let mut state = vec![0u8; STATE_BYTES];
+        for b in state.iter_mut() {
+            *b = (proc.rng.next_u64() & 0xff) as u8;
+        }
+        proc.map_app_region("state", STATE_BYTES as u64, Payload::Real(state))?;
+        map_common_regions(proc, mem_per_rank, STATE_BYTES as u64)?;
+        // Every production app writes output; the fd survives C/R.
+        proc.open_app_fd("stdout.log");
+        Ok(())
+    }
+
+    fn compute(&self, ctx: &mut StepCtx) -> Result<()> {
+        let mut b = ctx.proc.app_state("state").context("state")?.to_vec();
+        synth_evolve(&mut b);
+        ctx.proc.store_app_state("state", b)?;
+        Ok(())
+    }
+}

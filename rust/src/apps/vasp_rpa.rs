@@ -1,0 +1,91 @@
+//! VASP/RPA analog: chi0 frequency-quadrature accumulation.
+//!
+//! VASP is NERSC's top application (>20% of all cycles, Fig. 1), and its
+//! RPA jobs are the paper's marquee use case: "The RPA jobs can run for
+//! much longer than 48 hours, the max walltime allowed on Cori. In the past
+//! we had to make special reservations for these jobs, now they can run on
+//! Cori by checkpointing/restarting with MANA."
+//!
+//! Each superstep is one quadrature point: chi += w_i * occ @ virt^T via
+//! the `rpa_step` artifact (L1 Pallas MXU-tiled matmul), and costs one
+//! virtual *hour* — so a 60-point quadrature exceeds the 48 h walltime and
+//! must span multiple jobs via C/R (examples/vasp_rpa.rs).
+
+use anyhow::{Context, Result};
+
+use super::{bytes_to_f32, f32_to_bytes, map_common_regions, synth_evolve, App, StepCtx};
+use crate::config::{AppKind, ComputeMode};
+use crate::mem::Payload;
+use crate::splitproc::SplitProcess;
+
+/// Block dims (match python/compile/model.py::RPA_{M,N,K}).
+pub const M: usize = 256;
+pub const K: usize = 256;
+
+pub struct VaspRpa;
+
+impl App for VaspRpa {
+    fn kind(&self) -> AppKind {
+        AppKind::VaspRpa
+    }
+
+    fn artifact(&self) -> Option<&'static str> {
+        Some("rpa_step")
+    }
+
+    fn default_mem_per_rank(&self) -> u64 {
+        4 << 30 // 4 GiB: typical VASP RPA per-rank footprint
+    }
+
+    fn compute_secs(&self) -> f64 {
+        3600.0 // one quadrature point per virtual hour
+    }
+
+    fn init(&self, proc: &mut SplitProcess, _ranks: u32, mem_per_rank: u64) -> Result<()> {
+        let mut occ = Vec::with_capacity(M * K);
+        let mut virt = Vec::with_capacity(M * K);
+        for _ in 0..M * K {
+            occ.push((proc.rng.next_f32() - 0.5) * 0.1);
+            virt.push((proc.rng.next_f32() - 0.5) * 0.1);
+        }
+        let chi = vec![0.0f32; M * M];
+        let state_bytes = ((occ.len() + virt.len() + chi.len() + 2) * 4) as u64;
+        proc.map_app_region("occ", (M * K * 4) as u64, Payload::Real(f32_to_bytes(&occ)))?;
+        proc.map_app_region("virt", (M * K * 4) as u64, Payload::Real(f32_to_bytes(&virt)))?;
+        proc.map_app_region("chi", (M * M * 4) as u64, Payload::Real(f32_to_bytes(&chi)))?;
+        proc.map_app_region("ecorr", 4, Payload::Real(vec![0u8; 4]))?;
+        map_common_regions(proc, mem_per_rank, state_bytes)?;
+        // WAVECAR-analog output file.
+        proc.open_app_fd("WAVECAR");
+        Ok(())
+    }
+
+    fn compute(&self, ctx: &mut StepCtx) -> Result<()> {
+        match ctx.mode {
+            ComputeMode::Real => {
+                let occ = bytes_to_f32(ctx.proc.app_state("occ").context("occ")?);
+                let virt = bytes_to_f32(ctx.proc.app_state("virt").context("virt")?);
+                let chi = bytes_to_f32(ctx.proc.app_state("chi").context("chi")?);
+                // Gauss-Legendre-ish weight for this quadrature point.
+                let i = ctx.proc.step as f32;
+                let w = [1.0 / (1.0 + i * i * 0.01)];
+                let out = ctx.engine()?.run("rpa_step", &[&occ, &virt, &chi, &w])?;
+                ctx.proc.store_app_state("chi", f32_to_bytes(&out[0]))?;
+                ctx.proc.store_app_state("ecorr", f32_to_bytes(&out[1]))?;
+            }
+            ComputeMode::Synthetic => {
+                let mut b = ctx.proc.app_state("chi").context("chi")?.to_vec();
+                synth_evolve(&mut b);
+                ctx.proc.store_app_state("chi", b)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl VaspRpa {
+    /// Running correlation-energy surrogate (telemetry for examples).
+    pub fn ecorr(proc: &SplitProcess) -> Option<f32> {
+        Some(bytes_to_f32(proc.app_state("ecorr")?)[0])
+    }
+}

@@ -1,0 +1,147 @@
+//! Minimal benchmarking kit (criterion is unavailable offline).
+//!
+//! Provides wall-clock timing with warmup + repetition for the perf
+//! benches, and table/JSON emission helpers shared by the per-figure
+//! benches. Virtual-time results (the paper's tables) come from the
+//! simulator's SimClock, not from this module.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Wall-clock measurement of a closure: warmup, then `iters` timed runs.
+/// Returns (mean_secs, min_secs).
+pub fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut total = 0.0;
+    let mut best = f64::MAX;
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        if dt < best {
+            best = dt;
+        }
+    }
+    (total / iters.max(1) as f64, best)
+}
+
+/// Throughput helper: ops/sec given per-iteration op count.
+pub fn throughput(ops_per_iter: u64, mean_secs: f64) -> f64 {
+    ops_per_iter as f64 / mean_secs
+}
+
+/// A bench report accumulating rows, printed as a table and one JSON line
+/// (the `bench:` prefix makes it greppable from `cargo bench` output).
+pub struct Report {
+    name: &'static str,
+    columns: Vec<&'static str>,
+    rows: Vec<Vec<String>>,
+    json_rows: Vec<Json>,
+}
+
+impl Report {
+    pub fn new(name: &'static str, columns: Vec<&'static str>) -> Self {
+        Report {
+            name,
+            columns,
+            rows: Vec::new(),
+            json_rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len());
+        let mut obj = Json::obj();
+        for (c, v) in self.columns.iter().zip(&cells) {
+            obj = obj.set(c, v.as_str());
+        }
+        self.json_rows.push(obj);
+        self.rows.push(cells);
+    }
+
+    /// Print the table + machine-readable trailer.
+    pub fn finish(self) {
+        println!("\n== {} ==", self.name);
+        let widths: Vec<usize> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                self.rows
+                    .iter()
+                    .map(|r| r[i].len())
+                    .chain([c.len()])
+                    .max()
+                    .unwrap_or(8)
+            })
+            .collect();
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| format!("{c:>w$}"))
+            .collect();
+        println!("{}", header.join("  "));
+        for r in &self.rows {
+            let line: Vec<String> = r
+                .iter()
+                .zip(&widths)
+                .map(|(v, w)| format!("{v:>w$}"))
+                .collect();
+            println!("{}", line.join("  "));
+        }
+        let mut arr = Json::Arr(vec![]);
+        for j in self.json_rows {
+            arr.push(j);
+        }
+        println!(
+            "bench:{}",
+            Json::obj()
+                .set("name", self.name)
+                .set("rows", arr)
+                .to_string()
+        );
+    }
+}
+
+/// Format seconds compactly for tables.
+pub fn fsecs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0}")
+    } else if s >= 1.0 {
+        format!("{s:.2}")
+    } else if s >= 1e-3 {
+        format!("{:.3}m", s * 1e3).replace('m', "ms")
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_measures_positive() {
+        let (mean, min) = time(1, 3, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(mean > 0.0 && min > 0.0 && min <= mean * 1.001);
+    }
+
+    #[test]
+    fn throughput_math() {
+        assert!((throughput(1000, 0.5) - 2000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fsecs_formats() {
+        assert_eq!(fsecs(650.0), "650");
+        assert_eq!(fsecs(30.25), "30.25");
+        assert_eq!(fsecs(0.004), "4.000ms");
+    }
+}

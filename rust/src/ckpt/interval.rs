@@ -1,0 +1,123 @@
+//! Optimal checkpoint-interval advisor (Young / Daly).
+//!
+//! Deployment support: once MANA's checkpoint cost on a given tier is
+//! known (e.g. ~30 s on Burst Buffers for HPCG at 512 ranks), the center
+//! must pick how often to checkpoint. The classic first-order answers:
+//!
+//! * Young (1974):  T_opt = sqrt(2 * C * MTBF)
+//! * Daly  (2006):  T_opt = sqrt(2 * C * (MTBF + R)) * [1 + ...] refinement,
+//!   here the commonly used form sqrt(2*C*M) * (1 + sqrt(C/(2M))/3) - C
+//!
+//! plus an exact-ish expected-efficiency evaluator to verify the optimum
+//! numerically (used by the tests and the CLI `mana advise`).
+
+/// Young's approximation of the optimal compute-between-checkpoints.
+pub fn young_interval(ckpt_secs: f64, mtbf_secs: f64) -> f64 {
+    (2.0 * ckpt_secs * mtbf_secs).sqrt()
+}
+
+/// Daly's higher-order approximation.
+pub fn daly_interval(ckpt_secs: f64, mtbf_secs: f64) -> f64 {
+    let m = mtbf_secs;
+    let c = ckpt_secs;
+    if c >= 2.0 * m {
+        return m; // degenerate regime: checkpoint ~ every MTBF
+    }
+    (2.0 * c * m).sqrt() * (1.0 + (c / (2.0 * m)).sqrt() / 3.0) - c
+}
+
+/// Expected fraction of wall time doing useful work when checkpointing
+/// every `interval` seconds of compute, with exponential failures of mean
+/// `mtbf_secs`, checkpoint cost `ckpt_secs`, restart cost `restart_secs`.
+///
+/// First-order model: each segment costs (interval + C); a failure strikes
+/// a segment with probability 1 - exp(-(interval+C)/M) and wastes on
+/// average half the segment plus the restart.
+pub fn efficiency(interval: f64, ckpt_secs: f64, restart_secs: f64, mtbf_secs: f64) -> f64 {
+    assert!(interval > 0.0);
+    let seg = interval + ckpt_secs;
+    let p_fail = 1.0 - (-seg / mtbf_secs).exp();
+    let expected_segment_wall = seg + p_fail * (seg / 2.0 + restart_secs);
+    interval / expected_segment_wall
+}
+
+/// Numerically search the best interval in [60 s, mtbf].
+pub fn optimal_interval(ckpt_secs: f64, restart_secs: f64, mtbf_secs: f64) -> f64 {
+    let mut best_t = 60.0;
+    let mut best_e = 0.0;
+    let mut t = 60.0;
+    while t <= mtbf_secs {
+        let e = efficiency(t, ckpt_secs, restart_secs, mtbf_secs);
+        if e > best_e {
+            best_e = e;
+            best_t = t;
+        }
+        t *= 1.02;
+    }
+    best_t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DAY: f64 = 86_400.0;
+
+    #[test]
+    fn young_scaling() {
+        // Cheaper checkpoints -> shorter optimal interval (sqrt scaling).
+        let a = young_interval(30.0, DAY);
+        let b = young_interval(600.0, DAY);
+        assert!((b / a - (600.0f64 / 30.0).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn daly_close_to_young_for_small_c() {
+        let y = young_interval(30.0, DAY);
+        let d = daly_interval(30.0, DAY);
+        assert!((d - y).abs() / y < 0.05, "y={y}, d={d}");
+    }
+
+    #[test]
+    fn daly_degenerate_regime() {
+        assert_eq!(daly_interval(100.0, 40.0), 40.0);
+    }
+
+    #[test]
+    fn numeric_optimum_agrees_with_daly() {
+        // BB-tier HPCG numbers: C = 30 s, R = 26 s, MTBF = 1 day.
+        let daly = daly_interval(30.0, DAY);
+        let num = optimal_interval(30.0, 26.0, DAY);
+        assert!(
+            (num / daly - 1.0).abs() < 0.25,
+            "numeric {num} vs daly {daly}"
+        );
+        // The optimum beats naive extremes.
+        let e_opt = efficiency(num, 30.0, 26.0, DAY);
+        assert!(e_opt > efficiency(300.0, 30.0, 26.0, DAY));
+        assert!(e_opt > efficiency(DAY / 2.0, 30.0, 26.0, DAY));
+        assert!(e_opt > 0.95, "BB checkpointing is cheap: eff {e_opt}");
+    }
+
+    #[test]
+    fn lustre_vs_bb_interval_and_efficiency() {
+        // The paper's tiers: 30 s (BB) vs 650 s (Lustre) checkpoint cost.
+        let bb = optimal_interval(30.0, 26.0, DAY);
+        let lu = optimal_interval(650.0, 65.0, DAY);
+        assert!(lu > bb, "expensive ckpts -> longer intervals");
+        let e_bb = efficiency(bb, 30.0, 26.0, DAY);
+        let e_lu = efficiency(lu, 650.0, 65.0, DAY);
+        assert!(
+            e_bb > e_lu,
+            "BB tier must yield higher machine efficiency: {e_bb} vs {e_lu}"
+        );
+    }
+
+    #[test]
+    fn efficiency_bounded() {
+        for t in [60.0, 600.0, 6000.0] {
+            let e = efficiency(t, 30.0, 26.0, DAY);
+            assert!(e > 0.0 && e < 1.0);
+        }
+    }
+}

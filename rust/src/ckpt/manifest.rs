@@ -1,0 +1,115 @@
+//! Checkpoint-set manifest.
+//!
+//! The paper's srun crash: "The Slurm srun command uses a network packet
+//! containing the list of arguments it was passed … Due to the limit on
+//! packet sizes, srun was unable to pass all checkpoint file names to its
+//! workers, leading to a crash. We resolved this by changing the way we
+//! provide the file names." The fix modeled here: instead of appending
+//! every per-rank image path to the argv packet, restart passes *one*
+//! manifest path, and workers read their own image path from the manifest.
+
+use std::collections::BTreeMap;
+
+use crate::topology::RankId;
+
+/// A restart manifest: rank -> image path, plus job metadata.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CkptManifest {
+    pub job: String,
+    pub step: u64,
+    entries: BTreeMap<u32, String>,
+}
+
+impl CkptManifest {
+    pub fn new(job: &str, step: u64) -> Self {
+        CkptManifest {
+            job: job.to_string(),
+            step,
+            entries: BTreeMap::new(),
+        }
+    }
+
+    pub fn add(&mut self, rank: RankId, path: String) {
+        self.entries.insert(rank.0, path);
+    }
+
+    pub fn path_for(&self, rank: RankId) -> Option<&str> {
+        self.entries.get(&rank.0).map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (RankId, &str)> {
+        self.entries.iter().map(|(r, p)| (RankId(*r), p.as_str()))
+    }
+
+    /// Serialize as a line-based file ("rank<TAB>path").
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = format!("job\t{}\nstep\t{}\n", self.job, self.step);
+        for (rank, path) in &self.entries {
+            out.push_str(&format!("{rank}\t{path}\n"));
+        }
+        out.into_bytes()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Option<Self> {
+        let text = std::str::from_utf8(bytes).ok()?;
+        let mut m = CkptManifest::default();
+        for line in text.lines() {
+            let (k, v) = line.split_once('\t')?;
+            match k {
+                "job" => m.job = v.to_string(),
+                "step" => m.step = v.parse().ok()?,
+                rank => {
+                    m.entries.insert(rank.parse().ok()?, v.to_string());
+                }
+            }
+        }
+        Some(m)
+    }
+
+    /// The single argv token the fixed restart path passes to srun.
+    pub fn manifest_path(job: &str) -> String {
+        format!("{job}/ckpt_manifest.txt")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut m = CkptManifest::new("job7", 420);
+        for r in 0..512u32 {
+            m.add(RankId(r), crate::ckpt::image_path("job7", RankId(r)));
+        }
+        let back = CkptManifest::decode(&m.encode()).unwrap();
+        assert_eq!(m, back);
+        assert_eq!(back.len(), 512);
+        assert_eq!(
+            back.path_for(RankId(511)).unwrap(),
+            "job7/ckpt_rank00511.mana"
+        );
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(CkptManifest::decode(b"no tabs here").is_none());
+        assert!(CkptManifest::decode(&[0xff, 0xfe]).is_none());
+    }
+
+    #[test]
+    fn manifest_is_one_small_token() {
+        // The whole point of the fix: argv carries one bounded path, not
+        // 512 image paths.
+        let p = CkptManifest::manifest_path("job7");
+        assert!(p.len() < 64);
+    }
+}

@@ -1,0 +1,669 @@
+//! Checkpoint image format (per-rank `.mana` images).
+//!
+//! The split-process model checkpoints *only* the upper half: app memory
+//! regions, upper-half file descriptors, the application step counter and
+//! PRNG state. Everything is CRC32-protected per section plus a whole-image
+//! trailer so restart can detect torn or corrupted images (the disk-space
+//! and injection tests rely on this).
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "MANAIMG1" | version u32 | rank u32 | step u64 | rng[32]
+//! | parent: len u32 + bytes (len 0 = full image)
+//! | n_fds u32 | { fd u32, name: len u32 + bytes }*
+//! | n_regions u32 | { addr u64, vlen u64, name, payload_kind u8,
+//!                     payload (seed u64 | data len u32 + bytes
+//!                              | parent-ref fingerprint u64),
+//!                     section_crc u32 }*
+//! | image_crc u32
+//! ```
+//!
+//! **Incremental checkpoints** (the paper's "reducing the checkpoint
+//! overhead for large-scale applications" future work): an image may name
+//! a `parent` full image; regions unchanged since that full checkpoint are
+//! stored as `ParentRef { fingerprint }` — only their identity and content
+//! fingerprint ride the incremental image, and restore resolves them from
+//! the parent (verifying the fingerprint).
+
+pub mod interval;
+pub mod manifest;
+
+use std::fmt;
+
+use crate::mem::{Half, MemRegion, Payload, RegionTable};
+use crate::topology::RankId;
+
+const MAGIC: &[u8; 8] = b"MANAIMG1";
+const VERSION: u32 = 3;
+
+/// Everything a rank needs to resume: the upper half, frozen.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CkptImage {
+    pub rank: RankId,
+    pub step: u64,
+    pub rng_state: [u8; 32],
+    /// Path of the parent full image this incremental refers to (None for
+    /// a full image).
+    pub parent: Option<String>,
+    /// Upper-half descriptors to re-claim at restart.
+    pub upper_fds: Vec<(u32, String)>,
+    /// Upper-half regions (with virtual lengths and payloads).
+    pub regions: Vec<SavedRegion>,
+}
+
+/// How a region's contents are stored in this image.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SavedPayload {
+    /// Contents materialized in this image.
+    Full(Payload),
+    /// Unchanged since the parent full image: resolve there, verify the
+    /// content fingerprint.
+    ParentRef { fingerprint: u64 },
+}
+
+/// A serialized upper-half region.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SavedRegion {
+    pub addr: u64,
+    pub vlen: u64,
+    pub name: String,
+    pub payload: SavedPayload,
+}
+
+impl SavedRegion {
+    /// Materialize a live region. Panics on an unresolved ParentRef —
+    /// callers must run [`resolve_incremental`] first.
+    pub fn to_region(&self) -> MemRegion {
+        match &self.payload {
+            SavedPayload::Full(p) => {
+                MemRegion::new(self.addr, self.vlen, Half::Upper, &self.name, p.clone())
+            }
+            SavedPayload::ParentRef { .. } => {
+                panic!("unresolved ParentRef region {}", self.name)
+            }
+        }
+    }
+}
+
+/// Resolve an incremental image against its parent full image, producing a
+/// fully-materialized image. Fingerprints of referenced regions are
+/// verified (a mismatch means the parent is not the image this incremental
+/// was taken against).
+pub fn resolve_incremental(
+    img: &CkptImage,
+    parent: &CkptImage,
+) -> Result<CkptImage, ImageError> {
+    let mut out = img.clone();
+    out.parent = None;
+    for r in &mut out.regions {
+        if let SavedPayload::ParentRef { fingerprint } = r.payload {
+            let src = parent
+                .regions
+                .iter()
+                .find(|p| p.name == r.name)
+                .ok_or_else(|| ImageError::CrcMismatch {
+                    section: format!("{}: missing in parent", r.name),
+                })?;
+            let SavedPayload::Full(ref payload) = src.payload else {
+                return Err(ImageError::CrcMismatch {
+                    section: format!("{}: parent not materialized", r.name),
+                });
+            };
+            if payload.fingerprint(src.vlen) != fingerprint {
+                return Err(ImageError::CrcMismatch {
+                    section: format!("{}: parent content drifted", r.name),
+                });
+            }
+            r.payload = SavedPayload::Full(payload.clone());
+        }
+    }
+    Ok(out)
+}
+
+/// Image decode/validate failures.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ImageError {
+    BadMagic,
+    BadVersion(u32),
+    Truncated(&'static str),
+    CrcMismatch { section: String },
+}
+
+impl fmt::Display for ImageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ImageError::BadMagic => write!(f, "not a MANA image (bad magic)"),
+            ImageError::BadVersion(v) => write!(f, "unsupported image version {v}"),
+            ImageError::Truncated(what) => write!(f, "image truncated at {what}"),
+            ImageError::CrcMismatch { section } => {
+                write!(f, "CRC mismatch in section {section}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ImageError {}
+
+impl CkptImage {
+    /// Capture the upper half of a region table (full image).
+    pub fn capture(
+        rank: RankId,
+        step: u64,
+        rng_state: [u8; 32],
+        upper_fds: Vec<(u32, String)>,
+        table: &RegionTable,
+    ) -> Self {
+        let regions = table
+            .half_iter(Half::Upper)
+            .map(|r| SavedRegion {
+                addr: r.addr,
+                vlen: r.len,
+                name: r.name.clone(),
+                payload: SavedPayload::Full(r.payload.clone()),
+            })
+            .collect();
+        CkptImage {
+            rank,
+            step,
+            rng_state,
+            parent: None,
+            upper_fds,
+            regions,
+        }
+    }
+
+    /// Capture an incremental image against `parent_path`: regions dirty
+    /// since the last full checkpoint are materialized; clean regions
+    /// become fingerprinted parent references.
+    pub fn capture_incremental(
+        rank: RankId,
+        step: u64,
+        rng_state: [u8; 32],
+        upper_fds: Vec<(u32, String)>,
+        table: &RegionTable,
+        parent_path: &str,
+    ) -> Self {
+        let regions = table
+            .half_iter(Half::Upper)
+            .map(|r| SavedRegion {
+                addr: r.addr,
+                vlen: r.len,
+                name: r.name.clone(),
+                payload: if r.dirty {
+                    SavedPayload::Full(r.payload.clone())
+                } else {
+                    SavedPayload::ParentRef {
+                        fingerprint: r.payload.fingerprint(r.len),
+                    }
+                },
+            })
+            .collect();
+        CkptImage {
+            rank,
+            step,
+            rng_state,
+            parent: Some(parent_path.to_string()),
+            upper_fds,
+            regions,
+        }
+    }
+
+    /// Total *virtual* bytes of application state this image represents.
+    pub fn virtual_bytes(&self) -> u64 {
+        self.regions.iter().map(|r| r.vlen).sum()
+    }
+
+    /// Bytes this image actually carries to storage (ParentRefs are free).
+    pub fn write_bytes(&self) -> u64 {
+        self.regions
+            .iter()
+            .filter(|r| matches!(r.payload, SavedPayload::Full(_)))
+            .map(|r| r.vlen)
+            .sum()
+    }
+
+    // ------------------------------------------------------------- encode
+
+    /// Exact encoded size (avoids reallocation in the write hot path).
+    fn encoded_size(&self) -> usize {
+        let mut n = 8 + 4 + 4 + 8 + 32; // magic..rng
+        n += 4 + self.parent.as_deref().map_or(0, str::len);
+        n += 4;
+        for (_, name) in &self.upper_fds {
+            n += 4 + 4 + name.len();
+        }
+        n += 4;
+        for r in &self.regions {
+            n += 8 + 8 + 4 + r.name.len() + 1;
+            n += match &r.payload {
+                SavedPayload::Full(Payload::Zero) => 0,
+                SavedPayload::Full(Payload::Pattern(_)) => 8,
+                SavedPayload::Full(Payload::Real(d)) => 4 + d.len(),
+                SavedPayload::ParentRef { .. } => 8,
+            };
+            n += 4; // section crc
+        }
+        n + 4 // trailer
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_size());
+        out.extend_from_slice(MAGIC);
+        put_u32(&mut out, VERSION);
+        put_u32(&mut out, self.rank.0);
+        put_u64(&mut out, self.step);
+        out.extend_from_slice(&self.rng_state);
+        put_str(&mut out, self.parent.as_deref().unwrap_or(""));
+        put_u32(&mut out, self.upper_fds.len() as u32);
+        for (fd, name) in &self.upper_fds {
+            put_u32(&mut out, *fd);
+            put_str(&mut out, name);
+        }
+        put_u32(&mut out, self.regions.len() as u32);
+        // Trailer covers header + every section CRC (perf: payload bytes
+        // are hashed exactly once — by their section CRC — instead of
+        // twice; any corruption still lands in some CRC).
+        let mut trailer = crc32fast::Hasher::new();
+        trailer.update(&out);
+        for r in &self.regions {
+            let start = out.len();
+            put_u64(&mut out, r.addr);
+            put_u64(&mut out, r.vlen);
+            put_str(&mut out, &r.name);
+            match &r.payload {
+                SavedPayload::Full(Payload::Zero) => out.push(0),
+                SavedPayload::Full(Payload::Pattern(seed)) => {
+                    out.push(1);
+                    put_u64(&mut out, *seed);
+                }
+                SavedPayload::Full(Payload::Real(data)) => {
+                    out.push(2);
+                    put_u32(&mut out, data.len() as u32);
+                    out.extend_from_slice(data);
+                }
+                SavedPayload::ParentRef { fingerprint } => {
+                    out.push(3);
+                    put_u64(&mut out, *fingerprint);
+                }
+            }
+            let crc = crc32fast::hash(&out[start..]);
+            put_u32(&mut out, crc);
+            trailer.update(&crc.to_le_bytes());
+        }
+        put_u32(&mut out, trailer.finalize());
+        out
+    }
+
+    // ------------------------------------------------------------- decode
+
+    pub fn decode(bytes: &[u8]) -> Result<Self, ImageError> {
+        let mut c = Cursor { buf: bytes, pos: 0 };
+        if bytes.len() < 12 || &bytes[..8] != MAGIC {
+            return Err(ImageError::BadMagic);
+        }
+        // Whole-image CRC first: trailer covers everything before it.
+        if bytes.len() < 4 {
+            return Err(ImageError::Truncated("trailer"));
+        }
+        let trailer_want = u32::from_le_bytes(
+            bytes[bytes.len() - 4..].try_into().unwrap(),
+        );
+        let mut trailer = crc32fast::Hasher::new();
+        c.pos = 8;
+        let version = c.u32()?;
+        if version != VERSION {
+            return Err(ImageError::BadVersion(version));
+        }
+        let rank = RankId(c.u32()?);
+        let step = c.u64()?;
+        let rng_state: [u8; 32] = c
+            .take(32)?
+            .try_into()
+            .map_err(|_| ImageError::Truncated("rng"))?;
+        let parent_s = c.string()?;
+        let parent = if parent_s.is_empty() {
+            None
+        } else {
+            Some(parent_s)
+        };
+        // Counts are parsed *before* any CRC validates them (the trailer
+        // is single-pass now), so never trust them for allocation: bound
+        // capacities by what the remaining bytes could possibly hold.
+        let n_fds = c.u32()?;
+        let remaining = bytes.len().saturating_sub(c.pos);
+        let mut upper_fds = Vec::with_capacity((n_fds as usize).min(remaining / 8));
+        for _ in 0..n_fds {
+            let fd = c.u32()?;
+            let name = c.string()?;
+            upper_fds.push((fd, name));
+        }
+        let n_regions = c.u32()?;
+        // Trailer = CRC(header .. n_regions) + each section's CRC field.
+        trailer.update(&c.buf[..c.pos]);
+        let remaining = bytes.len().saturating_sub(c.pos);
+        let mut regions = Vec::with_capacity((n_regions as usize).min(remaining / 25));
+        for _ in 0..n_regions {
+            let start = c.pos;
+            let addr = c.u64()?;
+            let vlen = c.u64()?;
+            let name = c.string()?;
+            let kind = c.u8()?;
+            let payload = match kind {
+                0 => SavedPayload::Full(Payload::Zero),
+                1 => SavedPayload::Full(Payload::Pattern(c.u64()?)),
+                2 => {
+                    let len = c.u32()? as usize;
+                    SavedPayload::Full(Payload::Real(c.take(len)?.to_vec()))
+                }
+                3 => SavedPayload::ParentRef {
+                    fingerprint: c.u64()?,
+                },
+                _ => return Err(ImageError::Truncated("payload kind")),
+            };
+            let section = &c.buf[start..c.pos];
+            let crc = c.u32()?;
+            if crc32fast::hash(section) != crc {
+                return Err(ImageError::CrcMismatch { section: name });
+            }
+            trailer.update(&crc.to_le_bytes());
+            regions.push(SavedRegion {
+                addr,
+                vlen,
+                name,
+                payload,
+            });
+        }
+        if c.pos != bytes.len() - 4 {
+            return Err(ImageError::Truncated("trailing bytes"));
+        }
+        if trailer.finalize() != trailer_want {
+            return Err(ImageError::CrcMismatch {
+                section: "image".into(),
+            });
+        }
+        Ok(CkptImage {
+            rank,
+            step,
+            rng_state,
+            parent,
+            upper_fds,
+            regions,
+        })
+    }
+}
+
+// ----------------------------------------------------------------- helpers
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ImageError> {
+        if self.pos + n > self.buf.len() {
+            return Err(ImageError::Truncated("buffer"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, ImageError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32, ImageError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, ImageError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn string(&mut self) -> Result<String, ImageError> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| ImageError::Truncated("utf8"))
+    }
+}
+
+/// Canonical image path for a rank within a job.
+pub fn image_path(job: &str, rank: RankId) -> String {
+    format!("{job}/ckpt_rank{:05}.mana", rank.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::{AllocPolicy, AddressSpace, OsVersion};
+
+    fn sample_image() -> CkptImage {
+        CkptImage {
+            rank: RankId(3),
+            step: 1234,
+            rng_state: [7u8; 32],
+            parent: None,
+            upper_fds: vec![(3, "traj.xtc".into()), (4, "ener.edr".into())],
+            regions: vec![
+                SavedRegion {
+                    addr: 0x1000_0000_0000,
+                    vlen: 1 << 30,
+                    name: "mana.app_heap".into(),
+                    payload: SavedPayload::Full(Payload::Pattern(99)),
+                },
+                SavedRegion {
+                    addr: 0x1000_4000_0000,
+                    vlen: 4096,
+                    name: "mana.app_state".into(),
+                    payload: SavedPayload::Full(Payload::Real(vec![1, 2, 3, 4, 5])),
+                },
+                SavedRegion {
+                    addr: 0x1000_8000_0000,
+                    vlen: 1 << 20,
+                    name: "mana.bss".into(),
+                    payload: SavedPayload::Full(Payload::Zero),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let img = sample_image();
+        let bytes = img.encode();
+        let back = CkptImage::decode(&bytes).unwrap();
+        assert_eq!(img, back);
+    }
+
+    #[test]
+    fn virtual_bytes_sums_regions() {
+        let img = sample_image();
+        assert_eq!(img.virtual_bytes(), (1 << 30) + 4096 + (1 << 20));
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = sample_image().encode();
+        bytes[0] = b'X';
+        assert_eq!(CkptImage::decode(&bytes), Err(ImageError::BadMagic));
+    }
+
+    #[test]
+    fn bitflip_detected_by_crc() {
+        let img = sample_image();
+        let clean = img.encode();
+        // Flip every byte position one at a time in the payload area and
+        // expect a CRC failure (never a silent wrong decode).
+        for pos in [20usize, 60, 100, clean.len() - 10] {
+            let mut corrupt = clean.clone();
+            corrupt[pos] ^= 0x40;
+            match CkptImage::decode(&corrupt) {
+                Err(_) => {}
+                Ok(decoded) => {
+                    assert_eq!(decoded, img, "silent corruption at byte {pos}")
+                }
+            }
+        }
+        // And a targeted flip inside the Real payload must be caught.
+        let marker = clean
+            .windows(5)
+            .position(|w| w == [1, 2, 3, 4, 5])
+            .expect("payload present");
+        let mut corrupt = clean.clone();
+        corrupt[marker] = 9;
+        assert!(matches!(
+            CkptImage::decode(&corrupt),
+            Err(ImageError::CrcMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn corrupted_count_fields_do_not_abort() {
+        // Regression: after the single-pass-CRC change, counts are parsed
+        // before any CRC validates them; a bit-flipped count must produce
+        // a clean error, never a capacity-overflow abort.
+        let clean = sample_image().encode();
+        // n_fds lives right after the (empty) parent string.
+        for offset in 0..clean.len() {
+            let mut bad = clean.clone();
+            bad[offset] ^= 0xff;
+            let _ = CkptImage::decode(&bad); // must not panic/abort
+        }
+    }
+
+    #[test]
+    fn truncated_image_rejected() {
+        let bytes = sample_image().encode();
+        for cut in [4usize, 16, bytes.len() / 2, bytes.len() - 1] {
+            assert!(CkptImage::decode(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn capture_takes_only_upper_half() {
+        let mut aspace = AddressSpace::new(OsVersion::Cle6, AllocPolicy::NoReplace);
+        aspace
+            .alloc(4096, Half::Upper, "state", Payload::Real(vec![9]))
+            .unwrap();
+        aspace
+            .alloc(1 << 20, Half::Lower, "mpi_pool", Payload::Zero)
+            .unwrap();
+        let img = CkptImage::capture(RankId(0), 7, [0; 32], vec![], &aspace.table);
+        assert_eq!(img.regions.len(), 1);
+        assert_eq!(img.regions[0].name, "mana.state");
+    }
+
+    #[test]
+    fn image_path_stable() {
+        assert_eq!(image_path("job42", RankId(9)), "job42/ckpt_rank00009.mana");
+    }
+
+    // ------------------------------------------------ incremental images
+
+    fn table_with_dirty_state() -> RegionTable {
+        let mut t = RegionTable::new();
+        t.insert(MemRegion::new(
+            0x1000,
+            1 << 30,
+            Half::Upper,
+            "heap",
+            Payload::Pattern(9),
+        ))
+        .unwrap();
+        t.insert(MemRegion::new(
+            0x5000_0000_0000,
+            64,
+            Half::Upper,
+            "state",
+            Payload::Real(vec![1; 64]),
+        ))
+        .unwrap();
+        t
+    }
+
+    #[test]
+    fn incremental_capture_references_clean_regions() {
+        let mut table = table_with_dirty_state();
+        // Full checkpoint happened: everything clean.
+        table.clear_dirty(Half::Upper);
+        // Then only the small state region changed.
+        let r = table.get_mut("state").unwrap();
+        r.payload = Payload::Real(vec![2; 64]);
+        r.dirty = true;
+
+        let inc = CkptImage::capture_incremental(
+            RankId(0),
+            10,
+            [0; 32],
+            vec![],
+            &table,
+            "job/full.mana",
+        );
+        assert_eq!(inc.parent.as_deref(), Some("job/full.mana"));
+        // Only the 64-byte state is materialized; the 1 GiB heap is a ref.
+        assert_eq!(inc.write_bytes(), 64);
+        assert_eq!(inc.virtual_bytes(), (1 << 30) + 64);
+        assert!(matches!(
+            inc.regions.iter().find(|r| r.name == "heap").unwrap().payload,
+            SavedPayload::ParentRef { .. }
+        ));
+    }
+
+    #[test]
+    fn incremental_roundtrip_and_resolve() {
+        let mut table = table_with_dirty_state();
+        let full = CkptImage::capture(RankId(0), 5, [0; 32], vec![], &table);
+        table.clear_dirty(Half::Upper);
+        let r = table.get_mut("state").unwrap();
+        r.payload = Payload::Real(vec![3; 64]);
+        r.dirty = true;
+        let inc =
+            CkptImage::capture_incremental(RankId(0), 9, [0; 32], vec![], &table, "p");
+        // Bytes round-trip (including ParentRef sections + parent path).
+        let decoded = CkptImage::decode(&inc.encode()).unwrap();
+        assert_eq!(decoded, inc);
+
+        let resolved = resolve_incremental(&decoded, &full).unwrap();
+        assert!(resolved.parent.is_none());
+        let heap = resolved.regions.iter().find(|r| r.name == "heap").unwrap();
+        assert_eq!(heap.payload, SavedPayload::Full(Payload::Pattern(9)));
+        let state = resolved.regions.iter().find(|r| r.name == "state").unwrap();
+        assert_eq!(state.payload, SavedPayload::Full(Payload::Real(vec![3; 64])));
+    }
+
+    #[test]
+    fn resolve_detects_parent_drift() {
+        let mut table = table_with_dirty_state();
+        let mut full = CkptImage::capture(RankId(0), 5, [0; 32], vec![], &table);
+        table.clear_dirty(Half::Upper);
+        let inc =
+            CkptImage::capture_incremental(RankId(0), 9, [0; 32], vec![], &table, "p");
+        // Parent heap content changes out from under the incremental.
+        full.regions
+            .iter_mut()
+            .find(|r| r.name == "heap")
+            .unwrap()
+            .payload = SavedPayload::Full(Payload::Pattern(1234));
+        let err = resolve_incremental(&inc, &full).unwrap_err();
+        assert!(err.to_string().contains("drifted"), "{err}");
+    }
+
+    #[test]
+    fn resolve_detects_missing_parent_region() {
+        let mut table = table_with_dirty_state();
+        let mut full = CkptImage::capture(RankId(0), 5, [0; 32], vec![], &table);
+        table.clear_dirty(Half::Upper);
+        let inc =
+            CkptImage::capture_incremental(RankId(0), 9, [0; 32], vec![], &table, "p");
+        full.regions.retain(|r| r.name != "heap");
+        assert!(resolve_incremental(&inc, &full).is_err());
+    }
+}

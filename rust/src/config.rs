@@ -1,0 +1,201 @@
+//! Run configuration: the job description + which production fixes are on.
+//!
+//! Every fix the paper describes is a toggle, so the reliability evaluation
+//! can run the same workload in "research prototype" mode (all off — the
+//! 2019 MANA) and "production" mode (all on — this work), and per-fix
+//! ablations in between.
+
+use crate::faults::FaultPlan;
+use crate::fdreg::FdPolicy;
+use crate::fs::FsKind;
+use crate::mem::{AllocPolicy, OsVersion};
+
+/// Which analog application to run (see DESIGN.md §apps).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AppKind {
+    /// Gromacs/ADH analog: MD with the Pallas LJ kernel (Fig. 2 workload).
+    Gromacs,
+    /// HPCG analog: CG with the Pallas stencil kernel (in-text table).
+    Hpcg,
+    /// VASP/RPA analog: chi0 accumulation (the >48 h walltime workload).
+    VaspRpa,
+    /// Pure-synthetic state evolution (substrate tests, big-scale benches).
+    Synthetic,
+}
+
+impl AppKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AppKind::Gromacs => "gromacs-adh",
+            AppKind::Hpcg => "hpcg",
+            AppKind::VaspRpa => "vasp-rpa",
+            AppKind::Synthetic => "synthetic",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "gromacs" | "gromacs-adh" => Some(AppKind::Gromacs),
+            "hpcg" => Some(AppKind::Hpcg),
+            "vasp" | "vasp-rpa" => Some(AppKind::VaspRpa),
+            "synthetic" => Some(AppKind::Synthetic),
+            _ => None,
+        }
+    }
+}
+
+/// Run application compute for real (PJRT artifacts) or as deterministic
+/// synthetic state evolution (fast, for 512-rank benches).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ComputeMode {
+    Real,
+    Synthetic,
+}
+
+/// How the restart executable reaches the compute nodes (the startup-time
+/// issue: "for best startup performance at scale, it is recommended to
+/// broadcast a statically linked executable to all nodes").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkMode {
+    /// Dynamically linked MANA/DMTCP (current state): ld.so metadata storm.
+    Dynamic,
+    /// Statically linked via `--wrap=symbol` (planned fix): one broadcast.
+    Static,
+}
+
+/// The production-hardening fixes from the paper, individually toggleable.
+#[derive(Clone, Copy, Debug)]
+pub struct Fixes {
+    /// TCP KeepAlive on coordinator connections.
+    pub keepalive: bool,
+    /// Delay checkpoint until Σsent == Σreceived (message drain).
+    pub drain: bool,
+    /// Reserved fd ranges per half.
+    pub fd_reservation: bool,
+    /// MAP_FIXED_NOREPLACE dynamic free-space discovery.
+    pub noreplace: bool,
+    /// Careful blocking→non-blocking conversion (request tracking).
+    pub careful_nonblocking: bool,
+    /// Pass checkpoint file names via manifest, not argv.
+    pub manifest_filenames: bool,
+    /// CHANGES_PENDING guards on coordinator structures (Lesson 3).
+    pub locks: bool,
+}
+
+impl Fixes {
+    /// This work: production MANA.
+    pub fn all_on() -> Self {
+        Fixes {
+            keepalive: true,
+            drain: true,
+            fd_reservation: true,
+            noreplace: true,
+            careful_nonblocking: true,
+            manifest_filenames: true,
+            locks: true,
+        }
+    }
+
+    /// The 2019 research prototype.
+    pub fn all_off() -> Self {
+        Fixes {
+            keepalive: false,
+            drain: false,
+            fd_reservation: false,
+            noreplace: false,
+            careful_nonblocking: false,
+            manifest_filenames: false,
+            locks: false,
+        }
+    }
+
+    pub fn alloc_policy(&self) -> AllocPolicy {
+        if self.noreplace {
+            AllocPolicy::NoReplace
+        } else {
+            AllocPolicy::FixedLegacy
+        }
+    }
+
+    pub fn fd_policy(&self) -> FdPolicy {
+        if self.fd_reservation {
+            FdPolicy::Reserved
+        } else {
+            FdPolicy::Legacy
+        }
+    }
+}
+
+/// Full job + environment description.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub job: String,
+    pub app: AppKind,
+    pub ranks: u32,
+    pub threads_per_rank: u32,
+    /// Outer supersteps to run.
+    pub steps: u64,
+    pub fs: FsKind,
+    pub compute: ComputeMode,
+    pub link: LinkMode,
+    pub os: OsVersion,
+    pub fixes: Fixes,
+    pub faults: FaultPlan,
+    pub seed: u64,
+    /// Per-rank upper-half footprint override (bytes); None = app default.
+    pub mem_per_rank: Option<u64>,
+    /// Incremental checkpointing (the paper's "reducing the checkpoint
+    /// overhead" future work): after the first full checkpoint, write only
+    /// regions dirtied since it, referencing the rest by fingerprint.
+    pub incremental: bool,
+}
+
+impl RunConfig {
+    /// Sensible production defaults for quick runs.
+    pub fn new(app: AppKind, ranks: u32) -> Self {
+        RunConfig {
+            job: format!("{}-{}r", app.name(), ranks),
+            app,
+            ranks,
+            threads_per_rank: 8,
+            steps: 8,
+            fs: FsKind::BurstBuffer,
+            compute: ComputeMode::Synthetic,
+            link: LinkMode::Static,
+            os: OsVersion::Cle7,
+            fixes: Fixes::all_on(),
+            faults: FaultPlan::none(),
+            seed: 0x4e45_5253, // "NERS"
+            mem_per_rank: None,
+            incremental: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixes_map_to_policies() {
+        assert_eq!(Fixes::all_on().alloc_policy(), AllocPolicy::NoReplace);
+        assert_eq!(Fixes::all_off().alloc_policy(), AllocPolicy::FixedLegacy);
+        assert_eq!(Fixes::all_on().fd_policy(), FdPolicy::Reserved);
+        assert_eq!(Fixes::all_off().fd_policy(), FdPolicy::Legacy);
+    }
+
+    #[test]
+    fn app_kind_parse() {
+        assert_eq!(AppKind::parse("gromacs"), Some(AppKind::Gromacs));
+        assert_eq!(AppKind::parse("hpcg"), Some(AppKind::Hpcg));
+        assert_eq!(AppKind::parse("vasp"), Some(AppKind::VaspRpa));
+        assert_eq!(AppKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn default_config_is_production() {
+        let c = RunConfig::new(AppKind::Gromacs, 8);
+        assert!(c.fixes.drain && c.fixes.keepalive);
+        assert!(!c.faults.any_active());
+    }
+}

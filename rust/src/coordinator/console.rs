@@ -1,0 +1,223 @@
+//! Coordinator command console — the `dmtcp_command` analog.
+//!
+//! The real DMTCP coordinator accepts single-letter commands over its
+//! listening socket (`s` status, `c` checkpoint, `k` kill, `l` list); NERSC
+//! operators drive MANA through exactly this interface (cron-driven
+//! checkpoint commands, preemption hooks). This module is that command
+//! processor over the simulated job: parse → execute → textual reply.
+
+use crate::sim::JobSim;
+use crate::util::json::Json;
+
+/// A parsed console command.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Command {
+    /// `s` — coordinator + job status.
+    Status,
+    /// `c` — checkpoint now.
+    Checkpoint,
+    /// `l` — list ranks (node, pid, step).
+    ListRanks,
+    /// `r N` — run N supersteps.
+    Run(u64),
+    /// `k` — kill the job (the caller receives the surviving FileSystem).
+    Kill,
+    /// `h` — help text.
+    Help,
+}
+
+/// Command-parse failure.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParseError(pub String);
+
+impl Command {
+    /// Parse one command line (dmtcp_command syntax, plus `r N`).
+    pub fn parse(line: &str) -> Result<Command, ParseError> {
+        let mut parts = line.split_whitespace();
+        let Some(head) = parts.next() else {
+            return Err(ParseError("empty command".into()));
+        };
+        match head {
+            "s" | "status" => Ok(Command::Status),
+            "c" | "checkpoint" => Ok(Command::Checkpoint),
+            "l" | "list" => Ok(Command::ListRanks),
+            "k" | "kill" => Ok(Command::Kill),
+            "h" | "help" | "?" => Ok(Command::Help),
+            "r" | "run" => {
+                let n = parts
+                    .next()
+                    .ok_or_else(|| ParseError("run: missing step count".into()))?
+                    .parse::<u64>()
+                    .map_err(|e| ParseError(format!("run: {e}")))?;
+                Ok(Command::Run(n))
+            }
+            other => Err(ParseError(format!(
+                "unknown command '{other}' (h for help)"
+            ))),
+        }
+    }
+}
+
+/// Result of executing one command.
+#[derive(Debug)]
+pub enum Reply {
+    Text(String),
+    /// The job was killed; the storage tier survives for a later restart.
+    Killed(crate::fs::FileSystem),
+}
+
+/// Execute a command against a live job. `Kill` consumes the sim, so it is
+/// handled by [`run_script`] / the caller; this executes everything else.
+pub fn execute(sim: &mut JobSim, cmd: &Command) -> Reply {
+    match cmd {
+        Command::Status => {
+            let j = Json::obj()
+                .set("job", sim.cfg.job.as_str())
+                .set("app", sim.cfg.app.name())
+                .set("ranks", sim.cfg.ranks as u64)
+                .set("step", sim.step)
+                .set("virtual_secs", sim.now().as_secs())
+                .set("checkpoints", sim.coord.stats.checkpoints)
+                .set("inflight_msgs", sim.world.inflight_count())
+                .set("corruption", sim.any_corruption())
+                .set("metrics", sim.metrics.snapshot());
+            Reply::Text(j.to_string())
+        }
+        Command::Checkpoint => match sim.checkpoint() {
+            Ok(rep) => Reply::Text(format!(
+                "checkpoint done: {} in {:.2}s (drain {} msgs, write {:.2}s)",
+                crate::util::bytes::human(rep.image_bytes),
+                rep.total_secs,
+                rep.buffered_msgs,
+                rep.write_secs
+            )),
+            Err(e) => Reply::Text(format!("checkpoint FAILED: {e}")),
+        },
+        Command::ListRanks => {
+            let mut out = String::from("rank  node      pid    step\n");
+            for r in 0..sim.cfg.ranks {
+                let rank = crate::topology::RankId(r);
+                out.push_str(&format!(
+                    "{:>4}  {:<8} {:>6} {:>6}\n",
+                    r,
+                    sim.topo.node_of(rank).to_string(),
+                    sim.topo.pid_of(rank),
+                    sim.procs[r as usize].step
+                ));
+            }
+            Reply::Text(out)
+        }
+        Command::Run(n) => match sim.run_steps(*n) {
+            Ok(()) => Reply::Text(format!("ran {n} steps, now at step {}", sim.step)),
+            Err(e) => Reply::Text(format!("run FAILED: {e}")),
+        },
+        Command::Help => Reply::Text(
+            "commands: s(tatus) | c(heckpoint) | l(ist) | r(un) N | k(ill) | h(elp)"
+                .to_string(),
+        ),
+        Command::Kill => unreachable!("Kill handled by run_script"),
+    }
+}
+
+/// Run a `;`-separated command script against a job. Returns the replies
+/// and, if the script killed the job, the surviving file system.
+pub fn run_script(
+    mut sim: JobSim,
+    script: &str,
+) -> (Vec<String>, Option<crate::fs::FileSystem>) {
+    let mut replies = Vec::new();
+    for raw in script.split(';') {
+        let raw = raw.trim();
+        if raw.is_empty() {
+            continue;
+        }
+        match Command::parse(raw) {
+            Err(e) => replies.push(format!("parse error: {}", e.0)),
+            Ok(Command::Kill) => {
+                let fs = sim.kill();
+                replies.push("job killed".into());
+                return (replies, Some(fs));
+            }
+            Ok(cmd) => match execute(&mut sim, &cmd) {
+                Reply::Text(t) => replies.push(t),
+                Reply::Killed(_) => unreachable!(),
+            },
+        }
+    }
+    (replies, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AppKind, RunConfig};
+
+    fn job() -> JobSim {
+        let mut cfg = RunConfig::new(AppKind::Synthetic, 4);
+        cfg.job = "console-test".into();
+        cfg.mem_per_rank = Some(1 << 20);
+        JobSim::launch(cfg, None).unwrap()
+    }
+
+    #[test]
+    fn parse_long_and_short_forms() {
+        assert_eq!(Command::parse("s").unwrap(), Command::Status);
+        assert_eq!(Command::parse("status").unwrap(), Command::Status);
+        assert_eq!(Command::parse("r 5").unwrap(), Command::Run(5));
+        assert_eq!(Command::parse("k").unwrap(), Command::Kill);
+        assert!(Command::parse("frobnicate").is_err());
+        assert!(Command::parse("r").is_err());
+        assert!(Command::parse("").is_err());
+    }
+
+    #[test]
+    fn status_reports_step_and_job() {
+        let mut sim = job();
+        sim.run_steps(2).unwrap();
+        let Reply::Text(t) = execute(&mut sim, &Command::Status) else {
+            panic!()
+        };
+        assert!(t.contains("\"step\":2"), "{t}");
+        assert!(t.contains("console-test"));
+    }
+
+    #[test]
+    fn checkpoint_command_checkpoints() {
+        let mut sim = job();
+        sim.run_steps(1).unwrap();
+        let Reply::Text(t) = execute(&mut sim, &Command::Checkpoint) else {
+            panic!()
+        };
+        assert!(t.contains("checkpoint done"), "{t}");
+        assert_eq!(sim.coord.stats.checkpoints, 1);
+    }
+
+    #[test]
+    fn list_shows_every_rank() {
+        let mut sim = job();
+        let Reply::Text(t) = execute(&mut sim, &Command::ListRanks) else {
+            panic!()
+        };
+        assert_eq!(t.lines().count(), 5); // header + 4 ranks
+        assert!(t.contains("nid00000"));
+    }
+
+    #[test]
+    fn script_runs_checkpoints_and_kills() {
+        let (replies, fs) = run_script(job(), "r 2; s; c; k; s");
+        assert_eq!(replies.len(), 4, "commands after kill are not executed");
+        assert!(replies[0].contains("ran 2 steps"));
+        assert!(replies[2].contains("checkpoint done"));
+        assert_eq!(replies[3], "job killed");
+        let fs = fs.expect("fs survives the kill");
+        assert!(fs.exists("console-test/ckpt_rank00000.mana"));
+    }
+
+    #[test]
+    fn script_surfaces_parse_errors_and_continues() {
+        let (replies, fs) = run_script(job(), "bogus; s");
+        assert!(replies[0].contains("parse error"));
+        assert!(replies[1].contains("\"step\":0"));
+        assert!(fs.is_none());
+    }
+}

@@ -1,0 +1,81 @@
+//! Fault-injection plans.
+//!
+//! Every production failure the paper reports is injectable, so the
+//! reliability benches can show: *fault + fix off → deterministic failure;
+//! fault + fix on → success*. Faults are declarative — the subsystems read
+//! their knobs from the plan at construction time.
+
+/// What to break during a run.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Control-plane packet loss probability (congestion).
+    pub ctrl_loss_prob: f64,
+    /// Control-plane idle-disconnect probability.
+    pub ctrl_disconnect_prob: f64,
+    /// GNI quiescence windows (start, end) in virtual seconds.
+    pub gni_quiescence: Vec<(f64, f64)>,
+    /// Flip one byte of one rank's stored checkpoint image
+    /// (rank, byte offset) — the torn/corrupt image case.
+    pub image_bitflip: Option<(u32, usize)>,
+    /// Override the file system capacity (bytes) to force the
+    /// insufficient-space path.
+    pub fs_capacity_override: Option<u64>,
+    /// Interrupt the coordinator's status-table update mid-flight
+    /// (the missing-locks race).
+    pub interrupt_status_update: bool,
+    /// MPI library maps extra eager pools during the run (the lower-half
+    /// growth that corrupts memory under the legacy allocator). Count of
+    /// growth events.
+    pub lower_half_growth_events: u32,
+}
+
+impl FaultPlan {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// The paper's production-congestion scenario.
+    pub fn congested_network() -> Self {
+        FaultPlan {
+            ctrl_loss_prob: 0.15,
+            ctrl_disconnect_prob: 0.05,
+            ..Self::default()
+        }
+    }
+
+    /// Cray GNI reconfiguration during the checkpoint window.
+    pub fn gni_reconfig(at: f64, dur: f64) -> Self {
+        FaultPlan {
+            gni_quiescence: vec![(at, at + dur)],
+            ..Self::default()
+        }
+    }
+
+    pub fn any_active(&self) -> bool {
+        self.ctrl_loss_prob > 0.0
+            || self.ctrl_disconnect_prob > 0.0
+            || !self.gni_quiescence.is_empty()
+            || self.image_bitflip.is_some()
+            || self.fs_capacity_override.is_some()
+            || self.interrupt_status_update
+            || self.lower_half_growth_events > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_clean() {
+        assert!(!FaultPlan::none().any_active());
+    }
+
+    #[test]
+    fn presets_are_active() {
+        assert!(FaultPlan::congested_network().any_active());
+        let g = FaultPlan::gni_reconfig(10.0, 2.0);
+        assert_eq!(g.gni_quiescence, vec![(10.0, 12.0)]);
+        assert!(g.any_active());
+    }
+}

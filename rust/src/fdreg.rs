@@ -1,0 +1,190 @@
+//! File-descriptor registry with per-half reservations.
+//!
+//! The paper's descriptor-conflict bug: the upper half opens an fd before
+//! checkpoint; on restart the freshly-started lower half opens the *same
+//! numeric fd* for its internal use, and restoring the upper half then
+//! collides. The fix — "tagging and reserving file descriptors for each
+//! half" — is modeled as disjoint numeric ranges per half.
+//!
+//! With [`FdPolicy::Legacy`] both halves allocate from the same shared pool
+//! (lowest free fd, like the kernel), reproducing the collision at restart.
+//! With [`FdPolicy::Reserved`] the lower half allocates from a reserved
+//! high range and restore can always re-claim the upper half's numbers.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::mem::Half;
+
+/// Numeric fd.
+pub type Fd = u32;
+
+/// First fd of the reserved lower-half range under the fixed policy.
+pub const LOWER_RESERVED_BASE: Fd = 900;
+/// Fds 0-2 are stdio, never allocated.
+const FIRST_USER_FD: Fd = 3;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FdPolicy {
+    /// Shared pool, lowest-free allocation (the original, buggy behaviour).
+    Legacy,
+    /// The paper's fix: lower half allocates from a reserved range.
+    Reserved,
+}
+
+/// A descriptor-conflict diagnostic.
+#[derive(Clone, Debug)]
+pub struct FdConflict {
+    pub fd: Fd,
+    pub held_by: String,
+    pub requested_by: String,
+}
+
+impl fmt::Display for FdConflict {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "fd {} conflict: held by {} (lower half), needed by {} (upper half restore)",
+            self.fd, self.held_by, self.requested_by
+        )
+    }
+}
+
+/// Per-process fd table.
+#[derive(Clone, Debug)]
+pub struct FdRegistry {
+    policy: FdPolicy,
+    open: BTreeMap<Fd, (Half, String)>,
+}
+
+impl FdRegistry {
+    pub fn new(policy: FdPolicy) -> Self {
+        let mut open = BTreeMap::new();
+        for (fd, name) in [(0, "stdin"), (1, "stdout"), (2, "stderr")] {
+            open.insert(fd, (Half::Lower, name.to_string()));
+        }
+        FdRegistry { policy, open }
+    }
+
+    /// Open a new descriptor for `half`, kernel-style lowest-free within
+    /// the half's allowed range.
+    pub fn open(&mut self, half: Half, name: &str) -> Fd {
+        let start = match (self.policy, half) {
+            (FdPolicy::Reserved, Half::Lower) => LOWER_RESERVED_BASE,
+            _ => FIRST_USER_FD,
+        };
+        let mut fd = start;
+        while self.open.contains_key(&fd) {
+            fd += 1;
+        }
+        self.open.insert(fd, (half, name.to_string()));
+        fd
+    }
+
+    /// Re-claim a specific fd for a restored upper-half descriptor.
+    /// Fails if the (new) lower half already squats on the number — the
+    /// paper's restart-time conflict.
+    pub fn claim(&mut self, fd: Fd, name: &str) -> Result<(), FdConflict> {
+        if let Some((half, holder)) = self.open.get(&fd) {
+            return Err(FdConflict {
+                fd,
+                held_by: format!("{holder} ({half})"),
+                requested_by: name.to_string(),
+            });
+        }
+        self.open.insert(fd, (Half::Upper, name.to_string()));
+        Ok(())
+    }
+
+    pub fn close(&mut self, fd: Fd) -> bool {
+        self.open.remove(&fd).is_some()
+    }
+
+    /// All fds currently held by a half (checkpoint records the upper set).
+    pub fn fds_of(&self, half: Half) -> Vec<(Fd, String)> {
+        self.open
+            .iter()
+            .filter(|(_, (h, _))| *h == half)
+            .map(|(fd, (_, n))| (*fd, n.clone()))
+            .collect()
+    }
+
+    /// Drop every lower-half fd (process restart keeps only stdio).
+    pub fn reset_lower(&mut self) {
+        self.open.retain(|fd, (h, _)| *h != Half::Lower || *fd <= 2);
+    }
+
+    pub fn policy(&self) -> FdPolicy {
+        self.policy
+    }
+
+    pub fn count(&self) -> usize {
+        self.open.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn legacy_policy_reproduces_restart_conflict() {
+        // Before checkpoint: upper half opens a data file -> fd 3.
+        let mut pre = FdRegistry::new(FdPolicy::Legacy);
+        let upper_fd = pre.open(Half::Upper, "traj.xtc");
+        assert_eq!(upper_fd, 3);
+        let saved = pre.fds_of(Half::Upper);
+
+        // Restart: fresh process; the trivial lower half opens its socket
+        // first and grabs fd 3.
+        let mut post = FdRegistry::new(FdPolicy::Legacy);
+        let lower_fd = post.open(Half::Lower, "gni.socket");
+        assert_eq!(lower_fd, 3);
+        // Upper-half restore now collides.
+        let err = post.claim(saved[0].0, &saved[0].1).unwrap_err();
+        assert_eq!(err.fd, 3);
+        assert!(err.to_string().contains("gni.socket"));
+    }
+
+    #[test]
+    fn reserved_policy_avoids_conflict() {
+        let mut pre = FdRegistry::new(FdPolicy::Reserved);
+        let upper_fd = pre.open(Half::Upper, "traj.xtc");
+        assert_eq!(upper_fd, 3);
+        let saved = pre.fds_of(Half::Upper);
+
+        let mut post = FdRegistry::new(FdPolicy::Reserved);
+        let lower_fd = post.open(Half::Lower, "gni.socket");
+        assert_eq!(lower_fd, LOWER_RESERVED_BASE);
+        post.claim(saved[0].0, &saved[0].1).unwrap();
+    }
+
+    #[test]
+    fn lowest_free_allocation() {
+        let mut r = FdRegistry::new(FdPolicy::Legacy);
+        let a = r.open(Half::Upper, "a");
+        let b = r.open(Half::Upper, "b");
+        assert_eq!((a, b), (3, 4));
+        r.close(a);
+        assert_eq!(r.open(Half::Upper, "c"), 3);
+    }
+
+    #[test]
+    fn reset_lower_keeps_stdio_and_upper() {
+        let mut r = FdRegistry::new(FdPolicy::Reserved);
+        r.open(Half::Upper, "data");
+        r.open(Half::Lower, "sock");
+        r.reset_lower();
+        assert_eq!(r.fds_of(Half::Upper).len(), 1);
+        // stdio survive
+        assert!(r.count() >= 4);
+        assert!(r.fds_of(Half::Lower).iter().all(|(fd, _)| *fd <= 2));
+    }
+
+    #[test]
+    fn claim_free_fd_ok() {
+        let mut r = FdRegistry::new(FdPolicy::Reserved);
+        r.claim(17, "restored.log").unwrap();
+        assert_eq!(r.fds_of(Half::Upper), vec![(17, "restored.log".into())]);
+    }
+}

@@ -1,0 +1,527 @@
+//! Simulated parallel file systems: Burst Buffer vs. Lustre (CSCRATCH).
+//!
+//! The paper evaluates MANA's checkpoint overhead on Cori's two storage
+//! tiers and finds Burst Buffers "superior … and also scales better"
+//! (Fig. 2, and HPCG at 512 ranks: ~30 s vs >600 s checkpoint, >20x; restart
+//! speedup ~2.5x). These models reproduce those *shapes*:
+//!
+//! * [`FsConfig::burst_buffer`] — DataWarp-like: per-node SSD allocations,
+//!   bandwidth scales linearly with the node count, low metadata latency.
+//! * [`FsConfig::cscratch`] — Lustre-like: one shared pool whose effective
+//!   write bandwidth saturates with writer count (`peak * N / (N + K)`),
+//!   slow metadata; reads contend much less than writes (hence the modest
+//!   restart speedup).
+//!
+//! Calibration (unit-tested below):
+//!   HPCG 512 ranks / 64 nodes / 5.8 TB →  BB ≈ 30 s, Lustre ≈ 650 s (>20x)
+//!   restart → BB ≈ 26 s, Lustre ≈ 65 s (≈2.5x)
+//!
+//! File *data* is held in memory (images are real bytes at MB scale), while
+//! transfer time is charged on the **virtual** byte counts, so paper-scale
+//! TB checkpoints run on a laptop. Capacity accounting is on virtual bytes;
+//! exceeding it produces the explicit warning the paper asks for
+//! ("Applications with a large memory footprint may fail to checkpoint if
+//! there is insufficient storage space … a system warning is needed").
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::topology::NodeId;
+use crate::{log_debug, log_warn};
+
+const GB: f64 = 1e9;
+
+/// Which storage tier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FsKind {
+    BurstBuffer,
+    Lustre,
+}
+
+impl fmt::Display for FsKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FsKind::BurstBuffer => write!(f, "burst-buffer"),
+            FsKind::Lustre => write!(f, "cscratch(lustre)"),
+        }
+    }
+}
+
+/// Bandwidth/latency/capacity parameters of one tier.
+#[derive(Clone, Debug)]
+pub struct FsConfig {
+    pub kind: FsKind,
+    /// Per-node write/read bandwidth (BB tier), bytes/s.
+    pub per_node_write_bw: f64,
+    pub per_node_read_bw: f64,
+    /// Shared-pool peak write/read bandwidth (Lustre tier), bytes/s.
+    pub peak_write_bw: f64,
+    pub peak_read_bw: f64,
+    /// Writer-count at which Lustre write bandwidth reaches half its peak.
+    pub contention_k_write: f64,
+    pub contention_k_read: f64,
+    /// Metadata (open/create) latency per wave of writers, seconds.
+    pub meta_latency: f64,
+    /// Capacity in (virtual) bytes.
+    pub capacity: u64,
+}
+
+impl FsConfig {
+    /// DataWarp-like burst buffer striped over the job's nodes.
+    pub fn burst_buffer(nodes: u32) -> Self {
+        FsConfig {
+            kind: FsKind::BurstBuffer,
+            per_node_write_bw: 3.0 * GB,
+            per_node_read_bw: 3.5 * GB,
+            peak_write_bw: f64::INFINITY, // not pool-limited
+            peak_read_bw: f64::INFINITY,
+            contention_k_write: 0.0,
+            contention_k_read: 0.0,
+            meta_latency: 0.005,
+            capacity: (nodes as u64) * 1_600_000_000_000, // 1.6 TB/node
+        }
+    }
+
+    /// Cori's Lustre scratch (CSCRATCH)-like shared file system.
+    pub fn cscratch() -> Self {
+        FsConfig {
+            kind: FsKind::Lustre,
+            per_node_write_bw: f64::INFINITY,
+            per_node_read_bw: f64::INFINITY,
+            peak_write_bw: 10.0 * GB, // effective many-writer ckpt bandwidth
+            peak_read_bw: 100.0 * GB, // reads contend far less
+            contention_k_write: 64.0,
+            contention_k_read: 64.0,
+            meta_latency: 0.050,
+            capacity: 28_000_000_000_000_000, // 28 PB
+        }
+    }
+}
+
+/// One parallel write request (a rank writing its checkpoint image).
+#[derive(Clone, Debug)]
+pub struct WriteReq {
+    pub node: NodeId,
+    pub path: String,
+    /// Bytes charged against bandwidth and capacity.
+    pub virtual_bytes: u64,
+    /// Real serialized bytes retained for later reads.
+    pub data: Vec<u8>,
+}
+
+/// Outcome of a parallel write/read wave.
+#[derive(Clone, Copy, Debug)]
+pub struct IoReport {
+    /// Virtual seconds until the slowest participant finished.
+    pub duration: f64,
+    pub total_virtual_bytes: u64,
+    pub writers: usize,
+}
+
+/// Failure modes of the storage tier.
+#[derive(Clone, Debug)]
+pub enum FsError {
+    /// The paper's "insufficient storage space" case.
+    InsufficientSpace { needed: u64, free: u64 },
+    NotFound(String),
+}
+
+impl fmt::Display for FsError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FsError::InsufficientSpace { needed, free } => write!(
+                f,
+                "insufficient storage space: need {}, only {} free",
+                crate::util::bytes::human(*needed),
+                crate::util::bytes::human(*free)
+            ),
+            FsError::NotFound(p) => write!(f, "no such file: {p}"),
+        }
+    }
+}
+
+impl std::error::Error for FsError {}
+
+#[derive(Clone, Debug)]
+struct StoredFile {
+    virtual_bytes: u64,
+    data: Vec<u8>,
+}
+
+/// A mounted file system instance.
+#[derive(Clone, Debug)]
+pub struct FileSystem {
+    pub cfg: FsConfig,
+    used: u64,
+    files: BTreeMap<String, StoredFile>,
+}
+
+impl FileSystem {
+    pub fn new(cfg: FsConfig) -> Self {
+        FileSystem {
+            cfg,
+            used: 0,
+            files: BTreeMap::new(),
+        }
+    }
+
+    pub fn free_bytes(&self) -> u64 {
+        self.cfg.capacity.saturating_sub(self.used)
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used
+    }
+
+    /// Effective aggregate write bandwidth for `writers` concurrent
+    /// writers spread over `nodes` nodes.
+    pub fn write_bandwidth(&self, writers: usize, nodes: u32) -> f64 {
+        match self.cfg.kind {
+            FsKind::BurstBuffer => self.cfg.per_node_write_bw * nodes as f64,
+            FsKind::Lustre => {
+                let n = writers as f64;
+                self.cfg.peak_write_bw * n / (n + self.cfg.contention_k_write)
+            }
+        }
+    }
+
+    pub fn read_bandwidth(&self, readers: usize, nodes: u32) -> f64 {
+        match self.cfg.kind {
+            FsKind::BurstBuffer => self.cfg.per_node_read_bw * nodes as f64,
+            FsKind::Lustre => {
+                let n = readers as f64;
+                self.cfg.peak_read_bw * n / (n + self.cfg.contention_k_read)
+            }
+        }
+    }
+
+    /// Write a wave of checkpoint images in parallel.
+    ///
+    /// Capacity is checked up front; on shortfall the warning the paper
+    /// calls for is logged and nothing is written.
+    pub fn write_parallel(&mut self, reqs: Vec<WriteReq>) -> Result<IoReport, FsError> {
+        let total: u64 = reqs.iter().map(|r| r.virtual_bytes).sum();
+        // Replacing existing files frees their old space first.
+        let replaced: u64 = reqs
+            .iter()
+            .filter_map(|r| self.files.get(&r.path).map(|f| f.virtual_bytes))
+            .sum();
+        let free = self.free_bytes() + replaced;
+        if total > free {
+            log_warn!(
+                "fs",
+                "{}: insufficient storage space for checkpoint: need {}, free {} — aborting wave",
+                self.cfg.kind,
+                crate::util::bytes::human(total),
+                crate::util::bytes::human(free)
+            );
+            return Err(FsError::InsufficientSpace {
+                needed: total,
+                free,
+            });
+        }
+
+        let writers = reqs.len();
+        let nodes = distinct_nodes(&reqs);
+        let duration = match self.cfg.kind {
+            FsKind::BurstBuffer => {
+                // Each node drains its local ranks' images at node bandwidth.
+                let mut per_node: BTreeMap<NodeId, u64> = BTreeMap::new();
+                for r in &reqs {
+                    *per_node.entry(r.node).or_insert(0) += r.virtual_bytes;
+                }
+                per_node
+                    .values()
+                    .map(|&b| b as f64 / self.cfg.per_node_write_bw)
+                    .fold(0.0, f64::max)
+                    + self.cfg.meta_latency
+            }
+            FsKind::Lustre => {
+                let bw = self.write_bandwidth(writers, nodes);
+                total as f64 / bw + self.cfg.meta_latency
+            }
+        };
+
+        for r in reqs {
+            if let Some(old) = self.files.remove(&r.path) {
+                self.used -= old.virtual_bytes;
+            }
+            self.used += r.virtual_bytes;
+            self.files.insert(
+                r.path,
+                StoredFile {
+                    virtual_bytes: r.virtual_bytes,
+                    data: r.data,
+                },
+            );
+        }
+        log_debug!(
+            "fs",
+            "{}: wrote {} from {} writers in {:.2}s",
+            self.cfg.kind,
+            crate::util::bytes::human(total),
+            writers,
+            duration
+        );
+        Ok(IoReport {
+            duration,
+            total_virtual_bytes: total,
+            writers,
+        })
+    }
+
+    /// Read a wave of images in parallel (restart path). Returns the data
+    /// in request order plus the IO report.
+    pub fn read_parallel(
+        &self,
+        paths: &[(NodeId, String)],
+    ) -> Result<(Vec<Vec<u8>>, IoReport), FsError> {
+        let mut datas = Vec::with_capacity(paths.len());
+        let mut total = 0u64;
+        let mut per_node: BTreeMap<NodeId, u64> = BTreeMap::new();
+        for (node, p) in paths {
+            let f = self
+                .files
+                .get(p)
+                .ok_or_else(|| FsError::NotFound(p.clone()))?;
+            datas.push(f.data.clone());
+            total += f.virtual_bytes;
+            *per_node.entry(*node).or_insert(0) += f.virtual_bytes;
+        }
+        let nodes = per_node.len().max(1) as u32;
+        let duration = match self.cfg.kind {
+            FsKind::BurstBuffer => {
+                per_node
+                    .values()
+                    .map(|&b| b as f64 / self.cfg.per_node_read_bw)
+                    .fold(0.0, f64::max)
+                    + self.cfg.meta_latency
+            }
+            FsKind::Lustre => {
+                let bw = self.read_bandwidth(paths.len(), nodes);
+                total as f64 / bw + self.cfg.meta_latency
+            }
+        };
+        Ok((
+            datas,
+            IoReport {
+                duration,
+                total_virtual_bytes: total,
+                writers: paths.len(),
+            },
+        ))
+    }
+
+    pub fn delete(&mut self, path: &str) -> Result<(), FsError> {
+        let f = self
+            .files
+            .remove(path)
+            .ok_or_else(|| FsError::NotFound(path.to_string()))?;
+        self.used -= f.virtual_bytes;
+        Ok(())
+    }
+
+    pub fn exists(&self, path: &str) -> bool {
+        self.files.contains_key(path)
+    }
+
+    /// Fault injection: flip one byte of a stored file (torn/corrupt image).
+    /// Returns false if the path or offset doesn't exist.
+    pub fn corrupt_byte(&mut self, path: &str, offset: usize) -> bool {
+        match self.files.get_mut(path) {
+            Some(f) if offset < f.data.len() => {
+                f.data[offset] ^= 0x5a;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    pub fn file_count(&self) -> usize {
+        self.files.len()
+    }
+}
+
+fn distinct_nodes(reqs: &[WriteReq]) -> u32 {
+    let mut nodes: Vec<u32> = reqs.iter().map(|r| r.node.0).collect();
+    nodes.sort_unstable();
+    nodes.dedup();
+    nodes.len().max(1) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GIB: u64 = 1 << 30;
+
+    fn hpcg_wave(ranks: u32, nodes: u32, total_bytes: u64) -> Vec<WriteReq> {
+        let per_rank = total_bytes / ranks as u64;
+        (0..ranks)
+            .map(|r| WriteReq {
+                node: NodeId(r / (ranks / nodes)),
+                path: format!("ckpt_rank{r}.mana"),
+                virtual_bytes: per_rank,
+                data: vec![],
+            })
+            .collect()
+    }
+
+    /// The paper's HPCG headline: 512 ranks, 5.8 TB aggregate; BB ≈ 30 s,
+    /// Lustre > 600 s, speedup > 20x.
+    #[test]
+    fn hpcg_checkpoint_calibration() {
+        let total = 5_800_000_000_000u64; // 5.8 TB
+        let mut bb = FileSystem::new(FsConfig::burst_buffer(64));
+        let mut lustre = FileSystem::new(FsConfig::cscratch());
+        let bb_t = bb
+            .write_parallel(hpcg_wave(512, 64, total))
+            .unwrap()
+            .duration;
+        let lu_t = lustre
+            .write_parallel(hpcg_wave(512, 64, total))
+            .unwrap()
+            .duration;
+        assert!((25.0..40.0).contains(&bb_t), "BB ckpt {bb_t}s (paper ~30s)");
+        assert!(lu_t > 600.0, "Lustre ckpt {lu_t}s (paper >600s)");
+        assert!(lu_t / bb_t > 20.0, "speedup {} (paper >20x)", lu_t / bb_t);
+    }
+
+    /// The paper's restart claim: BB/Lustre speedup "more modest, ~2.5x".
+    #[test]
+    fn hpcg_restart_calibration() {
+        let total = 5_800_000_000_000u64;
+        let mut bb = FileSystem::new(FsConfig::burst_buffer(64));
+        let mut lustre = FileSystem::new(FsConfig::cscratch());
+        bb.write_parallel(hpcg_wave(512, 64, total)).unwrap();
+        lustre.write_parallel(hpcg_wave(512, 64, total)).unwrap();
+        let paths: Vec<(NodeId, String)> = (0..512u32)
+            .map(|r| (NodeId(r / 8), format!("ckpt_rank{r}.mana")))
+            .collect();
+        let bb_t = bb.read_parallel(&paths).unwrap().1.duration;
+        let lu_t = lustre.read_parallel(&paths).unwrap().1.duration;
+        let speedup = lu_t / bb_t;
+        assert!(
+            (1.8..3.5).contains(&speedup),
+            "restart speedup {speedup} (paper ~2.5x)"
+        );
+    }
+
+    /// Fig. 2 shape: BB stays near-flat with rank count, Lustre grows.
+    #[test]
+    fn fig2_scaling_shape() {
+        let per_rank = 3 * GIB / 2; // 1.5 GiB/rank ADH-analog footprint
+        let mut bb_times = Vec::new();
+        let mut lu_times = Vec::new();
+        for &ranks in &[4u32, 8, 16, 32, 64] {
+            let nodes = ranks.div_ceil(8);
+            let total = per_rank * ranks as u64;
+            let mut bb = FileSystem::new(FsConfig::burst_buffer(nodes));
+            let mut lu = FileSystem::new(FsConfig::cscratch());
+            bb_times.push(bb.write_parallel(hpcg_wave(ranks, nodes, total)).unwrap().duration);
+            lu_times.push(lu.write_parallel(hpcg_wave(ranks, nodes, total)).unwrap().duration);
+        }
+        // BB must beat Lustre everywhere.
+        for (b, l) in bb_times.iter().zip(&lu_times) {
+            assert!(b < l, "BB {b} >= Lustre {l}");
+        }
+        // BB near-flat: max/min < 3; Lustre grows: last > first.
+        let bmax = bb_times.iter().cloned().fold(0.0, f64::max);
+        let bmin = bb_times.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(bmax / bmin < 3.0, "BB not flat: {bb_times:?}");
+        assert!(
+            lu_times.last().unwrap() > lu_times.first().unwrap(),
+            "Lustre did not grow: {lu_times:?}"
+        );
+    }
+
+    #[test]
+    fn insufficient_space_warns_and_errors() {
+        let mut cfg = FsConfig::burst_buffer(1);
+        cfg.capacity = 10 * GIB;
+        let mut fs = FileSystem::new(cfg);
+        crate::util::logging::capture_start();
+        let err = fs
+            .write_parallel(vec![WriteReq {
+                node: NodeId(0),
+                path: "big.mana".into(),
+                virtual_bytes: 11 * GIB,
+                data: vec![],
+            }])
+            .unwrap_err();
+        let recs = crate::util::logging::capture_take();
+        assert!(matches!(err, FsError::InsufficientSpace { .. }));
+        assert!(recs
+            .iter()
+            .any(|r| r.message.contains("insufficient storage space")));
+        assert_eq!(fs.used_bytes(), 0, "nothing written on failure");
+    }
+
+    #[test]
+    fn overwrite_frees_old_space() {
+        let mut fs = FileSystem::new(FsConfig::burst_buffer(1));
+        let w = |bytes| {
+            vec![WriteReq {
+                node: NodeId(0),
+                path: "x.mana".into(),
+                virtual_bytes: bytes,
+                data: vec![1, 2, 3],
+            }]
+        };
+        fs.write_parallel(w(100 * GIB / 64)).unwrap();
+        let used1 = fs.used_bytes();
+        fs.write_parallel(w(100 * GIB / 64)).unwrap();
+        assert_eq!(fs.used_bytes(), used1, "overwrite must not leak space");
+    }
+
+    #[test]
+    fn read_roundtrips_data() {
+        let mut fs = FileSystem::new(FsConfig::cscratch());
+        fs.write_parallel(vec![WriteReq {
+            node: NodeId(0),
+            path: "img".into(),
+            virtual_bytes: 123,
+            data: vec![9, 8, 7],
+        }])
+        .unwrap();
+        let (datas, rep) = fs.read_parallel(&[(NodeId(0), "img".into())]).unwrap();
+        assert_eq!(datas[0], vec![9, 8, 7]);
+        assert_eq!(rep.total_virtual_bytes, 123);
+    }
+
+    #[test]
+    fn read_missing_file_errors() {
+        let fs = FileSystem::new(FsConfig::cscratch());
+        assert!(matches!(
+            fs.read_parallel(&[(NodeId(0), "nope".into())]),
+            Err(FsError::NotFound(_))
+        ));
+    }
+
+    #[test]
+    fn delete_frees_space() {
+        let mut fs = FileSystem::new(FsConfig::burst_buffer(1));
+        fs.write_parallel(vec![WriteReq {
+            node: NodeId(0),
+            path: "a".into(),
+            virtual_bytes: 1000,
+            data: vec![],
+        }])
+        .unwrap();
+        assert_eq!(fs.used_bytes(), 1000);
+        fs.delete("a").unwrap();
+        assert_eq!(fs.used_bytes(), 0);
+        assert!(fs.delete("a").is_err());
+    }
+
+    #[test]
+    fn lustre_write_bw_saturates() {
+        let fs = FileSystem::new(FsConfig::cscratch());
+        let b4 = fs.write_bandwidth(4, 1);
+        let b512 = fs.write_bandwidth(512, 64);
+        assert!(b512 > b4);
+        assert!(b512 < fs.cfg.peak_write_bw);
+        // Monotone saturation towards the peak.
+        assert!(fs.write_bandwidth(2048, 64) > b512);
+    }
+}

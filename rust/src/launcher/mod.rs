@@ -1,0 +1,208 @@
+//! Slurm-`srun` analog: argument packet, executable distribution, startup
+//! time model.
+//!
+//! Two paper issues live here:
+//!
+//! * **Argument-length limit.** "The Slurm srun command uses a network
+//!   packet containing the list of arguments it was passed … Due to the
+//!   limit on packet sizes, srun was unable to pass all checkpoint file
+//!   names to its workers, leading to a crash." Restart argv under the
+//!   legacy scheme appends every per-rank image path; past the packet limit
+//!   the launch fails with [`LaunchError::ArgListTooLong`]. The fix passes
+//!   one manifest path instead ([`restart_argv`]).
+//! * **Startup at scale.** "For best startup performance at scale, it is
+//!   recommended to broadcast a statically linked executable to all nodes.
+//!   DMTCP currently does not support static linking…" — [`startup_secs`]
+//!   models the dynamic-linking metadata storm (grows with node count)
+//!   vs. the static broadcast (log-tree, near-flat).
+
+use crate::ckpt::manifest::CkptManifest;
+use crate::config::LinkMode;
+use crate::topology::{RankId, Topology};
+
+/// Cray/Slurm-era launch-packet budget for argv + env (bytes).
+pub const SRUN_PACKET_LIMIT: usize = 4096;
+
+/// Launch failures.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LaunchError {
+    /// The srun packet overflow crash.
+    ArgListTooLong { bytes: usize, limit: usize },
+}
+
+impl std::fmt::Display for LaunchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LaunchError::ArgListTooLong { bytes, limit } => write!(
+                f,
+                "srun: error: argument list too long ({bytes} bytes > {limit} packet limit)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for LaunchError {}
+
+/// A validated launch.
+#[derive(Clone, Debug)]
+pub struct LaunchReport {
+    pub argv_bytes: usize,
+    pub startup_secs: f64,
+    pub nodes: u32,
+}
+
+/// Size of the argv packet srun would ship to its worker daemons.
+pub fn argv_packet_bytes(argv: &[String]) -> usize {
+    // Each arg costs its bytes + a NUL + a length word, plus packet header.
+    64 + argv.iter().map(|a| a.len() + 5).sum::<usize>()
+}
+
+/// Validate the argv packet against the srun limit.
+pub fn check_argv(argv: &[String]) -> Result<usize, LaunchError> {
+    let bytes = argv_packet_bytes(argv);
+    if bytes > SRUN_PACKET_LIMIT {
+        return Err(LaunchError::ArgListTooLong {
+            bytes,
+            limit: SRUN_PACKET_LIMIT,
+        });
+    }
+    Ok(bytes)
+}
+
+/// Build the restart argv. With the manifest fix: one bounded path.
+/// Without: every rank's image path rides the packet (the crash at scale).
+pub fn restart_argv(job: &str, ranks: u32, manifest_fix: bool) -> Vec<String> {
+    let mut argv = vec!["mana_restart".to_string(), "--join".to_string()];
+    if manifest_fix {
+        argv.push("--restart-manifest".to_string());
+        argv.push(CkptManifest::manifest_path(job));
+    } else {
+        for r in 0..ranks {
+            argv.push(crate::ckpt::image_path(job, RankId(r)));
+        }
+    }
+    argv
+}
+
+/// MANA/DMTCP binary size shipped to nodes (dynamic: plus its .so closure).
+const EXE_BYTES: f64 = 120e6;
+const SOLIB_CLOSURE_BYTES: f64 = 480e6;
+
+/// Startup-time model.
+///
+/// * `Static`: one binomial-tree broadcast of the self-contained binary.
+/// * `Dynamic`: every node's `ld.so` hammers the shared file system for the
+///   solib closure; the metadata server serializes, so cost grows linearly
+///   with node count (the behaviour that makes static linking "preferred
+///   at scale").
+pub fn startup_secs(topo: &Topology, link: LinkMode) -> f64 {
+    let nodes = topo.nodes() as f64;
+    match link {
+        LinkMode::Static => {
+            let hops = (nodes.max(2.0)).log2().ceil();
+            0.8 + hops * (EXE_BYTES / 10e9) // tree bcast at 10 GB/s per hop
+        }
+        LinkMode::Dynamic => {
+            // Shared-FS metadata serialization + per-node resolution work.
+            let meta = 0.08 * nodes;
+            let transfer = SOLIB_CLOSURE_BYTES / 2e9; // contended read
+            1.5 + meta + transfer
+        }
+    }
+}
+
+/// Full launch: validate argv, compute startup time.
+pub fn launch(
+    topo: &Topology,
+    link: LinkMode,
+    argv: &[String],
+) -> Result<LaunchReport, LaunchError> {
+    let argv_bytes = check_argv(argv)?;
+    Ok(LaunchReport {
+        argv_bytes,
+        startup_secs: startup_secs(topo, link),
+        nodes: topo.nodes(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn legacy_argv_crashes_at_scale() {
+        // 512 ranks: every image path in the packet -> overflow.
+        let argv = restart_argv("job7", 512, false);
+        match check_argv(&argv) {
+            Err(LaunchError::ArgListTooLong { bytes, limit }) => {
+                assert!(bytes > limit);
+            }
+            other => panic!("expected overflow, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn legacy_argv_fine_at_small_scale() {
+        let argv = restart_argv("job7", 16, false);
+        assert!(check_argv(&argv).is_ok());
+    }
+
+    #[test]
+    fn manifest_fix_is_scale_invariant() {
+        for ranks in [4u32, 64, 512, 4096] {
+            let argv = restart_argv("job7", ranks, true);
+            let bytes = check_argv(&argv).unwrap();
+            assert!(bytes < 256, "ranks={ranks}: {bytes}B");
+        }
+    }
+
+    #[test]
+    fn crossover_rank_count_exists() {
+        // Somewhere between 16 and 512 ranks the legacy scheme tips over.
+        let works = |r| check_argv(&restart_argv("j", r, false)).is_ok();
+        assert!(works(16));
+        assert!(!works(512));
+        let mut lo = 16u32;
+        let mut hi = 512u32;
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            if works(mid) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        // The crossover should be within production job sizes.
+        assert!((64..=256).contains(&hi), "crossover at {hi} ranks");
+    }
+
+    #[test]
+    fn static_startup_beats_dynamic_at_scale() {
+        let big = Topology::new(512, 8); // 64 nodes
+        let t_static = startup_secs(&big, LinkMode::Static);
+        let t_dyn = startup_secs(&big, LinkMode::Dynamic);
+        assert!(
+            t_dyn > 2.0 * t_static,
+            "dynamic {t_dyn}s vs static {t_static}s"
+        );
+    }
+
+    #[test]
+    fn startup_growth_shapes() {
+        // Dynamic grows roughly linearly with nodes; static stays near-flat.
+        let t = |ranks, link| startup_secs(&Topology::new(ranks, 8), link);
+        let dyn_ratio = t(512, LinkMode::Dynamic) / t(8, LinkMode::Dynamic);
+        let sta_ratio = t(512, LinkMode::Static) / t(8, LinkMode::Static);
+        assert!(dyn_ratio > 3.0, "dynamic ratio {dyn_ratio}");
+        assert!(sta_ratio < 2.0, "static ratio {sta_ratio}");
+    }
+
+    #[test]
+    fn launch_report_fields() {
+        let topo = Topology::new(8, 8);
+        let rep = launch(&topo, LinkMode::Static, &restart_argv("j", 8, true)).unwrap();
+        assert_eq!(rep.nodes, 1);
+        assert!(rep.startup_secs > 0.0);
+        assert!(rep.argv_bytes > 0);
+    }
+}

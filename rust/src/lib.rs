@@ -1,0 +1,47 @@
+//! # mana — MPI-agnostic transparent checkpointing, reproduced
+//!
+//! Reproduction of *"Improving scalability and reliability of MPI-agnostic
+//! transparent checkpointing for production workloads at NERSC"* (2021).
+//!
+//! The crate is the Layer-3 rust coordinator of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the MANA/DMTCP-style checkpoint coordinator, the
+//!   simulated Cori substrate (MPI runtime, Cray-GNI-like interconnect,
+//!   Burst Buffer + Lustre file systems, Slurm-like launcher), the
+//!   split-process memory model, and the production-hardening fixes the
+//!   paper describes.
+//! * **L2 (python/compile/model.py)** — JAX compute graphs for the analog
+//!   applications (Gromacs-like MD, HPCG-like CG, VASP-like RPA), AOT
+//!   lowered to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute hot
+//!   spots, verified against pure-jnp oracles.
+//!
+//! Python never runs on the request path: artifacts are loaded and executed
+//! from rust via PJRT (the [`runtime`] module).
+//!
+//! See DESIGN.md for the full system inventory and the experiment index,
+//! and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod apps;
+pub mod benchkit;
+pub mod ckpt;
+pub mod config;
+pub mod coordinator;
+pub mod faults;
+pub mod fdreg;
+pub mod fs;
+pub mod launcher;
+pub mod mem;
+pub mod metrics;
+pub mod mpi;
+pub mod preempt;
+pub mod proptest;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod simnet;
+pub mod splitproc;
+pub mod topology;
+pub mod usage;
+pub mod util;
+pub mod wrappers;

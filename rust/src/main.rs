@@ -1,0 +1,356 @@
+//! `mana` — CLI for the MANA@NERSC reproduction.
+//!
+//! Subcommands:
+//!   run       launch a job on the simulated Cori, optionally C/R mid-run
+//!   usage     print the Fig. 1 application census
+//!   mapping   print the rank-to-node/pid table for a topology
+//!   preempt   run the preempt-queue scenario (Future Work feature)
+//!   artifacts list the loaded AOT artifacts (verifies the PJRT path)
+//!
+//! Arg parsing is hand-rolled: the image's offline crate set has no clap.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use mana::config::{AppKind, ComputeMode, Fixes, LinkMode, RunConfig};
+use mana::fs::FsKind;
+use mana::preempt;
+use mana::runtime::{default_artifact_dir, Engine};
+use mana::sim::JobSim;
+use mana::topology::Topology;
+use mana::usage;
+use mana::util::json::Json;
+use mana::util::logging::{self, Level};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+struct Args {
+    flags: Vec<(String, String)>,
+    #[allow(dead_code)]
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let (k, v) = if let Some((k, v)) = name.split_once('=') {
+                    (k.to_string(), v.to_string())
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    i += 1;
+                    (name.to_string(), argv[i].clone())
+                } else {
+                    (name.to_string(), "true".to_string())
+                };
+                flags.push((k, v));
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Args { flags, positional }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key}={v}")),
+            None => Ok(default),
+        }
+    }
+
+    fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("on"))
+    }
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_help();
+        return Ok(());
+    }
+    let cmd = argv[0].as_str();
+    let args = Args::parse(&argv[1..]);
+
+    logging::set_level(match args.get("log") {
+        Some("trace") => Level::Trace,
+        Some("debug") => Level::Debug,
+        Some("info") => Level::Info,
+        Some("warn") | None => Level::Warn,
+        Some("error") => Level::Error,
+        Some(other) => bail!("unknown log level {other}"),
+    });
+
+    match cmd {
+        "run" => cmd_run(&args),
+        "usage" => cmd_usage(&args),
+        "mapping" => cmd_mapping(&args),
+        "preempt" => cmd_preempt(&args),
+        "advise" => cmd_advise(&args),
+        "console" => cmd_console(&args),
+        "artifacts" => cmd_artifacts(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other} (try `mana help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "mana — MPI-agnostic transparent checkpointing (NERSC reproduction)
+
+USAGE: mana <command> [--flags]
+
+COMMANDS:
+  run        --app gromacs|hpcg|vasp|synthetic --ranks N [--steps S]
+             [--threads T] [--fs bb|lustre] [--ckpt-at STEP] [--restart]
+             [--real-compute] [--fixes on|off] [--link static|dynamic]
+  usage      [--jobs N] print the Fig. 1 application census
+  mapping    --ranks N [--threads T] print rank→node/pid mapping
+  preempt    [--ranks N] run the preempt-queue scenario
+  advise     --ckpt-secs C [--restart-secs R] [--mtbf-hours H]
+             recommend a checkpoint interval (Young/Daly + numeric)
+  console    --script \"r 3; s; c; k\" drive a job via dmtcp_command-style
+             console commands (plus usual run flags)
+  artifacts  list loaded AOT artifacts (PJRT smoke test)
+
+GLOBAL: --log trace|debug|info|warn|error"
+    );
+}
+
+fn build_config(args: &Args) -> Result<RunConfig> {
+    let app = AppKind::parse(args.get("app").unwrap_or("synthetic"))
+        .context("unknown --app")?;
+    let ranks = args.get_u64("ranks", 8)? as u32;
+    let mut cfg = RunConfig::new(app, ranks);
+    cfg.threads_per_rank = args.get_u64("threads", 8)? as u32;
+    cfg.steps = args.get_u64("steps", 8)?;
+    cfg.fs = match args.get("fs") {
+        Some("bb") | Some("burst-buffer") | None => FsKind::BurstBuffer,
+        Some("lustre") | Some("cscratch") => FsKind::Lustre,
+        Some(other) => bail!("unknown --fs {other}"),
+    };
+    cfg.link = match args.get("link") {
+        Some("dynamic") => LinkMode::Dynamic,
+        _ => LinkMode::Static,
+    };
+    if args.get("fixes") == Some("off") {
+        cfg.fixes = Fixes::all_off();
+    }
+    if args.get_bool("real-compute") {
+        cfg.compute = ComputeMode::Real;
+    }
+    if let Some(job) = args.get("job") {
+        cfg.job = job.to_string();
+    }
+    if let Some(mem) = args.get("mem-per-rank") {
+        cfg.mem_per_rank =
+            Some(mana::util::bytes::parse(mem).context("bad --mem-per-rank")?);
+    }
+    Ok(cfg)
+}
+
+fn load_engine_if(cfg: &RunConfig) -> Result<Option<Arc<Engine>>> {
+    if cfg.compute == ComputeMode::Real {
+        let engine = Engine::load(&default_artifact_dir())
+            .context("loading AOT artifacts (run `make artifacts`?)")?;
+        Ok(Some(Arc::new(engine)))
+    } else {
+        Ok(None)
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let engine = load_engine_if(&cfg)?;
+    let ckpt_at = args.get("ckpt-at").map(|v| v.parse::<u64>()).transpose()?;
+    let do_restart = args.get_bool("restart");
+
+    let mut sim = JobSim::launch(cfg.clone(), engine.clone())?;
+    let mut ckpt_report = None;
+    let mut restart_report = None;
+
+    match ckpt_at {
+        Some(at) if at <= cfg.steps => {
+            sim.run_steps(at)?;
+            let rep = sim
+                .checkpoint()
+                .map_err(|e| anyhow::anyhow!("checkpoint failed: {e}"))?;
+            ckpt_report = Some(rep);
+            if do_restart {
+                let fs = sim.kill();
+                let (resumed, rrep) = JobSim::restart_from(cfg.clone(), engine, fs)
+                    .map_err(|e| anyhow::anyhow!("restart failed: {e}"))?;
+                restart_report = Some(rrep);
+                sim = resumed;
+            }
+            sim.run_steps(cfg.steps - at)?;
+        }
+        _ => sim.run_steps(cfg.steps)?,
+    }
+
+    let mut out = Json::obj()
+        .set("job", cfg.job.as_str())
+        .set("app", cfg.app.name())
+        .set("ranks", cfg.ranks as u64)
+        .set("steps", sim.step)
+        .set("virtual_secs", sim.now().as_secs())
+        .set(
+            "aggregate_memory",
+            mana::util::bytes::human(sim.aggregate_memory()),
+        )
+        .set("fingerprint", format!("{:016x}", sim.fingerprint()))
+        .set("corruption", sim.any_corruption());
+    if let Some(c) = ckpt_report {
+        out = out.set(
+            "checkpoint",
+            Json::obj()
+                .set("total_secs", c.total_secs)
+                .set("write_secs", c.write_secs)
+                .set("drain_secs", c.drain_secs)
+                .set("image_bytes", c.image_bytes)
+                .set("buffered_msgs", c.buffered_msgs)
+                .set("lost_messages", c.lost_messages),
+        );
+    }
+    if let Some(r) = restart_report {
+        out = out.set(
+            "restart",
+            Json::obj()
+                .set("total_secs", r.total_secs)
+                .set("read_secs", r.read_secs)
+                .set("startup_secs", r.startup_secs),
+        );
+    }
+    println!("{}", out.to_string());
+    Ok(())
+}
+
+fn cmd_usage(args: &Args) -> Result<()> {
+    let n = args.get_u64("jobs", 200_000)? as usize;
+    let jobs = usage::sample_jobs(n, 2020);
+    let rows = usage::census(&jobs);
+    println!("NERSC 2020 application usage (synthetic census, {n} jobs)");
+    println!("{:<16} {:>8}  cumulative", "app", "share%");
+    let mut cum = 0.0;
+    for (i, (app, share)) in rows.iter().take(20).enumerate() {
+        cum += share;
+        println!("{app:<16} {share:>7.2}%  {cum:>6.2}%  #{}", i + 1);
+    }
+    println!(
+        "top-20 = {:.1}% of cycles (paper: ~70%); vasp = {:.1}% (paper: >20%)",
+        usage::top_k_share(&rows, 20),
+        rows[0].1
+    );
+    Ok(())
+}
+
+fn cmd_mapping(args: &Args) -> Result<()> {
+    let ranks = args.get_u64("ranks", 8)? as u32;
+    let threads = args.get_u64("threads", 8)? as u32;
+    let topo = Topology::new(ranks, threads);
+    print!("{}", topo.mapping_table());
+    println!("{} ranks x {} threads = {} nodes", ranks, threads, topo.nodes());
+    Ok(())
+}
+
+fn cmd_preempt(args: &Args) -> Result<()> {
+    let ranks = args.get_u64("ranks", 8)? as u32;
+    let mut low = RunConfig::new(AppKind::VaspRpa, ranks);
+    low.job = "lowpri-rpa".into();
+    low.mem_per_rank = Some(64 << 20);
+    let mut rt = RunConfig::new(AppKind::Gromacs, ranks);
+    rt.job = "realtime-md".into();
+    rt.mem_per_rank = Some(64 << 20);
+    let rep = preempt::run_preemption_scenario(low, rt, None, 3, 4, 5)?;
+    println!(
+        "{}",
+        Json::obj()
+            .set("ckpt_secs", rep.ckpt_secs)
+            .set("realtime_secs", rep.realtime_secs)
+            .set("restart_secs", rep.restart_secs)
+            .set("lowpri_steps_final", rep.lowpri_steps_final)
+            .set("deterministic", rep.deterministic)
+            .to_string()
+    );
+    Ok(())
+}
+
+fn cmd_console(args: &Args) -> Result<()> {
+    use mana::coordinator::console::run_script;
+    let cfg = build_config(args)?;
+    let engine = load_engine_if(&cfg)?;
+    let script = args.get("script").unwrap_or("h; s");
+    let sim = JobSim::launch(cfg, engine)?;
+    let (replies, fs) = run_script(sim, script);
+    for r in &replies {
+        println!("{r}");
+    }
+    if let Some(fs) = fs {
+        println!(
+            "[storage tier survives: {} files, {} used]",
+            fs.file_count(),
+            mana::util::bytes::human(fs.used_bytes())
+        );
+    }
+    Ok(())
+}
+
+fn cmd_advise(args: &Args) -> Result<()> {
+    use mana::ckpt::interval::{daly_interval, efficiency, optimal_interval, young_interval};
+    let c: f64 = args.get("ckpt-secs").unwrap_or("30").parse()?;
+    let r: f64 = args.get("restart-secs").unwrap_or("26").parse()?;
+    let mtbf: f64 = args.get("mtbf-hours").unwrap_or("24").parse::<f64>()? * 3600.0;
+    let young = young_interval(c, mtbf);
+    let daly = daly_interval(c, mtbf);
+    let num = optimal_interval(c, r, mtbf);
+    println!(
+        "{}",
+        Json::obj()
+            .set("ckpt_secs", c)
+            .set("restart_secs", r)
+            .set("mtbf_hours", mtbf / 3600.0)
+            .set("young_interval_secs", young)
+            .set("daly_interval_secs", daly)
+            .set("numeric_optimal_secs", num)
+            .set("efficiency_at_optimum", efficiency(num, c, r, mtbf))
+            .to_string()
+    );
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<()> {
+    let engine = Engine::load(&default_artifact_dir())
+        .context("loading AOT artifacts (run `make artifacts`?)")?;
+    println!("platform: {}", engine.platform());
+    for name in engine.artifact_names() {
+        let spec = engine.spec(name).unwrap();
+        println!(
+            "  {name}: {} inputs, {} outputs ({})",
+            spec.inputs.len(),
+            spec.outputs.len(),
+            spec.file
+        );
+    }
+    Ok(())
+}

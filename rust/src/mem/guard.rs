@@ -1,0 +1,115 @@
+//! `CHANGES_PENDING` guard — Lesson 3 from the paper.
+//!
+//! > "Improved design for atomic data structures even for single-threaded
+//! >  code. Each data structure should include a field `CHANGES_PENDING`,
+//! >  which would act as a lock."
+//!
+//! The paper's race conditions came from data structures left in an
+//! inconsistent state across interruption points (signal handlers, the
+//! checkpoint hook firing mid-update). [`Guarded`] wraps a value with that
+//! pending flag: mutations must happen inside [`Guarded::update`], and any
+//! read that observes `changes_pending == true` is a detected consistency
+//! violation — exactly the invariant the authors wished the research code
+//! had asserted from day one.
+
+use std::fmt;
+
+/// Error: a reader observed a structure mid-mutation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct InconsistentRead {
+    pub what: &'static str,
+}
+
+impl fmt::Display for InconsistentRead {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "CHANGES_PENDING set while reading {}", self.what)
+    }
+}
+
+impl std::error::Error for InconsistentRead {}
+
+/// A value with a `CHANGES_PENDING` consistency flag.
+#[derive(Clone, Debug)]
+pub struct Guarded<T> {
+    name: &'static str,
+    changes_pending: bool,
+    value: T,
+}
+
+impl<T> Guarded<T> {
+    pub fn new(name: &'static str, value: T) -> Self {
+        Guarded {
+            name,
+            changes_pending: false,
+            value,
+        }
+    }
+
+    /// Consistent read. Fails if an update was interrupted mid-flight.
+    pub fn read(&self) -> Result<&T, InconsistentRead> {
+        if self.changes_pending {
+            Err(InconsistentRead { what: self.name })
+        } else {
+            Ok(&self.value)
+        }
+    }
+
+    /// Atomic update: sets `CHANGES_PENDING`, runs the mutation, clears it.
+    pub fn update<R>(&mut self, f: impl FnOnce(&mut T) -> R) -> R {
+        self.changes_pending = true;
+        let out = f(&mut self.value);
+        self.changes_pending = false;
+        out
+    }
+
+    /// Begin an update and *leave it open* — models the legacy missing-lock
+    /// bug where an interruption lands mid-mutation. Used by the fault
+    /// injector; a subsequent `read` will detect the inconsistency.
+    pub fn update_interrupted(&mut self, f: impl FnOnce(&mut T)) {
+        self.changes_pending = true;
+        f(&mut self.value);
+        // changes_pending intentionally left set.
+    }
+
+    /// Repair after an interrupted update (restart path).
+    pub fn reset_pending(&mut self) {
+        self.changes_pending = false;
+    }
+
+    pub fn is_pending(&self) -> bool {
+        self.changes_pending
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_after_update_ok() {
+        let mut g = Guarded::new("table", vec![1, 2]);
+        g.update(|v| v.push(3));
+        assert_eq!(g.read().unwrap(), &vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn interrupted_update_detected() {
+        let mut g = Guarded::new("msg_counts", 0u64);
+        g.update_interrupted(|v| *v = 41);
+        let err = g.read().unwrap_err();
+        assert!(err.to_string().contains("msg_counts"));
+        g.reset_pending();
+        assert_eq!(*g.read().unwrap(), 41);
+    }
+
+    #[test]
+    fn update_returns_value() {
+        let mut g = Guarded::new("x", 10i32);
+        let doubled = g.update(|v| {
+            *v *= 2;
+            *v
+        });
+        assert_eq!(doubled, 20);
+        assert!(!g.is_pending());
+    }
+}

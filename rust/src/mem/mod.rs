@@ -1,0 +1,600 @@
+//! Split-process memory model.
+//!
+//! MANA's core idea: the MPI application's memory regions are tagged
+//! *upper half*; MPI/network/system libraries are the *lower half*. Only
+//! the upper half is checkpointed; on restart a trivial MPI application
+//! instantiates a fresh lower half and then restores the upper-half regions
+//! at their original addresses.
+//!
+//! Two production bugs from the paper live exactly here, and both are
+//! reproducible in this model:
+//!
+//! * **Fixed-address assumptions** — the original MANA assumed certain
+//!   system regions were at fixed addresses; a Cori OS upgrade moved them,
+//!   causing overlaps. The fix is `MAP_FIXED_NOREPLACE`-style dynamic free
+//!   space discovery ([`AddressSpace::alloc`] with [`AllocPolicy::NoReplace`]).
+//! * **Lower-half growth** — the MPI library can mmap new message buffers
+//!   at runtime that overlap upper-half regions. The fixed model reproduces
+//!   the corruption; the annotated region table with runtime checks
+//!   (Lesson 1) catches it.
+//!
+//! Region *lengths are virtual*: a region can claim gigabytes (charged to
+//! the file-system model at checkpoint time) while carrying only a small
+//! real payload (the PJRT compute state) or a deterministic fill pattern.
+
+pub mod guard;
+
+use std::fmt;
+
+use crate::util::{fnv1a, hash_combine, prng::Xoshiro256};
+
+/// Which half of the split process owns a region.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Half {
+    /// Application state: checkpointed.
+    Upper,
+    /// MPI / network / system libraries: discarded at checkpoint, recreated
+    /// by the trivial application at restart.
+    Lower,
+}
+
+impl fmt::Display for Half {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Half::Upper => write!(f, "upper"),
+            Half::Lower => write!(f, "lower"),
+        }
+    }
+}
+
+/// Region contents. Virtual length may exceed the real byte payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// All-zero region (bss-like). Checkpoint stores no data bytes.
+    Zero,
+    /// Deterministic fill from a seed (simulated application heap at scale);
+    /// integrity-checkable without materializing the bytes.
+    Pattern(u64),
+    /// Real bytes (the PJRT compute state that must survive C/R bitwise).
+    Real(Vec<u8>),
+}
+
+impl Payload {
+    /// Bytes that physically exist in this process (vs. virtual length).
+    pub fn resident_bytes(&self) -> u64 {
+        match self {
+            Payload::Real(v) => v.len() as u64,
+            _ => 0,
+        }
+    }
+
+    /// Content fingerprint over the *logical* contents.
+    pub fn fingerprint(&self, virtual_len: u64) -> u64 {
+        match self {
+            Payload::Zero => hash_combine(0x5a5a, virtual_len),
+            Payload::Pattern(seed) => hash_combine(*seed, virtual_len),
+            Payload::Real(v) => fnv1a(v),
+        }
+    }
+
+    /// Materialize a prefix of the logical contents (for CRC spot checks).
+    pub fn sample(&self, virtual_len: u64, max: usize) -> Vec<u8> {
+        let n = virtual_len.min(max as u64) as usize;
+        match self {
+            Payload::Zero => vec![0u8; n],
+            Payload::Pattern(seed) => {
+                let mut rng = Xoshiro256::new(*seed);
+                (0..n).map(|_| (rng.next_u64() & 0xff) as u8).collect()
+            }
+            Payload::Real(v) => v.iter().copied().take(n).collect(),
+        }
+    }
+}
+
+/// One mapped region with its annotation (Lesson 1: "an annotated table of
+/// all memory regions, along with dynamic runtime checks").
+#[derive(Clone, Debug)]
+pub struct MemRegion {
+    pub addr: u64,
+    /// Virtual length in bytes (what the FS model charges at checkpoint).
+    pub len: u64,
+    pub half: Half,
+    /// Annotation: who mapped this and why ("mpi.eager_pool", "app.pos", …).
+    pub name: String,
+    pub payload: Payload,
+    /// Written since the last *full* checkpoint (incremental-ckpt support:
+    /// the page-level dirty bit, at region granularity).
+    pub dirty: bool,
+}
+
+impl MemRegion {
+    pub fn new(addr: u64, len: u64, half: Half, name: &str, payload: Payload) -> Self {
+        assert!(len > 0, "zero-length region {name}");
+        MemRegion {
+            addr,
+            len,
+            half,
+            name: name.to_string(),
+            payload,
+            dirty: true,
+        }
+    }
+
+    pub fn end(&self) -> u64 {
+        self.addr + self.len
+    }
+
+    pub fn overlaps(&self, other: &MemRegion) -> bool {
+        self.addr < other.end() && other.addr < self.end()
+    }
+
+    pub fn fingerprint(&self) -> u64 {
+        hash_combine(fnv1a(self.name.as_bytes()), self.payload.fingerprint(self.len))
+    }
+}
+
+/// Overlap diagnostic produced by the runtime checks.
+#[derive(Clone, Debug)]
+pub struct OverlapError {
+    pub a: String,
+    pub b: String,
+    pub a_range: (u64, u64),
+    pub b_range: (u64, u64),
+}
+
+impl fmt::Display for OverlapError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "region overlap: {} [{:#x},{:#x}) vs {} [{:#x},{:#x})",
+            self.a, self.a_range.0, self.a_range.1, self.b, self.b_range.0, self.b_range.1
+        )
+    }
+}
+
+/// The annotated region table of one (simulated) process.
+#[derive(Clone, Debug, Default)]
+pub struct RegionTable {
+    regions: Vec<MemRegion>, // sorted by addr
+}
+
+impl RegionTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert with the dynamic runtime check (Lesson 1): rejects overlaps.
+    pub fn insert(&mut self, region: MemRegion) -> Result<(), OverlapError> {
+        if let Some(existing) = self.regions.iter().find(|r| r.overlaps(&region)) {
+            return Err(OverlapError {
+                a: existing.name.clone(),
+                b: region.name.clone(),
+                a_range: (existing.addr, existing.end()),
+                b_range: (region.addr, region.end()),
+            });
+        }
+        let pos = self
+            .regions
+            .partition_point(|r| r.addr < region.addr);
+        self.regions.insert(pos, region);
+        Ok(())
+    }
+
+    /// Insert *without* checking — models the original MANA behaviour where
+    /// the lower half mmaps buffers blind. Overlaps become latent memory
+    /// corruption, surfaced later by [`RegionTable::check_invariants`].
+    pub fn insert_unchecked(&mut self, region: MemRegion) {
+        let pos = self
+            .regions
+            .partition_point(|r| r.addr < region.addr);
+        self.regions.insert(pos, region);
+    }
+
+    /// Lesson-1 runtime check: scan the whole table for overlaps.
+    pub fn check_invariants(&self) -> Vec<OverlapError> {
+        let mut errs = Vec::new();
+        for w in self.regions.windows(2) {
+            if w[0].overlaps(&w[1]) {
+                errs.push(OverlapError {
+                    a: w[0].name.clone(),
+                    b: w[1].name.clone(),
+                    a_range: (w[0].addr, w[0].end()),
+                    b_range: (w[1].addr, w[1].end()),
+                });
+            }
+        }
+        errs
+    }
+
+    /// Find a free gap of `len` bytes at or above `hint`
+    /// (`MAP_FIXED_NOREPLACE` discovery loop).
+    pub fn find_free(&self, len: u64, hint: u64, limit: u64) -> Option<u64> {
+        let mut cursor = hint;
+        for r in self.regions.iter().filter(|r| r.end() > hint) {
+            if r.addr >= cursor + len {
+                break;
+            }
+            cursor = cursor.max(r.end());
+        }
+        // Re-scan to confirm (regions before `hint` can't conflict).
+        let candidate = MemRegion::new(cursor, len, Half::Upper, "probe", Payload::Zero);
+        if self.regions.iter().any(|r| r.overlaps(&candidate)) {
+            // Walk gap by gap.
+            let mut cur = hint;
+            for r in &self.regions {
+                if r.end() <= cur {
+                    continue;
+                }
+                if r.addr >= cur + len {
+                    return Some(cur);
+                }
+                cur = cur.max(r.end());
+            }
+            if cur + len <= limit {
+                return Some(cur);
+            }
+            return None;
+        }
+        if cursor + len <= limit {
+            Some(cursor)
+        } else {
+            None
+        }
+    }
+
+    pub fn remove_half(&mut self, half: Half) -> Vec<MemRegion> {
+        let (keep, gone): (Vec<_>, Vec<_>) =
+            self.regions.drain(..).partition(|r| r.half != half);
+        self.regions = keep;
+        gone
+    }
+
+    pub fn remove_named(&mut self, name: &str) -> Option<MemRegion> {
+        let idx = self.regions.iter().position(|r| r.name == name)?;
+        Some(self.regions.remove(idx))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&MemRegion> {
+        self.regions.iter().find(|r| r.name == name)
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut MemRegion> {
+        self.regions.iter_mut().find(|r| r.name == name)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &MemRegion> {
+        self.regions.iter()
+    }
+
+    pub fn half_iter(&self, half: Half) -> impl Iterator<Item = &MemRegion> {
+        self.regions.iter().filter(move |r| r.half == half)
+    }
+
+    /// Total virtual bytes in a half (the checkpoint image size for Upper).
+    pub fn total_bytes(&self, half: Half) -> u64 {
+        self.half_iter(half).map(|r| r.len).sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.regions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.regions.is_empty()
+    }
+
+    /// Clear dirty bits on a half (done after a full checkpoint captures
+    /// everything).
+    pub fn clear_dirty(&mut self, half: Half) {
+        for r in self.regions.iter_mut().filter(|r| r.half == half) {
+            r.dirty = false;
+        }
+    }
+
+    /// Dirty bytes in a half (what an incremental checkpoint must write).
+    pub fn dirty_bytes(&self, half: Half) -> u64 {
+        self.half_iter(half).filter(|r| r.dirty).map(|r| r.len).sum()
+    }
+
+    /// Fingerprint of the upper half (C/R determinism checks).
+    pub fn upper_fingerprint(&self) -> u64 {
+        let mut h = 0xdead_beef_u64;
+        for r in self.half_iter(Half::Upper) {
+            h = hash_combine(h, r.fingerprint());
+        }
+        h
+    }
+
+    /// The annotated table, rendered (debugging aid from Lessons Learned).
+    pub fn render(&self) -> String {
+        let mut out = String::from("addr               len        half  name\n");
+        for r in &self.regions {
+            out.push_str(&format!(
+                "{:#016x} {:>10} {:>5}  {}\n",
+                r.addr,
+                crate::util::bytes::human(r.len),
+                r.half,
+                r.name
+            ));
+        }
+        out
+    }
+}
+
+/// Address-space allocation policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocPolicy {
+    /// Original MANA: map at a hard-coded address, no conflict check.
+    /// Works until the environment shifts (OS upgrade) — then overlaps.
+    FixedLegacy,
+    /// The paper's fix: `MAP_FIXED_NOREPLACE`-style probing of the region
+    /// table to dynamically find free space.
+    NoReplace,
+}
+
+/// Simulated OS version; the CLE upgrade on Cori moved system regions,
+/// breaking the fixed-address assumption.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OsVersion {
+    /// Pre-upgrade: system regions where the original MANA expected them.
+    Cle6,
+    /// Post-upgrade: vdso/stack shifted into MANA's hard-coded ranges.
+    Cle7,
+}
+
+/// Per-process address space with OS-owned system regions.
+#[derive(Clone, Debug)]
+pub struct AddressSpace {
+    pub table: RegionTable,
+    pub os: OsVersion,
+    pub policy: AllocPolicy,
+}
+
+/// Where the original MANA hard-coded its lower-half staging area.
+pub const LEGACY_FIXED_BASE: u64 = 0x2000_0000_0000;
+/// Usable address-space ceiling (47-bit canonical user space).
+pub const ADDR_LIMIT: u64 = 0x7fff_0000_0000;
+/// Discovery hint for NoReplace probing.
+pub const PROBE_HINT: u64 = 0x1000_0000_0000;
+
+impl AddressSpace {
+    pub fn new(os: OsVersion, policy: AllocPolicy) -> Self {
+        let mut table = RegionTable::new();
+        for r in system_regions(os) {
+            table
+                .insert(r)
+                .expect("system regions are disjoint by construction");
+        }
+        AddressSpace { table, os, policy }
+    }
+
+    /// Allocate a region of `len` bytes for `half`.
+    ///
+    /// Under `FixedLegacy` the allocation lands at the hard-coded base plus
+    /// a bump offset *without checking* — if the OS (or the MPI library)
+    /// already owns that range the overlap is silently created, exactly the
+    /// paper's corruption. Under `NoReplace` the region table is probed.
+    pub fn alloc(
+        &mut self,
+        len: u64,
+        half: Half,
+        name: &str,
+        payload: Payload,
+    ) -> Result<u64, OverlapError> {
+        match self.policy {
+            AllocPolicy::FixedLegacy => {
+                // Bump from the legacy base, ignoring what's there.
+                let used: u64 = self
+                    .table
+                    .iter()
+                    .filter(|r| r.addr >= LEGACY_FIXED_BASE && r.name.starts_with("mana."))
+                    .map(|r| r.len)
+                    .sum();
+                let addr = LEGACY_FIXED_BASE + used;
+                let region =
+                    MemRegion::new(addr, len, half, &format!("mana.{name}"), payload);
+                self.table.insert_unchecked(region);
+                Ok(addr)
+            }
+            AllocPolicy::NoReplace => {
+                let addr = self
+                    .table
+                    .find_free(len, PROBE_HINT, ADDR_LIMIT)
+                    .expect("address space exhausted");
+                let region =
+                    MemRegion::new(addr, len, half, &format!("mana.{name}"), payload);
+                self.table.insert(region)?;
+                Ok(addr)
+            }
+        }
+    }
+
+    /// Restore a checkpointed region at its *original* address (restart
+    /// path). Fails if anything now occupies that range — which is how the
+    /// lower-half-overlap bug manifests at restart.
+    pub fn restore_at(&mut self, region: MemRegion) -> Result<(), OverlapError> {
+        self.table.insert(region)
+    }
+}
+
+/// OS-owned regions per version. The Cle7 upgrade moves the vvar/vdso pair
+/// into the range the legacy fixed base assumed free.
+pub fn system_regions(os: OsVersion) -> Vec<MemRegion> {
+    use Payload::Zero;
+    match os {
+        OsVersion::Cle6 => vec![
+            MemRegion::new(0x0000_0040_0000, 0x20_0000, Half::Lower, "sys.text", Zero),
+            MemRegion::new(0x7ffe_0000_0000, 0x80_0000, Half::Lower, "sys.stack", Zero),
+            MemRegion::new(0x7ffe_f000_0000, 0x1000, Half::Lower, "sys.vvar", Zero),
+            MemRegion::new(0x7ffe_f000_2000, 0x2000, Half::Lower, "sys.vdso", Zero),
+        ],
+        OsVersion::Cle7 => vec![
+            MemRegion::new(0x0000_0040_0000, 0x20_0000, Half::Lower, "sys.text", Zero),
+            MemRegion::new(0x7ffe_0000_0000, 0x80_0000, Half::Lower, "sys.stack", Zero),
+            // The upgrade: vvar/vdso now sit inside MANA's legacy range.
+            MemRegion::new(LEGACY_FIXED_BASE + 0x1000, 0x1000, Half::Lower, "sys.vvar", Zero),
+            MemRegion::new(
+                LEGACY_FIXED_BASE + 0x4000,
+                0x2000,
+                Half::Lower,
+                "sys.vdso",
+                Zero,
+            ),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn region(addr: u64, len: u64, name: &str) -> MemRegion {
+        MemRegion::new(addr, len, Half::Upper, name, Payload::Zero)
+    }
+
+    #[test]
+    fn insert_rejects_overlap() {
+        let mut t = RegionTable::new();
+        t.insert(region(0x1000, 0x1000, "a")).unwrap();
+        let err = t.insert(region(0x1800, 0x1000, "b")).unwrap_err();
+        assert_eq!(err.a, "a");
+        assert_eq!(err.b, "b");
+        // Adjacent (touching) regions are fine.
+        t.insert(region(0x2000, 0x1000, "c")).unwrap();
+    }
+
+    #[test]
+    fn unchecked_insert_caught_by_invariant_scan() {
+        let mut t = RegionTable::new();
+        t.insert(region(0x1000, 0x1000, "app.heap")).unwrap();
+        t.insert_unchecked(region(0x1800, 0x1000, "mpi.eager_pool"));
+        let errs = t.check_invariants();
+        assert_eq!(errs.len(), 1);
+        assert!(errs[0].to_string().contains("mpi.eager_pool"));
+    }
+
+    #[test]
+    fn find_free_skips_occupied() {
+        let mut t = RegionTable::new();
+        t.insert(region(0x1000, 0x1000, "a")).unwrap();
+        t.insert(region(0x3000, 0x1000, "b")).unwrap();
+        // A 0x1000 gap exists at 0x2000.
+        assert_eq!(t.find_free(0x1000, 0x1000, u64::MAX), Some(0x2000));
+        // A 0x2000 request must go after "b".
+        assert_eq!(t.find_free(0x2000, 0x1000, u64::MAX), Some(0x4000));
+    }
+
+    #[test]
+    fn find_free_respects_limit() {
+        let mut t = RegionTable::new();
+        t.insert(region(0x0, 0x1000, "a")).unwrap();
+        assert_eq!(t.find_free(0x1000, 0x0, 0x1800), None);
+        assert_eq!(t.find_free(0x800, 0x0, 0x1800), Some(0x1000));
+    }
+
+    #[test]
+    fn legacy_policy_overlaps_after_os_upgrade() {
+        // Pre-upgrade: legacy fixed base is free -> no corruption.
+        let mut pre = AddressSpace::new(OsVersion::Cle6, AllocPolicy::FixedLegacy);
+        pre.alloc(0x10_0000, Half::Lower, "lh_core", Payload::Zero)
+            .unwrap();
+        assert!(pre.table.check_invariants().is_empty());
+
+        // Post-upgrade: vdso moved into the assumed-free range -> overlap.
+        let mut post = AddressSpace::new(OsVersion::Cle7, AllocPolicy::FixedLegacy);
+        post.alloc(0x10_0000, Half::Lower, "lh_core", Payload::Zero)
+            .unwrap();
+        assert!(!post.table.check_invariants().is_empty());
+    }
+
+    #[test]
+    fn noreplace_policy_survives_os_upgrade() {
+        for os in [OsVersion::Cle6, OsVersion::Cle7] {
+            let mut a = AddressSpace::new(os, AllocPolicy::NoReplace);
+            a.alloc(0x10_0000, Half::Lower, "lh_core", Payload::Zero)
+                .unwrap();
+            a.alloc(0x40_0000, Half::Upper, "app_heap", Payload::Pattern(1))
+                .unwrap();
+            assert!(a.table.check_invariants().is_empty(), "os={os:?}");
+        }
+    }
+
+    #[test]
+    fn restore_at_original_address_conflicts_with_squatter() {
+        let mut a = AddressSpace::new(OsVersion::Cle6, AllocPolicy::NoReplace);
+        let addr = a
+            .alloc(0x1000, Half::Upper, "app", Payload::Pattern(7))
+            .unwrap();
+        let saved = a.table.get("mana.app").unwrap().clone();
+        // Simulate restart: fresh space where the lower half grabbed the
+        // same address.
+        let mut fresh = AddressSpace::new(OsVersion::Cle6, AllocPolicy::NoReplace);
+        fresh
+            .table
+            .insert(MemRegion::new(
+                addr,
+                0x1000,
+                Half::Lower,
+                "mpi.buffer",
+                Payload::Zero,
+            ))
+            .unwrap();
+        assert!(fresh.restore_at(saved).is_err());
+    }
+
+    #[test]
+    fn upper_fingerprint_tracks_content() {
+        let mut t = RegionTable::new();
+        t.insert(MemRegion::new(
+            0x1000,
+            0x100,
+            Half::Upper,
+            "a",
+            Payload::Real(vec![1, 2, 3]),
+        ))
+        .unwrap();
+        let f1 = t.upper_fingerprint();
+        t.get_mut("a").unwrap().payload = Payload::Real(vec![1, 2, 4]);
+        assert_ne!(f1, t.upper_fingerprint());
+        // Lower-half changes don't affect the checkpointable fingerprint.
+        t.insert(MemRegion::new(
+            0x8000,
+            0x100,
+            Half::Lower,
+            "lh",
+            Payload::Pattern(9),
+        ))
+        .unwrap();
+        t.get_mut("a").unwrap().payload = Payload::Real(vec![1, 2, 3]);
+        assert_eq!(f1, t.upper_fingerprint());
+    }
+
+    #[test]
+    fn total_bytes_by_half() {
+        let mut t = RegionTable::new();
+        t.insert(MemRegion::new(0x1000, 100, Half::Upper, "u1", Payload::Zero))
+            .unwrap();
+        t.insert(MemRegion::new(0x4000, 200, Half::Upper, "u2", Payload::Zero))
+            .unwrap();
+        t.insert(MemRegion::new(0x8000, 999, Half::Lower, "l1", Payload::Zero))
+            .unwrap();
+        assert_eq!(t.total_bytes(Half::Upper), 300);
+        assert_eq!(t.total_bytes(Half::Lower), 999);
+    }
+
+    #[test]
+    fn pattern_payload_fingerprint_depends_on_seed_and_len() {
+        let p1 = Payload::Pattern(1).fingerprint(100);
+        let p2 = Payload::Pattern(2).fingerprint(100);
+        let p3 = Payload::Pattern(1).fingerprint(200);
+        assert_ne!(p1, p2);
+        assert_ne!(p1, p3);
+    }
+
+    #[test]
+    fn sample_is_deterministic() {
+        let p = Payload::Pattern(42);
+        assert_eq!(p.sample(1000, 16), p.sample(1000, 16));
+        assert_eq!(Payload::Zero.sample(8, 16), vec![0u8; 8]);
+    }
+}

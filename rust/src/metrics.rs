@@ -1,0 +1,143 @@
+//! Production observability: counters, gauges, timing summaries.
+//!
+//! Lesson 4 of the paper ("better attention to warnings and error messages
+//! from the beginning") extends naturally to metrics: a production C/R
+//! service must expose what it is doing. Every [`crate::sim::JobSim`]
+//! carries a [`Metrics`] registry; the CLI and the console's `s` command
+//! surface the snapshot as JSON.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Summary statistics of a repeatedly-observed duration/size.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Summary {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    fn observe(&mut self, v: f64) {
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        self.sum += v;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+/// The registry. Keys are dotted names ("ckpt.write_secs").
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, f64>,
+    summaries: BTreeMap<&'static str, Summary>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, name: &'static str, delta: u64) {
+        *self.counters.entry(name).or_insert(0) += delta;
+    }
+
+    pub fn gauge(&mut self, name: &'static str, value: f64) {
+        self.gauges.insert(name, value);
+    }
+
+    pub fn observe(&mut self, name: &'static str, value: f64) {
+        self.summaries.entry(name).or_default().observe(value);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn summary(&self, name: &str) -> Summary {
+        self.summaries.get(name).copied().unwrap_or_default()
+    }
+
+    /// Snapshot as stable-ordered JSON.
+    pub fn snapshot(&self) -> Json {
+        let mut counters = Json::obj();
+        for (k, v) in &self.counters {
+            counters = counters.set(k, *v);
+        }
+        let mut gauges = Json::obj();
+        for (k, v) in &self.gauges {
+            gauges = gauges.set(k, *v);
+        }
+        let mut summaries = Json::obj();
+        for (k, s) in &self.summaries {
+            summaries = summaries.set(
+                k,
+                Json::obj()
+                    .set("count", s.count)
+                    .set("mean", s.mean())
+                    .set("min", s.min)
+                    .set("max", s.max),
+            );
+        }
+        Json::obj()
+            .set("counters", counters)
+            .set("gauges", gauges)
+            .set("summaries", summaries)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = Metrics::new();
+        m.inc("steps", 1);
+        m.inc("steps", 2);
+        assert_eq!(m.counter("steps"), 3);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn summary_tracks_min_max_mean() {
+        let mut m = Metrics::new();
+        for v in [2.0, 8.0, 5.0] {
+            m.observe("ckpt.secs", v);
+        }
+        let s = m.summary("ckpt.secs");
+        assert_eq!(s.count, 3);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 8.0);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapshot_is_stable_json() {
+        let mut m = Metrics::new();
+        m.inc("b", 1);
+        m.inc("a", 1);
+        m.gauge("g", 1.5);
+        m.observe("t", 3.0);
+        let s = m.snapshot().to_string();
+        assert!(s.contains(r#""a":1"#) && s.contains(r#""g":1.5"#));
+        assert!(s.find(r#""a""#).unwrap() < s.find(r#""b""#).unwrap());
+        assert!(s.contains(r#""count":1"#));
+    }
+}

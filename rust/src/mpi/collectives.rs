@@ -1,0 +1,167 @@
+//! MPI collectives over the simulated fabric.
+//!
+//! Collectives are synchronization points: every participant's virtual
+//! clock advances to the operation's completion time. Costs follow the
+//! standard log-tree models (latency * ceil(log2 P) + bytes/bandwidth per
+//! hop), and every collective also updates the per-rank byte counters so
+//! the drain condition sees collective traffic too.
+
+use crate::topology::RankId;
+use crate::util::simclock::SimTime;
+
+use super::MpiWorld;
+
+fn log2_ceil(p: u32) -> u32 {
+    debug_assert!(p >= 1);
+    32 - (p - 1).leading_zeros()
+}
+
+/// Synchronize all clocks to the max and add a tree-latency term.
+/// Returns the completion time.
+pub fn barrier(world: &mut MpiWorld, times: &mut [SimTime]) -> SimTime {
+    assert_eq!(times.len(), world.size as usize);
+    let enter = times.iter().fold(SimTime::ZERO, |a, &t| a.max(t));
+    let hops = log2_ceil(world.size).max(1) as f64;
+    let done = enter.after(2.0 * hops * world.fabric.cfg.latency);
+    for t in times.iter_mut() {
+        *t = done;
+    }
+    done
+}
+
+/// Allreduce of `bytes` per rank: reduce-scatter + allgather cost model.
+/// Charges 2*bytes sent/received per rank.
+pub fn allreduce(world: &mut MpiWorld, times: &mut [SimTime], bytes: u64) -> SimTime {
+    assert_eq!(times.len(), world.size as usize);
+    let enter = times.iter().fold(SimTime::ZERO, |a, &t| a.max(t));
+    let p = world.size as f64;
+    let hops = log2_ceil(world.size).max(1) as f64;
+    let bw = world.fabric.cfg.bandwidth;
+    // Rabenseifner-style: 2 * (p-1)/p * bytes over the wire per rank.
+    let wire_bytes = if world.size > 1 {
+        (2.0 * (p - 1.0) / p * bytes as f64) as u64
+    } else {
+        0
+    };
+    let dur = hops * world.fabric.cfg.latency + wire_bytes as f64 / bw;
+    let done = enter.after(dur);
+    for (i, t) in times.iter_mut().enumerate() {
+        *t = done;
+        if world.size > 1 {
+            world.counters[i].sent_bytes += wire_bytes;
+            world.counters[i].recv_bytes += wire_bytes;
+            world.counters[i].sent_msgs += 2 * log2_ceil(world.size) as u64;
+            world.counters[i].recv_msgs += 2 * log2_ceil(world.size) as u64;
+        }
+    }
+    let _ = RankId(0);
+    done
+}
+
+/// Broadcast `bytes` from `root` to everyone (binomial tree).
+pub fn bcast(
+    world: &mut MpiWorld,
+    times: &mut [SimTime],
+    root: RankId,
+    bytes: u64,
+) -> SimTime {
+    assert_eq!(times.len(), world.size as usize);
+    assert!(root.0 < world.size);
+    let enter = times.iter().fold(SimTime::ZERO, |a, &t| a.max(t));
+    let hops = log2_ceil(world.size).max(1) as f64;
+    let bw = world.fabric.cfg.bandwidth;
+    let dur = hops * (world.fabric.cfg.latency + bytes as f64 / bw);
+    let done = enter.after(dur);
+    for (i, t) in times.iter_mut().enumerate() {
+        *t = done;
+        if world.size > 1 {
+            if i as u32 == root.0 {
+                world.counters[i].sent_bytes += bytes * (world.size as u64 - 1).min(hops as u64);
+                world.counters[i].sent_msgs += 1;
+            } else {
+                world.counters[i].recv_bytes += bytes;
+                world.counters[i].recv_msgs += 1;
+            }
+        }
+    }
+    done
+}
+
+/// Does the collective leave the world drained? Collectives must be
+/// self-consistent in the byte accounting; this is asserted in tests and
+/// relied on by the coordinator (checkpoints happen at collective-free
+/// safe points, but the counters must still balance **per collective op**
+/// for bcast this is root-sends == sum of receives).
+pub fn accounting_balanced(world: &MpiWorld) -> bool {
+    world.total_sent_bytes() == world.total_recv_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::fabric::Fabric;
+
+    fn world(n: u32) -> (MpiWorld, Vec<SimTime>) {
+        (
+            MpiWorld::new(n, Fabric::default()),
+            vec![SimTime::ZERO; n as usize],
+        )
+    }
+
+    #[test]
+    fn log2_ceil_values() {
+        assert_eq!(log2_ceil(1), 0);
+        assert_eq!(log2_ceil(2), 1);
+        assert_eq!(log2_ceil(3), 2);
+        assert_eq!(log2_ceil(512), 9);
+    }
+
+    #[test]
+    fn barrier_syncs_to_max() {
+        let (mut w, mut times) = world(4);
+        times[2] = SimTime::secs(5.0);
+        let done = barrier(&mut w, &mut times);
+        assert!(done.as_secs() > 5.0);
+        assert!(times.iter().all(|t| *t == done));
+    }
+
+    #[test]
+    fn allreduce_charges_symmetric_traffic() {
+        let (mut w, mut times) = world(8);
+        allreduce(&mut w, &mut times, 1 << 20);
+        assert!(accounting_balanced(&w));
+        assert!(w.counters[0].sent_bytes > 0);
+        // All ranks see identical counters.
+        for c in &w.counters {
+            assert_eq!(c.sent_bytes, w.counters[0].sent_bytes);
+        }
+    }
+
+    #[test]
+    fn allreduce_single_rank_is_free() {
+        let (mut w, mut times) = world(1);
+        let t0 = times[0];
+        allreduce(&mut w, &mut times, 1 << 20);
+        assert_eq!(w.total_sent_bytes(), 0);
+        assert!(times[0].as_secs() >= t0.as_secs());
+    }
+
+    #[test]
+    fn bcast_larger_world_takes_longer() {
+        let (mut w2, mut t2) = world(2);
+        let (mut w64, mut t64) = world(64);
+        let d2 = bcast(&mut w2, &mut t2, RankId(0), 1 << 20);
+        let d64 = bcast(&mut w64, &mut t64, RankId(0), 1 << 20);
+        assert!(d64 > d2);
+    }
+
+    #[test]
+    fn collective_then_drain_condition_holds() {
+        // After a collective completes, the global drain condition that the
+        // coordinator checks must hold (no phantom in-flight bytes).
+        let (mut w, mut times) = world(16);
+        allreduce(&mut w, &mut times, 4096);
+        barrier(&mut w, &mut times);
+        assert!(w.drained());
+    }
+}

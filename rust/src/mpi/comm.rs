@@ -1,0 +1,375 @@
+//! Communicator management with record-and-replay.
+//!
+//! MANA cannot checkpoint the MPI library's opaque communicator objects
+//! (they live in the discarded lower half). Instead it *records* every
+//! communicator-creating call the application makes and *replays* the log
+//! against the fresh MPI library at restart, recreating an isomorphic set
+//! of communicators. This module is that mechanism over the simulated MPI:
+//! `dup`/`split`/`free` are logged; [`CommRegistry::replay`] rebuilds the
+//! registry; the structural fingerprint proves isomorphism.
+
+use std::collections::BTreeMap;
+
+use crate::topology::RankId;
+use crate::util::{fnv1a, hash_combine};
+
+/// Application-visible communicator handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct CommId(pub u32);
+
+/// MPI_COMM_WORLD.
+pub const COMM_WORLD: CommId = CommId(0);
+
+/// A recorded communicator-creating operation (the replay log entry).
+#[derive(Clone, Debug, PartialEq)]
+pub enum CommOp {
+    /// MPI_Comm_dup(parent) -> id
+    Dup { parent: CommId, id: CommId },
+    /// MPI_Comm_split(parent, color per parent-member, key = rank order)
+    Split {
+        parent: CommId,
+        colors: Vec<i32>,
+        id_base: CommId,
+    },
+    /// MPI_Comm_free(id)
+    Free { id: CommId },
+}
+
+/// One live communicator.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CommInfo {
+    pub id: CommId,
+    /// Global ranks that are members, in rank order.
+    pub members: Vec<RankId>,
+}
+
+/// The registry + the record-and-replay log.
+#[derive(Clone, Debug, Default)]
+pub struct CommRegistry {
+    comms: BTreeMap<CommId, CommInfo>,
+    log: Vec<CommOp>,
+    next_id: u32,
+}
+
+impl CommRegistry {
+    /// Fresh registry containing only COMM_WORLD over `ranks`.
+    pub fn new(ranks: u32) -> Self {
+        let mut comms = BTreeMap::new();
+        comms.insert(
+            COMM_WORLD,
+            CommInfo {
+                id: COMM_WORLD,
+                members: (0..ranks).map(RankId).collect(),
+            },
+        );
+        CommRegistry {
+            comms,
+            log: Vec::new(),
+            next_id: 1,
+        }
+    }
+
+    pub fn get(&self, id: CommId) -> Option<&CommInfo> {
+        self.comms.get(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.comms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.comms.is_empty()
+    }
+
+    /// MPI_Comm_dup.
+    pub fn dup(&mut self, parent: CommId) -> Option<CommId> {
+        let info = self.comms.get(&parent)?.clone();
+        let id = CommId(self.next_id);
+        self.next_id += 1;
+        self.comms.insert(
+            id,
+            CommInfo {
+                id,
+                members: info.members,
+            },
+        );
+        self.log.push(CommOp::Dup { parent, id });
+        Some(id)
+    }
+
+    /// MPI_Comm_split: one new communicator per distinct color (color < 0 =
+    /// MPI_UNDEFINED, member joins nothing). Returns (color -> new comm).
+    pub fn split(&mut self, parent: CommId, colors: &[i32]) -> Option<BTreeMap<i32, CommId>> {
+        let info = self.comms.get(&parent)?.clone();
+        if colors.len() != info.members.len() {
+            return None;
+        }
+        let id_base = CommId(self.next_id);
+        let out = self.apply_split(&info, colors, id_base);
+        self.log.push(CommOp::Split {
+            parent,
+            colors: colors.to_vec(),
+            id_base,
+        });
+        Some(out)
+    }
+
+    fn apply_split(
+        &mut self,
+        info: &CommInfo,
+        colors: &[i32],
+        id_base: CommId,
+    ) -> BTreeMap<i32, CommId> {
+        let mut distinct: Vec<i32> = colors.iter().copied().filter(|&c| c >= 0).collect();
+        distinct.sort_unstable();
+        distinct.dedup();
+        let mut out = BTreeMap::new();
+        for (i, &color) in distinct.iter().enumerate() {
+            let id = CommId(id_base.0 + i as u32);
+            let members: Vec<RankId> = info
+                .members
+                .iter()
+                .zip(colors)
+                .filter(|(_, &c)| c == color)
+                .map(|(&r, _)| r)
+                .collect();
+            self.comms.insert(id, CommInfo { id, members });
+            out.insert(color, id);
+        }
+        self.next_id = id_base.0 + distinct.len() as u32;
+        out
+    }
+
+    /// MPI_Comm_free.
+    pub fn free(&mut self, id: CommId) -> bool {
+        if id == COMM_WORLD || !self.comms.contains_key(&id) {
+            return false;
+        }
+        self.comms.remove(&id);
+        self.log.push(CommOp::Free { id });
+        true
+    }
+
+    /// The restart path: rebuild an isomorphic registry by replaying the
+    /// recorded log against a fresh world.
+    pub fn replay(ranks: u32, log: &[CommOp]) -> Self {
+        let mut reg = CommRegistry::new(ranks);
+        for op in log {
+            match op {
+                CommOp::Dup { parent, id } => {
+                    let info = reg.comms.get(parent).expect("replay: parent").clone();
+                    reg.comms.insert(
+                        *id,
+                        CommInfo {
+                            id: *id,
+                            members: info.members,
+                        },
+                    );
+                    reg.next_id = reg.next_id.max(id.0 + 1);
+                }
+                CommOp::Split {
+                    parent,
+                    colors,
+                    id_base,
+                } => {
+                    let info = reg.comms.get(parent).expect("replay: parent").clone();
+                    reg.apply_split(&info, colors, *id_base);
+                }
+                CommOp::Free { id } => {
+                    reg.comms.remove(id);
+                }
+            }
+        }
+        reg.log = log.to_vec();
+        reg
+    }
+
+    pub fn log(&self) -> &[CommOp] {
+        &self.log
+    }
+
+    /// Structural fingerprint: ids + memberships (replay-isomorphism check).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xC033u64;
+        for (id, info) in &self.comms {
+            h = hash_combine(h, id.0 as u64);
+            for m in &info.members {
+                h = hash_combine(h, m.0 as u64 + 1);
+            }
+        }
+        h
+    }
+
+    // ------------------------------------------------- log serialization
+
+    /// Encode the replay log (stored in the checkpoint image).
+    pub fn encode_log(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&(self.log.len() as u32).to_le_bytes());
+        for op in &self.log {
+            match op {
+                CommOp::Dup { parent, id } => {
+                    out.push(0);
+                    out.extend_from_slice(&parent.0.to_le_bytes());
+                    out.extend_from_slice(&id.0.to_le_bytes());
+                }
+                CommOp::Split {
+                    parent,
+                    colors,
+                    id_base,
+                } => {
+                    out.push(1);
+                    out.extend_from_slice(&parent.0.to_le_bytes());
+                    out.extend_from_slice(&id_base.0.to_le_bytes());
+                    out.extend_from_slice(&(colors.len() as u32).to_le_bytes());
+                    for c in colors {
+                        out.extend_from_slice(&c.to_le_bytes());
+                    }
+                }
+                CommOp::Free { id } => {
+                    out.push(2);
+                    out.extend_from_slice(&id.0.to_le_bytes());
+                }
+            }
+        }
+        // Trailing structural fingerprint for integrity.
+        out.extend_from_slice(&fnv1a(&out).to_le_bytes());
+        out
+    }
+
+    /// Decode a replay log. None on truncation/corruption.
+    pub fn decode_log(bytes: &[u8]) -> Option<Vec<CommOp>> {
+        if bytes.len() < 12 {
+            return None;
+        }
+        let body = &bytes[..bytes.len() - 8];
+        let want = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().ok()?);
+        if fnv1a(body) != want {
+            return None;
+        }
+        let mut pos = 0usize;
+        let rd_u32 = |b: &[u8], p: &mut usize| -> Option<u32> {
+            let v = u32::from_le_bytes(b.get(*p..*p + 4)?.try_into().ok()?);
+            *p += 4;
+            Some(v)
+        };
+        let n = rd_u32(body, &mut pos)?;
+        let mut log = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            let kind = *body.get(pos)?;
+            pos += 1;
+            match kind {
+                0 => log.push(CommOp::Dup {
+                    parent: CommId(rd_u32(body, &mut pos)?),
+                    id: CommId(rd_u32(body, &mut pos)?),
+                }),
+                1 => {
+                    let parent = CommId(rd_u32(body, &mut pos)?);
+                    let id_base = CommId(rd_u32(body, &mut pos)?);
+                    let k = rd_u32(body, &mut pos)? as usize;
+                    let mut colors = Vec::with_capacity(k);
+                    for _ in 0..k {
+                        colors.push(rd_u32(body, &mut pos)? as i32);
+                    }
+                    log.push(CommOp::Split {
+                        parent,
+                        colors,
+                        id_base,
+                    });
+                }
+                2 => log.push(CommOp::Free {
+                    id: CommId(rd_u32(body, &mut pos)?),
+                }),
+                _ => return None,
+            }
+        }
+        Some(log)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_always_present() {
+        let reg = CommRegistry::new(8);
+        assert_eq!(reg.get(COMM_WORLD).unwrap().members.len(), 8);
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn dup_copies_membership() {
+        let mut reg = CommRegistry::new(4);
+        let d = reg.dup(COMM_WORLD).unwrap();
+        assert_eq!(reg.get(d).unwrap().members, reg.get(COMM_WORLD).unwrap().members);
+        assert!(reg.dup(CommId(99)).is_none());
+    }
+
+    #[test]
+    fn split_by_color() {
+        let mut reg = CommRegistry::new(6);
+        // Rows of a 2x3 grid: colors = row index.
+        let map = reg.split(COMM_WORLD, &[0, 0, 0, 1, 1, 1]).unwrap();
+        assert_eq!(map.len(), 2);
+        let row0 = reg.get(map[&0]).unwrap();
+        assert_eq!(row0.members, vec![RankId(0), RankId(1), RankId(2)]);
+        let row1 = reg.get(map[&1]).unwrap();
+        assert_eq!(row1.members, vec![RankId(3), RankId(4), RankId(5)]);
+    }
+
+    #[test]
+    fn split_undefined_color_excluded() {
+        let mut reg = CommRegistry::new(4);
+        let map = reg.split(COMM_WORLD, &[0, -1, 0, -1]).unwrap();
+        assert_eq!(map.len(), 1);
+        assert_eq!(reg.get(map[&0]).unwrap().members, vec![RankId(0), RankId(2)]);
+    }
+
+    #[test]
+    fn free_removes_but_not_world() {
+        let mut reg = CommRegistry::new(4);
+        let d = reg.dup(COMM_WORLD).unwrap();
+        assert!(reg.free(d));
+        assert!(!reg.free(d), "double free");
+        assert!(!reg.free(COMM_WORLD), "world is not freeable");
+    }
+
+    #[test]
+    fn replay_rebuilds_isomorphic_registry() {
+        let mut reg = CommRegistry::new(8);
+        let d = reg.dup(COMM_WORLD).unwrap();
+        let rows = reg.split(COMM_WORLD, &[0, 0, 1, 1, 2, 2, 3, 3]).unwrap();
+        let _cols = reg.split(d, &[0, 1, 0, 1, 0, 1, 0, 1]).unwrap();
+        reg.free(rows[&2]);
+        let fp = reg.fingerprint();
+
+        let replayed = CommRegistry::replay(8, reg.log());
+        assert_eq!(replayed.fingerprint(), fp, "replay must be isomorphic");
+        assert_eq!(replayed.len(), reg.len());
+    }
+
+    #[test]
+    fn log_roundtrips_through_bytes() {
+        let mut reg = CommRegistry::new(4);
+        reg.dup(COMM_WORLD).unwrap();
+        reg.split(COMM_WORLD, &[0, 1, 0, 1]).unwrap();
+        let bytes = reg.encode_log();
+        let log = CommRegistry::decode_log(&bytes).unwrap();
+        assert_eq!(log, reg.log());
+        // Corruption detected.
+        let mut bad = bytes.clone();
+        bad[2] ^= 0xff;
+        assert!(CommRegistry::decode_log(&bad).is_none());
+        assert!(CommRegistry::decode_log(&bytes[..bytes.len() - 3]).is_none());
+    }
+
+    #[test]
+    fn replay_after_decode_matches() {
+        let mut reg = CommRegistry::new(16);
+        let colors: Vec<i32> = (0..16).map(|i| i % 4).collect();
+        reg.split(COMM_WORLD, &colors).unwrap();
+        let log = CommRegistry::decode_log(&reg.encode_log()).unwrap();
+        assert_eq!(CommRegistry::replay(16, &log).fingerprint(), reg.fingerprint());
+    }
+}

@@ -1,0 +1,329 @@
+//! Simulated MPI runtime — the *lower half* of the split process.
+//!
+//! MANA is MPI-agnostic: its wrappers only need MPI *semantics*, so the
+//! substrate is a faithful-but-simulated message-passing world: ranks
+//! exchange tagged messages over the [`crate::simnet::fabric::Fabric`],
+//! every byte sent and received is counted (the paper's drain condition —
+//! "we delayed the final checkpoint until the count of total bytes sent and
+//! received was equal" — is evaluated on exactly these counters), and
+//! collectives advance all participants' virtual clocks together.
+//!
+//! The world is deterministic: rank programs are stepped by the simulation
+//! driver, and message delivery times come from the fabric model.
+
+pub mod collectives;
+pub mod comm;
+
+use std::collections::VecDeque;
+
+use crate::simnet::fabric::Fabric;
+use crate::topology::RankId;
+use crate::util::simclock::SimTime;
+
+/// A tagged point-to-point message in flight or delivered.
+#[derive(Clone, Debug)]
+pub struct Message {
+    pub src: RankId,
+    pub dst: RankId,
+    pub tag: u32,
+    /// Bytes charged to the fabric (virtual size).
+    pub bytes: u64,
+    /// Real payload carried end-to-end (halo data, small).
+    pub payload: Vec<u8>,
+    pub sent_at: SimTime,
+    pub deliver_at: SimTime,
+}
+
+/// Per-rank traffic counters (the drain-protocol bookkeeping).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RankCounters {
+    pub sent_bytes: u64,
+    pub recv_bytes: u64,
+    pub sent_msgs: u64,
+    pub recv_msgs: u64,
+}
+
+/// The simulated communicator (MPI_COMM_WORLD).
+#[derive(Clone, Debug)]
+pub struct MpiWorld {
+    pub size: u32,
+    pub fabric: Fabric,
+    /// In-flight / undelivered messages, queued per destination rank in
+    /// delivery order.
+    inflight: Vec<VecDeque<Message>>,
+    pub counters: Vec<RankCounters>,
+}
+
+impl MpiWorld {
+    pub fn new(size: u32, fabric: Fabric) -> Self {
+        MpiWorld {
+            size,
+            fabric,
+            inflight: (0..size).map(|_| VecDeque::new()).collect(),
+            counters: vec![RankCounters::default(); size as usize],
+        }
+    }
+
+    /// Non-blocking send: enqueue into the fabric, charge the counter,
+    /// return the delivery time.
+    pub fn isend(
+        &mut self,
+        src: RankId,
+        dst: RankId,
+        tag: u32,
+        bytes: u64,
+        payload: Vec<u8>,
+        now: SimTime,
+    ) -> SimTime {
+        assert!(src.0 < self.size && dst.0 < self.size, "rank out of range");
+        let deliver_at = self.fabric.delivery_time(now, bytes);
+        let msg = Message {
+            src,
+            dst,
+            tag,
+            bytes,
+            payload,
+            sent_at: now,
+            deliver_at,
+        };
+        let q = &mut self.inflight[dst.0 as usize];
+        // Keep per-destination queue sorted by delivery time (stable for
+        // equal times -> deterministic matching).
+        let pos = q.partition_point(|m| m.deliver_at <= deliver_at);
+        q.insert(pos, msg);
+        let c = &mut self.counters[src.0 as usize];
+        c.sent_bytes += bytes;
+        c.sent_msgs += 1;
+        deliver_at
+    }
+
+    /// Try to receive a message matching (src, tag) that has arrived by
+    /// `now`. `None` for src/tag means ANY_SOURCE/ANY_TAG.
+    pub fn try_recv(
+        &mut self,
+        dst: RankId,
+        src: Option<RankId>,
+        tag: Option<u32>,
+        now: SimTime,
+    ) -> Option<Message> {
+        let q = &mut self.inflight[dst.0 as usize];
+        let idx = q.iter().position(|m| {
+            m.deliver_at <= now
+                && src.is_none_or(|s| m.src == s)
+                && tag.is_none_or(|t| m.tag == t)
+        })?;
+        let msg = q.remove(idx).unwrap();
+        let c = &mut self.counters[dst.0 as usize];
+        c.recv_bytes += msg.bytes;
+        c.recv_msgs += 1;
+        Some(msg)
+    }
+
+    /// Blocking receive: waits (advances the caller's clock) until a
+    /// matching message arrives. Panics if none is in flight — in the
+    /// deterministic driver a blocking recv without a matching send is a
+    /// program bug, which is exactly what MPI deadlock is.
+    pub fn recv_blocking(
+        &mut self,
+        dst: RankId,
+        src: Option<RankId>,
+        tag: Option<u32>,
+        now: &mut SimTime,
+    ) -> Message {
+        if let Some(m) = self.try_recv(dst, src, tag, *now) {
+            return m;
+        }
+        // Find the earliest matching in-flight message and wait for it.
+        let q = &self.inflight[dst.0 as usize];
+        let arrival = q
+            .iter()
+            .filter(|m| {
+                src.is_none_or(|s| m.src == s) && tag.is_none_or(|t| m.tag == t)
+            })
+            .map(|m| m.deliver_at)
+            .next()
+            .unwrap_or_else(|| {
+                panic!("deadlock: {dst} blocked in recv(src={src:?}, tag={tag:?}) with nothing in flight")
+            });
+        *now = now.max(arrival);
+        self.try_recv(dst, src, tag, *now)
+            .expect("message present at its delivery time")
+    }
+
+    /// Earliest pending delivery for a rank (drain loop uses this).
+    pub fn next_arrival(&self, dst: RankId) -> Option<SimTime> {
+        self.inflight[dst.0 as usize].front().map(|m| m.deliver_at)
+    }
+
+    /// Is any message (delivered-or-not) in flight matching the filter?
+    pub fn has_matching_inflight(
+        &self,
+        dst: RankId,
+        src: Option<RankId>,
+        tag: Option<u32>,
+    ) -> bool {
+        self.inflight[dst.0 as usize].iter().any(|m| {
+            src.is_none_or(|s| m.src == s) && tag.is_none_or(|t| m.tag == t)
+        })
+    }
+
+    /// Messages still undelivered, across all ranks.
+    pub fn inflight_count(&self) -> usize {
+        self.inflight.iter().map(|q| q.len()).sum()
+    }
+
+    /// The paper's drain condition: total bytes sent == total bytes
+    /// received across the whole job.
+    pub fn drained(&self) -> bool {
+        self.total_sent_bytes() == self.total_recv_bytes()
+    }
+
+    pub fn total_sent_bytes(&self) -> u64 {
+        self.counters.iter().map(|c| c.sent_bytes).sum()
+    }
+
+    pub fn total_recv_bytes(&self) -> u64 {
+        self.counters.iter().map(|c| c.recv_bytes).sum()
+    }
+
+    /// Overwrite the payload of the oldest undelivered message matching
+    /// (src, dst, tag) — models a send buffer being reused while the
+    /// converted MPI_Isend is still in flight (the wrapper-layer semantics
+    /// bug). Returns true if a message was clobbered.
+    pub fn clobber_inflight(
+        &mut self,
+        src: RankId,
+        dst: RankId,
+        tag: u32,
+        new_payload: Vec<u8>,
+    ) -> bool {
+        if let Some(m) = self.inflight[dst.0 as usize]
+            .iter_mut()
+            .find(|m| m.src == src && m.tag == tag)
+        {
+            m.payload = new_payload;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Drop every in-flight message — what a checkpoint *without* the drain
+    /// fix does to the network. Returns how many messages were lost.
+    pub fn drop_inflight(&mut self) -> usize {
+        let n = self.inflight_count();
+        for q in &mut self.inflight {
+            q.clear();
+        }
+        n
+    }
+
+    /// Reset the communicator (restart path: fresh lower half). Counters
+    /// restart at the checkpoint-consistent values supplied by the caller.
+    pub fn reset(&mut self, counters: Vec<RankCounters>) {
+        assert_eq!(counters.len(), self.size as usize);
+        for q in &mut self.inflight {
+            q.clear();
+        }
+        self.counters = counters;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn world(n: u32) -> MpiWorld {
+        MpiWorld::new(n, Fabric::default())
+    }
+
+    #[test]
+    fn send_then_recv_roundtrip() {
+        let mut w = world(2);
+        let mut t = SimTime::ZERO;
+        w.isend(RankId(0), RankId(1), 7, 1024, vec![1, 2, 3], t);
+        let m = w.recv_blocking(RankId(1), Some(RankId(0)), Some(7), &mut t);
+        assert_eq!(m.payload, vec![1, 2, 3]);
+        assert!(t.as_secs() > 0.0, "recv advanced time to delivery");
+        assert!(w.drained());
+    }
+
+    #[test]
+    fn try_recv_respects_delivery_time() {
+        let mut w = world(2);
+        w.isend(RankId(0), RankId(1), 0, 1 << 20, vec![], SimTime::ZERO);
+        // Too early: the MiB hasn't arrived yet.
+        assert!(w.try_recv(RankId(1), None, None, SimTime::secs(1e-9)).is_none());
+        assert!(w
+            .try_recv(RankId(1), None, None, SimTime::secs(1.0))
+            .is_some());
+    }
+
+    #[test]
+    fn tag_and_source_matching() {
+        let mut w = world(3);
+        let t = SimTime::ZERO;
+        w.isend(RankId(0), RankId(2), 1, 8, vec![0], t);
+        w.isend(RankId(1), RankId(2), 2, 8, vec![1], t);
+        let late = SimTime::secs(1.0);
+        let m = w.try_recv(RankId(2), Some(RankId(1)), None, late).unwrap();
+        assert_eq!(m.payload, vec![1]);
+        let m = w.try_recv(RankId(2), None, Some(1), late).unwrap();
+        assert_eq!(m.payload, vec![0]);
+        assert!(w.try_recv(RankId(2), None, None, late).is_none());
+    }
+
+    #[test]
+    fn counters_track_bytes() {
+        let mut w = world(2);
+        let mut t = SimTime::ZERO;
+        w.isend(RankId(0), RankId(1), 0, 100, vec![], t);
+        w.isend(RankId(0), RankId(1), 0, 50, vec![], t);
+        assert_eq!(w.total_sent_bytes(), 150);
+        assert_eq!(w.total_recv_bytes(), 0);
+        assert!(!w.drained());
+        w.recv_blocking(RankId(1), None, None, &mut t);
+        w.recv_blocking(RankId(1), None, None, &mut t);
+        assert!(w.drained());
+        assert_eq!(w.counters[1].recv_msgs, 2);
+    }
+
+    #[test]
+    fn drop_inflight_models_undrained_checkpoint() {
+        let mut w = world(2);
+        w.isend(RankId(0), RankId(1), 0, 64, vec![42], SimTime::ZERO);
+        assert_eq!(w.drop_inflight(), 1);
+        assert_eq!(w.inflight_count(), 0);
+        // The byte accounting now shows the permanent loss.
+        assert!(!w.drained());
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn recv_without_send_is_deadlock() {
+        let mut w = world(2);
+        let mut t = SimTime::ZERO;
+        w.recv_blocking(RankId(1), Some(RankId(0)), None, &mut t);
+    }
+
+    #[test]
+    fn delivery_order_fifo_per_pair() {
+        let mut w = world(2);
+        let mut t = SimTime::ZERO;
+        w.isend(RankId(0), RankId(1), 0, 8, vec![1], t);
+        w.isend(RankId(0), RankId(1), 0, 8, vec![2], t);
+        let a = w.recv_blocking(RankId(1), None, None, &mut t);
+        let b = w.recv_blocking(RankId(1), None, None, &mut t);
+        assert_eq!((a.payload[0], b.payload[0]), (1, 2));
+    }
+
+    #[test]
+    fn reset_clears_queues_and_sets_counters() {
+        let mut w = world(2);
+        w.isend(RankId(0), RankId(1), 0, 8, vec![], SimTime::ZERO);
+        let saved = w.counters.clone();
+        w.reset(saved.clone());
+        assert_eq!(w.inflight_count(), 0);
+        assert_eq!(w.counters[0].sent_bytes, saved[0].sent_bytes);
+    }
+}

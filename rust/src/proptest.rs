@@ -1,0 +1,138 @@
+//! Minimal property-based testing framework (proptest is unavailable
+//! offline).
+//!
+//! Deterministic: every case derives from a fixed seed + case index, so a
+//! failure report ("case #k, seed s") reproduces exactly. On failure the
+//! runner retries with "smaller" cases generated from the same sub-seed
+//! (shrinking-lite: generators are asked for progressively smaller sizes).
+//!
+//! ```no_run
+//! use mana::proptest::run;
+//! run("addition commutes", 100, |g| {
+//!     let a = g.u64_below(1000);
+//!     let b = g.u64_below(1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::prng::Xoshiro256;
+
+/// Per-case random source with a size budget (shrinks on failure).
+pub struct Gen {
+    rng: Xoshiro256,
+    /// Size multiplier in (0, 1]; generators scale their ranges by it.
+    size: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, case: u64, size: f64) -> Self {
+        Gen {
+            rng: Xoshiro256::stream(seed, case),
+            size,
+        }
+    }
+
+    /// Uniform u64 in [0, n) scaled down when shrinking. Always < n.
+    pub fn u64_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let eff = ((n as f64 * self.size).ceil() as u64).clamp(1, n);
+        self.rng.next_below(eff)
+    }
+
+    /// Uniform in [lo, hi] (inclusive), biased toward lo when shrinking.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(hi >= lo);
+        lo + self.u64_below(hi - lo + 1)
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn bytes(&mut self, max_len: usize) -> Vec<u8> {
+        let len = self.u64_below(max_len.max(1) as u64) as usize;
+        (0..len).map(|_| (self.rng.next_u64() & 0xff) as u8).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.u64_below(items.len() as u64) as usize]
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics with the reproducing case
+/// number on failure, after attempting three shrunk re-runs to find a
+/// smaller witness.
+pub fn run(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    let seed = crate::util::fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let failed = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed, case, 1.0);
+            prop(&mut g);
+        })
+        .is_err();
+        if failed {
+            // Shrinking-lite: re-run the failing case at smaller sizes to
+            // report the smallest size that still fails.
+            let mut smallest = 1.0;
+            for &size in &[0.1, 0.25, 0.5] {
+                let fails = std::panic::catch_unwind(|| {
+                    let mut g = Gen::new(seed, case, size);
+                    prop(&mut g);
+                })
+                .is_err();
+                if fails {
+                    smallest = size;
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed at case #{case} (seed {seed:#x}, smallest failing size {smallest})"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        run("u64_below in range", 200, |g| {
+            let n = g.range(1, 1000);
+            assert!(g.u64_below(n) < n);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_case() {
+        run("always fails", 5, |_| panic!("nope"));
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        // Same name + case index -> same values.
+        let mut a = Gen::new(42, 7, 1.0);
+        let mut b = Gen::new(42, 7, 1.0);
+        for _ in 0..50 {
+            assert_eq!(a.u64_below(1_000_000), b.u64_below(1_000_000));
+        }
+    }
+
+    #[test]
+    fn choose_covers_all() {
+        let items = [1, 2, 3, 4];
+        let mut g = Gen::new(1, 1, 1.0);
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            seen[*g.choose(&items) as usize - 1] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

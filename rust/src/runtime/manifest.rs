@@ -1,0 +1,153 @@
+//! Parser for `artifacts/manifest.txt` (written by `python/compile/aot.py`).
+//!
+//! Line format:
+//! ```text
+//! artifact <name> <file>
+//! in <argname> <dtype> <d0>x<d1>...        (or "scalar")
+//! out <idx> <dtype> <dims>
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+/// Tensor I/O description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: String,
+    pub dims: Vec<i64>,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product::<i64>() as usize
+    }
+}
+
+/// One AOT-compiled artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parse the manifest text.
+pub fn parse(text: &str) -> Result<Vec<ArtifactSpec>> {
+    let mut artifacts: Vec<ArtifactSpec> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let kind = parts.next().unwrap();
+        let ctx = || format!("manifest line {}", lineno + 1);
+        match kind {
+            "artifact" => {
+                let name = parts.next().with_context(ctx)?.to_string();
+                let file = parts.next().with_context(ctx)?.to_string();
+                artifacts.push(ArtifactSpec {
+                    name,
+                    file,
+                    inputs: vec![],
+                    outputs: vec![],
+                });
+            }
+            "in" | "out" => {
+                let name = parts.next().with_context(ctx)?.to_string();
+                let dtype = parts.next().with_context(ctx)?.to_string();
+                let dims_s = parts.next().with_context(ctx)?;
+                let dims = parse_dims(dims_s).with_context(ctx)?;
+                let spec = TensorSpec { name, dtype, dims };
+                let a = artifacts
+                    .last_mut()
+                    .with_context(|| format!("{}: io line before artifact", ctx()))?;
+                if kind == "in" {
+                    a.inputs.push(spec);
+                } else {
+                    a.outputs.push(spec);
+                }
+            }
+            other => bail!("{}: unknown record '{other}'", ctx()),
+        }
+    }
+    for a in &artifacts {
+        if a.inputs.is_empty() || a.outputs.is_empty() {
+            bail!("artifact {} has empty I/O", a.name);
+        }
+        for t in a.inputs.iter().chain(&a.outputs) {
+            if t.dtype != "float32" {
+                bail!("artifact {}: unsupported dtype {}", a.name, t.dtype);
+            }
+        }
+    }
+    Ok(artifacts)
+}
+
+fn parse_dims(s: &str) -> Result<Vec<i64>> {
+    if s == "scalar" {
+        return Ok(vec![]);
+    }
+    s.split('x')
+        .map(|d| d.parse::<i64>().map_err(|e| anyhow::anyhow!("bad dim {d}: {e}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+artifact md_step md_step.hlo.txt
+in pos float32 256x3
+in vel float32 256x3
+out 0 float32 256x3
+out 1 float32 256x3
+out 2 float32 1
+artifact cg_step cg_step.hlo.txt
+in x float32 16x16x16
+in rz float32 1
+out 0 float32 16x16x16
+";
+
+    #[test]
+    fn parses_sample() {
+        let arts = parse(SAMPLE).unwrap();
+        assert_eq!(arts.len(), 2);
+        assert_eq!(arts[0].name, "md_step");
+        assert_eq!(arts[0].inputs.len(), 2);
+        assert_eq!(arts[0].outputs.len(), 3);
+        assert_eq!(arts[0].inputs[0].dims, vec![256, 3]);
+        assert_eq!(arts[0].inputs[0].element_count(), 768);
+        assert_eq!(arts[1].inputs[1].dims, vec![1]);
+    }
+
+    #[test]
+    fn scalar_dims() {
+        assert_eq!(parse_dims("scalar").unwrap(), Vec::<i64>::new());
+        assert_eq!(parse_dims("4x5").unwrap(), vec![4, 5]);
+        assert!(parse_dims("4xbad").is_err());
+    }
+
+    #[test]
+    fn rejects_io_before_artifact() {
+        assert!(parse("in x float32 4").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_record() {
+        assert!(parse("frob a b").is_err());
+    }
+
+    #[test]
+    fn rejects_empty_io() {
+        assert!(parse("artifact a a.hlo.txt").is_err());
+    }
+
+    #[test]
+    fn rejects_unsupported_dtype() {
+        let m = "artifact a a.hlo.txt\nin x float64 4\nout 0 float32 4\n";
+        assert!(parse(m).is_err());
+    }
+}

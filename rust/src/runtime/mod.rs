@@ -1,0 +1,130 @@
+//! PJRT runtime: load AOT artifacts and execute them from the rust hot path.
+//!
+//! The L2/L3 bridge: `make artifacts` lowers the JAX compute graphs to HLO
+//! *text* (see python/compile/aot.py for why text, not serialized protos);
+//! this module compiles each once on the PJRT CPU client and exposes a
+//! simple `Vec<f32>`-in/`Vec<f32>`-out call used by the application drivers.
+//! Python never runs at request time.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use manifest::ArtifactSpec;
+
+/// A loaded, compiled artifact set.
+pub struct Engine {
+    client: xla::PjRtClient,
+    execs: HashMap<String, (xla::PjRtLoadedExecutable, ArtifactSpec)>,
+}
+
+impl Engine {
+    /// Load every artifact in `dir` (expects `manifest.txt` inside).
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        let specs = manifest::parse(&text)?;
+        let mut execs = HashMap::new();
+        for spec in specs {
+            let path = dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", spec.name))?;
+            execs.insert(spec.name.clone(), (exe, spec));
+        }
+        Ok(Engine { client, execs })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.execs.keys().map(|s| s.as_str()).collect();
+        names.sort_unstable();
+        names
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.execs.get(name).map(|(_, s)| s)
+    }
+
+    /// Execute `name` with f32 inputs (shapes validated against the
+    /// manifest). Returns one Vec<f32> per output.
+    pub fn run(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let (exe, spec) = self
+            .execs
+            .get(name)
+            .with_context(|| format!("no artifact named {name}"))?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, tspec) in inputs.iter().zip(&spec.inputs) {
+            if data.len() != tspec.element_count() {
+                bail!(
+                    "{name}.{}: expected {} elements, got {}",
+                    tspec.name,
+                    tspec.element_count(),
+                    data.len()
+                );
+            }
+            let lit = xla::Literal::vec1(data);
+            let lit = if tspec.dims.len() == 1 {
+                lit
+            } else {
+                lit.reshape(&tspec.dims)
+                    .with_context(|| format!("{name}.{}: reshape", tspec.name))?
+            };
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {name}"))?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "{name}: expected {} outputs, got {}",
+                spec.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, tspec) in parts.into_iter().zip(&spec.outputs) {
+            let v = lit
+                .to_vec::<f32>()
+                .with_context(|| format!("{name}: output {} to_vec", tspec.name))?;
+            if v.len() != tspec.element_count() {
+                bail!(
+                    "{name}.{}: output has {} elements, manifest says {}",
+                    tspec.name,
+                    v.len(),
+                    tspec.element_count()
+                );
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+/// Default artifact directory (honors $MANA_ARTIFACTS for out-of-tree runs).
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("MANA_ARTIFACTS") {
+        return dir.into();
+    }
+    std::path::PathBuf::from("artifacts")
+}

@@ -1,0 +1,425 @@
+//! Batch scheduler with C/R-backed preemption — the paper's motivation,
+//! quantified.
+//!
+//! "Checkpoint/restart provides … scheduling flexibility to support diverse
+//! workloads with different priority levels, e.g., making space for
+//! high-priority, real-time workloads by preempting low-priority jobs. …
+//! If we can get MANA to work reliably with these top applications, then
+//! potentially about 70% of the system resources can be preempted."
+//!
+//! A discrete-event simulation of a Cori-like machine running a mixed
+//! queue of low-priority batch jobs and arriving real-time jobs, under
+//! three policies:
+//!
+//! * [`Policy::NoPreemption`] — real-time jobs wait for nodes to free up
+//!   (the status quo without C/R).
+//! * [`Policy::KillRestart`] — low-priority jobs are killed and later
+//!   rerun *from scratch* (preemption without C/R: work is lost).
+//! * [`Policy::CkptPreempt`] — MANA checkpoints the victims (cost from the
+//!   calibrated storage model), real-time starts after the checkpoint,
+//!   victims later resume where they left off.
+//!
+//! Only jobs whose application is MANA-enabled (the top-app share of
+//! Fig. 1) are preemptible under `CkptPreempt`.
+
+use std::collections::BTreeMap;
+
+use crate::fs::{FileSystem, FsConfig};
+use crate::topology::NodeId;
+use crate::util::prng::Xoshiro256;
+
+/// Job priority class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Priority {
+    Low,
+    Realtime,
+}
+
+/// One job in the workload trace.
+#[derive(Clone, Debug)]
+pub struct TraceJob {
+    pub id: u32,
+    pub priority: Priority,
+    pub nodes: u32,
+    /// Arrival time, seconds.
+    pub arrival: f64,
+    /// Pure compute demand, seconds.
+    pub work: f64,
+    /// Per-node checkpointable footprint, bytes.
+    pub mem_per_node: u64,
+    /// Is the application MANA-enabled (top-app set)?
+    pub mana_enabled: bool,
+}
+
+/// Preemption policy under evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    NoPreemption,
+    KillRestart,
+    CkptPreempt,
+}
+
+/// Aggregate outcome of one simulated trace.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SchedReport {
+    pub realtime_jobs: u32,
+    /// Mean realtime queue wait (arrival -> start), seconds.
+    pub rt_wait_mean: f64,
+    /// Max realtime wait, seconds.
+    pub rt_wait_max: f64,
+    /// Node-seconds of low-priority work thrown away (kill policy).
+    pub lost_node_secs: f64,
+    /// Node-seconds spent writing/reading checkpoints.
+    pub cr_overhead_node_secs: f64,
+    /// Makespan of the whole trace, seconds.
+    pub makespan: f64,
+    /// Machine utilization: useful node-secs / (nodes * makespan).
+    pub utilization: f64,
+}
+
+#[derive(Clone, Debug)]
+struct Running {
+    job: TraceJob,
+    started: f64,
+    /// Work completed before this dispatch (from a resumed checkpoint).
+    done_before: f64,
+}
+
+/// The machine + queue state.
+pub struct Scheduler {
+    pub nodes: u32,
+    pub policy: Policy,
+    bb: FileSystem,
+    free_nodes: u32,
+    running: Vec<Running>,
+    /// Preempted jobs waiting to resume: work already completed.
+    suspended: BTreeMap<u32, (TraceJob, f64)>,
+}
+
+impl Scheduler {
+    pub fn new(nodes: u32, policy: Policy) -> Self {
+        Scheduler {
+            nodes,
+            policy,
+            bb: FileSystem::new(FsConfig::burst_buffer(nodes)),
+            free_nodes: nodes,
+            running: Vec::new(),
+            suspended: BTreeMap::new(),
+        }
+    }
+
+    /// Checkpoint cost for a victim job (burst-buffer model, per-node
+    /// footprint drained at per-node bandwidth).
+    fn ckpt_secs(&self, job: &TraceJob) -> f64 {
+        job.mem_per_node as f64 / self.bb.cfg.per_node_write_bw + self.bb.cfg.meta_latency
+    }
+
+    fn restart_secs(&self, job: &TraceJob) -> f64 {
+        job.mem_per_node as f64 / self.bb.cfg.per_node_read_bw + self.bb.cfg.meta_latency
+    }
+
+    /// Run the whole trace to completion.
+    pub fn simulate(&mut self, trace: &[TraceJob]) -> SchedReport {
+        let mut report = SchedReport::default();
+        let mut events: Vec<(f64, TraceJob)> =
+            trace.iter().map(|j| (j.arrival, j.clone())).collect();
+        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+        let mut now = 0.0f64;
+        let mut rt_waits: Vec<f64> = Vec::new();
+        let mut useful = 0.0f64;
+        let mut queue: Vec<(f64, TraceJob)> = Vec::new(); // (enqueue time, job)
+        let mut ei = 0usize;
+
+        loop {
+            // Admit arrivals up to `now`.
+            while ei < events.len() && events[ei].0 <= now {
+                queue.push((events[ei].0, events[ei].1.clone()));
+                ei += 1;
+            }
+
+            // Dispatch: realtime first (with preemption), then low backfill.
+            self.dispatch(&mut queue, now, &mut report, &mut rt_waits, &mut useful);
+
+            // Advance to the next event: job completion or next arrival.
+            let next_completion = self
+                .running
+                .iter()
+                .map(|r| r.started + (r.job.work - r.done_before))
+                .fold(f64::INFINITY, f64::min);
+            let next_arrival = if ei < events.len() {
+                events[ei].0
+            } else {
+                f64::INFINITY
+            };
+            let next = next_completion.min(next_arrival);
+            if !next.is_finite() {
+                break;
+            }
+            now = next;
+
+            // Retire completions.
+            let mut still = Vec::new();
+            for r in self.running.drain(..) {
+                let finish = r.started + (r.job.work - r.done_before);
+                if finish <= now + 1e-9 {
+                    self.free_nodes += r.job.nodes;
+                    useful += r.job.work * r.job.nodes as f64;
+                } else {
+                    still.push(r);
+                }
+            }
+            self.running = still;
+
+            // Resume suspended low-priority work opportunistically.
+            let resumable: Vec<u32> = self.suspended.keys().copied().collect();
+            for id in resumable {
+                let (job, done) = self.suspended.get(&id).unwrap().clone();
+                if job.nodes <= self.free_nodes {
+                    let restart = self.restart_secs(&job);
+                    report.cr_overhead_node_secs += restart * job.nodes as f64;
+                    self.free_nodes -= job.nodes;
+                    self.running.push(Running {
+                        started: now + restart,
+                        done_before: done,
+                        job,
+                    });
+                    self.suspended.remove(&id);
+                }
+            }
+
+            if self.running.is_empty()
+                && queue.is_empty()
+                && self.suspended.is_empty()
+                && ei >= events.len()
+            {
+                break;
+            }
+        }
+
+        report.makespan = now;
+        report.realtime_jobs = rt_waits.len() as u32;
+        if !rt_waits.is_empty() {
+            report.rt_wait_mean = rt_waits.iter().sum::<f64>() / rt_waits.len() as f64;
+            report.rt_wait_max = rt_waits.iter().cloned().fold(0.0, f64::max);
+        }
+        report.utilization = if report.makespan > 0.0 {
+            useful / (self.nodes as f64 * report.makespan)
+        } else {
+            0.0
+        };
+        report
+    }
+
+    fn dispatch(
+        &mut self,
+        queue: &mut Vec<(f64, TraceJob)>,
+        now: f64,
+        report: &mut SchedReport,
+        rt_waits: &mut Vec<f64>,
+        _useful: &mut f64,
+    ) {
+        // Realtime jobs first (FIFO among them).
+        let mut i = 0;
+        while i < queue.len() {
+            if queue[i].1.priority != Priority::Realtime {
+                i += 1;
+                continue;
+            }
+            let (enq, job) = queue[i].clone();
+            if job.nodes <= self.free_nodes {
+                queue.remove(i);
+                rt_waits.push(now - enq);
+                self.free_nodes -= job.nodes;
+                self.running.push(Running {
+                    job,
+                    started: now,
+                    done_before: 0.0,
+                });
+                continue;
+            }
+            // Not enough nodes: try preemption.
+            if self.policy == Policy::NoPreemption {
+                i += 1;
+                continue;
+            }
+            let needed = job.nodes - self.free_nodes;
+            // Pick victims: smallest low-priority jobs that cover `needed`
+            // (and, for CkptPreempt, are MANA-enabled).
+            let mut victims: Vec<usize> = (0..self.running.len())
+                .filter(|&k| {
+                    self.running[k].job.priority == Priority::Low
+                        && (self.policy != Policy::CkptPreempt
+                            || self.running[k].job.mana_enabled)
+                })
+                .collect();
+            victims.sort_by_key(|&k| self.running[k].job.nodes);
+            let mut got = 0u32;
+            let mut chosen = Vec::new();
+            for k in victims {
+                if got >= needed {
+                    break;
+                }
+                got += self.running[k].job.nodes;
+                chosen.push(k);
+            }
+            if got < needed {
+                i += 1;
+                continue; // cannot preempt enough
+            }
+            // Evict.
+            let mut delay = 0.0f64;
+            chosen.sort_unstable_by(|a, b| b.cmp(a));
+            for k in chosen {
+                let r = self.running.remove(k);
+                self.free_nodes += r.job.nodes;
+                let done = r.done_before + (now - r.started);
+                match self.policy {
+                    Policy::KillRestart => {
+                        // Work since dispatch is lost; rerun later from the
+                        // last completed point (none).
+                        report.lost_node_secs += done * r.job.nodes as f64;
+                        self.suspended.insert(r.job.id, (r.job, 0.0));
+                    }
+                    Policy::CkptPreempt => {
+                        let c = self.ckpt_secs(&r.job);
+                        delay = delay.max(c);
+                        report.cr_overhead_node_secs += c * r.job.nodes as f64;
+                        self.suspended.insert(r.job.id, (r.job, done));
+                    }
+                    Policy::NoPreemption => unreachable!(),
+                }
+            }
+            let (enq, job) = queue.remove(i);
+            rt_waits.push(now + delay - enq);
+            self.free_nodes -= job.nodes;
+            self.running.push(Running {
+                started: now + delay,
+                done_before: 0.0,
+                job,
+            });
+        }
+
+        // Backfill low-priority jobs FIFO.
+        let mut i = 0;
+        while i < queue.len() {
+            if queue[i].1.priority == Priority::Low && queue[i].1.nodes <= self.free_nodes {
+                let (_, job) = queue.remove(i);
+                self.free_nodes -= job.nodes;
+                self.running.push(Running {
+                    job,
+                    started: now,
+                    done_before: 0.0,
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+/// Generate a NERSC-like mixed trace: long low-priority jobs filling the
+/// machine, with sporadic urgent real-time arrivals. `mana_share` is the
+/// fraction of low-priority cycles that are MANA-enabled (the Fig. 1
+/// top-app share).
+pub fn generate_trace(
+    n_low: u32,
+    n_rt: u32,
+    nodes: u32,
+    mana_share: f64,
+    seed: u64,
+) -> Vec<TraceJob> {
+    let mut rng = Xoshiro256::stream(seed, 0x5c4e);
+    let mut trace = Vec::new();
+    let mut id = 0;
+    for _ in 0..n_low {
+        id += 1;
+        trace.push(TraceJob {
+            id,
+            priority: Priority::Low,
+            nodes: (1 + rng.next_below(nodes as u64 / 4)) as u32,
+            arrival: rng.next_f64() * 600.0,
+            work: 1800.0 + rng.next_exp(3600.0),
+            mem_per_node: 12 << 30,
+            mana_enabled: rng.chance(mana_share),
+        });
+    }
+    for _ in 0..n_rt {
+        id += 1;
+        trace.push(TraceJob {
+            id,
+            priority: Priority::Realtime,
+            nodes: (1 + rng.next_below(nodes as u64 / 2)) as u32,
+            arrival: 1200.0 + rng.next_f64() * 7200.0,
+            work: 300.0 + rng.next_exp(600.0),
+            mem_per_node: 4 << 30,
+            mana_enabled: true,
+        });
+    }
+    let _ = NodeId(0);
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(policy: Policy) -> SchedReport {
+        let trace = generate_trace(24, 6, 64, 0.7, 42);
+        Scheduler::new(64, policy).simulate(&trace)
+    }
+
+    #[test]
+    fn all_policies_complete_the_trace() {
+        for p in [Policy::NoPreemption, Policy::KillRestart, Policy::CkptPreempt] {
+            let r = run(p);
+            assert_eq!(r.realtime_jobs, 6, "{p:?}");
+            assert!(r.makespan > 0.0);
+            assert!(r.utilization > 0.1 && r.utilization <= 1.0, "{p:?}: {r:?}");
+        }
+    }
+
+    #[test]
+    fn ckpt_preemption_cuts_realtime_wait() {
+        let no = run(Policy::NoPreemption);
+        let ck = run(Policy::CkptPreempt);
+        assert!(
+            ck.rt_wait_mean < no.rt_wait_mean * 0.5,
+            "C/R preemption must slash realtime wait: {} vs {}",
+            ck.rt_wait_mean,
+            no.rt_wait_mean
+        );
+    }
+
+    #[test]
+    fn ckpt_preemption_loses_no_work() {
+        let kill = run(Policy::KillRestart);
+        let ck = run(Policy::CkptPreempt);
+        assert!(kill.lost_node_secs > 0.0, "kill policy must lose work");
+        assert_eq!(ck.lost_node_secs, 0.0, "C/R preemption loses nothing");
+        // And its overhead is far below what kill throws away.
+        assert!(ck.cr_overhead_node_secs < kill.lost_node_secs);
+    }
+
+    #[test]
+    fn mana_share_gates_preemptibility() {
+        // With 0% MANA-enabled apps, CkptPreempt degenerates toward
+        // NoPreemption (nothing may be preempted).
+        let trace = generate_trace(24, 6, 64, 0.0, 42);
+        let ck = Scheduler::new(64, Policy::CkptPreempt).simulate(&trace);
+        let trace_all = generate_trace(24, 6, 64, 1.0, 42);
+        let ck_all = Scheduler::new(64, Policy::CkptPreempt).simulate(&trace_all);
+        assert!(
+            ck_all.rt_wait_mean <= ck.rt_wait_mean,
+            "more MANA coverage cannot hurt realtime wait"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run(Policy::CkptPreempt);
+        let b = run(Policy::CkptPreempt);
+        assert_eq!(a.rt_wait_mean, b.rt_wait_mean);
+        assert_eq!(a.makespan, b.makespan);
+    }
+}

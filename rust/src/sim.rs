@@ -1,0 +1,961 @@
+//! Job simulation driver: launch → supersteps → checkpoint → kill →
+//! restart, on the full simulated Cori substrate.
+//!
+//! [`JobSim`] wires everything together: topology, split processes, the
+//! MPI world over the GNI-like fabric, MANA wrappers, the DMTCP-style
+//! coordinator over the control network, the storage tier, and the PJRT
+//! engine for real application compute. Ranks are stepped deterministically
+//! in bulk-synchronous supersteps:
+//!
+//! ```text
+//! superstep k (per rank): recv halos of step k-1 → compute → send halos of k
+//! ```
+//!
+//! Checkpoints land *between* supersteps (MANA's wrapper-boundary safe
+//! points), with halo messages of step k still in flight — which is exactly
+//! what the drain protocol must handle.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::apps::{self, App, StepCtx, HALO_VIRTUAL_BYTES};
+use crate::ckpt::manifest::CkptManifest;
+use crate::ckpt::{image_path, CkptImage, ImageError, SavedPayload, SavedRegion};
+use crate::config::{ComputeMode, RunConfig};
+use crate::coordinator::{CkptFailure, CkptReport, Coordinator, RankState};
+use crate::fs::{FileSystem, FsConfig, FsError, FsKind, WriteReq};
+use crate::launcher::{self, LaunchError};
+use crate::mem::Payload;
+use crate::mpi::comm::{CommRegistry, COMM_WORLD};
+use crate::mpi::MpiWorld;
+use crate::runtime::Engine;
+use crate::simnet::control::{ControlNet, CtrlConfig};
+use crate::simnet::fabric::{Fabric, FabricConfig};
+use crate::splitproc::{SplitConfig, SplitProcess};
+use crate::topology::{RankId, Topology};
+use crate::util::simclock::SimTime;
+use crate::util::{hash_combine};
+use crate::wrappers::{ManaWrappers, WrapperConfig};
+use crate::{log_info, log_warn};
+
+/// Synthetic high address where the drained-message buffer region lives.
+const MSG_BUFFER_BASE: u64 = 0x6f00_0000_0000;
+/// Address of the communicator replay log pseudo-region (rank 0 only).
+const COMM_LOG_ADDR: u64 = 0x6e00_0000_0000;
+/// Bytes reduced by the per-superstep wrapped allreduce (energy/dot).
+const ALLREDUCE_BYTES: u64 = 4096;
+
+/// Path of a rank's *incremental* image (full images use
+/// [`crate::ckpt::image_path`]).
+pub fn incr_image_path(job: &str, rank: RankId) -> String {
+    format!("{job}/ckpt_rank{:05}.inc.mana", rank.0)
+}
+
+/// Restart failure taxonomy (mirrors the paper's restart bugs).
+#[derive(Debug)]
+pub enum RestartError {
+    /// srun argv-packet overflow (no manifest fix).
+    Launch(LaunchError),
+    /// Image failed CRC / decode.
+    CorruptImage(RankId, ImageError),
+    /// Split-process restore failed (fd conflict, region overlap).
+    Proc(RankId, String),
+    /// Storage error (missing image).
+    Fs(String),
+}
+
+impl std::fmt::Display for RestartError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RestartError::Launch(e) => write!(f, "launch: {e}"),
+            RestartError::CorruptImage(r, e) => write!(f, "{r}: corrupt image: {e}"),
+            RestartError::Proc(r, e) => write!(f, "{r}: restore failed: {e}"),
+            RestartError::Fs(e) => write!(f, "storage: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RestartError {}
+
+/// Timing breakdown of a restart (the paper's restart-speedup numbers).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RestartReport {
+    pub startup_secs: f64,
+    pub read_secs: f64,
+    pub total_secs: f64,
+}
+
+/// The live job.
+pub struct JobSim {
+    pub cfg: RunConfig,
+    pub topo: Topology,
+    pub app: Box<dyn App>,
+    pub procs: Vec<SplitProcess>,
+    pub world: MpiWorld,
+    pub wrappers: ManaWrappers,
+    pub times: Vec<SimTime>,
+    pub fs: FileSystem,
+    pub coord: Coordinator,
+    pub engine: Option<Arc<Engine>>,
+    /// Communicators: record-and-replay log survives C/R.
+    pub comms: CommRegistry,
+    /// Observability registry (counters/gauges/summaries).
+    pub metrics: crate::metrics::Metrics,
+    /// Supersteps completed (all ranks agree outside a superstep).
+    pub step: u64,
+    /// Halo messages that were expected but lost (undrained checkpoint).
+    pub lost_halo_events: u64,
+    pub launch_startup_secs: f64,
+}
+
+impl JobSim {
+    // ------------------------------------------------------------- launch
+
+    /// Fresh job launch (not a restart).
+    pub fn launch(cfg: RunConfig, engine: Option<Arc<Engine>>) -> Result<JobSim> {
+        let topo = Topology::new(cfg.ranks, cfg.threads_per_rank);
+        let fs = Self::make_fs(&cfg, &topo);
+        Self::launch_with_fs(cfg, engine, fs)
+    }
+
+    /// Launch against an existing storage tier (preemption flows reuse it).
+    pub fn launch_with_fs(
+        cfg: RunConfig,
+        engine: Option<Arc<Engine>>,
+        fs: FileSystem,
+    ) -> Result<JobSim> {
+        if cfg.compute == ComputeMode::Real {
+            anyhow::ensure!(
+                engine.is_some(),
+                "Real compute mode requires a loaded Engine"
+            );
+        }
+        let topo = Topology::new(cfg.ranks, cfg.threads_per_rank);
+        let argv = vec!["mana_launch".into(), cfg.app.name().into()];
+        let launch = launcher::launch(&topo, cfg.link, &argv)
+            .map_err(|e| anyhow::anyhow!("launch: {e}"))?;
+        log_info!(
+            "sim",
+            "launch {}: {} ranks x {} threads on {} nodes ({:.2}s startup)",
+            cfg.job,
+            cfg.ranks,
+            cfg.threads_per_rank,
+            launch.nodes,
+            launch.startup_secs
+        );
+        log_info!("sim", "{}", topo.mapping_table());
+
+        let app = apps::make_app(cfg.app);
+        let mem_per_rank = cfg.mem_per_rank.unwrap_or(app.default_mem_per_rank());
+        let split_cfg = SplitConfig {
+            os: cfg.os,
+            alloc_policy: cfg.fixes.alloc_policy(),
+            fd_policy: cfg.fixes.fd_policy(),
+            ..SplitConfig::default()
+        };
+        let mut procs = Vec::with_capacity(cfg.ranks as usize);
+        for r in 0..cfg.ranks {
+            let mut p = SplitProcess::launch(RankId(r), split_cfg, cfg.seed)?;
+            app.init(&mut p, cfg.ranks, mem_per_rank)?;
+            procs.push(p);
+        }
+
+        let world = MpiWorld::new(cfg.ranks, Self::make_fabric(&cfg));
+        let wrappers = ManaWrappers::new(
+            WrapperConfig {
+                careful_nonblocking: cfg.fixes.careful_nonblocking,
+            },
+            cfg.ranks,
+        );
+        let coord = Self::make_coordinator(&cfg);
+        let times = vec![SimTime::secs(launch.startup_secs); cfg.ranks as usize];
+
+        // Applications dup WORLD and split node-local communicators at
+        // MPI_Init time; MANA records the calls for restart replay.
+        let mut comms = CommRegistry::new(cfg.ranks);
+        comms.dup(COMM_WORLD).expect("dup WORLD");
+        let node_colors: Vec<i32> = (0..cfg.ranks)
+            .map(|r| topo.node_of(RankId(r)).0 as i32)
+            .collect();
+        comms
+            .split(COMM_WORLD, &node_colors)
+            .expect("node-local split");
+
+        Ok(JobSim {
+            cfg,
+            topo,
+            app,
+            procs,
+            world,
+            wrappers,
+            times,
+            fs,
+            coord,
+            engine,
+            comms,
+            metrics: crate::metrics::Metrics::new(),
+            step: 0,
+            lost_halo_events: 0,
+            launch_startup_secs: launch.startup_secs,
+        })
+    }
+
+    fn make_fs(cfg: &RunConfig, topo: &Topology) -> FileSystem {
+        let mut fscfg = match cfg.fs {
+            FsKind::BurstBuffer => FsConfig::burst_buffer(topo.nodes()),
+            FsKind::Lustre => FsConfig::cscratch(),
+        };
+        if let Some(cap) = cfg.faults.fs_capacity_override {
+            fscfg.capacity = cap;
+        }
+        FileSystem::new(fscfg)
+    }
+
+    fn make_fabric(cfg: &RunConfig) -> Fabric {
+        Fabric::new(FabricConfig {
+            quiescence: cfg.faults.gni_quiescence.clone(),
+            ..FabricConfig::default()
+        })
+    }
+
+    fn make_coordinator(cfg: &RunConfig) -> Coordinator {
+        let ctrl = ControlNet::new(
+            CtrlConfig {
+                keepalive: cfg.fixes.keepalive,
+                loss_prob: cfg.faults.ctrl_loss_prob,
+                disconnect_prob: cfg.faults.ctrl_disconnect_prob,
+                ..CtrlConfig::default()
+            },
+            cfg.seed ^ 0xC00D,
+        );
+        Coordinator::new(ctrl, cfg.ranks, cfg.fixes.locks)
+    }
+
+    // -------------------------------------------------------------- steps
+
+    /// Run `n` supersteps.
+    pub fn run_steps(&mut self, n: u64) -> Result<()> {
+        for _ in 0..n {
+            self.superstep()?;
+        }
+        Ok(())
+    }
+
+    fn superstep(&mut self) -> Result<()> {
+        let ranks = self.cfg.ranks;
+        for r in 0..ranks {
+            let rank = RankId(r);
+            let prev = RankId((r + ranks - 1) % ranks);
+            let next = RankId((r + 1) % ranks);
+            let step = self.procs[r as usize].step;
+
+            // 1. Receive the two halo chunks of the previous superstep.
+            if step > 0 && ranks > 1 {
+                let tag = (step - 1) as u32;
+                for _chunk in 0..2 {
+                    let mut t = self.times[r as usize];
+                    let got = self.wrappers.recv_or_lost(
+                        &mut self.world,
+                        rank,
+                        Some(prev),
+                        Some(tag),
+                        &mut t,
+                    );
+                    self.times[r as usize] = t;
+                    match got {
+                        Some(payload) => {
+                            apps::fold_halo(&mut self.procs[r as usize], &payload)?
+                        }
+                        None => {
+                            self.lost_halo_events += 1;
+                            self.procs[r as usize].corrupted = true;
+                            log_warn!(
+                                "sim",
+                                "{rank}: halo of step {} lost (undrained checkpoint?) — data loss",
+                                step - 1
+                            );
+                        }
+                    }
+                }
+            }
+
+            // 2. Compute.
+            {
+                let proc = &mut self.procs[r as usize];
+                let mut ctx = StepCtx {
+                    rank,
+                    ranks,
+                    proc,
+                    engine: self.engine.as_deref(),
+                    mode: self.cfg.compute,
+                };
+                self.app.compute(&mut ctx)?;
+            }
+            self.times[r as usize].advance(self.app.compute_secs());
+
+            // 3. Send this superstep's two halo chunks (same tag — the
+            //    pattern that trips careless Isend conversion).
+            if ranks > 1 {
+                // Hash the state in place (perf: no clone per rank-step).
+                let state_hash = self.primary_state_hash(r);
+                for chunk in 0..2u8 {
+                    let payload = apps::halo_payload_from_hash(state_hash, step, chunk);
+                    let mut t = self.times[r as usize];
+                    self.wrappers.send(
+                        &mut self.world,
+                        rank,
+                        next,
+                        step as u32,
+                        HALO_VIRTUAL_BYTES,
+                        payload,
+                        &mut t,
+                    );
+                    self.times[r as usize] = t;
+                }
+            }
+            self.procs[r as usize].step += 1;
+        }
+
+        // Every superstep ends with the application's wrapped global
+        // reduction (energy / dot product) — a two-phase collective the
+        // checkpoint protocol must respect.
+        if ranks > 1 {
+            self.wrappers
+                .allreduce(&mut self.world, &mut self.times, ALLREDUCE_BYTES);
+        }
+
+        // Injected lower-half growth events (the large-scale MPI-library
+        // mmap bug) fire on the first K supersteps.
+        if self.step < self.cfg.faults.lower_half_growth_events as u64 {
+            for p in &mut self.procs {
+                p.lower_half_growth()?;
+            }
+        }
+        self.step += 1;
+        self.metrics.inc("supersteps", 1);
+        self.metrics
+            .gauge("virtual_secs", self.now().as_secs());
+        Ok(())
+    }
+
+    fn primary_state_hash(&self, r: u32) -> u64 {
+        let proc = &self.procs[r as usize];
+        for name in ["pos", "x", "chi", "state"] {
+            if let Some(s) = proc.app_state(name) {
+                return crate::util::fnv1a(s);
+            }
+        }
+        crate::util::fnv1a(&[])
+    }
+
+    // --------------------------------------------------------- checkpoint
+
+    /// Run the full MANA checkpoint protocol.
+    pub fn checkpoint(&mut self) -> Result<CkptReport, CkptFailure> {
+        let mut report = CkptReport::default();
+        let t0 = self.now();
+
+        // Phase 1: INTENT over the control plane.
+        let intent_delay = self.coord.broadcast_intent(self.cfg.ranks, t0)?;
+        report.intent_secs = intent_delay;
+        let mut t = t0.after(intent_delay);
+
+        // Fault window: a status update lands right here; without the
+        // locks fix it is interruptible.
+        let interrupt = self.cfg.faults.interrupt_status_update;
+        for r in 0..self.cfg.ranks {
+            self.coord
+                .set_rank_state(RankId(r), RankState::SafePoint, interrupt);
+        }
+        self.coord.check_status_consistent()?;
+
+        // Phase 2: safe points (no outstanding converted requests).
+        for r in 0..self.cfg.ranks {
+            let rank = RankId(r);
+            if !self.wrappers.at_safe_point(rank, self.times[r as usize]) {
+                if let Some(done) = self.wrappers.next_completion(rank) {
+                    self.times[r as usize] = self.times[r as usize].max(done);
+                }
+                self.wrappers.retire_completed(rank, self.times[r as usize]);
+            }
+        }
+
+        // Phase 3: DRAIN (or the legacy drop).
+        let drain_t0 = self.now();
+        if self.cfg.fixes.drain {
+            let drep = self.wrappers.drain_all(&mut self.world, &mut self.times);
+            report.drain_rounds = drep.rounds;
+            report.buffered_msgs = drep.buffered_msgs;
+            debug_assert!(self.world.drained(), "drain postcondition");
+            // Report the balanced counters to the coordinator.
+            for r in 0..self.cfg.ranks {
+                let c = self.world.counters[r as usize];
+                self.coord.record_rank_counts(
+                    RankId(r),
+                    self.procs[r as usize].step,
+                    c.sent_bytes,
+                    c.recv_bytes,
+                );
+            }
+            if !self.coord.counts_balanced()? {
+                // Should be impossible with the drain fix on.
+                return Err(CkptFailure::LostMessages(usize::MAX));
+            }
+        } else {
+            let lost = self.world.drop_inflight();
+            report.lost_messages = lost;
+            self.coord.stats.lost_messages += lost as u64;
+            if lost > 0 {
+                log_warn!(
+                    "coordinator",
+                    "checkpoint without drain dropped {lost} in-flight messages"
+                );
+            }
+        }
+        // Drain is a barrier.
+        let t_sync = self.now();
+        for tt in &mut self.times {
+            *tt = t_sync;
+        }
+        report.drain_secs = t_sync.as_secs() - drain_t0.as_secs();
+        t = t.max(t_sync);
+
+        // Phase 4: GNI quiescence wait.
+        if let Some(end) = self.world.fabric.quiescence_end(t) {
+            report.quiesce_secs = end.as_secs() - t.as_secs();
+            t = end;
+            for tt in &mut self.times {
+                *tt = t;
+            }
+        }
+
+        // Phase 5: WRITE the image wave. Incremental mode: once a full
+        // image exists, write only dirty regions (ParentRef the rest) to a
+        // side file; the manifest tracks which file is current per rank.
+        for r in 0..self.cfg.ranks {
+            self.coord
+                .set_rank_state(RankId(r), RankState::Writing, false);
+        }
+        let incremental = self.cfg.incremental
+            && self
+                .fs
+                .exists(&image_path(&self.cfg.job, RankId(0)));
+        let mut reqs = Vec::with_capacity(self.cfg.ranks as usize);
+        let mut total_virtual = 0u64;
+        for r in 0..self.cfg.ranks {
+            let rank = RankId(r);
+            let img = self.capture_rank_image(r, incremental);
+            total_virtual += img.write_bytes();
+            let path = if incremental {
+                incr_image_path(&self.cfg.job, rank)
+            } else {
+                image_path(&self.cfg.job, rank)
+            };
+            reqs.push(WriteReq {
+                node: self.topo.node_of(rank),
+                path,
+                virtual_bytes: img.write_bytes(),
+                data: img.encode(),
+            });
+        }
+        let io = match self.fs.write_parallel(reqs) {
+            Ok(io) => io,
+            Err(e @ FsError::InsufficientSpace { .. }) => {
+                return Err(CkptFailure::DiskFull(e.to_string()));
+            }
+            Err(e) => return Err(CkptFailure::DiskFull(e.to_string())),
+        };
+        report.write_secs = io.duration;
+        report.image_bytes = total_virtual;
+        t = t.after(io.duration);
+        for tt in &mut self.times {
+            *tt = t;
+        }
+
+        // Full checkpoints reset the dirty tracking (incrementals are
+        // always relative to the last FULL image, so they keep the bits).
+        if !incremental {
+            for p in &mut self.procs {
+                p.aspace.table.clear_dirty(crate::mem::Half::Upper);
+            }
+        }
+
+        // The restart manifest rides the same storage tier.
+        let mut manifest = CkptManifest::new(&self.cfg.job, self.step);
+        for r in 0..self.cfg.ranks {
+            let rank = RankId(r);
+            let path = if incremental {
+                incr_image_path(&self.cfg.job, rank)
+            } else {
+                image_path(&self.cfg.job, rank)
+            };
+            manifest.add(rank, path);
+        }
+        let mdata = manifest.encode();
+        self.fs
+            .write_parallel(vec![WriteReq {
+                node: self.topo.node_of(RankId(0)),
+                path: CkptManifest::manifest_path(&self.cfg.job),
+                virtual_bytes: mdata.len() as u64,
+                data: mdata,
+            }])
+            .map_err(|e| CkptFailure::DiskFull(e.to_string()))?;
+
+        // Phase 6: RESUME.
+        let resume_delay = self.coord.broadcast_intent(self.cfg.ranks, t)?;
+        t = t.after(resume_delay);
+        for r in 0..self.cfg.ranks {
+            self.coord
+                .set_rank_state(RankId(r), RankState::Resumed, false);
+        }
+        for tt in &mut self.times {
+            *tt = t;
+        }
+
+        self.coord.stats.checkpoints += 1;
+        self.coord.stats.drain_rounds += report.drain_rounds as u64;
+        self.coord.stats.buffered_msgs += report.buffered_msgs as u64;
+        report.total_secs = t.as_secs() - t0.as_secs();
+        self.metrics.inc("checkpoints", 1);
+        self.metrics.observe("ckpt.total_secs", report.total_secs);
+        self.metrics.observe("ckpt.write_secs", report.write_secs);
+        self.metrics
+            .observe("ckpt.image_bytes", report.image_bytes as f64);
+        self.metrics
+            .inc("ckpt.buffered_msgs", report.buffered_msgs as u64);
+        log_info!(
+            "coordinator",
+            "checkpoint {} at step {}: {} in {:.2}s (drain {:.3}s, write {:.2}s)",
+            self.cfg.job,
+            self.step,
+            crate::util::bytes::human(report.image_bytes),
+            report.total_secs,
+            report.drain_secs,
+            report.write_secs
+        );
+        Ok(report)
+    }
+
+    /// Capture one rank's image, including the wrapper's drain buffer as a
+    /// dedicated upper-half pseudo-region.
+    fn capture_rank_image(&mut self, r: u32, incremental: bool) -> CkptImage {
+        let rank = RankId(r);
+        let proc = &self.procs[r as usize];
+        let mut img = if incremental {
+            CkptImage::capture_incremental(
+                rank,
+                proc.step,
+                proc.rng.state_bytes(),
+                proc.fds.fds_of(crate::mem::Half::Upper),
+                &proc.aspace.table,
+                &image_path(&self.cfg.job, rank),
+            )
+        } else {
+            proc.checkpoint()
+        };
+        let buf = self.wrappers.encode_buffers(rank);
+        img.regions.push(SavedRegion {
+            addr: MSG_BUFFER_BASE + (r as u64) * 0x1000_0000,
+            vlen: buf.len() as u64,
+            name: "mana.msg_buffer".into(),
+            payload: SavedPayload::Full(Payload::Real(buf)),
+        });
+        // Rank 0 carries the communicator record-and-replay log.
+        if r == 0 {
+            let log = self.comms.encode_log();
+            img.regions.push(SavedRegion {
+                addr: COMM_LOG_ADDR,
+                vlen: log.len() as u64,
+                name: "mana.comm_log".into(),
+                payload: SavedPayload::Full(Payload::Real(log)),
+            });
+        }
+        img
+    }
+
+    // ------------------------------------------------------ kill / restart
+
+    /// Kill the job (scheduler preemption / walltime / failure). The
+    /// storage tier survives; everything else dies with the processes.
+    pub fn kill(self) -> FileSystem {
+        log_info!("sim", "job {} killed at step {}", self.cfg.job, self.step);
+        self.fs
+    }
+
+    /// Restart a job from its checkpoint set on `fs`.
+    pub fn restart_from(
+        cfg: RunConfig,
+        engine: Option<Arc<Engine>>,
+        mut fs: FileSystem,
+    ) -> Result<(JobSim, RestartReport), RestartError> {
+        let topo = Topology::new(cfg.ranks, cfg.threads_per_rank);
+        let mut report = RestartReport::default();
+
+        // srun with the restart argv — the packet-limit crash lives here.
+        let argv = launcher::restart_argv(&cfg.job, cfg.ranks, cfg.fixes.manifest_filenames);
+        let launch = launcher::launch(&topo, cfg.link, &argv).map_err(RestartError::Launch)?;
+        report.startup_secs = launch.startup_secs;
+
+        // Resolve image paths (manifest fix reads one file; legacy argv
+        // carried them directly).
+        let paths: Vec<(crate::topology::NodeId, String)> = if cfg.fixes.manifest_filenames {
+            let (datas, _) = fs
+                .read_parallel(&[(
+                    topo.node_of(RankId(0)),
+                    CkptManifest::manifest_path(&cfg.job),
+                )])
+                .map_err(|e| RestartError::Fs(e.to_string()))?;
+            let manifest = CkptManifest::decode(&datas[0])
+                .ok_or_else(|| RestartError::Fs("bad manifest".into()))?;
+            (0..cfg.ranks)
+                .map(|r| {
+                    let rank = RankId(r);
+                    (
+                        topo.node_of(rank),
+                        manifest
+                            .path_for(rank)
+                            .unwrap_or(&image_path(&cfg.job, rank))
+                            .to_string(),
+                    )
+                })
+                .collect()
+        } else {
+            (0..cfg.ranks)
+                .map(|r| (topo.node_of(RankId(r)), image_path(&cfg.job, RankId(r))))
+                .collect()
+        };
+
+        // Injected image corruption.
+        if let Some((rank, offset)) = cfg.faults.image_bitflip {
+            let path = image_path(&cfg.job, RankId(rank));
+            fs.corrupt_byte(&path, offset);
+        }
+
+        let (datas, io) = fs
+            .read_parallel(&paths)
+            .map_err(|e| RestartError::Fs(e.to_string()))?;
+        report.read_secs = io.duration;
+
+        let split_cfg = SplitConfig {
+            os: cfg.os,
+            alloc_policy: cfg.fixes.alloc_policy(),
+            fd_policy: cfg.fixes.fd_policy(),
+            ..SplitConfig::default()
+        };
+        let mut procs = Vec::with_capacity(cfg.ranks as usize);
+        let mut wrappers = ManaWrappers::new(
+            WrapperConfig {
+                careful_nonblocking: cfg.fixes.careful_nonblocking,
+            },
+            cfg.ranks,
+        );
+        let mut job_step = 0u64;
+        let mut comms = CommRegistry::new(cfg.ranks);
+        for (r, data) in datas.iter().enumerate() {
+            let rank = RankId(r as u32);
+            let mut img = CkptImage::decode(data)
+                .map_err(|e| RestartError::CorruptImage(rank, e))?;
+            // Incremental image: pull and resolve its parent full image.
+            if let Some(parent_path) = img.parent.clone() {
+                let (pdatas, _) = fs
+                    .read_parallel(&[(topo.node_of(rank), parent_path)])
+                    .map_err(|e| RestartError::Fs(e.to_string()))?;
+                let parent = CkptImage::decode(&pdatas[0])
+                    .map_err(|e| RestartError::CorruptImage(rank, e))?;
+                img = crate::ckpt::resolve_incremental(&img, &parent)
+                    .map_err(|e| RestartError::CorruptImage(rank, e))?;
+            }
+            let mut proc = SplitProcess::restart(&img, split_cfg, cfg.seed)
+                .map_err(|e| RestartError::Proc(rank, e.to_string()))?;
+            // Re-inflate the drain buffer and drop its pseudo-region.
+            if let Some(region) = proc.aspace.table.remove_named("mana.msg_buffer") {
+                if let Payload::Real(bytes) = region.payload {
+                    wrappers
+                        .decode_buffers(rank, &bytes)
+                        .ok_or_else(|| {
+                            RestartError::CorruptImage(
+                                rank,
+                                ImageError::Truncated("msg_buffer"),
+                            )
+                        })?;
+                }
+            }
+            // Rank 0's image carries the communicator log: replay it
+            // against the fresh lower-half MPI library.
+            if let Some(region) = proc.aspace.table.remove_named("mana.comm_log") {
+                if let Payload::Real(bytes) = region.payload {
+                    let log = CommRegistry::decode_log(&bytes).ok_or_else(|| {
+                        RestartError::CorruptImage(rank, ImageError::Truncated("comm_log"))
+                    })?;
+                    comms = CommRegistry::replay(cfg.ranks, &log);
+                }
+            }
+            job_step = proc.step;
+            procs.push(proc);
+        }
+
+        let app = apps::make_app(cfg.app);
+        let world = MpiWorld::new(cfg.ranks, Self::make_fabric(&cfg));
+        let mut coord = Self::make_coordinator(&cfg);
+        coord.stats.restarts += 1;
+        report.total_secs = report.startup_secs + report.read_secs;
+        let t0 = SimTime::secs(report.total_secs);
+        log_info!(
+            "sim",
+            "restart {}: {} ranks at step {job_step} in {:.2}s (read {:.2}s)",
+            cfg.job,
+            cfg.ranks,
+            report.total_secs,
+            report.read_secs
+        );
+        let times = vec![t0; cfg.ranks as usize];
+        Ok((
+            JobSim {
+                topo,
+                app,
+                procs,
+                world,
+                wrappers,
+                times,
+                fs,
+                coord,
+                engine,
+                comms,
+                metrics: {
+                    let mut m = crate::metrics::Metrics::new();
+                    m.inc("restarts", 1);
+                    m.observe("restart.read_secs", report.read_secs);
+                    m
+                },
+                step: job_step,
+                lost_halo_events: 0,
+                launch_startup_secs: report.startup_secs,
+                cfg,
+            },
+            report,
+        ))
+    }
+
+    // ------------------------------------------------------------ queries
+
+    /// Global virtual time (slowest rank).
+    pub fn now(&self) -> SimTime {
+        self.times
+            .iter()
+            .fold(SimTime::ZERO, |a, &t| a.max(t))
+    }
+
+    /// Combined checkpointable-state fingerprint (C/R determinism checks).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0x4d414e41u64; // "MANA"
+        for p in &self.procs {
+            h = hash_combine(h, p.fingerprint());
+        }
+        h
+    }
+
+    /// Did any rank detect memory/data corruption?
+    pub fn any_corruption(&self) -> bool {
+        self.procs.iter().any(|p| p.corrupted)
+            || self.wrappers.corrupted_sends > 0
+            || self.lost_halo_events > 0
+    }
+
+    /// Aggregate upper-half memory across ranks (the Fig. 2 blue line).
+    pub fn aggregate_memory(&self) -> u64 {
+        self.procs.iter().map(|p| p.upper_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AppKind;
+
+    fn quick_cfg(ranks: u32, steps: u64) -> RunConfig {
+        let mut cfg = RunConfig::new(AppKind::Synthetic, ranks);
+        cfg.steps = steps;
+        cfg.mem_per_rank = Some(1 << 20); // keep tests light
+        cfg
+    }
+
+    #[test]
+    fn run_steps_advances_state_and_time() {
+        let mut sim = JobSim::launch(quick_cfg(4, 0), None).unwrap();
+        let f0 = sim.fingerprint();
+        let t0 = sim.now();
+        sim.run_steps(3).unwrap();
+        assert_ne!(sim.fingerprint(), f0);
+        assert!(sim.now() > t0);
+        assert_eq!(sim.step, 3);
+        assert!(!sim.any_corruption());
+    }
+
+    #[test]
+    fn checkpoint_between_steps_succeeds() {
+        let mut sim = JobSim::launch(quick_cfg(4, 0), None).unwrap();
+        sim.run_steps(2).unwrap();
+        let rep = sim.checkpoint().unwrap();
+        assert!(rep.total_secs > 0.0);
+        assert!(rep.image_bytes > 0);
+        // Step-2 halos were in flight: the drain must have buffered them.
+        assert!(rep.buffered_msgs > 0, "expected in-flight halos drained");
+        assert_eq!(rep.lost_messages, 0);
+        assert!(sim.fs.exists("synthetic-4r/ckpt_rank00000.mana"));
+    }
+
+    #[test]
+    fn ckpt_restart_resumes_bitwise_identical() {
+        // Continuous run.
+        let mut cont = JobSim::launch(quick_cfg(4, 0), None).unwrap();
+        cont.run_steps(6).unwrap();
+        let want = cont.fingerprint();
+
+        // Interrupted run: 3 steps, ckpt, kill, restart, 3 more.
+        let mut sim = JobSim::launch(quick_cfg(4, 0), None).unwrap();
+        sim.run_steps(3).unwrap();
+        sim.checkpoint().unwrap();
+        let cfg = sim.cfg.clone();
+        let fs = sim.kill();
+        let (mut resumed, rep) = JobSim::restart_from(cfg, None, fs).unwrap();
+        assert_eq!(resumed.step, 3);
+        assert!(rep.total_secs > 0.0);
+        resumed.run_steps(3).unwrap();
+        assert_eq!(
+            resumed.fingerprint(),
+            want,
+            "paper claim: resumed run generates exactly the same results"
+        );
+        assert!(!resumed.any_corruption());
+    }
+
+    #[test]
+    fn undrained_checkpoint_loses_messages_and_corrupts_restart() {
+        let mut cfg = quick_cfg(4, 0);
+        cfg.fixes.drain = false;
+        let mut sim = JobSim::launch(cfg, None).unwrap();
+        sim.run_steps(3).unwrap();
+        let rep = sim.checkpoint().unwrap();
+        assert!(rep.lost_messages > 0, "in-flight halos must be dropped");
+        let cfg = sim.cfg.clone();
+        let fs = sim.kill();
+        let (mut resumed, _) = JobSim::restart_from(cfg, None, fs).unwrap();
+        resumed.run_steps(2).unwrap();
+        assert!(
+            resumed.lost_halo_events > 0,
+            "lost in-flight messages surface as data loss after restart"
+        );
+        assert!(resumed.any_corruption());
+    }
+
+    #[test]
+    fn single_rank_job_has_no_halo_traffic() {
+        let mut sim = JobSim::launch(quick_cfg(1, 0), None).unwrap();
+        sim.run_steps(4).unwrap();
+        assert_eq!(sim.world.total_sent_bytes(), 0);
+        let rep = sim.checkpoint().unwrap();
+        assert_eq!(rep.buffered_msgs, 0);
+    }
+
+    #[test]
+    fn incremental_checkpoint_writes_only_dirty_bytes() {
+        let mut cfg = quick_cfg(4, 0);
+        cfg.incremental = true;
+        cfg.mem_per_rank = Some(64 << 20); // 64 MiB heap, tiny live state
+        let mut sim = JobSim::launch(cfg, None).unwrap();
+        sim.run_steps(1).unwrap();
+        let full = sim.checkpoint().unwrap();
+        sim.run_steps(1).unwrap();
+        let inc = sim.checkpoint().unwrap();
+        assert!(
+            inc.image_bytes < full.image_bytes / 100,
+            "incremental ({}) should be tiny vs full ({})",
+            inc.image_bytes,
+            full.image_bytes
+        );
+        assert!(inc.write_secs < full.write_secs);
+    }
+
+    #[test]
+    fn incremental_restart_is_bitwise_identical() {
+        let mut cfg = quick_cfg(4, 0);
+        cfg.incremental = true;
+        let mut cont = JobSim::launch(cfg.clone(), None).unwrap();
+        cont.run_steps(6).unwrap();
+        let want = cont.fingerprint();
+
+        let mut sim = JobSim::launch(cfg.clone(), None).unwrap();
+        sim.run_steps(2).unwrap();
+        sim.checkpoint().unwrap(); // full
+        sim.run_steps(2).unwrap();
+        sim.checkpoint().unwrap(); // incremental
+        let fs = sim.kill();
+        let (mut resumed, _) = JobSim::restart_from(cfg, None, fs).unwrap();
+        assert_eq!(resumed.step, 4, "must resume from the incremental");
+        resumed.run_steps(2).unwrap();
+        assert_eq!(resumed.fingerprint(), want);
+        assert!(!resumed.any_corruption());
+    }
+
+    #[test]
+    fn metrics_record_steps_and_checkpoints() {
+        let mut sim = JobSim::launch(quick_cfg(4, 0), None).unwrap();
+        sim.run_steps(3).unwrap();
+        sim.checkpoint().unwrap();
+        assert_eq!(sim.metrics.counter("supersteps"), 3);
+        assert_eq!(sim.metrics.counter("checkpoints"), 1);
+        let s = sim.metrics.summary("ckpt.total_secs");
+        assert_eq!(s.count, 1);
+        assert!(s.mean() > 0.0);
+        let snap = sim.metrics.snapshot().to_string();
+        assert!(snap.contains("\"supersteps\":3"), "{snap}");
+    }
+
+    #[test]
+    fn restart_on_different_node_layout_is_identical() {
+        // MANA is network/topology-agnostic: the same 8 ranks can restart
+        // packed differently (8 threads/rank -> 8 ranks/node vs 32
+        // threads/rank -> 2 ranks/node) and still resume bitwise.
+        let mut cfg = quick_cfg(8, 0);
+        let mut cont = JobSim::launch(cfg.clone(), None).unwrap();
+        cont.run_steps(6).unwrap();
+        let want = cont.fingerprint();
+
+        let mut sim = JobSim::launch(cfg.clone(), None).unwrap();
+        sim.run_steps(3).unwrap();
+        sim.checkpoint().unwrap();
+        let fs = sim.kill();
+        // Restart with a different rank-per-node packing.
+        cfg.threads_per_rank = 32;
+        let (mut resumed, _) = JobSim::restart_from(cfg, None, fs).unwrap();
+        assert_eq!(resumed.topo.ranks_per_node(), 2);
+        resumed.run_steps(3).unwrap();
+        assert_eq!(resumed.fingerprint(), want);
+        assert!(!resumed.any_corruption());
+    }
+
+    #[test]
+    fn communicators_survive_restart_via_replay() {
+        let mut sim = JobSim::launch(quick_cfg(8, 0), None).unwrap();
+        let fp = sim.comms.fingerprint();
+        assert!(sim.comms.len() >= 3, "WORLD + dup + node comm(s)");
+        sim.run_steps(2).unwrap();
+        sim.checkpoint().unwrap();
+        let cfg = sim.cfg.clone();
+        let fs = sim.kill();
+        let (resumed, _) = JobSim::restart_from(cfg, None, fs).unwrap();
+        assert_eq!(
+            resumed.comms.fingerprint(),
+            fp,
+            "record-and-replay must rebuild an isomorphic communicator set"
+        );
+    }
+
+    #[test]
+    fn aggregate_memory_counts_all_ranks() {
+        let sim = JobSim::launch(quick_cfg(8, 0), None).unwrap();
+        let agg = sim.aggregate_memory();
+        assert!(agg >= 8 * (1 << 20));
+    }
+}

@@ -1,0 +1,249 @@
+//! Control-plane TCP model (coordinator <-> ranks) with KeepAlive.
+//!
+//! Reproduces the paper's congestion bug class: without TCP KeepAlive, a
+//! lost packet or an idle-connection drop silently kills the coordinator's
+//! link to a rank, and the checkpoint protocol hangs; with KeepAlive the
+//! connection is probed and re-established, costing only retry latency.
+
+use crate::topology::RankId;
+use crate::util::prng::Xoshiro256;
+use crate::util::simclock::SimTime;
+use crate::{log_debug, log_warn};
+
+/// Control-network behaviour knobs (fault injection enters here).
+#[derive(Clone, Debug)]
+pub struct CtrlConfig {
+    /// The paper's fix toggle.
+    pub keepalive: bool,
+    /// Per-message loss probability under congestion.
+    pub loss_prob: f64,
+    /// Probability an idle connection was dropped since last use.
+    pub disconnect_prob: f64,
+    /// One-way latency, seconds.
+    pub latency: f64,
+    /// KeepAlive probe interval / retry timeout, seconds.
+    pub keepalive_interval: f64,
+    /// Max retries before declaring the rank unreachable.
+    pub max_retries: u32,
+}
+
+impl Default for CtrlConfig {
+    fn default() -> Self {
+        CtrlConfig {
+            keepalive: true,
+            loss_prob: 0.0,
+            disconnect_prob: 0.0,
+            latency: 0.0002, // 200 us management-net RTT/2
+            keepalive_interval: 0.5,
+            max_retries: 8,
+        }
+    }
+}
+
+/// Delivery failure.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CtrlError {
+    /// Message lost and KeepAlive disabled: the rank never hears it.
+    Lost { rank: RankId },
+    /// Connection dropped and never repaired (KeepAlive disabled).
+    Disconnected { rank: RankId },
+    /// KeepAlive enabled but retries exhausted (pathological loss).
+    Unreachable { rank: RankId, retries: u32 },
+}
+
+impl std::fmt::Display for CtrlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CtrlError::Lost { rank } => write!(f, "control msg to {rank} lost (no keepalive)"),
+            CtrlError::Disconnected { rank } => {
+                write!(f, "control connection to {rank} dropped (no keepalive)")
+            }
+            CtrlError::Unreachable { rank, retries } => {
+                write!(f, "{rank} unreachable after {retries} keepalive retries")
+            }
+        }
+    }
+}
+
+/// Per-run delivery statistics (reported in the reliability bench).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CtrlStats {
+    pub sent: u64,
+    pub lost: u64,
+    pub reconnects: u64,
+    pub retries: u64,
+}
+
+/// The coordinator's control network.
+#[derive(Clone, Debug)]
+pub struct ControlNet {
+    pub cfg: CtrlConfig,
+    rng: Xoshiro256,
+    pub stats: CtrlStats,
+}
+
+impl ControlNet {
+    pub fn new(cfg: CtrlConfig, seed: u64) -> Self {
+        ControlNet {
+            cfg,
+            rng: Xoshiro256::stream(seed, 0xC7A1),
+            stats: CtrlStats::default(),
+        }
+    }
+
+    /// Send one control message to a rank at virtual time `now`.
+    ///
+    /// Returns the delivery delay in seconds, or the failure that the
+    /// missing-KeepAlive configuration produces.
+    pub fn send(&mut self, to: RankId, _now: SimTime) -> Result<f64, CtrlError> {
+        self.stats.sent += 1;
+        let mut delay = self.cfg.latency;
+
+        // Idle-connection drop?
+        if self.rng.chance(self.cfg.disconnect_prob) {
+            if !self.cfg.keepalive {
+                log_warn!("ctrl", "connection to {to} found dead; no keepalive -> hang");
+                return Err(CtrlError::Disconnected { rank: to });
+            }
+            // KeepAlive noticed the dead peer and reconnected.
+            self.stats.reconnects += 1;
+            delay += self.cfg.keepalive_interval;
+            log_debug!("ctrl", "keepalive reconnected {to}");
+        }
+
+        // Packet loss (with retries only under KeepAlive).
+        let mut attempt = 0;
+        while self.rng.chance(self.cfg.loss_prob) {
+            self.stats.lost += 1;
+            if !self.cfg.keepalive {
+                log_warn!("ctrl", "packet to {to} lost; no keepalive -> silent");
+                return Err(CtrlError::Lost { rank: to });
+            }
+            attempt += 1;
+            self.stats.retries += 1;
+            if attempt > self.cfg.max_retries {
+                return Err(CtrlError::Unreachable {
+                    rank: to,
+                    retries: attempt - 1,
+                });
+            }
+            delay += self.cfg.keepalive_interval;
+        }
+        Ok(delay)
+    }
+
+    /// Broadcast to many ranks; returns per-rank delays or the first error.
+    pub fn broadcast(
+        &mut self,
+        ranks: impl Iterator<Item = RankId>,
+        now: SimTime,
+    ) -> Result<Vec<(RankId, f64)>, CtrlError> {
+        let mut out = Vec::new();
+        for r in ranks {
+            let d = self.send(r, now)?;
+            out.push((r, d));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lossy(keepalive: bool, loss: f64, disc: f64) -> ControlNet {
+        ControlNet::new(
+            CtrlConfig {
+                keepalive,
+                loss_prob: loss,
+                disconnect_prob: disc,
+                ..CtrlConfig::default()
+            },
+            42,
+        )
+    }
+
+    #[test]
+    fn clean_network_delivers_fast() {
+        let mut net = lossy(false, 0.0, 0.0);
+        for r in 0..100 {
+            let d = net.send(RankId(r), SimTime::ZERO).unwrap();
+            assert!((d - net.cfg.latency).abs() < 1e-12);
+        }
+        assert_eq!(net.stats.lost, 0);
+    }
+
+    #[test]
+    fn loss_without_keepalive_fails() {
+        let mut net = lossy(false, 0.3, 0.0);
+        let mut failures = 0;
+        for r in 0..200 {
+            if net.send(RankId(r), SimTime::ZERO).is_err() {
+                failures += 1;
+            }
+        }
+        assert!(failures > 20, "expected many losses, got {failures}");
+    }
+
+    #[test]
+    fn loss_with_keepalive_retries_through() {
+        let mut net = lossy(true, 0.3, 0.0);
+        let mut slow = 0;
+        for r in 0..200 {
+            let d = net
+                .send(RankId(r), SimTime::ZERO)
+                .expect("keepalive must mask 30% loss");
+            if d > net.cfg.latency {
+                slow += 1;
+            }
+        }
+        assert!(slow > 20, "retries should add latency sometimes");
+        assert!(net.stats.retries > 0);
+    }
+
+    #[test]
+    fn disconnect_without_keepalive_fails_with_ok() {
+        let mut bad = lossy(false, 0.0, 0.5);
+        let mut good = lossy(true, 0.0, 0.5);
+        let mut bad_fail = 0;
+        for r in 0..100 {
+            if bad.send(RankId(r), SimTime::ZERO).is_err() {
+                bad_fail += 1;
+            }
+            good.send(RankId(r), SimTime::ZERO).expect("keepalive reconnects");
+        }
+        assert!(bad_fail > 10);
+        assert!(good.stats.reconnects > 10);
+    }
+
+    #[test]
+    fn pathological_loss_exhausts_retries() {
+        let mut net = lossy(true, 1.0, 0.0);
+        match net.send(RankId(0), SimTime::ZERO) {
+            Err(CtrlError::Unreachable { retries, .. }) => {
+                assert_eq!(retries, net.cfg.max_retries)
+            }
+            other => panic!("expected Unreachable, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn broadcast_stops_at_first_error() {
+        let mut net = lossy(false, 1.0, 0.0);
+        let err = net
+            .broadcast((0..4).map(RankId), SimTime::ZERO)
+            .unwrap_err();
+        assert!(matches!(err, CtrlError::Lost { .. }));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let mut net = lossy(true, 0.2, 0.1);
+            (0..50)
+                .map(|r| net.send(RankId(r), SimTime::ZERO).unwrap())
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

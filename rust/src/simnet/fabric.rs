@@ -1,0 +1,136 @@
+//! Data-plane fabric model (Cray-GNI-like) with quiescence windows.
+//!
+//! MPI messages ride this fabric. Delivery time is latency + size/bandwidth,
+//! *pushed past* any quiescence window: the Cray GNI network periodically
+//! pauses traffic while reconfiguring itself ("network delays due to
+//! quiescence of the Cray GNI network reconfiguring itself brought
+//! additional bugs to the surface") — modeled as closed intervals during
+//! which no message can complete delivery.
+
+use crate::util::simclock::SimTime;
+
+/// Fabric parameters (Aries-like defaults).
+#[derive(Clone, Debug)]
+pub struct FabricConfig {
+    /// One-way small-message latency, seconds.
+    pub latency: f64,
+    /// Per-link bandwidth, bytes/s.
+    pub bandwidth: f64,
+    /// GNI quiescence windows: (start, end) in virtual seconds. Messages in
+    /// flight during a window complete at window end + residual.
+    pub quiescence: Vec<(f64, f64)>,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig {
+            latency: 1.3e-6,    // ~1.3 us Aries
+            bandwidth: 8.0e9,   // ~8 GB/s injection
+            quiescence: Vec::new(),
+        }
+    }
+}
+
+/// The fabric: pure function of config (stateless, deterministic).
+#[derive(Clone, Debug, Default)]
+pub struct Fabric {
+    pub cfg: FabricConfig,
+}
+
+impl Fabric {
+    pub fn new(cfg: FabricConfig) -> Self {
+        Fabric { cfg }
+    }
+
+    /// When does a message of `bytes` sent at `sent` arrive?
+    pub fn delivery_time(&self, sent: SimTime, bytes: u64) -> SimTime {
+        let mut t = sent.as_secs() + self.cfg.latency + bytes as f64 / self.cfg.bandwidth;
+        // Push past quiescence windows (sorted or not; iterate until fixed).
+        let mut moved = true;
+        while moved {
+            moved = false;
+            for &(start, end) in &self.cfg.quiescence {
+                if t > start && t <= end {
+                    t = end + (t - start).min(self.cfg.latency) + self.cfg.latency;
+                    moved = true;
+                }
+            }
+        }
+        SimTime::secs(t)
+    }
+
+    /// Is the fabric quiescing at time `t`? (The coordinator's drain phase
+    /// polls this: a checkpoint during quiescence must wait.)
+    pub fn quiescing_at(&self, t: SimTime) -> bool {
+        self.cfg
+            .quiescence
+            .iter()
+            .any(|&(s, e)| t.as_secs() >= s && t.as_secs() < e)
+    }
+
+    /// End of the quiescence window covering `t`, if any.
+    pub fn quiescence_end(&self, t: SimTime) -> Option<SimTime> {
+        self.cfg
+            .quiescence
+            .iter()
+            .filter(|&&(s, e)| t.as_secs() >= s && t.as_secs() < e)
+            .map(|&(_, e)| SimTime::secs(e))
+            .fold(None, |acc, e| {
+                Some(acc.map_or(e, |a: SimTime| a.max(e)))
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_message_latency_bound() {
+        let f = Fabric::default();
+        let t = f.delivery_time(SimTime::ZERO, 8);
+        assert!(t.as_secs() < 1e-5, "{t:?}");
+        assert!(t.as_secs() > f.cfg.latency);
+    }
+
+    #[test]
+    fn large_message_bandwidth_bound() {
+        let f = Fabric::default();
+        let t = f.delivery_time(SimTime::ZERO, 8_000_000_000);
+        assert!((t.as_secs() - 1.0).abs() < 0.01, "{t:?}"); // ~1s at 8GB/s
+    }
+
+    #[test]
+    fn delivery_monotone_in_send_time() {
+        let f = Fabric::default();
+        let t1 = f.delivery_time(SimTime::secs(1.0), 1000);
+        let t2 = f.delivery_time(SimTime::secs(2.0), 1000);
+        assert!(t2 > t1);
+    }
+
+    #[test]
+    fn quiescence_delays_delivery() {
+        let f = Fabric::new(FabricConfig {
+            quiescence: vec![(1.0, 3.0)],
+            ..FabricConfig::default()
+        });
+        // Message would arrive at ~2.0 -> pushed past 3.0.
+        let t = f.delivery_time(SimTime::secs(2.0), 8);
+        assert!(t.as_secs() >= 3.0, "{t:?}");
+        // Message arriving before the window is unaffected.
+        let t2 = f.delivery_time(SimTime::secs(0.5), 8);
+        assert!(t2.as_secs() < 1.0);
+    }
+
+    #[test]
+    fn quiescing_query() {
+        let f = Fabric::new(FabricConfig {
+            quiescence: vec![(1.0, 3.0), (5.0, 6.0)],
+            ..FabricConfig::default()
+        });
+        assert!(f.quiescing_at(SimTime::secs(2.0)));
+        assert!(!f.quiescing_at(SimTime::secs(4.0)));
+        assert_eq!(f.quiescence_end(SimTime::secs(5.5)).unwrap().as_secs(), 6.0);
+        assert!(f.quiescence_end(SimTime::secs(4.0)).is_none());
+    }
+}

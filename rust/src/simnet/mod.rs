@@ -1,0 +1,15 @@
+//! Simulated networks: the DMTCP control plane and the Cray-GNI-like data
+//! fabric.
+//!
+//! Two distinct networks, matching the paper's failure taxonomy:
+//!
+//! * [`control`] — the coordinator's TCP connections to every rank.
+//!   "Network congestion on the production machine at times caused packet
+//!   losses and disconnects. The TCP KeepAlive option was added to solve
+//!   this problem."
+//! * [`fabric`] — the high-speed interconnect MPI rides on. "Network delays
+//!   due to quiescence of the Cray GNI network reconfiguring itself brought
+//!   additional bugs to the surface."
+
+pub mod control;
+pub mod fabric;

@@ -1,0 +1,334 @@
+//! The split process: one MPI rank as MANA sees it.
+//!
+//! A [`SplitProcess`] owns a rank's address space (upper + lower halves),
+//! its fd registry, its application PRNG and step counter. Checkpoint
+//! captures the upper half into a [`CkptImage`]; restart builds a *fresh*
+//! lower half (the "trivial MPI application" of the paper) and restores the
+//! upper half into it — the two restart-time conflicts the paper debugged
+//! (address squatting, fd collision) surface exactly here.
+
+use anyhow::{bail, Context, Result};
+
+use crate::ckpt::CkptImage;
+use crate::fdreg::{FdPolicy, FdRegistry};
+use crate::mem::{AddressSpace, AllocPolicy, Half, OsVersion, Payload};
+use crate::topology::RankId;
+use crate::util::prng::Xoshiro256;
+use crate::log_debug;
+
+/// Configuration shared by all ranks of a job.
+#[derive(Clone, Copy, Debug)]
+pub struct SplitConfig {
+    pub os: OsVersion,
+    pub alloc_policy: AllocPolicy,
+    pub fd_policy: FdPolicy,
+    /// Lower-half core size (library text/data, GNI buffers).
+    pub lower_core_bytes: u64,
+    /// Eager-buffer pool the MPI library mmaps lazily at scale (the
+    /// "new memory regions for message exchange at runtime" bug).
+    pub eager_pool_bytes: u64,
+}
+
+impl Default for SplitConfig {
+    fn default() -> Self {
+        SplitConfig {
+            os: OsVersion::Cle7,
+            alloc_policy: AllocPolicy::NoReplace,
+            fd_policy: FdPolicy::Reserved,
+            lower_core_bytes: 64 << 20,
+            eager_pool_bytes: 32 << 20,
+        }
+    }
+}
+
+/// One simulated rank process under MANA.
+#[derive(Clone, Debug)]
+pub struct SplitProcess {
+    pub rank: RankId,
+    pub cfg: SplitConfig,
+    pub aspace: AddressSpace,
+    pub fds: FdRegistry,
+    /// Application PRNG (checkpointed state).
+    pub rng: Xoshiro256,
+    /// Application outer-step counter (checkpointed).
+    pub step: u64,
+    /// Set when a latent memory corruption has been detected.
+    pub corrupted: bool,
+}
+
+impl SplitProcess {
+    /// Launch a fresh rank: lower half first (as the real loader does),
+    /// then the application registers upper-half regions.
+    pub fn launch(rank: RankId, cfg: SplitConfig, seed: u64) -> Result<Self> {
+        let mut aspace = AddressSpace::new(cfg.os, cfg.alloc_policy);
+        // Lower-half core: MANA runtime + MPI + libc.
+        aspace
+            .alloc(cfg.lower_core_bytes, Half::Lower, "lh_core", Payload::Zero)
+            .map_err(|e| anyhow::anyhow!("lower-half map failed: {e}"))?;
+        let mut fds = FdRegistry::new(cfg.fd_policy);
+        // The lower half always owns the coordinator socket.
+        fds.open(Half::Lower, "coord.socket");
+        Ok(SplitProcess {
+            rank,
+            cfg,
+            aspace,
+            fds,
+            rng: Xoshiro256::stream(seed, rank.0 as u64),
+            step: 0,
+            corrupted: false,
+        })
+    }
+
+    /// Register an application (upper-half) region.
+    pub fn map_app_region(&mut self, name: &str, vlen: u64, payload: Payload) -> Result<u64> {
+        self.aspace
+            .alloc(vlen, Half::Upper, name, payload)
+            .map_err(|e| anyhow::anyhow!("app map failed: {e}"))
+    }
+
+    /// The large-scale bug: the MPI library maps a new eager-message pool
+    /// at runtime. Under the legacy fixed-address policy this can land on
+    /// top of upper-half memory; the Lesson-1 runtime check flags it.
+    pub fn lower_half_growth(&mut self) -> Result<()> {
+        self.aspace
+            .alloc(
+                self.cfg.eager_pool_bytes,
+                Half::Lower,
+                "mpi.eager_pool",
+                Payload::Zero,
+            )
+            .map_err(|e| anyhow::anyhow!("eager pool map failed: {e}"))?;
+        if !self.aspace.table.check_invariants().is_empty() {
+            self.corrupted = true;
+        }
+        Ok(())
+    }
+
+    /// Update the real payload of an app region (compute state evolved).
+    pub fn store_app_state(&mut self, name: &str, data: Vec<u8>) -> Result<()> {
+        let full = format!("mana.{name}");
+        let region = self
+            .aspace
+            .table
+            .get_mut(&full)
+            .with_context(|| format!("no app region {full}"))?;
+        region.payload = Payload::Real(data);
+        region.dirty = true;
+        Ok(())
+    }
+
+    pub fn app_state(&self, name: &str) -> Option<&[u8]> {
+        match &self.aspace.table.get(&format!("mana.{name}"))?.payload {
+            Payload::Real(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Open an application-level fd (upper half).
+    pub fn open_app_fd(&mut self, name: &str) -> u32 {
+        self.fds.open(Half::Upper, name)
+    }
+
+    /// Checkpoint: capture the upper half.
+    pub fn checkpoint(&self) -> CkptImage {
+        CkptImage::capture(
+            self.rank,
+            self.step,
+            self.rng.state_bytes(),
+            self.fds.fds_of(Half::Upper),
+            &self.aspace.table,
+        )
+    }
+
+    /// Restart from an image: fresh process, trivial lower half, then
+    /// restore. This is where the paper's two restart conflicts surface.
+    pub fn restart(image: &CkptImage, cfg: SplitConfig, seed: u64) -> Result<Self> {
+        // The trivial MPI application boots a brand-new lower half.
+        let mut proc = SplitProcess::launch(image.rank, cfg, seed)?;
+        // The restarter holds the image file open while restoring — one
+        // more lower-half descriptor than the original launch had, which is
+        // precisely how the legacy shared-pool policy collides with
+        // checkpointed upper-half fd numbers.
+        proc.fds.open(Half::Lower, "restart.img");
+        match cfg.alloc_policy {
+            AllocPolicy::NoReplace => {
+                // The fix: MANA reads the image header first and *reserves*
+                // the checkpointed ranges (restores them) before the trivial
+                // app's MPI library can mmap anything into them.
+                for r in &image.regions {
+                    proc.aspace
+                        .restore_at(r.to_region())
+                        .map_err(|e| anyhow::anyhow!("restart: {e}"))?;
+                }
+                proc.lower_half_growth()
+                    .context("restart: trivial app lower-half init")?;
+            }
+            AllocPolicy::FixedLegacy => {
+                // The original behaviour: the lower half initializes blind,
+                // then the restore collides with whatever it mapped — the
+                // paper's restart-time overlap.
+                proc.lower_half_growth()
+                    .context("restart: trivial app lower-half init")?;
+                for r in &image.regions {
+                    proc.aspace
+                        .restore_at(r.to_region())
+                        .map_err(|e| anyhow::anyhow!("restart: {e}"))?;
+                }
+            }
+        }
+        // Re-claim upper-half fds.
+        for (fd, name) in &image.upper_fds {
+            if let Err(e) = proc.fds.claim(*fd, name) {
+                bail!("restart: {e}");
+            }
+        }
+        proc.step = image.step;
+        proc.rng = Xoshiro256::from_state_bytes(&image.rng_state);
+        log_debug!(
+            "splitproc",
+            "{} restored at step {} ({} regions, {} fds)",
+            image.rank,
+            image.step,
+            image.regions.len(),
+            image.upper_fds.len()
+        );
+        Ok(proc)
+    }
+
+    /// Fingerprint of the checkpointable state (determinism checks).
+    pub fn fingerprint(&self) -> u64 {
+        use crate::util::{fnv1a, hash_combine};
+        let mut h = hash_combine(self.step, fnv1a(&self.rng.state_bytes()));
+        h = hash_combine(h, self.aspace.table.upper_fingerprint());
+        h
+    }
+
+    /// Aggregate upper-half footprint (what a checkpoint will write).
+    pub fn upper_bytes(&self) -> u64 {
+        self.aspace.table.total_bytes(Half::Upper)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_fixed_legacy() -> SplitConfig {
+        SplitConfig {
+            alloc_policy: AllocPolicy::FixedLegacy,
+            fd_policy: FdPolicy::Legacy,
+            ..SplitConfig::default()
+        }
+    }
+
+    #[test]
+    fn launch_and_map_regions() {
+        let mut p = SplitProcess::launch(RankId(0), SplitConfig::default(), 1).unwrap();
+        p.map_app_region("pos", 1 << 20, Payload::Real(vec![1, 2])).unwrap();
+        p.map_app_region("heap", 1 << 30, Payload::Pattern(9)).unwrap();
+        assert_eq!(p.upper_bytes(), (1 << 20) + (1 << 30));
+        assert!(p.aspace.table.check_invariants().is_empty());
+    }
+
+    #[test]
+    fn checkpoint_restart_roundtrip_preserves_state() {
+        let cfg = SplitConfig::default();
+        let mut p = SplitProcess::launch(RankId(2), cfg, 7).unwrap();
+        p.map_app_region("state", 4096, Payload::Real(vec![42; 16])).unwrap();
+        p.open_app_fd("traj.xtc");
+        p.step = 99;
+        for _ in 0..13 {
+            p.rng.next_u64();
+        }
+        let fp = p.fingerprint();
+
+        let img = p.checkpoint();
+        let bytes = img.encode();
+        let decoded = CkptImage::decode(&bytes).unwrap();
+        let restored = SplitProcess::restart(&decoded, cfg, 7).unwrap();
+
+        assert_eq!(restored.step, 99);
+        assert_eq!(restored.fingerprint(), fp, "bitwise state identity");
+        assert_eq!(restored.app_state("state").unwrap(), &[42u8; 16][..]);
+    }
+
+    #[test]
+    fn restored_rng_continues_identically() {
+        let cfg = SplitConfig::default();
+        let mut p = SplitProcess::launch(RankId(0), cfg, 3).unwrap();
+        for _ in 0..5 {
+            p.rng.next_u64();
+        }
+        let img = p.checkpoint();
+        let mut q = SplitProcess::restart(&img, cfg, 3).unwrap();
+        let mut orig = p.rng.clone();
+        for _ in 0..50 {
+            assert_eq!(orig.next_u64(), q.rng.next_u64());
+        }
+    }
+
+    #[test]
+    fn legacy_fd_policy_breaks_restart() {
+        let cfg = cfg_fixed_legacy();
+        // Use NoReplace alloc to isolate the fd failure.
+        let cfg = SplitConfig {
+            alloc_policy: AllocPolicy::NoReplace,
+            ..cfg
+        };
+        let mut p = SplitProcess::launch(RankId(0), cfg, 1).unwrap();
+        p.map_app_region("s", 4096, Payload::Zero).unwrap();
+        // Upper half opens a file; under Legacy it gets fd 4 (3 is the
+        // coordinator socket). At restart, the trivial app's lower half
+        // opens the coordinator socket (3) AND the image file (4) before
+        // the upper half is restored — fd 4 collides.
+        let fd = p.open_app_fd("output.dat");
+        assert_eq!(fd, 4);
+
+        let img = p.checkpoint();
+        let err = SplitProcess::restart(&img, cfg, 1).unwrap_err();
+        assert!(err.to_string().contains("fd 4 conflict"), "{err}");
+    }
+
+    #[test]
+    fn reserved_fd_policy_restart_succeeds() {
+        let cfg = SplitConfig::default();
+        let mut p = SplitProcess::launch(RankId(0), cfg, 1).unwrap();
+        p.map_app_region("s", 4096, Payload::Zero).unwrap();
+        p.open_app_fd("output.dat");
+        let img = p.checkpoint();
+        SplitProcess::restart(&img, cfg, 1).unwrap();
+    }
+
+    #[test]
+    fn legacy_alloc_policy_corrupts_on_lower_growth() {
+        let cfg = SplitConfig {
+            alloc_policy: AllocPolicy::FixedLegacy,
+            os: OsVersion::Cle7,
+            ..SplitConfig::default()
+        };
+        let mut p = SplitProcess::launch(RankId(0), cfg, 1).unwrap();
+        // Legacy bump allocation puts the app heap right after lh_core…
+        p.map_app_region("heap", 1 << 20, Payload::Pattern(1)).unwrap();
+        // …and the MPI library's runtime eager pool then lands on it.
+        p.lower_half_growth().unwrap();
+        assert!(p.corrupted, "eager pool must overlap upper half under legacy policy");
+    }
+
+    #[test]
+    fn noreplace_alloc_policy_survives_lower_growth() {
+        let mut p = SplitProcess::launch(RankId(0), SplitConfig::default(), 1).unwrap();
+        p.map_app_region("heap", 1 << 20, Payload::Pattern(1)).unwrap();
+        p.lower_half_growth().unwrap();
+        assert!(!p.corrupted);
+        assert!(p.aspace.table.check_invariants().is_empty());
+    }
+
+    #[test]
+    fn store_and_read_app_state() {
+        let mut p = SplitProcess::launch(RankId(0), SplitConfig::default(), 1).unwrap();
+        p.map_app_region("vel", 1024, Payload::Zero).unwrap();
+        p.store_app_state("vel", vec![9, 9, 9]).unwrap();
+        assert_eq!(p.app_state("vel").unwrap(), &[9, 9, 9][..]);
+        assert!(p.store_app_state("nope", vec![]).is_err());
+    }
+}

@@ -1,0 +1,168 @@
+//! Machine topology: nodes, MPI ranks, OpenMP threads per rank.
+//!
+//! Models a Cori-like system: `cores_per_node` cores, jobs launched as
+//! `ranks x threads` hybrid MPI+OpenMP (the dominant NERSC configuration;
+//! the paper's evaluations use 8 OpenMP threads per task). The
+//! rank-to-node / process-id mapping is first-class — the paper calls out
+//! adding exactly this instrumentation to make MANA debuggable.
+
+use std::fmt;
+
+/// A global MPI rank id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RankId(pub u32);
+
+impl fmt::Display for RankId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "rank{}", self.0)
+    }
+}
+
+/// A compute-node id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub u32);
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "nid{:05}", self.0)
+    }
+}
+
+/// Job topology: how ranks are laid out across nodes.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub ranks: u32,
+    pub threads_per_rank: u32,
+    pub cores_per_node: u32,
+    /// Simulated process id per rank (for the debugging instrumentation).
+    pids: Vec<u32>,
+}
+
+impl Topology {
+    /// Cori-like defaults: 64 usable cores per node (KNL-era configuration
+    /// used in the paper's HPCG runs: 8 ranks x 8 threads per node).
+    pub const CORES_PER_NODE: u32 = 64;
+
+    pub fn new(ranks: u32, threads_per_rank: u32) -> Self {
+        Self::with_cores(ranks, threads_per_rank, Self::CORES_PER_NODE)
+    }
+
+    pub fn with_cores(ranks: u32, threads_per_rank: u32, cores_per_node: u32) -> Self {
+        assert!(ranks > 0, "need at least one rank");
+        assert!(threads_per_rank > 0, "need at least one thread per rank");
+        assert!(
+            threads_per_rank <= cores_per_node,
+            "rank does not fit on a node"
+        );
+        // Deterministic fake pids: base + slot, mimicking slurmstepd children.
+        let pids = (0..ranks).map(|r| 4000 + r * 7 % 32768).collect();
+        Topology {
+            ranks,
+            threads_per_rank,
+            cores_per_node,
+            pids,
+        }
+    }
+
+    /// Ranks that fit on one node.
+    pub fn ranks_per_node(&self) -> u32 {
+        (self.cores_per_node / self.threads_per_rank).max(1)
+    }
+
+    /// Number of nodes this job occupies (block distribution, like Slurm).
+    pub fn nodes(&self) -> u32 {
+        self.ranks.div_ceil(self.ranks_per_node())
+    }
+
+    /// Which node hosts a rank.
+    pub fn node_of(&self, rank: RankId) -> NodeId {
+        assert!(rank.0 < self.ranks, "rank out of range");
+        NodeId(rank.0 / self.ranks_per_node())
+    }
+
+    /// Ranks co-located on a node.
+    pub fn ranks_on(&self, node: NodeId) -> Vec<RankId> {
+        let rpn = self.ranks_per_node();
+        let lo = node.0 * rpn;
+        let hi = ((node.0 + 1) * rpn).min(self.ranks);
+        (lo..hi).map(RankId).collect()
+    }
+
+    /// Simulated pid of a rank process.
+    pub fn pid_of(&self, rank: RankId) -> u32 {
+        self.pids[rank.0 as usize]
+    }
+
+    /// The paper's debugging instrumentation: "rank-to-node and process-id
+    /// mapping". Rendered once at launch, at Info level.
+    pub fn mapping_table(&self) -> String {
+        let mut out = String::from("rank -> node (pid)\n");
+        for r in 0..self.ranks {
+            let rank = RankId(r);
+            out.push_str(&format!(
+                "  {} -> {} (pid {})\n",
+                rank,
+                self.node_of(rank),
+                self.pid_of(rank)
+            ));
+        }
+        out
+    }
+
+    pub fn all_ranks(&self) -> impl Iterator<Item = RankId> {
+        (0..self.ranks).map(RankId)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hpcg_paper_layout() {
+        // 512 ranks x 8 threads on 64-core nodes -> 8 ranks/node, 64 nodes.
+        let t = Topology::new(512, 8);
+        assert_eq!(t.ranks_per_node(), 8);
+        assert_eq!(t.nodes(), 64);
+        assert_eq!(t.node_of(RankId(0)), NodeId(0));
+        assert_eq!(t.node_of(RankId(511)), NodeId(63));
+    }
+
+    #[test]
+    fn gromacs_fig2_layouts() {
+        for &ranks in &[4u32, 8, 16, 32, 64] {
+            let t = Topology::new(ranks, 8);
+            assert_eq!(t.nodes(), ranks.div_ceil(8));
+        }
+    }
+
+    #[test]
+    fn uneven_last_node() {
+        let t = Topology::new(10, 8); // 8 ranks/node -> nodes of 8 + 2
+        assert_eq!(t.nodes(), 2);
+        assert_eq!(t.ranks_on(NodeId(0)).len(), 8);
+        assert_eq!(t.ranks_on(NodeId(1)).len(), 2);
+    }
+
+    #[test]
+    fn single_rank() {
+        let t = Topology::new(1, 64);
+        assert_eq!(t.nodes(), 1);
+        assert_eq!(t.ranks_on(NodeId(0)), vec![RankId(0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not fit")]
+    fn oversubscribed_rank_panics() {
+        Topology::new(4, 128);
+    }
+
+    #[test]
+    fn mapping_table_lists_all() {
+        let t = Topology::new(3, 8);
+        let table = t.mapping_table();
+        assert!(table.contains("rank0"));
+        assert!(table.contains("rank2"));
+        assert!(table.contains("nid00000"));
+    }
+}

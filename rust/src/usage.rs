@@ -1,0 +1,135 @@
+//! NERSC 2020 workload census (Fig. 1).
+//!
+//! "the top 20 applications account for about 70% of NERSC's Cori
+//! computing cycles … [VASP] represents more than 20% of computing cycles"
+//!
+//! The published mix is encoded as the ground-truth distribution; the
+//! census bench samples a synthetic year of jobs from it and regenerates
+//! the figure's two claims (top-20 cumulative share ≈ 70%, VASP > 20%) plus
+//! the cumulative-share curve.
+
+use crate::util::prng::Xoshiro256;
+
+/// The 2020 application mix (name, % of machine cycles). The top-20 sum to
+/// 70.0%; the remaining 30% is the long tail of "tens of thousands of
+/// different application binaries".
+pub const NERSC_2020_TOP20: [(&str, f64); 20] = [
+    ("vasp", 20.5),
+    ("chroma", 5.5),
+    ("espresso", 5.0),
+    ("lammps", 4.5),
+    ("milc", 4.0),
+    ("gromacs", 3.7),
+    ("cesm", 3.3),
+    ("namd", 3.0),
+    ("nwchem", 2.7),
+    ("wrf", 2.4),
+    ("cp2k", 2.2),
+    ("qchem", 2.0),
+    ("berkeleygw", 1.9),
+    ("chombo", 1.7),
+    ("m3dc1", 1.5),
+    ("xgc", 1.4),
+    ("hmmer", 1.3),
+    ("su3_ahiggs", 1.2),
+    ("amber", 1.1),
+    ("e3sm", 1.1),
+];
+
+/// One sampled job record.
+#[derive(Clone, Debug)]
+pub struct JobRecord {
+    pub app: String,
+    /// Node-hours consumed.
+    pub node_hours: f64,
+}
+
+/// Sample a synthetic year of jobs following the published mix.
+pub fn sample_jobs(n_jobs: usize, seed: u64) -> Vec<JobRecord> {
+    let mut rng = Xoshiro256::stream(seed, 0xF161);
+    let top_share: f64 = NERSC_2020_TOP20.iter().map(|(_, s)| s).sum();
+    let mut jobs = Vec::with_capacity(n_jobs);
+    for i in 0..n_jobs {
+        // Job sizes are heavy-tailed (single node to full machine).
+        let node_hours = rng.next_exp(120.0) + 1.0;
+        let u = rng.next_f64() * 100.0;
+        let app = if u < top_share {
+            // Walk the top-20 CDF.
+            let mut acc = 0.0;
+            let mut chosen = NERSC_2020_TOP20[0].0;
+            for (name, share) in NERSC_2020_TOP20 {
+                acc += share;
+                if u < acc {
+                    chosen = name;
+                    break;
+                }
+            }
+            chosen.to_string()
+        } else {
+            // The long tail: thousands of distinct binaries.
+            format!("binary_{:05}", i % 20_000)
+        };
+        jobs.push(JobRecord { app, node_hours });
+    }
+    jobs
+}
+
+/// Aggregated census: per-app share of total cycles, descending.
+pub fn census(jobs: &[JobRecord]) -> Vec<(String, f64)> {
+    use std::collections::HashMap;
+    let total: f64 = jobs.iter().map(|j| j.node_hours).sum();
+    let mut by_app: HashMap<&str, f64> = HashMap::new();
+    for j in jobs {
+        *by_app.entry(j.app.as_str()).or_insert(0.0) += j.node_hours;
+    }
+    let mut rows: Vec<(String, f64)> = by_app
+        .into_iter()
+        .map(|(a, h)| (a.to_string(), 100.0 * h / total))
+        .collect();
+    rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    rows
+}
+
+/// Cumulative share of the top-k applications.
+pub fn top_k_share(rows: &[(String, f64)], k: usize) -> f64 {
+    rows.iter().take(k).map(|(_, s)| s).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn published_mix_sums_to_70() {
+        let total: f64 = NERSC_2020_TOP20.iter().map(|(_, s)| s).sum();
+        assert!((total - 70.0).abs() < 1e-9, "{total}");
+        assert!(NERSC_2020_TOP20[0].1 > 20.0, "VASP > 20% of cycles");
+    }
+
+    #[test]
+    fn sampled_census_matches_figure_claims() {
+        let jobs = sample_jobs(200_000, 7);
+        let rows = census(&jobs);
+        // VASP on top with > 20% (paper: "more than 20%").
+        assert_eq!(rows[0].0, "vasp");
+        assert!(rows[0].1 > 19.0, "vasp share {}", rows[0].1);
+        // Top-20 ≈ 70% (paper: "about 70%").
+        let t20 = top_k_share(&rows, 20);
+        assert!((65.0..75.0).contains(&t20), "top-20 share {t20}");
+    }
+
+    #[test]
+    fn long_tail_has_many_binaries() {
+        let jobs = sample_jobs(100_000, 9);
+        let rows = census(&jobs);
+        assert!(rows.len() > 5_000, "tail binaries: {}", rows.len());
+    }
+
+    #[test]
+    fn census_shares_sum_to_100() {
+        let jobs = sample_jobs(10_000, 11);
+        let rows = census(&jobs);
+        let total: f64 = rows.iter().map(|(_, s)| s).sum();
+        assert!((total - 100.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,87 @@
+//! Byte-size arithmetic and human-readable formatting.
+//!
+//! The simulator tracks *virtual* byte counts (checkpoint image sizes,
+//! aggregate application memory) that reach terabytes; these helpers keep
+//! the call sites and reports readable.
+
+pub const KIB: u64 = 1 << 10;
+pub const MIB: u64 = 1 << 20;
+pub const GIB: u64 = 1 << 30;
+pub const TIB: u64 = 1 << 40;
+
+/// Format a byte count with a binary-unit suffix ("5.80 TiB").
+pub fn human(bytes: u64) -> String {
+    let b = bytes as f64;
+    if bytes >= TIB {
+        format!("{:.2} TiB", b / TIB as f64)
+    } else if bytes >= GIB {
+        format!("{:.2} GiB", b / GIB as f64)
+    } else if bytes >= MIB {
+        format!("{:.2} MiB", b / MIB as f64)
+    } else if bytes >= KIB {
+        format!("{:.2} KiB", b / KIB as f64)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Parse sizes like "512MiB", "1.5GiB", "2TiB", "800" (bytes).
+pub fn parse(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let (num, unit): (&str, u64) = if let Some(p) = s.strip_suffix("TiB") {
+        (p, TIB)
+    } else if let Some(p) = s.strip_suffix("GiB") {
+        (p, GIB)
+    } else if let Some(p) = s.strip_suffix("MiB") {
+        (p, MIB)
+    } else if let Some(p) = s.strip_suffix("KiB") {
+        (p, KIB)
+    } else if let Some(p) = s.strip_suffix('B') {
+        (p, 1)
+    } else {
+        (s, 1)
+    };
+    let v: f64 = num.trim().parse().ok()?;
+    if v < 0.0 {
+        return None;
+    }
+    Some((v * unit as f64).round() as u64)
+}
+
+/// GB/s-style bandwidth applied to a byte count -> seconds.
+pub fn transfer_secs(bytes: u64, bytes_per_sec: f64) -> f64 {
+    debug_assert!(bytes_per_sec > 0.0);
+    bytes as f64 / bytes_per_sec
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_units() {
+        assert_eq!(human(512), "512 B");
+        assert_eq!(human(2 * KIB), "2.00 KiB");
+        assert_eq!(human(3 * MIB), "3.00 MiB");
+        assert_eq!(human(GIB + GIB / 2), "1.50 GiB");
+        assert_eq!(human(58 * TIB / 10), "5.80 TiB");
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(parse("512MiB"), Some(512 * MIB));
+        assert_eq!(parse("1.5GiB"), Some(GIB + GIB / 2));
+        assert_eq!(parse("2TiB"), Some(2 * TIB));
+        assert_eq!(parse("800"), Some(800));
+        assert_eq!(parse(" 4 KiB "), Some(4 * KIB));
+        assert_eq!(parse("-1"), None);
+        assert_eq!(parse("junk"), None);
+    }
+
+    #[test]
+    fn transfer_time() {
+        // 6 GiB at 6 GiB/s is one second.
+        let t = transfer_secs(6 * GIB, 6.0 * GIB as f64);
+        assert!((t - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,139 @@
+//! Minimal leveled logger with rank/node context.
+//!
+//! One of the paper's "Lessons Learned" (#4) is *better attention to
+//! warnings and error messages from the beginning*; the simulator follows
+//! it: every subsystem logs through this module with a rank-to-node prefix
+//! (the instrumentation the authors added to debug MANA: "we instrumented
+//! the code to add rank-to-node and process-id mapping").
+//!
+//! The logger is a process-global with an atomic level so tests can silence
+//! it; records can also be captured for assertions (warning-emission is
+//! itself a tested behaviour, e.g. the disk-space warning).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Trace = 0,
+    Debug = 1,
+    Info = 2,
+    Warn = 3,
+    Error = 4,
+    Off = 5,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Warn as u8);
+static CAPTURE: Mutex<Option<Vec<Record>>> = Mutex::new(None);
+
+/// A captured log record (used by tests asserting on warnings).
+#[derive(Clone, Debug)]
+pub struct Record {
+    pub level: Level,
+    pub target: String,
+    pub message: String,
+}
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Trace,
+        1 => Level::Debug,
+        2 => Level::Info,
+        3 => Level::Warn,
+        4 => Level::Error,
+        _ => Level::Off,
+    }
+}
+
+/// Begin capturing records (tests). Returns previously captured records.
+pub fn capture_start() {
+    *CAPTURE.lock().unwrap() = Some(Vec::new());
+}
+
+/// Stop capturing and return everything captured.
+pub fn capture_take() -> Vec<Record> {
+    CAPTURE.lock().unwrap().take().unwrap_or_default()
+}
+
+pub fn log(level: Level, target: &str, message: &str) {
+    if let Some(buf) = CAPTURE.lock().unwrap().as_mut() {
+        buf.push(Record {
+            level,
+            target: target.to_string(),
+            message: message.to_string(),
+        });
+    }
+    if level >= self::level() && self::level() != Level::Off {
+        let tag = match level {
+            Level::Trace => "TRACE",
+            Level::Debug => "DEBUG",
+            Level::Info => "INFO ",
+            Level::Warn => "WARN ",
+            Level::Error => "ERROR",
+            Level::Off => return,
+        };
+        eprintln!("[{tag}] {target}: {message}");
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info,
+                                   $target, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn,
+                                   $target, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Error,
+                                   $target, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug,
+                                   $target, &format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capture_records_warnings() {
+        capture_start();
+        log(Level::Warn, "fs", "insufficient space");
+        log(Level::Info, "mpi", "hello");
+        let recs = capture_take();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].level, Level::Warn);
+        assert!(recs[0].message.contains("insufficient"));
+        // Capture is drained.
+        assert!(capture_take().is_empty());
+    }
+
+    #[test]
+    fn level_roundtrip() {
+        let old = level();
+        set_level(Level::Error);
+        assert_eq!(level(), Level::Error);
+        set_level(old);
+    }
+}

@@ -1,0 +1,71 @@
+//! Shared infrastructure: virtual time, PRNG, logging, JSON, byte units.
+//!
+//! Everything in the simulator runs on *virtual* time ([`simclock`]) so a
+//! laptop can regenerate the paper's 600-second Lustre checkpoints
+//! deterministically. All randomness flows from [`prng`] seeds carried in
+//! the run config — never from the wall clock.
+
+pub mod bytes;
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod simclock;
+
+/// Stable 64-bit FNV-1a hash, used for state fingerprints (the bitwise
+/// determinism checks behind the paper's "exactly the same results" claim).
+pub fn fnv1a(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Hash a slice of f32s via their bit patterns (only bitwise identity
+/// matters for determinism checks).
+pub fn fnv1a_f32(data: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &v in data {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// Combine two hashes (order-dependent).
+pub fn hash_combine(a: u64, b: u64) -> u64 {
+    a ^ b
+        .wrapping_add(0x9e3779b97f4a7c15)
+        .wrapping_add(a << 6)
+        .wrapping_add(a >> 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_is_stable() {
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), fnv1a(b"a"));
+        assert_ne!(fnv1a(b"a"), fnv1a(b"b"));
+    }
+
+    #[test]
+    fn fnv1a_f32_matches_byte_hash() {
+        let v = [1.5f32, -2.25, 0.0];
+        let mut bytes = Vec::new();
+        for x in &v {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        assert_eq!(fnv1a_f32(&v), fnv1a(&bytes));
+    }
+
+    #[test]
+    fn hash_combine_order_dependent() {
+        assert_ne!(hash_combine(1, 2), hash_combine(2, 1));
+    }
+}

@@ -1,0 +1,115 @@
+//! Virtual time.
+//!
+//! The simulator charges I/O, network, and compute durations against a
+//! virtual clock instead of the wall clock, so checkpoint times land on the
+//! paper's Cori-scale numbers (seconds to minutes) while the simulation
+//! itself runs in milliseconds, fully deterministically.
+//!
+//! Each rank carries a local [`SimTime`]; synchronization points (barriers,
+//! the coordinator's drain protocol) advance everyone to the max, exactly
+//! like a real bulk-synchronous MPI program.
+
+use std::fmt;
+
+/// A point in virtual time, in seconds. Wrapper over f64 with explicit
+/// ordering helpers so call sites read like time arithmetic.
+#[derive(Clone, Copy, PartialEq, PartialOrd, Default)]
+pub struct SimTime(pub f64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0.0);
+
+    pub fn secs(s: f64) -> Self {
+        SimTime(s)
+    }
+
+    /// Advance by a non-negative duration.
+    pub fn advance(&mut self, dt: f64) {
+        debug_assert!(dt >= 0.0, "negative duration {dt}");
+        self.0 += dt;
+    }
+
+    pub fn after(self, dt: f64) -> SimTime {
+        SimTime(self.0 + dt)
+    }
+
+    pub fn max(self, other: SimTime) -> SimTime {
+        if other.0 > self.0 {
+            other
+        } else {
+            self
+        }
+    }
+
+    pub fn as_secs(self) -> f64 {
+        self.0
+    }
+}
+
+impl fmt::Debug for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "t={:.6}s", self.0)
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 >= 120.0 {
+            write!(f, "{:.1}min", self.0 / 60.0)
+        } else if self.0 >= 1.0 {
+            write!(f, "{:.2}s", self.0)
+        } else {
+            write!(f, "{:.3}ms", self.0 * 1e3)
+        }
+    }
+}
+
+/// A virtual stopwatch: measures elapsed virtual time between two points.
+#[derive(Clone, Copy, Debug)]
+pub struct SimSpan {
+    pub start: SimTime,
+    pub end: SimTime,
+}
+
+impl SimSpan {
+    pub fn new(start: SimTime, end: SimTime) -> Self {
+        debug_assert!(end.0 >= start.0, "span ends before it starts");
+        SimSpan { start, end }
+    }
+
+    pub fn duration(&self) -> f64 {
+        self.end.0 - self.start.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advance_accumulates() {
+        let mut t = SimTime::ZERO;
+        t.advance(1.5);
+        t.advance(0.5);
+        assert!((t.as_secs() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_picks_later() {
+        assert_eq!(SimTime(1.0).max(SimTime(2.0)).as_secs(), 2.0);
+        assert_eq!(SimTime(3.0).max(SimTime(2.0)).as_secs(), 3.0);
+    }
+
+    #[test]
+    fn span_duration() {
+        let s = SimSpan::new(SimTime(1.0), SimTime(3.5));
+        assert!((s.duration() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn display_scales_units() {
+        assert_eq!(format!("{}", SimTime(0.001)), "1.000ms");
+        assert_eq!(format!("{}", SimTime(12.0)), "12.00s");
+        assert_eq!(format!("{}", SimTime(600.0)), "10.0min");
+    }
+}

@@ -1,0 +1,488 @@
+//! MANA's MPI interposition layer (the wrapper library).
+//!
+//! MANA interposes on MPI calls so checkpoints can only happen at wrapper
+//! boundaries (safe points). Two paper behaviours live here:
+//!
+//! * **Blocking→non-blocking conversion.** "MANA converts blocking MPI
+//!   calls (e.g., MPI_Send) to non-blocking MPI calls (e.g., MPI_Isend);
+//!   without sufficient care, this subtle difference in calls can change
+//!   the semantics of an application." With [`WrapperConfig::careful_nonblocking`]
+//!   off, a send buffer reused while the previous send is still in flight
+//!   clobbers the in-flight message — the receiver observes corrupted
+//!   payloads. With the fix on, the wrapper tracks each request and
+//!   completes it before the buffer may be reused.
+//! * **Safe-point bookkeeping.** The wrapper knows whether a rank has
+//!   outstanding requests; the coordinator's drain phase queries this in
+//!   addition to the global byte counters.
+
+use std::collections::VecDeque;
+
+use crate::mpi::MpiWorld;
+use crate::topology::RankId;
+use crate::util::simclock::SimTime;
+use crate::log_warn;
+
+/// Wrapper-layer configuration (reliability-fix toggles).
+#[derive(Clone, Copy, Debug)]
+pub struct WrapperConfig {
+    /// The paper's fix: track converted-to-Isend requests so buffer reuse
+    /// waits for completion.
+    pub careful_nonblocking: bool,
+}
+
+impl Default for WrapperConfig {
+    fn default() -> Self {
+        WrapperConfig {
+            careful_nonblocking: true,
+        }
+    }
+}
+
+/// An outstanding converted send (MPI_Isend issued for an MPI_Send).
+#[derive(Clone, Debug)]
+struct PendingSend {
+    dst: RankId,
+    tag: u32,
+    deliver_at: SimTime,
+}
+
+/// A message pulled off the network by the drain protocol and buffered in
+/// the wrapper (upper-half state: it is checkpointed and re-delivered to
+/// the application after restart).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BufferedMsg {
+    pub src: RankId,
+    pub tag: u32,
+    pub payload: Vec<u8>,
+}
+
+/// Result of the coordinator's drain phase.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DrainReport {
+    pub rounds: u32,
+    pub buffered_msgs: usize,
+    pub drained: bool,
+}
+
+/// Per-job wrapper state.
+#[derive(Clone, Debug)]
+pub struct ManaWrappers {
+    pub cfg: WrapperConfig,
+    outstanding: Vec<VecDeque<PendingSend>>,
+    /// Drained-but-undelivered messages per destination rank.
+    buffered: Vec<VecDeque<BufferedMsg>>,
+    /// Ranks currently inside a wrapped collective (two-phase scheme: a
+    /// checkpoint request arriving mid-collective is deferred until every
+    /// member has exited — MANA's trivial-barrier approach).
+    in_collective: Vec<bool>,
+    /// Sends whose buffers were clobbered (fix off). A nonzero count is a
+    /// detected application-semantics corruption.
+    pub corrupted_sends: u64,
+}
+
+impl ManaWrappers {
+    pub fn new(cfg: WrapperConfig, ranks: u32) -> Self {
+        ManaWrappers {
+            cfg,
+            outstanding: (0..ranks).map(|_| VecDeque::new()).collect(),
+            buffered: (0..ranks).map(|_| VecDeque::new()).collect(),
+            in_collective: vec![false; ranks as usize],
+            corrupted_sends: 0,
+        }
+    }
+
+    /// Phase 1 of the wrapped collective: the rank registers entry. A
+    /// checkpoint cannot take this rank at a safe point until
+    /// [`Self::exit_collective`].
+    pub fn enter_collective(&mut self, rank: RankId) {
+        self.in_collective[rank.0 as usize] = true;
+    }
+
+    /// Phase 2: the collective completed for this rank.
+    pub fn exit_collective(&mut self, rank: RankId) {
+        self.in_collective[rank.0 as usize] = false;
+    }
+
+    /// Wrapped MPI_Allreduce: marks every member in-collective, performs
+    /// the operation, then releases them. Checkpoint-safe by construction
+    /// (the safe-point predicate sees the whole window).
+    pub fn allreduce(
+        &mut self,
+        world: &mut MpiWorld,
+        times: &mut [SimTime],
+        bytes: u64,
+    ) -> SimTime {
+        for r in 0..times.len() {
+            self.enter_collective(RankId(r as u32));
+        }
+        let done = crate::mpi::collectives::allreduce(world, times, bytes);
+        for r in 0..times.len() {
+            self.exit_collective(RankId(r as u32));
+        }
+        done
+    }
+
+    /// The application's `MPI_Send`, as MANA executes it.
+    ///
+    /// Returns the (possibly advanced) caller time.
+    #[allow(clippy::too_many_arguments)]
+    pub fn send(
+        &mut self,
+        world: &mut MpiWorld,
+        src: RankId,
+        dst: RankId,
+        tag: u32,
+        bytes: u64,
+        payload: Vec<u8>,
+        now: &mut SimTime,
+    ) {
+        self.retire_completed(src, *now);
+        let q = &mut self.outstanding[src.0 as usize];
+        if let Some(prev) = q.iter().find(|p| p.dst == dst && p.tag == tag) {
+            if self.cfg.careful_nonblocking {
+                // The fix: wait for the previous request before reusing the
+                // buffer (MPI_Wait on the tracked request).
+                let wait_until = prev.deliver_at;
+                *now = now.max(wait_until);
+                self.retire_completed(src, *now);
+            } else {
+                // The bug: buffer reused while in flight -> the in-flight
+                // message's data is clobbered with the new contents.
+                if world.clobber_inflight(src, dst, tag, payload.clone()) {
+                    self.corrupted_sends += 1;
+                    log_warn!(
+                        "wrappers",
+                        "{src}: send buffer reused while Isend({dst},tag={tag}) in flight — payload clobbered"
+                    );
+                }
+            }
+        }
+        let deliver_at = world.isend(src, dst, tag, bytes, payload, *now);
+        self.outstanding[src.0 as usize].push_back(PendingSend {
+            dst,
+            tag,
+            deliver_at,
+        });
+    }
+
+    /// The application's `MPI_Recv` (already checkpoint-safe in MANA).
+    /// Checks the wrapper's drain buffer first — after a restart, messages
+    /// that were in flight at checkpoint time are re-delivered from there.
+    pub fn recv(
+        &mut self,
+        world: &mut MpiWorld,
+        dst: RankId,
+        src: Option<RankId>,
+        tag: Option<u32>,
+        now: &mut SimTime,
+    ) -> Vec<u8> {
+        if let Some(m) = self.take_buffered(dst, src, tag) {
+            return m.payload;
+        }
+        world.recv_blocking(dst, src, tag, now).payload
+    }
+
+    /// Non-deadlocking receive: like [`Self::recv`] but returns `None` when
+    /// no matching message exists anywhere (buffer or network) — the
+    /// post-restart situation when in-flight messages were *lost* because
+    /// the checkpoint skipped the drain phase.
+    pub fn recv_or_lost(
+        &mut self,
+        world: &mut MpiWorld,
+        dst: RankId,
+        src: Option<RankId>,
+        tag: Option<u32>,
+        now: &mut SimTime,
+    ) -> Option<Vec<u8>> {
+        if let Some(m) = self.take_buffered(dst, src, tag) {
+            return Some(m.payload);
+        }
+        if world.has_matching_inflight(dst, src, tag) {
+            return Some(world.recv_blocking(dst, src, tag, now).payload);
+        }
+        None
+    }
+
+    fn take_buffered(
+        &mut self,
+        dst: RankId,
+        src: Option<RankId>,
+        tag: Option<u32>,
+    ) -> Option<BufferedMsg> {
+        let q = &mut self.buffered[dst.0 as usize];
+        let idx = q.iter().position(|m| {
+            src.is_none_or(|s| m.src == s) && tag.is_none_or(|t| m.tag == t)
+        })?;
+        q.remove(idx)
+    }
+
+    /// The drain phase: pull every in-flight message off the network into
+    /// the wrapper buffers, advancing each receiver's clock to the arrival
+    /// times, until the paper's condition (Σsent == Σreceived) holds.
+    pub fn drain_all(
+        &mut self,
+        world: &mut MpiWorld,
+        times: &mut [SimTime],
+    ) -> DrainReport {
+        let mut report = DrainReport::default();
+        while world.inflight_count() > 0 {
+            report.rounds += 1;
+            for r in 0..times.len() {
+                let rank = RankId(r as u32);
+                while let Some(arrival) = world.next_arrival(rank) {
+                    times[r] = times[r].max(arrival);
+                    let m = world
+                        .try_recv(rank, None, None, times[r])
+                        .expect("arrival implies receivable");
+                    self.buffered[r].push_back(BufferedMsg {
+                        src: m.src,
+                        tag: m.tag,
+                        payload: m.payload,
+                    });
+                    report.buffered_msgs += 1;
+                }
+            }
+        }
+        report.drained = world.drained();
+        report
+    }
+
+    /// Serialize a rank's drain buffer (stored as an upper-half region in
+    /// the checkpoint image).
+    pub fn encode_buffers(&self, rank: RankId) -> Vec<u8> {
+        let q = &self.buffered[rank.0 as usize];
+        let mut out = Vec::new();
+        out.extend_from_slice(&(q.len() as u32).to_le_bytes());
+        for m in q {
+            out.extend_from_slice(&m.src.0.to_le_bytes());
+            out.extend_from_slice(&m.tag.to_le_bytes());
+            out.extend_from_slice(&(m.payload.len() as u32).to_le_bytes());
+            out.extend_from_slice(&m.payload);
+        }
+        out
+    }
+
+    /// Restore a rank's drain buffer from a checkpoint image.
+    pub fn decode_buffers(&mut self, rank: RankId, bytes: &[u8]) -> Option<()> {
+        let mut pos = 0usize;
+        let rd_u32 = |b: &[u8], p: &mut usize| -> Option<u32> {
+            let v = u32::from_le_bytes(b.get(*p..*p + 4)?.try_into().ok()?);
+            *p += 4;
+            Some(v)
+        };
+        let n = rd_u32(bytes, &mut pos)?;
+        let q = &mut self.buffered[rank.0 as usize];
+        q.clear();
+        for _ in 0..n {
+            let src = rd_u32(bytes, &mut pos)?;
+            let tag = rd_u32(bytes, &mut pos)?;
+            let len = rd_u32(bytes, &mut pos)? as usize;
+            let payload = bytes.get(pos..pos + len)?.to_vec();
+            pos += len;
+            q.push_back(BufferedMsg {
+                src: RankId(src),
+                tag,
+                payload,
+            });
+        }
+        Some(())
+    }
+
+    pub fn buffered_count(&self, rank: RankId) -> usize {
+        self.buffered[rank.0 as usize].len()
+    }
+
+    /// Drop requests that completed by `now`.
+    pub fn retire_completed(&mut self, rank: RankId, now: SimTime) {
+        self.outstanding[rank.0 as usize].retain(|p| p.deliver_at > now);
+    }
+
+    /// Checkpoint safe-point predicate: no outstanding converted requests
+    /// AND not inside a wrapped collective.
+    pub fn at_safe_point(&mut self, rank: RankId, now: SimTime) -> bool {
+        if self.in_collective[rank.0 as usize] {
+            return false;
+        }
+        self.retire_completed(rank, now);
+        self.outstanding[rank.0 as usize].is_empty()
+    }
+
+    /// Earliest completion among a rank's outstanding requests.
+    pub fn next_completion(&self, rank: RankId) -> Option<SimTime> {
+        self.outstanding[rank.0 as usize]
+            .iter()
+            .map(|p| p.deliver_at)
+            .fold(None, |acc: Option<SimTime>, t| {
+                Some(match acc {
+                    None => t,
+                    Some(a) if t < a => t,
+                    Some(a) => a,
+                })
+            })
+    }
+
+    pub fn outstanding_total(&self) -> usize {
+        self.outstanding.iter().map(|q| q.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::fabric::Fabric;
+
+    fn setup(careful: bool, ranks: u32) -> (MpiWorld, ManaWrappers, SimTime) {
+        (
+            MpiWorld::new(ranks, Fabric::default()),
+            ManaWrappers::new(
+                WrapperConfig {
+                    careful_nonblocking: careful,
+                },
+                ranks,
+            ),
+            SimTime::ZERO,
+        )
+    }
+
+    #[test]
+    fn careless_buffer_reuse_corrupts_in_flight_message() {
+        let (mut w, mut wr, mut t) = setup(false, 2);
+        // Two back-to-back sends on the same (dst, tag): the second reuses
+        // the buffer before the first (large, slow) message delivers.
+        wr.send(&mut w, RankId(0), RankId(1), 5, 1 << 24, vec![1], &mut t);
+        wr.send(&mut w, RankId(0), RankId(1), 5, 1 << 24, vec![2], &mut t);
+        assert_eq!(wr.corrupted_sends, 1);
+        // Receiver sees the clobbered payload in the FIRST message.
+        let a = wr.recv(&mut w, RankId(1), None, Some(5), &mut t);
+        assert_eq!(a, vec![2], "first message was clobbered by reuse");
+    }
+
+    #[test]
+    fn careful_conversion_preserves_semantics() {
+        let (mut w, mut wr, mut t) = setup(true, 2);
+        wr.send(&mut w, RankId(0), RankId(1), 5, 1 << 24, vec![1], &mut t);
+        wr.send(&mut w, RankId(0), RankId(1), 5, 1 << 24, vec![2], &mut t);
+        assert_eq!(wr.corrupted_sends, 0);
+        let a = wr.recv(&mut w, RankId(1), None, Some(5), &mut t);
+        let b = wr.recv(&mut w, RankId(1), None, Some(5), &mut t);
+        assert_eq!((a[0], b[0]), (1, 2), "MPI_Send semantics preserved");
+    }
+
+    #[test]
+    fn careful_wait_advances_sender_clock() {
+        let (mut w, mut wr, mut t) = setup(true, 2);
+        wr.send(&mut w, RankId(0), RankId(1), 5, 1 << 24, vec![1], &mut t);
+        let before = t;
+        wr.send(&mut w, RankId(0), RankId(1), 5, 1 << 24, vec![2], &mut t);
+        assert!(t > before, "second send waited on the first request");
+    }
+
+    #[test]
+    fn different_tags_do_not_conflict() {
+        let (mut w, mut wr, mut t) = setup(false, 2);
+        wr.send(&mut w, RankId(0), RankId(1), 1, 1 << 24, vec![1], &mut t);
+        wr.send(&mut w, RankId(0), RankId(1), 2, 1 << 24, vec![2], &mut t);
+        assert_eq!(wr.corrupted_sends, 0);
+    }
+
+    #[test]
+    fn safe_point_after_deliveries() {
+        let (mut w, mut wr, mut t) = setup(true, 2);
+        wr.send(&mut w, RankId(0), RankId(1), 0, 1024, vec![], &mut t);
+        assert!(!wr.at_safe_point(RankId(0), t));
+        let arrival = wr.next_completion(RankId(0)).unwrap();
+        assert!(wr.at_safe_point(RankId(0), arrival));
+        let _ = &mut w;
+    }
+
+    #[test]
+    fn drain_buffers_in_flight_messages() {
+        let (mut w, mut wr, mut t) = setup(true, 3);
+        wr.send(&mut w, RankId(0), RankId(2), 9, 4096, vec![7], &mut t);
+        wr.send(&mut w, RankId(1), RankId(2), 9, 4096, vec![8], &mut t);
+        let mut times = vec![SimTime::ZERO; 3];
+        let rep = wr.drain_all(&mut w, &mut times);
+        assert!(rep.drained);
+        assert_eq!(rep.buffered_msgs, 2);
+        assert_eq!(w.inflight_count(), 0);
+        assert!(w.drained(), "paper condition: sent bytes == recv bytes");
+        // The application later receives from the buffer, same data.
+        let mut t2 = SimTime::ZERO;
+        let a = wr.recv(&mut w, RankId(2), Some(RankId(0)), Some(9), &mut t2);
+        assert_eq!(a, vec![7]);
+    }
+
+    #[test]
+    fn drain_buffer_survives_encode_decode() {
+        let (mut w, mut wr, mut t) = setup(true, 2);
+        wr.send(&mut w, RankId(0), RankId(1), 3, 128, vec![1, 2, 3], &mut t);
+        let mut times = vec![SimTime::ZERO; 2];
+        wr.drain_all(&mut w, &mut times);
+        let bytes = wr.encode_buffers(RankId(1));
+        let mut wr2 = ManaWrappers::new(WrapperConfig::default(), 2);
+        wr2.decode_buffers(RankId(1), &bytes).unwrap();
+        assert_eq!(wr2.buffered_count(RankId(1)), 1);
+        let mut t2 = SimTime::ZERO;
+        let p = wr2.recv(&mut w, RankId(1), Some(RankId(0)), Some(3), &mut t2);
+        assert_eq!(p, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn recv_or_lost_detects_dropped_messages() {
+        let (mut w, mut wr, mut t) = setup(true, 2);
+        wr.send(&mut w, RankId(0), RankId(1), 4, 64, vec![5], &mut t);
+        // Checkpoint WITHOUT drain: in-flight messages dropped.
+        w.drop_inflight();
+        let got = wr.recv_or_lost(&mut w, RankId(1), Some(RankId(0)), Some(4), &mut t);
+        assert_eq!(got, None, "message was lost, not phantom-delivered");
+        // With a live message it behaves like recv.
+        wr.send(&mut w, RankId(0), RankId(1), 5, 64, vec![6], &mut t);
+        let got = wr.recv_or_lost(&mut w, RankId(1), Some(RankId(0)), Some(5), &mut t);
+        assert_eq!(got, Some(vec![6]));
+    }
+
+    #[test]
+    fn decode_rejects_truncated_buffer() {
+        let (mut w, mut wr, mut t) = setup(true, 2);
+        wr.send(&mut w, RankId(0), RankId(1), 3, 128, vec![1, 2, 3], &mut t);
+        let mut times = vec![SimTime::ZERO; 2];
+        wr.drain_all(&mut w, &mut times);
+        let bytes = wr.encode_buffers(RankId(1));
+        let mut wr2 = ManaWrappers::new(WrapperConfig::default(), 2);
+        assert!(wr2.decode_buffers(RankId(1), &bytes[..bytes.len() - 2]).is_none());
+    }
+
+    #[test]
+    fn collective_window_blocks_safe_point() {
+        let (mut w, mut wr, _t) = setup(true, 2);
+        assert!(wr.at_safe_point(RankId(0), SimTime::ZERO));
+        wr.enter_collective(RankId(0));
+        assert!(!wr.at_safe_point(RankId(0), SimTime::secs(1e9)));
+        wr.exit_collective(RankId(0));
+        assert!(wr.at_safe_point(RankId(0), SimTime::ZERO));
+        let _ = &mut w;
+    }
+
+    #[test]
+    fn wrapped_allreduce_is_checkpoint_safe_afterwards() {
+        let (mut w, mut wr, _t) = setup(true, 4);
+        let mut times = vec![SimTime::ZERO; 4];
+        let done = wr.allreduce(&mut w, &mut times, 1 << 16);
+        assert!(done.as_secs() > 0.0);
+        assert!(w.drained(), "collective accounting balanced");
+        for r in 0..4 {
+            assert!(wr.at_safe_point(RankId(r), done));
+        }
+    }
+
+    #[test]
+    fn outstanding_counts() {
+        let (mut w, mut wr, mut t) = setup(true, 3);
+        wr.send(&mut w, RankId(0), RankId(1), 0, 1024, vec![], &mut t);
+        wr.send(&mut w, RankId(2), RankId(1), 0, 1024, vec![], &mut t);
+        assert_eq!(wr.outstanding_total(), 2);
+        wr.retire_completed(RankId(0), SimTime::secs(10.0));
+        wr.retire_completed(RankId(2), SimTime::secs(10.0));
+        assert_eq!(wr.outstanding_total(), 0);
+    }
+}

@@ -1,0 +1,158 @@
+//! PJRT integration tests: the L3↔L2/L1 bridge with real artifacts.
+//!
+//! These need `make artifacts` to have run. If the artifact directory is
+//! missing they skip (so `cargo test` works from a clean checkout), but
+//! `make test` always builds artifacts first.
+
+use std::sync::Arc;
+
+use mana::apps::{bytes_to_f32, hpcg::Hpcg, vasp_rpa::VaspRpa};
+use mana::config::{AppKind, ComputeMode, RunConfig};
+use mana::runtime::{default_artifact_dir, Engine};
+use mana::sim::JobSim;
+
+fn engine() -> Option<Arc<Engine>> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: no artifacts at {dir:?} (run `make artifacts`)");
+        return None;
+    }
+    Some(Arc::new(Engine::load(&dir).expect("engine load")))
+}
+
+#[test]
+fn engine_loads_all_artifacts() {
+    let Some(e) = engine() else { return };
+    assert_eq!(e.artifact_names(), vec!["cg_step", "md_step", "rpa_step"]);
+    assert_eq!(e.platform(), "cpu");
+}
+
+/// 256 atoms on a 7x7x7 lattice (spacing 1.71 > sigma): well-separated,
+/// finite LJ forces. Atoms at identical coordinates would produce r=0 and
+/// NaN — a physics property, not a bug.
+fn lattice_pos(n_coords: usize) -> Vec<f32> {
+    let mut pos = Vec::with_capacity(n_coords);
+    let s = 12.0 / 7.0;
+    let mut i = 0u32;
+    while pos.len() < n_coords {
+        let (x, y, z) = (i % 7, (i / 7) % 7, i / 49);
+        pos.push(x as f32 * s + 0.3);
+        pos.push(y as f32 * s + 0.3);
+        pos.push(z as f32 * s + 0.3);
+        i += 1;
+    }
+    pos.truncate(n_coords);
+    pos
+}
+
+#[test]
+fn md_step_executes_and_conserves_shape() {
+    let Some(e) = engine() else { return };
+    let spec = e.spec("md_step").unwrap();
+    let n = spec.inputs[0].element_count();
+    let pos = lattice_pos(n);
+    let vel = vec![0.01f32; n];
+    let out = e.run("md_step", &[&pos, &vel]).unwrap();
+    assert_eq!(out.len(), 3);
+    assert_eq!(out[0].len(), n);
+    assert_eq!(out[2].len(), 1);
+    assert!(out[2][0] > 0.0, "kinetic energy positive");
+    // Positions stay in the box.
+    assert!(out[0].iter().all(|&p| (0.0..12.0).contains(&p)));
+}
+
+#[test]
+fn md_step_is_deterministic_across_calls() {
+    let Some(e) = engine() else { return };
+    let n = e.spec("md_step").unwrap().inputs[0].element_count();
+    let pos = lattice_pos(n);
+    let vel: Vec<f32> = (0..n).map(|i| (i as f32).sin() * 0.01).collect();
+    let a = e.run("md_step", &[&pos, &vel]).unwrap();
+    let b = e.run("md_step", &[&pos, &vel]).unwrap();
+    assert_eq!(a, b, "PJRT compute must be bitwise deterministic");
+}
+
+#[test]
+fn cg_step_reduces_residual_over_iterations() {
+    let Some(e) = engine() else { return };
+    let mut cfg = RunConfig::new(AppKind::Hpcg, 1);
+    cfg.compute = ComputeMode::Real;
+    cfg.mem_per_rank = Some(1 << 20);
+    let mut sim = JobSim::launch(cfg, Some(e)).unwrap();
+    let r0 = Hpcg::residual(&sim.procs[0]).unwrap();
+    sim.run_steps(10).unwrap();
+    let r10 = Hpcg::residual(&sim.procs[0]).unwrap();
+    assert!(
+        r10 < r0 * 0.01,
+        "CG must converge: r0={r0}, r10={r10}"
+    );
+}
+
+#[test]
+fn rpa_energy_accumulates_monotonically() {
+    let Some(e) = engine() else { return };
+    let mut cfg = RunConfig::new(AppKind::VaspRpa, 1);
+    cfg.compute = ComputeMode::Real;
+    cfg.mem_per_rank = Some(1 << 20);
+    let mut sim = JobSim::launch(cfg, Some(e)).unwrap();
+    let mut last = 0.0f32;
+    for _ in 0..3 {
+        sim.run_steps(1).unwrap();
+        let ec = VaspRpa::ecorr(&sim.procs[0]).unwrap();
+        assert!(ec > last, "sum of squares grows with quadrature points");
+        last = ec;
+    }
+}
+
+#[test]
+fn real_compute_cr_determinism_all_apps() {
+    let Some(e) = engine() else { return };
+    for app in [AppKind::Gromacs, AppKind::Hpcg, AppKind::VaspRpa] {
+        let mut cfg = RunConfig::new(app, 2);
+        cfg.compute = ComputeMode::Real;
+        cfg.mem_per_rank = Some(1 << 20);
+        cfg.job = format!("pjrt-{}", app.name());
+
+        let mut cont = JobSim::launch(cfg.clone(), Some(e.clone())).unwrap();
+        cont.run_steps(4).unwrap();
+        let want = cont.fingerprint();
+
+        let mut sim = JobSim::launch(cfg.clone(), Some(e.clone())).unwrap();
+        sim.run_steps(2).unwrap();
+        sim.checkpoint().unwrap();
+        let fs = sim.kill();
+        let (mut resumed, _) = JobSim::restart_from(cfg, Some(e.clone()), fs).unwrap();
+        resumed.run_steps(2).unwrap();
+        assert_eq!(resumed.fingerprint(), want, "{app:?} C/R determinism");
+    }
+}
+
+#[test]
+fn engine_rejects_wrong_shapes() {
+    let Some(e) = engine() else { return };
+    let bad = vec![1.0f32; 7];
+    let err = e.run("md_step", &[&bad, &bad]).unwrap_err();
+    assert!(err.to_string().contains("elements"), "{err}");
+    assert!(e.run("md_step", &[&bad]).is_err(), "arity check");
+    assert!(e.run("nope", &[]).is_err(), "unknown artifact");
+}
+
+#[test]
+fn checkpointed_state_is_the_pjrt_output() {
+    // The upper-half region bytes ARE the PJRT output — no translation
+    // loss through the checkpoint path.
+    let Some(e) = engine() else { return };
+    let mut cfg = RunConfig::new(AppKind::Gromacs, 1);
+    cfg.compute = ComputeMode::Real;
+    cfg.mem_per_rank = Some(1 << 20);
+    cfg.job = "pjrt-bytes".into();
+    let mut sim = JobSim::launch(cfg, Some(e)).unwrap();
+    sim.run_steps(1).unwrap();
+    let pos_live = bytes_to_f32(sim.procs[0].app_state("pos").unwrap());
+    sim.checkpoint().unwrap();
+    let c = sim.cfg.clone();
+    let fs = sim.kill();
+    let (resumed, _) = JobSim::restart_from(c, None, fs).unwrap();
+    let pos_restored = bytes_to_f32(resumed.procs[0].app_state("pos").unwrap());
+    assert_eq!(pos_live, pos_restored);
+}

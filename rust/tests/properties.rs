@@ -1,0 +1,217 @@
+//! Property-based tests on coordinator/substrate invariants, using the
+//! in-crate proptest-lite framework (rust/src/proptest.rs).
+
+use mana::ckpt::CkptImage;
+use mana::config::{AppKind, RunConfig};
+use mana::fdreg::{FdPolicy, FdRegistry};
+use mana::mem::{Half, MemRegion, Payload, RegionTable};
+use mana::mpi::MpiWorld;
+use mana::proptest::run;
+use mana::sim::JobSim;
+use mana::simnet::fabric::Fabric;
+use mana::splitproc::{SplitConfig, SplitProcess};
+use mana::topology::RankId;
+use mana::util::simclock::SimTime;
+use mana::wrappers::{ManaWrappers, WrapperConfig};
+
+/// Invariant: find_free never proposes an overlapping address, for any
+/// random region layout.
+#[test]
+fn prop_find_free_never_overlaps() {
+    run("find_free never overlaps", 300, |g| {
+        let mut t = RegionTable::new();
+        let n = g.range(1, 20);
+        for i in 0..n {
+            let addr = g.range(0, 1 << 30) & !0xfff;
+            let len = g.range(1, 1 << 20);
+            let _ = t.insert(MemRegion::new(
+                addr,
+                len,
+                Half::Lower,
+                &format!("r{i}"),
+                Payload::Zero,
+            ));
+        }
+        let want = g.range(1, 1 << 22);
+        if let Some(addr) = t.find_free(want, 0, u64::MAX) {
+            t.insert(MemRegion::new(addr, want, Half::Upper, "probe", Payload::Zero))
+                .expect("find_free proposed an overlapping range");
+        }
+        assert!(t.check_invariants().is_empty());
+    });
+}
+
+/// Invariant: image encode/decode round-trips for any random image, and a
+/// random single-byte corruption is either detected or decodes identically
+/// (never a silent wrong decode).
+#[test]
+fn prop_image_codec_roundtrip_and_corruption_detected() {
+    run("image codec", 200, |g| {
+        let mut regions = Vec::new();
+        let n = g.range(0, 6);
+        let mut addr = 0x1000_0000_0000u64;
+        for i in 0..n {
+            let payload = match g.u64_below(3) {
+                0 => Payload::Zero,
+                1 => Payload::Pattern(g.range(0, u64::MAX - 1)),
+                _ => Payload::Real(g.bytes(512)),
+            };
+            let vlen = g.range(1, 1 << 30);
+            regions.push(mana::ckpt::SavedRegion {
+                addr,
+                vlen,
+                name: format!("r{i}"),
+                payload: mana::ckpt::SavedPayload::Full(payload),
+            });
+            addr += vlen.max(0x1000) + 0x1000;
+        }
+        let mut rng_state = [0u8; 32];
+        for (i, b) in g.bytes(32).into_iter().enumerate() {
+            rng_state[i] = b;
+        }
+        let img = CkptImage {
+            rank: RankId(g.range(0, 4095) as u32),
+            step: g.range(0, 1 << 40),
+            rng_state,
+            parent: None,
+            upper_fds: (0..g.range(0, 4))
+                .map(|i| (3 + i as u32, format!("fd{i}")))
+                .collect(),
+            regions,
+        };
+        let bytes = img.encode();
+        assert_eq!(CkptImage::decode(&bytes).unwrap(), img);
+
+        // Random single-byte corruption: must never silently mis-decode.
+        let pos = g.u64_below(bytes.len() as u64) as usize;
+        let mut bad = bytes.clone();
+        bad[pos] ^= (1 + g.u64_below(255)) as u8;
+        match CkptImage::decode(&bad) {
+            Err(_) => {}
+            Ok(decoded) => assert_eq!(decoded, img, "silent corruption at byte {pos}"),
+        }
+    });
+}
+
+/// Invariant: after drain_all, the paper's condition holds (Σsent ==
+/// Σreceived and nothing in flight), for any random traffic pattern.
+#[test]
+fn prop_drain_always_balances() {
+    run("drain balances counters", 150, |g| {
+        let ranks = g.range(2, 16) as u32;
+        let mut world = MpiWorld::new(ranks, Fabric::default());
+        let mut wrappers = ManaWrappers::new(WrapperConfig::default(), ranks);
+        let mut times = vec![SimTime::ZERO; ranks as usize];
+        let msgs = g.range(0, 64);
+        for _ in 0..msgs {
+            let src = RankId(g.u64_below(ranks as u64) as u32);
+            let dst = RankId(g.u64_below(ranks as u64) as u32);
+            if src == dst {
+                continue;
+            }
+            let bytes = g.range(1, 1 << 24);
+            let mut t = times[src.0 as usize];
+            wrappers.send(
+                &mut world,
+                src,
+                dst,
+                g.range(0, 8) as u32,
+                bytes,
+                g.bytes(32),
+                &mut t,
+            );
+            times[src.0 as usize] = t;
+        }
+        let rep = wrappers.drain_all(&mut world, &mut times);
+        assert!(rep.drained);
+        assert!(world.drained(), "sent bytes != recv bytes after drain");
+        assert_eq!(world.inflight_count(), 0);
+    });
+}
+
+/// Invariant: with the Reserved policy, any sequence of upper-half
+/// open/close before checkpoint can be re-claimed after a fresh lower half
+/// opens any number of its own descriptors.
+#[test]
+fn prop_reserved_fds_always_restorable() {
+    run("reserved fds restorable", 200, |g| {
+        let mut pre = FdRegistry::new(FdPolicy::Reserved);
+        let mut live = Vec::new();
+        for i in 0..g.range(0, 24) {
+            if g.bool() || live.is_empty() {
+                live.push(pre.open(Half::Upper, &format!("f{i}")));
+            } else {
+                let idx = g.u64_below(live.len() as u64) as usize;
+                pre.close(live.swap_remove(idx));
+            }
+        }
+        let saved = pre.fds_of(Half::Upper);
+
+        let mut post = FdRegistry::new(FdPolicy::Reserved);
+        for i in 0..g.range(0, 12) {
+            post.open(Half::Lower, &format!("lh{i}"));
+        }
+        for (fd, name) in &saved {
+            post.claim(*fd, name)
+                .expect("reserved policy must always restore");
+        }
+    });
+}
+
+/// Invariant: C/R at ANY step of ANY ring size is bitwise deterministic
+/// (the paper's "checkpointed at any point" claim, randomized).
+#[test]
+fn prop_cr_deterministic_at_any_point() {
+    run("C/R deterministic at any point", 25, |g| {
+        let ranks = g.range(1, 6) as u32;
+        let total = g.range(1, 6);
+        let ckpt_at = g.range(0, total);
+        let mut cfg = RunConfig::new(AppKind::Synthetic, ranks);
+        cfg.job = format!("prop-{ranks}-{total}-{ckpt_at}");
+        cfg.mem_per_rank = Some(1 << 20);
+        cfg.seed = g.range(0, u64::MAX - 1);
+
+        let mut cont = JobSim::launch(cfg.clone(), None).unwrap();
+        cont.run_steps(total).unwrap();
+        let want = cont.fingerprint();
+
+        let mut sim = JobSim::launch(cfg.clone(), None).unwrap();
+        sim.run_steps(ckpt_at).unwrap();
+        sim.checkpoint().unwrap();
+        let fs = sim.kill();
+        let (mut resumed, _) = JobSim::restart_from(cfg, None, fs).unwrap();
+        resumed.run_steps(total - ckpt_at).unwrap();
+        assert_eq!(resumed.fingerprint(), want);
+        assert!(!resumed.any_corruption());
+    });
+}
+
+/// Invariant: split-process checkpoint/restart preserves the fingerprint
+/// for any random set of app regions and fds.
+#[test]
+fn prop_splitproc_roundtrip() {
+    run("splitproc roundtrip", 100, |g| {
+        let cfg = SplitConfig::default();
+        let mut p = SplitProcess::launch(RankId(g.range(0, 64) as u32), cfg, g.range(0, 1 << 32)).unwrap();
+        for i in 0..g.range(0, 5) {
+            let payload = if g.bool() {
+                Payload::Real(g.bytes(256))
+            } else {
+                Payload::Pattern(g.range(0, u64::MAX - 1))
+            };
+            p.map_app_region(&format!("reg{i}"), g.range(1, 1 << 26), payload)
+                .unwrap();
+        }
+        for i in 0..g.range(0, 4) {
+            p.open_app_fd(&format!("file{i}"));
+        }
+        p.step = g.range(0, 1 << 30);
+        for _ in 0..g.range(0, 20) {
+            p.rng.next_u64();
+        }
+        let fp = p.fingerprint();
+        let img = CkptImage::decode(&p.checkpoint().encode()).unwrap();
+        let restored = SplitProcess::restart(&img, cfg, 0).unwrap();
+        assert_eq!(restored.fingerprint(), fp);
+    });
+}
