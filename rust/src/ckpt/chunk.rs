@@ -1,0 +1,155 @@
+//! Fixed-size chunk framing for checkpoint image payloads (format v4).
+//!
+//! Large `Payload::Real` region contents are emitted as a sequence of
+//! fixed-size chunks, each carrying its own CRC32:
+//!
+//! ```text
+//! n_chunks u32 | { chunk_len u32, chunk bytes, chunk_crc u32 }*
+//! ```
+//!
+//! Why chunks instead of one monolithic byte run:
+//!
+//! * **Streaming** — the encoder appends straight into the destination
+//!   write buffer ([`super::CkptImage::encode_into`]); no intermediate
+//!   whole-image allocation, so large images never materialize twice.
+//! * **Per-chunk charging** — the tiered storage engine drains images to
+//!   the parallel file system at chunk granularity, so a background drain
+//!   can stop and resume on any chunk boundary of the simulated clock.
+//! * **Torn-write localization** — a corrupt byte fails exactly one chunk
+//!   CRC, which names the damaged span instead of just "image bad".
+//!
+//! CRC chain of custody (no byte is hashed twice): chunk bytes are covered
+//! by their chunk CRC only; the chunk *metadata* (count, lengths, CRCs) is
+//! folded into the region's section CRC; section CRCs are folded into the
+//! whole-image trailer.
+
+use crate::util::crc32;
+
+use super::{Cursor, ImageError};
+
+/// Fixed chunk size for Real payload framing (1 MiB).
+pub const CHUNK_BYTES: usize = 1 << 20;
+
+/// Number of chunks a payload of `data_len` bytes occupies.
+pub fn chunk_count(data_len: usize) -> usize {
+    data_len.div_ceil(CHUNK_BYTES)
+}
+
+/// Encoded size of a chunk-framed payload (count + lengths + CRCs + data).
+pub fn encoded_len(data_len: usize) -> usize {
+    4 + data_len + chunk_count(data_len) * 8
+}
+
+/// Append `data` chunk-framed to `out`, folding the frame metadata (but
+/// not the chunk bytes, which carry their own CRCs) into `section`.
+pub(crate) fn write_chunked(out: &mut Vec<u8>, data: &[u8], section: &mut crc32::Hasher) {
+    let n = (chunk_count(data.len()) as u32).to_le_bytes();
+    out.extend_from_slice(&n);
+    section.update(&n);
+    for chunk in data.chunks(CHUNK_BYTES) {
+        let len = (chunk.len() as u32).to_le_bytes();
+        out.extend_from_slice(&len);
+        section.update(&len);
+        out.extend_from_slice(chunk);
+        let crc = crc32::hash(chunk).to_le_bytes();
+        out.extend_from_slice(&crc);
+        section.update(&crc);
+    }
+}
+
+/// Parse a chunk-framed payload, verifying every chunk CRC and folding the
+/// frame metadata into `section` (mirror of [`write_chunked`]). `name` is
+/// the owning region, used in error reports.
+pub(crate) fn read_chunked(
+    c: &mut Cursor<'_>,
+    section: &mut crc32::Hasher,
+    name: &str,
+) -> Result<Vec<u8>, ImageError> {
+    let n_chunks = c.u32()?;
+    section.update(&n_chunks.to_le_bytes());
+    // Counts are parsed before any CRC validates them: never trust them
+    // for allocation; grow the buffer as verified chunks arrive.
+    let mut data = Vec::new();
+    for _ in 0..n_chunks {
+        let len = c.u32()?;
+        if len as usize > CHUNK_BYTES {
+            return Err(ImageError::Truncated("chunk length"));
+        }
+        section.update(&len.to_le_bytes());
+        let bytes = c.take(len as usize)?;
+        let want = c.u32()?;
+        if crc32::hash(bytes) != want {
+            return Err(ImageError::CrcMismatch {
+                section: format!("{name}: chunk {}", data.len() / CHUNK_BYTES),
+            });
+        }
+        section.update(&want.to_le_bytes());
+        data.extend_from_slice(bytes);
+    }
+    Ok(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(data: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        let mut w = crc32::Hasher::new();
+        write_chunked(&mut out, data, &mut w);
+        assert_eq!(out.len(), encoded_len(data.len()));
+        let mut c = Cursor { buf: &out, pos: 0 };
+        let mut r = crc32::Hasher::new();
+        let back = read_chunked(&mut c, &mut r, "t").unwrap();
+        assert_eq!(c.pos, out.len(), "reader must consume the whole frame");
+        assert_eq!(
+            w.finalize(),
+            r.finalize(),
+            "reader and writer must fold identical frame metadata"
+        );
+        back
+    }
+
+    #[test]
+    fn empty_payload_is_zero_chunks() {
+        assert_eq!(chunk_count(0), 0);
+        assert_eq!(roundtrip(&[]), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn single_and_multi_chunk_roundtrip() {
+        let small = vec![7u8; 100];
+        assert_eq!(roundtrip(&small), small);
+        // 2.5 chunks worth of patterned data.
+        let big: Vec<u8> = (0..CHUNK_BYTES * 5 / 2).map(|i| (i % 251) as u8).collect();
+        assert_eq!(chunk_count(big.len()), 3);
+        assert_eq!(roundtrip(&big), big);
+    }
+
+    #[test]
+    fn chunk_bitflip_names_the_chunk() {
+        let big: Vec<u8> = (0..CHUNK_BYTES + 10).map(|i| (i % 13) as u8).collect();
+        let mut out = Vec::new();
+        write_chunked(&mut out, &big, &mut crc32::Hasher::new());
+        // Flip a byte inside the second chunk's data span.
+        let second_data = 4 + (4 + CHUNK_BYTES + 4) + 4 + 3;
+        out[second_data] ^= 0x80;
+        let mut c = Cursor { buf: &out, pos: 0 };
+        match read_chunked(&mut c, &mut crc32::Hasher::new(), "heap") {
+            Err(ImageError::CrcMismatch { section }) => {
+                assert!(section.contains("heap: chunk 1"), "{section}")
+            }
+            other => panic!("expected chunk CRC failure, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_chunk_length_rejected() {
+        let mut out = Vec::new();
+        write_chunked(&mut out, &[1, 2, 3], &mut crc32::Hasher::new());
+        // Corrupt the chunk length field to something absurd.
+        out[4..8].copy_from_slice(&(u32::MAX).to_le_bytes());
+        let mut c = Cursor { buf: &out, pos: 0 };
+        assert!(read_chunked(&mut c, &mut crc32::Hasher::new(), "t").is_err());
+    }
+}

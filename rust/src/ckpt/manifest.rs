@@ -17,6 +17,13 @@ use crate::topology::RankId;
 pub struct CkptManifest {
     pub job: String,
     pub step: u64,
+    /// Checkpoint generation this set belongs to (staged mode stamps
+    /// generation-qualified paths; single-tier paths stay unversioned but
+    /// the counter still rides the manifest so restarts resume it).
+    pub gen: u64,
+    /// Generation of the last *full* checkpoint (the incremental parent),
+    /// when one exists.
+    pub full_gen: Option<u64>,
     entries: BTreeMap<u32, String>,
 }
 
@@ -25,6 +32,8 @@ impl CkptManifest {
         CkptManifest {
             job: job.to_string(),
             step,
+            gen: 0,
+            full_gen: None,
             entries: BTreeMap::new(),
         }
     }
@@ -51,7 +60,13 @@ impl CkptManifest {
 
     /// Serialize as a line-based file ("rank<TAB>path").
     pub fn encode(&self) -> Vec<u8> {
-        let mut out = format!("job\t{}\nstep\t{}\n", self.job, self.step);
+        let mut out = format!(
+            "job\t{}\nstep\t{}\ngen\t{}\n",
+            self.job, self.step, self.gen
+        );
+        if let Some(fg) = self.full_gen {
+            out.push_str(&format!("fullgen\t{fg}\n"));
+        }
         for (rank, path) in &self.entries {
             out.push_str(&format!("{rank}\t{path}\n"));
         }
@@ -66,6 +81,8 @@ impl CkptManifest {
             match k {
                 "job" => m.job = v.to_string(),
                 "step" => m.step = v.parse().ok()?,
+                "gen" => m.gen = v.parse().ok()?,
+                "fullgen" => m.full_gen = Some(v.parse().ok()?),
                 rank => {
                     m.entries.insert(rank.parse().ok()?, v.to_string());
                 }
@@ -87,6 +104,8 @@ mod tests {
     #[test]
     fn roundtrip() {
         let mut m = CkptManifest::new("job7", 420);
+        m.gen = 3;
+        m.full_gen = Some(2);
         for r in 0..512u32 {
             m.add(RankId(r), crate::ckpt::image_path("job7", RankId(r)));
         }

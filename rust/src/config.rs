@@ -126,6 +126,23 @@ impl Fixes {
     }
 }
 
+/// Tiered-storage staging (SCR-style asynchronous BB→Lustre drain):
+/// checkpoints complete when the fast-tier write lands, and images drain
+/// to the durable tier in the background across subsequent supersteps.
+#[derive(Clone, Copy, Debug)]
+pub struct StagingConfig {
+    /// Checkpoint generations kept resident on the fast tier (including
+    /// the one being written); older drained generations are evicted when
+    /// the fast tier runs short.
+    pub keep_fulls: usize,
+}
+
+impl Default for StagingConfig {
+    fn default() -> Self {
+        StagingConfig { keep_fulls: 2 }
+    }
+}
+
 /// Full job + environment description.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -135,7 +152,12 @@ pub struct RunConfig {
     pub threads_per_rank: u32,
     /// Outer supersteps to run.
     pub steps: u64,
+    /// Storage tier for single-tier runs. Ignored in staged mode, which
+    /// always pairs a BurstBuffer fast tier with a Lustre durable tier.
     pub fs: FsKind,
+    /// `Some` enables the tiered storage engine (`--fs staged`): BB fast
+    /// tier + Lustre durable tier with asynchronous drain.
+    pub staging: Option<StagingConfig>,
     pub compute: ComputeMode,
     pub link: LinkMode,
     pub os: OsVersion,
@@ -160,6 +182,7 @@ impl RunConfig {
             threads_per_rank: 8,
             steps: 8,
             fs: FsKind::BurstBuffer,
+            staging: None,
             compute: ComputeMode::Synthetic,
             link: LinkMode::Static,
             os: OsVersion::Cle7,
@@ -169,6 +192,12 @@ impl RunConfig {
             mem_per_rank: None,
             incremental: false,
         }
+    }
+
+    /// Enable the staged (tiered BB→Lustre) storage engine.
+    pub fn with_staging(mut self) -> Self {
+        self.staging = Some(StagingConfig::default());
+        self
     }
 }
 
@@ -197,5 +226,13 @@ mod tests {
         let c = RunConfig::new(AppKind::Gromacs, 8);
         assert!(c.fixes.drain && c.fixes.keepalive);
         assert!(!c.faults.any_active());
+    }
+
+    #[test]
+    fn staging_config_toggles() {
+        let c = RunConfig::new(AppKind::Synthetic, 8);
+        assert!(c.staging.is_none());
+        let s = c.with_staging();
+        assert_eq!(s.staging.unwrap().keep_fulls, 2);
     }
 }

@@ -63,7 +63,7 @@ impl Command {
 pub enum Reply {
     Text(String),
     /// The job was killed; the storage tier survives for a later restart.
-    Killed(crate::fs::FileSystem),
+    Killed(crate::fs::Store),
 }
 
 /// Execute a command against a live job. `Kill` consumes the sim, so it is
@@ -79,6 +79,7 @@ pub fn execute(sim: &mut JobSim, cmd: &Command) -> Reply {
                 .set("virtual_secs", sim.now().as_secs())
                 .set("checkpoints", sim.coord.stats.checkpoints)
                 .set("inflight_msgs", sim.world.inflight_count())
+                .set("storage", sim.fs.describe())
                 .set("corruption", sim.any_corruption())
                 .set("metrics", sim.metrics.snapshot());
             Reply::Text(j.to_string())
@@ -124,7 +125,7 @@ pub fn execute(sim: &mut JobSim, cmd: &Command) -> Reply {
 pub fn run_script(
     mut sim: JobSim,
     script: &str,
-) -> (Vec<String>, Option<crate::fs::FileSystem>) {
+) -> (Vec<String>, Option<crate::fs::Store>) {
     let mut replies = Vec::new();
     for raw in script.split(';') {
         let raw = raw.trim();

@@ -34,6 +34,10 @@ pub enum RankState {
     Running,
     SafePoint,
     Writing,
+    /// Fast-tier write landed; the rank computes again while its images
+    /// drain to the durable tier in the background (staged mode's
+    /// Drain-to-PFS phase).
+    Draining,
     Resumed,
 }
 
@@ -56,6 +60,8 @@ pub struct CoordStats {
     pub buffered_msgs: u64,
     pub lost_messages: u64,
     pub races_detected: u64,
+    /// Bytes staged from the fast tier to the durable tier (staged mode).
+    pub staged_bytes: u64,
 }
 
 /// Why a checkpoint failed (the reliability bench's failure taxonomy).
@@ -90,6 +96,8 @@ pub struct CkptReport {
     pub intent_secs: f64,
     pub drain_secs: f64,
     pub quiesce_secs: f64,
+    /// Rank-visible write stall: the synchronous wave, plus any staged
+    /// backpressure. This is the paper's "checkpoint overhead" number.
     pub write_secs: f64,
     /// End-to-end checkpoint time (intent → resume).
     pub total_secs: f64,
@@ -99,6 +107,18 @@ pub struct CkptReport {
     pub buffered_msgs: usize,
     /// Nonzero only when the drain fix is off.
     pub lost_messages: usize,
+    // ---- per-tier breakdown (tiered storage engine) ----
+    /// Seconds/bytes of the fast-tier (Burst Buffer) wave.
+    pub fast_write_secs: f64,
+    pub fast_bytes: u64,
+    /// Synchronous durable-tier seconds: the Lustre wave in single-tier
+    /// mode, or forced-drain backpressure in staged mode.
+    pub durable_write_secs: f64,
+    pub durable_bytes: u64,
+    /// Bytes left to the asynchronous Drain-to-PFS phase at resume time
+    /// (staged mode only; the background drain retires them across
+    /// subsequent supersteps).
+    pub drain_pending_bytes: u64,
 }
 
 /// The coordinator process.
@@ -255,6 +275,13 @@ mod tests {
         c.set_rank_state(RankId(1), RankState::SafePoint, true);
         c.check_status_consistent().unwrap();
         assert_eq!(c.status.read().unwrap()[1].state, RankState::SafePoint);
+    }
+
+    #[test]
+    fn draining_state_tracked() {
+        let mut c = coord(4, true, 0.0, true);
+        c.set_rank_state(RankId(2), RankState::Draining, false);
+        assert_eq!(c.status.read().unwrap()[2].state, RankState::Draining);
     }
 
     #[test]

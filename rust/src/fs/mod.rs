@@ -23,13 +23,41 @@
 //! ("Applications with a large memory footprint may fail to checkpoint if
 //! there is insufficient storage space … a system warning is needed").
 
+pub mod tiered;
+
 use std::collections::BTreeMap;
 use std::fmt;
 
 use crate::topology::NodeId;
 use crate::{log_debug, log_warn};
 
+pub use tiered::{DrainStats, DrainTick, StagedIo, TieredStore};
+
 const GB: f64 = 1e9;
+
+/// The storage-tier abstraction extracted from [`FileSystem`]: everything
+/// the checkpoint engine needs from a mounted tier — parallel write/read
+/// waves, capacity accounting, namespace ops, and fault injection. Both a
+/// single mounted file system and the composite [`TieredStore`] implement
+/// it, which is what makes the engine pluggable.
+pub trait StorageTier {
+    /// Write a wave of checkpoint images in parallel.
+    fn write_parallel(&mut self, reqs: Vec<WriteReq>) -> Result<IoReport, FsError>;
+    /// Read a wave of images in parallel (restart path).
+    fn read_parallel(
+        &self,
+        paths: &[(NodeId, String)],
+    ) -> Result<(Vec<Vec<u8>>, IoReport), FsError>;
+    fn exists(&self, path: &str) -> bool;
+    fn delete(&mut self, path: &str) -> Result<(), FsError>;
+    fn free_bytes(&self) -> u64;
+    fn used_bytes(&self) -> u64;
+    fn file_count(&self) -> usize;
+    /// Fault injection: flip one byte of a stored file.
+    fn corrupt_byte(&mut self, path: &str, offset: usize) -> bool;
+    /// Human-readable tier description for logs.
+    fn describe(&self) -> String;
+}
 
 /// Which storage tier.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -339,6 +367,174 @@ impl FileSystem {
 
     pub fn file_count(&self) -> usize {
         self.files.len()
+    }
+
+    /// Virtual size of a stored file, if present.
+    pub fn virtual_size(&self, path: &str) -> Option<u64> {
+        self.files.get(path).map(|f| f.virtual_bytes)
+    }
+
+    /// Borrow a stored file's (virtual size, real bytes) without charging
+    /// any transfer time — the tiered engine's drain path copies through
+    /// this and charges time on its own clock.
+    pub fn peek(&self, path: &str) -> Option<(u64, &[u8])> {
+        self.files
+            .get(path)
+            .map(|f| (f.virtual_bytes, f.data.as_slice()))
+    }
+
+    /// Insert a file directly (no wave, no transfer time). Capacity is
+    /// still enforced; replacing an existing file frees its space first.
+    pub fn insert_raw(
+        &mut self,
+        path: &str,
+        virtual_bytes: u64,
+        data: Vec<u8>,
+    ) -> Result<(), FsError> {
+        let replaced = self.virtual_size(path).unwrap_or(0);
+        let free = self.free_bytes() + replaced;
+        if virtual_bytes > free {
+            return Err(FsError::InsufficientSpace {
+                needed: virtual_bytes,
+                free,
+            });
+        }
+        if let Some(old) = self.files.remove(path) {
+            self.used -= old.virtual_bytes;
+        }
+        self.used += virtual_bytes;
+        self.files.insert(
+            path.to_string(),
+            StoredFile {
+                virtual_bytes,
+                data,
+            },
+        );
+        Ok(())
+    }
+
+    /// All stored paths (sorted — BTreeMap order).
+    pub fn paths(&self) -> Vec<String> {
+        self.files.keys().cloned().collect()
+    }
+}
+
+impl StorageTier for FileSystem {
+    fn write_parallel(&mut self, reqs: Vec<WriteReq>) -> Result<IoReport, FsError> {
+        FileSystem::write_parallel(self, reqs)
+    }
+    fn read_parallel(
+        &self,
+        paths: &[(NodeId, String)],
+    ) -> Result<(Vec<Vec<u8>>, IoReport), FsError> {
+        FileSystem::read_parallel(self, paths)
+    }
+    fn exists(&self, path: &str) -> bool {
+        FileSystem::exists(self, path)
+    }
+    fn delete(&mut self, path: &str) -> Result<(), FsError> {
+        FileSystem::delete(self, path)
+    }
+    fn free_bytes(&self) -> u64 {
+        FileSystem::free_bytes(self)
+    }
+    fn used_bytes(&self) -> u64 {
+        FileSystem::used_bytes(self)
+    }
+    fn file_count(&self) -> usize {
+        FileSystem::file_count(self)
+    }
+    fn corrupt_byte(&mut self, path: &str, offset: usize) -> bool {
+        FileSystem::corrupt_byte(self, path, offset)
+    }
+    fn describe(&self) -> String {
+        self.cfg.kind.to_string()
+    }
+}
+
+/// The job's storage handle: one mounted tier, or the staged BB→Lustre
+/// tiered engine. This is what survives [`crate::sim::JobSim::kill`] and
+/// what a restart reads from.
+#[derive(Clone, Debug)]
+pub enum Store {
+    /// One mounted file system (`--fs bb` / `--fs lustre`).
+    Single(FileSystem),
+    /// Fast tier + durable tier with asynchronous staging (`--fs staged`).
+    Tiered(TieredStore),
+}
+
+impl Store {
+    pub fn is_staged(&self) -> bool {
+        matches!(self, Store::Tiered(_))
+    }
+
+    pub fn tiered(&self) -> Option<&TieredStore> {
+        match self {
+            Store::Tiered(t) => Some(t),
+            Store::Single(_) => None,
+        }
+    }
+
+    pub fn tiered_mut(&mut self) -> Option<&mut TieredStore> {
+        match self {
+            Store::Tiered(t) => Some(t),
+            Store::Single(_) => None,
+        }
+    }
+
+    /// The active tier, viewed through the [`StorageTier`] trait — every
+    /// generic operation below dispatches through this single point.
+    fn tier(&self) -> &dyn StorageTier {
+        match self {
+            Store::Single(f) => f,
+            Store::Tiered(t) => t,
+        }
+    }
+
+    fn tier_mut(&mut self) -> &mut dyn StorageTier {
+        match self {
+            Store::Single(f) => f,
+            Store::Tiered(t) => t,
+        }
+    }
+
+    pub fn write_parallel(&mut self, reqs: Vec<WriteReq>) -> Result<IoReport, FsError> {
+        self.tier_mut().write_parallel(reqs)
+    }
+
+    pub fn read_parallel(
+        &self,
+        paths: &[(NodeId, String)],
+    ) -> Result<(Vec<Vec<u8>>, IoReport), FsError> {
+        self.tier().read_parallel(paths)
+    }
+
+    pub fn exists(&self, path: &str) -> bool {
+        self.tier().exists(path)
+    }
+
+    pub fn delete(&mut self, path: &str) -> Result<(), FsError> {
+        self.tier_mut().delete(path)
+    }
+
+    pub fn free_bytes(&self) -> u64 {
+        self.tier().free_bytes()
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.tier().used_bytes()
+    }
+
+    pub fn file_count(&self) -> usize {
+        self.tier().file_count()
+    }
+
+    pub fn corrupt_byte(&mut self, path: &str, offset: usize) -> bool {
+        self.tier_mut().corrupt_byte(path, offset)
+    }
+
+    pub fn describe(&self) -> String {
+        self.tier().describe()
     }
 }
 

@@ -1,0 +1,824 @@
+//! Tiered storage engine: fast tier (Burst Buffer) + durable tier
+//! (Lustre) with asynchronous BB→PFS staging.
+//!
+//! The paper's scalability result is that checkpoint overhead is dominated
+//! by the storage tier: at 512 ranks, Burst Buffers beat Lustre by >20x on
+//! write. Its future work asks for "reducing the checkpoint overhead for
+//! large-scale applications". Multi-level checkpointing (SCR-style) is the
+//! standard answer, modeled here:
+//!
+//! * A checkpoint **completes when the fast-tier write lands** — that is
+//!   the only stall the ranks observe.
+//! * Every written file is queued for a **background drain** to the
+//!   durable tier; node-local drain agents move bytes on the simulated
+//!   clock across subsequent supersteps ([`TieredStore::drain_to`]), at
+//!   chunk granularity (see [`crate::ckpt::chunk`]).
+//! * **Eviction** keeps the last `keep_fulls` checkpoint generations
+//!   resident on the fast tier; when a new wave doesn't fit, older
+//!   *drained* generations are deleted from the fast tier (their durable
+//!   copies remain restartable).
+//! * **Backpressure**: if an undrained older generation must be evicted
+//!   to make room, it is force-drained synchronously first and the time
+//!   is charged to the checkpoint stall — the engine never drops the only
+//!   copy of an image.
+//!
+//! Restart reads prefer the fast tier per file and fall back to the
+//! durable tier ([`TieredStore::read_preferred`]); CRC-level fallback
+//! across tiers lives in the restart engine (`sim::restart_from`), which
+//! re-reads a corrupt fast-tier image from the durable tier.
+
+use std::collections::VecDeque;
+
+use super::{FileSystem, FsError, IoReport, StorageTier, WriteReq};
+use crate::ckpt::chunk::CHUNK_BYTES;
+use crate::topology::NodeId;
+use crate::{log_debug, log_info, log_warn};
+
+/// Aggregate drain/eviction counters (reported by benches and `mana run`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DrainStats {
+    /// Bytes staged to the durable tier (background + forced).
+    pub drained_bytes: u64,
+    /// Files whose durable copy completed.
+    pub drained_files: u64,
+    /// Durable-tier seconds spent draining (background + forced).
+    pub busy_secs: f64,
+    /// Subset of `busy_secs` charged synchronously as backpressure.
+    pub forced_secs: f64,
+    pub evicted_generations: u64,
+    pub evicted_files: u64,
+    /// Drain completions that failed (source vanished, durable tier full).
+    pub drain_errors: u64,
+}
+
+/// One file queued for staging to the durable tier.
+#[derive(Clone, Debug)]
+struct DrainItem {
+    path: String,
+    remaining: u64,
+}
+
+/// One checkpoint generation's fast-tier footprint (for eviction).
+#[derive(Clone, Debug, Default)]
+struct Generation {
+    paths: Vec<String>,
+}
+
+/// Outcome of one checkpoint write wave on the tiered store.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StagedIo {
+    /// Fast-tier wave time — the rank-visible checkpoint stall.
+    pub fast_secs: f64,
+    pub fast_bytes: u64,
+    /// Synchronous durable-tier seconds forced by backpressure.
+    pub backpressure_secs: f64,
+    /// Bytes the backpressure force-drain moved to the durable tier.
+    pub durable_bytes: u64,
+    pub evicted_files: usize,
+    /// Bytes queued for background drain after this wave.
+    pub pending_bytes: u64,
+    pub writers: usize,
+}
+
+impl StagedIo {
+    /// Collapse into the generic wave report (duration = total stall).
+    pub fn io(&self) -> IoReport {
+        IoReport {
+            duration: self.fast_secs + self.backpressure_secs,
+            total_virtual_bytes: self.fast_bytes,
+            writers: self.writers,
+        }
+    }
+}
+
+/// Outcome of one background drain tick.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DrainTick {
+    pub drained_bytes: u64,
+    pub completed_files: usize,
+    pub queue_empty: bool,
+}
+
+/// Fast tier + durable tier + drain queue. See the module docs.
+#[derive(Clone, Debug)]
+pub struct TieredStore {
+    fast: FileSystem,
+    durable: FileSystem,
+    queue: VecDeque<DrainItem>,
+    generations: VecDeque<Generation>,
+    /// Checkpoint generations kept resident on the fast tier (including
+    /// the one currently being written).
+    pub keep_fulls: usize,
+    /// Node count backing the drain agents (one agent per node).
+    nodes: u32,
+    /// Virtual time up to which the background drain has already worked.
+    clock: f64,
+    /// Fractional-byte credit carried between ticks (chunk-granular
+    /// draining would otherwise lose sub-chunk budgets).
+    credit: f64,
+    pub stats: DrainStats,
+}
+
+impl TieredStore {
+    pub fn new(fast: FileSystem, durable: FileSystem, keep_fulls: usize, nodes: u32) -> Self {
+        TieredStore {
+            fast,
+            durable,
+            queue: VecDeque::new(),
+            generations: VecDeque::new(),
+            keep_fulls: keep_fulls.max(1),
+            nodes: nodes.max(1),
+            clock: 0.0,
+            credit: 0.0,
+            stats: DrainStats::default(),
+        }
+    }
+
+    pub fn fast(&self) -> &FileSystem {
+        &self.fast
+    }
+
+    pub fn durable(&self) -> &FileSystem {
+        &self.durable
+    }
+
+    pub fn fast_mut(&mut self) -> &mut FileSystem {
+        &mut self.fast
+    }
+
+    pub fn durable_mut(&mut self) -> &mut FileSystem {
+        &mut self.durable
+    }
+
+    /// Bytes still queued for staging to the durable tier.
+    pub fn pending_bytes(&self) -> u64 {
+        self.queue.iter().map(|i| i.remaining).sum()
+    }
+
+    pub fn pending_files(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Effective durable-tier drain bandwidth: one drain agent per node
+    /// (the SCR model — few well-behaved writers, not a 512-rank storm).
+    pub fn drain_bandwidth(&self) -> f64 {
+        self.durable
+            .write_bandwidth(self.nodes as usize, self.nodes)
+    }
+
+    /// Open a new checkpoint generation and sync the drain clock (drain
+    /// credit earned before `now` was already granted via `drain_to`).
+    pub fn begin_ckpt(&mut self, now_secs: f64) {
+        self.clock = self.clock.max(now_secs);
+        self.generations.push_back(Generation::default());
+    }
+
+    /// Advance the drain clock without granting drain credit (e.g. across
+    /// the synchronous checkpoint stall, during which the agents hold off).
+    pub fn sync_clock(&mut self, now_secs: f64) {
+        self.clock = self.clock.max(now_secs);
+    }
+
+    /// Rebase the drain clock onto a fresh timeline (restart: the store
+    /// survives the kill, but the restarted job's virtual clock starts
+    /// over — without the rebase the background drain would stall until
+    /// the new clock caught up with the dead job's).
+    pub fn rebase_clock(&mut self, now_secs: f64) {
+        self.clock = now_secs;
+    }
+
+    /// Write one wave to the fast tier and queue it for background drain.
+    ///
+    /// Evicts old drained generations (keeping the newest `keep_fulls`)
+    /// when the wave doesn't fit; force-drains undrained evictees first
+    /// and reports that time as backpressure. Errors with
+    /// [`FsError::InsufficientSpace`] only when eviction cannot help.
+    pub fn write_wave(&mut self, reqs: Vec<WriteReq>) -> Result<StagedIo, FsError> {
+        if self.generations.is_empty() {
+            self.generations.push_back(Generation::default());
+        }
+        let total: u64 = reqs.iter().map(|r| r.virtual_bytes).sum();
+        let mut backpressure = 0.0;
+        let mut backpressure_bytes = 0u64;
+        let mut evicted_files = 0usize;
+        loop {
+            // Recomputed every pass: eviction may delete a file this wave
+            // replaces, shrinking `replaced` — the loop exit must agree
+            // with write_parallel's own capacity check at that instant.
+            let replaced: u64 = reqs
+                .iter()
+                .filter_map(|r| self.fast.virtual_size(&r.path))
+                .sum();
+            let needed = total.saturating_sub(replaced);
+            if self.fast.free_bytes() >= needed {
+                break;
+            }
+            if !self.evict_oldest(&mut backpressure, &mut backpressure_bytes, &mut evicted_files)
+            {
+                // Failure leaves prior staging state intact; only the
+                // just-opened (still empty) generation is rolled back so
+                // it doesn't count against keep_fulls.
+                if self
+                    .generations
+                    .back()
+                    .is_some_and(|g| g.paths.is_empty())
+                {
+                    self.generations.pop_back();
+                }
+                log_warn!(
+                    "fs",
+                    "staged: insufficient fast-tier space even after eviction: \
+                     need {}, free {}",
+                    crate::util::bytes::human(needed),
+                    crate::util::bytes::human(self.fast.free_bytes())
+                );
+                return Err(FsError::InsufficientSpace {
+                    needed,
+                    free: self.fast.free_bytes(),
+                });
+            }
+        }
+
+        // The wave fits: only now do these paths change hands — stale
+        // claims (an older generation's copy, a queued drain of the old
+        // version) are dropped and replaced below.
+        for r in &reqs {
+            self.unclaim(&r.path);
+        }
+        let meta: Vec<(String, u64)> = reqs
+            .iter()
+            .map(|r| (r.path.clone(), r.virtual_bytes))
+            .collect();
+        let io = self.fast.write_parallel(reqs)?;
+
+        let gen = self
+            .generations
+            .back_mut()
+            .expect("current generation exists");
+        for (path, virtual_bytes) in meta {
+            gen.paths.push(path.clone());
+            self.queue.push_back(DrainItem {
+                path,
+                remaining: virtual_bytes,
+            });
+        }
+        let pending = self.pending_bytes();
+        log_debug!(
+            "fs",
+            "staged: wave of {} landed on {} in {:.2}s; {} queued for drain",
+            crate::util::bytes::human(total),
+            self.fast.cfg.kind,
+            io.duration,
+            crate::util::bytes::human(pending)
+        );
+        Ok(StagedIo {
+            fast_secs: io.duration,
+            fast_bytes: total,
+            backpressure_secs: backpressure,
+            durable_bytes: backpressure_bytes,
+            evicted_files,
+            pending_bytes: pending,
+            writers: io.writers,
+        })
+    }
+
+    /// Advance the background drain to virtual time `now`: node-local
+    /// agents move queued bytes to the durable tier at chunk granularity.
+    pub fn drain_to(&mut self, now_secs: f64) -> DrainTick {
+        let budget = (now_secs - self.clock).max(0.0);
+        self.clock = self.clock.max(now_secs);
+        if self.queue.is_empty() {
+            self.credit = 0.0;
+            return DrainTick {
+                queue_empty: true,
+                ..DrainTick::default()
+            };
+        }
+        let bw = self.drain_bandwidth();
+        self.credit += budget * bw;
+        let mut tick = DrainTick::default();
+        let mut failed: Vec<DrainItem> = Vec::new();
+        loop {
+            let Some(item) = self.queue.front_mut() else {
+                break;
+            };
+            // (Zero-byte items — e.g. a fully-clean incremental rank —
+            // skip straight to completion below.)
+            if item.remaining > 0 {
+                let whole = item.remaining as f64;
+                let take = if self.credit >= whole {
+                    whole
+                } else {
+                    // Partial drains stop on a chunk boundary.
+                    (self.credit / CHUNK_BYTES as f64).floor() * CHUNK_BYTES as f64
+                };
+                if take <= 0.0 {
+                    break;
+                }
+                item.remaining -= take as u64;
+                self.credit -= take;
+                tick.drained_bytes += take as u64;
+            }
+            if item.remaining == 0 {
+                let done = self.queue.pop_front().expect("front exists");
+                if self.complete_drain(&done.path) {
+                    tick.completed_files += 1;
+                } else {
+                    // Staging failed (durable-tier shortfall): keep the
+                    // item queued so a later tick retries it, but set it
+                    // aside for this tick to avoid a hot retry loop.
+                    failed.push(done);
+                }
+            } else {
+                break;
+            }
+        }
+        self.queue.extend(failed);
+        self.stats.drained_bytes += tick.drained_bytes;
+        self.stats.busy_secs += tick.drained_bytes as f64 / bw;
+        tick.queue_empty = self.queue.is_empty();
+        if tick.queue_empty {
+            self.credit = 0.0;
+            if tick.completed_files > 0 {
+                log_info!(
+                    "fs",
+                    "staged: drain queue empty at t={now_secs:.2}s — all images durable"
+                );
+            }
+        }
+        tick
+    }
+
+    /// Drain everything now; returns the durable-tier busy seconds.
+    /// Items whose staging fails (pathological durable-tier shortfall)
+    /// stay queued for retry and are not counted as drained.
+    pub fn drain_sync(&mut self) -> f64 {
+        let bw = self.drain_bandwidth();
+        let mut secs = 0.0;
+        let mut failed = Vec::new();
+        while let Some(item) = self.queue.pop_front() {
+            if !self.complete_drain(&item.path) {
+                failed.push(item);
+                continue;
+            }
+            secs += item.remaining as f64 / bw;
+            self.stats.drained_bytes += item.remaining;
+        }
+        self.queue.extend(failed);
+        self.credit = 0.0;
+        self.stats.busy_secs += secs;
+        secs
+    }
+
+    /// Copy a fully-drained file from the fast tier into the durable
+    /// tier. Returns whether a durable copy now exists.
+    fn complete_drain(&mut self, path: &str) -> bool {
+        let Some((virtual_bytes, data)) = self.fast.peek(path) else {
+            log_warn!("fs", "staged: drain source {path} vanished — skipped");
+            self.stats.drain_errors += 1;
+            return false;
+        };
+        let data = data.to_vec();
+        match self.durable.insert_raw(path, virtual_bytes, data) {
+            Ok(()) => {
+                self.stats.drained_files += 1;
+                true
+            }
+            Err(e) => {
+                log_warn!("fs", "staged: drain of {path} failed: {e}");
+                self.stats.drain_errors += 1;
+                false
+            }
+        }
+    }
+
+    /// Force-drain one queued path immediately (eviction backpressure).
+    /// Returns the synchronous (seconds, bytes) charged — zero when the
+    /// staging failed (the item is re-queued for a later retry rather
+    /// than reported as durable).
+    fn drain_path_now(&mut self, path: &str) -> (f64, u64) {
+        let Some(pos) = self.queue.iter().position(|i| i.path == path) else {
+            return (0.0, 0);
+        };
+        let item = self.queue.remove(pos).expect("position valid");
+        if !self.complete_drain(&item.path) {
+            self.queue.push_back(item);
+            return (0.0, 0);
+        }
+        let secs = item.remaining as f64 / self.drain_bandwidth();
+        self.stats.drained_bytes += item.remaining;
+        self.stats.busy_secs += secs;
+        self.stats.forced_secs += secs;
+        (secs, item.remaining)
+    }
+
+    /// Evict the oldest generation beyond `keep_fulls` from the fast tier.
+    /// Undrained files are force-drained first, and a file is deleted from
+    /// the fast tier only once a durable copy actually exists — the engine
+    /// never drops the only copy of an image. Returns false when nothing
+    /// is evictable.
+    fn evict_oldest(
+        &mut self,
+        backpressure: &mut f64,
+        backpressure_bytes: &mut u64,
+        evicted_files: &mut usize,
+    ) -> bool {
+        if self.generations.len() <= self.keep_fulls {
+            return false;
+        }
+        let gen = self.generations.pop_front().expect("non-empty");
+        for path in &gen.paths {
+            let (secs, bytes) = self.drain_path_now(path);
+            *backpressure += secs;
+            *backpressure_bytes += bytes;
+        }
+        let mut deleted = 0usize;
+        let mut kept = Vec::new();
+        for path in &gen.paths {
+            if !self.durable.exists(path) {
+                // Forced drain failed (durable tier full / source gone):
+                // keep the fast copy rather than drop the only one.
+                log_warn!(
+                    "fs",
+                    "staged: evictee {path} has no durable copy — kept on the fast tier"
+                );
+                kept.push(path.clone());
+                continue;
+            }
+            if self.fast.delete(path).is_ok() {
+                deleted += 1;
+            }
+        }
+        *evicted_files += deleted;
+        self.stats.evicted_files += deleted as u64;
+        if !kept.is_empty() {
+            // Keep the survivors claimed (still the oldest generation) so
+            // a later pass can evict them once their drain succeeds.
+            self.generations.push_front(Generation { paths: kept });
+        } else {
+            self.stats.evicted_generations += 1;
+        }
+        log_info!(
+            "fs",
+            "staged: evicted generation ({deleted} files) from the fast tier \
+             (durable copies retained){}",
+            if *backpressure > 0.0 {
+                format!(", {backpressure:.2}s forced-drain backpressure")
+            } else {
+                String::new()
+            }
+        );
+        // Progress = space was freed, or an already-empty generation was
+        // retired; a generation that could not be freed at all ends the
+        // caller's eviction loop (no progress is possible right now).
+        deleted > 0 || gen.paths.is_empty()
+    }
+
+    /// Drop every claim on `path`: older generations' lists and any queued
+    /// drain of a stale version.
+    fn unclaim(&mut self, path: &str) {
+        for gen in &mut self.generations {
+            gen.paths.retain(|p| p != path);
+        }
+        self.queue.retain(|i| i.path != path);
+    }
+
+    // ------------------------------------------------- namespace ops
+
+    /// Read a wave preferring the fast tier per file, falling back to the
+    /// durable tier; the two tier waves proceed in parallel.
+    pub fn read_preferred(
+        &self,
+        paths: &[(NodeId, String)],
+    ) -> Result<(Vec<Vec<u8>>, IoReport), FsError> {
+        let mut fast_wave = Vec::new();
+        let mut durable_wave = Vec::new();
+        for (i, (node, path)) in paths.iter().enumerate() {
+            if self.fast.exists(path) {
+                fast_wave.push((i, (*node, path.clone())));
+            } else {
+                durable_wave.push((i, (*node, path.clone())));
+            }
+        }
+        let mut datas: Vec<Vec<u8>> = vec![Vec::new(); paths.len()];
+        let mut duration = 0.0f64;
+        let mut total = 0u64;
+        for (tier, wave) in [(&self.fast, fast_wave), (&self.durable, durable_wave)] {
+            if wave.is_empty() {
+                continue;
+            }
+            let reqs: Vec<(NodeId, String)> =
+                wave.iter().map(|(_, np)| np.clone()).collect();
+            let (tier_datas, io) = tier.read_parallel(&reqs)?;
+            for ((i, _), d) in wave.into_iter().zip(tier_datas) {
+                datas[i] = d;
+            }
+            duration = duration.max(io.duration);
+            total += io.total_virtual_bytes;
+        }
+        Ok((
+            datas,
+            IoReport {
+                duration,
+                total_virtual_bytes: total,
+                writers: paths.len(),
+            },
+        ))
+    }
+
+    /// Read a wave from the durable tier only (CRC-fallback path).
+    pub fn read_durable(
+        &self,
+        paths: &[(NodeId, String)],
+    ) -> Result<(Vec<Vec<u8>>, IoReport), FsError> {
+        self.durable.read_parallel(paths)
+    }
+
+    pub fn exists(&self, path: &str) -> bool {
+        self.fast.exists(path) || self.durable.exists(path)
+    }
+
+    pub fn delete(&mut self, path: &str) -> Result<(), FsError> {
+        self.unclaim(path);
+        let a = self.fast.delete(path);
+        let b = self.durable.delete(path);
+        match (a, b) {
+            (Err(e), Err(_)) => Err(e),
+            _ => Ok(()),
+        }
+    }
+
+    /// Fast-tier occupancy (the operationally scarce resource).
+    pub fn used_bytes(&self) -> u64 {
+        self.fast.used_bytes()
+    }
+
+    pub fn free_bytes(&self) -> u64 {
+        self.fast.free_bytes()
+    }
+
+    /// Distinct paths across both tiers.
+    pub fn file_count(&self) -> usize {
+        let mut paths = self.fast.paths();
+        paths.extend(self.durable.paths());
+        paths.sort_unstable();
+        paths.dedup();
+        paths.len()
+    }
+
+    /// Corrupt the fast-tier copy if present, else the durable copy.
+    pub fn corrupt_byte(&mut self, path: &str, offset: usize) -> bool {
+        self.fast.corrupt_byte(path, offset) || self.durable.corrupt_byte(path, offset)
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "staged({} → {}, {} pending)",
+            self.fast.cfg.kind,
+            self.durable.cfg.kind,
+            crate::util::bytes::human(self.pending_bytes())
+        )
+    }
+}
+
+impl StorageTier for TieredStore {
+    fn write_parallel(&mut self, reqs: Vec<WriteReq>) -> Result<IoReport, FsError> {
+        self.write_wave(reqs).map(|s| s.io())
+    }
+    fn read_parallel(
+        &self,
+        paths: &[(NodeId, String)],
+    ) -> Result<(Vec<Vec<u8>>, IoReport), FsError> {
+        self.read_preferred(paths)
+    }
+    fn exists(&self, path: &str) -> bool {
+        TieredStore::exists(self, path)
+    }
+    fn delete(&mut self, path: &str) -> Result<(), FsError> {
+        TieredStore::delete(self, path)
+    }
+    fn free_bytes(&self) -> u64 {
+        TieredStore::free_bytes(self)
+    }
+    fn used_bytes(&self) -> u64 {
+        TieredStore::used_bytes(self)
+    }
+    fn file_count(&self) -> usize {
+        TieredStore::file_count(self)
+    }
+    fn corrupt_byte(&mut self, path: &str, offset: usize) -> bool {
+        TieredStore::corrupt_byte(self, path, offset)
+    }
+    fn describe(&self) -> String {
+        TieredStore::describe(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fs::FsConfig;
+
+    const MIB: u64 = 1 << 20;
+
+    fn store(fast_cap: u64, keep: usize) -> TieredStore {
+        let mut bb = FsConfig::burst_buffer(2);
+        bb.capacity = fast_cap;
+        TieredStore::new(
+            FileSystem::new(bb),
+            FileSystem::new(FsConfig::cscratch()),
+            keep,
+            2,
+        )
+    }
+
+    fn wave(tag: &str, files: u32, bytes_each: u64) -> Vec<WriteReq> {
+        (0..files)
+            .map(|i| WriteReq {
+                node: NodeId(i % 2),
+                path: format!("{tag}/f{i}"),
+                virtual_bytes: bytes_each,
+                data: vec![i as u8; 8],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn checkpoint_completes_on_fast_tier_and_drains_later() {
+        let mut ts = store(1024 * MIB, 2);
+        ts.begin_ckpt(0.0);
+        let io = ts.write_wave(wave("g0", 4, 64 * MIB)).unwrap();
+        assert!(io.fast_secs > 0.0);
+        assert_eq!(io.backpressure_secs, 0.0);
+        assert_eq!(io.pending_bytes, 4 * 64 * MIB);
+        // Nothing durable yet.
+        assert_eq!(ts.durable().file_count(), 0);
+        assert!(ts.fast().exists("g0/f0"));
+        // Generous clock advance drains everything.
+        let tick = ts.drain_to(1000.0);
+        assert!(tick.queue_empty);
+        assert_eq!(tick.completed_files, 4);
+        assert_eq!(ts.durable().file_count(), 4);
+        assert_eq!(ts.pending_bytes(), 0);
+        // Fast copies stay resident (within keep_fulls).
+        assert!(ts.fast().exists("g0/f0"));
+    }
+
+    #[test]
+    fn drain_progresses_incrementally_on_the_clock() {
+        let mut ts = store(1024 * MIB, 2);
+        ts.begin_ckpt(0.0);
+        ts.write_wave(wave("g0", 1, 512 * MIB)).unwrap();
+        let bw = ts.drain_bandwidth();
+        let half = 256.0 * MIB as f64 / bw;
+        let tick = ts.drain_to(half);
+        assert!(!tick.queue_empty, "half the budget must not finish");
+        assert!(tick.drained_bytes > 0);
+        // Chunk-granular progress.
+        assert_eq!(tick.drained_bytes % CHUNK_BYTES as u64, 0);
+        let tick2 = ts.drain_to(half * 2.5);
+        assert!(tick2.queue_empty, "full budget finishes the drain");
+        assert!(ts.durable().exists("g0/f0"));
+    }
+
+    #[test]
+    fn eviction_keeps_last_n_fulls_on_fast_tier() {
+        // Fast tier fits two 4x64 MiB generations, not three.
+        let mut ts = store(600 * MIB, 2);
+        for g in 0..3u32 {
+            ts.begin_ckpt(g as f64 * 10.0);
+            ts.write_wave(wave(&format!("g{g}"), 4, 64 * MIB)).unwrap();
+            ts.drain_to(g as f64 * 10.0 + 1000.0); // fully drained between ckpts
+        }
+        // g0 evicted from fast, still durable; g1/g2 resident.
+        assert!(!ts.fast().exists("g0/f0"), "oldest gen evicted from BB");
+        assert!(ts.durable().exists("g0/f0"), "durable copy retained");
+        assert!(ts.fast().exists("g1/f0"));
+        assert!(ts.fast().exists("g2/f0"));
+        assert_eq!(ts.stats.evicted_generations, 1);
+        assert_eq!(ts.stats.forced_secs, 0.0, "drained evictee costs nothing");
+    }
+
+    #[test]
+    fn undrained_eviction_charges_backpressure() {
+        let mut ts = store(600 * MIB, 1); // keep only the current gen
+        ts.begin_ckpt(0.0);
+        ts.write_wave(wave("g0", 4, 64 * MIB)).unwrap();
+        // No drain time elapses before the next checkpoint.
+        ts.begin_ckpt(0.0);
+        let io = ts.write_wave(wave("g1", 4, 120 * MIB)).unwrap();
+        assert!(
+            io.backpressure_secs > 0.0,
+            "evicting an undrained gen must force-drain it synchronously"
+        );
+        assert_eq!(
+            io.durable_bytes,
+            4 * 64 * MIB,
+            "backpressure bytes must be reported per tier"
+        );
+        assert!(ts.durable().exists("g0/f0"), "forced drain made g0 durable");
+        assert!(!ts.fast().exists("g0/f0"));
+        assert!(ts.stats.forced_secs > 0.0);
+    }
+
+    #[test]
+    fn failed_wave_leaves_staging_state_intact() {
+        let mut ts = store(600 * MIB, 2);
+        ts.begin_ckpt(0.0);
+        ts.write_wave(wave("g0", 4, 64 * MIB)).unwrap();
+        let pending_before = ts.pending_bytes();
+        // A wave that cannot fit even after eviction must not disturb the
+        // queued drain or the existing generation bookkeeping.
+        ts.begin_ckpt(1.0);
+        let err = ts.write_wave(wave("g1", 4, 200 * MIB)).unwrap_err();
+        assert!(matches!(err, FsError::InsufficientSpace { .. }));
+        assert_eq!(ts.pending_bytes(), pending_before, "queue untouched");
+        assert!(ts.fast().exists("g0/f0"));
+        // The empty just-opened generation was rolled back: a later
+        // eviction pass still sees exactly one (real) generation.
+        ts.begin_ckpt(2.0);
+        ts.write_wave(wave("g2", 4, 64 * MIB)).unwrap();
+        assert!(ts.fast().exists("g0/f0"), "g0 still within keep_fulls");
+    }
+
+    #[test]
+    fn restart_rebase_resumes_a_stalled_drain() {
+        let mut ts = store(1024 * MIB, 2);
+        ts.begin_ckpt(100.0); // killed job's timeline
+        ts.write_wave(wave("g0", 2, 64 * MIB)).unwrap();
+        ts.sync_clock(130.0);
+        // Restarted job's clock starts near zero: without a rebase this
+        // tick would get zero budget.
+        ts.rebase_clock(2.0);
+        let tick = ts.drain_to(1000.0);
+        assert!(tick.queue_empty, "rebased drain must make progress");
+        assert!(ts.durable().exists("g0/f0"));
+    }
+
+    #[test]
+    fn insufficient_space_when_eviction_cannot_help() {
+        let mut ts = store(100 * MIB, 2);
+        ts.begin_ckpt(0.0);
+        let err = ts.write_wave(wave("g0", 4, 64 * MIB)).unwrap_err();
+        assert!(matches!(err, FsError::InsufficientSpace { .. }));
+        assert_eq!(ts.fast().used_bytes(), 0, "nothing written on failure");
+        assert_eq!(ts.pending_bytes(), 0);
+    }
+
+    #[test]
+    fn overwrite_dedupes_queue_and_generation_claims() {
+        let mut ts = store(1024 * MIB, 2);
+        ts.begin_ckpt(0.0);
+        ts.write_wave(wave("same", 2, 32 * MIB)).unwrap();
+        ts.begin_ckpt(0.0);
+        ts.write_wave(wave("same", 2, 32 * MIB)).unwrap();
+        // The rewritten paths are claimed once, queued once.
+        assert_eq!(ts.pending_files(), 2);
+        assert_eq!(ts.pending_bytes(), 2 * 32 * MIB);
+        let tick = ts.drain_to(1000.0);
+        assert!(tick.queue_empty);
+        assert_eq!(ts.durable().file_count(), 2);
+    }
+
+    #[test]
+    fn read_preferred_falls_back_to_durable_per_file() {
+        let mut ts = store(1024 * MIB, 2);
+        ts.begin_ckpt(0.0);
+        ts.write_wave(wave("g0", 2, 16 * MIB)).unwrap();
+        ts.drain_sync();
+        // Drop one file from the fast tier only.
+        ts.fast_mut().delete("g0/f1").unwrap();
+        let paths = vec![
+            (NodeId(0), "g0/f0".to_string()),
+            (NodeId(1), "g0/f1".to_string()),
+        ];
+        let (datas, io) = ts.read_preferred(&paths).unwrap();
+        assert_eq!(datas[0], vec![0u8; 8]);
+        assert_eq!(datas[1], vec![1u8; 8]);
+        assert!(io.duration > 0.0);
+        assert_eq!(io.total_virtual_bytes, 2 * 16 * MIB);
+    }
+
+    #[test]
+    fn drain_sync_moves_everything_and_reports_busy_secs() {
+        let mut ts = store(1024 * MIB, 2);
+        ts.begin_ckpt(0.0);
+        ts.write_wave(wave("g0", 3, 32 * MIB)).unwrap();
+        let secs = ts.drain_sync();
+        assert!(secs > 0.0);
+        assert_eq!(ts.pending_bytes(), 0);
+        assert_eq!(ts.durable().file_count(), 3);
+        assert_eq!(ts.stats.drained_files, 3);
+    }
+
+    #[test]
+    fn delete_unclaims_everywhere() {
+        let mut ts = store(1024 * MIB, 2);
+        ts.begin_ckpt(0.0);
+        ts.write_wave(wave("g0", 2, 16 * MIB)).unwrap();
+        ts.delete("g0/f0").unwrap();
+        assert!(!ts.exists("g0/f0"));
+        assert_eq!(ts.pending_files(), 1, "queued drain dropped with the file");
+        assert!(ts.delete("nope").is_err());
+    }
+}

@@ -13,7 +13,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use mana::config::{AppKind, ComputeMode, Fixes, LinkMode, RunConfig};
+use mana::config::{AppKind, ComputeMode, Fixes, LinkMode, RunConfig, StagingConfig};
 use mana::fs::FsKind;
 use mana::preempt;
 use mana::runtime::{default_artifact_dir, Engine};
@@ -123,8 +123,9 @@ USAGE: mana <command> [--flags]
 
 COMMANDS:
   run        --app gromacs|hpcg|vasp|synthetic --ranks N [--steps S]
-             [--threads T] [--fs bb|lustre] [--ckpt-at STEP] [--restart]
-             [--real-compute] [--fixes on|off] [--link static|dynamic]
+             [--threads T] [--fs bb|lustre|staged] [--keep-fulls N]
+             [--ckpt-at STEP] [--restart] [--real-compute]
+             [--fixes on|off] [--link static|dynamic]
   usage      [--jobs N] print the Fig. 1 application census
   mapping    --ranks N [--threads T] print rank→node/pid mapping
   preempt    [--ranks N] run the preempt-queue scenario
@@ -145,11 +146,23 @@ fn build_config(args: &Args) -> Result<RunConfig> {
     let mut cfg = RunConfig::new(app, ranks);
     cfg.threads_per_rank = args.get_u64("threads", 8)? as u32;
     cfg.steps = args.get_u64("steps", 8)?;
-    cfg.fs = match args.get("fs") {
-        Some("bb") | Some("burst-buffer") | None => FsKind::BurstBuffer,
-        Some("lustre") | Some("cscratch") => FsKind::Lustre,
+    match args.get("fs") {
+        Some("bb") | Some("burst-buffer") | None => cfg.fs = FsKind::BurstBuffer,
+        Some("lustre") | Some("cscratch") => cfg.fs = FsKind::Lustre,
+        Some("staged") | Some("bb+lustre") => {
+            // Tiered engine: BB fast tier, Lustre durable tier, async drain.
+            cfg.fs = FsKind::BurstBuffer;
+            cfg.staging = Some(StagingConfig::default());
+        }
         Some(other) => bail!("unknown --fs {other}"),
-    };
+    }
+    if let Some(n) = args.get("keep-fulls") {
+        let keep: usize = n.parse().with_context(|| format!("--keep-fulls={n}"))?;
+        match cfg.staging.as_mut() {
+            Some(s) => s.keep_fulls = keep,
+            None => bail!("--keep-fulls requires --fs staged"),
+        }
+    }
     cfg.link = match args.get("link") {
         Some("dynamic") => LinkMode::Dynamic,
         _ => LinkMode::Static,
@@ -227,8 +240,11 @@ fn cmd_run(args: &Args) -> Result<()> {
             Json::obj()
                 .set("total_secs", c.total_secs)
                 .set("write_secs", c.write_secs)
+                .set("fast_write_secs", c.fast_write_secs)
+                .set("durable_write_secs", c.durable_write_secs)
                 .set("drain_secs", c.drain_secs)
                 .set("image_bytes", c.image_bytes)
+                .set("drain_pending_bytes", c.drain_pending_bytes)
                 .set("buffered_msgs", c.buffered_msgs)
                 .set("lost_messages", c.lost_messages),
         );
@@ -239,7 +255,19 @@ fn cmd_run(args: &Args) -> Result<()> {
             Json::obj()
                 .set("total_secs", r.total_secs)
                 .set("read_secs", r.read_secs)
-                .set("startup_secs", r.startup_secs),
+                .set("startup_secs", r.startup_secs)
+                .set("tier_fallbacks", r.tier_fallbacks as u64),
+        );
+    }
+    if let Some(ts) = sim.fs.tiered() {
+        out = out.set(
+            "staging",
+            Json::obj()
+                .set("pending_bytes", ts.pending_bytes())
+                .set("staged_bytes", ts.stats.drained_bytes)
+                .set("staged_files", ts.stats.drained_files)
+                .set("evicted_generations", ts.stats.evicted_generations)
+                .set("backpressure_secs", ts.stats.forced_secs),
         );
     }
     println!("{}", out.to_string());

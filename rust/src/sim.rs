@@ -21,10 +21,13 @@ use anyhow::Result;
 
 use crate::apps::{self, App, StepCtx, HALO_VIRTUAL_BYTES};
 use crate::ckpt::manifest::CkptManifest;
-use crate::ckpt::{image_path, CkptImage, ImageError, SavedPayload, SavedRegion};
+use crate::ckpt::{
+    gen_image_path, gen_incr_image_path, image_path, CkptImage, ImageError,
+    SavedPayload, SavedRegion,
+};
 use crate::config::{ComputeMode, RunConfig};
 use crate::coordinator::{CkptFailure, CkptReport, Coordinator, RankState};
-use crate::fs::{FileSystem, FsConfig, FsError, FsKind, WriteReq};
+use crate::fs::{FileSystem, FsConfig, FsError, FsKind, Store, TieredStore, WriteReq};
 use crate::launcher::{self, LaunchError};
 use crate::mem::Payload;
 use crate::mpi::comm::{CommRegistry, COMM_WORLD};
@@ -33,9 +36,9 @@ use crate::runtime::Engine;
 use crate::simnet::control::{ControlNet, CtrlConfig};
 use crate::simnet::fabric::{Fabric, FabricConfig};
 use crate::splitproc::{SplitConfig, SplitProcess};
-use crate::topology::{RankId, Topology};
+use crate::topology::{NodeId, RankId, Topology};
+use crate::util::hash_combine;
 use crate::util::simclock::SimTime;
-use crate::util::{hash_combine};
 use crate::wrappers::{ManaWrappers, WrapperConfig};
 use crate::{log_info, log_warn};
 
@@ -84,6 +87,9 @@ pub struct RestartReport {
     pub startup_secs: f64,
     pub read_secs: f64,
     pub total_secs: f64,
+    /// Images whose fast-tier copy failed CRC and were re-read from the
+    /// durable tier (staged mode).
+    pub tier_fallbacks: u32,
 }
 
 /// The live job.
@@ -95,7 +101,7 @@ pub struct JobSim {
     pub world: MpiWorld,
     pub wrappers: ManaWrappers,
     pub times: Vec<SimTime>,
-    pub fs: FileSystem,
+    pub fs: Store,
     pub coord: Coordinator,
     pub engine: Option<Arc<Engine>>,
     /// Communicators: record-and-replay log survives C/R.
@@ -107,6 +113,10 @@ pub struct JobSim {
     /// Halo messages that were expected but lost (undrained checkpoint).
     pub lost_halo_events: u64,
     pub launch_startup_secs: f64,
+    /// Next checkpoint generation (staged mode stamps paths with it).
+    ckpt_gen: u64,
+    /// Generation of the last full checkpoint (the incremental parent).
+    last_full_gen: Option<u64>,
 }
 
 impl JobSim {
@@ -123,7 +133,7 @@ impl JobSim {
     pub fn launch_with_fs(
         cfg: RunConfig,
         engine: Option<Arc<Engine>>,
-        fs: FileSystem,
+        fs: Store,
     ) -> Result<JobSim> {
         if cfg.compute == ComputeMode::Real {
             anyhow::ensure!(
@@ -198,10 +208,26 @@ impl JobSim {
             step: 0,
             lost_halo_events: 0,
             launch_startup_secs: launch.startup_secs,
+            ckpt_gen: 0,
+            last_full_gen: None,
         })
     }
 
-    fn make_fs(cfg: &RunConfig, topo: &Topology) -> FileSystem {
+    fn make_fs(cfg: &RunConfig, topo: &Topology) -> Store {
+        if let Some(staging) = cfg.staging {
+            // Staged mode: BB fast tier + Lustre durable tier. A capacity
+            // override squeezes the *fast* tier (forcing eviction paths).
+            let mut bb = FsConfig::burst_buffer(topo.nodes());
+            if let Some(cap) = cfg.faults.fs_capacity_override {
+                bb.capacity = cap;
+            }
+            return Store::Tiered(TieredStore::new(
+                FileSystem::new(bb),
+                FileSystem::new(FsConfig::cscratch()),
+                staging.keep_fulls,
+                topo.nodes(),
+            ));
+        }
         let mut fscfg = match cfg.fs {
             FsKind::BurstBuffer => FsConfig::burst_buffer(topo.nodes()),
             FsKind::Lustre => FsConfig::cscratch(),
@@ -209,7 +235,7 @@ impl JobSim {
         if let Some(cap) = cfg.faults.fs_capacity_override {
             fscfg.capacity = cap;
         }
-        FileSystem::new(fscfg)
+        Store::Single(FileSystem::new(fscfg))
     }
 
     fn make_fabric(cfg: &RunConfig) -> Fabric {
@@ -336,7 +362,76 @@ impl JobSim {
         self.metrics.inc("supersteps", 1);
         self.metrics
             .gauge("virtual_secs", self.now().as_secs());
+
+        // Asynchronous Drain-to-PFS phase: while ranks were computing,
+        // node-local drain agents staged queued checkpoint bytes to the
+        // durable tier on the same virtual clock.
+        let now = self.now().as_secs();
+        if let Store::Tiered(ts) = &mut self.fs {
+            let tick = ts.drain_to(now);
+            if tick.drained_bytes > 0 {
+                self.coord.stats.staged_bytes += tick.drained_bytes;
+                self.metrics.inc("drain.bytes", tick.drained_bytes);
+            }
+            if tick.queue_empty && tick.completed_files > 0 {
+                // The last image went durable: the async phase is over.
+                for r in 0..self.cfg.ranks {
+                    self.coord
+                        .set_rank_state(RankId(r), RankState::Resumed, false);
+                }
+            }
+        }
         Ok(())
+    }
+
+    /// Force the background BB→PFS drain to completion (single-tier jobs
+    /// are a no-op). Returns the durable-tier busy seconds the drain
+    /// agents spent; rank clocks are NOT advanced — this is the
+    /// *background* half the staged engine overlaps with compute.
+    pub fn finish_drain(&mut self) -> f64 {
+        let ranks = self.cfg.ranks;
+        match &mut self.fs {
+            Store::Tiered(ts) => {
+                if ts.pending_bytes() == 0 {
+                    return 0.0;
+                }
+                let secs = ts.drain_sync();
+                for r in 0..ranks {
+                    self.coord
+                        .set_rank_state(RankId(r), RankState::Resumed, false);
+                }
+                secs
+            }
+            Store::Single(_) => 0.0,
+        }
+    }
+
+    // ----------------------------------------------------- ckpt paths
+
+    /// Full-image path for the generation currently being written.
+    fn full_path(&self, rank: RankId) -> String {
+        if self.cfg.staging.is_some() {
+            gen_image_path(&self.cfg.job, self.ckpt_gen, rank)
+        } else {
+            image_path(&self.cfg.job, rank)
+        }
+    }
+
+    /// Incremental-image path for the current generation.
+    fn incr_path(&self, rank: RankId) -> String {
+        if self.cfg.staging.is_some() {
+            gen_incr_image_path(&self.cfg.job, self.ckpt_gen, rank)
+        } else {
+            incr_image_path(&self.cfg.job, rank)
+        }
+    }
+
+    /// Path of the last full image (the incremental parent).
+    fn parent_path(&self, rank: RankId) -> String {
+        match (self.cfg.staging.is_some(), self.last_full_gen) {
+            (true, Some(gen)) => gen_image_path(&self.cfg.job, gen, rank),
+            _ => image_path(&self.cfg.job, rank),
+        }
     }
 
     fn primary_state_hash(&self, r: u32) -> u64 {
@@ -433,14 +528,16 @@ impl JobSim {
         // Phase 5: WRITE the image wave. Incremental mode: once a full
         // image exists, write only dirty regions (ParentRef the rest) to a
         // side file; the manifest tracks which file is current per rank.
+        // Staged mode: the wave lands on the fast tier only (that is the
+        // whole stall) and is queued for the async Drain-to-PFS phase.
         for r in 0..self.cfg.ranks {
             self.coord
                 .set_rank_state(RankId(r), RankState::Writing, false);
         }
         let incremental = self.cfg.incremental
-            && self
-                .fs
-                .exists(&image_path(&self.cfg.job, RankId(0)));
+            && (self.last_full_gen.is_some()
+                || (self.cfg.staging.is_none()
+                    && self.fs.exists(&image_path(&self.cfg.job, RankId(0)))));
         let mut reqs = Vec::with_capacity(self.cfg.ranks as usize);
         let mut total_virtual = 0u64;
         for r in 0..self.cfg.ranks {
@@ -448,23 +545,54 @@ impl JobSim {
             let img = self.capture_rank_image(r, incremental);
             total_virtual += img.write_bytes();
             let path = if incremental {
-                incr_image_path(&self.cfg.job, rank)
+                self.incr_path(rank)
             } else {
-                image_path(&self.cfg.job, rank)
+                self.full_path(rank)
             };
+            // Stream the image straight into the write buffer: chunked
+            // encoder, no intermediate whole-image materialization.
+            let mut data = Vec::new();
+            img.encode_into(&mut data);
             reqs.push(WriteReq {
                 node: self.topo.node_of(rank),
                 path,
                 virtual_bytes: img.write_bytes(),
-                data: img.encode(),
+                data,
             });
         }
-        let io = match self.fs.write_parallel(reqs) {
-            Ok(io) => io,
-            Err(e @ FsError::InsufficientSpace { .. }) => {
-                return Err(CkptFailure::DiskFull(e.to_string()));
+        let io = match &mut self.fs {
+            Store::Single(fs) => {
+                let io = match fs.write_parallel(reqs) {
+                    Ok(io) => io,
+                    Err(e @ FsError::InsufficientSpace { .. }) => {
+                        return Err(CkptFailure::DiskFull(e.to_string()));
+                    }
+                    Err(e) => return Err(CkptFailure::DiskFull(e.to_string())),
+                };
+                match fs.cfg.kind {
+                    FsKind::BurstBuffer => {
+                        report.fast_write_secs = io.duration;
+                        report.fast_bytes = io.total_virtual_bytes;
+                    }
+                    FsKind::Lustre => {
+                        report.durable_write_secs = io.duration;
+                        report.durable_bytes = io.total_virtual_bytes;
+                    }
+                }
+                io
             }
-            Err(e) => return Err(CkptFailure::DiskFull(e.to_string())),
+            Store::Tiered(ts) => {
+                ts.begin_ckpt(t.as_secs());
+                let sio = match ts.write_wave(reqs) {
+                    Ok(sio) => sio,
+                    Err(e) => return Err(CkptFailure::DiskFull(e.to_string())),
+                };
+                report.fast_write_secs = sio.fast_secs;
+                report.fast_bytes = sio.fast_bytes;
+                report.durable_write_secs = sio.backpressure_secs;
+                report.durable_bytes = sio.durable_bytes;
+                sio.io()
+            }
         };
         report.write_secs = io.duration;
         report.image_bytes = total_virtual;
@@ -481,36 +609,79 @@ impl JobSim {
             }
         }
 
-        // The restart manifest rides the same storage tier.
+        // The restart manifest rides the same storage tier (and, in staged
+        // mode, joins the drain queue so it goes durable with its images).
         let mut manifest = CkptManifest::new(&self.cfg.job, self.step);
+        manifest.gen = self.ckpt_gen;
+        manifest.full_gen = if incremental {
+            self.last_full_gen
+        } else {
+            Some(self.ckpt_gen)
+        };
         for r in 0..self.cfg.ranks {
             let rank = RankId(r);
             let path = if incremental {
-                incr_image_path(&self.cfg.job, rank)
+                self.incr_path(rank)
             } else {
-                image_path(&self.cfg.job, rank)
+                self.full_path(rank)
             };
             manifest.add(rank, path);
         }
         let mdata = manifest.encode();
-        self.fs
-            .write_parallel(vec![WriteReq {
-                node: self.topo.node_of(RankId(0)),
-                path: CkptManifest::manifest_path(&self.cfg.job),
-                virtual_bytes: mdata.len() as u64,
-                data: mdata,
-            }])
-            .map_err(|e| CkptFailure::DiskFull(e.to_string()))?;
+        let mreq = WriteReq {
+            node: self.topo.node_of(RankId(0)),
+            path: CkptManifest::manifest_path(&self.cfg.job),
+            virtual_bytes: mdata.len() as u64,
+            data: mdata,
+        };
+        match &mut self.fs {
+            Store::Single(fs) => {
+                fs.write_parallel(vec![mreq])
+                    .map_err(|e| CkptFailure::DiskFull(e.to_string()))?;
+            }
+            Store::Tiered(ts) => {
+                // The manifest is tiny, but its wave can still trigger
+                // eviction backpressure on a packed fast tier — that is
+                // synchronous work the ranks must wait out.
+                let msio = ts
+                    .write_wave(vec![mreq])
+                    .map_err(|e| CkptFailure::DiskFull(e.to_string()))?;
+                if msio.backpressure_secs > 0.0 {
+                    report.durable_write_secs += msio.backpressure_secs;
+                    report.durable_bytes += msio.durable_bytes;
+                    report.write_secs += msio.backpressure_secs;
+                    t = t.after(msio.backpressure_secs);
+                    for tt in &mut self.times {
+                        *tt = t;
+                    }
+                }
+            }
+        }
+        if !incremental {
+            self.last_full_gen = Some(self.ckpt_gen);
+        }
+        self.ckpt_gen += 1;
 
-        // Phase 6: RESUME.
+        // Phase 6: RESUME — in staged mode, into the async Drain-to-PFS
+        // phase: ranks compute again while their images go durable.
         let resume_delay = self.coord.broadcast_intent(self.cfg.ranks, t)?;
         t = t.after(resume_delay);
+        let pending = self.fs.tiered().map_or(0, |ts| ts.pending_bytes());
+        report.drain_pending_bytes = pending;
+        let resumed_state = if pending > 0 {
+            RankState::Draining
+        } else {
+            RankState::Resumed
+        };
         for r in 0..self.cfg.ranks {
-            self.coord
-                .set_rank_state(RankId(r), RankState::Resumed, false);
+            self.coord.set_rank_state(RankId(r), resumed_state, false);
         }
         for tt in &mut self.times {
             *tt = t;
+        }
+        // The background drain's budget starts at resume time.
+        if let Store::Tiered(ts) = &mut self.fs {
+            ts.sync_clock(t.as_secs());
         }
 
         self.coord.stats.checkpoints += 1;
@@ -521,18 +692,28 @@ impl JobSim {
         self.metrics.observe("ckpt.total_secs", report.total_secs);
         self.metrics.observe("ckpt.write_secs", report.write_secs);
         self.metrics
+            .observe("ckpt.fast_write_secs", report.fast_write_secs);
+        self.metrics
             .observe("ckpt.image_bytes", report.image_bytes as f64);
         self.metrics
             .inc("ckpt.buffered_msgs", report.buffered_msgs as u64);
         log_info!(
             "coordinator",
-            "checkpoint {} at step {}: {} in {:.2}s (drain {:.3}s, write {:.2}s)",
+            "checkpoint {} at step {}: {} in {:.2}s (drain {:.3}s, write {:.2}s{})",
             self.cfg.job,
             self.step,
             crate::util::bytes::human(report.image_bytes),
             report.total_secs,
             report.drain_secs,
-            report.write_secs
+            report.write_secs,
+            if report.drain_pending_bytes > 0 {
+                format!(
+                    ", {} staging to PFS in the background",
+                    crate::util::bytes::human(report.drain_pending_bytes)
+                )
+            } else {
+                String::new()
+            }
         );
         Ok(report)
     }
@@ -541,6 +722,7 @@ impl JobSim {
     /// dedicated upper-half pseudo-region.
     fn capture_rank_image(&mut self, r: u32, incremental: bool) -> CkptImage {
         let rank = RankId(r);
+        let parent = self.parent_path(rank);
         let proc = &self.procs[r as usize];
         let mut img = if incremental {
             CkptImage::capture_incremental(
@@ -549,7 +731,7 @@ impl JobSim {
                 proc.rng.state_bytes(),
                 proc.fds.fds_of(crate::mem::Half::Upper),
                 &proc.aspace.table,
-                &image_path(&self.cfg.job, rank),
+                &parent,
             )
         } else {
             proc.checkpoint()
@@ -578,16 +760,25 @@ impl JobSim {
 
     /// Kill the job (scheduler preemption / walltime / failure). The
     /// storage tier survives; everything else dies with the processes.
-    pub fn kill(self) -> FileSystem {
-        log_info!("sim", "job {} killed at step {}", self.cfg.job, self.step);
+    pub fn kill(self) -> Store {
+        log_info!(
+            "sim",
+            "job {} killed at step {} (storage: {})",
+            self.cfg.job,
+            self.step,
+            self.fs.describe()
+        );
         self.fs
     }
 
-    /// Restart a job from its checkpoint set on `fs`.
+    /// Restart a job from its checkpoint set on `fs`. In staged mode the
+    /// newest valid image is located on *either* tier: reads prefer the
+    /// fast tier per file and fall back to the durable tier, including on
+    /// CRC failure of a fast-tier copy.
     pub fn restart_from(
         cfg: RunConfig,
         engine: Option<Arc<Engine>>,
-        mut fs: FileSystem,
+        mut fs: Store,
     ) -> Result<(JobSim, RestartReport), RestartError> {
         let topo = Topology::new(cfg.ranks, cfg.threads_per_rank);
         let mut report = RestartReport::default();
@@ -598,8 +789,11 @@ impl JobSim {
         report.startup_secs = launch.startup_secs;
 
         // Resolve image paths (manifest fix reads one file; legacy argv
-        // carried them directly).
-        let paths: Vec<(crate::topology::NodeId, String)> = if cfg.fixes.manifest_filenames {
+        // carried them directly). Staged checkpoints stamp paths with a
+        // generation, so they are only reachable through the manifest.
+        let mut ckpt_gen = 0u64;
+        let mut last_full_gen = None;
+        let paths: Vec<(NodeId, String)> = if cfg.fixes.manifest_filenames {
             let (datas, _) = fs
                 .read_parallel(&[(
                     topo.node_of(RankId(0)),
@@ -608,6 +802,8 @@ impl JobSim {
                 .map_err(|e| RestartError::Fs(e.to_string()))?;
             let manifest = CkptManifest::decode(&datas[0])
                 .ok_or_else(|| RestartError::Fs("bad manifest".into()))?;
+            ckpt_gen = manifest.gen + 1;
+            last_full_gen = manifest.full_gen;
             (0..cfg.ranks)
                 .map(|r| {
                     let rank = RankId(r);
@@ -621,15 +817,21 @@ impl JobSim {
                 })
                 .collect()
         } else {
+            if cfg.staging.is_some() {
+                return Err(RestartError::Fs(
+                    "staged restart requires the manifest-filenames fix".into(),
+                ));
+            }
             (0..cfg.ranks)
                 .map(|r| (topo.node_of(RankId(r)), image_path(&cfg.job, RankId(r))))
                 .collect()
         };
 
-        // Injected image corruption.
+        // Injected image corruption (targets the resolved image path).
         if let Some((rank, offset)) = cfg.faults.image_bitflip {
-            let path = image_path(&cfg.job, RankId(rank));
-            fs.corrupt_byte(&path, offset);
+            if let Some((_, path)) = paths.get(rank as usize) {
+                fs.corrupt_byte(path, offset);
+            }
         }
 
         let (datas, io) = fs
@@ -654,15 +856,21 @@ impl JobSim {
         let mut comms = CommRegistry::new(cfg.ranks);
         for (r, data) in datas.iter().enumerate() {
             let rank = RankId(r as u32);
-            let mut img = CkptImage::decode(data)
-                .map_err(|e| RestartError::CorruptImage(rank, e))?;
+            let (node, path) = &paths[r];
+            let mut img = decode_with_tier_fallback(&fs, *node, path, data, rank, &mut report)?;
             // Incremental image: pull and resolve its parent full image.
             if let Some(parent_path) = img.parent.clone() {
                 let (pdatas, _) = fs
-                    .read_parallel(&[(topo.node_of(rank), parent_path)])
+                    .read_parallel(&[(topo.node_of(rank), parent_path.clone())])
                     .map_err(|e| RestartError::Fs(e.to_string()))?;
-                let parent = CkptImage::decode(&pdatas[0])
-                    .map_err(|e| RestartError::CorruptImage(rank, e))?;
+                let parent = decode_with_tier_fallback(
+                    &fs,
+                    topo.node_of(rank),
+                    &parent_path,
+                    &pdatas[0],
+                    rank,
+                    &mut report,
+                )?;
                 img = crate::ckpt::resolve_incremental(&img, &parent)
                     .map_err(|e| RestartError::CorruptImage(rank, e))?;
             }
@@ -701,6 +909,18 @@ impl JobSim {
         coord.stats.restarts += 1;
         report.total_secs = report.startup_secs + report.read_secs;
         let t0 = SimTime::secs(report.total_secs);
+        // The surviving store's drain clock sits on the killed job's
+        // timeline; rebase it to the restarted clock so an interrupted
+        // background drain resumes instead of waiting for the new clock
+        // to catch up with the dead one's.
+        if let Store::Tiered(ts) = &mut fs {
+            ts.rebase_clock(t0.as_secs());
+            if ts.pending_bytes() > 0 {
+                for r in 0..cfg.ranks {
+                    coord.set_rank_state(RankId(r), RankState::Draining, false);
+                }
+            }
+        }
         log_info!(
             "sim",
             "restart {}: {} ranks at step {job_step} in {:.2}s (read {:.2}s)",
@@ -731,6 +951,8 @@ impl JobSim {
                 step: job_step,
                 lost_halo_events: 0,
                 launch_startup_secs: report.startup_secs,
+                ckpt_gen,
+                last_full_gen,
                 cfg,
             },
             report,
@@ -765,6 +987,41 @@ impl JobSim {
     /// Aggregate upper-half memory across ranks (the Fig. 2 blue line).
     pub fn aggregate_memory(&self) -> u64 {
         self.procs.iter().map(|p| p.upper_bytes()).sum()
+    }
+}
+
+/// Decode an image, and on CRC/decode failure of a fast-tier copy whose
+/// durable twin exists, re-read from the durable tier and retry (staged
+/// mode's cross-tier fallback). Charges the extra read to the report.
+fn decode_with_tier_fallback(
+    fs: &Store,
+    node: NodeId,
+    path: &str,
+    data: &[u8],
+    rank: RankId,
+    report: &mut RestartReport,
+) -> Result<CkptImage, RestartError> {
+    match CkptImage::decode(data) {
+        Ok(img) => Ok(img),
+        Err(e) => {
+            if let Store::Tiered(ts) = fs {
+                if ts.fast().exists(path) && ts.durable().exists(path) {
+                    log_warn!(
+                        "sim",
+                        "{rank}: fast-tier image {path} failed validation ({e}) — \
+                         falling back to the durable tier"
+                    );
+                    let (datas, io) = ts
+                        .read_durable(&[(node, path.to_string())])
+                        .map_err(|e2| RestartError::Fs(e2.to_string()))?;
+                    report.read_secs += io.duration;
+                    report.tier_fallbacks += 1;
+                    return CkptImage::decode(&datas[0])
+                        .map_err(|e2| RestartError::CorruptImage(rank, e2));
+                }
+            }
+            Err(RestartError::CorruptImage(rank, e))
+        }
     }
 }
 
@@ -957,5 +1214,163 @@ mod tests {
         let sim = JobSim::launch(quick_cfg(8, 0), None).unwrap();
         let agg = sim.aggregate_memory();
         assert!(agg >= 8 * (1 << 20));
+    }
+
+    // --------------------------------------------- staged (tiered) mode
+
+    fn staged_cfg(ranks: u32, steps: u64) -> RunConfig {
+        quick_cfg(ranks, steps).with_staging()
+    }
+
+    #[test]
+    fn staged_checkpoint_stalls_on_fast_tier_then_drains() {
+        let mut sim = JobSim::launch(staged_cfg(4, 0), None).unwrap();
+        sim.run_steps(2).unwrap();
+        let rep = sim.checkpoint().unwrap();
+        // The stall is the BB wave only; staging is queued, not synchronous.
+        assert!(rep.fast_write_secs > 0.0);
+        assert_eq!(rep.write_secs, rep.fast_write_secs);
+        assert_eq!(rep.durable_write_secs, 0.0, "no backpressure expected");
+        assert!(rep.drain_pending_bytes > 0);
+        // Ranks sit in the async Drain-to-PFS phase; nothing durable yet.
+        assert_eq!(
+            sim.coord.status.read().unwrap()[0].state,
+            RankState::Draining
+        );
+        assert_eq!(sim.fs.tiered().unwrap().durable().file_count(), 0);
+        // A few supersteps of background drain retire the queue.
+        sim.run_steps(3).unwrap();
+        let ts = sim.fs.tiered().unwrap();
+        assert_eq!(ts.pending_bytes(), 0);
+        assert!(ts
+            .durable()
+            .exists("synthetic-4r/gen0000/ckpt_rank00000.mana"));
+        assert!(ts.durable().exists("synthetic-4r/ckpt_manifest.txt"));
+        assert_eq!(
+            sim.coord.status.read().unwrap()[0].state,
+            RankState::Resumed
+        );
+        assert!(sim.coord.stats.staged_bytes >= rep.image_bytes);
+    }
+
+    #[test]
+    fn staged_cr_is_bitwise_identical() {
+        let mut cont = JobSim::launch(staged_cfg(4, 0), None).unwrap();
+        cont.run_steps(6).unwrap();
+        let want = cont.fingerprint();
+
+        let mut sim = JobSim::launch(staged_cfg(4, 0), None).unwrap();
+        sim.run_steps(3).unwrap();
+        sim.checkpoint().unwrap();
+        let cfg = sim.cfg.clone();
+        let fs = sim.kill();
+        let (mut resumed, rep) = JobSim::restart_from(cfg, None, fs).unwrap();
+        assert_eq!(resumed.step, 3);
+        assert_eq!(rep.tier_fallbacks, 0);
+        resumed.run_steps(3).unwrap();
+        assert_eq!(resumed.fingerprint(), want);
+        assert!(!resumed.any_corruption());
+    }
+
+    #[test]
+    fn staged_restart_survives_corrupt_fast_tier_image() {
+        let mut sim = JobSim::launch(staged_cfg(4, 0), None).unwrap();
+        sim.run_steps(2).unwrap();
+        sim.checkpoint().unwrap();
+        // Make everything durable, then corrupt one fast-tier copy only.
+        let drain_secs = sim.finish_drain();
+        assert!(drain_secs > 0.0);
+        let path = crate::ckpt::gen_image_path("synthetic-4r", 0, RankId(1));
+        let ts = sim.fs.tiered_mut().unwrap();
+        assert!(ts.durable().exists(&path));
+        assert!(ts.fast_mut().corrupt_byte(&path, 150));
+        let cfg = sim.cfg.clone();
+        let fs = sim.kill();
+        let (mut resumed, rep) = JobSim::restart_from(cfg, None, fs).unwrap();
+        assert_eq!(
+            rep.tier_fallbacks, 1,
+            "rank 1 must have fallen back to the durable tier"
+        );
+        assert_eq!(resumed.step, 2);
+        resumed.run_steps(2).unwrap();
+        assert!(!resumed.any_corruption());
+    }
+
+    #[test]
+    fn staged_restart_reads_evicted_generation_from_durable_tier() {
+        let mut sim = JobSim::launch(staged_cfg(4, 0), None).unwrap();
+        sim.run_steps(1).unwrap();
+        sim.checkpoint().unwrap();
+        sim.finish_drain();
+        // Drop the whole fast-tier copy of the generation (as eviction
+        // would); the durable tier alone must carry the restart.
+        {
+            let ts = sim.fs.tiered_mut().unwrap();
+            for p in ts.fast().paths() {
+                ts.fast_mut().delete(&p).unwrap();
+            }
+            assert_eq!(ts.fast().file_count(), 0);
+        }
+        let cfg = sim.cfg.clone();
+        let fs = sim.kill();
+        let (mut resumed, _) = JobSim::restart_from(cfg, None, fs).unwrap();
+        assert_eq!(resumed.step, 1);
+        resumed.run_steps(2).unwrap();
+        assert!(!resumed.any_corruption());
+    }
+
+    #[test]
+    fn staged_drain_resumes_after_restart() {
+        let mut sim = JobSim::launch(staged_cfg(4, 0), None).unwrap();
+        sim.run_steps(2).unwrap();
+        sim.checkpoint().unwrap();
+        // Kill while the drain queue is still pending.
+        assert!(sim.fs.tiered().unwrap().pending_bytes() > 0);
+        let cfg = sim.cfg.clone();
+        let fs = sim.kill();
+        let (mut resumed, _) = JobSim::restart_from(cfg, None, fs).unwrap();
+        assert!(resumed.fs.tiered().unwrap().pending_bytes() > 0);
+        assert_eq!(
+            resumed.coord.status.read().unwrap()[0].state,
+            RankState::Draining,
+            "interrupted drain must be visible after restart"
+        );
+        resumed.run_steps(3).unwrap();
+        let ts = resumed.fs.tiered().unwrap();
+        assert_eq!(
+            ts.pending_bytes(),
+            0,
+            "drain must resume on the restarted clock"
+        );
+        assert!(ts
+            .durable()
+            .exists("synthetic-4r/gen0000/ckpt_rank00000.mana"));
+    }
+
+    #[test]
+    fn staged_incremental_cr_is_bitwise_identical() {
+        let mut cfg = staged_cfg(4, 0);
+        cfg.incremental = true;
+        let mut cont = JobSim::launch(cfg.clone(), None).unwrap();
+        cont.run_steps(6).unwrap();
+        let want = cont.fingerprint();
+
+        let mut sim = JobSim::launch(cfg.clone(), None).unwrap();
+        sim.run_steps(2).unwrap();
+        let full = sim.checkpoint().unwrap();
+        sim.run_steps(2).unwrap();
+        let inc = sim.checkpoint().unwrap();
+        assert!(
+            inc.image_bytes < full.image_bytes,
+            "incremental must shrink the wave ({} vs {})",
+            inc.image_bytes,
+            full.image_bytes
+        );
+        let fs = sim.kill();
+        let (mut resumed, _) = JobSim::restart_from(cfg, None, fs).unwrap();
+        assert_eq!(resumed.step, 4, "must resume from the incremental");
+        resumed.run_steps(2).unwrap();
+        assert_eq!(resumed.fingerprint(), want);
+        assert!(!resumed.any_corruption());
     }
 }

@@ -1,0 +1,99 @@
+//! CRC-32 (IEEE 802.3, reflected, polynomial 0xEDB88320).
+//!
+//! The checkpoint image format CRC-protects every section, chunk, and the
+//! whole-image trailer. The image's offline crate set has no `crc32fast`,
+//! so this is a table-driven implementation with the same digest values
+//! (bitwise-compatible with zlib's `crc32()`), exposed through the same
+//! two-call API (`hash` for one-shot, `Hasher` for incremental).
+
+/// Precomputed remainder table for byte-at-a-time CRC updates.
+static TABLE: [u32; 256] = make_table();
+
+const fn make_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 {
+                0xEDB8_8320 ^ (c >> 1)
+            } else {
+                c >> 1
+            };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// One-shot CRC of a byte slice.
+pub fn hash(data: &[u8]) -> u32 {
+    let mut h = Hasher::new();
+    h.update(data);
+    h.finalize()
+}
+
+/// Incremental CRC state (feed spans, finalize once).
+#[derive(Clone, Debug)]
+pub struct Hasher {
+    state: u32,
+}
+
+impl Default for Hasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hasher {
+    pub fn new() -> Self {
+        Hasher { state: 0xFFFF_FFFF }
+    }
+
+    pub fn update(&mut self, data: &[u8]) {
+        let mut s = self.state;
+        for &b in data {
+            s = TABLE[((s ^ b as u32) & 0xff) as usize] ^ (s >> 8);
+        }
+        self.state = s;
+    }
+
+    pub fn finalize(self) -> u32 {
+        !self.state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // The canonical CRC-32 check value.
+        assert_eq!(hash(b"123456789"), 0xCBF4_3926);
+        assert_eq!(hash(b""), 0);
+        assert_eq!(hash(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn incremental_matches_oneshot() {
+        let data = b"the quick brown fox jumps over the lazy dog";
+        for split in [0usize, 1, 7, data.len()] {
+            let mut h = Hasher::new();
+            h.update(&data[..split]);
+            h.update(&data[split..]);
+            assert_eq!(h.finalize(), hash(data), "split={split}");
+        }
+    }
+
+    #[test]
+    fn sensitive_to_single_bitflip() {
+        let mut data = vec![0x5au8; 1024];
+        let clean = hash(&data);
+        data[512] ^= 0x01;
+        assert_ne!(hash(&data), clean);
+    }
+}
