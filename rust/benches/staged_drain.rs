@@ -13,15 +13,22 @@
 //!   * staged stall > 5x below the pure-Lustre synchronous write at 512
 //!     ranks, with images durable on the Lustre tier afterwards;
 //!   * restart succeeds from either tier, including CRC fallback to the
-//!     durable tier after a corrupted fast-tier image.
+//!     durable tier after a corrupted fast-tier image;
+//!   * **dedup series**: repeated full checkpoints of a mostly-clean
+//!     512-rank address space drain ≤ 25% of the logical image bytes
+//!     physically from generation 2 on (content-addressed chunk store),
+//!     and a controlled ~10%-dirty workload drains near its dirty
+//!     fraction — while restart from the durable tier alone still
+//!     reproduces byte-identical, CRC-clean images.
 
 use mana::benchkit::{fsecs, Report};
-use mana::ckpt::gen_image_path;
+use mana::ckpt::{gen_image_path, ChunkRecipe};
 use mana::config::{AppKind, RunConfig};
-use mana::fs::FsKind;
+use mana::fs::{FileSystem, FsConfig, FsKind, TieredStore, WriteReq};
 use mana::sim::JobSim;
-use mana::topology::RankId;
+use mana::topology::{NodeId, RankId};
 use mana::util::bytes::human;
+use mana::util::prng::SplitMix64;
 
 /// ≈5.8 TB aggregate at 512 ranks (the paper's HPCG footprint).
 const MEM_PER_RANK: u64 = 11_328_000_000;
@@ -49,7 +56,14 @@ fn cfg_for(ranks: u32, mode: &Mode) -> RunConfig {
     match mode {
         Mode::Bb => cfg.fs = FsKind::BurstBuffer,
         Mode::Lustre => cfg.fs = FsKind::Lustre,
-        Mode::Staged => cfg = cfg.with_staging(),
+        Mode::Staged => {
+            cfg = cfg.with_staging();
+            // Coarse dedup granularity for the 11 GB/rank stall series:
+            // the stall assertions don't exercise dedup, and 8 MiB chunks
+            // keep the 512-rank chunk index small (the fine-grained dedup
+            // series below runs at the default 1 MiB).
+            cfg.chunk_bytes = 8 << 20;
+        }
     }
     cfg
 }
@@ -85,9 +99,9 @@ fn measure(ranks: u32, mode: Mode) -> Point {
         drain_bg = sim.finish_drain();
         let ts = sim.fs.tiered().unwrap();
         assert_eq!(ts.pending_bytes(), 0);
+        assert_eq!(ts.pending_files(), 0);
         assert!(
-            ts.durable()
-                .exists(&gen_image_path(&sim.cfg.job, 0, RankId(0))),
+            ts.is_durable(&gen_image_path(&sim.cfg.job, 0, RankId(0))),
             "image must be durable on the Lustre tier"
         );
     }
@@ -134,6 +148,189 @@ fn restart_checks() {
         "restart OK: fast-tier restart + CRC fallback to the durable tier \
          ({} fallback reads)",
         rrep.tier_fallbacks
+    );
+}
+
+/// Dedup acceptance at 512 ranks: repeated full checkpoints of a
+/// mostly-clean address space (the synthetic app dirties only its tiny
+/// state region per superstep; the big pattern heap stays clean). From
+/// generation 2 on, the physical durable-tier drain bytes must be ≤ 25%
+/// of the logical image bytes, and restart must succeed from the durable
+/// tier alone with a byte-identical image.
+fn dedup_512_ranks() {
+    let mut cfg = cfg_for(512, &Mode::Staged);
+    cfg.job = "staged-dedup-512".into();
+    cfg.mem_per_rank = Some(256 << 20); // 128 GB aggregate, 1 MiB chunks
+    cfg.chunk_bytes = 1 << 20;
+    let mut rep = Report::new(
+        "STAGED-DEDUP: 512 ranks, repeated full ckpts, mostly-clean memory",
+        vec![
+            "gen",
+            "logical",
+            "physical",
+            "deduped",
+            "dedup_ratio",
+        ],
+    );
+    let mut sim = JobSim::launch(cfg.clone(), None).expect("launch");
+    sim.run_steps(1).expect("steps");
+    let mut prev_drained = 0u64;
+    for gen in 0..3u64 {
+        let crep = sim.checkpoint().expect("ckpt");
+        sim.finish_drain();
+        let drained = sim.fs.tiered().unwrap().stats.drained_bytes;
+        let physical = drained - prev_drained;
+        prev_drained = drained;
+        rep.row(vec![
+            gen.to_string(),
+            human(crep.image_bytes),
+            human(physical),
+            human(crep.deduped_bytes),
+            format!("{:.1}%", crep.dedup_ratio() * 100.0),
+        ]);
+        if gen >= 1 {
+            assert!(
+                physical <= crep.image_bytes / 4,
+                "gen {gen}: physical drain {} exceeds 25% of logical {}",
+                human(physical),
+                human(crep.image_bytes)
+            );
+            assert!(crep.deduped_bytes > 0, "gen {gen} must dedup");
+        }
+        sim.run_steps(1).expect("steps");
+    }
+    rep.finish();
+
+    // Byte-identical restart from the durable tier alone: wipe the fast
+    // tier entirely, reassemble every image from chunk objects.
+    let want = {
+        let mut cont = JobSim::launch(cfg.clone(), None).expect("launch");
+        // Checkpoints landed after steps 1, 2, 3; the last one resumes at
+        // step 3, and the interrupted run took one more step after it.
+        cont.run_steps(4).expect("steps");
+        cont.fingerprint()
+    };
+    {
+        let ts = sim.fs.tiered_mut().unwrap();
+        for p in ts.fast().paths() {
+            ts.fast_mut().delete(&p).expect("fast delete");
+        }
+        assert_eq!(ts.fast().file_count(), 0, "fast tier fully lost");
+    }
+    let fs = sim.kill();
+    let (mut resumed, rrep) = JobSim::restart_from(cfg, None, fs)
+        .expect("restart must reassemble images from the chunk store");
+    assert_eq!(resumed.step, 3, "resumes from the last generation");
+    assert!(rrep.read_secs > 0.0);
+    resumed.run_steps(1).expect("post-restart step");
+    assert_eq!(
+        resumed.fingerprint(),
+        want,
+        "durable-only restart must be byte-identical (CRC-clean decode)"
+    );
+    println!(
+        "DEDUP OK: gen>=2 physical drain <= 25% of logical; durable-only \
+         restart byte-identical"
+    );
+}
+
+/// Controlled dedup series: a raw ~10%-dirty-per-generation workload on
+/// the tiered store directly. Physical durable-tier bytes per drain must
+/// fall to near the dirty fraction of the logical bytes.
+fn dedup_dirty_fraction_series() {
+    // Small real buffers (the dedup math is scale-free): 8 files x 64
+    // chunks x 64 KiB = 32 MiB logical per generation.
+    const CHUNK: usize = 64 << 10;
+    const CHUNKS_PER_FILE: usize = 64;
+    const FILES: u32 = 8;
+    const DIRTY_PER_GEN: usize = 6; // ~10% of 64 chunks
+    let gens = 5u64;
+
+    let mut bb = FsConfig::burst_buffer(4);
+    bb.capacity = 1 << 40;
+    let mut ts = TieredStore::new(
+        FileSystem::new(bb),
+        FileSystem::new(FsConfig::cscratch()),
+        gens as usize + 1,
+        4,
+    );
+    let mut rep = Report::new(
+        "STAGED-DEDUP: ~10% dirty chunks per generation (raw tiered store)",
+        vec!["gen", "logical", "physical", "deduped", "dedup_ratio"],
+    );
+    // Avalanche-quality bytes (per-file SplitMix64 stream) so every
+    // chunk-sized window is distinct — a short-period pattern would alias
+    // chunks and fake extra dedup.
+    let mut datas: Vec<Vec<u8>> = (0..FILES)
+        .map(|f| {
+            let mut sm = SplitMix64::new(f as u64);
+            let mut out = Vec::with_capacity(CHUNKS_PER_FILE * CHUNK + 8);
+            while out.len() < CHUNKS_PER_FILE * CHUNK {
+                out.extend_from_slice(&sm.next_u64().to_le_bytes());
+            }
+            out.truncate(CHUNKS_PER_FILE * CHUNK);
+            out
+        })
+        .collect();
+    let logical = (FILES as u64) * (CHUNKS_PER_FILE * CHUNK) as u64;
+    let mut prev_drained = 0u64;
+    let mut prev_deduped = 0u64;
+    for gen in 0..gens {
+        if gen > 0 {
+            // Dirty ~10% of each file's chunks (one byte is enough to
+            // change the chunk's content digest).
+            for data in &mut datas {
+                for d in 0..DIRTY_PER_GEN {
+                    let off = (d * (CHUNKS_PER_FILE / DIRTY_PER_GEN) * CHUNK
+                        + gen as usize)
+                        % data.len();
+                    data[off] ^= 0xA5;
+                }
+            }
+        }
+        ts.begin_ckpt(gen as f64 * 100.0);
+        let reqs: Vec<WriteReq> = datas
+            .iter()
+            .enumerate()
+            .map(|(f, data)| WriteReq {
+                node: NodeId(f as u32 % 4),
+                path: format!("gen{gen}/f{f}"),
+                virtual_bytes: data.len() as u64,
+                data: data.clone(),
+                recipe: Some(ChunkRecipe::from_data(data, CHUNK, data.len() as u64)),
+            })
+            .collect();
+        ts.write_wave(reqs).expect("wave");
+        ts.drain_sync();
+        let physical = ts.stats.drained_bytes - prev_drained;
+        let deduped = ts.stats.deduped_bytes - prev_deduped;
+        prev_drained = ts.stats.drained_bytes;
+        prev_deduped = ts.stats.deduped_bytes;
+        let ratio = deduped as f64 / logical as f64;
+        rep.row(vec![
+            gen.to_string(),
+            human(logical),
+            human(physical),
+            human(deduped),
+            format!("{:.1}%", ratio * 100.0),
+        ]);
+        if gen == 0 {
+            assert_eq!(physical, logical, "gen 0 ships every byte");
+        } else {
+            let dirty_fraction = physical as f64 / logical as f64;
+            assert!(
+                dirty_fraction < 0.15,
+                "gen {gen}: physical drain fraction {dirty_fraction:.2} \
+                 not near the ~10% dirty fraction"
+            );
+            assert!(ratio > 0.85, "gen {gen}: dedup ratio {ratio:.2} too low");
+        }
+    }
+    rep.finish();
+    println!(
+        "DEDUP OK: physical drain per generation fell to the dirty fraction \
+         ({} unique chunks indexed)",
+        ts.chunk_store().chunk_count()
     );
 }
 
@@ -189,5 +386,7 @@ fn main() {
         lustre512 / staged512
     );
     restart_checks();
+    dedup_512_ranks();
+    dedup_dirty_fraction_series();
     println!("STAGED OK: async BB->Lustre staging hides the PFS write from ranks");
 }

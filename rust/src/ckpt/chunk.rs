@@ -1,4 +1,5 @@
-//! Fixed-size chunk framing for checkpoint image payloads (format v4).
+//! Fixed-size chunk framing for checkpoint image payloads (format v4) and
+//! the content-addressed **chunk recipes** the dedup-aware drain consumes.
 //!
 //! Large `Payload::Real` region contents are emitted as a sequence of
 //! fixed-size chunks, each carrying its own CRC32:
@@ -17,6 +18,15 @@
 //!   can stop and resume on any chunk boundary of the simulated clock.
 //! * **Torn-write localization** — a corrupt byte fails exactly one chunk
 //!   CRC, which names the damaged span instead of just "image bad".
+//! * **Content addressing** — each chunk gets a 128-bit content digest
+//!   ([`RecipeChunk`]); the durable-tier chunk store dedups on it, so a
+//!   drain ships only chunks the PFS does not already hold.
+//!
+//! The chunk size is configurable (`RunConfig::chunk_bytes`,
+//! `--chunk-bytes`, power of two); [`DEFAULT_CHUNK_BYTES`] keeps the
+//! historical 1 MiB. Frames are self-describing (every chunk carries its
+//! length), so a reader never needs the writer's configured size — decode
+//! only sanity-bounds lengths by [`MAX_CHUNK_BYTES`].
 //!
 //! CRC chain of custody (no byte is hashed twice): chunk bytes are covered
 //! by their chunk CRC only; the chunk *metadata* (count, lengths, CRCs) is
@@ -24,29 +34,39 @@
 //! whole-image trailer.
 
 use crate::util::crc32;
+use crate::util::digest::Hasher128;
 
 use super::{Cursor, ImageError};
 
-/// Fixed chunk size for Real payload framing (1 MiB).
-pub const CHUNK_BYTES: usize = 1 << 20;
+/// Default chunk size for payload framing and dedup granularity (1 MiB).
+pub const DEFAULT_CHUNK_BYTES: usize = 1 << 20;
+
+/// Upper bound a decoder accepts for a single framed chunk. Frames are
+/// self-describing, so this only guards against corrupt length fields.
+pub const MAX_CHUNK_BYTES: usize = 64 << 20;
 
 /// Number of chunks a payload of `data_len` bytes occupies.
-pub fn chunk_count(data_len: usize) -> usize {
-    data_len.div_ceil(CHUNK_BYTES)
+pub fn chunk_count(data_len: usize, chunk_bytes: usize) -> usize {
+    data_len.div_ceil(chunk_bytes)
 }
 
 /// Encoded size of a chunk-framed payload (count + lengths + CRCs + data).
-pub fn encoded_len(data_len: usize) -> usize {
-    4 + data_len + chunk_count(data_len) * 8
+pub fn encoded_len(data_len: usize, chunk_bytes: usize) -> usize {
+    4 + data_len + chunk_count(data_len, chunk_bytes) * 8
 }
 
 /// Append `data` chunk-framed to `out`, folding the frame metadata (but
 /// not the chunk bytes, which carry their own CRCs) into `section`.
-pub(crate) fn write_chunked(out: &mut Vec<u8>, data: &[u8], section: &mut crc32::Hasher) {
-    let n = (chunk_count(data.len()) as u32).to_le_bytes();
+pub(crate) fn write_chunked(
+    out: &mut Vec<u8>,
+    data: &[u8],
+    chunk_bytes: usize,
+    section: &mut crc32::Hasher,
+) {
+    let n = (chunk_count(data.len(), chunk_bytes) as u32).to_le_bytes();
     out.extend_from_slice(&n);
     section.update(&n);
-    for chunk in data.chunks(CHUNK_BYTES) {
+    for chunk in data.chunks(chunk_bytes) {
         let len = (chunk.len() as u32).to_le_bytes();
         out.extend_from_slice(&len);
         section.update(&len);
@@ -70,9 +90,9 @@ pub(crate) fn read_chunked(
     // Counts are parsed before any CRC validates them: never trust them
     // for allocation; grow the buffer as verified chunks arrive.
     let mut data = Vec::new();
-    for _ in 0..n_chunks {
+    for idx in 0..n_chunks {
         let len = c.u32()?;
-        if len as usize > CHUNK_BYTES {
+        if len as usize > MAX_CHUNK_BYTES {
             return Err(ImageError::Truncated("chunk length"));
         }
         section.update(&len.to_le_bytes());
@@ -80,7 +100,7 @@ pub(crate) fn read_chunked(
         let want = c.u32()?;
         if crc32::hash(bytes) != want {
             return Err(ImageError::CrcMismatch {
-                section: format!("{name}: chunk {}", data.len() / CHUNK_BYTES),
+                section: format!("{name}: chunk {idx}"),
             });
         }
         section.update(&want.to_le_bytes());
@@ -89,15 +109,126 @@ pub(crate) fn read_chunked(
     Ok(data)
 }
 
+// --------------------------------------------------------------- recipes
+
+/// Digest domain tags: chunks of different payload kinds must never alias.
+pub(crate) const TAG_META: u8 = 0xF0;
+pub(crate) const TAG_ZERO: u8 = 0x00;
+pub(crate) const TAG_PATTERN: u8 = 0x01;
+pub(crate) const TAG_REAL: u8 = 0x02;
+pub(crate) const TAG_PARENT: u8 = 0x03;
+/// Raw content addressing with no semantic structure ([`ChunkRecipe::from_data`]).
+pub(crate) const TAG_RAW: u8 = 0x52;
+
+/// Canonical chunk digest: the domain tag, the virtual size, the carried
+/// real-byte length, any kind-specific context (`extra`), then the real
+/// bytes themselves. Including `real_len` guarantees two chunks with the
+/// same digest always carry identical stored bytes — the soundness
+/// condition for content-addressed reassembly.
+pub(crate) fn chunk_digest(tag: u8, vbytes: u64, extra: &[u8], real: &[u8]) -> u128 {
+    let mut h = Hasher128::new();
+    h.update(&[tag]);
+    h.update(&vbytes.to_le_bytes());
+    h.update(&(real.len() as u64).to_le_bytes());
+    h.update(extra);
+    h.update(real);
+    h.finalize()
+}
+
+/// One content-addressed span of an encoded checkpoint file.
+///
+/// `vbytes` is the *logical* (virtual) content this chunk accounts for —
+/// what bandwidth and capacity are charged on. `real_off`/`real_len` name
+/// the encoded-file bytes the chunk carries; concatenating every chunk's
+/// real span in recipe order reproduces the encoded file exactly. Chunks
+/// that are purely virtual (e.g. the tail of a pattern-backed heap whose
+/// encoding is just a seed) have `real_len == 0`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RecipeChunk {
+    pub digest: u128,
+    pub vbytes: u64,
+    pub real_off: u64,
+    pub real_len: u64,
+}
+
+/// Ordered digest list from which a checkpoint file is reassembled: the
+/// durable tier stores one object per unique digest plus this recipe, and
+/// restart rebuilds the byte-identical encoded image from them even after
+/// the fast tier is gone.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChunkRecipe {
+    /// Chunk granularity this recipe was built with.
+    pub chunk_bytes: u64,
+    /// Logical bytes of the whole file (sum of chunk `vbytes`).
+    pub file_vbytes: u64,
+    pub chunks: Vec<RecipeChunk>,
+}
+
+impl ChunkRecipe {
+    /// Content-address raw data with no semantic structure: fixed-size
+    /// real chunks, the file's virtual bytes distributed evenly across
+    /// them. Used for files the checkpoint encoder did not produce (and by
+    /// benches/tests to craft controlled dedup workloads).
+    pub fn from_data(data: &[u8], chunk_bytes: usize, file_vbytes: u64) -> Self {
+        assert!(chunk_bytes > 0, "chunk_bytes must be positive");
+        let n = chunk_count(data.len(), chunk_bytes).max(1);
+        let mut chunks = Vec::with_capacity(n);
+        let base_vb = file_vbytes / n as u64;
+        let mut off = 0usize;
+        for i in 0..n {
+            let len = chunk_bytes.min(data.len() - off);
+            let vb = if i + 1 == n {
+                file_vbytes - base_vb * (n as u64 - 1)
+            } else {
+                base_vb
+            };
+            let real = &data[off..off + len];
+            chunks.push(RecipeChunk {
+                digest: chunk_digest(TAG_RAW, vb, &[], real),
+                vbytes: vb,
+                real_off: off as u64,
+                real_len: len as u64,
+            });
+            off += len;
+        }
+        ChunkRecipe {
+            chunk_bytes: chunk_bytes as u64,
+            file_vbytes,
+            chunks,
+        }
+    }
+
+    /// Real (stored) bytes this recipe's chunks carry in total.
+    pub fn real_bytes(&self) -> u64 {
+        self.chunks.iter().map(|c| c.real_len).sum()
+    }
+
+    /// Check the soundness invariant: non-empty real spans are contiguous
+    /// from offset 0 and cover exactly `encoded_len` bytes.
+    pub fn covers(&self, encoded_len: u64) -> bool {
+        let mut pos = 0u64;
+        for c in &self.chunks {
+            if c.real_len == 0 {
+                continue;
+            }
+            if c.real_off != pos {
+                return false;
+            }
+            pos += c.real_len;
+        }
+        pos == encoded_len
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn roundtrip(data: &[u8]) -> Vec<u8> {
+    fn roundtrip_with(data: &[u8], cb: usize) -> Vec<u8> {
         let mut out = Vec::new();
         let mut w = crc32::Hasher::new();
-        write_chunked(&mut out, data, &mut w);
-        assert_eq!(out.len(), encoded_len(data.len()));
+        write_chunked(&mut out, data, cb, &mut w);
+        assert_eq!(out.len(), encoded_len(data.len(), cb));
         let mut c = Cursor { buf: &out, pos: 0 };
         let mut r = crc32::Hasher::new();
         let back = read_chunked(&mut c, &mut r, "t").unwrap();
@@ -110,9 +241,13 @@ mod tests {
         back
     }
 
+    fn roundtrip(data: &[u8]) -> Vec<u8> {
+        roundtrip_with(data, DEFAULT_CHUNK_BYTES)
+    }
+
     #[test]
     fn empty_payload_is_zero_chunks() {
-        assert_eq!(chunk_count(0), 0);
+        assert_eq!(chunk_count(0, DEFAULT_CHUNK_BYTES), 0);
         assert_eq!(roundtrip(&[]), Vec::<u8>::new());
     }
 
@@ -121,18 +256,32 @@ mod tests {
         let small = vec![7u8; 100];
         assert_eq!(roundtrip(&small), small);
         // 2.5 chunks worth of patterned data.
-        let big: Vec<u8> = (0..CHUNK_BYTES * 5 / 2).map(|i| (i % 251) as u8).collect();
-        assert_eq!(chunk_count(big.len()), 3);
+        let big: Vec<u8> = (0..DEFAULT_CHUNK_BYTES * 5 / 2)
+            .map(|i| (i % 251) as u8)
+            .collect();
+        assert_eq!(chunk_count(big.len(), DEFAULT_CHUNK_BYTES), 3);
         assert_eq!(roundtrip(&big), big);
     }
 
     #[test]
+    fn non_default_chunk_sizes_roundtrip() {
+        // Frames are self-describing: any power-of-two granularity decodes
+        // with the same reader.
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i % 255) as u8).collect();
+        for cb in [64usize, 4096, 1 << 16] {
+            assert_eq!(roundtrip_with(&data, cb), data, "chunk_bytes={cb}");
+        }
+    }
+
+    #[test]
     fn chunk_bitflip_names_the_chunk() {
-        let big: Vec<u8> = (0..CHUNK_BYTES + 10).map(|i| (i % 13) as u8).collect();
+        let big: Vec<u8> = (0..DEFAULT_CHUNK_BYTES + 10)
+            .map(|i| (i % 13) as u8)
+            .collect();
         let mut out = Vec::new();
-        write_chunked(&mut out, &big, &mut crc32::Hasher::new());
+        write_chunked(&mut out, &big, DEFAULT_CHUNK_BYTES, &mut crc32::Hasher::new());
         // Flip a byte inside the second chunk's data span.
-        let second_data = 4 + (4 + CHUNK_BYTES + 4) + 4 + 3;
+        let second_data = 4 + (4 + DEFAULT_CHUNK_BYTES + 4) + 4 + 3;
         out[second_data] ^= 0x80;
         let mut c = Cursor { buf: &out, pos: 0 };
         match read_chunked(&mut c, &mut crc32::Hasher::new(), "heap") {
@@ -146,10 +295,58 @@ mod tests {
     #[test]
     fn oversized_chunk_length_rejected() {
         let mut out = Vec::new();
-        write_chunked(&mut out, &[1, 2, 3], &mut crc32::Hasher::new());
+        write_chunked(&mut out, &[1, 2, 3], DEFAULT_CHUNK_BYTES, &mut crc32::Hasher::new());
         // Corrupt the chunk length field to something absurd.
         out[4..8].copy_from_slice(&(u32::MAX).to_le_bytes());
         let mut c = Cursor { buf: &out, pos: 0 };
         assert!(read_chunked(&mut c, &mut crc32::Hasher::new(), "t").is_err());
+    }
+
+    // ------------------------------------------------------------ recipes
+
+    #[test]
+    fn from_data_is_deterministic_and_covers() {
+        let data: Vec<u8> = (0..300u32).map(|i| (i % 7) as u8).collect();
+        let a = ChunkRecipe::from_data(&data, 128, 300);
+        let b = ChunkRecipe::from_data(&data, 128, 300);
+        assert_eq!(a, b);
+        assert_eq!(a.chunks.len(), 3);
+        assert_eq!(a.file_vbytes, 300);
+        assert_eq!(a.chunks.iter().map(|c| c.vbytes).sum::<u64>(), 300);
+        assert_eq!(a.real_bytes(), 300);
+        assert!(a.covers(300));
+    }
+
+    #[test]
+    fn from_data_digests_track_content() {
+        let mut data = vec![9u8; 512];
+        let a = ChunkRecipe::from_data(&data, 128, 512);
+        data[200] ^= 1; // dirty one byte in chunk 1
+        let b = ChunkRecipe::from_data(&data, 128, 512);
+        assert_eq!(a.chunks[0].digest, b.chunks[0].digest);
+        assert_ne!(a.chunks[1].digest, b.chunks[1].digest);
+        assert_eq!(a.chunks[2].digest, b.chunks[2].digest);
+        assert_eq!(a.chunks[3].digest, b.chunks[3].digest);
+    }
+
+    #[test]
+    fn digest_domains_never_alias() {
+        // Same payload bytes under different tags or virtual sizes must
+        // produce different digests.
+        let d = chunk_digest(TAG_REAL, 64, &[], b"same bytes");
+        assert_ne!(d, chunk_digest(TAG_RAW, 64, &[], b"same bytes"));
+        assert_ne!(d, chunk_digest(TAG_REAL, 65, &[], b"same bytes"));
+        assert_ne!(d, chunk_digest(TAG_REAL, 64, &[1], b"same bytes"));
+    }
+
+    #[test]
+    fn empty_data_recipe_still_has_one_chunk() {
+        // A zero-real-byte file (all-virtual) still needs a recipe entry
+        // so the virtual bytes are accounted for.
+        let r = ChunkRecipe::from_data(&[], 128, 1000);
+        assert_eq!(r.chunks.len(), 1);
+        assert_eq!(r.chunks[0].vbytes, 1000);
+        assert_eq!(r.chunks[0].real_len, 0);
+        assert!(r.covers(0));
     }
 }

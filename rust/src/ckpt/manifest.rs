@@ -24,6 +24,10 @@ pub struct CkptManifest {
     /// Generation of the last *full* checkpoint (the incremental parent),
     /// when one exists.
     pub full_gen: Option<u64>,
+    /// Chunk granularity (bytes) the set's images and recipes were written
+    /// with, so a restarted job keeps the dedup granularity consistent
+    /// across its lifetime (0 = unrecorded, pre-dedup manifest).
+    pub chunk_bytes: u64,
     entries: BTreeMap<u32, String>,
 }
 
@@ -34,6 +38,7 @@ impl CkptManifest {
             step,
             gen: 0,
             full_gen: None,
+            chunk_bytes: 0,
             entries: BTreeMap::new(),
         }
     }
@@ -67,6 +72,9 @@ impl CkptManifest {
         if let Some(fg) = self.full_gen {
             out.push_str(&format!("fullgen\t{fg}\n"));
         }
+        if self.chunk_bytes > 0 {
+            out.push_str(&format!("chunkbytes\t{}\n", self.chunk_bytes));
+        }
         for (rank, path) in &self.entries {
             out.push_str(&format!("{rank}\t{path}\n"));
         }
@@ -83,6 +91,7 @@ impl CkptManifest {
                 "step" => m.step = v.parse().ok()?,
                 "gen" => m.gen = v.parse().ok()?,
                 "fullgen" => m.full_gen = Some(v.parse().ok()?),
+                "chunkbytes" => m.chunk_bytes = v.parse().ok()?,
                 rank => {
                     m.entries.insert(rank.parse().ok()?, v.to_string());
                 }
@@ -106,6 +115,7 @@ mod tests {
         let mut m = CkptManifest::new("job7", 420);
         m.gen = 3;
         m.full_gen = Some(2);
+        m.chunk_bytes = 1 << 20;
         for r in 0..512u32 {
             m.add(RankId(r), crate::ckpt::image_path("job7", RankId(r)));
         }
@@ -116,6 +126,15 @@ mod tests {
             back.path_for(RankId(511)).unwrap(),
             "job7/ckpt_rank00511.mana"
         );
+    }
+
+    #[test]
+    fn manifest_without_chunk_bytes_decodes_as_unrecorded() {
+        // Pre-dedup manifests have no chunkbytes line; they must still
+        // decode, reporting granularity 0 (unrecorded).
+        let m = CkptManifest::new("job7", 1);
+        let back = CkptManifest::decode(&m.encode()).unwrap();
+        assert_eq!(back.chunk_bytes, 0);
     }
 
     #[test]

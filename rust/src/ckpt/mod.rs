@@ -44,6 +44,8 @@ use crate::mem::{Half, MemRegion, Payload, RegionTable};
 use crate::topology::RankId;
 use crate::util::crc32;
 
+pub use chunk::ChunkRecipe;
+
 const MAGIC: &[u8; 8] = b"MANAIMG1";
 const VERSION: u32 = 4;
 
@@ -236,7 +238,7 @@ impl CkptImage {
     // ------------------------------------------------------------- encode
 
     /// Exact encoded size (avoids reallocation in the write hot path).
-    fn encoded_size(&self) -> usize {
+    fn encoded_size(&self, chunk_bytes: usize) -> usize {
         let mut n = 8 + 4 + 4 + 8 + 32; // magic..rng
         n += 4 + self.parent.as_deref().map_or(0, str::len);
         n += 4;
@@ -249,7 +251,9 @@ impl CkptImage {
             n += match &r.payload {
                 SavedPayload::Full(Payload::Zero) => 0,
                 SavedPayload::Full(Payload::Pattern(_)) => 8,
-                SavedPayload::Full(Payload::Real(d)) => chunk::encoded_len(d.len()),
+                SavedPayload::Full(Payload::Real(d)) => {
+                    chunk::encoded_len(d.len(), chunk_bytes)
+                }
                 SavedPayload::ParentRef { .. } => 8,
             };
             n += 4; // section crc
@@ -258,18 +262,65 @@ impl CkptImage {
     }
 
     pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(self.encoded_size());
+        let mut out = Vec::with_capacity(self.encoded_size(chunk::DEFAULT_CHUNK_BYTES));
         self.encode_into(&mut out);
         out
+    }
+
+    /// Streaming encoder at the default chunk granularity.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        self.encode_impl(out, chunk::DEFAULT_CHUNK_BYTES, None);
+    }
+
+    /// Streaming encoder with explicit chunk granularity
+    /// (`RunConfig::chunk_bytes` / `--chunk-bytes`).
+    pub fn encode_into_sized(&self, out: &mut Vec<u8>, chunk_bytes: usize) {
+        self.encode_impl(out, chunk_bytes, None);
+    }
+
+    /// Streaming encoder that also emits the image's [`ChunkRecipe`]: the
+    /// ordered per-chunk content digests the dedup-aware drain consumes,
+    /// with each chunk's virtual size and the encoded-byte span it carries.
+    /// Concatenating the real spans in order reproduces `out`'s new bytes
+    /// exactly (checked by a debug assertion).
+    pub fn encode_with_recipe(&self, out: &mut Vec<u8>, chunk_bytes: usize) -> ChunkRecipe {
+        let mut recipe = ChunkRecipe {
+            chunk_bytes: chunk_bytes as u64,
+            file_vbytes: self.write_bytes(),
+            chunks: Vec::new(),
+        };
+        let base = out.len();
+        self.encode_impl(out, chunk_bytes, Some(&mut recipe));
+        debug_assert!(
+            recipe.covers((out.len() - base) as u64),
+            "recipe real spans must tile the encoded image"
+        );
+        debug_assert_eq!(
+            recipe.chunks.iter().map(|c| c.vbytes).sum::<u64>(),
+            recipe.file_vbytes,
+            "recipe virtual bytes must sum to write_bytes"
+        );
+        recipe
     }
 
     /// Streaming encoder: append the image to `out` (callers pre-reserve
     /// via [`Self::encoded_size`] math or reuse one buffer across ranks).
     /// `Real` payload bytes flow from the live region straight into `out`
     /// in CRC'd fixed-size chunks — no intermediate whole-image buffer.
-    pub fn encode_into(&self, out: &mut Vec<u8>) {
+    /// With `recipe`, per-chunk content digests are recorded as encoding
+    /// proceeds (payload bytes are digested exactly once, in place).
+    fn encode_impl(
+        &self,
+        out: &mut Vec<u8>,
+        chunk_bytes: usize,
+        mut recipe: Option<&mut ChunkRecipe>,
+    ) {
+        assert!(
+            chunk_bytes > 0 && chunk_bytes <= chunk::MAX_CHUNK_BYTES,
+            "chunk_bytes {chunk_bytes} out of range"
+        );
         let base = out.len();
-        out.reserve(self.encoded_size());
+        out.reserve(self.encoded_size(chunk_bytes));
         out.extend_from_slice(MAGIC);
         put_u32(out, VERSION);
         put_u32(out, self.rank.0);
@@ -287,6 +338,11 @@ impl CkptImage {
         // any corruption still lands in some CRC).
         let mut trailer = crc32::Hasher::new();
         trailer.update(&out[base..]);
+        if let Some(rec) = recipe.as_deref_mut() {
+            // Header chunk: zero virtual bytes, re-ships every generation
+            // (step/rng change), but it is ~100 real bytes.
+            push_meta_chunk(rec, base, base, out);
+        }
         for r in &self.regions {
             let start = out.len();
             put_u64(out, r.addr);
@@ -309,7 +365,7 @@ impl CkptImage {
                     out.push(2);
                     let mut sec = crc32::Hasher::new();
                     sec.update(&out[start..]);
-                    chunk::write_chunked(out, data, &mut sec);
+                    chunk::write_chunked(out, data, chunk_bytes, &mut sec);
                     sec.finalize()
                 }
                 SavedPayload::ParentRef { fingerprint } => {
@@ -320,8 +376,15 @@ impl CkptImage {
             };
             put_u32(out, crc);
             trailer.update(&crc.to_le_bytes());
+            if let Some(rec) = recipe.as_deref_mut() {
+                push_region_chunks(rec, r, base, start, out, chunk_bytes);
+            }
         }
+        let tstart = out.len();
         put_u32(out, trailer.finalize());
+        if let Some(rec) = recipe.as_deref_mut() {
+            push_meta_chunk(rec, base, tstart, out);
+        }
     }
 
     // ------------------------------------------------------------- decode
@@ -436,6 +499,184 @@ impl CkptImage {
             regions,
         })
     }
+}
+
+// ------------------------------------------------------- recipe building
+
+/// Virtual bytes chunk `i` of a `vlen`-byte region accounts for.
+fn chunk_vb(vlen: u64, i: usize, chunk_bytes: usize) -> u64 {
+    let cb = chunk_bytes as u64;
+    let off = (i as u64).saturating_mul(cb);
+    if off >= vlen {
+        0
+    } else {
+        (vlen - off).min(cb)
+    }
+}
+
+/// Record a zero-virtual-byte metadata chunk covering `out[span_start..]`
+/// (the image header, or the whole-image trailer).
+fn push_meta_chunk(rec: &mut ChunkRecipe, base: usize, span_start: usize, out: &[u8]) {
+    let real = &out[span_start..];
+    rec.chunks.push(chunk::RecipeChunk {
+        digest: chunk::chunk_digest(chunk::TAG_META, 0, &[], real),
+        vbytes: 0,
+        real_off: (span_start - base) as u64,
+        real_len: real.len() as u64,
+    });
+}
+
+/// Record the recipe chunks of one just-encoded region record
+/// (`out[start..]`, section CRC included).
+///
+/// Layout rules (the reassembly soundness contract):
+/// * every encoded byte of the record is carried by exactly one chunk's
+///   real span, in order — chunk 0 picks up the record metadata, the last
+///   real-carrying chunk picks up the section CRC;
+/// * virtual-only chunks (pattern/zero tails whose encoding is just a
+///   seed) carry no real bytes and dedup purely on semantic content;
+/// * a chunk's digest covers any real bytes it carries, so equal digests
+///   always reproduce equal stored bytes.
+fn push_region_chunks(
+    rec: &mut ChunkRecipe,
+    r: &SavedRegion,
+    base: usize,
+    start: usize,
+    out: &[u8],
+    chunk_bytes: usize,
+) {
+    let end = out.len();
+    let span = |a: usize, b: usize| ((a - base) as u64, (b - a) as u64);
+    match &r.payload {
+        SavedPayload::Full(Payload::Zero) => {
+            let n = chunk_count_virtual(r.vlen, chunk_bytes);
+            for i in 0..n {
+                let vb = chunk_vb(r.vlen, i, chunk_bytes);
+                // Chunk 0 carries the encoded record; the rest are pure
+                // virtual zero chunks that dedup globally by size.
+                let (real_off, real_len, real): (u64, u64, &[u8]) = if i == 0 {
+                    let (o, l) = span(start, end);
+                    (o, l, &out[start..end])
+                } else {
+                    (0, 0, &[])
+                };
+                rec.chunks.push(chunk::RecipeChunk {
+                    digest: chunk::chunk_digest(chunk::TAG_ZERO, vb, &[], real),
+                    vbytes: vb,
+                    real_off,
+                    real_len,
+                });
+            }
+        }
+        SavedPayload::Full(Payload::Pattern(seed)) => {
+            let n = chunk_count_virtual(r.vlen, chunk_bytes);
+            for i in 0..n {
+                let vb = chunk_vb(r.vlen, i, chunk_bytes);
+                let mut extra = [0u8; 16];
+                extra[..8].copy_from_slice(&seed.to_le_bytes());
+                extra[8..].copy_from_slice(&(i as u64).to_le_bytes());
+                let (real_off, real_len, real): (u64, u64, &[u8]) = if i == 0 {
+                    let (o, l) = span(start, end);
+                    (o, l, &out[start..end])
+                } else {
+                    (0, 0, &[])
+                };
+                rec.chunks.push(chunk::RecipeChunk {
+                    digest: chunk::chunk_digest(chunk::TAG_PATTERN, vb, &extra, real),
+                    vbytes: vb,
+                    real_off,
+                    real_len,
+                });
+            }
+        }
+        SavedPayload::Full(Payload::Real(data)) => {
+            // Framed data chunks align with the recipe chunks; the framing
+            // after the record metadata is: n_chunks u32, then per chunk
+            // [len u32][bytes][crc u32], then the section CRC u32.
+            let nd = chunk::chunk_count(data.len(), chunk_bytes);
+            let nv = chunk_count_virtual(r.vlen, chunk_bytes);
+            let n = nd.max(nv);
+            let meta_end = start + 8 + 8 + 4 + r.name.len() + 1 + 4; // ..n_chunks
+            // Payload fingerprint, needed only by virtual-tail chunks —
+            // computed lazily so a fully-resident region (the common
+            // case) never hashes its bytes a second time.
+            let fp = if n > nd { crate::util::fnv1a(data) } else { 0 };
+            let mut cursor = meta_end;
+            for i in 0..n {
+                let vb = chunk_vb(r.vlen, i, chunk_bytes);
+                if i < nd {
+                    let clen = chunk_bytes.min(data.len() - i * chunk_bytes);
+                    let mut cend = cursor + 4 + clen + 4;
+                    if i + 1 == nd {
+                        cend += 4; // the last framed chunk carries the section CRC
+                        debug_assert_eq!(cend, end);
+                    }
+                    let cstart = if i == 0 { start } else { cursor };
+                    let (real_off, real_len) = span(cstart, cend);
+                    rec.chunks.push(chunk::RecipeChunk {
+                        digest: chunk::chunk_digest(
+                            chunk::TAG_REAL,
+                            vb,
+                            &[],
+                            &out[cstart..cend],
+                        ),
+                        vbytes: vb,
+                        real_off,
+                        real_len,
+                    });
+                    cursor = cend;
+                } else if nd == 0 && i == 0 {
+                    // Empty data: chunk 0 still carries the whole record.
+                    let (real_off, real_len) = span(start, end);
+                    rec.chunks.push(chunk::RecipeChunk {
+                        digest: chunk::chunk_digest(
+                            chunk::TAG_REAL,
+                            vb,
+                            &[],
+                            &out[start..end],
+                        ),
+                        vbytes: vb,
+                        real_off,
+                        real_len,
+                    });
+                } else {
+                    // Purely virtual tail (vlen exceeds the resident
+                    // bytes): dedup on the payload fingerprint + position.
+                    let mut extra = [0u8; 16];
+                    extra[..8].copy_from_slice(&fp.to_le_bytes());
+                    extra[8..].copy_from_slice(&(i as u64).to_le_bytes());
+                    rec.chunks.push(chunk::RecipeChunk {
+                        digest: chunk::chunk_digest(chunk::TAG_REAL, vb, &extra, &[]),
+                        vbytes: vb,
+                        real_off: 0,
+                        real_len: 0,
+                    });
+                }
+            }
+        }
+        SavedPayload::ParentRef { fingerprint } => {
+            // Zero virtual bytes (write_bytes excludes ParentRefs); one
+            // chunk carrying the ~30-byte reference record.
+            let (real_off, real_len) = span(start, end);
+            rec.chunks.push(chunk::RecipeChunk {
+                digest: chunk::chunk_digest(
+                    chunk::TAG_PARENT,
+                    0,
+                    &fingerprint.to_le_bytes(),
+                    &out[start..end],
+                ),
+                vbytes: 0,
+                real_off,
+                real_len,
+            });
+        }
+    }
+}
+
+/// Number of recipe chunks a `vlen`-byte virtual region occupies (≥ 1 so
+/// the encoded record always has a carrier).
+fn chunk_count_virtual(vlen: u64, chunk_bytes: usize) -> usize {
+    (vlen.div_ceil(chunk_bytes as u64) as usize).max(1)
 }
 
 // ----------------------------------------------------------------- helpers
@@ -743,7 +984,7 @@ mod tests {
 
     #[test]
     fn multi_chunk_real_payload_roundtrips() {
-        let data: Vec<u8> = (0..chunk::CHUNK_BYTES * 2 + 123)
+        let data: Vec<u8> = (0..chunk::DEFAULT_CHUNK_BYTES * 2 + 123)
             .map(|i| (i * 31 % 251) as u8)
             .collect();
         let img = CkptImage {
@@ -760,16 +1001,139 @@ mod tests {
             }],
         };
         let bytes = img.encode();
-        assert_eq!(bytes.len(), img.encoded_size(), "size precomputation exact");
+        assert_eq!(
+            bytes.len(),
+            img.encoded_size(chunk::DEFAULT_CHUNK_BYTES),
+            "size precomputation exact"
+        );
         assert_eq!(CkptImage::decode(&bytes).unwrap(), img);
         // A flip deep inside the second chunk is caught by its chunk CRC.
         let mut corrupt = bytes.clone();
-        let p = bytes.len() - chunk::CHUNK_BYTES / 2;
+        let p = bytes.len() - chunk::DEFAULT_CHUNK_BYTES / 2;
         corrupt[p] ^= 1;
         assert!(matches!(
             CkptImage::decode(&corrupt),
             Err(ImageError::CrcMismatch { .. })
         ));
+    }
+
+    #[test]
+    fn configurable_chunk_size_roundtrips() {
+        // A non-default granularity must decode with the same reader
+        // (frames are self-describing) and keep the size math exact.
+        let img = sample_image();
+        for cb in [4096usize, 64 << 10, chunk::DEFAULT_CHUNK_BYTES] {
+            let mut bytes = Vec::new();
+            img.encode_into_sized(&mut bytes, cb);
+            assert_eq!(bytes.len(), img.encoded_size(cb), "cb={cb}");
+            assert_eq!(CkptImage::decode(&bytes).unwrap(), img, "cb={cb}");
+        }
+    }
+
+    // ------------------------------------------------------------ recipes
+
+    #[test]
+    fn recipe_tiles_the_encoded_image() {
+        let img = sample_image();
+        let mut bytes = Vec::new();
+        let recipe = img.encode_with_recipe(&mut bytes, 4096);
+        assert!(recipe.covers(bytes.len() as u64));
+        assert_eq!(
+            recipe.chunks.iter().map(|c| c.vbytes).sum::<u64>(),
+            img.write_bytes()
+        );
+        // Reassembly from real spans is byte-identical.
+        let mut rebuilt = Vec::new();
+        for c in &recipe.chunks {
+            rebuilt.extend_from_slice(
+                &bytes[c.real_off as usize..(c.real_off + c.real_len) as usize],
+            );
+        }
+        assert_eq!(rebuilt, bytes);
+        assert_eq!(CkptImage::decode(&rebuilt).unwrap(), img);
+    }
+
+    #[test]
+    fn unchanged_regions_dedup_across_generations() {
+        // Two generations of the same image content, differing only in
+        // step/rng (the mostly-clean address space case): every region
+        // chunk digest must match; only the header/trailer metadata chunks
+        // (zero virtual bytes) may differ.
+        let mut gen0 = sample_image();
+        let mut gen1 = sample_image();
+        gen0.step = 100;
+        gen1.step = 200;
+        gen1.rng_state = [8u8; 32];
+        let (mut b0, mut b1) = (Vec::new(), Vec::new());
+        let r0 = gen0.encode_with_recipe(&mut b0, 4096);
+        let r1 = gen1.encode_with_recipe(&mut b1, 4096);
+        assert_eq!(r0.chunks.len(), r1.chunks.len());
+        let mut shared_vb = 0u64;
+        for (a, b) in r0.chunks.iter().zip(&r1.chunks) {
+            if a.digest == b.digest {
+                shared_vb += a.vbytes;
+            } else {
+                assert_eq!(a.vbytes, 0, "only metadata chunks may change");
+            }
+        }
+        assert_eq!(
+            shared_vb,
+            gen0.write_bytes(),
+            "every virtual byte dedups when regions are unchanged"
+        );
+    }
+
+    #[test]
+    fn dirty_region_changes_only_its_chunks() {
+        let gen0 = sample_image();
+        let mut gen1 = sample_image();
+        // Dirty the small Real region's content.
+        gen1.regions[1].payload = SavedPayload::Full(Payload::Real(vec![9, 9, 9, 9, 9]));
+        let (mut b0, mut b1) = (Vec::new(), Vec::new());
+        let r0 = gen0.encode_with_recipe(&mut b0, 4096);
+        let r1 = gen1.encode_with_recipe(&mut b1, 4096);
+        let changed_vb: u64 = r0
+            .chunks
+            .iter()
+            .zip(&r1.chunks)
+            .filter(|(a, b)| a.digest != b.digest)
+            .map(|(a, _)| a.vbytes)
+            .sum();
+        // Only the 4096-vbyte state region re-ships; the 1 GiB pattern
+        // heap and the zero bss dedup.
+        assert_eq!(changed_vb, 4096);
+    }
+
+    #[test]
+    fn pattern_chunks_dedup_by_position_not_globally() {
+        // Two pattern heaps with the same seed share chunks; different
+        // positions within one heap do not alias each other.
+        let img = sample_image();
+        let mut bytes = Vec::new();
+        let rec = img.encode_with_recipe(&mut bytes, 4096);
+        let heap_chunks: Vec<_> = rec
+            .chunks
+            .iter()
+            .filter(|c| c.vbytes == 4096 && c.real_len == 0)
+            .take(16)
+            .collect();
+        assert!(heap_chunks.len() >= 2, "heap must span many chunks");
+        assert_ne!(
+            heap_chunks[0].digest, heap_chunks[1].digest,
+            "pattern chunks at different offsets must differ"
+        );
+    }
+
+    #[test]
+    fn incremental_recipe_has_zero_vbytes_for_parent_refs() {
+        let mut table = table_with_dirty_state();
+        table.clear_dirty(Half::Upper);
+        let inc =
+            CkptImage::capture_incremental(RankId(0), 9, [0; 32], vec![], &table, "p");
+        let mut bytes = Vec::new();
+        let rec = inc.encode_with_recipe(&mut bytes, 4096);
+        assert_eq!(rec.file_vbytes, inc.write_bytes());
+        assert!(rec.covers(bytes.len() as u64));
     }
 
     #[test]

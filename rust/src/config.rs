@@ -5,6 +5,7 @@
 //! 2019 MANA) and "production" mode (all on — this work), and per-fix
 //! ablations in between.
 
+use crate::ckpt::chunk::DEFAULT_CHUNK_BYTES;
 use crate::faults::FaultPlan;
 use crate::fdreg::FdPolicy;
 use crate::fs::FsKind;
@@ -170,6 +171,11 @@ pub struct RunConfig {
     /// overhead" future work): after the first full checkpoint, write only
     /// regions dirtied since it, referencing the rest by fingerprint.
     pub incremental: bool,
+    /// Chunk granularity (bytes) for image framing and content-addressed
+    /// dedup (`--chunk-bytes`; power of two). Smaller chunks dedup finer
+    /// but cost more index entries; the manifest records the value so a
+    /// restarted job keeps the granularity consistent.
+    pub chunk_bytes: usize,
 }
 
 impl RunConfig {
@@ -191,6 +197,7 @@ impl RunConfig {
             seed: 0x4e45_5253, // "NERS"
             mem_per_rank: None,
             incremental: false,
+            chunk_bytes: DEFAULT_CHUNK_BYTES,
         }
     }
 
@@ -226,6 +233,13 @@ mod tests {
         let c = RunConfig::new(AppKind::Gromacs, 8);
         assert!(c.fixes.drain && c.fixes.keepalive);
         assert!(!c.faults.any_active());
+    }
+
+    #[test]
+    fn default_chunk_bytes_is_one_mib() {
+        let c = RunConfig::new(AppKind::Synthetic, 4);
+        assert_eq!(c.chunk_bytes, 1 << 20);
+        assert!(c.chunk_bytes.is_power_of_two());
     }
 
     #[test]

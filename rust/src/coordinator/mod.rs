@@ -60,8 +60,12 @@ pub struct CoordStats {
     pub buffered_msgs: u64,
     pub lost_messages: u64,
     pub races_detected: u64,
-    /// Bytes staged from the fast tier to the durable tier (staged mode).
+    /// Physical bytes staged from the fast tier to the durable tier
+    /// (staged mode; with dedup, new-chunk traffic only).
     pub staged_bytes: u64,
+    /// Logical drain bytes satisfied by reference to chunks the durable
+    /// tier already held (content-addressed dedup, staged mode).
+    pub deduped_bytes: u64,
 }
 
 /// Why a checkpoint failed (the reliability bench's failure taxonomy).
@@ -117,8 +121,24 @@ pub struct CkptReport {
     pub durable_bytes: u64,
     /// Bytes left to the asynchronous Drain-to-PFS phase at resume time
     /// (staged mode only; the background drain retires them across
-    /// subsequent supersteps).
+    /// subsequent supersteps). With dedup this is physical new-chunk
+    /// traffic, not the logical image size.
     pub drain_pending_bytes: u64,
+    /// Logical bytes of this checkpoint's drain satisfied by reference to
+    /// chunks the durable tier already held (content-addressed dedup).
+    pub deduped_bytes: u64,
+}
+
+impl CkptReport {
+    /// Fraction of this checkpoint's logical drain traffic deduped away
+    /// (0.0 when nothing was staged).
+    pub fn dedup_ratio(&self) -> f64 {
+        if self.fast_bytes == 0 {
+            0.0
+        } else {
+            self.deduped_bytes as f64 / self.fast_bytes as f64
+        }
+    }
 }
 
 /// The coordinator process.

@@ -1,0 +1,260 @@
+//! Content-addressed chunk index for the durable tier.
+//!
+//! The tiered engine's background drain used to re-stage every byte of
+//! every checkpoint generation to the PFS, even though successive
+//! checkpoints of MANA-style workloads are mostly identical memory. The
+//! chunk store turns that drain near-incremental:
+//!
+//! * every chunk of an encoded image carries a 128-bit content digest
+//!   ([`crate::ckpt::chunk::ChunkRecipe`], emitted by the image encoder);
+//! * the durable tier stores **one object per unique digest**
+//!   (`.chunkstore/<digest>` in the durable namespace) plus, per file, a
+//!   *recipe* — the ordered digest list reassembly concatenates;
+//! * a drain ships only chunks whose digest the index does not yet hold;
+//!   everything else is "drained" by reference in zero simulated seconds;
+//! * chunks are **refcounted**: each live recipe (queued or committed)
+//!   holds one reference per occurrence, and an object is reclaimed only
+//!   when the last referencing recipe is released — deleting or evicting a
+//!   generation can never orphan a chunk a newer generation still needs.
+//!
+//! This module owns the pure bookkeeping (index + recipes + refcounts);
+//! [`crate::fs::TieredStore`] drives the actual durable-tier object IO.
+
+use std::collections::BTreeMap;
+
+use crate::ckpt::chunk::ChunkRecipe;
+
+/// Durable-namespace prefix for chunk objects (kept out of the logical
+/// file listing).
+pub const OBJECT_PREFIX: &str = ".chunkstore/";
+
+/// Durable-tier path of a chunk object.
+pub fn object_path(digest: u128) -> String {
+    format!("{OBJECT_PREFIX}{digest:032x}")
+}
+
+/// One indexed chunk.
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkEntry {
+    /// Live references: one per occurrence in every queued or committed
+    /// recipe.
+    pub refs: u64,
+    /// Virtual bytes the chunk accounts for (capacity/bandwidth charge).
+    pub vbytes: u64,
+    /// Whether the object's bytes are durable yet (a referenced chunk may
+    /// still be in flight on the drain queue).
+    pub stored: bool,
+    /// Digest of the *stored object bytes*, recorded at store time;
+    /// reassembly re-derives it to reject corrupted or swapped objects.
+    pub content: u128,
+}
+
+/// Outcome of referencing one recipe into the index.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RefOutcome {
+    /// Virtual bytes of chunks this recipe must physically ship.
+    pub ship_vbytes: u64,
+    /// Virtual bytes satisfied by reference to already-indexed chunks.
+    pub deduped_vbytes: u64,
+}
+
+/// A chunk whose last reference was just dropped (GC candidate).
+#[derive(Clone, Copy, Debug)]
+pub struct DeadChunk {
+    pub digest: u128,
+    /// Whether object bytes were durable (the caller deletes them).
+    pub stored: bool,
+    pub vbytes: u64,
+}
+
+/// The index + recipe table. Rides [`crate::fs::TieredStore`] (and so
+/// survives a job kill alongside the file systems).
+#[derive(Clone, Debug, Default)]
+pub struct ChunkStore {
+    index: BTreeMap<u128, ChunkEntry>,
+    recipes: BTreeMap<String, ChunkRecipe>,
+}
+
+impl ChunkStore {
+    /// Take one reference per chunk occurrence in `recipe`. Chunks seen
+    /// for the first time are the caller's to ship; the rest dedup.
+    pub fn reference(&mut self, recipe: &ChunkRecipe) -> RefOutcome {
+        let mut out = RefOutcome::default();
+        for c in &recipe.chunks {
+            match self.index.get_mut(&c.digest) {
+                Some(e) => {
+                    e.refs += 1;
+                    out.deduped_vbytes += c.vbytes;
+                }
+                None => {
+                    self.index.insert(
+                        c.digest,
+                        ChunkEntry {
+                            refs: 1,
+                            vbytes: c.vbytes,
+                            stored: false,
+                            content: 0,
+                        },
+                    );
+                    out.ship_vbytes += c.vbytes;
+                }
+            }
+        }
+        out
+    }
+
+    /// Drop one reference per chunk occurrence in `recipe`. Returns every
+    /// chunk whose refcount hit zero — the caller deletes the stored
+    /// objects from the durable tier.
+    pub fn release(&mut self, recipe: &ChunkRecipe) -> Vec<DeadChunk> {
+        let mut dead = Vec::new();
+        for c in &recipe.chunks {
+            if let Some(e) = self.index.get_mut(&c.digest) {
+                e.refs = e.refs.saturating_sub(1);
+                if e.refs == 0 {
+                    let stored = e.stored;
+                    let vbytes = e.vbytes;
+                    self.index.remove(&c.digest);
+                    dead.push(DeadChunk {
+                        digest: c.digest,
+                        stored,
+                        vbytes,
+                    });
+                }
+            }
+        }
+        dead
+    }
+
+    /// Record that a chunk's object bytes are durable, with the content
+    /// digest reassembly will verify against.
+    pub fn mark_stored(&mut self, digest: u128, content: u128) {
+        if let Some(e) = self.index.get_mut(&digest) {
+            e.stored = true;
+            e.content = content;
+        }
+    }
+
+    pub fn is_stored(&self, digest: u128) -> bool {
+        self.index.get(&digest).is_some_and(|e| e.stored)
+    }
+
+    pub fn entry(&self, digest: u128) -> Option<ChunkEntry> {
+        self.index.get(&digest).copied()
+    }
+
+    /// Persist `recipe` as the durable description of `path`, returning
+    /// the replaced recipe (whose references the caller must release).
+    pub fn commit(&mut self, path: &str, recipe: ChunkRecipe) -> Option<ChunkRecipe> {
+        self.recipes.insert(path.to_string(), recipe)
+    }
+
+    pub fn recipe(&self, path: &str) -> Option<&ChunkRecipe> {
+        self.recipes.get(path)
+    }
+
+    pub fn remove_recipe(&mut self, path: &str) -> Option<ChunkRecipe> {
+        self.recipes.remove(path)
+    }
+
+    /// Logical (recipe-backed) durable paths.
+    pub fn recipe_paths(&self) -> Vec<String> {
+        self.recipes.keys().cloned().collect()
+    }
+
+    pub fn recipe_count(&self) -> usize {
+        self.recipes.len()
+    }
+
+    /// Unique chunks currently indexed (stored + in flight).
+    pub fn chunk_count(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Virtual bytes of unique stored chunks (the physical durable
+    /// footprint the dedup saves against).
+    pub fn stored_vbytes(&self) -> u64 {
+        self.index
+            .values()
+            .filter(|e| e.stored)
+            .map(|e| e.vbytes)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckpt::chunk::ChunkRecipe;
+
+    fn recipe(data: &[u8]) -> ChunkRecipe {
+        ChunkRecipe::from_data(data, 4, data.len() as u64)
+    }
+
+    #[test]
+    fn first_reference_ships_second_dedups() {
+        let mut cs = ChunkStore::default();
+        let r = recipe(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let first = cs.reference(&r);
+        assert_eq!(first.ship_vbytes, 8);
+        assert_eq!(first.deduped_vbytes, 0);
+        let second = cs.reference(&r);
+        assert_eq!(second.ship_vbytes, 0);
+        assert_eq!(second.deduped_vbytes, 8);
+        assert_eq!(cs.chunk_count(), 2);
+    }
+
+    #[test]
+    fn release_reclaims_only_at_zero_refs() {
+        let mut cs = ChunkStore::default();
+        let r = recipe(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        cs.reference(&r);
+        cs.reference(&r);
+        assert!(cs.release(&r).is_empty(), "one live reference remains");
+        let dead = cs.release(&r);
+        assert_eq!(dead.len(), 2, "both chunks reclaimed at zero refs");
+        assert_eq!(cs.chunk_count(), 0);
+    }
+
+    #[test]
+    fn intra_recipe_duplicates_count_per_occurrence() {
+        // A recipe with two identical chunks (e.g. an all-zero region)
+        // takes two references; releasing it reclaims cleanly.
+        let mut cs = ChunkStore::default();
+        let r = recipe(&[7, 7, 7, 7, 7, 7, 7, 7]); // two chunks, same digest
+        assert_eq!(r.chunks[0].digest, r.chunks[1].digest);
+        let out = cs.reference(&r);
+        assert_eq!(out.ship_vbytes, 4, "first occurrence ships");
+        assert_eq!(out.deduped_vbytes, 4, "second occurrence dedups");
+        assert_eq!(cs.chunk_count(), 1);
+        assert_eq!(cs.entry(r.chunks[0].digest).unwrap().refs, 2);
+        assert_eq!(cs.release(&r).len(), 1);
+        assert_eq!(cs.chunk_count(), 0);
+    }
+
+    #[test]
+    fn commit_replaces_and_returns_old_recipe() {
+        let mut cs = ChunkStore::default();
+        let r1 = recipe(&[1, 1, 1, 1]);
+        let r2 = recipe(&[2, 2, 2, 2]);
+        cs.reference(&r1);
+        assert!(cs.commit("f", r1.clone()).is_none());
+        cs.reference(&r2);
+        let old = cs.commit("f", r2).expect("old recipe returned");
+        assert_eq!(old, r1);
+        assert_eq!(cs.recipe_count(), 1);
+    }
+
+    #[test]
+    fn stored_tracking() {
+        let mut cs = ChunkStore::default();
+        let r = recipe(&[9, 9, 9, 9]);
+        cs.reference(&r);
+        let d = r.chunks[0].digest;
+        assert!(!cs.is_stored(d));
+        cs.mark_stored(d, 0xABCD);
+        assert!(cs.is_stored(d));
+        assert_eq!(cs.entry(d).unwrap().content, 0xABCD);
+        assert_eq!(cs.stored_vbytes(), 4);
+    }
+}

@@ -23,14 +23,17 @@
 //! ("Applications with a large memory footprint may fail to checkpoint if
 //! there is insufficient storage space … a system warning is needed").
 
+pub mod chunkstore;
 pub mod tiered;
 
 use std::collections::BTreeMap;
 use std::fmt;
 
+use crate::ckpt::chunk::ChunkRecipe;
 use crate::topology::NodeId;
 use crate::{log_debug, log_warn};
 
+pub use chunkstore::ChunkStore;
 pub use tiered::{DrainStats, DrainTick, StagedIo, TieredStore};
 
 const GB: f64 = 1e9;
@@ -135,6 +138,11 @@ pub struct WriteReq {
     pub virtual_bytes: u64,
     /// Real serialized bytes retained for later reads.
     pub data: Vec<u8>,
+    /// Content-addressed chunk recipe of `data` (staged checkpoints).
+    /// With a recipe, the tiered engine's background drain dedups against
+    /// the durable chunk store and restart can reassemble the file from
+    /// chunks alone; without one the file stages byte-for-byte as before.
+    pub recipe: Option<ChunkRecipe>,
 }
 
 /// Outcome of a parallel write/read wave.
@@ -152,6 +160,9 @@ pub enum FsError {
     /// The paper's "insufficient storage space" case.
     InsufficientSpace { needed: u64, free: u64 },
     NotFound(String),
+    /// A recipe-backed read found a chunk object missing or not matching
+    /// its recorded content digest (corrupted/swapped chunk store).
+    Corrupt(String),
 }
 
 impl fmt::Display for FsError {
@@ -164,6 +175,7 @@ impl fmt::Display for FsError {
                 crate::util::bytes::human(*free)
             ),
             FsError::NotFound(p) => write!(f, "no such file: {p}"),
+            FsError::Corrupt(what) => write!(f, "chunk store corruption: {what}"),
         }
     }
 }
@@ -559,6 +571,7 @@ mod tests {
                 path: format!("ckpt_rank{r}.mana"),
                 virtual_bytes: per_rank,
                 data: vec![],
+                recipe: None,
             })
             .collect()
     }
@@ -643,6 +656,7 @@ mod tests {
                 path: "big.mana".into(),
                 virtual_bytes: 11 * GIB,
                 data: vec![],
+                recipe: None,
             }])
             .unwrap_err();
         let recs = crate::util::logging::capture_take();
@@ -662,6 +676,7 @@ mod tests {
                 path: "x.mana".into(),
                 virtual_bytes: bytes,
                 data: vec![1, 2, 3],
+                recipe: None,
             }]
         };
         fs.write_parallel(w(100 * GIB / 64)).unwrap();
@@ -678,6 +693,7 @@ mod tests {
             path: "img".into(),
             virtual_bytes: 123,
             data: vec![9, 8, 7],
+            recipe: None,
         }])
         .unwrap();
         let (datas, rep) = fs.read_parallel(&[(NodeId(0), "img".into())]).unwrap();
@@ -702,6 +718,7 @@ mod tests {
             path: "a".into(),
             virtual_bytes: 1000,
             data: vec![],
+            recipe: None,
         }])
         .unwrap();
         assert_eq!(fs.used_bytes(), 1000);

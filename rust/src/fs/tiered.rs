@@ -1,5 +1,6 @@
 //! Tiered storage engine: fast tier (Burst Buffer) + durable tier
-//! (Lustre) with asynchronous BB→PFS staging.
+//! (Lustre) with asynchronous BB→PFS staging and **content-addressed
+//! chunk dedup** on the drain path.
 //!
 //! The paper's scalability result is that checkpoint overhead is dominated
 //! by the storage tier: at 512 ranks, Burst Buffers beat Lustre by >20x on
@@ -13,6 +14,23 @@
 //!   durable tier; node-local drain agents move bytes on the simulated
 //!   clock across subsequent supersteps ([`TieredStore::drain_to`]), at
 //!   chunk granularity (see [`crate::ckpt::chunk`]).
+//! * **Dedup**: a write request may carry a
+//!   [`ChunkRecipe`] — the ordered 128-bit content digests of its encoded
+//!   chunks. The drain consults the durable-tier chunk index
+//!   ([`ChunkStore`]) and ships **only chunks the index does not yet
+//!   hold**; every other chunk is "drained" by reference in zero simulated
+//!   seconds. Successive checkpoints of a mostly-clean address space turn
+//!   into near-incremental PFS traffic (`deduped_bytes` in
+//!   [`DrainStats`]/[`StagedIo`]).
+//! * **Durable representation**: recipe-backed files live on the durable
+//!   tier as one object per unique digest (`.chunkstore/<digest>`) plus
+//!   the per-file recipe; restart reassembles the byte-identical encoded
+//!   image from them even after total fast-tier loss, verifying each
+//!   object's content digest ([`FsError::Corrupt`] on mismatch).
+//! * **Refcounted GC**: each live recipe (queued or committed) holds one
+//!   reference per chunk occurrence; an object is reclaimed only when the
+//!   last referencing recipe is released. Deleting or replacing a
+//!   generation can never orphan a chunk a newer generation still needs.
 //! * **Eviction** keeps the last `keep_fulls` checkpoint generations
 //!   resident on the fast tier; when a new wave doesn't fit, older
 //!   *drained* generations are deleted from the fast tier (their durable
@@ -20,7 +38,8 @@
 //! * **Backpressure**: if an undrained older generation must be evicted
 //!   to make room, it is force-drained synchronously first and the time
 //!   is charged to the checkpoint stall — the engine never drops the only
-//!   copy of an image.
+//!   copy of an image. With dedup, the forced drain too ships only the
+//!   chunks the durable tier is missing.
 //!
 //! Restart reads prefer the fast tier per file and fall back to the
 //! durable tier ([`TieredStore::read_preferred`]); CRC-level fallback
@@ -29,33 +48,62 @@
 
 use std::collections::VecDeque;
 
+use super::chunkstore::{object_path, ChunkStore, OBJECT_PREFIX};
 use super::{FileSystem, FsError, IoReport, StorageTier, WriteReq};
-use crate::ckpt::chunk::CHUNK_BYTES;
+use crate::ckpt::chunk::{ChunkRecipe, DEFAULT_CHUNK_BYTES};
 use crate::topology::NodeId;
+use crate::util::digest::digest128;
 use crate::{log_debug, log_info, log_warn};
 
 /// Aggregate drain/eviction counters (reported by benches and `mana run`).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct DrainStats {
-    /// Bytes staged to the durable tier (background + forced).
+    /// Physical bytes shipped to the durable tier (background + forced).
+    /// With dedup this is the new-chunk traffic only.
     pub drained_bytes: u64,
     /// Files whose durable copy completed.
     pub drained_files: u64,
+    /// Logical drain bytes satisfied by reference to chunks the durable
+    /// index already held — never shipped to the PFS.
+    pub deduped_bytes: u64,
     /// Durable-tier seconds spent draining (background + forced).
     pub busy_secs: f64,
     /// Subset of `busy_secs` charged synchronously as backpressure.
     pub forced_secs: f64,
     pub evicted_generations: u64,
     pub evicted_files: u64,
+    /// Chunk objects reclaimed by refcounted GC, and their virtual bytes.
+    pub gc_chunks: u64,
+    pub gc_bytes: u64,
     /// Drain completions that failed (source vanished, durable tier full).
     pub drain_errors: u64,
+}
+
+impl DrainStats {
+    /// Fraction of logical drain traffic satisfied by reference (exact
+    /// once the queue is empty).
+    pub fn dedup_ratio(&self) -> f64 {
+        let logical = self.deduped_bytes + self.drained_bytes;
+        if logical == 0 {
+            0.0
+        } else {
+            self.deduped_bytes as f64 / logical as f64
+        }
+    }
 }
 
 /// One file queued for staging to the durable tier.
 #[derive(Clone, Debug)]
 struct DrainItem {
     path: String,
+    /// Physical bytes still to ship (recipe items: new-chunk bytes only;
+    /// deduped chunks were already subtracted at queue time).
     remaining: u64,
+    /// Drain progress granularity (the recipe's chunk size, or the
+    /// default for recipe-less files).
+    granularity: u64,
+    /// Content recipe (referenced into the chunk index at queue time).
+    recipe: Option<ChunkRecipe>,
 }
 
 /// One checkpoint generation's fast-tier footprint (for eviction).
@@ -74,8 +122,11 @@ pub struct StagedIo {
     pub backpressure_secs: f64,
     /// Bytes the backpressure force-drain moved to the durable tier.
     pub durable_bytes: u64,
+    /// Logical bytes of this wave satisfied by reference to chunks the
+    /// durable index already held (content-addressed dedup).
+    pub deduped_bytes: u64,
     pub evicted_files: usize,
-    /// Bytes queued for background drain after this wave.
+    /// Physical bytes queued for background drain after this wave.
     pub pending_bytes: u64,
     pub writers: usize,
 }
@@ -99,13 +150,16 @@ pub struct DrainTick {
     pub queue_empty: bool,
 }
 
-/// Fast tier + durable tier + drain queue. See the module docs.
+/// Fast tier + durable tier + drain queue + chunk index. See the module
+/// docs.
 #[derive(Clone, Debug)]
 pub struct TieredStore {
     fast: FileSystem,
     durable: FileSystem,
     queue: VecDeque<DrainItem>,
     generations: VecDeque<Generation>,
+    /// Content-addressed chunk index + recipe table for the durable tier.
+    chunks: ChunkStore,
     /// Checkpoint generations kept resident on the fast tier (including
     /// the one currently being written).
     pub keep_fulls: usize,
@@ -126,6 +180,7 @@ impl TieredStore {
             durable,
             queue: VecDeque::new(),
             generations: VecDeque::new(),
+            chunks: ChunkStore::default(),
             keep_fulls: keep_fulls.max(1),
             nodes: nodes.max(1),
             clock: 0.0,
@@ -150,11 +205,18 @@ impl TieredStore {
         &mut self.durable
     }
 
-    /// Bytes still queued for staging to the durable tier.
+    /// The durable-tier chunk index (dedup observability).
+    pub fn chunk_store(&self) -> &ChunkStore {
+        &self.chunks
+    }
+
+    /// Physical bytes still queued for shipping to the durable tier.
     pub fn pending_bytes(&self) -> u64 {
         self.queue.iter().map(|i| i.remaining).sum()
     }
 
+    /// Files whose durable copy is not committed yet (a fully-deduped
+    /// file can be pending with zero `pending_bytes`).
     pub fn pending_files(&self) -> usize {
         self.queue.len()
     }
@@ -188,6 +250,11 @@ impl TieredStore {
     }
 
     /// Write one wave to the fast tier and queue it for background drain.
+    ///
+    /// Requests carrying a [`ChunkRecipe`] are referenced into the chunk
+    /// index right here: chunks the index already holds are deduped away
+    /// (counted in [`StagedIo::deduped_bytes`], shipped in zero seconds);
+    /// only first-seen chunks contribute to the queued physical bytes.
     ///
     /// Evicts old drained generations (keeping the newest `keep_fulls`)
     /// when the wave doesn't fit; force-drains undrained evictees first
@@ -241,41 +308,58 @@ impl TieredStore {
 
         // The wave fits: only now do these paths change hands — stale
         // claims (an older generation's copy, a queued drain of the old
-        // version) are dropped and replaced below.
+        // version and its chunk references) are dropped and replaced below.
         for r in &reqs {
             self.unclaim(&r.path);
         }
-        let meta: Vec<(String, u64)> = reqs
-            .iter()
-            .map(|r| (r.path.clone(), r.virtual_bytes))
+        let mut reqs = reqs;
+        let meta: Vec<(String, u64, Option<ChunkRecipe>)> = reqs
+            .iter_mut()
+            .map(|r| (r.path.clone(), r.virtual_bytes, r.recipe.take()))
             .collect();
         let io = self.fast.write_parallel(reqs)?;
 
-        let gen = self
-            .generations
-            .back_mut()
-            .expect("current generation exists");
-        for (path, virtual_bytes) in meta {
-            gen.paths.push(path.clone());
+        let mut gen_paths = Vec::with_capacity(meta.len());
+        let mut deduped = 0u64;
+        for (path, virtual_bytes, recipe) in meta {
+            gen_paths.push(path.clone());
+            let (remaining, granularity) = match &recipe {
+                Some(rec) => {
+                    let out = self.chunks.reference(rec);
+                    deduped += out.deduped_vbytes;
+                    (out.ship_vbytes, rec.chunk_bytes.max(1))
+                }
+                None => (virtual_bytes, DEFAULT_CHUNK_BYTES as u64),
+            };
             self.queue.push_back(DrainItem {
                 path,
-                remaining: virtual_bytes,
+                remaining,
+                granularity,
+                recipe,
             });
         }
+        self.generations
+            .back_mut()
+            .expect("current generation exists")
+            .paths
+            .extend(gen_paths);
+        self.stats.deduped_bytes += deduped;
         let pending = self.pending_bytes();
         log_debug!(
             "fs",
-            "staged: wave of {} landed on {} in {:.2}s; {} queued for drain",
+            "staged: wave of {} landed on {} in {:.2}s; {} queued for drain, {} deduped",
             crate::util::bytes::human(total),
             self.fast.cfg.kind,
             io.duration,
-            crate::util::bytes::human(pending)
+            crate::util::bytes::human(pending),
+            crate::util::bytes::human(deduped)
         );
         Ok(StagedIo {
             fast_secs: io.duration,
             fast_bytes: total,
             backpressure_secs: backpressure,
             durable_bytes: backpressure_bytes,
+            deduped_bytes: deduped,
             evicted_files,
             pending_bytes: pending,
             writers: io.writers,
@@ -283,7 +367,8 @@ impl TieredStore {
     }
 
     /// Advance the background drain to virtual time `now`: node-local
-    /// agents move queued bytes to the durable tier at chunk granularity.
+    /// agents move queued physical bytes to the durable tier at chunk
+    /// granularity. Fully-deduped items commit in zero simulated seconds.
     pub fn drain_to(&mut self, now_secs: f64) -> DrainTick {
         let budget = (now_secs - self.clock).max(0.0);
         self.clock = self.clock.max(now_secs);
@@ -302,15 +387,16 @@ impl TieredStore {
             let Some(item) = self.queue.front_mut() else {
                 break;
             };
-            // (Zero-byte items — e.g. a fully-clean incremental rank —
-            // skip straight to completion below.)
+            // (Zero-byte items — a fully-deduped generation, or a clean
+            // incremental rank — skip straight to completion below.)
             if item.remaining > 0 {
                 let whole = item.remaining as f64;
                 let take = if self.credit >= whole {
                     whole
                 } else {
                     // Partial drains stop on a chunk boundary.
-                    (self.credit / CHUNK_BYTES as f64).floor() * CHUNK_BYTES as f64
+                    let g = item.granularity.max(1) as f64;
+                    (self.credit / g).floor() * g
                 };
                 if take <= 0.0 {
                     break;
@@ -321,7 +407,7 @@ impl TieredStore {
             }
             if item.remaining == 0 {
                 let done = self.queue.pop_front().expect("front exists");
-                if self.complete_drain(&done.path) {
+                if self.complete_drain(&done) {
                     tick.completed_files += 1;
                 } else {
                     // Staging failed (durable-tier shortfall): keep the
@@ -350,14 +436,15 @@ impl TieredStore {
     }
 
     /// Drain everything now; returns the durable-tier busy seconds.
-    /// Items whose staging fails (pathological durable-tier shortfall)
-    /// stay queued for retry and are not counted as drained.
+    /// Deduped chunks cost nothing. Items whose staging fails
+    /// (pathological durable-tier shortfall) stay queued for retry and
+    /// are not counted as drained.
     pub fn drain_sync(&mut self) -> f64 {
         let bw = self.drain_bandwidth();
         let mut secs = 0.0;
         let mut failed = Vec::new();
         while let Some(item) = self.queue.pop_front() {
-            if !self.complete_drain(&item.path) {
+            if !self.complete_drain(&item) {
                 failed.push(item);
                 continue;
             }
@@ -370,24 +457,82 @@ impl TieredStore {
         secs
     }
 
-    /// Copy a fully-drained file from the fast tier into the durable
-    /// tier. Returns whether a durable copy now exists.
-    fn complete_drain(&mut self, path: &str) -> bool {
-        let Some((virtual_bytes, data)) = self.fast.peek(path) else {
-            log_warn!("fs", "staged: drain source {path} vanished — skipped");
+    /// Commit one fully-transferred file to the durable tier. Recipe-less
+    /// files are copied byte-for-byte; recipe-backed files materialize
+    /// their not-yet-stored chunk objects (content digest recorded for
+    /// restart verification) and commit the recipe, releasing the one it
+    /// replaces. Returns whether a durable copy now exists.
+    fn complete_drain(&mut self, item: &DrainItem) -> bool {
+        let Some((virtual_bytes, data)) = self.fast.peek(&item.path) else {
+            log_warn!(
+                "fs",
+                "staged: drain source {} vanished — skipped",
+                item.path
+            );
             self.stats.drain_errors += 1;
             return false;
         };
         let data = data.to_vec();
-        match self.durable.insert_raw(path, virtual_bytes, data) {
-            Ok(()) => {
+        match &item.recipe {
+            None => match self.durable.insert_raw(&item.path, virtual_bytes, data) {
+                Ok(()) => {
+                    // A path has exactly one durable representation: a
+                    // plain copy supersedes any stale committed recipe
+                    // (whose chunk references would otherwise leak).
+                    if let Some(old) = self.chunks.remove_recipe(&item.path) {
+                        self.release_and_gc(&old);
+                    }
+                    self.stats.drained_files += 1;
+                    true
+                }
+                Err(e) => {
+                    log_warn!("fs", "staged: drain of {} failed: {e}", item.path);
+                    self.stats.drain_errors += 1;
+                    false
+                }
+            },
+            Some(rec) => {
+                for c in &rec.chunks {
+                    if self.chunks.is_stored(c.digest) {
+                        continue;
+                    }
+                    let bytes =
+                        data[c.real_off as usize..(c.real_off + c.real_len) as usize].to_vec();
+                    let content = digest128(&bytes);
+                    if let Err(e) =
+                        self.durable
+                            .insert_raw(&object_path(c.digest), c.vbytes, bytes)
+                    {
+                        log_warn!(
+                            "fs",
+                            "staged: chunk store object for {} failed: {e}",
+                            item.path
+                        );
+                        self.stats.drain_errors += 1;
+                        return false;
+                    }
+                    self.chunks.mark_stored(c.digest, content);
+                }
+                if let Some(old) = self.chunks.commit(&item.path, rec.clone()) {
+                    self.release_and_gc(&old);
+                }
+                // The recipe supersedes any stale plain durable copy
+                // (read_durable would otherwise prefer the old bytes).
+                let _ = self.durable.delete(&item.path);
                 self.stats.drained_files += 1;
                 true
             }
-            Err(e) => {
-                log_warn!("fs", "staged: drain of {path} failed: {e}");
-                self.stats.drain_errors += 1;
-                false
+        }
+    }
+
+    /// Drop one reference per chunk occurrence of `recipe`; chunk objects
+    /// whose refcount hit zero are deleted from the durable tier.
+    fn release_and_gc(&mut self, recipe: &ChunkRecipe) {
+        for dead in self.chunks.release(recipe) {
+            self.stats.gc_chunks += 1;
+            if dead.stored {
+                self.stats.gc_bytes += dead.vbytes;
+                let _ = self.durable.delete(&object_path(dead.digest));
             }
         }
     }
@@ -401,7 +546,7 @@ impl TieredStore {
             return (0.0, 0);
         };
         let item = self.queue.remove(pos).expect("position valid");
-        if !self.complete_drain(&item.path) {
+        if !self.complete_drain(&item) {
             self.queue.push_back(item);
             return (0.0, 0);
         }
@@ -414,9 +559,10 @@ impl TieredStore {
 
     /// Evict the oldest generation beyond `keep_fulls` from the fast tier.
     /// Undrained files are force-drained first, and a file is deleted from
-    /// the fast tier only once a durable copy actually exists — the engine
-    /// never drops the only copy of an image. Returns false when nothing
-    /// is evictable.
+    /// the fast tier only once a durable copy (plain or recipe-backed)
+    /// actually exists — the engine never drops the only copy of an image.
+    /// Eviction never touches the chunk index: durable recipes keep their
+    /// references. Returns false when nothing is evictable.
     fn evict_oldest(
         &mut self,
         backpressure: &mut f64,
@@ -435,7 +581,7 @@ impl TieredStore {
         let mut deleted = 0usize;
         let mut kept = Vec::new();
         for path in &gen.paths {
-            if !self.durable.exists(path) {
+            if !self.is_durable(path) {
                 // Forced drain failed (durable tier full / source gone):
                 // keep the fast copy rather than drop the only one.
                 log_warn!(
@@ -474,19 +620,69 @@ impl TieredStore {
         deleted > 0 || gen.paths.is_empty()
     }
 
-    /// Drop every claim on `path`: older generations' lists and any queued
-    /// drain of a stale version.
+    /// Drop every claim on `path`: older generations' lists, any queued
+    /// drain of a stale version, and the stale version's chunk references.
     fn unclaim(&mut self, path: &str) {
         for gen in &mut self.generations {
             gen.paths.retain(|p| p != path);
         }
-        self.queue.retain(|i| i.path != path);
+        let queue = std::mem::take(&mut self.queue);
+        for item in queue {
+            if item.path == path {
+                if let Some(rec) = &item.recipe {
+                    self.release_and_gc(rec);
+                }
+            } else {
+                self.queue.push_back(item);
+            }
+        }
     }
 
     // ------------------------------------------------- namespace ops
 
+    /// Is a durable copy of `path` restorable — a plain durable file, or
+    /// a committed recipe the chunk store can reassemble?
+    pub fn is_durable(&self, path: &str) -> bool {
+        self.durable.exists(path) || self.chunks.recipe(path).is_some()
+    }
+
+    /// Rebuild a recipe-backed file from its durable chunk objects,
+    /// verifying each object's recorded content digest. Returns the
+    /// byte-identical encoded file plus its logical virtual bytes.
+    fn reassemble(&self, path: &str) -> Result<(Vec<u8>, u64), FsError> {
+        let rec = self
+            .chunks
+            .recipe(path)
+            .ok_or_else(|| FsError::NotFound(path.to_string()))?;
+        let mut out = Vec::with_capacity(rec.real_bytes() as usize);
+        for c in &rec.chunks {
+            if c.real_len == 0 {
+                continue;
+            }
+            let entry = self
+                .chunks
+                .entry(c.digest)
+                .filter(|e| e.stored)
+                .ok_or_else(|| {
+                    FsError::Corrupt(format!("{path}: chunk {:032x} not durable", c.digest))
+                })?;
+            let opath = object_path(c.digest);
+            let Some((_, bytes)) = self.durable.peek(&opath) else {
+                return Err(FsError::Corrupt(format!("{path}: object {opath} missing")));
+            };
+            if bytes.len() as u64 != c.real_len || digest128(bytes) != entry.content {
+                return Err(FsError::Corrupt(format!(
+                    "{path}: object {opath} content digest mismatch"
+                )));
+            }
+            out.extend_from_slice(bytes);
+        }
+        Ok((out, rec.file_vbytes))
+    }
+
     /// Read a wave preferring the fast tier per file, falling back to the
-    /// durable tier; the two tier waves proceed in parallel.
+    /// durable tier (plain files and recipe reassembly alike); the tier
+    /// waves proceed in parallel.
     pub fn read_preferred(
         &self,
         paths: &[(NodeId, String)],
@@ -503,18 +699,74 @@ impl TieredStore {
         let mut datas: Vec<Vec<u8>> = vec![Vec::new(); paths.len()];
         let mut duration = 0.0f64;
         let mut total = 0u64;
-        for (tier, wave) in [(&self.fast, fast_wave), (&self.durable, durable_wave)] {
-            if wave.is_empty() {
-                continue;
+        read_scattered(
+            fast_wave,
+            |r| self.fast.read_parallel(r),
+            &mut datas,
+            &mut duration,
+            &mut total,
+        )?;
+        read_scattered(
+            durable_wave,
+            |r| self.read_durable(r),
+            &mut datas,
+            &mut duration,
+            &mut total,
+        )?;
+        Ok((
+            datas,
+            IoReport {
+                duration,
+                total_virtual_bytes: total,
+                writers: paths.len(),
+            },
+        ))
+    }
+
+    /// Read a wave from the durable tier only (CRC-fallback and
+    /// fast-tier-loss paths). Plain durable files read directly;
+    /// recipe-backed files are reassembled from their chunk objects with
+    /// per-object content-digest verification.
+    pub fn read_durable(
+        &self,
+        paths: &[(NodeId, String)],
+    ) -> Result<(Vec<Vec<u8>>, IoReport), FsError> {
+        let mut plain = Vec::new();
+        let mut recipes = Vec::new();
+        for (i, (node, path)) in paths.iter().enumerate() {
+            if self.durable.exists(path) {
+                plain.push((i, (*node, path.clone())));
+            } else {
+                recipes.push((i, *node, path.clone()));
             }
-            let reqs: Vec<(NodeId, String)> =
-                wave.iter().map(|(_, np)| np.clone()).collect();
-            let (tier_datas, io) = tier.read_parallel(&reqs)?;
-            for ((i, _), d) in wave.into_iter().zip(tier_datas) {
-                datas[i] = d;
+        }
+        let mut datas: Vec<Vec<u8>> = vec![Vec::new(); paths.len()];
+        let mut duration = 0.0f64;
+        let mut total = 0u64;
+        read_scattered(
+            plain,
+            |r| self.durable.read_parallel(r),
+            &mut datas,
+            &mut duration,
+            &mut total,
+        )?;
+        if !recipes.is_empty() {
+            let mut vbytes = 0u64;
+            let mut nodes: Vec<u32> = recipes.iter().map(|(_, n, _)| n.0).collect();
+            nodes.sort_unstable();
+            nodes.dedup();
+            for (i, _, path) in &recipes {
+                let (bytes, vb) = self.reassemble(path)?;
+                datas[*i] = bytes;
+                vbytes += vb;
             }
-            duration = duration.max(io.duration);
-            total += io.total_virtual_bytes;
+            // Reassembly reads the recipe's chunk objects — charged like
+            // a durable-tier read wave of the same logical size.
+            let bw = self
+                .durable
+                .read_bandwidth(recipes.len(), nodes.len().max(1) as u32);
+            duration = duration.max(vbytes as f64 / bw + self.durable.cfg.meta_latency);
+            total += vbytes;
         }
         Ok((
             datas,
@@ -526,25 +778,25 @@ impl TieredStore {
         ))
     }
 
-    /// Read a wave from the durable tier only (CRC-fallback path).
-    pub fn read_durable(
-        &self,
-        paths: &[(NodeId, String)],
-    ) -> Result<(Vec<Vec<u8>>, IoReport), FsError> {
-        self.durable.read_parallel(paths)
-    }
-
     pub fn exists(&self, path: &str) -> bool {
-        self.fast.exists(path) || self.durable.exists(path)
+        self.fast.exists(path) || self.is_durable(path)
     }
 
     pub fn delete(&mut self, path: &str) -> Result<(), FsError> {
         self.unclaim(path);
-        let a = self.fast.delete(path);
-        let b = self.durable.delete(path);
-        match (a, b) {
-            (Err(e), Err(_)) => Err(e),
-            _ => Ok(()),
+        let fast = self.fast.delete(path).is_ok();
+        let durable = self.durable.delete(path).is_ok();
+        let recipe = match self.chunks.remove_recipe(path) {
+            Some(old) => {
+                self.release_and_gc(&old);
+                true
+            }
+            None => false,
+        };
+        if fast || durable || recipe {
+            Ok(())
+        } else {
+            Err(FsError::NotFound(path.to_string()))
         }
     }
 
@@ -557,10 +809,17 @@ impl TieredStore {
         self.fast.free_bytes()
     }
 
-    /// Distinct paths across both tiers.
+    /// Distinct logical paths across both tiers (chunk objects are
+    /// internal and excluded; recipe-backed durable files count).
     pub fn file_count(&self) -> usize {
         let mut paths = self.fast.paths();
-        paths.extend(self.durable.paths());
+        paths.extend(
+            self.durable
+                .paths()
+                .into_iter()
+                .filter(|p| !p.starts_with(OBJECT_PREFIX)),
+        );
+        paths.extend(self.chunks.recipe_paths());
         paths.sort_unstable();
         paths.dedup();
         paths.len()
@@ -573,12 +832,38 @@ impl TieredStore {
 
     pub fn describe(&self) -> String {
         format!(
-            "staged({} → {}, {} pending)",
+            "staged({} → {}, {} pending, {} unique chunks, {:.0}% deduped)",
             self.fast.cfg.kind,
             self.durable.cfg.kind,
-            crate::util::bytes::human(self.pending_bytes())
+            crate::util::bytes::human(self.pending_bytes()),
+            self.chunks.chunk_count(),
+            self.stats.dedup_ratio() * 100.0
         )
     }
+}
+
+/// Read one sub-wave through `read` and scatter the results back into
+/// request order, folding the wave's time/bytes into the caller's totals
+/// (the sub-waves of one logical wave proceed in parallel, so durations
+/// max rather than add).
+fn read_scattered(
+    wave: Vec<(usize, (NodeId, String))>,
+    read: impl FnOnce(&[(NodeId, String)]) -> Result<(Vec<Vec<u8>>, IoReport), FsError>,
+    datas: &mut [Vec<u8>],
+    duration: &mut f64,
+    total: &mut u64,
+) -> Result<(), FsError> {
+    if wave.is_empty() {
+        return Ok(());
+    }
+    let reqs: Vec<(NodeId, String)> = wave.iter().map(|(_, np)| np.clone()).collect();
+    let (wave_datas, io) = read(&reqs)?;
+    for ((i, _), d) in wave.into_iter().zip(wave_datas) {
+        datas[i] = d;
+    }
+    *duration = duration.max(io.duration);
+    *total += io.total_virtual_bytes;
+    Ok(())
 }
 
 impl StorageTier for TieredStore {
@@ -620,6 +905,9 @@ mod tests {
     use crate::fs::FsConfig;
 
     const MIB: u64 = 1 << 20;
+    /// Recipe chunk size used by the dedup tests (tiny, to exercise many
+    /// chunks per file cheaply).
+    const CHUNK: usize = 1 << 10;
 
     fn store(fast_cap: u64, keep: usize) -> TieredStore {
         let mut bb = FsConfig::burst_buffer(2);
@@ -639,8 +927,34 @@ mod tests {
                 path: format!("{tag}/f{i}"),
                 virtual_bytes: bytes_each,
                 data: vec![i as u8; 8],
+                recipe: None,
             })
             .collect()
+    }
+
+    /// Deterministic avalanche-quality bytes (a SplitMix64 stream seeded
+    /// by `tag`): every chunk-sized window is distinct, which the dedup
+    /// arithmetic these tests assert depends on.
+    fn patterned(len: usize, tag: u8) -> Vec<u8> {
+        let mut sm = crate::util::prng::SplitMix64::new(tag as u64);
+        let mut out = Vec::with_capacity(len + 8);
+        while out.len() < len {
+            out.extend_from_slice(&sm.next_u64().to_le_bytes());
+        }
+        out.truncate(len);
+        out
+    }
+
+    /// A request whose recipe addresses `data` in `CHUNK`-byte chunks,
+    /// with virtual bytes equal to the data length (1 vbyte per byte).
+    fn recipe_req(node: u32, path: &str, data: &[u8]) -> WriteReq {
+        WriteReq {
+            node: NodeId(node),
+            path: path.into(),
+            virtual_bytes: data.len() as u64,
+            data: data.to_vec(),
+            recipe: Some(ChunkRecipe::from_data(data, CHUNK, data.len() as u64)),
+        }
     }
 
     #[test]
@@ -674,8 +988,8 @@ mod tests {
         let tick = ts.drain_to(half);
         assert!(!tick.queue_empty, "half the budget must not finish");
         assert!(tick.drained_bytes > 0);
-        // Chunk-granular progress.
-        assert_eq!(tick.drained_bytes % CHUNK_BYTES as u64, 0);
+        // Chunk-granular progress (recipe-less items use the default).
+        assert_eq!(tick.drained_bytes % DEFAULT_CHUNK_BYTES as u64, 0);
         let tick2 = ts.drain_to(half * 2.5);
         assert!(tick2.queue_empty, "full budget finishes the drain");
         assert!(ts.durable().exists("g0/f0"));
@@ -820,5 +1134,235 @@ mod tests {
         assert!(!ts.exists("g0/f0"));
         assert_eq!(ts.pending_files(), 1, "queued drain dropped with the file");
         assert!(ts.delete("nope").is_err());
+    }
+
+    // ------------------------------------------------- chunk dedup
+
+    #[test]
+    fn second_generation_drains_only_dirty_chunks() {
+        let mut ts = store(1024 * MIB, 4);
+        let mut data = patterned(64 * CHUNK, 1);
+        ts.begin_ckpt(0.0);
+        let io0 = ts.write_wave(vec![recipe_req(0, "g0/f0", &data)]).unwrap();
+        assert_eq!(io0.deduped_bytes, 0, "empty index dedups nothing");
+        assert_eq!(io0.pending_bytes, 64 * CHUNK as u64);
+        ts.drain_sync();
+        let shipped_gen0 = ts.stats.drained_bytes;
+        assert_eq!(shipped_gen0, 64 * CHUNK as u64);
+        assert!(ts.is_durable("g0/f0"));
+
+        // Dirty ~10%: one byte in each of 6 of the 64 chunks.
+        for c in 0..6usize {
+            data[c * 10 * CHUNK] ^= 0xA5;
+        }
+        ts.begin_ckpt(1.0);
+        let io1 = ts.write_wave(vec![recipe_req(0, "g1/f0", &data)]).unwrap();
+        assert_eq!(io1.deduped_bytes, 58 * CHUNK as u64);
+        assert_eq!(ts.pending_bytes(), 6 * CHUNK as u64);
+        let secs = ts.drain_sync();
+        assert!(secs > 0.0);
+        assert_eq!(
+            ts.stats.drained_bytes - shipped_gen0,
+            6 * CHUNK as u64,
+            "only the dirty chunks ship"
+        );
+        assert!(ts.stats.dedup_ratio() > 0.4);
+        assert!(ts.is_durable("g1/f0"));
+    }
+
+    #[test]
+    fn fully_clean_generation_drains_by_reference_instantly() {
+        let mut ts = store(1024 * MIB, 4);
+        let data = patterned(32 * CHUNK, 3);
+        ts.begin_ckpt(0.0);
+        ts.write_wave(vec![recipe_req(0, "g0/f0", &data)]).unwrap();
+        ts.drain_sync();
+        let shipped = ts.stats.drained_bytes;
+
+        ts.begin_ckpt(1.0);
+        let io = ts.write_wave(vec![recipe_req(0, "g1/f0", &data)]).unwrap();
+        assert_eq!(io.deduped_bytes, data.len() as u64, "everything dedups");
+        assert_eq!(ts.pending_bytes(), 0, "no physical bytes to ship");
+        assert_eq!(ts.pending_files(), 1, "recipe commit still pending");
+        let secs = ts.drain_sync();
+        assert_eq!(secs, 0.0, "deduped drain takes zero simulated seconds");
+        assert_eq!(ts.stats.drained_bytes, shipped, "nothing new shipped");
+        assert!(ts.is_durable("g1/f0"));
+    }
+
+    #[test]
+    fn restart_reassembles_from_durable_chunks_alone() {
+        let mut ts = store(1024 * MIB, 2);
+        let d0 = patterned(16 * CHUNK, 5);
+        let d1 = patterned(16 * CHUNK + 100, 6); // non-chunk-aligned tail
+        ts.begin_ckpt(0.0);
+        ts.write_wave(vec![
+            recipe_req(0, "g0/f0", &d0),
+            recipe_req(1, "g0/f1", &d1),
+        ])
+        .unwrap();
+        ts.drain_sync();
+        // Total fast-tier loss.
+        for p in ts.fast().paths() {
+            ts.fast_mut().delete(&p).unwrap();
+        }
+        assert_eq!(ts.fast().file_count(), 0);
+        let paths = vec![
+            (NodeId(0), "g0/f0".to_string()),
+            (NodeId(1), "g0/f1".to_string()),
+        ];
+        let (datas, io) = ts.read_preferred(&paths).unwrap();
+        assert_eq!(datas[0], d0, "reassembly must be byte-identical");
+        assert_eq!(datas[1], d1);
+        assert!(io.duration > 0.0, "reassembly charges read time");
+        assert_eq!(
+            io.total_virtual_bytes,
+            (d0.len() + d1.len()) as u64,
+            "logical bytes charged"
+        );
+    }
+
+    #[test]
+    fn reassembly_rejects_corrupted_chunk_object() {
+        let mut ts = store(1024 * MIB, 2);
+        let data = patterned(8 * CHUNK, 7);
+        let rec = ChunkRecipe::from_data(&data, CHUNK, data.len() as u64);
+        ts.begin_ckpt(0.0);
+        ts.write_wave(vec![recipe_req(0, "g0/f0", &data)]).unwrap();
+        ts.drain_sync();
+        ts.fast_mut().delete("g0/f0").unwrap();
+        // Flip one byte of a stored chunk object: the recorded content
+        // digest no longer matches.
+        assert!(ts
+            .durable_mut()
+            .corrupt_byte(&object_path(rec.chunks[2].digest), 10));
+        let err = ts
+            .read_durable(&[(NodeId(0), "g0/f0".to_string())])
+            .unwrap_err();
+        assert!(matches!(err, FsError::Corrupt(_)), "got {err}");
+    }
+
+    #[test]
+    fn gc_never_reclaims_chunk_referenced_by_newer_generation() {
+        let mut ts = store(1024 * MIB, 4);
+        let d0 = patterned(64 * CHUNK, 1);
+        let mut d1 = d0.clone();
+        for c in 0..6usize {
+            d1[c * 10 * CHUNK] ^= 0xA5; // 6 dirty chunks in gen 1
+        }
+        ts.begin_ckpt(0.0);
+        ts.write_wave(vec![recipe_req(0, "g0/f0", &d0)]).unwrap();
+        ts.drain_sync();
+        ts.begin_ckpt(1.0);
+        ts.write_wave(vec![recipe_req(0, "g1/f0", &d1)]).unwrap();
+        ts.drain_sync();
+
+        // Deleting the old generation reclaims only its unique chunks.
+        ts.delete("g0/f0").unwrap();
+        assert_eq!(ts.stats.gc_chunks, 6, "only gen-0-unique chunks die");
+        assert_eq!(ts.stats.gc_bytes, 6 * CHUNK as u64);
+        let r1 = ChunkRecipe::from_data(&d1, CHUNK, d1.len() as u64);
+        for c in &r1.chunks {
+            assert!(
+                ts.chunk_store().is_stored(c.digest),
+                "gen 1 chunk must survive gen 0 deletion"
+            );
+        }
+        // Gen 1 still reassembles byte-identical from the durable tier.
+        for p in ts.fast().paths() {
+            ts.fast_mut().delete(&p).unwrap();
+        }
+        let (datas, _) = ts
+            .read_durable(&[(NodeId(0), "g1/f0".to_string())])
+            .unwrap();
+        assert_eq!(datas[0], d1);
+        assert!(!ts.exists("g0/f0"));
+    }
+
+    #[test]
+    fn unclaim_releases_queued_recipe_references() {
+        let mut ts = store(1024 * MIB, 2);
+        let a = patterned(8 * CHUNK, 1);
+        let b = patterned(8 * CHUNK, 2);
+        ts.begin_ckpt(0.0);
+        ts.write_wave(vec![recipe_req(0, "same/f0", &a)]).unwrap();
+        // Overwrite the same path before its drain ran: the stale queued
+        // recipe's references must be released, not leaked.
+        ts.begin_ckpt(0.5);
+        ts.write_wave(vec![recipe_req(0, "same/f0", &b)]).unwrap();
+        assert_eq!(ts.pending_files(), 1);
+        ts.drain_sync();
+        assert_eq!(
+            ts.chunk_store().chunk_count(),
+            8,
+            "only the live recipe's chunks stay indexed"
+        );
+        for p in ts.fast().paths() {
+            ts.fast_mut().delete(&p).unwrap();
+        }
+        let (datas, _) = ts
+            .read_durable(&[(NodeId(0), "same/f0".to_string())])
+            .unwrap();
+        assert_eq!(datas[0], b, "the overwriting version is the durable one");
+    }
+
+    #[test]
+    fn durable_representation_is_superseded_across_plain_and_recipe() {
+        // A path has exactly one durable representation: overwriting a
+        // plain durable file with a recipe-backed version (or vice versa)
+        // must replace it, never leave a stale copy for read_durable.
+        let mut ts = store(1024 * MIB, 2);
+        let plain = vec![9u8; 64];
+        let recipe_data = patterned(4 * CHUNK, 4);
+        ts.begin_ckpt(0.0);
+        ts.write_wave(vec![WriteReq {
+            node: NodeId(0),
+            path: "p".into(),
+            virtual_bytes: 64,
+            data: plain,
+            recipe: None,
+        }])
+        .unwrap();
+        ts.drain_sync(); // plain durable copy
+        ts.begin_ckpt(1.0);
+        ts.write_wave(vec![recipe_req(0, "p", &recipe_data)]).unwrap();
+        ts.drain_sync(); // recipe supersedes the plain copy
+        assert!(!ts.durable().exists("p"), "stale plain copy removed");
+        ts.fast_mut().delete("p").unwrap();
+        let (datas, _) = ts.read_durable(&[(NodeId(0), "p".to_string())]).unwrap();
+        assert_eq!(datas[0], recipe_data, "recipe version is the durable one");
+
+        // And back: a plain overwrite releases the committed recipe.
+        ts.begin_ckpt(2.0);
+        ts.write_wave(vec![WriteReq {
+            node: NodeId(0),
+            path: "p".into(),
+            virtual_bytes: 32,
+            data: vec![7u8; 32],
+            recipe: None,
+        }])
+        .unwrap();
+        ts.drain_sync();
+        assert_eq!(ts.chunk_store().recipe_count(), 0, "recipe released");
+        assert_eq!(ts.chunk_store().chunk_count(), 0, "chunk refs released");
+        ts.fast_mut().delete("p").unwrap();
+        let (datas, _) = ts.read_durable(&[(NodeId(0), "p".to_string())]).unwrap();
+        assert_eq!(datas[0], vec![7u8; 32]);
+    }
+
+    #[test]
+    fn recipe_commit_replacing_old_recipe_releases_it() {
+        let mut ts = store(1024 * MIB, 2);
+        let a = patterned(8 * CHUNK, 1);
+        let b = patterned(8 * CHUNK, 2);
+        ts.begin_ckpt(0.0);
+        ts.write_wave(vec![recipe_req(0, "same/f0", &a)]).unwrap();
+        ts.drain_sync(); // version A committed
+        ts.begin_ckpt(1.0);
+        ts.write_wave(vec![recipe_req(0, "same/f0", &b)]).unwrap();
+        ts.drain_sync(); // version B replaces A; A's chunks reclaimed
+        assert_eq!(ts.chunk_store().chunk_count(), 8);
+        assert_eq!(ts.stats.gc_chunks, 8, "all of A's chunks reclaimed");
+        assert_eq!(ts.file_count(), 1);
     }
 }

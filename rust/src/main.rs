@@ -124,8 +124,8 @@ USAGE: mana <command> [--flags]
 COMMANDS:
   run        --app gromacs|hpcg|vasp|synthetic --ranks N [--steps S]
              [--threads T] [--fs bb|lustre|staged] [--keep-fulls N]
-             [--ckpt-at STEP] [--restart] [--real-compute]
-             [--fixes on|off] [--link static|dynamic]
+             [--chunk-bytes N] [--ckpt-at STEP] [--restart]
+             [--real-compute] [--fixes on|off] [--link static|dynamic]
   usage      [--jobs N] print the Fig. 1 application census
   mapping    --ranks N [--threads T] print rank→node/pid mapping
   preempt    [--ranks N] run the preempt-queue scenario
@@ -162,6 +162,17 @@ fn build_config(args: &Args) -> Result<RunConfig> {
             Some(s) => s.keep_fulls = keep,
             None => bail!("--keep-fulls requires --fs staged"),
         }
+    }
+    if let Some(cb) = args.get("chunk-bytes") {
+        let n = mana::util::bytes::parse(cb)
+            .with_context(|| format!("bad --chunk-bytes {cb}"))? as usize;
+        if !n.is_power_of_two() || n > mana::ckpt::chunk::MAX_CHUNK_BYTES {
+            bail!(
+                "--chunk-bytes must be a power of two <= {} (got {n})",
+                mana::ckpt::chunk::MAX_CHUNK_BYTES
+            );
+        }
+        cfg.chunk_bytes = n;
     }
     cfg.link = match args.get("link") {
         Some("dynamic") => LinkMode::Dynamic,
@@ -245,6 +256,8 @@ fn cmd_run(args: &Args) -> Result<()> {
                 .set("drain_secs", c.drain_secs)
                 .set("image_bytes", c.image_bytes)
                 .set("drain_pending_bytes", c.drain_pending_bytes)
+                .set("deduped_bytes", c.deduped_bytes)
+                .set("dedup_ratio", c.dedup_ratio())
                 .set("buffered_msgs", c.buffered_msgs)
                 .set("lost_messages", c.lost_messages),
         );
@@ -266,6 +279,14 @@ fn cmd_run(args: &Args) -> Result<()> {
                 .set("pending_bytes", ts.pending_bytes())
                 .set("staged_bytes", ts.stats.drained_bytes)
                 .set("staged_files", ts.stats.drained_files)
+                .set("deduped_bytes", ts.stats.deduped_bytes)
+                .set("dedup_ratio", ts.stats.dedup_ratio())
+                .set("unique_chunks", ts.chunk_store().chunk_count() as u64)
+                .set(
+                    "chunk_store_vbytes",
+                    ts.chunk_store().stored_vbytes(),
+                )
+                .set("gc_chunks", ts.stats.gc_chunks)
                 .set("evicted_generations", ts.stats.evicted_generations)
                 .set("backpressure_secs", ts.stats.forced_secs),
         );

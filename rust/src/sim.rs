@@ -392,7 +392,7 @@ impl JobSim {
         let ranks = self.cfg.ranks;
         match &mut self.fs {
             Store::Tiered(ts) => {
-                if ts.pending_bytes() == 0 {
+                if ts.pending_files() == 0 {
                     return 0.0;
                 }
                 let secs = ts.drain_sync();
@@ -540,6 +540,7 @@ impl JobSim {
                     && self.fs.exists(&image_path(&self.cfg.job, RankId(0)))));
         let mut reqs = Vec::with_capacity(self.cfg.ranks as usize);
         let mut total_virtual = 0u64;
+        let staged = self.cfg.staging.is_some();
         for r in 0..self.cfg.ranks {
             let rank = RankId(r);
             let img = self.capture_rank_image(r, incremental);
@@ -550,14 +551,22 @@ impl JobSim {
                 self.full_path(rank)
             };
             // Stream the image straight into the write buffer: chunked
-            // encoder, no intermediate whole-image materialization.
+            // encoder, no intermediate whole-image materialization. In
+            // staged mode the encoder also emits the content-addressed
+            // chunk recipe the dedup-aware drain consumes.
             let mut data = Vec::new();
-            img.encode_into(&mut data);
+            let recipe = if staged {
+                Some(img.encode_with_recipe(&mut data, self.cfg.chunk_bytes))
+            } else {
+                img.encode_into_sized(&mut data, self.cfg.chunk_bytes);
+                None
+            };
             reqs.push(WriteReq {
                 node: self.topo.node_of(rank),
                 path,
                 virtual_bytes: img.write_bytes(),
                 data,
+                recipe,
             });
         }
         let io = match &mut self.fs {
@@ -591,6 +600,7 @@ impl JobSim {
                 report.fast_bytes = sio.fast_bytes;
                 report.durable_write_secs = sio.backpressure_secs;
                 report.durable_bytes = sio.durable_bytes;
+                report.deduped_bytes = sio.deduped_bytes;
                 sio.io()
             }
         };
@@ -613,6 +623,7 @@ impl JobSim {
         // mode, joins the drain queue so it goes durable with its images).
         let mut manifest = CkptManifest::new(&self.cfg.job, self.step);
         manifest.gen = self.ckpt_gen;
+        manifest.chunk_bytes = self.cfg.chunk_bytes as u64;
         manifest.full_gen = if incremental {
             self.last_full_gen
         } else {
@@ -633,6 +644,9 @@ impl JobSim {
             path: CkptManifest::manifest_path(&self.cfg.job),
             virtual_bytes: mdata.len() as u64,
             data: mdata,
+            // The manifest changes every generation (step/gen stamps), so
+            // it stages byte-for-byte rather than through the chunk store.
+            recipe: None,
         };
         match &mut self.fs {
             Store::Single(fs) => {
@@ -668,7 +682,10 @@ impl JobSim {
         t = t.after(resume_delay);
         let pending = self.fs.tiered().map_or(0, |ts| ts.pending_bytes());
         report.drain_pending_bytes = pending;
-        let resumed_state = if pending > 0 {
+        // A fully-deduped generation can have zero pending *bytes* while
+        // its recipe commits are still queued — gate the phase on files.
+        let pending_files = self.fs.tiered().map_or(0, |ts| ts.pending_files());
+        let resumed_state = if pending_files > 0 {
             RankState::Draining
         } else {
             RankState::Resumed
@@ -687,6 +704,7 @@ impl JobSim {
         self.coord.stats.checkpoints += 1;
         self.coord.stats.drain_rounds += report.drain_rounds as u64;
         self.coord.stats.buffered_msgs += report.buffered_msgs as u64;
+        self.coord.stats.deduped_bytes += report.deduped_bytes;
         report.total_secs = t.as_secs() - t0.as_secs();
         self.metrics.inc("checkpoints", 1);
         self.metrics.observe("ckpt.total_secs", report.total_secs);
@@ -697,9 +715,11 @@ impl JobSim {
             .observe("ckpt.image_bytes", report.image_bytes as f64);
         self.metrics
             .inc("ckpt.buffered_msgs", report.buffered_msgs as u64);
+        self.metrics
+            .inc("ckpt.deduped_bytes", report.deduped_bytes);
         log_info!(
             "coordinator",
-            "checkpoint {} at step {}: {} in {:.2}s (drain {:.3}s, write {:.2}s{})",
+            "checkpoint {} at step {}: {} in {:.2}s (drain {:.3}s, write {:.2}s{}{})",
             self.cfg.job,
             self.step,
             crate::util::bytes::human(report.image_bytes),
@@ -710,6 +730,15 @@ impl JobSim {
                 format!(
                     ", {} staging to PFS in the background",
                     crate::util::bytes::human(report.drain_pending_bytes)
+                )
+            } else {
+                String::new()
+            },
+            if report.deduped_bytes > 0 {
+                format!(
+                    ", {} deduped ({:.0}%)",
+                    crate::util::bytes::human(report.deduped_bytes),
+                    report.dedup_ratio() * 100.0
                 )
             } else {
                 String::new()
@@ -776,7 +805,7 @@ impl JobSim {
     /// fast tier per file and fall back to the durable tier, including on
     /// CRC failure of a fast-tier copy.
     pub fn restart_from(
-        cfg: RunConfig,
+        mut cfg: RunConfig,
         engine: Option<Arc<Engine>>,
         mut fs: Store,
     ) -> Result<(JobSim, RestartReport), RestartError> {
@@ -804,6 +833,31 @@ impl JobSim {
                 .ok_or_else(|| RestartError::Fs("bad manifest".into()))?;
             ckpt_gen = manifest.gen + 1;
             last_full_gen = manifest.full_gen;
+            // Keep the dedup granularity the checkpoint set was written
+            // with: mixing chunk sizes across a job's lifetime would stop
+            // unchanged regions from deduping against older generations.
+            // Validated like --chunk-bytes (the manifest is plain text
+            // with no CRC — a corrupt value must not poison the encoder).
+            let mb = manifest.chunk_bytes as usize;
+            if mb > 0 && mb != cfg.chunk_bytes {
+                if mb.is_power_of_two() && mb <= crate::ckpt::chunk::MAX_CHUNK_BYTES {
+                    log_info!(
+                        "sim",
+                        "restart {}: adopting manifest chunk granularity {} (cfg had {})",
+                        cfg.job,
+                        crate::util::bytes::human(mb as u64),
+                        crate::util::bytes::human(cfg.chunk_bytes as u64)
+                    );
+                    cfg.chunk_bytes = mb;
+                } else {
+                    log_warn!(
+                        "sim",
+                        "restart {}: ignoring invalid manifest chunk granularity {}",
+                        cfg.job,
+                        manifest.chunk_bytes
+                    );
+                }
+            }
             (0..cfg.ranks)
                 .map(|r| {
                     let rank = RankId(r);
@@ -915,7 +969,7 @@ impl JobSim {
         // to catch up with the dead one's.
         if let Store::Tiered(ts) = &mut fs {
             ts.rebase_clock(t0.as_secs());
-            if ts.pending_bytes() > 0 {
+            if ts.pending_files() > 0 {
                 for r in 0..cfg.ranks {
                     coord.set_rank_state(RankId(r), RankState::Draining, false);
                 }
@@ -1005,7 +1059,7 @@ fn decode_with_tier_fallback(
         Ok(img) => Ok(img),
         Err(e) => {
             if let Store::Tiered(ts) = fs {
-                if ts.fast().exists(path) && ts.durable().exists(path) {
+                if ts.fast().exists(path) && ts.is_durable(path) {
                     log_warn!(
                         "sim",
                         "{rank}: fast-tier image {path} failed validation ({e}) — \
@@ -1242,15 +1296,18 @@ mod tests {
         sim.run_steps(3).unwrap();
         let ts = sim.fs.tiered().unwrap();
         assert_eq!(ts.pending_bytes(), 0);
-        assert!(ts
-            .durable()
-            .exists("synthetic-4r/gen0000/ckpt_rank00000.mana"));
-        assert!(ts.durable().exists("synthetic-4r/ckpt_manifest.txt"));
+        assert_eq!(ts.pending_files(), 0);
+        assert!(ts.is_durable("synthetic-4r/gen0000/ckpt_rank00000.mana"));
+        assert!(ts.is_durable("synthetic-4r/ckpt_manifest.txt"));
         assert_eq!(
             sim.coord.status.read().unwrap()[0].state,
             RankState::Resumed
         );
-        assert!(sim.coord.stats.staged_bytes >= rep.image_bytes);
+        // Every logical image byte either shipped physically or deduped.
+        assert!(
+            sim.coord.stats.staged_bytes + sim.coord.stats.deduped_bytes
+                >= rep.image_bytes
+        );
     }
 
     #[test]
@@ -1282,7 +1339,7 @@ mod tests {
         assert!(drain_secs > 0.0);
         let path = crate::ckpt::gen_image_path("synthetic-4r", 0, RankId(1));
         let ts = sim.fs.tiered_mut().unwrap();
-        assert!(ts.durable().exists(&path));
+        assert!(ts.is_durable(&path));
         assert!(ts.fast_mut().corrupt_byte(&path, 150));
         let cfg = sim.cfg.clone();
         let fs = sim.kill();
@@ -1342,9 +1399,82 @@ mod tests {
             0,
             "drain must resume on the restarted clock"
         );
-        assert!(ts
-            .durable()
-            .exists("synthetic-4r/gen0000/ckpt_rank00000.mana"));
+        assert!(ts.is_durable("synthetic-4r/gen0000/ckpt_rank00000.mana"));
+    }
+
+    #[test]
+    fn staged_repeat_checkpoint_dedups_drain_traffic() {
+        // Repeated full checkpoints of a mostly-clean address space: only
+        // the tiny Real state/halo/msg-buffer chunks change per superstep;
+        // the big pattern heap dedups entirely on the second generation.
+        let mut sim = JobSim::launch(staged_cfg(4, 0), None).unwrap();
+        sim.run_steps(2).unwrap();
+        let rep0 = sim.checkpoint().unwrap();
+        assert!(
+            rep0.deduped_bytes < rep0.image_bytes / 100,
+            "first generation has nothing to dedup against ({} of {})",
+            rep0.deduped_bytes,
+            rep0.image_bytes
+        );
+        sim.finish_drain();
+        sim.run_steps(1).unwrap();
+        let rep1 = sim.checkpoint().unwrap();
+        assert!(
+            rep1.deduped_bytes > rep1.image_bytes * 9 / 10,
+            "mostly-clean gen 1 must dedup >90%: {} of {}",
+            rep1.deduped_bytes,
+            rep1.image_bytes
+        );
+        assert!(rep1.dedup_ratio() > 0.9);
+        assert!(
+            sim.fs.tiered().unwrap().pending_bytes() < rep1.image_bytes / 10,
+            "physical drain traffic must be near the dirty fraction"
+        );
+        sim.finish_drain();
+
+        // Restart from the durable tier alone (chunk-store reassembly):
+        // drop every fast-tier file, resume bitwise-identically.
+        let want_next = {
+            let mut cont = JobSim::launch(staged_cfg(4, 0), None).unwrap();
+            cont.run_steps(5).unwrap();
+            cont.fingerprint()
+        };
+        {
+            let ts = sim.fs.tiered_mut().unwrap();
+            for p in ts.fast().paths() {
+                ts.fast_mut().delete(&p).unwrap();
+            }
+            assert_eq!(ts.fast().file_count(), 0);
+        }
+        let cfg = sim.cfg.clone();
+        let fs = sim.kill();
+        let (mut resumed, _) = JobSim::restart_from(cfg, None, fs).unwrap();
+        assert_eq!(resumed.step, 3, "must resume from generation 1");
+        resumed.run_steps(2).unwrap();
+        assert_eq!(
+            resumed.fingerprint(),
+            want_next,
+            "reassembled images must be byte-identical (CRC-clean decode)"
+        );
+        assert!(!resumed.any_corruption());
+    }
+
+    #[test]
+    fn staged_restart_adopts_manifest_chunk_granularity() {
+        let mut cfg = staged_cfg(4, 0);
+        cfg.chunk_bytes = 64 << 10;
+        let mut sim = JobSim::launch(cfg, None).unwrap();
+        sim.run_steps(2).unwrap();
+        sim.checkpoint().unwrap();
+        let mut restart_cfg = sim.cfg.clone();
+        restart_cfg.chunk_bytes = crate::ckpt::chunk::DEFAULT_CHUNK_BYTES;
+        let fs = sim.kill();
+        let (resumed, _) = JobSim::restart_from(restart_cfg, None, fs).unwrap();
+        assert_eq!(
+            resumed.cfg.chunk_bytes,
+            64 << 10,
+            "restart must keep the granularity the set was written with"
+        );
     }
 
     #[test]

@@ -1,0 +1,187 @@
+//! 128-bit content digest for chunk addressing.
+//!
+//! The content-addressed chunk store (`fs::chunkstore`) keys durable-tier
+//! chunk objects by a strong content digest: CRC32 stays the integrity
+//! framing inside images (cheap, error-detecting), but a 32-bit code is far
+//! too collision-prone to *address* content — a billion-chunk store would
+//! see CRC collisions constantly, and a collision there silently aliases
+//! two different chunks. This is a 128-bit non-cryptographic hash built
+//! from two independently seeded 64-bit mixing lanes (xxhash-style
+//! multiply-rotate absorption, murmur3 finalizer), processed a word at a
+//! time so digesting is not the drain path's bottleneck.
+//!
+//! Not cryptographic: collision *resistance against an adversary* is not a
+//! goal (the store only ever hashes its own checkpoint bytes); accidental
+//! collision probability at 128 bits is negligible at any realistic chunk
+//! count.
+
+const PRIME1: u64 = 0x9E37_79B1_85EB_CA87;
+const PRIME2: u64 = 0xC2B2_AE3D_27D4_EB4F;
+const PRIME3: u64 = 0x1656_67B1_9E37_79F9;
+
+/// Seeds chosen so the two lanes never start equal (distinct constants,
+/// both odd, no shared structure with the primes).
+const SEED_A: u64 = 0x2545_F491_4F6C_DD1D;
+const SEED_B: u64 = 0x9FB2_1C65_1E98_DF25;
+
+/// One-shot 128-bit digest of a byte slice.
+pub fn digest128(data: &[u8]) -> u128 {
+    let mut h = Hasher128::new();
+    h.update(data);
+    h.finalize()
+}
+
+/// Incremental 128-bit digest state (feed spans, finalize once).
+#[derive(Clone, Debug)]
+pub struct Hasher128 {
+    a: u64,
+    b: u64,
+    /// Partial input word, little-endian, low `buf_len` bytes valid.
+    buf: u64,
+    buf_len: u32,
+    /// Total bytes fed (folded into the finalizer so inputs differing only
+    /// by zero-padding still digest differently).
+    total: u64,
+}
+
+impl Default for Hasher128 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn avalanche(mut x: u64) -> u64 {
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xC4CE_B9FE_1A85_EC53);
+    x ^= x >> 33;
+    x
+}
+
+impl Hasher128 {
+    pub fn new() -> Self {
+        Hasher128 {
+            a: SEED_A,
+            b: SEED_B,
+            buf: 0,
+            buf_len: 0,
+            total: 0,
+        }
+    }
+
+    fn absorb(&mut self, w: u64) {
+        self.a = (self.a ^ w.wrapping_mul(PRIME1))
+            .rotate_left(27)
+            .wrapping_mul(PRIME2);
+        self.b = (self.b ^ w.wrapping_mul(PRIME3))
+            .rotate_left(31)
+            .wrapping_mul(PRIME1);
+    }
+
+    pub fn update(&mut self, data: &[u8]) {
+        self.total = self.total.wrapping_add(data.len() as u64);
+        let mut rest = data;
+        // Top up a pending partial word first.
+        if self.buf_len > 0 {
+            let need = (8 - self.buf_len) as usize;
+            let take = need.min(rest.len());
+            for &byte in &rest[..take] {
+                self.buf |= (byte as u64) << (8 * self.buf_len);
+                self.buf_len += 1;
+            }
+            rest = &rest[take..];
+            if self.buf_len == 8 {
+                let w = self.buf;
+                self.absorb(w);
+                self.buf = 0;
+                self.buf_len = 0;
+            }
+        }
+        // Whole words, 8 bytes at a time.
+        let mut words = rest.chunks_exact(8);
+        for w in &mut words {
+            self.absorb(u64::from_le_bytes(w.try_into().expect("8-byte chunk")));
+        }
+        // Stash the tail for the next update / finalize.
+        for &byte in words.remainder() {
+            self.buf |= (byte as u64) << (8 * self.buf_len);
+            self.buf_len += 1;
+        }
+    }
+
+    pub fn finalize(mut self) -> u128 {
+        if self.buf_len > 0 {
+            let w = self.buf;
+            self.absorb(w);
+        }
+        let mut a = self.a ^ self.total.wrapping_mul(PRIME2);
+        let mut b = self.b ^ self.total.rotate_left(32).wrapping_mul(PRIME3);
+        a = avalanche(a);
+        b = avalanche(b ^ a);
+        ((a as u128) << 64) | b as u128
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_input_sensitive() {
+        let d = digest128(b"the quick brown fox");
+        assert_eq!(d, digest128(b"the quick brown fox"));
+        assert_ne!(d, digest128(b"the quick brown foy"));
+        assert_ne!(digest128(b""), digest128(&[0u8]));
+    }
+
+    #[test]
+    fn zero_padding_changes_digest() {
+        // The zero-padded tail word must not alias a longer input: the
+        // total length is folded into the finalizer.
+        assert_ne!(digest128(b"ab"), digest128(b"ab\0"));
+        assert_ne!(digest128(&[0u8; 7]), digest128(&[0u8; 8]));
+        assert_ne!(digest128(&[0u8; 8]), digest128(&[0u8; 16]));
+    }
+
+    #[test]
+    fn incremental_matches_oneshot() {
+        let data: Vec<u8> = (0..1027u32).map(|i| (i % 251) as u8).collect();
+        let want = digest128(&data);
+        for splits in [
+            vec![0usize],
+            vec![1, 2, 3],
+            vec![7],
+            vec![8],
+            vec![9, 800],
+            vec![1026],
+        ] {
+            let mut h = Hasher128::new();
+            let mut pos = 0;
+            for &s in &splits {
+                h.update(&data[pos..s.min(data.len())]);
+                pos = s.min(data.len());
+            }
+            h.update(&data[pos..]);
+            assert_eq!(h.finalize(), want, "splits={splits:?}");
+        }
+    }
+
+    #[test]
+    fn single_bitflip_everywhere_changes_digest() {
+        let base = vec![0x5Au8; 64];
+        let want = digest128(&base);
+        for i in 0..base.len() {
+            let mut m = base.clone();
+            m[i] ^= 1;
+            assert_ne!(digest128(&m), want, "flip at {i} undetected");
+        }
+    }
+
+    #[test]
+    fn halves_are_independent() {
+        // The two lanes must not be trivially correlated.
+        let d = digest128(b"lane correlation probe");
+        assert_ne!((d >> 64) as u64, d as u64);
+    }
+}

@@ -7,6 +7,7 @@
 
 pub mod bytes;
 pub mod crc32;
+pub mod digest;
 pub mod json;
 pub mod logging;
 pub mod prng;
