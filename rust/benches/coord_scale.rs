@@ -1,0 +1,127 @@
+//! COORD — control-plane scalability: flat DMTCP root vs the hierarchical
+//! sub-coordinator tree.
+//!
+//! The flat coordinator exchanges one message with every rank in every
+//! protocol phase: O(ranks) serialized traffic at a single endpoint, the
+//! first bottleneck a production deployment hits. The tree plane
+//! (per-node sub-coordinators, fanout 8, broadcast-down + reduce-up per
+//! phase, DRAIN counters summed up the tree) caps the root at O(fanout)
+//! messages per phase and turns protocol wall-clock growth from linear in
+//! ranks to logarithmic (tree depth).
+//!
+//! Asserted (the PR's acceptance criteria), at >= 512 ranks:
+//!   * tree root control messages per checkpoint <= 2 x fanout x phases
+//!     (flat stays >= ranks);
+//!   * tree protocol wall-clock strictly below flat at the largest swept
+//!     size, growing sublinearly across the sweep;
+//!   * flat and tree checkpoints restart byte-identically (fingerprint
+//!     equality) at every size.
+
+use mana::benchkit::Report;
+use mana::config::{AppKind, RunConfig};
+use mana::coordinator::Phase;
+use mana::sim::JobSim;
+
+const FANOUT: u32 = 8;
+
+fn cfg_for(ranks: u32, tree: bool) -> RunConfig {
+    let mut cfg = RunConfig::new(AppKind::Synthetic, ranks);
+    cfg.job = format!("coord-{ranks}-{}", if tree { "tree" } else { "flat" });
+    cfg.mem_per_rank = Some(1 << 20);
+    if tree {
+        cfg = cfg.with_coord_tree(FANOUT);
+    }
+    cfg
+}
+
+struct Point {
+    ctrl_secs: f64,
+    ctrl_msgs: u64,
+    root_msgs: u64,
+    depth: u32,
+    fingerprint: u64,
+}
+
+/// One full C/R cycle; the protocol numbers come from the checkpoint
+/// report, the fingerprint from the resumed run.
+fn measure(ranks: u32, tree: bool) -> Point {
+    let cfg = cfg_for(ranks, tree);
+    let mut sim = JobSim::launch(cfg.clone(), None).expect("launch");
+    sim.run_steps(2).expect("steps");
+    let rep = sim.checkpoint().expect("ckpt");
+    let fs = sim.kill();
+    let (mut resumed, _) = JobSim::restart_from(cfg, None, fs).expect("restart");
+    resumed.run_steps(2).expect("resume");
+    Point {
+        ctrl_secs: rep.ctrl_secs,
+        ctrl_msgs: rep.ctrl_msgs,
+        root_msgs: rep.root_ctrl_msgs,
+        depth: rep.coord_depth,
+        fingerprint: resumed.fingerprint(),
+    }
+}
+
+fn main() {
+    let phases = Phase::ALL.len() as u64;
+    let mut rep = Report::new(
+        "COORD: control-plane scalability, flat vs tree (fanout 8)",
+        vec![
+            "ranks",
+            "plane",
+            "depth",
+            "root_msgs",
+            "ctrl_msgs",
+            "ctrl_secs",
+        ],
+    );
+    let sweep = [64u32, 128, 256, 512];
+    let mut flat_secs = Vec::new();
+    let mut tree_secs = Vec::new();
+    for &ranks in &sweep {
+        let f = measure(ranks, false);
+        let t = measure(ranks, true);
+        assert_eq!(
+            f.fingerprint, t.fingerprint,
+            "{ranks} ranks: flat and tree checkpoints must restart byte-identically"
+        );
+        for (tag, p) in [("flat", &f), ("tree", &t)] {
+            rep.row(vec![
+                ranks.to_string(),
+                tag.to_string(),
+                p.depth.to_string(),
+                p.root_msgs.to_string(),
+                p.ctrl_msgs.to_string(),
+                format!("{:.4}", p.ctrl_secs),
+            ]);
+        }
+        assert!(
+            f.root_msgs >= ranks as u64,
+            "{ranks} ranks: flat root load {} must be O(ranks)",
+            f.root_msgs
+        );
+        assert!(
+            t.root_msgs <= 2 * FANOUT as u64 * phases,
+            "{ranks} ranks: tree root load {} exceeds 2 x fanout x phases ({})",
+            t.root_msgs,
+            2 * FANOUT as u64 * phases
+        );
+        flat_secs.push(f.ctrl_secs);
+        tree_secs.push(t.ctrl_secs);
+    }
+    rep.finish();
+
+    let (flat_last, tree_last) = (flat_secs.last().unwrap(), tree_secs.last().unwrap());
+    assert!(
+        tree_last < flat_last,
+        "tree protocol wall-clock {tree_last}s must be strictly below flat {flat_last}s \
+         at the largest swept size"
+    );
+    // Sublinear growth: 8x the ranks must cost well under 8x the time
+    // (depth grows by one level over this sweep).
+    let growth = tree_secs.last().unwrap() / tree_secs.first().unwrap();
+    assert!(
+        growth < 4.0,
+        "tree protocol wall-clock must grow sublinearly across 64->512 ranks: {growth:.2}x"
+    );
+    println!("COORD OK");
+}

@@ -176,6 +176,12 @@ pub struct RunConfig {
     /// but cost more index entries; the manifest records the value so a
     /// restarted job keeps the granularity consistent.
     pub chunk_bytes: usize,
+    /// Coordination plane: `None` = the flat DMTCP root (O(ranks) control
+    /// messages at one endpoint per phase); `Some(f)` = the hierarchical
+    /// plane (`--coord-fanout f`, f >= 2) — per-node sub-coordinators in a
+    /// fanout-`f` tree, each phase a broadcast-down + reduce-up, the root
+    /// handling only O(f) messages per phase.
+    pub coord_fanout: Option<u32>,
 }
 
 impl RunConfig {
@@ -198,12 +204,19 @@ impl RunConfig {
             mem_per_rank: None,
             incremental: false,
             chunk_bytes: DEFAULT_CHUNK_BYTES,
+            coord_fanout: None,
         }
     }
 
     /// Enable the staged (tiered BB→Lustre) storage engine.
     pub fn with_staging(mut self) -> Self {
         self.staging = Some(StagingConfig::default());
+        self
+    }
+
+    /// Select the hierarchical coordination plane with the given fanout.
+    pub fn with_coord_tree(mut self, fanout: u32) -> Self {
+        self.coord_fanout = Some(fanout.max(2));
         self
     }
 }
@@ -248,5 +261,13 @@ mod tests {
         assert!(c.staging.is_none());
         let s = c.with_staging();
         assert_eq!(s.staging.unwrap().keep_fulls, 2);
+    }
+
+    #[test]
+    fn coord_plane_defaults_flat_and_tree_clamps_fanout() {
+        let c = RunConfig::new(AppKind::Synthetic, 8);
+        assert!(c.coord_fanout.is_none(), "flat plane is the default");
+        assert_eq!(c.clone().with_coord_tree(8).coord_fanout, Some(8));
+        assert_eq!(c.with_coord_tree(1).coord_fanout, Some(2), "fanout >= 2");
     }
 }

@@ -18,6 +18,9 @@ pub enum Command {
     Checkpoint,
     /// `l` — list ranks (node, pid, step).
     ListRanks,
+    /// `t` — aggregated status rows: one per coordination-plane group
+    /// (per sub-coordinator under the tree plane), not one per rank.
+    Tree,
     /// `r N` — run N supersteps.
     Run(u64),
     /// `k` — kill the job (the caller receives the surviving FileSystem).
@@ -41,6 +44,7 @@ impl Command {
             "s" | "status" => Ok(Command::Status),
             "c" | "checkpoint" => Ok(Command::Checkpoint),
             "l" | "list" => Ok(Command::ListRanks),
+            "t" | "tree" => Ok(Command::Tree),
             "k" | "kill" => Ok(Command::Kill),
             "h" | "help" | "?" => Ok(Command::Help),
             "r" | "run" => {
@@ -79,6 +83,13 @@ pub fn execute(sim: &mut JobSim, cmd: &Command) -> Reply {
                 .set("virtual_secs", sim.now().as_secs())
                 .set("checkpoints", sim.coord.stats.checkpoints)
                 .set("inflight_msgs", sim.world.inflight_count())
+                .set("coord", sim.coord.plane.describe().as_str())
+                .set("ctrl_msgs", sim.coord.stats.ctrl_msgs)
+                .set("root_ctrl_msgs", sim.coord.stats.root_msgs)
+                .set(
+                    "drain_counts_balanced",
+                    sim.coord.counts_balanced().unwrap_or(false),
+                )
                 .set("storage", sim.fs.describe())
                 .set("corruption", sim.any_corruption())
                 .set("metrics", sim.metrics.snapshot());
@@ -108,12 +119,49 @@ pub fn execute(sim: &mut JobSim, cmd: &Command) -> Reply {
             }
             Reply::Text(out)
         }
+        Command::Tree => {
+            // One aggregated row per coordination group (a sub-coordinator
+            // under the tree plane; the single root group when flat): a
+            // state histogram plus summed traffic counters, never one row
+            // per rank — what a 512-rank operator can actually read.
+            let rows = match sim.coord.status.read() {
+                Ok(rows) => rows.clone(),
+                Err(e) => return Reply::Text(format!("status table race: {e}")),
+            };
+            let mut out = format!("coordination plane: {}\n", sim.coord.plane.describe());
+            out.push_str("group   parent  ranks  states           sent        recv\n");
+            for g in sim.coord.plane.groups() {
+                let mut hist = std::collections::BTreeMap::new();
+                let (mut sent, mut recv) = (0u64, 0u64);
+                for r in &g.ranks {
+                    let row = &rows[r.0 as usize];
+                    *hist.entry(row.state.tag()).or_insert(0u32) += 1;
+                    sent += row.sent_bytes;
+                    recv += row.recv_bytes;
+                }
+                let states = hist
+                    .iter()
+                    .map(|(tag, n)| format!("{n}{tag}"))
+                    .collect::<Vec<_>>()
+                    .join("/");
+                out.push_str(&format!(
+                    "{:<7} {:<7} {:>5}  {:<15} {:>11} {:>11}\n",
+                    g.label,
+                    g.parent,
+                    g.ranks.len(),
+                    states,
+                    sent,
+                    recv
+                ));
+            }
+            Reply::Text(out)
+        }
         Command::Run(n) => match sim.run_steps(*n) {
             Ok(()) => Reply::Text(format!("ran {n} steps, now at step {}", sim.step)),
             Err(e) => Reply::Text(format!("run FAILED: {e}")),
         },
         Command::Help => Reply::Text(
-            "commands: s(tatus) | c(heckpoint) | l(ist) | r(un) N | k(ill) | h(elp)"
+            "commands: s(tatus) | c(heckpoint) | l(ist) | t(ree) | r(un) N | k(ill) | h(elp)"
                 .to_string(),
         ),
         Command::Kill => unreachable!("Kill handled by run_script"),
@@ -180,6 +228,8 @@ mod tests {
         };
         assert!(t.contains("\"step\":2"), "{t}");
         assert!(t.contains("console-test"));
+        assert!(t.contains("\"coord\":\"flat"), "{t}");
+        assert!(t.contains("drain_counts_balanced"), "{t}");
     }
 
     #[test]
@@ -201,6 +251,33 @@ mod tests {
         };
         assert_eq!(t.lines().count(), 5); // header + 4 ranks
         assert!(t.contains("nid00000"));
+    }
+
+    #[test]
+    fn tree_command_aggregates_by_group() {
+        let mut cfg = RunConfig::new(AppKind::Synthetic, 16).with_coord_tree(2);
+        cfg.job = "console-tree".into();
+        cfg.mem_per_rank = Some(1 << 20);
+        let mut sim = JobSim::launch(cfg, None).unwrap();
+        sim.run_steps(1).unwrap();
+        let Reply::Text(t) = execute(&mut sim, &Command::Tree) else {
+            panic!()
+        };
+        assert!(t.contains("tree(fanout=2"), "{t}");
+        // 16 ranks on 2 nodes -> 2 sub-coordinator rows, not 16 rank rows.
+        assert_eq!(t.lines().count(), 4, "{t}"); // plane + header + 2 groups
+        assert!(t.contains("sub000") && t.contains("sub001"), "{t}");
+        assert!(t.contains("8r"), "8 running ranks per group: {t}");
+
+        // Flat job: one aggregated root row.
+        let mut flat = job();
+        let Reply::Text(tf) = execute(&mut flat, &Command::Tree) else {
+            panic!()
+        };
+        assert!(tf.contains("root"), "{tf}");
+        assert_eq!(tf.lines().count(), 3, "{tf}");
+        assert_eq!(Command::parse("t").unwrap(), Command::Tree);
+        assert_eq!(Command::parse("tree").unwrap(), Command::Tree);
     }
 
     #[test]

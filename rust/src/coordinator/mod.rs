@@ -1,6 +1,6 @@
-//! The DMTCP-style checkpoint coordinator.
+//! The DMTCP-style checkpoint coordinator and its coordination planes.
 //!
-//! One coordinator per job, connected to every rank over the simulated
+//! One coordinator per job, connected to the ranks over the simulated
 //! control TCP network. The checkpoint protocol follows MANA's production
 //! sequence, with every phase carrying its paper fix:
 //!
@@ -17,16 +17,198 @@
 //!    file system in one parallel wave (disk-space warning on shortfall).
 //! 6. **RESUME** — broadcast the resume.
 //!
+//! How each phase's control messages actually move is the **coordination
+//! plane** ([`CoordPlane`]), selectable per job:
+//!
+//! * [`FlatPlane`] — the original DMTCP shape: the root exchanges one
+//!   message with every rank, paying O(ranks) serialized sends *and*
+//!   O(ranks) serialized receives per phase at a single endpoint.
+//! * [`tree::TreePlane`] — per-node sub-coordinators arranged in a
+//!   fanout-ary tree; each phase is a broadcast-down + reduce-up, the
+//!   DRAIN convergence test uses sent/recv counters *summed up the tree*,
+//!   and the root never touches more than `2 x fanout` messages per phase.
+//!
 //! The coordinator's own rank-status table is a [`Guarded`] structure
 //! (Lesson 3): with the locks fix off, an injected interruption leaves it
 //! mid-update and the subsequent read detects the race.
 
 pub mod console;
+pub mod tree;
 
+use std::fmt;
+
+use crate::log_warn;
 use crate::mem::guard::Guarded;
 use crate::simnet::control::{ControlNet, CtrlError};
 use crate::topology::RankId;
 use crate::util::simclock::SimTime;
+
+/// The six checkpoint-protocol phases, in order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Intent,
+    SafePoint,
+    Drain,
+    Quiesce,
+    Write,
+    Resume,
+}
+
+impl Phase {
+    /// Protocol order (the per-checkpoint phase count benches divide by).
+    pub const ALL: [Phase; 6] = [
+        Phase::Intent,
+        Phase::SafePoint,
+        Phase::Drain,
+        Phase::Quiesce,
+        Phase::Write,
+        Phase::Resume,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Intent => "INTENT",
+            Phase::SafePoint => "SAFE-POINT",
+            Phase::Drain => "DRAIN",
+            Phase::Quiesce => "QUIESCE",
+            Phase::Write => "WRITE",
+            Phase::Resume => "RESUME",
+        }
+    }
+}
+
+impl fmt::Display for Phase {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Control-plane accounting of one phase exchange.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseIo {
+    /// Wall-clock of the broadcast-down + reduce-up, seconds.
+    pub secs: f64,
+    /// Control messages moved anywhere in the plane.
+    pub msgs: u64,
+    /// Messages the *root* endpoint sent or received — the scalability
+    /// number (O(ranks) flat, O(fanout) tree).
+    pub root_msgs: u64,
+    /// Sub-coordinators re-parented during this exchange (tree plane).
+    pub reparents: u32,
+    /// Phase attempts retried after a sub-coordinator death.
+    pub retries: u32,
+}
+
+/// Outcome of the DRAIN convergence reduction.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CountReduce {
+    /// Aggregate bytes sent / received, summed up the plane.
+    pub sent: u64,
+    pub recv: u64,
+    pub io: PhaseIo,
+}
+
+/// One aggregation group for the console's status view: the set of ranks
+/// a sub-coordinator answers for (the flat plane has a single root group).
+#[derive(Clone, Debug)]
+pub struct CoordGroup {
+    pub label: String,
+    pub parent: String,
+    pub ranks: Vec<RankId>,
+}
+
+/// How checkpoint-protocol control traffic moves between the root
+/// coordinator and the ranks. Implementations own the routing topology;
+/// the [`Coordinator`] owns the status table, failure bookkeeping and
+/// stats.
+pub trait CoordPlane {
+    /// Run one phase as a broadcast-down + reduce-up over `ctrl`.
+    fn exchange(
+        &mut self,
+        ctrl: &mut ControlNet,
+        phase: Phase,
+        now: SimTime,
+    ) -> Result<PhaseIo, CtrlError>;
+
+    /// DRAIN convergence: per-rank (sent, recv) byte counters enter at the
+    /// leaves and are summed upward; the root sees one aggregate per
+    /// child, never one row per rank.
+    fn reduce_counts(
+        &mut self,
+        ctrl: &mut ControlNet,
+        counts: &[(u64, u64)],
+        now: SimTime,
+    ) -> Result<CountReduce, CtrlError>;
+
+    /// Tree depth in hops from root to a leaf rank (flat = 1).
+    fn depth(&self) -> u32;
+
+    /// Aggregation groups for the console's status rows.
+    fn groups(&self) -> Vec<CoordGroup>;
+
+    fn describe(&self) -> String;
+}
+
+/// The original flat plane: root <-> every rank, unicast, both sweeps
+/// serialized at the root endpoint.
+pub struct FlatPlane {
+    ranks: u32,
+}
+
+impl FlatPlane {
+    pub fn new(ranks: u32) -> Self {
+        FlatPlane { ranks }
+    }
+}
+
+impl CoordPlane for FlatPlane {
+    fn exchange(
+        &mut self,
+        ctrl: &mut ControlNet,
+        _phase: Phase,
+        now: SimTime,
+    ) -> Result<PhaseIo, CtrlError> {
+        // Down: the root unicasts to every rank; up: every rank replies
+        // and the root processes the replies one at a time.
+        let down = ctrl.send_batch((0..self.ranks).map(RankId), now)?;
+        let up = ctrl.send_batch((0..self.ranks).map(RankId), now)?;
+        Ok(PhaseIo {
+            secs: down.secs + up.secs,
+            msgs: down.msgs + up.msgs,
+            root_msgs: down.msgs + up.msgs,
+            reparents: 0,
+            retries: 0,
+        })
+    }
+
+    fn reduce_counts(
+        &mut self,
+        ctrl: &mut ControlNet,
+        counts: &[(u64, u64)],
+        now: SimTime,
+    ) -> Result<CountReduce, CtrlError> {
+        let io = self.exchange(ctrl, Phase::Drain, now)?;
+        let sent = counts.iter().map(|c| c.0).sum();
+        let recv = counts.iter().map(|c| c.1).sum();
+        Ok(CountReduce { sent, recv, io })
+    }
+
+    fn depth(&self) -> u32 {
+        1
+    }
+
+    fn groups(&self) -> Vec<CoordGroup> {
+        vec![CoordGroup {
+            label: "root".into(),
+            parent: "-".into(),
+            ranks: (0..self.ranks).map(RankId).collect(),
+        }]
+    }
+
+    fn describe(&self) -> String {
+        format!("flat({} ranks)", self.ranks)
+    }
+}
 
 /// Where each rank stands in the protocol (coordinator's view).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -39,6 +221,19 @@ pub enum RankState {
     /// Drain-to-PFS phase).
     Draining,
     Resumed,
+}
+
+impl RankState {
+    /// One-letter tag for the console's aggregated histogram rows.
+    pub fn tag(self) -> char {
+        match self {
+            RankState::Running => 'r',
+            RankState::SafePoint => 's',
+            RankState::Writing => 'w',
+            RankState::Draining => 'd',
+            RankState::Resumed => 'u',
+        }
+    }
 }
 
 /// Per-rank protocol status row.
@@ -66,6 +261,14 @@ pub struct CoordStats {
     /// Logical drain bytes satisfied by reference to chunks the durable
     /// tier already held (content-addressed dedup, staged mode).
     pub deduped_bytes: u64,
+    /// Control messages moved by the coordination plane (all endpoints).
+    pub ctrl_msgs: u64,
+    /// Control messages the root endpoint handled (the scalability number).
+    pub root_msgs: u64,
+    /// Sub-coordinators re-parented after a mid-phase death (tree plane).
+    pub reparents: u64,
+    /// Phase exchanges retried after a sub-coordinator death.
+    pub phase_retries: u64,
 }
 
 /// Why a checkpoint failed (the reliability bench's failure taxonomy).
@@ -73,6 +276,10 @@ pub struct CoordStats {
 pub enum CkptFailure {
     /// Control-plane delivery failure (no KeepAlive under congestion).
     ControlPlane(CtrlError),
+    /// A rank exhausted its KeepAlive retries. Recorded once with the
+    /// phase that first hit it; later phases fail fast on the record
+    /// instead of re-timing-out against the dead link.
+    Unreachable { rank: RankId, phase: Phase },
     /// Missing-locks race detected in a coordinator structure.
     RaceDetected(String),
     /// Storage shortfall (insufficient-space warning fired).
@@ -86,6 +293,9 @@ impl std::fmt::Display for CkptFailure {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             CkptFailure::ControlPlane(e) => write!(f, "control plane: {e}"),
+            CkptFailure::Unreachable { rank, phase } => {
+                write!(f, "{rank} unreachable (first failed in {phase} phase)")
+            }
             CkptFailure::RaceDetected(w) => write!(f, "race detected: {w}"),
             CkptFailure::DiskFull(w) => write!(f, "disk full: {w}"),
             CkptFailure::LostMessages(n) => write!(f, "{n} in-flight messages lost"),
@@ -98,13 +308,26 @@ impl std::fmt::Display for CkptFailure {
 pub struct CkptReport {
     /// Virtual seconds per phase.
     pub intent_secs: f64,
+    pub safepoint_secs: f64,
     pub drain_secs: f64,
     pub quiesce_secs: f64,
     /// Rank-visible write stall: the synchronous wave, plus any staged
     /// backpressure. This is the paper's "checkpoint overhead" number.
     pub write_secs: f64,
+    pub resume_secs: f64,
     /// End-to-end checkpoint time (intent → resume).
     pub total_secs: f64,
+    /// Control-protocol seconds across all six phase exchanges — the
+    /// coordination plane's own wall-clock, excluding storage waves.
+    pub ctrl_secs: f64,
+    /// Control messages moved by the plane during this checkpoint.
+    pub ctrl_msgs: u64,
+    /// Control messages the root endpoint handled during this checkpoint.
+    pub root_ctrl_msgs: u64,
+    /// Coordination-plane depth (1 = flat).
+    pub coord_depth: u32,
+    /// Sub-coordinators re-parented during this checkpoint (tree plane).
+    pub reparents: u32,
     /// Aggregate image bytes (virtual).
     pub image_bytes: u64,
     pub drain_rounds: u32,
@@ -144,15 +367,25 @@ impl CkptReport {
 /// The coordinator process.
 pub struct Coordinator {
     pub ctrl: ControlNet,
+    /// How protocol traffic is routed (flat root or sub-coordinator tree).
+    pub plane: Box<dyn CoordPlane>,
     /// Lesson-3 guarded status table.
     pub status: Guarded<Vec<RankStatus>>,
     pub stats: CoordStats,
     /// Locks fix: mutate via `update` (on) vs. interruptible path (off).
     pub locks_fix: bool,
+    /// First rank found unreachable, with the phase that detected it.
+    /// Once set, every later phase fails fast instead of re-timing-out.
+    pub unreachable: Option<(RankId, Phase)>,
 }
 
 impl Coordinator {
-    pub fn new(ctrl: ControlNet, ranks: u32, locks_fix: bool) -> Self {
+    pub fn new(
+        ctrl: ControlNet,
+        plane: Box<dyn CoordPlane>,
+        ranks: u32,
+        locks_fix: bool,
+    ) -> Self {
         let rows = (0..ranks)
             .map(|r| RankStatus {
                 rank: RankId(r),
@@ -164,24 +397,76 @@ impl Coordinator {
             .collect();
         Coordinator {
             ctrl,
+            plane,
             status: Guarded::new("coordinator.rank_status", rows),
             stats: CoordStats::default(),
             locks_fix,
+            unreachable: None,
         }
     }
 
-    /// Phase 1: broadcast checkpoint intent. Returns the slowest delivery
-    /// delay (the protocol is gated on the last rank hearing it).
-    pub fn broadcast_intent(
+    /// Flat-plane coordinator (the pre-tree default).
+    pub fn flat(ctrl: ControlNet, ranks: u32, locks_fix: bool) -> Self {
+        Coordinator::new(ctrl, Box::new(FlatPlane::new(ranks)), ranks, locks_fix)
+    }
+
+    /// Run one protocol phase through the plane. A rank that exhausts its
+    /// KeepAlive retries is recorded once (rank + phase) and every later
+    /// phase fails fast on the record — the dead link is never re-probed.
+    pub fn phase_exchange(
         &mut self,
-        ranks: u32,
+        phase: Phase,
         now: SimTime,
-    ) -> Result<f64, CkptFailure> {
-        let deliveries = self
-            .ctrl
-            .broadcast((0..ranks).map(RankId), now)
-            .map_err(CkptFailure::ControlPlane)?;
-        Ok(deliveries.iter().map(|(_, d)| *d).fold(0.0, f64::max))
+    ) -> Result<PhaseIo, CkptFailure> {
+        if let Some((rank, first)) = self.unreachable {
+            return Err(CkptFailure::Unreachable { rank, phase: first });
+        }
+        match self.plane.exchange(&mut self.ctrl, phase, now) {
+            Ok(io) => {
+                self.absorb_io(io);
+                Ok(io)
+            }
+            Err(e) => Err(self.record_ctrl_error(e, phase)),
+        }
+    }
+
+    /// DRAIN convergence check: reduce the per-rank (sent, recv) counters
+    /// up the plane and compare the aggregates. Returns whether the counts
+    /// balanced plus the exchange accounting.
+    pub fn drain_reduce(
+        &mut self,
+        counts: &[(u64, u64)],
+        now: SimTime,
+    ) -> Result<(bool, PhaseIo), CkptFailure> {
+        if let Some((rank, first)) = self.unreachable {
+            return Err(CkptFailure::Unreachable { rank, phase: first });
+        }
+        match self.plane.reduce_counts(&mut self.ctrl, counts, now) {
+            Ok(red) => {
+                self.absorb_io(red.io);
+                Ok((red.sent == red.recv, red.io))
+            }
+            Err(e) => Err(self.record_ctrl_error(e, Phase::Drain)),
+        }
+    }
+
+    fn absorb_io(&mut self, io: PhaseIo) {
+        self.stats.ctrl_msgs += io.msgs;
+        self.stats.root_msgs += io.root_msgs;
+        self.stats.reparents += io.reparents as u64;
+        self.stats.phase_retries += io.retries as u64;
+    }
+
+    fn record_ctrl_error(&mut self, e: CtrlError, phase: Phase) -> CkptFailure {
+        if let CtrlError::Unreachable { rank, .. } = e {
+            log_warn!(
+                "coordinator",
+                "{rank} unreachable in {phase} phase — marked; later phases fail fast"
+            );
+            self.unreachable = Some((rank, phase));
+            return CkptFailure::Unreachable { rank, phase };
+        }
+        CkptFailure::ControlPlane(e)
     }
 
     /// Update a rank's status row. With the locks fix, the mutation is
@@ -222,7 +507,9 @@ impl Coordinator {
         });
     }
 
-    /// The paper's drain condition, evaluated over reported counters.
+    /// The paper's drain condition, evaluated over the coordinator's own
+    /// table (console/debug view; the protocol-path check is
+    /// [`Coordinator::drain_reduce`], which charges control traffic).
     pub fn counts_balanced(&mut self) -> Result<bool, CkptFailure> {
         let rows = self
             .status
@@ -248,32 +535,68 @@ mod tests {
             },
             7,
         );
-        Coordinator::new(ctrl, ranks, locks)
+        Coordinator::flat(ctrl, ranks, locks)
     }
 
     #[test]
-    fn intent_broadcast_clean() {
+    fn intent_exchange_clean() {
         let mut c = coord(64, true, 0.0, true);
-        let d = c.broadcast_intent(64, SimTime::ZERO).unwrap();
-        assert!(d > 0.0 && d < 0.01);
+        let io = c.phase_exchange(Phase::Intent, SimTime::ZERO).unwrap();
+        assert!(io.secs > 0.0 && io.secs < 0.01);
+        // Flat: the root touches every message, both sweeps.
+        assert_eq!(io.msgs, 128);
+        assert_eq!(io.root_msgs, 128);
+        assert_eq!(c.stats.ctrl_msgs, 128);
     }
 
     #[test]
-    fn intent_broadcast_fails_without_keepalive_under_loss() {
+    fn intent_exchange_fails_without_keepalive_under_loss() {
         let mut c = coord(512, false, 0.1, true);
-        match c.broadcast_intent(512, SimTime::ZERO) {
+        match c.phase_exchange(Phase::Intent, SimTime::ZERO) {
             Err(CkptFailure::ControlPlane(_)) => {}
             other => panic!("expected control-plane failure, got {other:?}"),
         }
     }
 
     #[test]
-    fn intent_broadcast_survives_loss_with_keepalive() {
+    fn intent_exchange_survives_loss_with_keepalive() {
         let mut c = coord(512, true, 0.1, true);
-        let d = c.broadcast_intent(512, SimTime::ZERO).unwrap();
+        let io = c.phase_exchange(Phase::Intent, SimTime::ZERO).unwrap();
         // Retries cost time — visible in the report.
-        assert!(d >= c.ctrl.cfg.latency);
+        assert!(io.secs >= c.ctrl.cfg.latency);
         assert!(c.ctrl.stats.retries > 0);
+    }
+
+    #[test]
+    fn unreachable_rank_marked_once_then_fails_fast() {
+        // Pathological loss: KeepAlive exhausts its retries on rank 0.
+        let mut c = coord(8, true, 1.0, true);
+        match c.phase_exchange(Phase::Intent, SimTime::ZERO) {
+            Err(CkptFailure::Unreachable { rank, phase }) => {
+                assert_eq!(rank, RankId(0));
+                assert_eq!(phase, Phase::Intent);
+            }
+            other => panic!("expected Unreachable, got {other:?}"),
+        }
+        let sent_before = c.ctrl.stats.sent;
+        let retries_before = c.ctrl.stats.retries;
+        // A later phase fails fast on the record: same rank, the phase
+        // that first detected it, and no new network traffic.
+        match c.phase_exchange(Phase::Write, SimTime::ZERO) {
+            Err(CkptFailure::Unreachable { rank, phase }) => {
+                assert_eq!(rank, RankId(0));
+                assert_eq!(phase, Phase::Intent, "report names the first phase");
+            }
+            other => panic!("expected fail-fast Unreachable, got {other:?}"),
+        }
+        assert_eq!(c.ctrl.stats.sent, sent_before, "no re-probe of the dead link");
+        assert_eq!(c.ctrl.stats.retries, retries_before, "no re-timeout");
+        let msg = CkptFailure::Unreachable {
+            rank: RankId(0),
+            phase: Phase::Intent,
+        }
+        .to_string();
+        assert!(msg.contains("rank0") && msg.contains("INTENT"), "{msg}");
     }
 
     #[test]
@@ -312,5 +635,26 @@ mod tests {
         assert!(c.counts_balanced().unwrap());
         c.record_rank_counts(RankId(0), 5, 1100, 400);
         assert!(!c.counts_balanced().unwrap());
+    }
+
+    #[test]
+    fn flat_drain_reduce_aggregates_and_charges_root() {
+        let mut c = coord(4, true, 0.0, true);
+        let counts = vec![(100, 40), (20, 80), (5, 5), (0, 0)];
+        let (balanced, io) = c.drain_reduce(&counts, SimTime::ZERO).unwrap();
+        assert!(balanced, "125 sent == 125 received");
+        assert_eq!(io.root_msgs, 8, "flat root touches 2 x ranks");
+        let (unbalanced, _) = c.drain_reduce(&[(10, 0), (0, 5)], SimTime::ZERO).unwrap();
+        assert!(!unbalanced);
+    }
+
+    #[test]
+    fn flat_plane_shape() {
+        let p = FlatPlane::new(16);
+        assert_eq!(p.depth(), 1);
+        let g = p.groups();
+        assert_eq!(g.len(), 1);
+        assert_eq!(g[0].ranks.len(), 16);
+        assert!(p.describe().contains("flat"));
     }
 }

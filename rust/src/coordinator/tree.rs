@@ -1,0 +1,530 @@
+//! Hierarchical coordination plane: per-node sub-coordinators in a
+//! fanout-ary tree under the root coordinator.
+//!
+//! The flat DMTCP plane exchanges one message with every rank in every
+//! phase — O(ranks) serialized point-to-point traffic at a single root,
+//! which is the first bottleneck a production deployment hits. Following
+//! the tree-structured control planes argued for by MANA's original design
+//! retrospective (arXiv:1904.12595) and the topological-sort drain work
+//! (arXiv:2408.02218), this plane:
+//!
+//! * places one **sub-coordinator per compute node** (addressed through
+//!   the node's first rank), arranged in a fanout-ary tree whose depth is
+//!   derived from the job topology ([`Topology::coord_levels`]);
+//! * runs every protocol phase as a **broadcast-down + reduce-up**: an
+//!   endpoint never serializes more than `fanout` (or its node-local rank
+//!   count) messages, so the root handles `2 x fanout` messages per phase
+//!   instead of `2 x ranks`, and protocol wall-clock grows with tree
+//!   depth (logarithmic) instead of rank count;
+//! * evaluates the DRAIN convergence test on sent/recv byte counters
+//!   **summed up the tree** — the root sees one aggregate per child,
+//!   never one row per rank;
+//! * inherits the full control-network fault model on every link
+//!   (KeepAlive, loss, idle-disconnect — each hop goes through
+//!   [`ControlNet::send_batch`]), and adds the tree's own failure mode: a
+//!   **sub-coordinator dying mid-phase**. The death is noticed by its
+//!   parent's KeepAlive probe; the orphaned subtree (child
+//!   sub-coordinators and the dead node's local ranks) is re-parented to
+//!   an alive sibling — falling back to the parent, and ultimately to the
+//!   root itself — and the phase is retried over the repaired tree.
+
+use std::collections::BTreeMap;
+
+use super::{CoordGroup, CoordPlane, CountReduce, Phase, PhaseIo};
+use crate::log_warn;
+use crate::simnet::control::{ControlNet, CtrlError};
+use crate::topology::{NodeId, RankId, Topology};
+use crate::util::simclock::SimTime;
+
+/// One sub-coordinator (one per compute node at construction).
+#[derive(Clone, Debug)]
+struct Sub {
+    /// Parent sub-coordinator; `None` = direct child of the root.
+    parent: Option<usize>,
+    children: Vec<usize>,
+    /// Ranks this sub-coordinator answers for (its node's ranks, plus any
+    /// adopted from dead siblings).
+    ranks: Vec<RankId>,
+    /// Control-network address (the node's first rank).
+    addr: RankId,
+    alive: bool,
+}
+
+/// Outcome of one phase attempt over the current tree.
+struct Attempt {
+    secs: f64,
+    msgs: u64,
+    root_msgs: u64,
+    /// Sub-coordinator found dead mid-phase (re-parent and retry).
+    died: Option<usize>,
+}
+
+/// The tree plane. See the module docs.
+pub struct TreePlane {
+    fanout: u32,
+    subs: Vec<Sub>,
+    root_children: Vec<usize>,
+    /// Ranks attached directly to the root (re-parent fallback of last
+    /// resort; empty in a healthy tree).
+    root_ranks: Vec<RankId>,
+    /// Injected one-shot failure: (sub-coordinator index, phase it dies
+    /// in). Consumed when the phase reaches the victim.
+    pending_death: Option<(u32, Phase)>,
+    /// Sub-coordinator levels below the root (>= 1).
+    levels: u32,
+}
+
+impl TreePlane {
+    /// Build the tree for a topology: sub-coordinator `i` serves node `i`;
+    /// the first `fanout` sub-coordinators hang off the root, and
+    /// sub-coordinator `i >= fanout` is the child of `i / fanout - 1`
+    /// (a complete fanout-ary forest).
+    pub fn new(topo: &Topology, fanout: u32, pending_death: Option<(u32, Phase)>) -> Self {
+        let f = fanout.max(2) as usize;
+        let n = topo.nodes() as usize;
+        let mut subs: Vec<Sub> = Vec::with_capacity(n);
+        for i in 0..n {
+            let ranks = topo.ranks_on(NodeId(i as u32));
+            let addr = ranks[0];
+            let parent = if i < f { None } else { Some(i / f - 1) };
+            subs.push(Sub {
+                parent,
+                children: Vec::new(),
+                ranks,
+                addr,
+                alive: true,
+            });
+        }
+        let parents: Vec<Option<usize>> = subs.iter().map(|s| s.parent).collect();
+        let mut root_children = Vec::new();
+        for (i, p) in parents.iter().enumerate() {
+            match p {
+                None => root_children.push(i),
+                Some(p) => subs[*p].children.push(i),
+            }
+        }
+        let mut plane = TreePlane {
+            fanout: f as u32,
+            subs,
+            root_children,
+            root_ranks: Vec::new(),
+            pending_death,
+            levels: 1,
+        };
+        plane.recompute_depth();
+        debug_assert_eq!(plane.levels, topo.coord_levels(f as u32));
+        plane
+    }
+
+    /// Alive sub-coordinators.
+    pub fn alive_subs(&self) -> usize {
+        self.subs.iter().filter(|s| s.alive).count()
+    }
+
+    fn recompute_depth(&mut self) {
+        let mut max_l = 1u32;
+        for (i, s) in self.subs.iter().enumerate() {
+            if !s.alive {
+                continue;
+            }
+            let mut l = 1u32;
+            let mut j = i;
+            while let Some(p) = self.subs[j].parent {
+                l += 1;
+                j = p;
+            }
+            max_l = max_l.max(l);
+        }
+        self.levels = max_l;
+    }
+
+    /// Remove a dead sub-coordinator from the tree: its child subtrees and
+    /// local ranks go to the first alive sibling, else to its parent, else
+    /// (for an only root child) to the root itself.
+    fn reparent(&mut self, dead: usize) {
+        self.subs[dead].alive = false;
+        let parent = self.subs[dead].parent;
+        match parent {
+            Some(p) => self.subs[p].children.retain(|&c| c != dead),
+            None => self.root_children.retain(|&c| c != dead),
+        }
+        let adopter: Option<usize> = {
+            let siblings = match parent {
+                Some(p) => &self.subs[p].children,
+                None => &self.root_children,
+            };
+            siblings.iter().copied().find(|&s| self.subs[s].alive)
+        };
+        let orphans = std::mem::take(&mut self.subs[dead].children);
+        let ranks = std::mem::take(&mut self.subs[dead].ranks);
+        match adopter.or(parent) {
+            Some(a) => {
+                for &c in &orphans {
+                    self.subs[c].parent = Some(a);
+                }
+                self.subs[a].children.extend(orphans);
+                self.subs[a].ranks.extend(ranks);
+            }
+            None => {
+                // Last resort: the root adopts the orphan subtrees and
+                // speaks to the dead node's ranks directly (flat fallback
+                // for exactly those ranks).
+                for &c in &orphans {
+                    self.subs[c].parent = None;
+                }
+                self.root_children.extend(orphans);
+                self.root_ranks.extend(ranks);
+            }
+        }
+        self.recompute_depth();
+    }
+
+    /// One phase attempt over the current tree: broadcast down level by
+    /// level, fan out to the leaf ranks, then reduce back up. Every hop is
+    /// a serialized [`ControlNet::send_batch`], so per-hop latency and the
+    /// full link fault model apply everywhere.
+    fn attempt(
+        &mut self,
+        ctrl: &mut ControlNet,
+        phase: Phase,
+        now: SimTime,
+    ) -> Result<Attempt, CtrlError> {
+        let mut a = Attempt {
+            secs: 0.0,
+            msgs: 0,
+            root_msgs: 0,
+            died: None,
+        };
+
+        // --- broadcast down ---
+        let root_targets: Vec<RankId> = self
+            .root_children
+            .iter()
+            .map(|&c| self.subs[c].addr)
+            .chain(self.root_ranks.iter().copied())
+            .collect();
+        let io = ctrl.send_batch(root_targets.into_iter(), now)?;
+        a.secs += io.secs;
+        a.msgs += io.msgs;
+        a.root_msgs += io.msgs;
+
+        // Interior levels, BFS order (recorded for the reduce-up).
+        let mut levels: Vec<Vec<usize>> = Vec::new();
+        let mut frontier = self.root_children.clone();
+        while !frontier.is_empty() {
+            // A sub-coordinator scheduled to die in this phase dies as the
+            // broadcast reaches it; its parent's KeepAlive probe notices
+            // after one probe interval and the attempt is abandoned.
+            if let Some((dead, ph)) = self.pending_death {
+                let dead = dead as usize;
+                if ph == phase && frontier.contains(&dead) && self.subs[dead].alive {
+                    self.pending_death = None;
+                    a.secs += ctrl.cfg.keepalive_interval;
+                    a.died = Some(dead);
+                    return Ok(a);
+                }
+            }
+            levels.push(frontier.clone());
+            let mut next = Vec::new();
+            let mut level_secs = 0.0f64;
+            for &s in &frontier {
+                if self.subs[s].children.is_empty() {
+                    continue;
+                }
+                let kids: Vec<RankId> = self.subs[s]
+                    .children
+                    .iter()
+                    .map(|&c| self.subs[c].addr)
+                    .collect();
+                let io = ctrl.send_batch(kids.into_iter(), now)?;
+                level_secs = level_secs.max(io.secs);
+                a.msgs += io.msgs;
+                next.extend(self.subs[s].children.iter().copied());
+            }
+            a.secs += level_secs;
+            frontier = next;
+        }
+
+        // Leaf hop down: every sub-coordinator fans out to its ranks.
+        let mut leaf_secs = 0.0f64;
+        for s in self.subs.iter().filter(|s| s.alive && !s.ranks.is_empty()) {
+            let io = ctrl.send_batch(s.ranks.iter().copied(), now)?;
+            leaf_secs = leaf_secs.max(io.secs);
+            a.msgs += io.msgs;
+        }
+        a.secs += leaf_secs;
+
+        // --- reduce up ---
+        // Local ranks ack their sub-coordinator (serialized receive)...
+        let mut ack_secs = 0.0f64;
+        for s in self.subs.iter().filter(|s| s.alive && !s.ranks.is_empty()) {
+            let io = ctrl.send_batch(s.ranks.iter().copied(), now)?;
+            ack_secs = ack_secs.max(io.secs);
+            a.msgs += io.msgs;
+        }
+        a.secs += ack_secs;
+
+        // ...then one aggregate per child flows up, deepest level first.
+        for lvl in levels.iter().rev() {
+            let mut level_secs = 0.0f64;
+            let mut by_parent: BTreeMap<usize, Vec<RankId>> = BTreeMap::new();
+            let mut root_batch: Vec<RankId> = Vec::new();
+            for &s in lvl {
+                match self.subs[s].parent {
+                    Some(p) => by_parent.entry(p).or_default().push(self.subs[s].addr),
+                    None => root_batch.push(self.subs[s].addr),
+                }
+            }
+            for (_p, addrs) in by_parent {
+                let io = ctrl.send_batch(addrs.into_iter(), now)?;
+                level_secs = level_secs.max(io.secs);
+                a.msgs += io.msgs;
+            }
+            if !root_batch.is_empty() {
+                let io = ctrl.send_batch(root_batch.into_iter(), now)?;
+                level_secs = level_secs.max(io.secs);
+                a.msgs += io.msgs;
+                a.root_msgs += io.msgs;
+            }
+            a.secs += level_secs;
+        }
+        // Directly-attached ranks (re-parent fallback) ack the root last.
+        if !self.root_ranks.is_empty() {
+            let ranks = self.root_ranks.clone();
+            let io = ctrl.send_batch(ranks.into_iter(), now)?;
+            a.secs += io.secs;
+            a.msgs += io.msgs;
+            a.root_msgs += io.msgs;
+        }
+        Ok(a)
+    }
+}
+
+impl CoordPlane for TreePlane {
+    fn exchange(
+        &mut self,
+        ctrl: &mut ControlNet,
+        phase: Phase,
+        now: SimTime,
+    ) -> Result<PhaseIo, CtrlError> {
+        let mut total = PhaseIo::default();
+        loop {
+            let a = self.attempt(ctrl, phase, now)?;
+            total.secs += a.secs;
+            total.msgs += a.msgs;
+            total.root_msgs += a.root_msgs;
+            let Some(dead) = a.died else {
+                return Ok(total);
+            };
+            log_warn!(
+                "coordinator",
+                "sub-coordinator sub{dead:03} died mid-{phase} — re-parenting its \
+                 subtree and retrying the phase"
+            );
+            self.reparent(dead);
+            total.reparents += 1;
+            total.retries += 1;
+        }
+    }
+
+    fn reduce_counts(
+        &mut self,
+        ctrl: &mut ControlNet,
+        counts: &[(u64, u64)],
+        now: SimTime,
+    ) -> Result<CountReduce, CtrlError> {
+        let io = self.exchange(ctrl, Phase::Drain, now)?;
+        // Aggregate bottom-up: each sub-coordinator folds its local ranks,
+        // parents fold per-child partial sums. Summation is associative,
+        // so the flat fold below computes exactly the tree reduction the
+        // exchange above carried — the root only ever handled one
+        // aggregate per child.
+        let mut sent = 0u64;
+        let mut recv = 0u64;
+        for s in self.subs.iter().filter(|s| s.alive) {
+            for r in &s.ranks {
+                let (cs, cr) = counts[r.0 as usize];
+                sent += cs;
+                recv += cr;
+            }
+        }
+        for r in &self.root_ranks {
+            let (cs, cr) = counts[r.0 as usize];
+            sent += cs;
+            recv += cr;
+        }
+        Ok(CountReduce { sent, recv, io })
+    }
+
+    fn depth(&self) -> u32 {
+        // Sub-coordinator levels plus the leaf rank hop.
+        self.levels + 1
+    }
+
+    fn groups(&self) -> Vec<CoordGroup> {
+        let mut out = Vec::new();
+        if !self.root_ranks.is_empty() {
+            out.push(CoordGroup {
+                label: "root".into(),
+                parent: "-".into(),
+                ranks: self.root_ranks.clone(),
+            });
+        }
+        for (i, s) in self.subs.iter().enumerate() {
+            if !s.alive {
+                continue;
+            }
+            let parent = match s.parent {
+                None => "root".to_string(),
+                Some(p) => format!("sub{p:03}"),
+            };
+            out.push(CoordGroup {
+                label: format!("sub{i:03}"),
+                parent,
+                ranks: s.ranks.clone(),
+            });
+        }
+        out
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "tree(fanout={}, subs={}, depth={})",
+            self.fanout,
+            self.alive_subs(),
+            self.depth()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::control::CtrlConfig;
+
+    fn net() -> ControlNet {
+        ControlNet::new(CtrlConfig::default(), 11)
+    }
+
+    fn plane(ranks: u32, fanout: u32, death: Option<(u32, Phase)>) -> TreePlane {
+        TreePlane::new(&Topology::new(ranks, 8), fanout, death)
+    }
+
+    fn covered_ranks(p: &TreePlane) -> usize {
+        p.groups().iter().map(|g| g.ranks.len()).sum()
+    }
+
+    #[test]
+    fn paper_scale_layout() {
+        // 512 ranks x 8 threads -> 64 nodes -> 64 sub-coordinators; at
+        // fanout 8 that is 8 root children + 56 interior, two levels.
+        let p = plane(512, 8, None);
+        assert_eq!(p.subs.len(), 64);
+        assert_eq!(p.root_children, (0..8).collect::<Vec<_>>());
+        assert_eq!(p.subs[8].parent, Some(0));
+        assert_eq!(p.subs[63].parent, Some(6));
+        assert_eq!(p.levels, 2);
+        assert_eq!(p.depth(), 3);
+        assert_eq!(covered_ranks(&p), 512);
+    }
+
+    #[test]
+    fn root_handles_only_fanout_messages_per_phase() {
+        let mut p = plane(512, 8, None);
+        let mut ctrl = net();
+        let io = p.exchange(&mut ctrl, Phase::Intent, SimTime::ZERO).unwrap();
+        assert_eq!(io.root_msgs, 16, "2 x fanout at the root");
+        // Every rank and every tree link is touched once per sweep:
+        // 64 sub-coordinator links + 512 leaf links, down and up.
+        assert_eq!(io.msgs, 2 * (64 + 512));
+        assert_eq!(io.reparents, 0);
+    }
+
+    #[test]
+    fn tree_phase_is_faster_than_flat_at_scale() {
+        let mut tree = plane(512, 8, None);
+        let mut flat = super::super::FlatPlane::new(512);
+        let t = tree.exchange(&mut net(), Phase::Intent, SimTime::ZERO).unwrap();
+        let f = flat.exchange(&mut net(), Phase::Intent, SimTime::ZERO).unwrap();
+        assert!(
+            t.secs < f.secs,
+            "tree {}s must beat flat {}s at 512 ranks",
+            t.secs,
+            f.secs
+        );
+    }
+
+    #[test]
+    fn death_reparents_to_sibling_and_retries() {
+        // 32 ranks -> 4 nodes, fanout 2: subs 0,1 under root; 2,3 under 0.
+        let mut p = plane(32, 2, Some((2, Phase::Intent)));
+        let mut ctrl = net();
+        let io = p.exchange(&mut ctrl, Phase::Intent, SimTime::ZERO).unwrap();
+        assert_eq!(io.reparents, 1);
+        assert_eq!(io.retries, 1);
+        assert!(io.secs >= ctrl.cfg.keepalive_interval, "death detection charged");
+        assert!(!p.subs[2].alive);
+        assert_eq!(p.alive_subs(), 3);
+        // Sub 2's ranks were adopted by its sibling, sub 3.
+        assert_eq!(p.subs[3].ranks.len(), 16);
+        assert_eq!(covered_ranks(&p), 32, "every rank still has a home");
+        // The fault is one-shot: the next exchange is clean.
+        let io2 = p.exchange(&mut ctrl, Phase::Intent, SimTime::ZERO).unwrap();
+        assert_eq!(io2.reparents, 0);
+    }
+
+    #[test]
+    fn only_root_child_death_falls_back_to_root() {
+        // 8 ranks -> 1 node -> 1 sub-coordinator; its death leaves the
+        // root speaking to the ranks directly.
+        let mut p = plane(8, 2, Some((0, Phase::Drain)));
+        let mut ctrl = net();
+        let counts: Vec<(u64, u64)> = (0..8).map(|i| (i as u64, (7 - i) as u64)).collect();
+        let red = p.reduce_counts(&mut ctrl, &counts, SimTime::ZERO).unwrap();
+        assert_eq!(red.io.reparents, 1);
+        assert_eq!(red.sent, 28);
+        assert_eq!(red.recv, 28);
+        assert_eq!(p.alive_subs(), 0);
+        assert_eq!(p.root_ranks.len(), 8);
+        assert_eq!(covered_ranks(&p), 8);
+        // Degenerate flat fallback: root now touches 2 x ranks.
+        let io = p.exchange(&mut ctrl, Phase::Resume, SimTime::ZERO).unwrap();
+        assert_eq!(io.root_msgs, 16);
+    }
+
+    #[test]
+    fn reduce_counts_sums_up_the_tree() {
+        let mut p = plane(64, 4, None);
+        let counts: Vec<(u64, u64)> = (0..64).map(|_| (10, 10)).collect();
+        let red = p.reduce_counts(&mut net(), &counts, SimTime::ZERO).unwrap();
+        assert_eq!(red.sent, 640);
+        assert_eq!(red.recv, 640);
+        assert!(red.io.root_msgs <= 2 * 4, "one aggregate per root child");
+    }
+
+    #[test]
+    fn faulty_links_are_retried_by_keepalive_on_every_hop() {
+        let mut p = plane(128, 4, None);
+        let mut ctrl = ControlNet::new(
+            CtrlConfig {
+                loss_prob: 0.2,
+                disconnect_prob: 0.05,
+                ..CtrlConfig::default()
+            },
+            3,
+        );
+        let io = p.exchange(&mut ctrl, Phase::Intent, SimTime::ZERO).unwrap();
+        assert!(ctrl.stats.retries + ctrl.stats.reconnects > 0);
+        assert!(io.secs > 0.0);
+    }
+
+    #[test]
+    fn describe_and_groups_name_the_layout() {
+        let p = plane(64, 4, None);
+        assert!(p.describe().starts_with("tree(fanout=4"));
+        let g = p.groups();
+        assert_eq!(g.len(), 8, "one group per sub-coordinator");
+        assert!(g.iter().any(|x| x.parent == "root"));
+        assert!(g.iter().any(|x| x.parent.starts_with("sub")));
+    }
+}

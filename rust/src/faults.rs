@@ -5,6 +5,8 @@
 //! fault + fix on → success*. Faults are declarative — the subsystems read
 //! their knobs from the plan at construction time.
 
+use crate::coordinator::Phase;
+
 /// What to break during a run.
 #[derive(Clone, Debug, Default)]
 pub struct FaultPlan {
@@ -12,6 +14,11 @@ pub struct FaultPlan {
     pub ctrl_loss_prob: f64,
     /// Control-plane idle-disconnect probability.
     pub ctrl_disconnect_prob: f64,
+    /// Kill a sub-coordinator mid-phase (tree coordination plane):
+    /// `(sub-coordinator index, phase it dies in)`. One-shot — consumed
+    /// when the phase reaches the victim; its subtree is re-parented and
+    /// the phase retried.
+    pub subcoord_death: Option<(u32, Phase)>,
     /// GNI quiescence windows (start, end) in virtual seconds.
     pub gni_quiescence: Vec<(f64, f64)>,
     /// Flip one byte of one rank's stored checkpoint image
@@ -54,6 +61,7 @@ impl FaultPlan {
     pub fn any_active(&self) -> bool {
         self.ctrl_loss_prob > 0.0
             || self.ctrl_disconnect_prob > 0.0
+            || self.subcoord_death.is_some()
             || !self.gni_quiescence.is_empty()
             || self.image_bitflip.is_some()
             || self.fs_capacity_override.is_some()

@@ -28,6 +28,14 @@ use crate::ckpt::chunk::ChunkRecipe;
 /// file listing).
 pub const OBJECT_PREFIX: &str = ".chunkstore/";
 
+/// Durable-tier path of the persisted chunk index itself. Written after
+/// every commit-mutating operation so a durable-only restart can rebuild
+/// the index without the in-memory store surviving.
+pub const INDEX_PATH: &str = ".chunkstore/INDEX";
+
+/// Magic prefix of the persisted index (framing sanity before the digest).
+const INDEX_MAGIC: &[u8; 8] = b"MANACIDX";
+
 /// Durable-tier path of a chunk object.
 pub fn object_path(digest: u128) -> String {
     format!("{OBJECT_PREFIX}{digest:032x}")
@@ -180,6 +188,156 @@ impl ChunkStore {
             .map(|e| e.vbytes)
             .sum()
     }
+
+    /// Digests whose object bytes are recorded durable (reload
+    /// verification walks these against the durable tier).
+    pub fn stored_digests(&self) -> Vec<u128> {
+        self.index
+            .iter()
+            .filter(|(_, e)| e.stored)
+            .map(|(d, _)| *d)
+            .collect()
+    }
+
+    // ------------------------------------------------ persisted index
+
+    /// Serialize the *committed* durable state — the recipe table plus
+    /// every chunk entry a committed recipe references — with digest
+    /// framing: `MAGIC | payload | digest128(MAGIC | payload)`.
+    ///
+    /// Queued-but-uncommitted references are deliberately excluded: they
+    /// describe in-flight drain state, and the drain queue re-takes them
+    /// on reload ([`crate::fs::TieredStore::reload_index`]). Refcounts are
+    /// therefore not serialized either — they are recomputed from the
+    /// decoded recipes.
+    pub fn encode_index(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(INDEX_MAGIC);
+        out.extend_from_slice(&(self.recipes.len() as u32).to_le_bytes());
+        for (path, rec) in &self.recipes {
+            let pb = path.as_bytes();
+            out.extend_from_slice(&(pb.len() as u32).to_le_bytes());
+            out.extend_from_slice(pb);
+            out.extend_from_slice(&rec.chunk_bytes.to_le_bytes());
+            out.extend_from_slice(&rec.file_vbytes.to_le_bytes());
+            out.extend_from_slice(&(rec.chunks.len() as u32).to_le_bytes());
+            for c in &rec.chunks {
+                out.extend_from_slice(&c.digest.to_le_bytes());
+                out.extend_from_slice(&c.vbytes.to_le_bytes());
+                out.extend_from_slice(&c.real_off.to_le_bytes());
+                out.extend_from_slice(&c.real_len.to_le_bytes());
+            }
+        }
+        let mut committed: BTreeMap<u128, &ChunkEntry> = BTreeMap::new();
+        for rec in self.recipes.values() {
+            for c in &rec.chunks {
+                if let Some(e) = self.index.get(&c.digest) {
+                    committed.insert(c.digest, e);
+                }
+            }
+        }
+        out.extend_from_slice(&(committed.len() as u32).to_le_bytes());
+        for (digest, e) in &committed {
+            out.extend_from_slice(&digest.to_le_bytes());
+            out.extend_from_slice(&e.vbytes.to_le_bytes());
+            out.push(e.stored as u8);
+            out.extend_from_slice(&e.content.to_le_bytes());
+        }
+        let d = crate::util::digest::digest128(&out);
+        out.extend_from_slice(&d.to_le_bytes());
+        out
+    }
+
+    /// Decode and verify a persisted index: framing digest, magic, and
+    /// recipe/entry cross-consistency (every recipe chunk must be
+    /// described by the entry table). Returns `None` on any mismatch.
+    /// Refcounts come back as the committed-recipe occurrence counts.
+    pub fn decode_index(bytes: &[u8]) -> Option<ChunkStore> {
+        fn take<'a>(b: &'a [u8], pos: &mut usize, n: usize) -> Option<&'a [u8]> {
+            let s = b.get(*pos..*pos + n)?;
+            *pos += n;
+            Some(s)
+        }
+        fn r_u32(b: &[u8], pos: &mut usize) -> Option<u32> {
+            Some(u32::from_le_bytes(take(b, pos, 4)?.try_into().ok()?))
+        }
+        fn r_u64(b: &[u8], pos: &mut usize) -> Option<u64> {
+            Some(u64::from_le_bytes(take(b, pos, 8)?.try_into().ok()?))
+        }
+        fn r_u128(b: &[u8], pos: &mut usize) -> Option<u128> {
+            Some(u128::from_le_bytes(take(b, pos, 16)?.try_into().ok()?))
+        }
+
+        if bytes.len() < INDEX_MAGIC.len() + 16 {
+            return None;
+        }
+        let (payload, trailer) = bytes.split_at(bytes.len() - 16);
+        let want = u128::from_le_bytes(trailer.try_into().ok()?);
+        if crate::util::digest::digest128(payload) != want {
+            return None;
+        }
+        if &payload[..INDEX_MAGIC.len()] != INDEX_MAGIC {
+            return None;
+        }
+        let mut pos = INDEX_MAGIC.len();
+        let n_recipes = r_u32(payload, &mut pos)?;
+        let mut recipes = BTreeMap::new();
+        for _ in 0..n_recipes {
+            let plen = r_u32(payload, &mut pos)? as usize;
+            let path = std::str::from_utf8(take(payload, &mut pos, plen)?)
+                .ok()?
+                .to_string();
+            let chunk_bytes = r_u64(payload, &mut pos)?;
+            let file_vbytes = r_u64(payload, &mut pos)?;
+            let n_chunks = r_u32(payload, &mut pos)? as usize;
+            let mut chunks = Vec::with_capacity(n_chunks.min(1 << 20));
+            for _ in 0..n_chunks {
+                chunks.push(crate::ckpt::chunk::RecipeChunk {
+                    digest: r_u128(payload, &mut pos)?,
+                    vbytes: r_u64(payload, &mut pos)?,
+                    real_off: r_u64(payload, &mut pos)?,
+                    real_len: r_u64(payload, &mut pos)?,
+                });
+            }
+            recipes.insert(
+                path,
+                ChunkRecipe {
+                    chunk_bytes,
+                    file_vbytes,
+                    chunks,
+                },
+            );
+        }
+        let n_entries = r_u32(payload, &mut pos)?;
+        let mut index: BTreeMap<u128, ChunkEntry> = BTreeMap::new();
+        for _ in 0..n_entries {
+            let digest = r_u128(payload, &mut pos)?;
+            let vbytes = r_u64(payload, &mut pos)?;
+            let stored = take(payload, &mut pos, 1)?[0] != 0;
+            let content = r_u128(payload, &mut pos)?;
+            index.insert(
+                digest,
+                ChunkEntry {
+                    refs: 0,
+                    vbytes,
+                    stored,
+                    content,
+                },
+            );
+        }
+        if pos != payload.len() {
+            return None; // trailing garbage under a somehow-valid digest
+        }
+        // Recompute committed refcounts; a recipe chunk the entry table
+        // does not describe is an inconsistency, not a zero-ref chunk.
+        for rec in recipes.values() {
+            for c in &rec.chunks {
+                index.get_mut(&c.digest)?.refs += 1;
+            }
+        }
+        index.retain(|_, e| e.refs > 0);
+        Some(ChunkStore { index, recipes })
+    }
 }
 
 #[cfg(test)]
@@ -243,6 +401,68 @@ mod tests {
         let old = cs.commit("f", r2).expect("old recipe returned");
         assert_eq!(old, r1);
         assert_eq!(cs.recipe_count(), 1);
+    }
+
+    #[test]
+    fn index_roundtrips_committed_state() {
+        let mut cs = ChunkStore::default();
+        let r1 = recipe(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let r2 = recipe(&[9, 9, 9, 9]);
+        cs.reference(&r1);
+        cs.reference(&r2);
+        cs.mark_stored(r1.chunks[0].digest, 0x11);
+        cs.mark_stored(r1.chunks[1].digest, 0x22);
+        cs.mark_stored(r2.chunks[0].digest, 0x33);
+        cs.commit("a", r1.clone());
+        cs.commit("b", r2.clone());
+        let enc = cs.encode_index();
+        let back = ChunkStore::decode_index(&enc).expect("framing verifies");
+        assert_eq!(back.recipe_count(), 2);
+        assert_eq!(back.recipe("a"), Some(&r1));
+        assert_eq!(back.recipe("b"), Some(&r2));
+        assert_eq!(back.chunk_count(), 3);
+        assert!(back.is_stored(r2.chunks[0].digest));
+        let e = back.entry(r1.chunks[0].digest).unwrap();
+        assert_eq!(e.content, 0x11);
+        assert_eq!(e.refs, 1, "refs recomputed from committed recipes");
+        assert_eq!(back.encode_index(), enc, "re-encode is stable");
+    }
+
+    #[test]
+    fn index_excludes_uncommitted_references() {
+        let mut cs = ChunkStore::default();
+        let queued = recipe(&[1, 1, 1, 1]);
+        let done = recipe(&[2, 2, 2, 2]);
+        cs.reference(&queued); // still on the drain queue — not persisted
+        cs.reference(&done);
+        cs.mark_stored(done.chunks[0].digest, 7);
+        cs.commit("done", done);
+        let back = ChunkStore::decode_index(&cs.encode_index()).unwrap();
+        assert_eq!(back.recipe_count(), 1);
+        assert_eq!(back.chunk_count(), 1, "queued-only chunk not persisted");
+    }
+
+    #[test]
+    fn index_decode_rejects_corruption() {
+        let mut cs = ChunkStore::default();
+        let r = recipe(&[5, 6, 7, 8]);
+        cs.reference(&r);
+        cs.mark_stored(r.chunks[0].digest, 1);
+        cs.commit("f", r);
+        let enc = cs.encode_index();
+        assert!(ChunkStore::decode_index(&enc).is_some());
+        // Payload bit flip -> digest mismatch.
+        let mut bad = enc.clone();
+        bad[10] ^= 0x40;
+        assert!(ChunkStore::decode_index(&bad).is_none());
+        // Trailer flip -> digest mismatch.
+        let mut bad = enc.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 1;
+        assert!(ChunkStore::decode_index(&bad).is_none());
+        // Truncation -> framing failure.
+        assert!(ChunkStore::decode_index(&enc[..enc.len() - 5]).is_none());
+        assert!(ChunkStore::decode_index(b"short").is_none());
     }
 
     #[test]

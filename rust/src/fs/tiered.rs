@@ -48,7 +48,7 @@
 
 use std::collections::VecDeque;
 
-use super::chunkstore::{object_path, ChunkStore, OBJECT_PREFIX};
+use super::chunkstore::{object_path, ChunkStore, INDEX_PATH, OBJECT_PREFIX};
 use super::{FileSystem, FsError, IoReport, StorageTier, WriteReq};
 use crate::ckpt::chunk::{ChunkRecipe, DEFAULT_CHUNK_BYTES};
 use crate::topology::NodeId;
@@ -170,6 +170,9 @@ pub struct TieredStore {
     /// Fractional-byte credit carried between ticks (chunk-granular
     /// draining would otherwise lose sub-chunk budgets).
     credit: f64,
+    /// Committed chunk state changed since the `.chunkstore/INDEX` object
+    /// was last persisted to the durable tier.
+    index_dirty: bool,
     pub stats: DrainStats,
 }
 
@@ -185,7 +188,117 @@ impl TieredStore {
             nodes: nodes.max(1),
             clock: 0.0,
             credit: 0.0,
+            index_dirty: false,
             stats: DrainStats::default(),
+        }
+    }
+
+    /// Rebuild a tiered store around surviving tiers — e.g. a durable tier
+    /// that outlived the job entirely. Durable-only restart does not
+    /// depend on the in-memory store surviving: the chunk index is
+    /// reloaded and verified from its persisted `.chunkstore/INDEX`
+    /// object.
+    pub fn adopt(
+        fast: FileSystem,
+        durable: FileSystem,
+        keep_fulls: usize,
+        nodes: u32,
+    ) -> Result<Self, FsError> {
+        let mut ts = TieredStore::new(fast, durable, keep_fulls, nodes);
+        ts.reload_index()?;
+        Ok(ts)
+    }
+
+    /// Reload the persisted durable-tier chunk index and verify it: digest
+    /// framing, recipe/entry cross-consistency, and the presence of every
+    /// stored chunk object on the durable tier. The committed in-memory
+    /// state is replaced by the verified index; recipes still sitting on
+    /// the drain queue re-take their references on top, and chunk objects
+    /// the verified index does not name are reclaimed (they backed queued
+    /// recipes that died with the job, or a partially-shipped drain).
+    /// Returns whether an index object was found (its absence is legal —
+    /// a store that never committed a recipe).
+    pub fn reload_index(&mut self) -> Result<bool, FsError> {
+        if self.index_dirty {
+            // The in-memory index is ahead of the persisted object (a
+            // persist failed and awaits retry) — reloading would resurrect
+            // the stale snapshot and lose committed recipes. Keep the
+            // accurate state and retry the persist instead.
+            self.maybe_persist_index();
+            return Ok(false);
+        }
+        let Some((_, bytes)) = self.durable.peek(INDEX_PATH) else {
+            return Ok(false);
+        };
+        let decoded = ChunkStore::decode_index(bytes).ok_or_else(|| {
+            FsError::Corrupt(format!("{INDEX_PATH} failed digest verification"))
+        })?;
+        for d in decoded.stored_digests() {
+            if !self.durable.exists(&object_path(d)) {
+                return Err(FsError::Corrupt(format!(
+                    "chunk index names stored object {d:032x} but it is missing"
+                )));
+            }
+        }
+        let mut chunks = decoded;
+        for item in &self.queue {
+            if let Some(rec) = &item.recipe {
+                chunks.reference(rec);
+            }
+        }
+        self.chunks = chunks;
+        self.index_dirty = false;
+        // Orphan sweep: objects under `.chunkstore/` the verified index
+        // does not claim are unreachable — nothing will ever read or
+        // release them. A queued recipe that re-referenced one of their
+        // digests simply re-ships it (its entry came back unstored).
+        let live: std::collections::BTreeSet<String> = self
+            .chunks
+            .stored_digests()
+            .into_iter()
+            .map(object_path)
+            .collect();
+        let mut swept = 0u64;
+        for p in self.durable.paths() {
+            if p.starts_with(OBJECT_PREFIX)
+                && p != INDEX_PATH
+                && !live.contains(&p)
+                && self.durable.delete(&p).is_ok()
+            {
+                swept += 1;
+            }
+        }
+        if swept > 0 {
+            self.stats.gc_chunks += swept;
+            log_info!(
+                "fs",
+                "staged: index reload swept {swept} orphaned chunk objects"
+            );
+        }
+        // Superseded plain copies whose delete was deferred by a failed
+        // index persist are shadowed by their recipes — reclaim them too.
+        for p in self.chunks.recipe_paths() {
+            if self.durable.exists(&p) {
+                let _ = self.durable.delete(&p);
+            }
+        }
+        Ok(true)
+    }
+
+    /// Persist the chunk index to the durable tier if committed state
+    /// changed. A failed write (pathological durable shortfall) keeps the
+    /// dirty bit so a later operation retries.
+    fn maybe_persist_index(&mut self) {
+        if !self.index_dirty {
+            return;
+        }
+        let data = self.chunks.encode_index();
+        let vbytes = data.len() as u64;
+        match self.durable.insert_raw(INDEX_PATH, vbytes, data) {
+            Ok(()) => self.index_dirty = false,
+            Err(e) => {
+                log_warn!("fs", "staged: chunk-index persist failed: {e} (will retry)");
+            }
         }
     }
 
@@ -299,6 +412,9 @@ impl TieredStore {
                     crate::util::bytes::human(needed),
                     crate::util::bytes::human(self.fast.free_bytes())
                 );
+                // Forced drains during the failed eviction pass may have
+                // committed recipes — keep the persisted index current.
+                self.maybe_persist_index();
                 return Err(FsError::InsufficientSpace {
                     needed,
                     free: self.fast.free_bytes(),
@@ -354,6 +470,7 @@ impl TieredStore {
             crate::util::bytes::human(pending),
             crate::util::bytes::human(deduped)
         );
+        self.maybe_persist_index();
         Ok(StagedIo {
             fast_secs: io.duration,
             fast_bytes: total,
@@ -374,6 +491,7 @@ impl TieredStore {
         self.clock = self.clock.max(now_secs);
         if self.queue.is_empty() {
             self.credit = 0.0;
+            self.maybe_persist_index(); // retry a previously failed persist
             return DrainTick {
                 queue_empty: true,
                 ..DrainTick::default()
@@ -432,6 +550,7 @@ impl TieredStore {
                 );
             }
         }
+        self.maybe_persist_index();
         tick
     }
 
@@ -454,6 +573,7 @@ impl TieredStore {
         self.queue.extend(failed);
         self.credit = 0.0;
         self.stats.busy_secs += secs;
+        self.maybe_persist_index();
         secs
     }
 
@@ -513,12 +633,28 @@ impl TieredStore {
                     }
                     self.chunks.mark_stored(c.digest, content);
                 }
+                self.index_dirty = true;
                 if let Some(old) = self.chunks.commit(&item.path, rec.clone()) {
                     self.release_and_gc(&old);
                 }
-                // The recipe supersedes any stale plain durable copy
-                // (read_durable would otherwise prefer the old bytes).
-                let _ = self.durable.delete(&item.path);
+                // The recipe supersedes any stale plain durable copy.
+                // Persist the index naming it BEFORE dropping that copy,
+                // so a kill between the two never leaves the path without
+                // a durable representation; if the persist fails, the
+                // superseded copy is kept (recipe-first reads shadow it).
+                if self.durable.exists(&item.path) {
+                    self.maybe_persist_index();
+                    if self.index_dirty {
+                        log_warn!(
+                            "fs",
+                            "staged: keeping superseded plain copy of {} until the \
+                             chunk index persists",
+                            item.path
+                        );
+                    } else {
+                        let _ = self.durable.delete(&item.path);
+                    }
+                }
                 self.stats.drained_files += 1;
                 true
             }
@@ -526,11 +662,21 @@ impl TieredStore {
     }
 
     /// Drop one reference per chunk occurrence of `recipe`; chunk objects
-    /// whose refcount hit zero are deleted from the durable tier.
+    /// whose refcount hit zero are deleted from the durable tier — but
+    /// only once an index that no longer names them has persisted. A
+    /// stale persisted index must never name a missing object (reload
+    /// would report corruption); on a failed persist the objects are kept
+    /// and reclaimed by a later reload's orphan sweep.
     fn release_and_gc(&mut self, recipe: &ChunkRecipe) {
-        for dead in self.chunks.release(recipe) {
+        self.index_dirty = true;
+        let dead = self.chunks.release(recipe);
+        if dead.iter().any(|d| d.stored) {
+            self.maybe_persist_index();
+        }
+        let persisted = !self.index_dirty;
+        for dead in dead {
             self.stats.gc_chunks += 1;
-            if dead.stored {
+            if dead.stored && persisted {
                 self.stats.gc_bytes += dead.vbytes;
                 let _ = self.durable.delete(&object_path(dead.digest));
             }
@@ -580,10 +726,18 @@ impl TieredStore {
         }
         let mut deleted = 0usize;
         let mut kept = Vec::new();
+        // A recipe-backed path is restart-reachable only through the
+        // *persisted* index: retry a pending persist before trusting it.
+        self.maybe_persist_index();
         for path in &gen.paths {
-            if !self.is_durable(path) {
-                // Forced drain failed (durable tier full / source gone):
-                // keep the fast copy rather than drop the only one.
+            let recipe_unpersisted = self.index_dirty
+                && self.chunks.recipe(path).is_some()
+                && !self.durable.exists(path);
+            if !self.is_durable(path) || recipe_unpersisted {
+                // Forced drain failed (durable tier full / source gone),
+                // or the recipe exists only in the unpersisted in-memory
+                // index: keep the fast copy rather than drop the only
+                // restart-reachable one.
                 log_warn!(
                     "fs",
                     "staged: evictee {path} has no durable copy — kept on the fast tier"
@@ -734,10 +888,13 @@ impl TieredStore {
         let mut plain = Vec::new();
         let mut recipes = Vec::new();
         for (i, (node, path)) in paths.iter().enumerate() {
-            if self.durable.exists(path) {
-                plain.push((i, (*node, path.clone())));
-            } else {
+            // The committed recipe is authoritative: a plain copy that
+            // coexists with one is a superseded leftover whose delete was
+            // deferred (chunk-index persist pending) — never serve it.
+            if self.chunks.recipe(path).is_some() {
                 recipes.push((i, *node, path.clone()));
+            } else {
+                plain.push((i, (*node, path.clone())));
             }
         }
         let mut datas: Vec<Vec<u8>> = vec![Vec::new(); paths.len()];
@@ -793,6 +950,7 @@ impl TieredStore {
             }
             None => false,
         };
+        self.maybe_persist_index();
         if fast || durable || recipe {
             Ok(())
         } else {
@@ -1348,6 +1506,160 @@ mod tests {
         ts.fast_mut().delete("p").unwrap();
         let (datas, _) = ts.read_durable(&[(NodeId(0), "p".to_string())]).unwrap();
         assert_eq!(datas[0], vec![7u8; 32]);
+    }
+
+    #[test]
+    fn chunk_index_is_persisted_and_adoptable() {
+        let mut ts = store(1024 * MIB, 2);
+        let d0 = patterned(16 * CHUNK, 5);
+        ts.begin_ckpt(0.0);
+        ts.write_wave(vec![recipe_req(0, "g0/f0", &d0)]).unwrap();
+        assert!(
+            !ts.durable().exists(INDEX_PATH),
+            "nothing committed yet — no index object"
+        );
+        ts.drain_sync();
+        assert!(ts.durable().exists(INDEX_PATH), "commit persists the index");
+
+        // A fresh store adopted around the surviving durable tier alone
+        // (in-memory state gone) reassembles byte-identically.
+        let durable = ts.durable().clone();
+        let mut bb = FsConfig::burst_buffer(2);
+        bb.capacity = 1024 * MIB;
+        let fresh = TieredStore::adopt(FileSystem::new(bb), durable, 2, 2).unwrap();
+        assert!(fresh.is_durable("g0/f0"));
+        assert_eq!(fresh.chunk_store().recipe_count(), 1);
+        assert_eq!(fresh.chunk_store().chunk_count(), 16);
+        let (datas, _) = fresh
+            .read_durable(&[(NodeId(0), "g0/f0".to_string())])
+            .unwrap();
+        assert_eq!(datas[0], d0, "reassembly from the reloaded index");
+    }
+
+    #[test]
+    fn corrupt_index_is_rejected_on_adopt() {
+        let mut ts = store(1024 * MIB, 2);
+        let d0 = patterned(8 * CHUNK, 9);
+        ts.begin_ckpt(0.0);
+        ts.write_wave(vec![recipe_req(0, "g0/f0", &d0)]).unwrap();
+        ts.drain_sync();
+        let mut durable = ts.durable().clone();
+        assert!(durable.corrupt_byte(INDEX_PATH, 20));
+        let mut bb = FsConfig::burst_buffer(2);
+        bb.capacity = 1024 * MIB;
+        let err = TieredStore::adopt(FileSystem::new(bb), durable, 2, 2).unwrap_err();
+        assert!(matches!(err, FsError::Corrupt(_)), "got {err}");
+    }
+
+    #[test]
+    fn index_reload_rejects_missing_stored_object() {
+        let mut ts = store(1024 * MIB, 2);
+        let d0 = patterned(4 * CHUNK, 2);
+        let rec = ChunkRecipe::from_data(&d0, CHUNK, d0.len() as u64);
+        ts.begin_ckpt(0.0);
+        ts.write_wave(vec![recipe_req(0, "g0/f0", &d0)]).unwrap();
+        ts.drain_sync();
+        // Delete one chunk object behind the index's back.
+        ts.durable_mut()
+            .delete(&object_path(rec.chunks[1].digest))
+            .unwrap();
+        let err = ts.reload_index().unwrap_err();
+        assert!(matches!(err, FsError::Corrupt(_)), "got {err}");
+    }
+
+    #[test]
+    fn index_reload_preserves_queued_references() {
+        let mut ts = store(1024 * MIB, 4);
+        let a = patterned(8 * CHUNK, 1);
+        let b = patterned(8 * CHUNK, 2);
+        ts.begin_ckpt(0.0);
+        ts.write_wave(vec![recipe_req(0, "g0/f0", &a)]).unwrap();
+        ts.drain_sync(); // generation A committed + index persisted
+        ts.begin_ckpt(1.0);
+        ts.write_wave(vec![recipe_req(0, "g1/f0", &b)]).unwrap();
+        let pending = ts.pending_bytes();
+        assert!(pending > 0, "generation B still queued");
+        // Reload (what a restart does): committed state comes from the
+        // persisted index, the queued recipe re-takes its references.
+        assert!(ts.reload_index().unwrap());
+        assert_eq!(ts.pending_bytes(), pending, "queue untouched by reload");
+        ts.drain_sync();
+        assert!(ts.is_durable("g1/f0"));
+        for p in ts.fast().paths() {
+            ts.fast_mut().delete(&p).unwrap();
+        }
+        let (datas, _) = ts
+            .read_durable(&[
+                (NodeId(0), "g0/f0".to_string()),
+                (NodeId(0), "g1/f0".to_string()),
+            ])
+            .unwrap();
+        assert_eq!(datas[0], a);
+        assert_eq!(datas[1], b);
+    }
+
+    #[test]
+    fn reload_with_pending_persist_keeps_in_memory_index() {
+        let mut ts = store(1024 * MIB, 2);
+        let d = patterned(8 * CHUNK, 3);
+        ts.begin_ckpt(0.0);
+        ts.write_wave(vec![recipe_req(0, "g0/f0", &d)]).unwrap();
+        ts.drain_sync();
+        // Pretend the last persist failed: the in-memory index is newer
+        // than a stale on-disk snapshot (here: an empty store's).
+        let stale = ChunkStore::default().encode_index();
+        ts.durable_mut()
+            .insert_raw(INDEX_PATH, stale.len() as u64, stale)
+            .unwrap();
+        ts.index_dirty = true;
+        assert!(
+            !ts.reload_index().unwrap(),
+            "must not resurrect the stale snapshot"
+        );
+        assert_eq!(ts.chunk_store().recipe_count(), 1, "in-memory index kept");
+        assert!(!ts.index_dirty, "the deferred persist was retried");
+        let (_, bytes) = ts.durable().peek(INDEX_PATH).unwrap();
+        assert_eq!(ChunkStore::decode_index(bytes).unwrap().recipe_count(), 1);
+    }
+
+    #[test]
+    fn reload_sweeps_orphaned_chunk_objects() {
+        let mut ts = store(1024 * MIB, 2);
+        let d = patterned(8 * CHUNK, 4);
+        ts.begin_ckpt(0.0);
+        ts.write_wave(vec![recipe_req(0, "g0/f0", &d)]).unwrap();
+        ts.drain_sync();
+        // Plant an orphan object, as a queued recipe that died with its
+        // job (references never committed) would leave behind.
+        ts.durable_mut()
+            .insert_raw(&object_path(0xDEAD), 4, vec![1, 2, 3, 4])
+            .unwrap();
+        let durable = ts.durable().clone();
+        let mut bb = FsConfig::burst_buffer(2);
+        bb.capacity = 1024 * MIB;
+        let fresh = TieredStore::adopt(FileSystem::new(bb), durable, 2, 2).unwrap();
+        assert!(
+            !fresh.durable().exists(&object_path(0xDEAD)),
+            "orphan object swept on reload"
+        );
+        assert_eq!(fresh.stats.gc_chunks, 1);
+        assert!(fresh.is_durable("g0/f0"));
+        let (datas, _) = fresh
+            .read_durable(&[(NodeId(0), "g0/f0".to_string())])
+            .unwrap();
+        assert_eq!(datas[0], d, "live objects untouched by the sweep");
+    }
+
+    #[test]
+    fn reload_without_index_object_is_a_clean_noop() {
+        let mut ts = store(1024 * MIB, 2);
+        assert!(!ts.reload_index().unwrap(), "no index object yet");
+        // Recipe-less stores never write an index.
+        ts.begin_ckpt(0.0);
+        ts.write_wave(wave("g0", 2, MIB)).unwrap();
+        ts.drain_sync();
+        assert!(!ts.durable().exists(INDEX_PATH));
+        assert!(!ts.reload_index().unwrap());
     }
 
     #[test]

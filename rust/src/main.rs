@@ -124,8 +124,9 @@ USAGE: mana <command> [--flags]
 COMMANDS:
   run        --app gromacs|hpcg|vasp|synthetic --ranks N [--steps S]
              [--threads T] [--fs bb|lustre|staged] [--keep-fulls N]
-             [--chunk-bytes N] [--ckpt-at STEP] [--restart]
-             [--real-compute] [--fixes on|off] [--link static|dynamic]
+             [--chunk-bytes N] [--coord-fanout F] [--ckpt-at STEP]
+             [--restart] [--real-compute] [--fixes on|off]
+             [--link static|dynamic]
   usage      [--jobs N] print the Fig. 1 application census
   mapping    --ranks N [--threads T] print rank→node/pid mapping
   preempt    [--ranks N] run the preempt-queue scenario
@@ -162,6 +163,17 @@ fn build_config(args: &Args) -> Result<RunConfig> {
             Some(s) => s.keep_fulls = keep,
             None => bail!("--keep-fulls requires --fs staged"),
         }
+    }
+    if let Some(fstr) = args.get("coord-fanout") {
+        // Hierarchical coordination plane: per-node sub-coordinators in a
+        // fanout-F tree; omit the flag for the flat DMTCP root.
+        let f: u32 = fstr
+            .parse()
+            .with_context(|| format!("--coord-fanout={fstr}"))?;
+        if f < 2 {
+            bail!("--coord-fanout must be >= 2 (got {f})");
+        }
+        cfg.coord_fanout = Some(f);
     }
     if let Some(cb) = args.get("chunk-bytes") {
         let n = mana::util::bytes::parse(cb)
@@ -253,7 +265,16 @@ fn cmd_run(args: &Args) -> Result<()> {
                 .set("write_secs", c.write_secs)
                 .set("fast_write_secs", c.fast_write_secs)
                 .set("durable_write_secs", c.durable_write_secs)
+                .set("intent_secs", c.intent_secs)
+                .set("safepoint_secs", c.safepoint_secs)
                 .set("drain_secs", c.drain_secs)
+                .set("quiesce_secs", c.quiesce_secs)
+                .set("resume_secs", c.resume_secs)
+                .set("ctrl_secs", c.ctrl_secs)
+                .set("ctrl_msgs", c.ctrl_msgs)
+                .set("root_ctrl_msgs", c.root_ctrl_msgs)
+                .set("coord_depth", c.coord_depth as u64)
+                .set("reparents", c.reparents as u64)
                 .set("image_bytes", c.image_bytes)
                 .set("drain_pending_bytes", c.drain_pending_bytes)
                 .set("deduped_bytes", c.deduped_bytes)
@@ -262,6 +283,16 @@ fn cmd_run(args: &Args) -> Result<()> {
                 .set("lost_messages", c.lost_messages),
         );
     }
+    out = out.set(
+        "coord",
+        Json::obj()
+            .set("plane", sim.coord.plane.describe().as_str())
+            .set("depth", sim.coord.plane.depth() as u64)
+            .set("ctrl_msgs", sim.coord.stats.ctrl_msgs)
+            .set("root_ctrl_msgs", sim.coord.stats.root_msgs)
+            .set("reparents", sim.coord.stats.reparents)
+            .set("phase_retries", sim.coord.stats.phase_retries),
+    );
     if let Some(r) = restart_report {
         out = out.set(
             "restart",

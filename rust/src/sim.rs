@@ -26,7 +26,10 @@ use crate::ckpt::{
     SavedPayload, SavedRegion,
 };
 use crate::config::{ComputeMode, RunConfig};
-use crate::coordinator::{CkptFailure, CkptReport, Coordinator, RankState};
+use crate::coordinator::tree::TreePlane;
+use crate::coordinator::{
+    CkptFailure, CkptReport, CoordPlane, Coordinator, FlatPlane, Phase, PhaseIo, RankState,
+};
 use crate::fs::{FileSystem, FsConfig, FsError, FsKind, Store, TieredStore, WriteReq};
 use crate::launcher::{self, LaunchError};
 use crate::mem::Payload;
@@ -178,7 +181,7 @@ impl JobSim {
             },
             cfg.ranks,
         );
-        let coord = Self::make_coordinator(&cfg);
+        let coord = Self::make_coordinator(&cfg, &topo);
         let times = vec![SimTime::secs(launch.startup_secs); cfg.ranks as usize];
 
         // Applications dup WORLD and split node-local communicators at
@@ -245,7 +248,10 @@ impl JobSim {
         })
     }
 
-    fn make_coordinator(cfg: &RunConfig) -> Coordinator {
+    /// Build the coordinator with the configured coordination plane: the
+    /// flat DMTCP root by default, or the per-node sub-coordinator tree
+    /// (`--coord-fanout`), whose depth derives from the job topology.
+    fn make_coordinator(cfg: &RunConfig, topo: &Topology) -> Coordinator {
         let ctrl = ControlNet::new(
             CtrlConfig {
                 keepalive: cfg.fixes.keepalive,
@@ -255,7 +261,11 @@ impl JobSim {
             },
             cfg.seed ^ 0xC00D,
         );
-        Coordinator::new(ctrl, cfg.ranks, cfg.fixes.locks)
+        let plane: Box<dyn CoordPlane> = match cfg.coord_fanout {
+            Some(f) => Box::new(TreePlane::new(topo, f, cfg.faults.subcoord_death)),
+            None => Box::new(FlatPlane::new(cfg.ranks)),
+        };
+        Coordinator::new(ctrl, plane, cfg.ranks, cfg.fixes.locks)
     }
 
     // -------------------------------------------------------------- steps
@@ -446,15 +456,21 @@ impl JobSim {
 
     // --------------------------------------------------------- checkpoint
 
-    /// Run the full MANA checkpoint protocol.
+    /// Run the full MANA checkpoint protocol. Every phase's control
+    /// traffic moves through the configured coordination plane (flat root
+    /// or sub-coordinator tree) as a broadcast-down + reduce-up.
     pub fn checkpoint(&mut self) -> Result<CkptReport, CkptFailure> {
-        let mut report = CkptReport::default();
+        let mut report = CkptReport {
+            coord_depth: self.coord.plane.depth(),
+            ..CkptReport::default()
+        };
         let t0 = self.now();
 
-        // Phase 1: INTENT over the control plane.
-        let intent_delay = self.coord.broadcast_intent(self.cfg.ranks, t0)?;
-        report.intent_secs = intent_delay;
-        let mut t = t0.after(intent_delay);
+        // Phase 1: INTENT over the coordination plane.
+        let pio = self.coord.phase_exchange(Phase::Intent, t0)?;
+        absorb_phase(&mut report, pio);
+        report.intent_secs = pio.secs;
+        let mut t = t0.after(pio.secs);
 
         // Fault window: a status update lands right here; without the
         // locks fix it is interruptible.
@@ -465,7 +481,8 @@ impl JobSim {
         }
         self.coord.check_status_consistent()?;
 
-        // Phase 2: safe points (no outstanding converted requests).
+        // Phase 2: safe points (no outstanding converted requests),
+        // confirmed over the plane.
         for r in 0..self.cfg.ranks {
             let rank = RankId(r);
             if !self.wrappers.at_safe_point(rank, self.times[r as usize]) {
@@ -475,6 +492,10 @@ impl JobSim {
                 self.wrappers.retire_completed(rank, self.times[r as usize]);
             }
         }
+        let pio = self.coord.phase_exchange(Phase::SafePoint, t)?;
+        absorb_phase(&mut report, pio);
+        report.safepoint_secs = pio.secs;
+        t = t.after(pio.secs);
 
         // Phase 3: DRAIN (or the legacy drop).
         let drain_t0 = self.now();
@@ -483,7 +504,10 @@ impl JobSim {
             report.drain_rounds = drep.rounds;
             report.buffered_msgs = drep.buffered_msgs;
             debug_assert!(self.world.drained(), "drain postcondition");
-            // Report the balanced counters to the coordinator.
+            // The coordinator's own table keeps the per-rank rows (console
+            // and race-model view) — no extra control traffic is charged
+            // for them; the protocol-path convergence check below moves
+            // only aggregates.
             for r in 0..self.cfg.ranks {
                 let c = self.world.counters[r as usize];
                 self.coord.record_rank_counts(
@@ -492,10 +516,6 @@ impl JobSim {
                     c.sent_bytes,
                     c.recv_bytes,
                 );
-            }
-            if !self.coord.counts_balanced()? {
-                // Should be impossible with the drain fix on.
-                return Err(CkptFailure::LostMessages(usize::MAX));
             }
         } else {
             let lost = self.world.drop_inflight();
@@ -513,10 +533,33 @@ impl JobSim {
         for tt in &mut self.times {
             *tt = t_sync;
         }
-        report.drain_secs = t_sync.as_secs() - drain_t0.as_secs();
         t = t.max(t_sync);
+        let mut drain_secs = t_sync.as_secs() - drain_t0.as_secs();
+        if self.cfg.fixes.drain {
+            // The paper's convergence test over the plane: Σsent == Σrecv,
+            // with the counters summed up the tree — the root sees one
+            // aggregate per child, never one row per rank.
+            let counts: Vec<(u64, u64)> = self
+                .world
+                .counters
+                .iter()
+                .map(|c| (c.sent_bytes, c.recv_bytes))
+                .collect();
+            let (balanced, pio) = self.coord.drain_reduce(&counts, t)?;
+            absorb_phase(&mut report, pio);
+            if !balanced {
+                // Should be impossible with the drain fix on.
+                return Err(CkptFailure::LostMessages(usize::MAX));
+            }
+            t = t.after(pio.secs);
+            for tt in &mut self.times {
+                *tt = t;
+            }
+            drain_secs += pio.secs;
+        }
+        report.drain_secs = drain_secs;
 
-        // Phase 4: GNI quiescence wait.
+        // Phase 4: GNI quiescence wait, then the all-clear over the plane.
         if let Some(end) = self.world.fabric.quiescence_end(t) {
             report.quiesce_secs = end.as_secs() - t.as_secs();
             t = end;
@@ -524,6 +567,10 @@ impl JobSim {
                 *tt = t;
             }
         }
+        let pio = self.coord.phase_exchange(Phase::Quiesce, t)?;
+        absorb_phase(&mut report, pio);
+        report.quiesce_secs += pio.secs;
+        t = t.after(pio.secs);
 
         // Phase 5: WRITE the image wave. Incremental mode: once a full
         // image exists, write only dirty regions (ParentRef the rest) to a
@@ -534,6 +581,9 @@ impl JobSim {
             self.coord
                 .set_rank_state(RankId(r), RankState::Writing, false);
         }
+        let pio = self.coord.phase_exchange(Phase::Write, t)?;
+        absorb_phase(&mut report, pio);
+        t = t.after(pio.secs);
         let incremental = self.cfg.incremental
             && (self.last_full_gen.is_some()
                 || (self.cfg.staging.is_none()
@@ -678,8 +728,10 @@ impl JobSim {
 
         // Phase 6: RESUME — in staged mode, into the async Drain-to-PFS
         // phase: ranks compute again while their images go durable.
-        let resume_delay = self.coord.broadcast_intent(self.cfg.ranks, t)?;
-        t = t.after(resume_delay);
+        let pio = self.coord.phase_exchange(Phase::Resume, t)?;
+        absorb_phase(&mut report, pio);
+        report.resume_secs = pio.secs;
+        t = t.after(pio.secs);
         let pending = self.fs.tiered().map_or(0, |ts| ts.pending_bytes());
         report.drain_pending_bytes = pending;
         // A fully-deduped generation can have zero pending *bytes* while
@@ -811,6 +863,14 @@ impl JobSim {
     ) -> Result<(JobSim, RestartReport), RestartError> {
         let topo = Topology::new(cfg.ranks, cfg.threads_per_rank);
         let mut report = RestartReport::default();
+
+        // Staged mode: reload + verify the persisted durable-tier chunk
+        // index before any recipe-backed read — durable-only restart must
+        // not depend on the in-memory index having survived the kill.
+        if let Store::Tiered(ts) = &mut fs {
+            ts.reload_index()
+                .map_err(|e| RestartError::Fs(e.to_string()))?;
+        }
 
         // srun with the restart argv — the packet-limit crash lives here.
         let argv = launcher::restart_argv(&cfg.job, cfg.ranks, cfg.fixes.manifest_filenames);
@@ -959,7 +1019,7 @@ impl JobSim {
 
         let app = apps::make_app(cfg.app);
         let world = MpiWorld::new(cfg.ranks, Self::make_fabric(&cfg));
-        let mut coord = Self::make_coordinator(&cfg);
+        let mut coord = Self::make_coordinator(&cfg, &topo);
         coord.stats.restarts += 1;
         report.total_secs = report.startup_secs + report.read_secs;
         let t0 = SimTime::secs(report.total_secs);
@@ -1042,6 +1102,14 @@ impl JobSim {
     pub fn aggregate_memory(&self) -> u64 {
         self.procs.iter().map(|p| p.upper_bytes()).sum()
     }
+}
+
+/// Fold one phase exchange's control-plane accounting into the report.
+fn absorb_phase(report: &mut CkptReport, io: PhaseIo) {
+    report.ctrl_secs += io.secs;
+    report.ctrl_msgs += io.msgs;
+    report.root_ctrl_msgs += io.root_msgs;
+    report.reparents += io.reparents;
 }
 
 /// Decode an image, and on CRC/decode failure of a fast-tier copy whose
@@ -1270,6 +1338,114 @@ mod tests {
         assert!(agg >= 8 * (1 << 20));
     }
 
+    // ------------------------------------------- coordination plane
+
+    #[test]
+    fn tree_plane_cr_bitwise_and_byte_identical_to_flat() {
+        let mut cont = JobSim::launch(quick_cfg(16, 0), None).unwrap();
+        cont.run_steps(6).unwrap();
+        let want = cont.fingerprint();
+
+        let run = |cfg: RunConfig| {
+            let mut sim = JobSim::launch(cfg.clone(), None).unwrap();
+            sim.run_steps(3).unwrap();
+            let rep = sim.checkpoint().unwrap();
+            let img = match &sim.fs {
+                Store::Single(f) => f
+                    .peek(&image_path(&cfg.job, RankId(0)))
+                    .expect("image written")
+                    .1
+                    .to_vec(),
+                Store::Tiered(_) => unreachable!(),
+            };
+            let fs = sim.kill();
+            let (mut resumed, _) = JobSim::restart_from(cfg, None, fs).unwrap();
+            resumed.run_steps(3).unwrap();
+            (rep, img, resumed.fingerprint())
+        };
+        let mut flat_cfg = quick_cfg(16, 0);
+        flat_cfg.job = "plane-flat".into();
+        let mut tree_cfg = quick_cfg(16, 0).with_coord_tree(2);
+        tree_cfg.job = "plane-tree".into();
+        let (frep, fimg, ffp) = run(flat_cfg);
+        let (trep, timg, tfp) = run(tree_cfg);
+        assert_eq!(ffp, want, "flat C/R bitwise");
+        assert_eq!(tfp, want, "tree plane must not change checkpoint contents");
+        assert_eq!(fimg, timg, "identical image bytes across planes");
+        assert!(trep.coord_depth > frep.coord_depth);
+        assert!(
+            trep.root_ctrl_msgs < frep.root_ctrl_msgs,
+            "tree root load {} must undercut flat {}",
+            trep.root_ctrl_msgs,
+            frep.root_ctrl_msgs
+        );
+    }
+
+    #[test]
+    fn subcoord_death_mid_drain_reparents_and_checkpoint_succeeds() {
+        let mut cont = JobSim::launch(quick_cfg(16, 0), None).unwrap();
+        cont.run_steps(6).unwrap();
+        let want = cont.fingerprint();
+
+        let mut cfg = quick_cfg(16, 0).with_coord_tree(2);
+        cfg.job = "tree-death".into();
+        cfg.faults.subcoord_death = Some((0, Phase::Drain));
+        let mut sim = JobSim::launch(cfg.clone(), None).unwrap();
+        sim.run_steps(3).unwrap();
+        let rep = sim.checkpoint().unwrap();
+        assert_eq!(rep.reparents, 1, "death mid-DRAIN must re-parent once");
+        assert_eq!(sim.coord.stats.reparents, 1);
+        assert!(sim.coord.stats.phase_retries >= 1);
+        let fs = sim.kill();
+        cfg.faults.subcoord_death = None; // the dead node stays gone
+        let (mut resumed, _) = JobSim::restart_from(cfg, None, fs).unwrap();
+        resumed.run_steps(3).unwrap();
+        assert_eq!(resumed.fingerprint(), want, "re-parented ckpt restores bitwise");
+        assert!(!resumed.any_corruption());
+    }
+
+    #[test]
+    fn unreachable_rank_fails_checkpoint_cleanly_and_fast() {
+        let mut cfg = quick_cfg(8, 0);
+        cfg.faults.ctrl_loss_prob = 1.0; // KeepAlive exhausts max_retries
+        let mut sim = JobSim::launch(cfg, None).unwrap();
+        sim.run_steps(1).unwrap();
+        match sim.checkpoint().unwrap_err() {
+            CkptFailure::Unreachable { rank, phase } => {
+                assert_eq!(rank, RankId(0));
+                assert_eq!(phase, Phase::Intent);
+            }
+            other => panic!("expected clean Unreachable, got {other}"),
+        }
+        // A second attempt fails fast on the record — no re-timeout.
+        let sent = sim.coord.ctrl.stats.sent;
+        let retries = sim.coord.ctrl.stats.retries;
+        assert!(matches!(
+            sim.checkpoint().unwrap_err(),
+            CkptFailure::Unreachable { .. }
+        ));
+        assert_eq!(sim.coord.ctrl.stats.sent, sent, "dead link not re-probed");
+        assert_eq!(sim.coord.ctrl.stats.retries, retries, "no re-timeout");
+    }
+
+    #[test]
+    fn tree_plane_root_messages_bounded_by_fanout() {
+        let mut cfg = quick_cfg(64, 0).with_coord_tree(4);
+        cfg.job = "tree-bound".into();
+        let mut sim = JobSim::launch(cfg, None).unwrap();
+        sim.run_steps(2).unwrap();
+        let rep = sim.checkpoint().unwrap();
+        let bound = 2 * 4 * Phase::ALL.len() as u64;
+        assert!(
+            rep.root_ctrl_msgs <= bound,
+            "root handled {} msgs, bound {bound}",
+            rep.root_ctrl_msgs
+        );
+        assert!(rep.ctrl_msgs > rep.root_ctrl_msgs, "plane moves more than the root");
+        assert_eq!(rep.coord_depth, 3, "8 nodes at fanout 4: two levels + leaf");
+        assert!(rep.ctrl_secs > 0.0);
+    }
+
     // --------------------------------------------- staged (tiered) mode
 
     fn staged_cfg(ranks: u32, steps: u64) -> RunConfig {
@@ -1400,6 +1576,43 @@ mod tests {
             "drain must resume on the restarted clock"
         );
         assert!(ts.is_durable("synthetic-4r/gen0000/ckpt_rank00000.mana"));
+    }
+
+    #[test]
+    fn staged_restart_from_adopted_durable_tier_alone() {
+        let mut cont = JobSim::launch(staged_cfg(4, 0), None).unwrap();
+        cont.run_steps(5).unwrap();
+        let want = cont.fingerprint();
+
+        let mut sim = JobSim::launch(staged_cfg(4, 0), None).unwrap();
+        sim.run_steps(3).unwrap();
+        sim.checkpoint().unwrap();
+        sim.finish_drain();
+        let cfg = sim.cfg.clone();
+        let fs = sim.kill();
+        // Rebuild the store from the durable tier alone: the in-memory
+        // TieredStore (and its chunk index) is gone; the persisted
+        // `.chunkstore/INDEX` object brings the recipes back.
+        let Store::Tiered(ts) = fs else { panic!("staged store expected") };
+        let durable = ts.durable().clone();
+        let topo = Topology::new(cfg.ranks, cfg.threads_per_rank);
+        let fresh = TieredStore::adopt(
+            FileSystem::new(FsConfig::burst_buffer(topo.nodes())),
+            durable,
+            2,
+            topo.nodes(),
+        )
+        .expect("index reloads and verifies");
+        let (mut resumed, rep) = JobSim::restart_from(cfg, None, Store::Tiered(fresh)).unwrap();
+        assert_eq!(resumed.step, 3);
+        assert!(rep.read_secs > 0.0);
+        resumed.run_steps(2).unwrap();
+        assert_eq!(
+            resumed.fingerprint(),
+            want,
+            "durable-only restart must not depend on the in-memory index"
+        );
+        assert!(!resumed.any_corruption());
     }
 
     #[test]

@@ -19,12 +19,17 @@ pub struct CtrlConfig {
     pub loss_prob: f64,
     /// Probability an idle connection was dropped since last use.
     pub disconnect_prob: f64,
-    /// One-way latency, seconds.
+    /// One-way latency per hop, seconds.
     pub latency: f64,
     /// KeepAlive probe interval / retry timeout, seconds.
     pub keepalive_interval: f64,
     /// Max retries before declaring the rank unreachable.
     pub max_retries: u32,
+    /// Endpoint serialization cost per control message, seconds: an
+    /// endpoint sends (or receives) messages one at a time, so a flat
+    /// coordinator pays `ranks * per_msg_secs` per protocol sweep — the
+    /// O(ranks)-at-one-root bottleneck the tree plane removes.
+    pub per_msg_secs: f64,
 }
 
 impl Default for CtrlConfig {
@@ -36,6 +41,7 @@ impl Default for CtrlConfig {
             latency: 0.0002, // 200 us management-net RTT/2
             keepalive_interval: 0.5,
             max_retries: 8,
+            per_msg_secs: 25e-6, // 25 us endpoint processing per message
         }
     }
 }
@@ -132,19 +138,37 @@ impl ControlNet {
         Ok(delay)
     }
 
-    /// Broadcast to many ranks; returns per-rank delays or the first error.
-    pub fn broadcast(
+    /// One endpoint's serialized batch over one hop: messages leave (or are
+    /// processed on arrival) back-to-back at [`CtrlConfig::per_msg_secs`]
+    /// spacing, each traversing its own lossy link; the batch completes
+    /// when the last delivery lands. This is the primitive both
+    /// coordination planes are built from — a flat root pays one batch of
+    /// size `ranks`, a tree endpoint never pays more than its fanout.
+    pub fn send_batch(
         &mut self,
-        ranks: impl Iterator<Item = RankId>,
+        targets: impl Iterator<Item = RankId>,
         now: SimTime,
-    ) -> Result<Vec<(RankId, f64)>, CtrlError> {
-        let mut out = Vec::new();
-        for r in ranks {
-            let d = self.send(r, now)?;
-            out.push((r, d));
+    ) -> Result<BatchIo, CtrlError> {
+        let mut offset = 0.0f64;
+        let mut done = 0.0f64;
+        let mut msgs = 0u64;
+        for t in targets {
+            offset += self.cfg.per_msg_secs;
+            let d = self.send(t, now)?;
+            done = done.max(offset + d);
+            msgs += 1;
         }
-        Ok(out)
+        Ok(BatchIo { secs: done, msgs })
     }
+}
+
+/// Outcome of one serialized batch ([`ControlNet::send_batch`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchIo {
+    /// Seconds until the last delivery of the batch landed.
+    pub secs: f64,
+    /// Messages sent.
+    pub msgs: u64,
 }
 
 #[cfg(test)]
@@ -228,12 +252,32 @@ mod tests {
     }
 
     #[test]
-    fn broadcast_stops_at_first_error() {
+    fn batch_stops_at_first_error_without_keepalive() {
         let mut net = lossy(false, 1.0, 0.0);
         let err = net
-            .broadcast((0..4).map(RankId), SimTime::ZERO)
+            .send_batch((0..4).map(RankId), SimTime::ZERO)
             .unwrap_err();
         assert!(matches!(err, CtrlError::Lost { .. }));
+        assert_eq!(net.stats.sent, 1, "no further sends after the failure");
+    }
+
+    #[test]
+    fn batch_serializes_at_the_endpoint() {
+        let mut net = lossy(true, 0.0, 0.0);
+        let io = net.send_batch((0..100).map(RankId), SimTime::ZERO).unwrap();
+        assert_eq!(io.msgs, 100);
+        let floor = 100.0 * net.cfg.per_msg_secs + net.cfg.latency;
+        assert!((io.secs - floor).abs() < 1e-9, "{} vs {floor}", io.secs);
+        let io2 = net.send_batch((0..200).map(RankId), SimTime::ZERO).unwrap();
+        assert!(io2.secs > io.secs * 1.9, "double batch ~doubles the cost");
+    }
+
+    #[test]
+    fn empty_batch_is_free() {
+        let mut net = lossy(true, 0.0, 0.0);
+        let io = net.send_batch(std::iter::empty(), SimTime::ZERO).unwrap();
+        assert_eq!(io.msgs, 0);
+        assert_eq!(io.secs, 0.0);
     }
 
     #[test]

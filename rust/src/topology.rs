@@ -112,6 +112,24 @@ impl Topology {
     pub fn all_ranks(&self) -> impl Iterator<Item = RankId> {
         (0..self.ranks).map(RankId)
     }
+
+    /// Sub-coordinator levels a fanout-`f` coordination tree needs for
+    /// this topology (one sub-coordinator per node; the root and the leaf
+    /// rank hop are excluded). Level `l` holds `f^l` sub-coordinators, so
+    /// this is the smallest `L` with `f + f^2 + … + f^L >= nodes`.
+    pub fn coord_levels(&self, fanout: u32) -> u32 {
+        let f = fanout.max(2) as u64;
+        let nodes = self.nodes() as u64;
+        let mut capacity = f;
+        let mut level_width = f;
+        let mut levels = 1u32;
+        while capacity < nodes {
+            level_width *= f;
+            capacity += level_width;
+            levels += 1;
+        }
+        levels
+    }
 }
 
 #[cfg(test)]
@@ -155,6 +173,18 @@ mod tests {
     #[should_panic(expected = "does not fit")]
     fn oversubscribed_rank_panics() {
         Topology::new(4, 128);
+    }
+
+    #[test]
+    fn coord_levels_grow_logarithmically() {
+        // 512 ranks x 8 threads -> 64 nodes: fanout 8 covers 8 + 64 = 72
+        // in two levels; fanout 2 needs 2+4+8+16+32+64 = 126 -> 6 levels.
+        let t = Topology::new(512, 8);
+        assert_eq!(t.coord_levels(8), 2);
+        assert_eq!(t.coord_levels(2), 6);
+        assert_eq!(t.coord_levels(64), 1);
+        // Single-node jobs always fit in one level.
+        assert_eq!(Topology::new(4, 8).coord_levels(8), 1);
     }
 
     #[test]

@@ -208,6 +208,53 @@ fn rank_to_node_mapping_consistent_after_restart() {
 }
 
 #[test]
+fn tree_plane_full_cycle_with_staging_and_congestion() {
+    // The production shape all at once: hierarchical coordination plane,
+    // tiered BB→Lustre staging, and a congested control network — the
+    // C/R cycle must still be bitwise deterministic.
+    let base = cfg(AppKind::Synthetic, 32, "int-tree");
+    let want = continuous_fingerprint(base.clone(), 6);
+    let mut c = base.with_coord_tree(2).with_staging();
+    c.faults = FaultPlan::congested_network();
+    let got = interrupted_fingerprint(c, 6, 3);
+    assert_eq!(got, want, "tree plane + staging + congestion stays bitwise");
+}
+
+#[test]
+fn tree_plane_survives_subcoord_death_end_to_end() {
+    use mana::coordinator::Phase;
+    let base = cfg(AppKind::Synthetic, 32, "int-treedeath");
+    let want = continuous_fingerprint(base.clone(), 6);
+    let mut c = base.with_coord_tree(2);
+    c.faults.subcoord_death = Some((1, Phase::Drain));
+    let mut sim = JobSim::launch(c.clone(), None).unwrap();
+    sim.run_steps(3).unwrap();
+    let rep = sim.checkpoint().unwrap();
+    assert_eq!(rep.reparents, 1);
+    let fs = sim.kill();
+    c.faults.subcoord_death = None;
+    let (mut resumed, _) = JobSim::restart_from(c, None, fs).unwrap();
+    resumed.run_steps(3).unwrap();
+    assert_eq!(resumed.fingerprint(), want);
+    assert!(!resumed.any_corruption());
+}
+
+#[test]
+fn unreachable_sub_coordinator_link_fails_checkpoint_cleanly() {
+    // Max-retries exhaustion on a tree link propagates a clean failure
+    // naming the rank and the phase that first hit it.
+    let mut c = cfg(AppKind::Synthetic, 16, "int-unreach").with_coord_tree(2);
+    c.faults.ctrl_loss_prob = 1.0;
+    let mut sim = JobSim::launch(c, None).unwrap();
+    sim.run_steps(1).unwrap();
+    let msg = sim.checkpoint().unwrap_err().to_string();
+    assert!(
+        msg.contains("unreachable") && msg.contains("INTENT"),
+        "failure must name rank and phase: {msg}"
+    );
+}
+
+#[test]
 fn prototype_fails_at_small_scale_on_restart_conflicts() {
     // The paper's debugging narrative started AT SMALL SCALE: "We began
     // debugging at small scales … The descriptor conflicts would occur
