@@ -1,0 +1,250 @@
+//! DATAPATH — host wall-clock of the checkpoint WRITE path: serial vs
+//! rank-parallel encode, cold vs warm digest cache.
+//!
+//! The control plane went O(fanout) in PR 3; this bench tracks the *data*
+//! plane, which used to encode every rank's image on one host thread. The
+//! rank-parallel path fans the capture→encode→recipe pipeline across
+//! worker threads and memoizes per-region section digests, so a
+//! steady-state generation re-hashes only what actually changed.
+//!
+//! Asserted (the PR's acceptance criteria):
+//!   * the parallel wave is byte-identical to the serial wave at 512
+//!     ranks (spot check; the full guarantee lives in the property test);
+//!   * parallel cold encode is not slower than serial cold at 2048 ranks
+//!     (the CI gate), on hosts with >= 2 cores;
+//!   * >= 3x speedup, serial-cold -> parallel-warm, at 2048 ranks on
+//!     hosts with >= 4 cores;
+//!   * a 4096-rank staged JobSim run completes, with digest-cache hits by
+//!     generation 3.
+//!
+//! Results are written to BENCH_datapath.json (uploaded as a CI artifact)
+//! so the perf trajectory has data points.
+
+use mana::benchkit::{time, Report};
+use mana::ckpt::datapath::{encode_wave, resolve_threads, EncodeOpts, RankJob, RankSource};
+use mana::config::{AppKind, RunConfig};
+use mana::fs::WriteReq;
+use mana::mem::{Half, MemRegion, Payload, RegionTable};
+use mana::sim::JobSim;
+use mana::topology::{NodeId, RankId};
+use mana::util::json::Json;
+
+const CHUNK: usize = 1 << 20;
+/// Per-rank resident payload (the CRC/digest hash work).
+const STATE_BYTES: usize = 32 << 10;
+/// Per-rank virtual pattern heap (recipe-digest work, no resident bytes).
+const HEAP_VLEN: u64 = 32 << 20;
+
+fn mk_tables(ranks: usize) -> Vec<RegionTable> {
+    (0..ranks)
+        .map(|r| {
+            let mut t = RegionTable::new();
+            let mut state = vec![0u8; STATE_BYTES];
+            let mut x = (r as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15) | 1;
+            for b in state.iter_mut() {
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                *b = (x & 0xff) as u8;
+            }
+            t.insert(MemRegion::new(
+                0x1000_0000_0000,
+                STATE_BYTES as u64,
+                Half::Upper,
+                "state",
+                Payload::Real(state),
+            ))
+            .unwrap();
+            t.insert(MemRegion::new(
+                0x2000_0000_0000,
+                HEAP_VLEN,
+                Half::Upper,
+                "heap",
+                Payload::Pattern(r as u64 + 1),
+            ))
+            .unwrap();
+            t.insert(MemRegion::new(
+                0x3000_0000_0000,
+                4 << 20,
+                Half::Upper,
+                "bss",
+                Payload::Zero,
+            ))
+            .unwrap();
+            t
+        })
+        .collect()
+}
+
+fn mk_jobs(ranks: usize) -> Vec<RankJob> {
+    (0..ranks)
+        .map(|i| RankJob {
+            rank: RankId(i as u32),
+            node: NodeId((i / 64) as u32),
+            path: format!("bench/gen0/r{i:05}.mana"),
+            parent: None,
+            extra_regions: Vec::new(),
+        })
+        .collect()
+}
+
+fn encode(tables: &mut [RegionTable], jobs: &[RankJob], threads: usize) -> Vec<WriteReq> {
+    let mut sources: Vec<RankSource> = tables
+        .iter_mut()
+        .map(|t| RankSource {
+            table: t,
+            step: 1,
+            rng_state: [7u8; 32],
+            upper_fds: Vec::new(),
+        })
+        .collect();
+    let (reqs, _stats) = encode_wave(
+        &mut sources,
+        jobs,
+        &EncodeOpts {
+            chunk_bytes: CHUNK,
+            threads,
+            with_recipe: true,
+        },
+    );
+    reqs
+}
+
+/// (cold_min_secs, warm_min_secs) for one (ranks, threads) point.
+fn measure(ranks: usize, threads: usize) -> (f64, f64) {
+    let jobs = mk_jobs(ranks);
+    let mut tables = mk_tables(ranks);
+    // Cold: every iteration drops the caches first, so each encode pays
+    // the full hash cost (the seed's serial path never had caches).
+    let (_, cold) = time(1, 2, || {
+        for t in tables.iter_mut() {
+            t.clear_digest_caches(Half::Upper);
+        }
+        encode(&mut tables, &jobs, threads);
+    });
+    // Warm: mark everything clean, repopulate once, then measure pure
+    // cache-hit encodes.
+    for t in tables.iter_mut() {
+        t.clear_dirty(Half::Upper);
+    }
+    encode(&mut tables, &jobs, threads);
+    let (_, warm) = time(1, 2, || {
+        encode(&mut tables, &jobs, threads);
+    });
+    (cold, warm)
+}
+
+/// 4096-rank staged (BB -> Lustre) JobSim run: the full protocol must
+/// complete at this scale and generation 3 must encode warm.
+fn staged_4096() -> Json {
+    let mut cfg = RunConfig::new(AppKind::Synthetic, 4096).with_staging();
+    cfg.job = "datapath-4096".into();
+    cfg.mem_per_rank = Some(1 << 20);
+    cfg.steps = 0;
+    let mut sim = JobSim::launch(cfg, None).expect("4096-rank staged launch");
+    sim.run_steps(1).expect("step");
+    let g1 = sim.checkpoint().expect("ckpt gen 1");
+    sim.run_steps(1).expect("step");
+    sim.checkpoint().expect("ckpt gen 2");
+    sim.run_steps(1).expect("step");
+    let g3 = sim.checkpoint().expect("ckpt gen 3");
+    assert!(
+        g3.digest_cache_hit_bytes > 0,
+        "4096-rank staged generation 3 must serve clean regions from cache"
+    );
+    println!(
+        "staged 4096: gen1 encode {:.3}s, gen3 encode {:.3}s ({} cache-hit bytes, {} threads)",
+        g1.encode_host_secs, g3.encode_host_secs, g3.digest_cache_hit_bytes, g3.encode_threads
+    );
+    Json::obj()
+        .set("ranks", 4096u64)
+        .set("encode_threads", g3.encode_threads as u64)
+        .set("gen1_encode_host_secs", g1.encode_host_secs)
+        .set("gen3_encode_host_secs", g3.encode_host_secs)
+        .set("gen3_digest_cache_hit_bytes", g3.digest_cache_hit_bytes)
+}
+
+fn main() {
+    let cores = resolve_threads(None);
+    let mut rep = Report::new(
+        "DATAPATH: checkpoint WRITE path host wall-clock (serial vs parallel, cold vs warm)",
+        vec!["ranks", "threads", "cache", "min_secs"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut row = |rep: &mut Report, ranks: usize, threads: usize, cache: &str, secs: f64| {
+        rep.row(vec![
+            ranks.to_string(),
+            threads.to_string(),
+            cache.to_string(),
+            format!("{secs:.4}"),
+        ]);
+        rows.push(
+            Json::obj()
+                .set("ranks", ranks as u64)
+                .set("threads", threads as u64)
+                .set("cache", cache)
+                .set("min_secs", secs),
+        );
+    };
+
+    // Byte-identity spot check at 512 ranks (the property test sweeps the
+    // general case; this pins the bench workload itself).
+    {
+        let jobs = mk_jobs(512);
+        let mut a = mk_tables(512);
+        let mut b = mk_tables(512);
+        let serial = encode(&mut a, &jobs, 1);
+        let par = encode(&mut b, &jobs, cores.max(2));
+        assert_eq!(serial.len(), par.len());
+        for (s, p) in serial.iter().zip(&par) {
+            assert_eq!(s.path, p.path, "wave must stay in rank order");
+            assert_eq!(s.data, p.data, "parallel wave must byte-match serial");
+            assert_eq!(s.recipe, p.recipe, "recipes must match");
+        }
+    }
+
+    let mut speedup_2048 = 0.0;
+    for &ranks in &[512usize, 2048, 4096] {
+        let (ser_cold, ser_warm) = measure(ranks, 1);
+        let (par_cold, par_warm) = measure(ranks, cores);
+        row(&mut rep, ranks, 1, "cold", ser_cold);
+        row(&mut rep, ranks, 1, "warm", ser_warm);
+        row(&mut rep, ranks, cores, "cold", par_cold);
+        row(&mut rep, ranks, cores, "warm", par_warm);
+        if ranks == 2048 {
+            speedup_2048 = ser_cold / par_warm.max(1e-9);
+            if cores >= 2 {
+                assert!(
+                    par_cold <= ser_cold * 1.10,
+                    "2048 ranks: parallel cold encode ({par_cold:.4}s) must not be slower \
+                     than serial ({ser_cold:.4}s)"
+                );
+            }
+            if cores >= 4 {
+                assert!(
+                    speedup_2048 >= 3.0,
+                    "2048 ranks: parallel+warm must be >=3x over the serial cold path \
+                     (got {speedup_2048:.2}x: serial {ser_cold:.4}s, warm parallel {par_warm:.4}s)"
+                );
+            }
+        }
+    }
+    rep.finish();
+
+    let staged = staged_4096();
+
+    let out = Json::obj()
+        .set("bench", "ckpt_datapath")
+        .set("host_cores", cores as u64)
+        .set("state_bytes_per_rank", STATE_BYTES as u64)
+        .set("heap_vlen_per_rank", HEAP_VLEN)
+        .set("chunk_bytes", CHUNK as u64)
+        .set("speedup_2048_serial_cold_to_parallel_warm", speedup_2048)
+        .set("rows", Json::Arr(rows))
+        .set("staged_4096", staged);
+    std::fs::write("BENCH_datapath.json", out.to_string()).expect("write BENCH_datapath.json");
+    println!(
+        "DATAPATH OK ({cores} cores, 2048-rank serial-cold -> parallel-warm speedup {speedup_2048:.2}x; \
+         results in BENCH_datapath.json)"
+    );
+}

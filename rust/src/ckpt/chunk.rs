@@ -151,6 +151,28 @@ pub struct RecipeChunk {
     pub real_len: u64,
 }
 
+impl RecipeChunk {
+    /// Same chunk with its real span moved `delta` bytes later in the
+    /// file. Virtual-only chunks carry no span and are returned unchanged
+    /// — the digest-memoization path uses this pair of helpers to convert
+    /// between file-relative and section-relative offsets.
+    pub(crate) fn shifted_by(mut self, delta: u64) -> Self {
+        if self.real_len > 0 {
+            self.real_off += delta;
+        }
+        self
+    }
+
+    /// Inverse of [`Self::shifted_by`]: real span moved `delta` bytes
+    /// earlier in the file.
+    pub(crate) fn shifted_back(mut self, delta: u64) -> Self {
+        if self.real_len > 0 {
+            self.real_off -= delta;
+        }
+        self
+    }
+}
+
 /// Ordered digest list from which a checkpoint file is reassembled: the
 /// durable tier stores one object per unique digest plus this recipe, and
 /// restart rebuilds the byte-identical encoded image from them even after

@@ -1,0 +1,572 @@
+//! Rank-parallel checkpoint data path with memoized region digests.
+//!
+//! The WRITE phase used to serialize every rank's capture→encode→recipe
+//! pipeline on one host thread — the simulator's own wall-clock bottleneck
+//! past ~512 ranks, even though per-rank capture is embarrassingly
+//! parallel (each rank owns its region table). This module fans the
+//! pipeline across `std::thread::scope` workers:
+//!
+//! * **Capture by reference** — a [`RankSource`] borrows the rank's live
+//!   [`RegionTable`]; the encoder streams payload bytes straight from the
+//!   table into the write buffer (no per-region payload clones, which is
+//!   what the old `CkptImage::capture` path paid).
+//! * **Rank-parallel encode** — ranks are split into contiguous chunks,
+//!   one worker per chunk, and the resulting [`WriteReq`]s concatenate
+//!   back in rank order: the wave handed to the storage engine is
+//!   byte-for-byte the serial wave (`benches/ckpt_datapath.rs` and the
+//!   `prop_parallel_datapath_*` property pin this).
+//! * **Digest memoization** — each region's encoded section (bytes,
+//!   section CRC, recipe chunk digests) is cached in the table
+//!   ([`RegionDigestCache`]), keyed by the dirty bit: a generation that
+//!   dirties 10% of its regions re-hashes ~10% of the bytes and splices
+//!   the rest. Invalidation lives in `mem`: any `get_mut` access and any
+//!   dirty-bit transition drop the entry.
+//!
+//! Worker count comes from `RunConfig::encode_threads`
+//! (`--encode-threads`), defaulting to the host's available parallelism.
+
+use std::time::Instant;
+
+use crate::ckpt::chunk::RecipeChunk;
+use crate::ckpt::{encode_stream, ChunkRecipe, ImageMeta, PayloadSrc, RegionSrc, SavedRegion};
+use crate::fs::WriteReq;
+use crate::mem::{Half, RegionTable};
+use crate::topology::{NodeId, RankId};
+
+/// Memoized encode of one region: the exact section bytes, the section
+/// CRC, and the recipe chunks with real offsets relative to the section
+/// start. Validity is keyed by the table's dirty bits — any mutable access
+/// to the region or dirty-bit transition drops the entry (see
+/// `RegionTable::get_mut` / `RegionTable::clear_dirty`).
+#[derive(Clone, Debug)]
+pub struct RegionDigestCache {
+    /// Chunk granularity the entry was built with.
+    pub chunk_bytes: usize,
+    /// Region virtual length at populate time.
+    pub vlen: u64,
+    /// Encoded payload-kind tag at populate time.
+    pub kind: u8,
+    /// Resident payload bytes at populate time.
+    pub resident: u64,
+    /// Section CRC (folded into the whole-image trailer on a hit).
+    pub section_crc: u32,
+    /// The full encoded section record (metadata + framed payload +
+    /// section CRC) — spliced verbatim on a hit.
+    pub encoded: Vec<u8>,
+    /// Recipe chunks, real offsets relative to the section start. Empty
+    /// when populated by a recipe-less encode; a recipe encode then
+    /// treats the entry as a miss.
+    pub rel_chunks: Vec<RecipeChunk>,
+}
+
+impl RegionDigestCache {
+    /// Does this entry still describe region `r` at granularity
+    /// `chunk_bytes`? (Content equality is what the dirty-bit keying
+    /// guarantees; this only rules out structural drift.)
+    pub(crate) fn matches(&self, r: &RegionSrc<'_>, chunk_bytes: usize) -> bool {
+        self.chunk_bytes == chunk_bytes
+            && self.vlen == r.vlen
+            && self.kind == r.payload.kind()
+            && self.resident == r.payload.resident()
+    }
+}
+
+/// One region's memoization slot, harvested from the table for the
+/// duration of an encode (`RegionTable::take_cache_slots`) and put back
+/// afterwards (`RegionTable::put_cache_slots`).
+#[derive(Debug, Default)]
+pub struct CacheSlot {
+    /// The entry may be consulted: the region was clean at harvest time.
+    pub usable: bool,
+    pub entry: Option<Box<RegionDigestCache>>,
+}
+
+/// Digest-cache counters of one encode.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    /// Virtual bytes whose CRC/digest work was served from cache.
+    pub hit_vbytes: u64,
+    pub hit_regions: u64,
+    /// Regions hashed fresh with their slots (re)populated.
+    pub filled_regions: u64,
+}
+
+/// Everything the encoder needs from one rank's live process state. The
+/// table is borrowed mutably only to harvest and re-plant cache slots;
+/// payload bytes stream out of it by reference.
+pub struct RankSource<'a> {
+    pub table: &'a mut RegionTable,
+    pub step: u64,
+    pub rng_state: [u8; 32],
+    pub upper_fds: Vec<(u32, String)>,
+}
+
+/// Per-rank job description: where the image goes and what rides along.
+pub struct RankJob {
+    pub rank: RankId,
+    pub node: NodeId,
+    /// Destination path of this rank's image.
+    pub path: String,
+    /// Parent full-image path — `Some` captures an incremental image
+    /// (clean regions become fingerprinted parent references).
+    pub parent: Option<String>,
+    /// Owned pseudo-regions appended after the table's upper half (the
+    /// wrapper drain buffer, rank 0's communicator log). Never memoized:
+    /// they change every generation.
+    pub extra_regions: Vec<SavedRegion>,
+}
+
+/// Encode-wave knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct EncodeOpts {
+    /// Chunk granularity (`RunConfig::chunk_bytes`).
+    pub chunk_bytes: usize,
+    /// Worker threads to fan ranks across (1 = the serial path).
+    pub threads: usize,
+    /// Emit the content-addressed [`ChunkRecipe`] per image (staged mode).
+    pub with_recipe: bool,
+}
+
+/// Host-side accounting of one encode wave.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DatapathStats {
+    /// Wall-clock seconds of the whole wave (capture + encode + recipes).
+    pub host_secs: f64,
+    /// Worker threads actually used.
+    pub threads: usize,
+    /// Virtual bytes whose hash/CRC work was served from the digest
+    /// cache — "didn't re-hash", as opposed to the drain's deduped_bytes
+    /// "didn't re-ship".
+    pub cache_hit_bytes: u64,
+    pub cache_hit_regions: u64,
+    pub cache_filled_regions: u64,
+    /// Encoded bytes produced across all ranks.
+    pub encoded_bytes: u64,
+}
+
+/// Resolve the configured worker count: explicit setting, else the host's
+/// available parallelism, never below 1.
+pub fn resolve_threads(requested: Option<usize>) -> usize {
+    requested
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+        .max(1)
+}
+
+/// Capture and encode one rank's image from its live table. This is the
+/// per-rank unit of work the wave fans out; it must stay deterministic in
+/// the rank's own state only (no cross-rank reads) so any worker layout
+/// produces identical bytes.
+fn encode_rank(
+    src: &mut RankSource<'_>,
+    job: &RankJob,
+    opts: &EncodeOpts,
+) -> (WriteReq, CacheStats) {
+    let incremental = job.parent.is_some();
+    let mut slots = src.table.take_cache_slots(Half::Upper);
+    let table: &RegionTable = &*src.table;
+    let mut srcs: Vec<RegionSrc<'_>> = table
+        .half_iter(Half::Upper)
+        .map(|r| RegionSrc {
+            addr: r.addr,
+            vlen: r.len,
+            name: &r.name,
+            payload: if incremental && !r.dirty {
+                PayloadSrc::ParentRef {
+                    fingerprint: r.payload.fingerprint(r.len),
+                }
+            } else {
+                PayloadSrc::of(&r.payload)
+            },
+        })
+        .collect();
+    srcs.extend(job.extra_regions.iter().map(SavedRegion::as_src));
+    let meta = ImageMeta {
+        rank: job.rank,
+        step: src.step,
+        rng_state: &src.rng_state,
+        parent: job.parent.as_deref(),
+        upper_fds: &src.upper_fds,
+    };
+    // Bytes this image carries to storage (ParentRefs are free) — the
+    // virtual size the storage model charges.
+    let write_bytes: u64 = srcs
+        .iter()
+        .filter(|r| !matches!(r.payload, PayloadSrc::ParentRef { .. }))
+        .map(|r| r.vlen)
+        .sum();
+    let mut data = Vec::new();
+    let mut stats = CacheStats::default();
+    let recipe = if opts.with_recipe {
+        let mut rec = ChunkRecipe {
+            chunk_bytes: opts.chunk_bytes as u64,
+            file_vbytes: write_bytes,
+            chunks: Vec::new(),
+        };
+        encode_stream(
+            &mut data,
+            &meta,
+            &srcs,
+            opts.chunk_bytes,
+            Some(&mut rec),
+            &mut slots,
+            &mut stats,
+        );
+        debug_assert!(
+            rec.covers(data.len() as u64),
+            "recipe real spans must tile the encoded image"
+        );
+        debug_assert_eq!(
+            rec.chunks.iter().map(|c| c.vbytes).sum::<u64>(),
+            write_bytes,
+            "recipe virtual bytes must sum to write_bytes"
+        );
+        Some(rec)
+    } else {
+        encode_stream(
+            &mut data,
+            &meta,
+            &srcs,
+            opts.chunk_bytes,
+            None,
+            &mut slots,
+            &mut stats,
+        );
+        None
+    };
+    drop(srcs);
+    src.table.put_cache_slots(Half::Upper, slots);
+    (
+        WriteReq {
+            node: job.node,
+            path: job.path.clone(),
+            virtual_bytes: write_bytes,
+            data,
+            recipe,
+        },
+        stats,
+    )
+}
+
+fn absorb(stats: &mut DatapathStats, req: &WriteReq, cs: CacheStats) {
+    stats.cache_hit_bytes += cs.hit_vbytes;
+    stats.cache_hit_regions += cs.hit_regions;
+    stats.cache_filled_regions += cs.filled_regions;
+    stats.encoded_bytes += req.data.len() as u64;
+}
+
+/// Encode every rank's image, fanning ranks across worker threads, and
+/// return the write wave **in rank order** — byte-for-byte identical to
+/// the serial path regardless of thread count. Each worker owns a
+/// contiguous chunk of ranks (per-rank encodes read only that rank's
+/// state), so concatenating worker outputs in spawn order restores the
+/// original ordering.
+pub fn encode_wave(
+    sources: &mut [RankSource<'_>],
+    jobs: &[RankJob],
+    opts: &EncodeOpts,
+) -> (Vec<WriteReq>, DatapathStats) {
+    assert_eq!(sources.len(), jobs.len(), "one source per job");
+    let t0 = Instant::now();
+    let n = jobs.len();
+    let threads = opts.threads.clamp(1, n.max(1));
+    let mut stats = DatapathStats {
+        threads,
+        ..DatapathStats::default()
+    };
+    let mut reqs: Vec<WriteReq> = Vec::with_capacity(n);
+    if threads <= 1 {
+        for (src, job) in sources.iter_mut().zip(jobs) {
+            let (req, cs) = encode_rank(src, job, opts);
+            absorb(&mut stats, &req, cs);
+            reqs.push(req);
+        }
+    } else {
+        let per = n.div_ceil(threads);
+        let parts: Vec<Vec<(WriteReq, CacheStats)>> = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(threads);
+            let mut rest_src: &mut [RankSource<'_>] = sources;
+            let mut rest_jobs: &[RankJob] = jobs;
+            while !rest_jobs.is_empty() {
+                let take = per.min(rest_jobs.len());
+                let (src_chunk, src_tail) = rest_src.split_at_mut(take);
+                let (job_chunk, job_tail) = rest_jobs.split_at(take);
+                rest_src = src_tail;
+                rest_jobs = job_tail;
+                handles.push(scope.spawn(move || {
+                    src_chunk
+                        .iter_mut()
+                        .zip(job_chunk)
+                        .map(|(src, job)| encode_rank(src, job, opts))
+                        .collect::<Vec<_>>()
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("encode worker panicked"))
+                .collect()
+        });
+        for part in parts {
+            for (req, cs) in part {
+                absorb(&mut stats, &req, cs);
+                reqs.push(req);
+            }
+        }
+    }
+    stats.host_secs = t0.elapsed().as_secs_f64();
+    (reqs, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckpt::CkptImage;
+    use crate::mem::{MemRegion, Payload};
+
+    const CB: usize = 4096;
+
+    fn mk_table(state: Vec<u8>) -> RegionTable {
+        let mut t = RegionTable::new();
+        t.insert(MemRegion::new(
+            0x1000_0000_0000,
+            state.len() as u64,
+            Half::Upper,
+            "state",
+            Payload::Real(state),
+        ))
+        .unwrap();
+        t.insert(MemRegion::new(
+            0x2000_0000_0000,
+            1 << 20,
+            Half::Upper,
+            "heap",
+            Payload::Pattern(42),
+        ))
+        .unwrap();
+        t
+    }
+
+    fn mk_jobs(n: usize, parent: Option<&str>) -> Vec<RankJob> {
+        (0..n)
+            .map(|i| RankJob {
+                rank: RankId(i as u32),
+                node: NodeId((i / 4) as u32),
+                path: format!("job/r{i:05}.mana"),
+                parent: parent.map(str::to_string),
+                extra_regions: Vec::new(),
+            })
+            .collect()
+    }
+
+    fn wave(
+        tables: &mut [RegionTable],
+        jobs: &[RankJob],
+        threads: usize,
+        with_recipe: bool,
+    ) -> (Vec<WriteReq>, DatapathStats) {
+        let mut sources: Vec<RankSource<'_>> = tables
+            .iter_mut()
+            .map(|t| RankSource {
+                table: t,
+                step: 7,
+                rng_state: [3u8; 32],
+                upper_fds: vec![(5, "out.log".into())],
+            })
+            .collect();
+        encode_wave(
+            &mut sources,
+            jobs,
+            &EncodeOpts {
+                chunk_bytes: CB,
+                threads,
+                with_recipe,
+            },
+        )
+    }
+
+    #[test]
+    fn parallel_wave_is_byte_identical_to_serial() {
+        let mk = || -> Vec<RegionTable> {
+            (0..9)
+                .map(|i| mk_table(vec![i as u8 + 1; 3000 + 17 * i]))
+                .collect()
+        };
+        let jobs = mk_jobs(9, None);
+        let (serial, _) = wave(&mut mk(), &jobs, 1, true);
+        let (par, pstats) = wave(&mut mk(), &jobs, 4, true);
+        assert_eq!(pstats.threads, 4);
+        assert_eq!(serial.len(), par.len());
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a.path, b.path, "wave order must be rank order");
+            assert_eq!(a.data, b.data, "parallel encode must be byte-identical");
+            assert_eq!(a.recipe, b.recipe, "recipes must be identical");
+            assert_eq!(a.virtual_bytes, b.virtual_bytes);
+        }
+    }
+
+    #[test]
+    fn wave_matches_legacy_capture_encode() {
+        // The view-based path must reproduce CkptImage::capture +
+        // encode_with_recipe byte-for-byte, extras included.
+        let mut table = mk_table(vec![9u8; 5000]);
+        let extra = SavedRegion {
+            addr: 0x6f00_0000_0000,
+            vlen: 64,
+            name: "mana.msg_buffer".into(),
+            payload: crate::ckpt::SavedPayload::Full(Payload::Real(vec![7u8; 64])),
+        };
+        let mut img =
+            CkptImage::capture(RankId(0), 7, [3u8; 32], vec![(5, "out.log".into())], &table);
+        img.regions.push(extra.clone());
+        let mut want = Vec::new();
+        let want_rec = img.encode_with_recipe(&mut want, CB);
+
+        let mut jobs = mk_jobs(1, None);
+        jobs[0].extra_regions.push(extra);
+        let (reqs, _) = wave(std::slice::from_mut(&mut table), &jobs, 1, true);
+        assert_eq!(reqs[0].data, want);
+        assert_eq!(reqs[0].recipe.as_ref(), Some(&want_rec));
+        assert_eq!(reqs[0].virtual_bytes, img.write_bytes());
+    }
+
+    #[test]
+    fn warm_cache_encode_equals_cold_and_hits() {
+        let mut tables = vec![mk_table(vec![4u8; 4096]), mk_table(vec![5u8; 600])];
+        let jobs = mk_jobs(2, None);
+        let (cold, cstats) = wave(&mut tables, &jobs, 1, true);
+        assert_eq!(cstats.cache_hit_regions, 0, "first encode is all misses");
+        assert_eq!(
+            cstats.cache_filled_regions, 0,
+            "dirty regions must not populate entries they could never use"
+        );
+        // Mark everything clean; the next encode populates the slots...
+        for t in tables.iter_mut() {
+            t.clear_dirty(Half::Upper);
+        }
+        let (repop, rstats) = wave(&mut tables, &jobs, 1, true);
+        assert_eq!(rstats.cache_hit_regions, 0, "no entries existed yet");
+        assert_eq!(rstats.cache_filled_regions, 4, "clean regions populate");
+        // ...and the third encode runs fully warm.
+        let (warm, wstats) = wave(&mut tables, &jobs, 2, true);
+        assert_eq!(
+            wstats.cache_hit_regions, 4,
+            "every clean region must be served from cache"
+        );
+        assert!(wstats.cache_hit_bytes > 0);
+        for ((a, b), c) in cold.iter().zip(&repop).zip(&warm) {
+            assert_eq!(a.data, b.data);
+            assert_eq!(b.data, c.data, "warm encode must equal cold bitwise");
+            assert_eq!(a.recipe, c.recipe);
+        }
+    }
+
+    #[test]
+    fn dirty_region_is_rehashed_clean_region_is_not() {
+        let mut tables = vec![mk_table(vec![1u8; 2048])];
+        let jobs = mk_jobs(1, None);
+        wave(&mut tables, &jobs, 1, true);
+        for t in tables.iter_mut() {
+            t.clear_dirty(Half::Upper);
+        }
+        wave(&mut tables, &jobs, 1, true); // repopulate clean
+        // Dirty the state region only.
+        {
+            let r = tables[0].get_mut("state").unwrap();
+            r.payload = Payload::Real(vec![2u8; 2048]);
+            r.dirty = true;
+        }
+        let (reqs, stats) = wave(&mut tables, &jobs, 1, true);
+        assert_eq!(stats.cache_hit_regions, 1, "only the clean heap hits");
+        // The fresh bytes must reflect the new content.
+        let img = CkptImage::decode(&reqs[0].data).unwrap();
+        let state = img.regions.iter().find(|r| r.name == "state").unwrap();
+        assert_eq!(
+            state.payload,
+            crate::ckpt::SavedPayload::Full(Payload::Real(vec![2u8; 2048]))
+        );
+    }
+
+    #[test]
+    fn incremental_wave_matches_legacy_capture_incremental() {
+        let mut table = mk_table(vec![8u8; 1500]);
+        table.clear_dirty(Half::Upper);
+        {
+            let r = table.get_mut("state").unwrap();
+            r.payload = Payload::Real(vec![9u8; 1500]);
+            r.dirty = true;
+        }
+        let img = CkptImage::capture_incremental(
+            RankId(0),
+            7,
+            [3u8; 32],
+            vec![(5, "out.log".into())],
+            &table,
+            "job/parent.mana",
+        );
+        let mut want = Vec::new();
+        img.encode_into_sized(&mut want, CB);
+
+        let jobs = mk_jobs(1, Some("job/parent.mana"));
+        let (reqs, _) = wave(std::slice::from_mut(&mut table), &jobs, 1, false);
+        assert_eq!(reqs[0].data, want, "incremental capture must match legacy");
+        assert_eq!(reqs[0].virtual_bytes, img.write_bytes());
+        // And a cached full section must not leak into the ParentRef
+        // encode of a later incremental generation.
+        let (again, stats) = wave(std::slice::from_mut(&mut table), &jobs, 1, false);
+        assert_eq!(again[0].data, want);
+        assert_eq!(stats.cache_hit_regions, 0, "ParentRefs never hit the cache");
+    }
+
+    #[test]
+    fn full_cache_survives_incremental_generations() {
+        // full (populate) -> clear -> full (populate clean) -> incremental
+        // (ParentRefs, cache untouched) -> full again must run warm.
+        let mut tables = vec![mk_table(vec![6u8; 2222])];
+        let full_jobs = mk_jobs(1, None);
+        let inc_jobs = mk_jobs(1, Some("job/parent.mana"));
+        wave(&mut tables, &full_jobs, 1, true);
+        for t in tables.iter_mut() {
+            t.clear_dirty(Half::Upper);
+        }
+        let (full_a, _) = wave(&mut tables, &full_jobs, 1, true);
+        wave(&mut tables, &inc_jobs, 1, true);
+        let (full_b, stats) = wave(&mut tables, &full_jobs, 1, true);
+        assert_eq!(stats.cache_hit_regions, 2, "full encode after incremental is warm");
+        assert_eq!(full_a[0].data, full_b[0].data);
+    }
+
+    #[test]
+    fn stale_digest_cache_is_not_silent() {
+        // Model a broken invalidation path: plant table A's cache entry
+        // into table B (same shape, different content) and encode B. The
+        // stale bytes must surface as the wrong region content — which a
+        // fingerprint-identical-restart test catches — never as a quietly
+        // self-healed encode.
+        let mut ta = mk_table(vec![1u8; 256]);
+        let mut tb = mk_table(vec![2u8; 256]);
+        let jobs = mk_jobs(1, None);
+        ta.clear_dirty(Half::Upper); // clean, so the encode populates caches
+        wave(std::slice::from_mut(&mut ta), &jobs, 1, true);
+        let stale = ta.get("state").unwrap().digest_cache().unwrap().clone();
+        tb.clear_dirty(Half::Upper);
+        tb.inject_digest_cache("state", stale);
+        let (reqs, stats) = wave(std::slice::from_mut(&mut tb), &jobs, 1, true);
+        assert!(stats.cache_hit_regions >= 1, "the stale entry must be consulted");
+        let img = CkptImage::decode(&reqs[0].data).unwrap();
+        let state = img.regions.iter().find(|r| r.name == "state").unwrap();
+        assert_eq!(
+            state.payload,
+            crate::ckpt::SavedPayload::Full(Payload::Real(vec![1u8; 256])),
+            "a stale cache serves stale bytes — detectably wrong, not silent"
+        );
+        // The restored table would fingerprint differently from the live
+        // one: exactly the mismatch the C/R determinism tests assert on.
+        assert_ne!(
+            state.to_region().fingerprint(),
+            tb.get("state").unwrap().fingerprint()
+        );
+    }
+}

@@ -35,6 +35,7 @@
 //! the parent (verifying the fingerprint).
 
 pub mod chunk;
+pub mod datapath;
 pub mod interval;
 pub mod manifest;
 
@@ -43,6 +44,8 @@ use std::fmt;
 use crate::mem::{Half, MemRegion, Payload, RegionTable};
 use crate::topology::RankId;
 use crate::util::crc32;
+
+use self::datapath::{CacheSlot, CacheStats, RegionDigestCache};
 
 pub use chunk::ChunkRecipe;
 
@@ -96,28 +99,297 @@ impl SavedRegion {
             }
         }
     }
+
+    /// Borrowed view of this record for the streaming encoder.
+    pub fn as_src(&self) -> RegionSrc<'_> {
+        RegionSrc {
+            addr: self.addr,
+            vlen: self.vlen,
+            name: &self.name,
+            payload: PayloadSrc::of_saved(&self.payload),
+        }
+    }
+}
+
+// --------------------------------------------------- encoder source views
+//
+// The write hot path captures by reference (Cow-style): the sim's live
+// region table is the backing store until the bytes land in the write
+// buffer, so serializing a rank never clones its payloads. Both
+// [`CkptImage::encode_into`] (owned regions) and the rank-parallel
+// [`datapath`] (live tables) funnel into the same [`encode_stream`]
+// engine, which is what guarantees the two paths are byte-identical.
+
+/// Borrowed payload contents for the streaming encoder.
+#[derive(Clone, Copy, Debug)]
+pub enum PayloadSrc<'a> {
+    Zero,
+    Pattern(u64),
+    Real(&'a [u8]),
+    ParentRef { fingerprint: u64 },
+}
+
+impl<'a> PayloadSrc<'a> {
+    /// View a live region payload (full capture).
+    pub fn of(p: &'a Payload) -> Self {
+        match p {
+            Payload::Zero => PayloadSrc::Zero,
+            Payload::Pattern(seed) => PayloadSrc::Pattern(*seed),
+            Payload::Real(data) => PayloadSrc::Real(data),
+        }
+    }
+
+    fn of_saved(p: &'a SavedPayload) -> Self {
+        match p {
+            SavedPayload::Full(p) => Self::of(p),
+            SavedPayload::ParentRef { fingerprint } => PayloadSrc::ParentRef {
+                fingerprint: *fingerprint,
+            },
+        }
+    }
+
+    /// Encoded payload-kind tag (part of the digest-cache validity key).
+    pub(crate) fn kind(&self) -> u8 {
+        match self {
+            PayloadSrc::Zero => 0,
+            PayloadSrc::Pattern(_) => 1,
+            PayloadSrc::Real(_) => 2,
+            PayloadSrc::ParentRef { .. } => 3,
+        }
+    }
+
+    /// Resident (real) payload bytes.
+    pub(crate) fn resident(&self) -> u64 {
+        match self {
+            PayloadSrc::Real(data) => data.len() as u64,
+            _ => 0,
+        }
+    }
+}
+
+/// Borrowed region record (one table row or extra pseudo-region).
+#[derive(Clone, Copy, Debug)]
+pub struct RegionSrc<'a> {
+    pub addr: u64,
+    pub vlen: u64,
+    pub name: &'a str,
+    pub payload: PayloadSrc<'a>,
+}
+
+/// Image header fields the encoder needs besides the regions.
+#[derive(Clone, Copy, Debug)]
+pub struct ImageMeta<'a> {
+    pub rank: RankId,
+    pub step: u64,
+    pub rng_state: &'a [u8; 32],
+    /// Parent full-image path (`Some` marks an incremental image).
+    pub parent: Option<&'a str>,
+    pub upper_fds: &'a [(u32, String)],
+}
+
+/// Exact encoded size of an image built from `regions` — the write path
+/// reserves once and never reallocates mid-encode.
+fn encoded_size_src(meta: &ImageMeta<'_>, regions: &[RegionSrc<'_>], chunk_bytes: usize) -> usize {
+    let mut n = 8 + 4 + 4 + 8 + 32; // magic..rng
+    n += 4 + meta.parent.map_or(0, str::len);
+    n += 4;
+    for (_, name) in meta.upper_fds {
+        n += 4 + 4 + name.len();
+    }
+    n += 4;
+    for r in regions {
+        n += 8 + 8 + 4 + r.name.len() + 1;
+        n += match r.payload {
+            PayloadSrc::Zero => 0,
+            PayloadSrc::Pattern(_) => 8,
+            PayloadSrc::Real(data) => chunk::encoded_len(data.len(), chunk_bytes),
+            PayloadSrc::ParentRef { .. } => 8,
+        };
+        n += 4; // section crc
+    }
+    n + 4 // trailer
+}
+
+/// The streaming image encoder every write path funnels through: append
+/// the image described by (`meta`, `regions`) to `out`, optionally
+/// recording the content-addressed [`ChunkRecipe`] as encoding proceeds.
+///
+/// `slots` are the per-region digest-memoization slots, parallel to the
+/// *first* `slots.len()` entries of `regions` (extra pseudo-regions carry
+/// no slot and always encode fresh; an empty slice disables memoization).
+/// A usable slot whose cached section still matches the region replays
+/// its encoded bytes, section CRC and chunk digests without re-hashing a
+/// single payload byte; a miss re-encodes and — for regions that were
+/// clean at harvest time — repopulates the slot (an entry built for a
+/// dirty region could never be consulted, so none is made).
+pub(crate) fn encode_stream(
+    out: &mut Vec<u8>,
+    meta: &ImageMeta<'_>,
+    regions: &[RegionSrc<'_>],
+    chunk_bytes: usize,
+    mut recipe: Option<&mut ChunkRecipe>,
+    slots: &mut [CacheSlot],
+    stats: &mut CacheStats,
+) {
+    assert!(
+        chunk_bytes > 0 && chunk_bytes <= chunk::MAX_CHUNK_BYTES,
+        "chunk_bytes {chunk_bytes} out of range"
+    );
+    let base = out.len();
+    out.reserve(encoded_size_src(meta, regions, chunk_bytes));
+    out.extend_from_slice(MAGIC);
+    put_u32(out, VERSION);
+    put_u32(out, meta.rank.0);
+    put_u64(out, meta.step);
+    out.extend_from_slice(meta.rng_state);
+    put_str(out, meta.parent.unwrap_or(""));
+    put_u32(out, meta.upper_fds.len() as u32);
+    for (fd, name) in meta.upper_fds {
+        put_u32(out, *fd);
+        put_str(out, name);
+    }
+    put_u32(out, regions.len() as u32);
+    // Trailer covers header + every section CRC (perf: payload bytes
+    // are hashed exactly once — by their chunk or section CRC — and
+    // any corruption still lands in some CRC).
+    let mut trailer = crc32::Hasher::new();
+    trailer.update(&out[base..]);
+    if let Some(rec) = recipe.as_deref_mut() {
+        // Header chunk: zero virtual bytes, re-ships every generation
+        // (step/rng change), but it is ~100 real bytes.
+        push_meta_chunk(rec, base, base, out);
+    }
+    for (i, r) in regions.iter().enumerate() {
+        let start = out.len();
+        let want_recipe = recipe.is_some();
+        // Digest memoization: a clean region whose cached section still
+        // matches replays bytes + CRC + digests with zero hash work. An
+        // entry populated by a recipe-less encode has no chunk digests
+        // and must not serve a recipe encode.
+        let hit = slots.get(i).and_then(|slot| {
+            if !slot.usable {
+                return None;
+            }
+            let c = slot.entry.as_deref()?;
+            (c.matches(r, chunk_bytes) && (!want_recipe || !c.rel_chunks.is_empty()))
+                .then_some(c)
+        });
+        if let Some(c) = hit {
+            out.extend_from_slice(&c.encoded);
+            trailer.update(&c.section_crc.to_le_bytes());
+            if let Some(rec) = recipe.as_deref_mut() {
+                let delta = (start - base) as u64;
+                for ch in &c.rel_chunks {
+                    rec.chunks.push(ch.shifted_by(delta));
+                }
+            }
+            stats.hit_vbytes += r.vlen;
+            stats.hit_regions += 1;
+            continue;
+        }
+        let chunks_before = recipe.as_deref().map(|rec| rec.chunks.len());
+        put_u64(out, r.addr);
+        put_u64(out, r.vlen);
+        put_str(out, r.name);
+        let crc = match r.payload {
+            PayloadSrc::Zero => {
+                out.push(0);
+                crc32::hash(&out[start..])
+            }
+            PayloadSrc::Pattern(seed) => {
+                out.push(1);
+                put_u64(out, seed);
+                crc32::hash(&out[start..])
+            }
+            PayloadSrc::Real(data) => {
+                // Chunk-framed: the section CRC covers the record
+                // metadata and every chunk CRC; chunk bytes are
+                // covered by their own CRCs.
+                out.push(2);
+                let mut sec = crc32::Hasher::new();
+                sec.update(&out[start..]);
+                chunk::write_chunked(out, data, chunk_bytes, &mut sec);
+                sec.finalize()
+            }
+            PayloadSrc::ParentRef { fingerprint } => {
+                out.push(3);
+                put_u64(out, fingerprint);
+                crc32::hash(&out[start..])
+            }
+        };
+        put_u32(out, crc);
+        trailer.update(&crc.to_le_bytes());
+        if let Some(rec) = recipe.as_deref_mut() {
+            push_region_chunks(rec, r, base, start, out, chunk_bytes);
+        }
+        // Populate the slot for the next generation — but only for a
+        // region that was *clean* at harvest time: an entry built while
+        // dirty could never be consulted (unusable now, dropped by the
+        // dirty→clean transition in clear_dirty later), so cloning the
+        // section for it would be pure dead work. ParentRef records never
+        // clobber a cached Full section either: the full cache stays
+        // valid while the region stays clean, so it serves the next
+        // *full* checkpoint warm even across incremental ones.
+        if !matches!(r.payload, PayloadSrc::ParentRef { .. }) {
+            if let Some(slot) = slots.get_mut(i).filter(|s| s.usable) {
+                let rel_chunks: Vec<chunk::RecipeChunk> =
+                    match (chunks_before, recipe.as_deref()) {
+                        (Some(k0), Some(rec)) => {
+                            let delta = (start - base) as u64;
+                            rec.chunks[k0..]
+                                .iter()
+                                .map(|ch| ch.shifted_back(delta))
+                                .collect()
+                        }
+                        _ => Vec::new(),
+                    };
+                slot.entry = Some(Box::new(RegionDigestCache {
+                    chunk_bytes,
+                    vlen: r.vlen,
+                    kind: r.payload.kind(),
+                    resident: r.payload.resident(),
+                    section_crc: crc,
+                    encoded: out[start..].to_vec(),
+                    rel_chunks,
+                }));
+                stats.filled_regions += 1;
+            }
+        }
+    }
+    let tstart = out.len();
+    put_u32(out, trailer.finalize());
+    if let Some(rec) = recipe.as_deref_mut() {
+        push_meta_chunk(rec, base, tstart, out);
+    }
 }
 
 /// Resolve an incremental image against its parent full image, producing a
-/// fully-materialized image. Fingerprints of referenced regions are
-/// verified (a mismatch means the parent is not the image this incremental
-/// was taken against).
+/// fully-materialized image. Both images are consumed: the incremental's
+/// own dirty payloads stay in place and referenced payloads are *moved*
+/// out of the parent, so resolving a ParentRef-heavy image duplicates no
+/// payload bytes (the restart path used to clone the whole image first).
+/// Fingerprints of referenced regions are verified (a mismatch means the
+/// parent is not the image this incremental was taken against).
 pub fn resolve_incremental(
-    img: &CkptImage,
-    parent: &CkptImage,
+    mut img: CkptImage,
+    parent: CkptImage,
 ) -> Result<CkptImage, ImageError> {
-    let mut out = img.clone();
-    out.parent = None;
-    for r in &mut out.regions {
+    img.parent = None;
+    let mut parent_regions = parent.regions;
+    for r in &mut img.regions {
         if let SavedPayload::ParentRef { fingerprint } = r.payload {
-            let src = parent
-                .regions
-                .iter()
+            let src = parent_regions
+                .iter_mut()
                 .find(|p| p.name == r.name)
                 .ok_or_else(|| ImageError::CrcMismatch {
                     section: format!("{}: missing in parent", r.name),
                 })?;
-            let SavedPayload::Full(ref payload) = src.payload else {
+            // Move the payload out, leaving a consumed marker behind — a
+            // duplicate reference to the same parent region would then
+            // fail the materialization check instead of silently aliasing.
+            let taken =
+                std::mem::replace(&mut src.payload, SavedPayload::ParentRef { fingerprint: 0 });
+            let SavedPayload::Full(payload) = taken else {
                 return Err(ImageError::CrcMismatch {
                     section: format!("{}: parent not materialized", r.name),
                 });
@@ -127,10 +399,10 @@ pub fn resolve_incremental(
                     section: format!("{}: parent content drifted", r.name),
                 });
             }
-            r.payload = SavedPayload::Full(payload.clone());
+            r.payload = SavedPayload::Full(payload);
         }
     }
-    Ok(out)
+    Ok(img)
 }
 
 /// Image decode/validate failures.
@@ -238,27 +510,18 @@ impl CkptImage {
     // ------------------------------------------------------------- encode
 
     /// Exact encoded size (avoids reallocation in the write hot path).
+    /// Delegates to the view-based [`encoded_size_src`] so the size math
+    /// and the encoder share one definition of the wire format.
     fn encoded_size(&self, chunk_bytes: usize) -> usize {
-        let mut n = 8 + 4 + 4 + 8 + 32; // magic..rng
-        n += 4 + self.parent.as_deref().map_or(0, str::len);
-        n += 4;
-        for (_, name) in &self.upper_fds {
-            n += 4 + 4 + name.len();
-        }
-        n += 4;
-        for r in &self.regions {
-            n += 8 + 8 + 4 + r.name.len() + 1;
-            n += match &r.payload {
-                SavedPayload::Full(Payload::Zero) => 0,
-                SavedPayload::Full(Payload::Pattern(_)) => 8,
-                SavedPayload::Full(Payload::Real(d)) => {
-                    chunk::encoded_len(d.len(), chunk_bytes)
-                }
-                SavedPayload::ParentRef { .. } => 8,
-            };
-            n += 4; // section crc
-        }
-        n + 4 // trailer
+        let meta = ImageMeta {
+            rank: self.rank,
+            step: self.step,
+            rng_state: &self.rng_state,
+            parent: self.parent.as_deref(),
+            upper_fds: &self.upper_fds,
+        };
+        let srcs: Vec<RegionSrc<'_>> = self.regions.iter().map(SavedRegion::as_src).collect();
+        encoded_size_src(&meta, &srcs, chunk_bytes)
     }
 
     pub fn encode(&self) -> Vec<u8> {
@@ -305,86 +568,36 @@ impl CkptImage {
 
     /// Streaming encoder: append the image to `out` (callers pre-reserve
     /// via [`Self::encoded_size`] math or reuse one buffer across ranks).
-    /// `Real` payload bytes flow from the live region straight into `out`
-    /// in CRC'd fixed-size chunks — no intermediate whole-image buffer.
+    /// `Real` payload bytes flow from the region straight into `out` in
+    /// CRC'd fixed-size chunks — no intermediate whole-image buffer.
     /// With `recipe`, per-chunk content digests are recorded as encoding
     /// proceeds (payload bytes are digested exactly once, in place).
+    /// Delegates to [`encode_stream`], the same engine the rank-parallel
+    /// [`datapath`] drives from live region tables — the serial/parallel
+    /// byte-identity guarantee rests on this shared implementation.
     fn encode_impl(
         &self,
         out: &mut Vec<u8>,
         chunk_bytes: usize,
-        mut recipe: Option<&mut ChunkRecipe>,
+        recipe: Option<&mut ChunkRecipe>,
     ) {
-        assert!(
-            chunk_bytes > 0 && chunk_bytes <= chunk::MAX_CHUNK_BYTES,
-            "chunk_bytes {chunk_bytes} out of range"
+        let meta = ImageMeta {
+            rank: self.rank,
+            step: self.step,
+            rng_state: &self.rng_state,
+            parent: self.parent.as_deref(),
+            upper_fds: &self.upper_fds,
+        };
+        let srcs: Vec<RegionSrc<'_>> = self.regions.iter().map(SavedRegion::as_src).collect();
+        encode_stream(
+            out,
+            &meta,
+            &srcs,
+            chunk_bytes,
+            recipe,
+            &mut [],
+            &mut CacheStats::default(),
         );
-        let base = out.len();
-        out.reserve(self.encoded_size(chunk_bytes));
-        out.extend_from_slice(MAGIC);
-        put_u32(out, VERSION);
-        put_u32(out, self.rank.0);
-        put_u64(out, self.step);
-        out.extend_from_slice(&self.rng_state);
-        put_str(out, self.parent.as_deref().unwrap_or(""));
-        put_u32(out, self.upper_fds.len() as u32);
-        for (fd, name) in &self.upper_fds {
-            put_u32(out, *fd);
-            put_str(out, name);
-        }
-        put_u32(out, self.regions.len() as u32);
-        // Trailer covers header + every section CRC (perf: payload bytes
-        // are hashed exactly once — by their chunk or section CRC — and
-        // any corruption still lands in some CRC).
-        let mut trailer = crc32::Hasher::new();
-        trailer.update(&out[base..]);
-        if let Some(rec) = recipe.as_deref_mut() {
-            // Header chunk: zero virtual bytes, re-ships every generation
-            // (step/rng change), but it is ~100 real bytes.
-            push_meta_chunk(rec, base, base, out);
-        }
-        for r in &self.regions {
-            let start = out.len();
-            put_u64(out, r.addr);
-            put_u64(out, r.vlen);
-            put_str(out, &r.name);
-            let crc = match &r.payload {
-                SavedPayload::Full(Payload::Zero) => {
-                    out.push(0);
-                    crc32::hash(&out[start..])
-                }
-                SavedPayload::Full(Payload::Pattern(seed)) => {
-                    out.push(1);
-                    put_u64(out, *seed);
-                    crc32::hash(&out[start..])
-                }
-                SavedPayload::Full(Payload::Real(data)) => {
-                    // Chunk-framed: the section CRC covers the record
-                    // metadata and every chunk CRC; chunk bytes are
-                    // covered by their own CRCs.
-                    out.push(2);
-                    let mut sec = crc32::Hasher::new();
-                    sec.update(&out[start..]);
-                    chunk::write_chunked(out, data, chunk_bytes, &mut sec);
-                    sec.finalize()
-                }
-                SavedPayload::ParentRef { fingerprint } => {
-                    out.push(3);
-                    put_u64(out, *fingerprint);
-                    crc32::hash(&out[start..])
-                }
-            };
-            put_u32(out, crc);
-            trailer.update(&crc.to_le_bytes());
-            if let Some(rec) = recipe.as_deref_mut() {
-                push_region_chunks(rec, r, base, start, out, chunk_bytes);
-            }
-        }
-        let tstart = out.len();
-        put_u32(out, trailer.finalize());
-        if let Some(rec) = recipe.as_deref_mut() {
-            push_meta_chunk(rec, base, tstart, out);
-        }
     }
 
     // ------------------------------------------------------------- decode
@@ -539,7 +752,7 @@ fn push_meta_chunk(rec: &mut ChunkRecipe, base: usize, span_start: usize, out: &
 ///   always reproduce equal stored bytes.
 fn push_region_chunks(
     rec: &mut ChunkRecipe,
-    r: &SavedRegion,
+    r: &RegionSrc<'_>,
     base: usize,
     start: usize,
     out: &[u8],
@@ -547,8 +760,8 @@ fn push_region_chunks(
 ) {
     let end = out.len();
     let span = |a: usize, b: usize| ((a - base) as u64, (b - a) as u64);
-    match &r.payload {
-        SavedPayload::Full(Payload::Zero) => {
+    match r.payload {
+        PayloadSrc::Zero => {
             let n = chunk_count_virtual(r.vlen, chunk_bytes);
             for i in 0..n {
                 let vb = chunk_vb(r.vlen, i, chunk_bytes);
@@ -568,7 +781,7 @@ fn push_region_chunks(
                 });
             }
         }
-        SavedPayload::Full(Payload::Pattern(seed)) => {
+        PayloadSrc::Pattern(seed) => {
             let n = chunk_count_virtual(r.vlen, chunk_bytes);
             for i in 0..n {
                 let vb = chunk_vb(r.vlen, i, chunk_bytes);
@@ -589,7 +802,7 @@ fn push_region_chunks(
                 });
             }
         }
-        SavedPayload::Full(Payload::Real(data)) => {
+        PayloadSrc::Real(data) => {
             // Framed data chunks align with the recipe chunks; the framing
             // after the record metadata is: n_chunks u32, then per chunk
             // [len u32][bytes][crc u32], then the section CRC u32.
@@ -654,7 +867,7 @@ fn push_region_chunks(
                 }
             }
         }
-        SavedPayload::ParentRef { fingerprint } => {
+        PayloadSrc::ParentRef { fingerprint } => {
             // Zero virtual bytes (write_bytes excludes ParentRefs); one
             // chunk carrying the ~30-byte reference record.
             let (real_off, real_len) = span(start, end);
@@ -937,7 +1150,7 @@ mod tests {
         let decoded = CkptImage::decode(&inc.encode()).unwrap();
         assert_eq!(decoded, inc);
 
-        let resolved = resolve_incremental(&decoded, &full).unwrap();
+        let resolved = resolve_incremental(decoded, full).unwrap();
         assert!(resolved.parent.is_none());
         let heap = resolved.regions.iter().find(|r| r.name == "heap").unwrap();
         assert_eq!(heap.payload, SavedPayload::Full(Payload::Pattern(9)));
@@ -958,7 +1171,7 @@ mod tests {
             .find(|r| r.name == "heap")
             .unwrap()
             .payload = SavedPayload::Full(Payload::Pattern(1234));
-        let err = resolve_incremental(&inc, &full).unwrap_err();
+        let err = resolve_incremental(inc, full).unwrap_err();
         assert!(err.to_string().contains("drifted"), "{err}");
     }
 
@@ -978,7 +1191,7 @@ mod tests {
             .find(|r| r.name == "heap")
             .unwrap()
             .payload = SavedPayload::ParentRef { fingerprint: 1 };
-        let err = resolve_incremental(&inc, &bad_parent).unwrap_err();
+        let err = resolve_incremental(inc, bad_parent).unwrap_err();
         assert!(err.to_string().contains("not materialized"), "{err}");
     }
 
@@ -1144,6 +1357,63 @@ mod tests {
         let inc =
             CkptImage::capture_incremental(RankId(0), 9, [0; 32], vec![], &table, "p");
         full.regions.retain(|r| r.name != "heap");
-        assert!(resolve_incremental(&inc, &full).is_err());
+        assert!(resolve_incremental(inc, full).is_err());
+    }
+
+    #[test]
+    fn resolve_moves_payloads_without_duplication() {
+        // ParentRef-heavy incremental: the big clean region rides as a
+        // reference. Resolving must *move* buffers (parent payloads lift
+        // out of the parent, dirty payloads stay in place) — asserted by
+        // heap-pointer identity, which a clone-based resolve cannot keep.
+        let mut t = RegionTable::new();
+        t.insert(MemRegion::new(
+            0x1000,
+            1 << 20,
+            Half::Upper,
+            "big",
+            Payload::Real(vec![5u8; 1 << 20]),
+        ))
+        .unwrap();
+        t.insert(MemRegion::new(
+            0x9000_0000,
+            64,
+            Half::Upper,
+            "state",
+            Payload::Real(vec![1; 64]),
+        ))
+        .unwrap();
+        let full = CkptImage::capture(RankId(0), 5, [0; 32], vec![], &t);
+        t.clear_dirty(Half::Upper);
+        let r = t.get_mut("state").unwrap();
+        r.payload = Payload::Real(vec![2; 64]);
+        r.dirty = true;
+        let inc =
+            CkptImage::capture_incremental(RankId(0), 9, [0; 32], vec![], &t, "p");
+
+        let payload_ptr = |img: &CkptImage, name: &str| match &img
+            .regions
+            .iter()
+            .find(|r| r.name == name)
+            .unwrap()
+            .payload
+        {
+            SavedPayload::Full(Payload::Real(v)) => v.as_ptr(),
+            other => panic!("{name}: expected materialized Real payload, got {other:?}"),
+        };
+        let big_ptr = payload_ptr(&full, "big");
+        let state_ptr = payload_ptr(&inc, "state");
+
+        let resolved = resolve_incremental(inc, full).unwrap();
+        assert_eq!(
+            payload_ptr(&resolved, "big"),
+            big_ptr,
+            "referenced parent payload must move, not copy"
+        );
+        assert_eq!(
+            payload_ptr(&resolved, "state"),
+            state_ptr,
+            "the incremental's own dirty payload must stay in place"
+        );
     }
 }

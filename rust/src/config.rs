@@ -182,6 +182,11 @@ pub struct RunConfig {
     /// fanout-`f` tree, each phase a broadcast-down + reduce-up, the root
     /// handling only O(f) messages per phase.
     pub coord_fanout: Option<u32>,
+    /// Worker threads the checkpoint WRITE path fans ranks across
+    /// (`--encode-threads`; the parallel data path is byte-identical to
+    /// the serial one). `None` = the host's available parallelism;
+    /// `Some(1)` forces the serial path.
+    pub encode_threads: Option<usize>,
 }
 
 impl RunConfig {
@@ -205,6 +210,7 @@ impl RunConfig {
             incremental: false,
             chunk_bytes: DEFAULT_CHUNK_BYTES,
             coord_fanout: None,
+            encode_threads: None,
         }
     }
 
@@ -261,6 +267,15 @@ mod tests {
         assert!(c.staging.is_none());
         let s = c.with_staging();
         assert_eq!(s.staging.unwrap().keep_fulls, 2);
+    }
+
+    #[test]
+    fn encode_threads_defaults_to_auto() {
+        let c = RunConfig::new(AppKind::Synthetic, 4);
+        assert!(
+            c.encode_threads.is_none(),
+            "None = fan out to the host's available parallelism"
+        );
     }
 
     #[test]

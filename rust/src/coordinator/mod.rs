@@ -350,6 +350,17 @@ pub struct CkptReport {
     /// Logical bytes of this checkpoint's drain satisfied by reference to
     /// chunks the durable tier already held (content-addressed dedup).
     pub deduped_bytes: u64,
+    // ---- rank-parallel encode data path ----
+    /// Host (wall-clock) seconds the encode wave spent producing the
+    /// write wave — the simulator's own perf number; virtual time charges
+    /// only the storage wave.
+    pub encode_host_secs: f64,
+    /// Worker threads the encode wave fanned ranks across.
+    pub encode_threads: u32,
+    /// Virtual bytes whose hash/CRC work was served from the per-region
+    /// digest cache ("didn't re-hash" — distinct from `deduped_bytes`,
+    /// which counts "didn't re-ship").
+    pub digest_cache_hit_bytes: u64,
 }
 
 impl CkptReport {

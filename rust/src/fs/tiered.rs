@@ -364,6 +364,13 @@ impl TieredStore {
 
     /// Write one wave to the fast tier and queue it for background drain.
     ///
+    /// The wave arrives **in rank order** regardless of how many encode
+    /// workers produced it (`ckpt::datapath` re-assembles worker outputs
+    /// before handing it over), so tier accounting, drain-queue order and
+    /// the chunk-index walk below are identical for the serial and
+    /// rank-parallel data paths — this method needs no awareness of the
+    /// encode fan-out.
+    ///
     /// Requests carrying a [`ChunkRecipe`] are referenced into the chunk
     /// index right here: chunks the index already holds are deduped away
     /// (counted in [`StagedIo::deduped_bytes`], shipped in zero seconds);

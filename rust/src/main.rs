@@ -124,9 +124,9 @@ USAGE: mana <command> [--flags]
 COMMANDS:
   run        --app gromacs|hpcg|vasp|synthetic --ranks N [--steps S]
              [--threads T] [--fs bb|lustre|staged] [--keep-fulls N]
-             [--chunk-bytes N] [--coord-fanout F] [--ckpt-at STEP]
-             [--restart] [--real-compute] [--fixes on|off]
-             [--link static|dynamic]
+             [--chunk-bytes N] [--coord-fanout F] [--encode-threads N]
+             [--ckpt-at STEP] [--restart] [--real-compute]
+             [--fixes on|off] [--link static|dynamic]
   usage      [--jobs N] print the Fig. 1 application census
   mapping    --ranks N [--threads T] print rank→node/pid mapping
   preempt    [--ranks N] run the preempt-queue scenario
@@ -185,6 +185,17 @@ fn build_config(args: &Args) -> Result<RunConfig> {
             );
         }
         cfg.chunk_bytes = n;
+    }
+    if let Some(v) = args.get("encode-threads") {
+        // Checkpoint WRITE-path worker count; omit for the host's
+        // available parallelism, 1 forces the serial data path.
+        let n: usize = v
+            .parse()
+            .with_context(|| format!("--encode-threads={v}"))?;
+        if n == 0 {
+            bail!("--encode-threads must be >= 1");
+        }
+        cfg.encode_threads = Some(n);
     }
     cfg.link = match args.get("link") {
         Some("dynamic") => LinkMode::Dynamic,
@@ -276,6 +287,9 @@ fn cmd_run(args: &Args) -> Result<()> {
                 .set("coord_depth", c.coord_depth as u64)
                 .set("reparents", c.reparents as u64)
                 .set("image_bytes", c.image_bytes)
+                .set("encode_host_secs", c.encode_host_secs)
+                .set("encode_threads", c.encode_threads as u64)
+                .set("digest_cache_hit_bytes", c.digest_cache_hit_bytes)
                 .set("drain_pending_bytes", c.drain_pending_bytes)
                 .set("deduped_bytes", c.deduped_bytes)
                 .set("dedup_ratio", c.dedup_ratio())

@@ -26,6 +26,7 @@ pub mod guard;
 
 use std::fmt;
 
+use crate::ckpt::datapath::{CacheSlot, RegionDigestCache};
 use crate::util::{fnv1a, hash_combine, prng::Xoshiro256};
 
 /// Which half of the split process owns a region.
@@ -105,6 +106,12 @@ pub struct MemRegion {
     /// Written since the last *full* checkpoint (incremental-ckpt support:
     /// the page-level dirty bit, at region granularity).
     pub dirty: bool,
+    /// Memoized checkpoint-section encode of this region (digest
+    /// memoization on the write path). Valid only while the content is
+    /// provably unchanged: dropped on any mutable access
+    /// ([`RegionTable::get_mut`]) and on any dirty-bit transition
+    /// ([`RegionTable::clear_dirty`]).
+    pub(crate) digest_cache: Option<Box<RegionDigestCache>>,
 }
 
 impl MemRegion {
@@ -117,7 +124,13 @@ impl MemRegion {
             name: name.to_string(),
             payload,
             dirty: true,
+            digest_cache: None,
         }
+    }
+
+    /// The memoized checkpoint-section encode, if still valid.
+    pub fn digest_cache(&self) -> Option<&RegionDigestCache> {
+        self.digest_cache.as_deref()
     }
 
     pub fn end(&self) -> u64 {
@@ -258,8 +271,14 @@ impl RegionTable {
         self.regions.iter().find(|r| r.name == name)
     }
 
+    /// Mutable access to a region. Any mutable access may rewrite the
+    /// payload, bounds or dirty bit, so the memoized section encode is
+    /// dropped here — `get_mut` is the single external mutation gateway,
+    /// which makes it the digest cache's invalidation chokepoint.
     pub fn get_mut(&mut self, name: &str) -> Option<&mut MemRegion> {
-        self.regions.iter_mut().find(|r| r.name == name)
+        let r = self.regions.iter_mut().find(|r| r.name == name)?;
+        r.digest_cache = None;
+        Some(r)
     }
 
     pub fn iter(&self) -> impl Iterator<Item = &MemRegion> {
@@ -284,11 +303,66 @@ impl RegionTable {
     }
 
     /// Clear dirty bits on a half (done after a full checkpoint captures
-    /// everything).
+    /// everything). Cache validity is a pure function of the dirty bit,
+    /// so a dirty→clean transition drops the region's memoized section;
+    /// already-clean regions keep theirs (that entry was populated while
+    /// clean, so it still describes the current content — this is what
+    /// makes steady-state checkpoints warm).
     pub fn clear_dirty(&mut self, half: Half) {
         for r in self.regions.iter_mut().filter(|r| r.half == half) {
+            if r.dirty {
+                r.digest_cache = None;
+            }
             r.dirty = false;
         }
+    }
+
+    /// Drop every memoized section encode in a half (benches and tests
+    /// use this to force cold-cache encodes).
+    pub fn clear_digest_caches(&mut self, half: Half) {
+        for r in self.regions.iter_mut().filter(|r| r.half == half) {
+            r.digest_cache = None;
+        }
+    }
+
+    /// Harvest the digest-cache slots of a half, in table order: the
+    /// encoder owns them for the duration of one encode (so payloads can
+    /// be borrowed from the table at the same time) and puts them back
+    /// via [`Self::put_cache_slots`].
+    pub fn take_cache_slots(&mut self, half: Half) -> Vec<CacheSlot> {
+        self.regions
+            .iter_mut()
+            .filter(|r| r.half == half)
+            .map(|r| CacheSlot {
+                usable: !r.dirty,
+                entry: r.digest_cache.take(),
+            })
+            .collect()
+    }
+
+    /// Re-plant slots harvested by [`Self::take_cache_slots`] (same half,
+    /// table unchanged in between).
+    pub fn put_cache_slots(&mut self, half: Half, slots: Vec<CacheSlot>) {
+        let mut it = slots.into_iter();
+        for r in self.regions.iter_mut().filter(|r| r.half == half) {
+            match it.next() {
+                Some(slot) => r.digest_cache = slot.entry,
+                None => break,
+            }
+        }
+    }
+
+    /// Test hook: plant a cache entry directly, bypassing invalidation —
+    /// models an invalidation bug (stale entries must corrupt observably,
+    /// never silently; see the datapath stale-cache test).
+    #[cfg(test)]
+    pub(crate) fn inject_digest_cache(&mut self, name: &str, cache: RegionDigestCache) {
+        let r = self
+            .regions
+            .iter_mut()
+            .find(|r| r.name == name)
+            .expect("inject_digest_cache: no such region");
+        r.digest_cache = Some(Box::new(cache));
     }
 
     /// Dirty bytes in a half (what an incremental checkpoint must write).
@@ -596,5 +670,90 @@ mod tests {
         let p = Payload::Pattern(42);
         assert_eq!(p.sample(1000, 16), p.sample(1000, 16));
         assert_eq!(Payload::Zero.sample(8, 16), vec![0u8; 8]);
+    }
+
+    // -------------------------------------------- digest-cache lifecycle
+
+    fn dummy_cache() -> RegionDigestCache {
+        RegionDigestCache {
+            chunk_bytes: 4096,
+            vlen: 0x100,
+            kind: 2,
+            resident: 3,
+            section_crc: 0,
+            encoded: vec![1, 2, 3],
+            rel_chunks: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn get_mut_drops_digest_cache() {
+        let mut t = RegionTable::new();
+        t.insert(region(0x1000, 0x100, "a")).unwrap();
+        t.inject_digest_cache("a", dummy_cache());
+        assert!(t.get("a").unwrap().digest_cache().is_some());
+        // Dirtying goes through get_mut, the invalidation chokepoint.
+        t.get_mut("a").unwrap().dirty = true;
+        assert!(
+            t.get("a").unwrap().digest_cache().is_none(),
+            "dirtying a region must drop its cached recipe"
+        );
+        // So does growing/shrinking the virtual length.
+        t.inject_digest_cache("a", dummy_cache());
+        t.get_mut("a").unwrap().len = 0x200;
+        assert!(
+            t.get("a").unwrap().digest_cache().is_none(),
+            "a vlen change must drop the cached recipe"
+        );
+    }
+
+    #[test]
+    fn clear_dirty_drops_only_transitioning_caches() {
+        let mut t = RegionTable::new();
+        t.insert(region(0x1000, 0x100, "written")).unwrap();
+        t.insert(region(0x4000, 0x100, "stable")).unwrap();
+        t.clear_dirty(Half::Upper);
+        t.get_mut("written").unwrap().dirty = true;
+        t.inject_digest_cache("written", dummy_cache());
+        t.inject_digest_cache("stable", dummy_cache());
+        // clear_dirty after a full checkpoint: the dirty→clean transition
+        // drops the entry; untouched clean regions stay warm.
+        t.clear_dirty(Half::Upper);
+        assert!(
+            t.get("written").unwrap().digest_cache().is_none(),
+            "clear_dirty must drop the cached recipe of a dirty region"
+        );
+        assert!(
+            t.get("stable").unwrap().digest_cache().is_some(),
+            "steady-state clean regions keep their caches"
+        );
+    }
+
+    #[test]
+    fn take_put_cache_slots_round_trip() {
+        let mut t = RegionTable::new();
+        t.insert(region(0x1000, 0x100, "a")).unwrap();
+        t.insert(MemRegion::new(
+            0x8000,
+            0x100,
+            Half::Lower,
+            "lh",
+            Payload::Zero,
+        ))
+        .unwrap();
+        t.clear_dirty(Half::Upper);
+        t.inject_digest_cache("a", dummy_cache());
+        let slots = t.take_cache_slots(Half::Upper);
+        assert_eq!(slots.len(), 1, "lower-half regions carry no slot");
+        assert!(slots[0].usable && slots[0].entry.is_some());
+        assert!(
+            t.get("a").unwrap().digest_cache().is_none(),
+            "slots are moved out for the encode"
+        );
+        t.put_cache_slots(Half::Upper, slots);
+        assert!(
+            t.get("a").unwrap().digest_cache().is_some(),
+            "slots are re-planted after the encode"
+        );
     }
 }

@@ -22,7 +22,7 @@ use anyhow::Result;
 use crate::apps::{self, App, StepCtx, HALO_VIRTUAL_BYTES};
 use crate::ckpt::manifest::CkptManifest;
 use crate::ckpt::{
-    gen_image_path, gen_incr_image_path, image_path, CkptImage, ImageError,
+    datapath, gen_image_path, gen_incr_image_path, image_path, CkptImage, ImageError,
     SavedPayload, SavedRegion,
 };
 use crate::config::{ComputeMode, RunConfig};
@@ -588,37 +588,72 @@ impl JobSim {
             && (self.last_full_gen.is_some()
                 || (self.cfg.staging.is_none()
                     && self.fs.exists(&image_path(&self.cfg.job, RankId(0)))));
-        let mut reqs = Vec::with_capacity(self.cfg.ranks as usize);
-        let mut total_virtual = 0u64;
         let staged = self.cfg.staging.is_some();
+        // Build the per-rank jobs (paths + the wrapper drain buffer and
+        // communicator-log pseudo-regions), then fan the per-rank
+        // capture→encode→recipe pipeline across the data-path workers.
+        // The encoder streams straight out of each rank's live region
+        // table (no payload clones, no intermediate whole-image buffer);
+        // in staged mode it also emits the content-addressed chunk recipe
+        // the dedup-aware drain consumes. Clean regions replay memoized
+        // section digests instead of re-hashing. The wave comes back in
+        // rank order, byte-for-byte the serial wave.
+        let mut jobs = Vec::with_capacity(self.cfg.ranks as usize);
         for r in 0..self.cfg.ranks {
             let rank = RankId(r);
-            let img = self.capture_rank_image(r, incremental);
-            total_virtual += img.write_bytes();
             let path = if incremental {
                 self.incr_path(rank)
             } else {
                 self.full_path(rank)
             };
-            // Stream the image straight into the write buffer: chunked
-            // encoder, no intermediate whole-image materialization. In
-            // staged mode the encoder also emits the content-addressed
-            // chunk recipe the dedup-aware drain consumes.
-            let mut data = Vec::new();
-            let recipe = if staged {
-                Some(img.encode_with_recipe(&mut data, self.cfg.chunk_bytes))
-            } else {
-                img.encode_into_sized(&mut data, self.cfg.chunk_bytes);
-                None
-            };
-            reqs.push(WriteReq {
+            let parent = incremental.then(|| self.parent_path(rank));
+            let mut extra_regions = Vec::with_capacity(2);
+            let buf = self.wrappers.encode_buffers(rank);
+            extra_regions.push(SavedRegion {
+                addr: MSG_BUFFER_BASE + (r as u64) * 0x1000_0000,
+                vlen: buf.len() as u64,
+                name: "mana.msg_buffer".into(),
+                payload: SavedPayload::Full(Payload::Real(buf)),
+            });
+            // Rank 0 carries the communicator record-and-replay log.
+            if r == 0 {
+                let log = self.comms.encode_log();
+                extra_regions.push(SavedRegion {
+                    addr: COMM_LOG_ADDR,
+                    vlen: log.len() as u64,
+                    name: "mana.comm_log".into(),
+                    payload: SavedPayload::Full(Payload::Real(log)),
+                });
+            }
+            jobs.push(datapath::RankJob {
+                rank,
                 node: self.topo.node_of(rank),
                 path,
-                virtual_bytes: img.write_bytes(),
-                data,
-                recipe,
+                parent,
+                extra_regions,
             });
         }
+        let mut sources: Vec<datapath::RankSource<'_>> = self
+            .procs
+            .iter_mut()
+            .map(|p| datapath::RankSource {
+                step: p.step,
+                rng_state: p.rng.state_bytes(),
+                upper_fds: p.fds.fds_of(crate::mem::Half::Upper),
+                table: &mut p.aspace.table,
+            })
+            .collect();
+        let opts = datapath::EncodeOpts {
+            chunk_bytes: self.cfg.chunk_bytes,
+            threads: datapath::resolve_threads(self.cfg.encode_threads),
+            with_recipe: staged,
+        };
+        let (reqs, dstats) = datapath::encode_wave(&mut sources, &jobs, &opts);
+        drop(sources);
+        let total_virtual: u64 = reqs.iter().map(|q| q.virtual_bytes).sum();
+        report.encode_host_secs = dstats.host_secs;
+        report.encode_threads = dstats.threads as u32;
+        report.digest_cache_hit_bytes = dstats.cache_hit_bytes;
         let io = match &mut self.fs {
             Store::Single(fs) => {
                 let io = match fs.write_parallel(reqs) {
@@ -762,6 +797,8 @@ impl JobSim {
         self.metrics.observe("ckpt.total_secs", report.total_secs);
         self.metrics.observe("ckpt.write_secs", report.write_secs);
         self.metrics
+            .observe("ckpt.encode_host_secs", report.encode_host_secs);
+        self.metrics
             .observe("ckpt.fast_write_secs", report.fast_write_secs);
         self.metrics
             .observe("ckpt.image_bytes", report.image_bytes as f64);
@@ -797,44 +834,6 @@ impl JobSim {
             }
         );
         Ok(report)
-    }
-
-    /// Capture one rank's image, including the wrapper's drain buffer as a
-    /// dedicated upper-half pseudo-region.
-    fn capture_rank_image(&mut self, r: u32, incremental: bool) -> CkptImage {
-        let rank = RankId(r);
-        let parent = self.parent_path(rank);
-        let proc = &self.procs[r as usize];
-        let mut img = if incremental {
-            CkptImage::capture_incremental(
-                rank,
-                proc.step,
-                proc.rng.state_bytes(),
-                proc.fds.fds_of(crate::mem::Half::Upper),
-                &proc.aspace.table,
-                &parent,
-            )
-        } else {
-            proc.checkpoint()
-        };
-        let buf = self.wrappers.encode_buffers(rank);
-        img.regions.push(SavedRegion {
-            addr: MSG_BUFFER_BASE + (r as u64) * 0x1000_0000,
-            vlen: buf.len() as u64,
-            name: "mana.msg_buffer".into(),
-            payload: SavedPayload::Full(Payload::Real(buf)),
-        });
-        // Rank 0 carries the communicator record-and-replay log.
-        if r == 0 {
-            let log = self.comms.encode_log();
-            img.regions.push(SavedRegion {
-                addr: COMM_LOG_ADDR,
-                vlen: log.len() as u64,
-                name: "mana.comm_log".into(),
-                payload: SavedPayload::Full(Payload::Real(log)),
-            });
-        }
-        img
     }
 
     // ------------------------------------------------------ kill / restart
@@ -985,7 +984,7 @@ impl JobSim {
                     rank,
                     &mut report,
                 )?;
-                img = crate::ckpt::resolve_incremental(&img, &parent)
+                img = crate::ckpt::resolve_incremental(img, parent)
                     .map_err(|e| RestartError::CorruptImage(rank, e))?;
             }
             let mut proc = SplitProcess::restart(&img, split_cfg, cfg.seed)
@@ -1275,6 +1274,76 @@ mod tests {
         resumed.run_steps(2).unwrap();
         assert_eq!(resumed.fingerprint(), want);
         assert!(!resumed.any_corruption());
+    }
+
+    #[test]
+    fn warm_digest_cache_checkpoints_restart_bitwise_identical() {
+        // Continuous control run.
+        let mut cont = JobSim::launch(quick_cfg(4, 0), None).unwrap();
+        cont.run_steps(12).unwrap();
+        let want = cont.fingerprint();
+
+        // Three checkpoint generations. Gen 1 populates caches (dropped by
+        // its own clear_dirty transitions), gen 2 repopulates them clean,
+        // gen 3 must encode the untouched bulk regions from cache — and
+        // the image must still restart bitwise-identical.
+        let mut sim = JobSim::launch(quick_cfg(4, 0), None).unwrap();
+        sim.run_steps(3).unwrap();
+        let g1 = sim.checkpoint().unwrap();
+        assert_eq!(g1.digest_cache_hit_bytes, 0, "first generation is cold");
+        sim.run_steps(3).unwrap();
+        sim.checkpoint().unwrap();
+        sim.run_steps(3).unwrap();
+        let g3 = sim.checkpoint().unwrap();
+        assert!(
+            g3.digest_cache_hit_bytes > 0,
+            "generation 3 must serve clean regions from the digest cache"
+        );
+        assert!(g3.encode_threads >= 1);
+        let cfg = sim.cfg.clone();
+        let fs = sim.kill();
+        let (mut resumed, _) = JobSim::restart_from(cfg, None, fs).unwrap();
+        assert_eq!(resumed.step, 9);
+        resumed.run_steps(3).unwrap();
+        assert_eq!(
+            resumed.fingerprint(),
+            want,
+            "warm-cache images must restart bitwise-identical"
+        );
+        assert!(!resumed.any_corruption());
+    }
+
+    #[test]
+    fn serial_and_parallel_encode_produce_identical_images() {
+        // Same job, --encode-threads 1 vs 4: the stored images (and hence
+        // the restart fingerprints) must match byte-for-byte.
+        let read_wave = |threads: usize| -> (Vec<Vec<u8>>, u64) {
+            let mut cfg = quick_cfg(4, 0);
+            cfg.encode_threads = Some(threads);
+            let mut sim = JobSim::launch(cfg, None).unwrap();
+            sim.run_steps(2).unwrap();
+            let rep = sim.checkpoint().unwrap();
+            assert_eq!(rep.encode_threads, threads as u32);
+            let images = (0..4)
+                .map(|r| {
+                    sim.fs
+                        .read_parallel(&[(
+                            sim.topo.node_of(RankId(r)),
+                            image_path(&sim.cfg.job, RankId(r)),
+                        )])
+                        .unwrap()
+                        .0
+                        .remove(0)
+                })
+                .collect();
+            (images, rep.image_bytes)
+        };
+        let (serial, sbytes) = read_wave(1);
+        let (parallel, pbytes) = read_wave(4);
+        assert_eq!(sbytes, pbytes);
+        for (r, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+            assert_eq!(a, b, "rank {r}: parallel image differs from serial");
+        }
     }
 
     #[test]

@@ -215,3 +215,115 @@ fn prop_splitproc_roundtrip() {
         assert_eq!(restored.fingerprint(), fp);
     });
 }
+
+/// Invariant (rank-parallel data path): for any random region tables,
+/// chunk size and worker count, the parallel encode wave is bit-identical
+/// to the serial one (bytes, recipes and virtual sizes), and warm-cache
+/// encodes are bit-identical to cold-cache encodes.
+#[test]
+fn prop_parallel_datapath_bitwise_matches_serial_and_warm_matches_cold() {
+    use mana::ckpt::datapath::{encode_wave, EncodeOpts, RankJob, RankSource};
+    use mana::topology::NodeId;
+
+    run("parallel datapath bitwise", 30, |g| {
+        let ranks = g.range(1, 6) as usize;
+        let chunk_bytes = 1usize << g.range(6, 13); // 64 B .. 8 KiB
+        let threads = g.range(2, 6) as usize;
+        let with_recipe = g.bool();
+        let incremental = g.bool();
+
+        // One prototype table set; every lane below starts from a clone.
+        let mut proto: Vec<RegionTable> = Vec::new();
+        for _ in 0..ranks {
+            let mut t = RegionTable::new();
+            let n = g.range(1, 5);
+            let mut addr = 0x1000_0000_0000u64;
+            for i in 0..n {
+                let payload = match g.u64_below(3) {
+                    0 => Payload::Zero,
+                    1 => Payload::Pattern(g.range(1, 1 << 40)),
+                    _ => Payload::Real(g.bytes(3000)),
+                };
+                let vlen = g.range(1, 1 << 16);
+                t.insert(MemRegion::new(
+                    addr,
+                    vlen,
+                    Half::Upper,
+                    &format!("r{i}"),
+                    payload,
+                ))
+                .unwrap();
+                addr += vlen + 0x10_0000;
+            }
+            // Random clean/dirty mix (incremental lanes turn clean
+            // regions into ParentRefs).
+            t.clear_dirty(Half::Upper);
+            for i in 0..n {
+                if g.bool() {
+                    t.get_mut(&format!("r{i}")).unwrap().dirty = true;
+                }
+            }
+            proto.push(t);
+        }
+        let jobs: Vec<RankJob> = (0..ranks)
+            .map(|i| RankJob {
+                rank: RankId(i as u32),
+                node: NodeId((i / 4) as u32),
+                path: format!("p/r{i:05}.mana"),
+                parent: incremental.then(|| "p/full.mana".to_string()),
+                extra_regions: Vec::new(),
+            })
+            .collect();
+        let opts_for = |threads: usize| EncodeOpts {
+            chunk_bytes,
+            threads,
+            with_recipe,
+        };
+        let encode = |tables: &mut [RegionTable], threads: usize| {
+            let mut sources: Vec<RankSource> = tables
+                .iter_mut()
+                .map(|t| RankSource {
+                    table: t,
+                    step: 7,
+                    rng_state: [3u8; 32],
+                    upper_fds: vec![(5, "out.log".into())],
+                })
+                .collect();
+            encode_wave(&mut sources, &jobs, &opts_for(threads))
+        };
+
+        let mut t_serial = proto.clone();
+        let mut t_par = proto.clone();
+        let (serial, _) = encode(&mut t_serial, 1);
+        let (par, _) = encode(&mut t_par, threads);
+        assert_eq!(serial.len(), par.len());
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a.path, b.path, "wave must stay in rank order");
+            assert_eq!(a.data, b.data, "parallel encode must be byte-identical");
+            assert_eq!(a.recipe, b.recipe, "recipes must be identical");
+            assert_eq!(a.virtual_bytes, b.virtual_bytes);
+        }
+
+        // Warm equals cold: the first parallel encode populated the
+        // digest caches; encoding again must not change a single byte.
+        let (warm, wstats) = encode(&mut t_par, threads);
+        for (a, b) in serial.iter().zip(&warm) {
+            assert_eq!(a.data, b.data, "warm-cache encode must equal cold");
+            assert_eq!(a.recipe, b.recipe);
+        }
+        // In full mode every clean region must actually be served from
+        // cache on the warm pass (incremental clean regions ride as
+        // ParentRefs, which never touch the cache).
+        if !incremental {
+            let clean: u64 = proto
+                .iter()
+                .flat_map(|t| t.half_iter(Half::Upper))
+                .filter(|r| !r.dirty)
+                .count() as u64;
+            assert_eq!(
+                wstats.cache_hit_regions, clean,
+                "every clean region must hit on the warm pass"
+            );
+        }
+    });
+}
