@@ -22,6 +22,7 @@
 
 use mana::benchkit::{time, Report};
 use mana::ckpt::datapath::{encode_wave, resolve_threads, EncodeOpts, RankJob, RankSource};
+use mana::ckpt::Chunking;
 use mana::config::{AppKind, RunConfig};
 use mana::fs::WriteReq;
 use mana::mem::{Half, MemRegion, Payload, RegionTable};
@@ -102,7 +103,7 @@ fn encode(tables: &mut [RegionTable], jobs: &[RankJob], threads: usize) -> Vec<W
         &mut sources,
         jobs,
         &EncodeOpts {
-            chunk_bytes: CHUNK,
+            chunking: Chunking::Fixed(CHUNK),
             threads,
             with_recipe: true,
         },
@@ -204,6 +205,7 @@ fn main() {
     }
 
     let mut speedup_2048 = 0.0;
+    let mut parallel_cold_ratio_2048 = 1.0;
     for &ranks in &[512usize, 2048, 4096] {
         let (ser_cold, ser_warm) = measure(ranks, 1);
         let (par_cold, par_warm) = measure(ranks, cores);
@@ -213,6 +215,7 @@ fn main() {
         row(&mut rep, ranks, cores, "warm", par_warm);
         if ranks == 2048 {
             speedup_2048 = ser_cold / par_warm.max(1e-9);
+            parallel_cold_ratio_2048 = par_cold / ser_cold.max(1e-9);
             if cores >= 2 {
                 assert!(
                     par_cold <= ser_cold * 1.10,
@@ -240,6 +243,12 @@ fn main() {
         .set("heap_vlen_per_rank", HEAP_VLEN)
         .set("chunk_bytes", CHUNK as u64)
         .set("speedup_2048_serial_cold_to_parallel_warm", speedup_2048)
+        .set(
+            "gates",
+            Json::obj()
+                .set("datapath_parallel_cold_ratio_2048", parallel_cold_ratio_2048)
+                .set("datapath_warm_speedup_2048", speedup_2048),
+        )
         .set("rows", Json::Arr(rows))
         .set("staged_4096", staged);
     std::fs::write("BENCH_datapath.json", out.to_string()).expect("write BENCH_datapath.json");

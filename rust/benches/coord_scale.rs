@@ -21,6 +21,7 @@ use mana::benchkit::Report;
 use mana::config::{AppKind, RunConfig};
 use mana::coordinator::Phase;
 use mana::sim::JobSim;
+use mana::util::json::Json;
 
 const FANOUT: u32 = 8;
 
@@ -77,6 +78,7 @@ fn main() {
     let sweep = [64u32, 128, 256, 512];
     let mut flat_secs = Vec::new();
     let mut tree_secs = Vec::new();
+    let mut jrows = Json::Arr(vec![]);
     for &ranks in &sweep {
         let f = measure(ranks, false);
         let t = measure(ranks, true);
@@ -93,6 +95,15 @@ fn main() {
                 p.ctrl_msgs.to_string(),
                 format!("{:.4}", p.ctrl_secs),
             ]);
+            jrows.push(
+                Json::obj()
+                    .set("ranks", ranks as u64)
+                    .set("plane", tag)
+                    .set("depth", p.depth as u64)
+                    .set("root_msgs", p.root_msgs)
+                    .set("ctrl_msgs", p.ctrl_msgs)
+                    .set("ctrl_secs", p.ctrl_secs),
+            );
         }
         assert!(
             f.root_msgs >= ranks as u64,
@@ -123,5 +134,21 @@ fn main() {
         growth < 4.0,
         "tree protocol wall-clock must grow sublinearly across 64->512 ranks: {growth:.2}x"
     );
-    println!("COORD OK");
+
+    // Machine-readable trajectory + the CI bench-report gate value: the
+    // tree/flat control wall-clock ratio at the largest swept size (the
+    // baseline requires it strictly below 1.0).
+    let out = Json::obj()
+        .set("bench", "coord_scale")
+        .set("fanout", FANOUT as u64)
+        .set(
+            "gates",
+            Json::obj()
+                .set("coord_tree_over_flat_ctrl_512", tree_last / flat_last)
+                .set("coord_tree_growth_64_to_512", growth),
+        )
+        .set("rows", jrows);
+    std::fs::write("BENCH_coord_scale.json", out.to_string())
+        .expect("write BENCH_coord_scale.json");
+    println!("COORD OK (results in BENCH_coord_scale.json)");
 }

@@ -19,15 +19,24 @@
 //!     physically from generation 2 on (content-addressed chunk store),
 //!     and a controlled ~10%-dirty workload drains near its dirty
 //!     fraction — while restart from the durable tier alone still
-//!     reproduces byte-identical, CRC-clean images.
+//!     reproduces byte-identical, CRC-clean images;
+//!   * **insertion series** (shift resistance): each generation inserts a
+//!     few KiB mid-region. Content-defined chunking must dedup ≥ 70% of
+//!     the drained bytes per steady-state generation while fixed tiling
+//!     dedups < 20% on the same trace.
+//!
+//! Results are written to BENCH_staged_drain.json; the CI bench-report
+//! job gates on the `staged_cdc_insertion_dedup` /
+//! `staged_fixed_insertion_dedup` values against checked-in baselines.
 
 use mana::benchkit::{fsecs, Report};
-use mana::ckpt::{gen_image_path, ChunkRecipe};
+use mana::ckpt::{gen_image_path, ChunkRecipe, Chunking};
 use mana::config::{AppKind, RunConfig};
 use mana::fs::{FileSystem, FsConfig, FsKind, TieredStore, WriteReq};
 use mana::sim::JobSim;
 use mana::topology::{NodeId, RankId};
 use mana::util::bytes::human;
+use mana::util::json::Json;
 use mana::util::prng::SplitMix64;
 
 /// ≈5.8 TB aggregate at 512 ranks (the paper's HPCG footprint).
@@ -157,7 +166,7 @@ fn restart_checks() {
 /// generation 2 on, the physical durable-tier drain bytes must be ≤ 25%
 /// of the logical image bytes, and restart must succeed from the durable
 /// tier alone with a byte-identical image.
-fn dedup_512_ranks() {
+fn dedup_512_ranks() -> Json {
     let mut cfg = cfg_for(512, &Mode::Staged);
     cfg.job = "staged-dedup-512".into();
     cfg.mem_per_rank = Some(256 << 20); // 128 GB aggregate, 1 MiB chunks
@@ -199,7 +208,7 @@ fn dedup_512_ranks() {
         }
         sim.run_steps(1).expect("steps");
     }
-    rep.finish();
+    let table = rep.finish_json();
 
     // Byte-identical restart from the durable tier alone: wipe the fast
     // tier entirely, reassemble every image from chunk objects.
@@ -232,12 +241,13 @@ fn dedup_512_ranks() {
         "DEDUP OK: gen>=2 physical drain <= 25% of logical; durable-only \
          restart byte-identical"
     );
+    table
 }
 
 /// Controlled dedup series: a raw ~10%-dirty-per-generation workload on
 /// the tiered store directly. Physical durable-tier bytes per drain must
 /// fall to near the dirty fraction of the logical bytes.
-fn dedup_dirty_fraction_series() {
+fn dedup_dirty_fraction_series() -> Json {
     // Small real buffers (the dedup math is scale-free): 8 files x 64
     // chunks x 64 KiB = 32 MiB logical per generation.
     const CHUNK: usize = 64 << 10;
@@ -326,12 +336,137 @@ fn dedup_dirty_fraction_series() {
             assert!(ratio > 0.85, "gen {gen}: dedup ratio {ratio:.2} too low");
         }
     }
-    rep.finish();
+    let table = rep.finish_json();
     println!(
         "DEDUP OK: physical drain per generation fell to the dirty fraction \
          ({} unique chunks indexed)",
         ts.chunk_store().chunk_count()
     );
+    table
+}
+
+/// Insertion-heavy series (the shift-resistance acceptance): every
+/// generation inserts a few KiB mid-region before checkpointing. Fixed
+/// tiling re-keys every chunk downstream of the edit, so its dedup
+/// collapses to the prefix fraction; content-defined boundaries
+/// resynchronize and re-use everything outside the edit window. Both
+/// modes run the *identical* content trace.
+///
+/// Returns (rows, cdc_min_ratio, fixed_max_ratio): the worst steady-state
+/// CDC dedup ratio (gate: >= 0.70) and the best steady-state fixed ratio
+/// (gate: < 0.20).
+fn dedup_insertion_series() -> (Json, f64, f64) {
+    const AVG: usize = 16 << 10;
+    const BASE_LEN: usize = 64 * AVG; // 1 MiB logical at gen 0
+    /// Deliberately not a multiple of AVG (and no small sum of copies is):
+    /// a stride-aligned insertion would let the fixed grid re-align by
+    /// accident and mask the collapse this series demonstrates.
+    const INS_LEN: usize = 4093;
+    let gens = 4u64;
+    let mut rep = Report::new(
+        "STAGED-DEDUP: insertion-heavy generations (4 KiB mid-region), fixed vs cdc",
+        vec!["mode", "gen", "logical", "physical", "deduped", "dedup_ratio"],
+    );
+    let mut jrows = Json::Arr(vec![]);
+    let mut cdc_min = 1.0f64;
+    let mut fixed_max = 0.0f64;
+    for mode in ["fixed", "cdc"] {
+        let chunking = if mode == "fixed" {
+            Chunking::Fixed(AVG)
+        } else {
+            Chunking::cdc(AVG)
+        };
+        let mut bb = FsConfig::burst_buffer(4);
+        bb.capacity = 1 << 40;
+        let mut ts = TieredStore::new(
+            FileSystem::new(bb),
+            FileSystem::new(FsConfig::cscratch()),
+            gens as usize + 1,
+            4,
+        );
+        // Identical deterministic trace per mode: same base bytes, same
+        // insertions in the same order.
+        let mut sm = SplitMix64::new(0xA5EED);
+        let mut fill = |n: usize| -> Vec<u8> {
+            let mut out = Vec::with_capacity(n + 8);
+            while out.len() < n {
+                out.extend_from_slice(&sm.next_u64().to_le_bytes());
+            }
+            out.truncate(n);
+            out
+        };
+        let mut data = fill(BASE_LEN);
+        for gen in 0..gens {
+            if gen > 0 {
+                // Insert fresh bytes an eighth of the way in, sliding a
+                // little each generation (never chunk-aligned).
+                let at = data.len() / 8 + gen as usize * 37;
+                let ins = fill(INS_LEN);
+                let tail = data.split_off(at);
+                data.extend_from_slice(&ins);
+                data.extend_from_slice(&tail);
+            }
+            ts.begin_ckpt(gen as f64 * 100.0);
+            let io = ts
+                .write_wave(vec![WriteReq {
+                    node: NodeId(0),
+                    path: format!("{mode}/gen{gen}/f0"),
+                    virtual_bytes: data.len() as u64,
+                    data: data.clone(),
+                    recipe: Some(ChunkRecipe::from_data_chunked(
+                        &data,
+                        &chunking,
+                        data.len() as u64,
+                    )),
+                }])
+                .expect("wave");
+            ts.drain_sync();
+            let logical = data.len() as u64;
+            let physical = logical - io.deduped_bytes;
+            let ratio = io.deduped_bytes as f64 / logical as f64;
+            rep.row(vec![
+                mode.to_string(),
+                gen.to_string(),
+                human(logical),
+                human(physical),
+                human(io.deduped_bytes),
+                format!("{:.1}%", ratio * 100.0),
+            ]);
+            jrows.push(
+                Json::obj()
+                    .set("mode", mode)
+                    .set("gen", gen)
+                    .set("logical_bytes", logical)
+                    .set("physical_bytes", physical)
+                    .set("deduped_bytes", io.deduped_bytes)
+                    .set("dedup_ratio", ratio),
+            );
+            if gen > 0 {
+                if mode == "cdc" {
+                    cdc_min = cdc_min.min(ratio);
+                } else {
+                    fixed_max = fixed_max.max(ratio);
+                }
+            }
+        }
+    }
+    rep.finish();
+    assert!(
+        cdc_min >= 0.70,
+        "CDC must dedup >= 70% of drained bytes per steady-state insertion \
+         generation (worst {cdc_min:.2})"
+    );
+    assert!(
+        fixed_max < 0.20,
+        "fixed tiling must collapse below 20% dedup on the insertion trace \
+         (best {fixed_max:.2})"
+    );
+    println!(
+        "INSERTION OK: cdc worst steady-state dedup {:.1}% vs fixed best {:.1}%",
+        cdc_min * 100.0,
+        fixed_max * 100.0
+    );
+    (jrows, cdc_min, fixed_max)
 }
 
 fn main() {
@@ -367,7 +502,7 @@ fn main() {
             fsecs(staged.drain_bg),
         ]);
     }
-    rep.finish();
+    let stall_table = rep.finish_json();
 
     for &(ranks, bb, staged, lustre) in &rows {
         assert!(
@@ -386,7 +521,28 @@ fn main() {
         lustre512 / staged512
     );
     restart_checks();
-    dedup_512_ranks();
-    dedup_dirty_fraction_series();
-    println!("STAGED OK: async BB->Lustre staging hides the PFS write from ranks");
+    let dedup_table = dedup_512_ranks();
+    let dirty_table = dedup_dirty_fraction_series();
+    let (insertion_rows, cdc_min, fixed_max) = dedup_insertion_series();
+
+    let out = Json::obj()
+        .set("bench", "staged_drain")
+        .set(
+            "gates",
+            Json::obj()
+                .set("staged_cdc_insertion_dedup", cdc_min)
+                .set("staged_fixed_insertion_dedup", fixed_max)
+                .set("staged_lustre_over_staged_512", lustre512 / staged512),
+        )
+        .set("rows", insertion_rows)
+        .set(
+            "series",
+            Json::Arr(vec![stall_table, dedup_table, dirty_table]),
+        );
+    std::fs::write("BENCH_staged_drain.json", out.to_string())
+        .expect("write BENCH_staged_drain.json");
+    println!(
+        "STAGED OK: async BB->Lustre staging hides the PFS write from ranks \
+         (results in BENCH_staged_drain.json)"
+    );
 }

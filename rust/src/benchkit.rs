@@ -63,6 +63,19 @@ impl Report {
         self.rows.push(cells);
     }
 
+    /// Like [`Self::finish`], but also return the table as a JSON object
+    /// (`{name, rows}`) for benches that aggregate their tables into a
+    /// `BENCH_*.json` artifact the CI bench-report job consumes.
+    pub fn finish_json(self) -> Json {
+        let name = self.name;
+        let mut arr = Json::Arr(vec![]);
+        for j in &self.json_rows {
+            arr.push(j.clone());
+        }
+        self.finish();
+        Json::obj().set("name", name).set("rows", arr)
+    }
+
     /// Print the table + machine-readable trailer.
     pub fn finish(self) {
         println!("\n== {} ==", self.name);

@@ -1,0 +1,444 @@
+//! `bench_report` — the CI bench-regression harness over the
+//! `BENCH_*.json` trajectory.
+//!
+//! Every perf-bearing bench (`staged_drain`, `coord_scale`,
+//! `ckpt_datapath`, and any future series) writes a `BENCH_<name>.json`
+//! artifact with a shared shape:
+//!
+//! ```json
+//! {
+//!   "bench": "<name>",                 // required
+//!   "gates": {"<gate>": <number>},     // required (may be empty)
+//!   "rows": [{...}],                   // optional: the headline table
+//!   "series": [{"name": "...", "rows": [{...}]}]  // optional extras
+//! }
+//! ```
+//!
+//! This binary collects every artifact in a directory, schema-validates
+//! them, renders one comparison table into `$GITHUB_STEP_SUMMARY` (and
+//! stdout), writes the aggregated `BENCH_report.json`, and exits non-zero
+//! when a gate named by the checked-in baseline file
+//! (`bench_baselines.json`) is missing or regresses past its threshold —
+//! so a perf or dedup win can't silently rot once merged.
+//!
+//! Usage: `bench_report [--dir DIR] [--baselines FILE] [--out FILE]`
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use mana::util::json::Json;
+
+/// One gate value harvested from an artifact.
+struct Gate {
+    name: String,
+    value: f64,
+    source: String,
+}
+
+/// One collected artifact (post-validation).
+struct Bench {
+    file: String,
+    name: String,
+    rows: Vec<Json>,
+    series: Vec<(String, Vec<Json>)>,
+}
+
+/// A baseline threshold: `value <op> bound` must hold.
+struct Baseline {
+    name: String,
+    op: String,
+    bound: f64,
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut dir = ".".to_string();
+    let mut baselines_path = "bench_baselines.json".to_string();
+    let mut out_path = "BENCH_report.json".to_string();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--dir" if i + 1 < args.len() => {
+                i += 1;
+                dir = args[i].clone();
+            }
+            "--baselines" if i + 1 < args.len() => {
+                i += 1;
+                baselines_path = args[i].clone();
+            }
+            "--out" if i + 1 < args.len() => {
+                i += 1;
+                out_path = args[i].clone();
+            }
+            other => {
+                eprintln!("bench_report: unknown argument {other}");
+                eprintln!("usage: bench_report [--dir DIR] [--baselines FILE] [--out FILE]");
+                return ExitCode::FAILURE;
+            }
+        }
+        i += 1;
+    }
+
+    let mut errors: Vec<String> = Vec::new();
+    let (benches, gates) = collect(&dir, &out_path, &mut errors);
+    let baselines = load_baselines(&baselines_path, &mut errors);
+
+    // Evaluate every required gate against its checked-in threshold.
+    // Rows are (gate, value, baseline, pass).
+    let mut gate_rows: Vec<(String, String, String, bool)> = Vec::new();
+    let mut failed = false;
+    for b in &baselines {
+        let expr = format!("{} {}", b.op, fnum(b.bound));
+        match gates.iter().find(|g| g.name == b.name) {
+            None => {
+                failed = true;
+                errors.push(format!(
+                    "required gate `{}` missing from every BENCH_*.json",
+                    b.name
+                ));
+                gate_rows.push((b.name.clone(), "missing".into(), expr, false));
+            }
+            Some(g) => {
+                let pass = cmp(g.value, &b.op, b.bound);
+                if !pass {
+                    failed = true;
+                }
+                gate_rows.push((b.name.clone(), fnum(g.value), expr, pass));
+            }
+        }
+    }
+    // Informational gates (present but not gated by a baseline).
+    for g in &gates {
+        if !baselines.iter().any(|b| b.name == g.name) {
+            gate_rows.push((g.name.clone(), fnum(g.value), "(info)".into(), true));
+        }
+    }
+    if !errors.is_empty() {
+        failed = true;
+    }
+
+    let summary = render_summary(&benches, &gate_rows, &errors, failed);
+    print!("{summary}");
+    if let Ok(path) = std::env::var("GITHUB_STEP_SUMMARY") {
+        if !path.is_empty() {
+            use std::io::Write as _;
+            if let Ok(mut f) = fs::OpenOptions::new().create(true).append(true).open(&path) {
+                let _ = f.write_all(summary.as_bytes());
+            }
+        }
+    }
+
+    // Aggregated artifact: every gate, every bench, the verdict.
+    let mut jgates = Json::Arr(vec![]);
+    for g in &gates {
+        let baseline = baselines.iter().find(|b| b.name == g.name);
+        let pass = match baseline {
+            Some(b) => cmp(g.value, &b.op, b.bound),
+            None => true,
+        };
+        jgates.push(
+            Json::obj()
+                .set("name", g.name.as_str())
+                .set("value", g.value)
+                .set("source", g.source.as_str())
+                .set("required", baseline.is_some())
+                .set("pass", pass),
+        );
+    }
+    let mut jbenches = Json::Arr(vec![]);
+    for b in &benches {
+        let mut series = Json::Arr(vec![]);
+        for (name, rows) in &b.series {
+            series.push(
+                Json::obj()
+                    .set("name", name.as_str())
+                    .set("rows", Json::Arr(rows.clone())),
+            );
+        }
+        jbenches.push(
+            Json::obj()
+                .set("file", b.file.as_str())
+                .set("bench", b.name.as_str())
+                .set("rows", Json::Arr(b.rows.clone()))
+                .set("series", series),
+        );
+    }
+    let mut jerrors = Json::Arr(vec![]);
+    for e in &errors {
+        jerrors.push(e.as_str());
+    }
+    let report = Json::obj()
+        .set("schema", "mana-bench-report/v1")
+        .set("pass", !failed)
+        .set("gates", jgates)
+        .set("benches", jbenches)
+        .set("errors", jerrors);
+    if let Err(e) = fs::write(&out_path, report.to_string()) {
+        eprintln!("bench_report: cannot write {out_path}: {e}");
+        return ExitCode::FAILURE;
+    }
+
+    if failed {
+        eprintln!("bench_report: FAILED (see report above)");
+        ExitCode::FAILURE
+    } else {
+        println!("bench_report: all gates within baseline thresholds");
+        ExitCode::SUCCESS
+    }
+}
+
+/// Collect and schema-validate every `BENCH_*.json` under `dir`.
+fn collect(dir: &str, out_path: &str, errors: &mut Vec<String>) -> (Vec<Bench>, Vec<Gate>) {
+    let out_name = PathBuf::from(out_path)
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    let mut files: Vec<String> = match fs::read_dir(dir) {
+        Ok(entries) => entries
+            .filter_map(|e| e.ok())
+            .filter_map(|e| e.file_name().into_string().ok())
+            .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json") && *n != out_name)
+            .collect(),
+        Err(e) => {
+            errors.push(format!("cannot read directory {dir}: {e}"));
+            Vec::new()
+        }
+    };
+    files.sort();
+    if files.is_empty() {
+        errors.push(format!("no BENCH_*.json artifacts found in {dir}"));
+    }
+
+    let mut benches = Vec::new();
+    let mut gates: Vec<Gate> = Vec::new();
+    for name in files {
+        let path = format!("{dir}/{name}");
+        let text = match fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) => {
+                errors.push(format!("{name}: unreadable: {e}"));
+                continue;
+            }
+        };
+        let Some(doc) = Json::parse(&text) else {
+            errors.push(format!("{name}: not valid JSON"));
+            continue;
+        };
+        // Schema: {"bench": str, "gates": {str: num}, rows?: [obj], series?}.
+        let Some(bench_name) = doc.get("bench").and_then(Json::as_str) else {
+            errors.push(format!("{name}: missing required string field `bench`"));
+            continue;
+        };
+        let Some(gate_fields) = doc.get("gates").and_then(Json::as_obj) else {
+            errors.push(format!("{name}: missing required object field `gates`"));
+            continue;
+        };
+        for (gname, gval) in gate_fields {
+            let Some(v) = gval.as_f64().filter(|v| v.is_finite()) else {
+                errors.push(format!("{name}: gate `{gname}` is not a finite number"));
+                continue;
+            };
+            if let Some(prev) = gates.iter().find(|g| g.name == *gname) {
+                errors.push(format!(
+                    "{name}: gate `{gname}` already defined by {}",
+                    prev.source
+                ));
+                continue;
+            }
+            gates.push(Gate {
+                name: gname.clone(),
+                value: v,
+                source: name.clone(),
+            });
+        }
+        let rows = match doc.get("rows") {
+            None => Vec::new(),
+            Some(r) => match validate_rows(r) {
+                Some(rows) => rows,
+                None => {
+                    errors.push(format!("{name}: `rows` must be an array of objects"));
+                    continue;
+                }
+            },
+        };
+        let mut series = Vec::new();
+        if let Some(s) = doc.get("series") {
+            let Some(items) = s.as_arr() else {
+                errors.push(format!("{name}: `series` must be an array"));
+                continue;
+            };
+            let mut ok = true;
+            for item in items {
+                match (
+                    item.get("name").and_then(Json::as_str),
+                    item.get("rows").and_then(validate_rows),
+                ) {
+                    (Some(sname), Some(srows)) => series.push((sname.to_string(), srows)),
+                    _ => {
+                        errors.push(format!(
+                            "{name}: each series entry needs a `name` and object `rows`"
+                        ));
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if !ok {
+                continue;
+            }
+        }
+        benches.push(Bench {
+            file: name,
+            name: bench_name.to_string(),
+            rows,
+            series,
+        });
+    }
+    (benches, gates)
+}
+
+fn validate_rows(r: &Json) -> Option<Vec<Json>> {
+    let items = r.as_arr()?;
+    if items.iter().all(|i| i.as_obj().is_some()) {
+        Some(items.to_vec())
+    } else {
+        None
+    }
+}
+
+fn load_baselines(path: &str, errors: &mut Vec<String>) -> Vec<Baseline> {
+    let text = match fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            errors.push(format!("baselines {path}: unreadable: {e}"));
+            return Vec::new();
+        }
+    };
+    let Some(doc) = Json::parse(&text) else {
+        errors.push(format!("baselines {path}: not valid JSON"));
+        return Vec::new();
+    };
+    let Some(required) = doc.get("required").and_then(Json::as_obj) else {
+        errors.push(format!("baselines {path}: missing `required` object"));
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for (name, spec) in required {
+        let op = spec.get("op").and_then(Json::as_str).unwrap_or_default();
+        let bound = spec.get("bound").and_then(Json::as_f64);
+        match (op, bound) {
+            ("<" | "<=" | ">" | ">=", Some(bound)) => out.push(Baseline {
+                name: name.clone(),
+                op: op.to_string(),
+                bound,
+            }),
+            _ => errors.push(format!(
+                "baselines {path}: `{name}` needs op in <,<=,>,>= and a numeric bound"
+            )),
+        }
+    }
+    out
+}
+
+fn cmp(value: f64, op: &str, bound: f64) -> bool {
+    match op {
+        "<" => value < bound,
+        "<=" => value <= bound,
+        ">" => value > bound,
+        ">=" => value >= bound,
+        _ => false,
+    }
+}
+
+/// Compact numeric formatting for tables.
+fn fnum(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e12 {
+        format!("{}", v as i64)
+    } else if v.abs() >= 100.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+/// Markdown cell rendering of one JSON value.
+fn cell(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.replace('|', "\\|"),
+        Json::Num(n) => fnum(*n),
+        Json::Bool(b) => b.to_string(),
+        Json::Null => "-".into(),
+        other => other.to_string().replace('|', "\\|"),
+    }
+}
+
+/// Render one rows-table as GitHub markdown (first row defines columns).
+fn render_table(out: &mut String, rows: &[Json]) {
+    const MAX_ROWS: usize = 24;
+    let Some(first) = rows.first().and_then(Json::as_obj) else {
+        return;
+    };
+    let cols: Vec<&str> = first.iter().map(|(k, _)| k.as_str()).collect();
+    let _ = writeln!(out, "| {} |", cols.join(" | "));
+    let _ = writeln!(out, "|{}|", cols.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+    for row in rows.iter().take(MAX_ROWS) {
+        let cells: Vec<String> = cols
+            .iter()
+            .map(|c| row.get(c).map(cell).unwrap_or_else(|| "-".into()))
+            .collect();
+        let _ = writeln!(out, "| {} |", cells.join(" | "));
+    }
+    if rows.len() > MAX_ROWS {
+        let _ = writeln!(out, "\n_... {} more rows in the artifact_", rows.len() - MAX_ROWS);
+    }
+}
+
+fn render_summary(
+    benches: &[Bench],
+    gate_rows: &[(String, String, String, bool)],
+    errors: &[String],
+    failed: bool,
+) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "## Bench regression report\n");
+    let _ = writeln!(
+        out,
+        "**Verdict: {}** ({} artifacts, {} gates)\n",
+        if failed { "FAIL ❌" } else { "PASS ✅" },
+        benches.len(),
+        gate_rows.len()
+    );
+    if !gate_rows.is_empty() {
+        let _ = writeln!(out, "| gate | value | baseline | status |");
+        let _ = writeln!(out, "|---|---|---|---|");
+        for (name, value, baseline, pass) in gate_rows {
+            let _ = writeln!(
+                out,
+                "| {name} | {value} | {baseline} | {} |",
+                if *pass { "✅" } else { "❌" }
+            );
+        }
+        let _ = writeln!(out);
+    }
+    for e in errors {
+        let _ = writeln!(out, "- ⚠️ {e}");
+    }
+    if !errors.is_empty() {
+        let _ = writeln!(out);
+    }
+    for b in benches {
+        let _ = writeln!(out, "### {} (`{}`)\n", b.name, b.file);
+        if !b.rows.is_empty() {
+            render_table(&mut out, &b.rows);
+            let _ = writeln!(out);
+        }
+        for (name, rows) in &b.series {
+            let _ = writeln!(out, "<details><summary>{name}</summary>\n");
+            render_table(&mut out, rows);
+            let _ = writeln!(out, "\n</details>\n");
+        }
+    }
+    out
+}

@@ -33,6 +33,7 @@
 //! folded into the region's section CRC; section CRCs are folded into the
 //! whole-image trailer.
 
+use crate::util::cdc::{self, CdcParams};
 use crate::util::crc32;
 use crate::util::digest::Hasher128;
 
@@ -45,6 +46,95 @@ pub const DEFAULT_CHUNK_BYTES: usize = 1 << 20;
 /// self-describing, so this only guards against corrupt length fields.
 pub const MAX_CHUNK_BYTES: usize = 64 << 20;
 
+/// How Real payload bytes are tiled into chunks — the boundary *strategy*
+/// every layer (encoder, digest cache, recipes, chunk store, manifest)
+/// must agree on for a checkpoint set.
+///
+/// * `Fixed(chunk_bytes)` — the historical fixed stride. Byte-for-byte
+///   identical framing and recipes to every pre-CDC image.
+/// * `Cdc(params)` — content-defined boundaries ([`crate::util::cdc`]):
+///   an insertion or heap growth shifts only the chunks overlapping the
+///   edit; downstream chunks keep their digests and keep deduping.
+///
+/// Frames stay self-describing (every chunk carries its length), so a
+/// reader never needs the writer's strategy to *decode* — the strategy is
+/// recorded in the manifest so a restarted job keeps *writing* with the
+/// boundaries its chunk index was built from.
+///
+/// Pattern/Zero/ParentRef records and the image header/trailer metadata
+/// chunks keep their domain-tagged digests in both modes; only Real
+/// payload bytes get content-defined boundaries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Chunking {
+    /// Fixed-stride tiling at the given chunk size.
+    Fixed(usize),
+    /// Content-defined boundaries with the given size parameters.
+    Cdc(CdcParams),
+}
+
+impl Chunking {
+    /// CDC strategy with the canonical parameter derivation from a target
+    /// average chunk size (`RunConfig::chunk_bytes`), the forced-cut
+    /// ceiling clamped to what the frame decoder accepts.
+    pub fn cdc(avg: usize) -> Self {
+        let mut p = CdcParams::from_avg(avg);
+        p.max = p.max.min(MAX_CHUNK_BYTES);
+        Chunking::Cdc(p)
+    }
+
+    /// Nominal granularity: the fixed stride, or the CDC expected size.
+    /// Drain pacing, virtual-region tiling and recipe metadata charge on
+    /// this.
+    pub fn avg_bytes(&self) -> usize {
+        match self {
+            Chunking::Fixed(cb) => *cb,
+            Chunking::Cdc(p) => p.avg,
+        }
+    }
+
+    /// Mode tag (`--chunking fixed|cdc`, manifest line, logs).
+    pub fn mode_name(&self) -> &'static str {
+        match self {
+            Chunking::Fixed(_) => "fixed",
+            Chunking::Cdc(_) => "cdc",
+        }
+    }
+
+    /// Structural validity: the encoder asserts this; manifest adoption
+    /// warns and ignores values that fail it.
+    pub fn is_valid(&self) -> bool {
+        match self {
+            Chunking::Fixed(cb) => *cb > 0 && *cb <= MAX_CHUNK_BYTES,
+            Chunking::Cdc(p) => p.is_valid() && p.max <= MAX_CHUNK_BYTES,
+        }
+    }
+
+    /// Chunk lengths tiling `data` exactly (empty data → no chunks). The
+    /// single place framing and recipe emission derive boundaries from,
+    /// which is what keeps them in agreement.
+    pub fn cut_lengths(&self, data: &[u8]) -> Vec<usize> {
+        match self {
+            Chunking::Fixed(cb) => data.chunks(*cb).map(<[u8]>::len).collect(),
+            Chunking::Cdc(p) => cdc::cut_lengths(data, p),
+        }
+    }
+
+    /// Human-readable description for logs.
+    pub fn describe(&self) -> String {
+        match self {
+            Chunking::Fixed(cb) => {
+                format!("fixed({})", crate::util::bytes::human(*cb as u64))
+            }
+            Chunking::Cdc(p) => format!(
+                "cdc(min {}, avg {}, max {})",
+                crate::util::bytes::human(p.min as u64),
+                crate::util::bytes::human(p.avg as u64),
+                crate::util::bytes::human(p.max as u64)
+            ),
+        }
+    }
+}
+
 /// Number of chunks a payload of `data_len` bytes occupies.
 pub fn chunk_count(data_len: usize, chunk_bytes: usize) -> usize {
     data_len.div_ceil(chunk_bytes)
@@ -55,18 +145,40 @@ pub fn encoded_len(data_len: usize, chunk_bytes: usize) -> usize {
     4 + data_len + chunk_count(data_len, chunk_bytes) * 8
 }
 
-/// Append `data` chunk-framed to `out`, folding the frame metadata (but
-/// not the chunk bytes, which carry their own CRCs) into `section`.
+/// Encoded-size bound of a chunk-framed payload under a strategy: exact
+/// for fixed tiling, an upper bound for CDC (whose chunk count depends on
+/// content; every non-final chunk is at least `min` bytes). Used only to
+/// pre-reserve write buffers — never trusted as an exact length.
+pub fn encoded_len_bound(data_len: usize, chunking: &Chunking) -> usize {
+    match chunking {
+        Chunking::Fixed(cb) => encoded_len(data_len, *cb),
+        Chunking::Cdc(p) => 4 + data_len + (data_len / p.min + 1) * 8,
+    }
+}
+
+/// Append `data` chunk-framed to `out` on the given cut lengths (from
+/// [`Chunking::cut_lengths`]; they must tile `data` exactly), folding the
+/// frame metadata (but not the chunk bytes, which carry their own CRCs)
+/// into `section`. The frame is self-describing, so [`read_chunked`]
+/// decodes it without knowing the strategy that produced the cuts.
 pub(crate) fn write_chunked(
     out: &mut Vec<u8>,
     data: &[u8],
-    chunk_bytes: usize,
+    cuts: &[usize],
     section: &mut crc32::Hasher,
 ) {
-    let n = (chunk_count(data.len(), chunk_bytes) as u32).to_le_bytes();
+    debug_assert_eq!(
+        cuts.iter().sum::<usize>(),
+        data.len(),
+        "cut lengths must tile the payload exactly"
+    );
+    let n = (cuts.len() as u32).to_le_bytes();
     out.extend_from_slice(&n);
     section.update(&n);
-    for chunk in data.chunks(chunk_bytes) {
+    let mut off = 0usize;
+    for &clen in cuts {
+        let chunk = &data[off..off + clen];
+        off += clen;
         let len = (chunk.len() as u32).to_le_bytes();
         out.extend_from_slice(&len);
         section.update(&len);
@@ -220,6 +332,53 @@ impl ChunkRecipe {
         }
     }
 
+    /// Like [`Self::from_data`], but tiling on an arbitrary chunking
+    /// strategy: fixed strides or content-defined boundaries. Chunk
+    /// virtual bytes follow the real cut lengths (the final chunk absorbs
+    /// any excess when `file_vbytes` exceeds the data length), so for the
+    /// common `file_vbytes == data.len()` case each chunk is charged
+    /// exactly the bytes it carries — which is what makes raw CDC recipes
+    /// shift-invariant.
+    pub fn from_data_chunked(data: &[u8], chunking: &Chunking, file_vbytes: u64) -> Self {
+        assert!(chunking.is_valid(), "invalid chunking {chunking:?}");
+        let cuts = chunking.cut_lengths(data);
+        let mut recipe = ChunkRecipe {
+            chunk_bytes: chunking.avg_bytes() as u64,
+            file_vbytes,
+            chunks: Vec::with_capacity(cuts.len().max(1)),
+        };
+        if cuts.is_empty() {
+            // A zero-real-byte file still needs one (virtual) recipe entry
+            // so the virtual bytes are accounted for.
+            recipe.chunks.push(RecipeChunk {
+                digest: chunk_digest(TAG_RAW, file_vbytes, &[], &[]),
+                vbytes: file_vbytes,
+                real_off: 0,
+                real_len: 0,
+            });
+            return recipe;
+        }
+        let mut off = 0usize;
+        let mut remaining = file_vbytes;
+        for (i, &len) in cuts.iter().enumerate() {
+            let vb = if i + 1 == cuts.len() {
+                remaining
+            } else {
+                remaining.min(len as u64)
+            };
+            remaining -= vb;
+            let real = &data[off..off + len];
+            recipe.chunks.push(RecipeChunk {
+                digest: chunk_digest(TAG_RAW, vb, &[], real),
+                vbytes: vb,
+                real_off: off as u64,
+                real_len: len as u64,
+            });
+            off += len;
+        }
+        recipe
+    }
+
     /// Real (stored) bytes this recipe's chunks carry in total.
     pub fn real_bytes(&self) -> u64 {
         self.chunks.iter().map(|c| c.real_len).sum()
@@ -249,7 +408,8 @@ mod tests {
     fn roundtrip_with(data: &[u8], cb: usize) -> Vec<u8> {
         let mut out = Vec::new();
         let mut w = crc32::Hasher::new();
-        write_chunked(&mut out, data, cb, &mut w);
+        let cuts = Chunking::Fixed(cb).cut_lengths(data);
+        write_chunked(&mut out, data, &cuts, &mut w);
         assert_eq!(out.len(), encoded_len(data.len(), cb));
         let mut c = Cursor { buf: &out, pos: 0 };
         let mut r = crc32::Hasher::new();
@@ -301,7 +461,8 @@ mod tests {
             .map(|i| (i % 13) as u8)
             .collect();
         let mut out = Vec::new();
-        write_chunked(&mut out, &big, DEFAULT_CHUNK_BYTES, &mut crc32::Hasher::new());
+        let cuts = Chunking::Fixed(DEFAULT_CHUNK_BYTES).cut_lengths(&big);
+        write_chunked(&mut out, &big, &cuts, &mut crc32::Hasher::new());
         // Flip a byte inside the second chunk's data span.
         let second_data = 4 + (4 + DEFAULT_CHUNK_BYTES + 4) + 4 + 3;
         out[second_data] ^= 0x80;
@@ -317,7 +478,8 @@ mod tests {
     #[test]
     fn oversized_chunk_length_rejected() {
         let mut out = Vec::new();
-        write_chunked(&mut out, &[1, 2, 3], DEFAULT_CHUNK_BYTES, &mut crc32::Hasher::new());
+        let cuts = Chunking::Fixed(DEFAULT_CHUNK_BYTES).cut_lengths(&[1, 2, 3]);
+        write_chunked(&mut out, &[1, 2, 3], &cuts, &mut crc32::Hasher::new());
         // Corrupt the chunk length field to something absurd.
         out[4..8].copy_from_slice(&(u32::MAX).to_le_bytes());
         let mut c = Cursor { buf: &out, pos: 0 };
@@ -370,5 +532,109 @@ mod tests {
         assert_eq!(r.chunks[0].vbytes, 1000);
         assert_eq!(r.chunks[0].real_len, 0);
         assert!(r.covers(0));
+    }
+
+    // -------------------------------------------- content-defined chunking
+
+    fn noisy(seed: u64, len: usize) -> Vec<u8> {
+        crate::util::prng::test_bytes(seed, len)
+    }
+
+    #[test]
+    fn cdc_framing_roundtrips_with_the_same_reader() {
+        // Variable-length CDC frames are self-describing: the unchanged
+        // fixed-mode reader decodes them byte-identically.
+        let chunking = Chunking::cdc(1 << 10);
+        let data = noisy(5, 40 << 10);
+        let cuts = chunking.cut_lengths(&data);
+        assert!(cuts.len() > 1, "workload must span several chunks");
+        let mut out = Vec::new();
+        let mut w = crc32::Hasher::new();
+        write_chunked(&mut out, &data, &cuts, &mut w);
+        assert!(out.len() <= encoded_len_bound(data.len(), &chunking));
+        let mut c = Cursor { buf: &out, pos: 0 };
+        let mut r = crc32::Hasher::new();
+        assert_eq!(read_chunked(&mut c, &mut r, "cdc").unwrap(), data);
+        assert_eq!(c.pos, out.len());
+        assert_eq!(w.finalize(), r.finalize());
+    }
+
+    #[test]
+    fn chunking_validity_and_naming() {
+        assert!(Chunking::Fixed(1 << 20).is_valid());
+        assert!(!Chunking::Fixed(0).is_valid());
+        assert!(!Chunking::Fixed(MAX_CHUNK_BYTES + 1).is_valid());
+        assert!(Chunking::cdc(1 << 20).is_valid());
+        assert!(
+            !Chunking::Cdc(crate::util::cdc::CdcParams {
+                min: 1 << 10,
+                avg: 1 << 9,
+                max: 1 << 12,
+            })
+            .is_valid(),
+            "min above avg must be rejected"
+        );
+        assert_eq!(Chunking::Fixed(4096).mode_name(), "fixed");
+        assert_eq!(Chunking::cdc(4096).mode_name(), "cdc");
+        assert_eq!(Chunking::cdc(4096).avg_bytes(), 4096);
+    }
+
+    #[test]
+    fn from_data_chunked_fixed_covers_and_charges_exactly() {
+        let data = noisy(6, 3000);
+        let r = ChunkRecipe::from_data_chunked(&data, &Chunking::Fixed(1024), 3000);
+        assert!(r.covers(3000));
+        assert_eq!(r.real_bytes(), 3000);
+        assert_eq!(r.chunks.iter().map(|c| c.vbytes).sum::<u64>(), 3000);
+    }
+
+    #[test]
+    fn cdc_recipe_survives_mid_data_insertion() {
+        // The failure mode fixed chunking has: insert a span mid-file and
+        // the fixed grid re-keys every downstream chunk, while CDC re-uses
+        // the digests of everything outside the edit window.
+        let chunking = Chunking::cdc(1 << 10);
+        let base = noisy(7, 128 << 10);
+        let ins_at = 16 << 10;
+        // Deliberately NOT a multiple of the chunk size: a stride-aligned
+        // insertion would let the fixed grid re-align by accident.
+        let mut edited = base[..ins_at].to_vec();
+        edited.extend_from_slice(&noisy(8, 3333));
+        edited.extend_from_slice(&base[ins_at..]);
+
+        let old = ChunkRecipe::from_data_chunked(&base, &chunking, base.len() as u64);
+        let new = ChunkRecipe::from_data_chunked(&edited, &chunking, edited.len() as u64);
+        let old_digests: std::collections::BTreeSet<u128> =
+            old.chunks.iter().map(|c| c.digest).collect();
+        let shared: u64 = new
+            .chunks
+            .iter()
+            .filter(|c| old_digests.contains(&c.digest))
+            .map(|c| c.vbytes)
+            .sum();
+        assert!(
+            shared as f64 >= edited.len() as f64 * 0.7,
+            "CDC must re-use >= 70% of bytes after a 4 KiB insertion \
+             (shared {} of {})",
+            shared,
+            edited.len()
+        );
+
+        // The same trace under fixed tiling loses everything downstream.
+        let fixed = Chunking::Fixed(1 << 10);
+        let fold = ChunkRecipe::from_data_chunked(&base, &fixed, base.len() as u64);
+        let fnew = ChunkRecipe::from_data_chunked(&edited, &fixed, edited.len() as u64);
+        let fold_digests: std::collections::BTreeSet<u128> =
+            fold.chunks.iter().map(|c| c.digest).collect();
+        let fshared: u64 = fnew
+            .chunks
+            .iter()
+            .filter(|c| fold_digests.contains(&c.digest))
+            .map(|c| c.vbytes)
+            .sum();
+        assert!(
+            (fshared as f64) < edited.len() as f64 * 0.2,
+            "fixed tiling must lose the downstream chunks (shared {fshared})"
+        );
     }
 }

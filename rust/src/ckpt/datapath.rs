@@ -27,7 +27,7 @@
 
 use std::time::Instant;
 
-use crate::ckpt::chunk::RecipeChunk;
+use crate::ckpt::chunk::{Chunking, RecipeChunk};
 use crate::ckpt::{encode_stream, ChunkRecipe, ImageMeta, PayloadSrc, RegionSrc, SavedRegion};
 use crate::fs::WriteReq;
 use crate::mem::{Half, RegionTable};
@@ -40,8 +40,11 @@ use crate::topology::{NodeId, RankId};
 /// `RegionTable::get_mut` / `RegionTable::clear_dirty`).
 #[derive(Clone, Debug)]
 pub struct RegionDigestCache {
-    /// Chunk granularity the entry was built with.
-    pub chunk_bytes: usize,
+    /// Chunking strategy (mode + granularity/CDC cut parameters) the entry
+    /// was built with. Part of the validity key: an entry built under one
+    /// strategy must never splice into an encode using another — the cut
+    /// points, and therefore the cached chunk digests, would not match.
+    pub chunking: Chunking,
     /// Region virtual length at populate time.
     pub vlen: u64,
     /// Encoded payload-kind tag at populate time.
@@ -60,11 +63,13 @@ pub struct RegionDigestCache {
 }
 
 impl RegionDigestCache {
-    /// Does this entry still describe region `r` at granularity
-    /// `chunk_bytes`? (Content equality is what the dirty-bit keying
-    /// guarantees; this only rules out structural drift.)
-    pub(crate) fn matches(&self, r: &RegionSrc<'_>, chunk_bytes: usize) -> bool {
-        self.chunk_bytes == chunk_bytes
+    /// Does this entry still describe region `r` under `chunking`?
+    /// (Content equality is what the dirty-bit keying guarantees; this
+    /// only rules out structural drift. Keying on the full strategy means
+    /// clean regions keep splicing their memoized CDC cut points without
+    /// re-running the boundary scan.)
+    pub(crate) fn matches(&self, r: &RegionSrc<'_>, chunking: Chunking) -> bool {
+        self.chunking == chunking
             && self.vlen == r.vlen
             && self.kind == r.payload.kind()
             && self.resident == r.payload.resident()
@@ -119,8 +124,9 @@ pub struct RankJob {
 /// Encode-wave knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct EncodeOpts {
-    /// Chunk granularity (`RunConfig::chunk_bytes`).
-    pub chunk_bytes: usize,
+    /// Chunking strategy (`RunConfig::chunking_strategy()`): fixed stride
+    /// or content-defined boundaries, with their size parameters.
+    pub chunking: Chunking,
     /// Worker threads to fan ranks across (1 = the serial path).
     pub threads: usize,
     /// Emit the content-addressed [`ChunkRecipe`] per image (staged mode).
@@ -202,7 +208,7 @@ fn encode_rank(
     let mut stats = CacheStats::default();
     let recipe = if opts.with_recipe {
         let mut rec = ChunkRecipe {
-            chunk_bytes: opts.chunk_bytes as u64,
+            chunk_bytes: opts.chunking.avg_bytes() as u64,
             file_vbytes: write_bytes,
             chunks: Vec::new(),
         };
@@ -210,7 +216,7 @@ fn encode_rank(
             &mut data,
             &meta,
             &srcs,
-            opts.chunk_bytes,
+            opts.chunking,
             Some(&mut rec),
             &mut slots,
             &mut stats,
@@ -230,7 +236,7 @@ fn encode_rank(
             &mut data,
             &meta,
             &srcs,
-            opts.chunk_bytes,
+            opts.chunking,
             None,
             &mut slots,
             &mut stats,
@@ -380,7 +386,7 @@ mod tests {
             &mut sources,
             jobs,
             &EncodeOpts {
-                chunk_bytes: CB,
+                chunking: Chunking::Fixed(CB),
                 threads,
                 with_recipe,
             },
@@ -568,5 +574,91 @@ mod tests {
             state.to_region().fingerprint(),
             tb.get("state").unwrap().fingerprint()
         );
+    }
+
+    fn wave_chunked(
+        tables: &mut [RegionTable],
+        jobs: &[RankJob],
+        threads: usize,
+        chunking: Chunking,
+    ) -> (Vec<WriteReq>, DatapathStats) {
+        let mut sources: Vec<RankSource<'_>> = tables
+            .iter_mut()
+            .map(|t| RankSource {
+                table: t,
+                step: 7,
+                rng_state: [3u8; 32],
+                upper_fds: vec![(5, "out.log".into())],
+            })
+            .collect();
+        encode_wave(
+            &mut sources,
+            jobs,
+            &EncodeOpts {
+                chunking,
+                threads,
+                with_recipe: true,
+            },
+        )
+    }
+
+    #[test]
+    fn cdc_parallel_wave_is_byte_identical_to_serial() {
+        let mk = || -> Vec<RegionTable> {
+            (0..7)
+                .map(|i| {
+                    let data: Vec<u8> = (0..9000 + 31 * i)
+                        .map(|j| ((j * 31 + i * 7) % 251) as u8)
+                        .collect();
+                    mk_table(data)
+                })
+                .collect()
+        };
+        let jobs = mk_jobs(7, None);
+        let cdc = Chunking::cdc(512);
+        let (serial, _) = wave_chunked(&mut mk(), &jobs, 1, cdc);
+        let (par, _) = wave_chunked(&mut mk(), &jobs, 4, cdc);
+        assert_eq!(serial.len(), par.len());
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a.data, b.data, "CDC parallel encode must be byte-identical");
+            assert_eq!(a.recipe, b.recipe, "CDC recipes must be identical");
+        }
+    }
+
+    #[test]
+    fn digest_cache_never_crosses_chunking_modes() {
+        // A warm entry built under one strategy must be a miss under the
+        // other — and the cross-mode encode must still be byte-identical
+        // to a cold encode of that mode.
+        let fixed = Chunking::Fixed(CB);
+        let cdc = Chunking::cdc(CB);
+        let jobs = mk_jobs(1, None);
+
+        let mut tables = vec![mk_table(vec![5u8; 4096])];
+        tables[0].clear_dirty(Half::Upper);
+        wave_chunked(&mut tables, &jobs, 1, fixed); // populate fixed entries
+        let (warm_fixed, wstats) = wave_chunked(&mut tables, &jobs, 1, fixed);
+        assert!(wstats.cache_hit_regions > 0, "fixed entries must be warm");
+
+        // Same table, CDC encode: the fixed entries must not serve it.
+        let (cdc_out, cstats) = wave_chunked(&mut tables, &jobs, 1, cdc);
+        assert_eq!(
+            cstats.cache_hit_regions, 0,
+            "a fixed-mode entry must never splice into a CDC encode"
+        );
+        let mut fresh = vec![mk_table(vec![5u8; 4096])];
+        fresh[0].clear_dirty(Half::Upper);
+        let (cdc_cold, _) = wave_chunked(&mut fresh, &jobs, 1, cdc);
+        assert_eq!(cdc_out[0].data, cdc_cold[0].data);
+        assert_eq!(cdc_out[0].recipe, cdc_cold[0].recipe);
+
+        // And the CDC encode repopulated the slots: a CDC re-encode runs
+        // warm and still matches, while a fixed encode now misses.
+        let (cdc_warm, cwstats) = wave_chunked(&mut tables, &jobs, 1, cdc);
+        assert!(cwstats.cache_hit_regions > 0, "CDC entries must be warm now");
+        assert_eq!(cdc_warm[0].data, cdc_cold[0].data);
+        let (fixed_again, fstats) = wave_chunked(&mut tables, &jobs, 1, fixed);
+        assert_eq!(fstats.cache_hit_regions, 0, "mode flip invalidates again");
+        assert_eq!(fixed_again[0].data, warm_fixed[0].data);
     }
 }

@@ -10,7 +10,9 @@
 
 use std::collections::BTreeMap;
 
+use crate::ckpt::chunk::Chunking;
 use crate::topology::RankId;
+use crate::util::cdc::CdcParams;
 
 /// A restart manifest: rank -> image path, plus job metadata.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -28,6 +30,12 @@ pub struct CkptManifest {
     /// with, so a restarted job keeps the dedup granularity consistent
     /// across its lifetime (0 = unrecorded, pre-dedup manifest).
     pub chunk_bytes: u64,
+    /// Chunk-boundary strategy the set was written with — the mode plus,
+    /// for CDC, the min/avg/max cut parameters. `None` = unrecorded
+    /// (pre-CDC manifest, implies fixed tiling at `chunk_bytes`). Restart
+    /// adopts it the same adopt-or-warn way as `chunk_bytes`, so a config
+    /// defaulting to `fixed` never mis-tiles a CDC-written set.
+    pub chunking: Option<Chunking>,
     entries: BTreeMap<u32, String>,
 }
 
@@ -39,6 +47,7 @@ impl CkptManifest {
             gen: 0,
             full_gen: None,
             chunk_bytes: 0,
+            chunking: None,
             entries: BTreeMap::new(),
         }
     }
@@ -75,6 +84,18 @@ impl CkptManifest {
         if self.chunk_bytes > 0 {
             out.push_str(&format!("chunkbytes\t{}\n", self.chunk_bytes));
         }
+        match &self.chunking {
+            Some(Chunking::Fixed(cb)) => {
+                out.push_str(&format!("chunking\tfixed:{cb}\n"));
+            }
+            Some(Chunking::Cdc(p)) => {
+                out.push_str(&format!(
+                    "chunking\tcdc:{}:{}:{}\n",
+                    p.min, p.avg, p.max
+                ));
+            }
+            None => {}
+        }
         for (rank, path) in &self.entries {
             out.push_str(&format!("{rank}\t{path}\n"));
         }
@@ -92,6 +113,23 @@ impl CkptManifest {
                 "gen" => m.gen = v.parse().ok()?,
                 "fullgen" => m.full_gen = Some(v.parse().ok()?),
                 "chunkbytes" => m.chunk_bytes = v.parse().ok()?,
+                "chunking" => {
+                    // `fixed:<bytes>` or `cdc:<min>:<avg>:<max>`. Semantic
+                    // validation (power-of-two, ordering) is restart's
+                    // job; this only requires the numbers to parse.
+                    let (mode, rest) = v.split_once(':')?;
+                    m.chunking = Some(match mode {
+                        "fixed" => Chunking::Fixed(rest.parse().ok()?),
+                        "cdc" => {
+                            let mut it = rest.splitn(3, ':');
+                            let min = it.next()?.parse().ok()?;
+                            let avg = it.next()?.parse().ok()?;
+                            let max = it.next()?.parse().ok()?;
+                            Chunking::Cdc(CdcParams { min, avg, max })
+                        }
+                        _ => return None,
+                    });
+                }
                 rank => {
                     m.entries.insert(rank.parse().ok()?, v.to_string());
                 }
@@ -116,6 +154,7 @@ mod tests {
         m.gen = 3;
         m.full_gen = Some(2);
         m.chunk_bytes = 1 << 20;
+        m.chunking = Some(Chunking::cdc(1 << 20));
         for r in 0..512u32 {
             m.add(RankId(r), crate::ckpt::image_path("job7", RankId(r)));
         }
@@ -135,6 +174,41 @@ mod tests {
         let m = CkptManifest::new("job7", 1);
         let back = CkptManifest::decode(&m.encode()).unwrap();
         assert_eq!(back.chunk_bytes, 0);
+        assert_eq!(back.chunking, None, "pre-CDC manifests decode as unrecorded");
+    }
+
+    #[test]
+    fn chunking_line_roundtrips_both_modes() {
+        let mut m = CkptManifest::new("j", 1);
+        m.chunking = Some(Chunking::Fixed(1 << 16));
+        let back = CkptManifest::decode(&m.encode()).unwrap();
+        assert_eq!(back.chunking, Some(Chunking::Fixed(1 << 16)));
+
+        m.chunking = Some(Chunking::Cdc(CdcParams {
+            min: 4096,
+            avg: 16384,
+            max: 65536,
+        }));
+        let back = CkptManifest::decode(&m.encode()).unwrap();
+        assert_eq!(
+            back.chunking,
+            Some(Chunking::Cdc(CdcParams {
+                min: 4096,
+                avg: 16384,
+                max: 65536,
+            }))
+        );
+    }
+
+    #[test]
+    fn garbled_chunking_line_fails_decode() {
+        // The manifest carries no CRC: a malformed chunking value must
+        // fail the decode (restart then reports a bad manifest) rather
+        // than silently yielding a half-parsed strategy.
+        assert!(CkptManifest::decode(b"chunking\trolling:9\n").is_none());
+        assert!(CkptManifest::decode(b"chunking\tcdc:1:2\n").is_none());
+        assert!(CkptManifest::decode(b"chunking\tcdc:a:b:c\n").is_none());
+        assert!(CkptManifest::decode(b"chunking\tfixed\n").is_none());
     }
 
     #[test]

@@ -47,7 +47,7 @@ use crate::util::crc32;
 
 use self::datapath::{CacheSlot, CacheStats, RegionDigestCache};
 
-pub use chunk::ChunkRecipe;
+pub use chunk::{ChunkRecipe, Chunking};
 
 const MAGIC: &[u8; 8] = b"MANAIMG1";
 const VERSION: u32 = 4;
@@ -187,9 +187,14 @@ pub struct ImageMeta<'a> {
     pub upper_fds: &'a [(u32, String)],
 }
 
-/// Exact encoded size of an image built from `regions` — the write path
-/// reserves once and never reallocates mid-encode.
-fn encoded_size_src(meta: &ImageMeta<'_>, regions: &[RegionSrc<'_>], chunk_bytes: usize) -> usize {
+/// Encoded size of an image built from `regions` — exact under fixed
+/// tiling (the write path reserves once and never reallocates mid-encode);
+/// an upper bound under CDC, whose chunk count depends on content.
+fn encoded_size_src(
+    meta: &ImageMeta<'_>,
+    regions: &[RegionSrc<'_>],
+    chunking: Chunking,
+) -> usize {
     let mut n = 8 + 4 + 4 + 8 + 32; // magic..rng
     n += 4 + meta.parent.map_or(0, str::len);
     n += 4;
@@ -202,7 +207,7 @@ fn encoded_size_src(meta: &ImageMeta<'_>, regions: &[RegionSrc<'_>], chunk_bytes
         n += match r.payload {
             PayloadSrc::Zero => 0,
             PayloadSrc::Pattern(_) => 8,
-            PayloadSrc::Real(data) => chunk::encoded_len(data.len(), chunk_bytes),
+            PayloadSrc::Real(data) => chunk::encoded_len_bound(data.len(), &chunking),
             PayloadSrc::ParentRef { .. } => 8,
         };
         n += 4; // section crc
@@ -226,17 +231,14 @@ pub(crate) fn encode_stream(
     out: &mut Vec<u8>,
     meta: &ImageMeta<'_>,
     regions: &[RegionSrc<'_>],
-    chunk_bytes: usize,
+    chunking: Chunking,
     mut recipe: Option<&mut ChunkRecipe>,
     slots: &mut [CacheSlot],
     stats: &mut CacheStats,
 ) {
-    assert!(
-        chunk_bytes > 0 && chunk_bytes <= chunk::MAX_CHUNK_BYTES,
-        "chunk_bytes {chunk_bytes} out of range"
-    );
+    assert!(chunking.is_valid(), "invalid chunking {chunking:?}");
     let base = out.len();
-    out.reserve(encoded_size_src(meta, regions, chunk_bytes));
+    out.reserve(encoded_size_src(meta, regions, chunking));
     out.extend_from_slice(MAGIC);
     put_u32(out, VERSION);
     put_u32(out, meta.rank.0);
@@ -271,7 +273,7 @@ pub(crate) fn encode_stream(
                 return None;
             }
             let c = slot.entry.as_deref()?;
-            (c.matches(r, chunk_bytes) && (!want_recipe || !c.rel_chunks.is_empty()))
+            (c.matches(r, chunking) && (!want_recipe || !c.rel_chunks.is_empty()))
                 .then_some(c)
         });
         if let Some(c) = hit {
@@ -291,6 +293,10 @@ pub(crate) fn encode_stream(
         put_u64(out, r.addr);
         put_u64(out, r.vlen);
         put_str(out, r.name);
+        // Real payloads derive their cut layout once; framing and recipe
+        // emission both walk it, which is what keeps them in agreement for
+        // content-defined boundaries.
+        let mut real_cuts: Vec<usize> = Vec::new();
         let crc = match r.payload {
             PayloadSrc::Zero => {
                 out.push(0);
@@ -308,7 +314,8 @@ pub(crate) fn encode_stream(
                 out.push(2);
                 let mut sec = crc32::Hasher::new();
                 sec.update(&out[start..]);
-                chunk::write_chunked(out, data, chunk_bytes, &mut sec);
+                real_cuts = chunking.cut_lengths(data);
+                chunk::write_chunked(out, data, &real_cuts, &mut sec);
                 sec.finalize()
             }
             PayloadSrc::ParentRef { fingerprint } => {
@@ -320,7 +327,7 @@ pub(crate) fn encode_stream(
         put_u32(out, crc);
         trailer.update(&crc.to_le_bytes());
         if let Some(rec) = recipe.as_deref_mut() {
-            push_region_chunks(rec, r, base, start, out, chunk_bytes);
+            push_region_chunks(rec, r, base, start, out, chunking, &real_cuts);
         }
         // Populate the slot for the next generation — but only for a
         // region that was *clean* at harvest time: an entry built while
@@ -344,7 +351,7 @@ pub(crate) fn encode_stream(
                         _ => Vec::new(),
                     };
                 slot.entry = Some(Box::new(RegionDigestCache {
-                    chunk_bytes,
+                    chunking,
                     vlen: r.vlen,
                     kind: r.payload.kind(),
                     resident: r.payload.resident(),
@@ -509,9 +516,10 @@ impl CkptImage {
 
     // ------------------------------------------------------------- encode
 
-    /// Exact encoded size (avoids reallocation in the write hot path).
-    /// Delegates to the view-based [`encoded_size_src`] so the size math
-    /// and the encoder share one definition of the wire format.
+    /// Exact encoded size under fixed tiling (avoids reallocation in the
+    /// write hot path). Delegates to the view-based [`encoded_size_src`]
+    /// so the size math and the encoder share one definition of the wire
+    /// format.
     fn encoded_size(&self, chunk_bytes: usize) -> usize {
         let meta = ImageMeta {
             rank: self.rank,
@@ -521,7 +529,7 @@ impl CkptImage {
             upper_fds: &self.upper_fds,
         };
         let srcs: Vec<RegionSrc<'_>> = self.regions.iter().map(SavedRegion::as_src).collect();
-        encoded_size_src(&meta, &srcs, chunk_bytes)
+        encoded_size_src(&meta, &srcs, Chunking::Fixed(chunk_bytes))
     }
 
     pub fn encode(&self) -> Vec<u8> {
@@ -532,28 +540,46 @@ impl CkptImage {
 
     /// Streaming encoder at the default chunk granularity.
     pub fn encode_into(&self, out: &mut Vec<u8>) {
-        self.encode_impl(out, chunk::DEFAULT_CHUNK_BYTES, None);
+        self.encode_impl(out, Chunking::Fixed(chunk::DEFAULT_CHUNK_BYTES), None);
     }
 
-    /// Streaming encoder with explicit chunk granularity
+    /// Streaming encoder with explicit fixed chunk granularity
     /// (`RunConfig::chunk_bytes` / `--chunk-bytes`).
     pub fn encode_into_sized(&self, out: &mut Vec<u8>, chunk_bytes: usize) {
-        self.encode_impl(out, chunk_bytes, None);
+        self.encode_impl(out, Chunking::Fixed(chunk_bytes), None);
+    }
+
+    /// Streaming encoder with an explicit chunking strategy
+    /// (`RunConfig::chunking_strategy()` / `--chunking fixed|cdc`).
+    pub fn encode_into_chunked(&self, out: &mut Vec<u8>, chunking: Chunking) {
+        self.encode_impl(out, chunking, None);
     }
 
     /// Streaming encoder that also emits the image's [`ChunkRecipe`]: the
     /// ordered per-chunk content digests the dedup-aware drain consumes,
     /// with each chunk's virtual size and the encoded-byte span it carries.
     /// Concatenating the real spans in order reproduces `out`'s new bytes
-    /// exactly (checked by a debug assertion).
+    /// exactly (checked by a debug assertion). Fixed tiling at
+    /// `chunk_bytes`; see [`Self::encode_with_recipe_chunked`] for CDC.
     pub fn encode_with_recipe(&self, out: &mut Vec<u8>, chunk_bytes: usize) -> ChunkRecipe {
+        self.encode_with_recipe_chunked(out, Chunking::Fixed(chunk_bytes))
+    }
+
+    /// [`Self::encode_with_recipe`] generalized over the chunking
+    /// strategy: under `Chunking::Cdc` the recipe tiles Real payloads on
+    /// content-defined boundaries.
+    pub fn encode_with_recipe_chunked(
+        &self,
+        out: &mut Vec<u8>,
+        chunking: Chunking,
+    ) -> ChunkRecipe {
         let mut recipe = ChunkRecipe {
-            chunk_bytes: chunk_bytes as u64,
+            chunk_bytes: chunking.avg_bytes() as u64,
             file_vbytes: self.write_bytes(),
             chunks: Vec::new(),
         };
         let base = out.len();
-        self.encode_impl(out, chunk_bytes, Some(&mut recipe));
+        self.encode_impl(out, chunking, Some(&mut recipe));
         debug_assert!(
             recipe.covers((out.len() - base) as u64),
             "recipe real spans must tile the encoded image"
@@ -578,7 +604,7 @@ impl CkptImage {
     fn encode_impl(
         &self,
         out: &mut Vec<u8>,
-        chunk_bytes: usize,
+        chunking: Chunking,
         recipe: Option<&mut ChunkRecipe>,
     ) {
         let meta = ImageMeta {
@@ -593,7 +619,7 @@ impl CkptImage {
             out,
             &meta,
             &srcs,
-            chunk_bytes,
+            chunking,
             recipe,
             &mut [],
             &mut CacheStats::default(),
@@ -750,15 +776,24 @@ fn push_meta_chunk(rec: &mut ChunkRecipe, base: usize, span_start: usize, out: &
 ///   seed) carry no real bytes and dedup purely on semantic content;
 /// * a chunk's digest covers any real bytes it carries, so equal digests
 ///   always reproduce equal stored bytes.
+///
+/// `real_cuts` are the framed cut lengths of a Real payload (the same
+/// layout [`chunk::write_chunked`] just emitted); other payload kinds
+/// ignore it. Pattern/Zero virtual tiles and Real virtual tails always
+/// sit on the *average*-granularity grid — content-defined boundaries
+/// apply only to real payload bytes, so those domains chunk identically
+/// in both modes.
 fn push_region_chunks(
     rec: &mut ChunkRecipe,
     r: &RegionSrc<'_>,
     base: usize,
     start: usize,
     out: &[u8],
-    chunk_bytes: usize,
+    chunking: Chunking,
+    real_cuts: &[usize],
 ) {
     let end = out.len();
+    let chunk_bytes = chunking.avg_bytes();
     let span = |a: usize, b: usize| ((a - base) as u64, (b - a) as u64);
     match r.payload {
         PayloadSrc::Zero => {
@@ -802,29 +837,108 @@ fn push_region_chunks(
                 });
             }
         }
-        PayloadSrc::Real(data) => {
-            // Framed data chunks align with the recipe chunks; the framing
-            // after the record metadata is: n_chunks u32, then per chunk
-            // [len u32][bytes][crc u32], then the section CRC u32.
-            let nd = chunk::chunk_count(data.len(), chunk_bytes);
-            let nv = chunk_count_virtual(r.vlen, chunk_bytes);
-            let n = nd.max(nv);
-            let meta_end = start + 8 + 8 + 4 + r.name.len() + 1 + 4; // ..n_chunks
-            // Payload fingerprint, needed only by virtual-tail chunks —
-            // computed lazily so a fully-resident region (the common
-            // case) never hashes its bytes a second time.
-            let fp = if n > nd { crate::util::fnv1a(data) } else { 0 };
-            let mut cursor = meta_end;
-            for i in 0..n {
-                let vb = chunk_vb(r.vlen, i, chunk_bytes);
-                if i < nd {
-                    let clen = chunk_bytes.min(data.len() - i * chunk_bytes);
+        PayloadSrc::Real(data) => match chunking {
+            Chunking::Fixed(chunk_bytes) => {
+                // Framed data chunks align with the recipe chunks; the
+                // framing after the record metadata is: n_chunks u32, then
+                // per chunk [len u32][bytes][crc u32], then the section
+                // CRC u32. This arm is the historical fixed-grid layout,
+                // preserved bit-exactly (digests included) so fixed-mode
+                // images and recipes stay identical to pre-CDC output.
+                let nd = chunk::chunk_count(data.len(), chunk_bytes);
+                let nv = chunk_count_virtual(r.vlen, chunk_bytes);
+                let n = nd.max(nv);
+                let meta_end = start + 8 + 8 + 4 + r.name.len() + 1 + 4; // ..n_chunks
+                // Payload fingerprint, needed only by virtual-tail chunks —
+                // computed lazily so a fully-resident region (the common
+                // case) never hashes its bytes a second time.
+                let fp = if n > nd { crate::util::fnv1a(data) } else { 0 };
+                let mut cursor = meta_end;
+                for i in 0..n {
+                    let vb = chunk_vb(r.vlen, i, chunk_bytes);
+                    if i < nd {
+                        let clen = chunk_bytes.min(data.len() - i * chunk_bytes);
+                        let mut cend = cursor + 4 + clen + 4;
+                        if i + 1 == nd {
+                            cend += 4; // the last framed chunk carries the section CRC
+                            debug_assert_eq!(cend, end);
+                        }
+                        let cstart = if i == 0 { start } else { cursor };
+                        let (real_off, real_len) = span(cstart, cend);
+                        rec.chunks.push(chunk::RecipeChunk {
+                            digest: chunk::chunk_digest(
+                                chunk::TAG_REAL,
+                                vb,
+                                &[],
+                                &out[cstart..cend],
+                            ),
+                            vbytes: vb,
+                            real_off,
+                            real_len,
+                        });
+                        cursor = cend;
+                    } else if nd == 0 && i == 0 {
+                        // Empty data: chunk 0 still carries the whole record.
+                        let (real_off, real_len) = span(start, end);
+                        rec.chunks.push(chunk::RecipeChunk {
+                            digest: chunk::chunk_digest(
+                                chunk::TAG_REAL,
+                                vb,
+                                &[],
+                                &out[start..end],
+                            ),
+                            vbytes: vb,
+                            real_off,
+                            real_len,
+                        });
+                    } else {
+                        // Purely virtual tail (vlen exceeds the resident
+                        // bytes): dedup on the payload fingerprint + position.
+                        let mut extra = [0u8; 16];
+                        extra[..8].copy_from_slice(&fp.to_le_bytes());
+                        extra[8..].copy_from_slice(&(i as u64).to_le_bytes());
+                        rec.chunks.push(chunk::RecipeChunk {
+                            digest: chunk::chunk_digest(chunk::TAG_REAL, vb, &extra, &[]),
+                            vbytes: vb,
+                            real_off: 0,
+                            real_len: 0,
+                        });
+                    }
+                }
+            }
+            Chunking::Cdc(_) => {
+                // Content-defined layout: walk the cut lengths the framing
+                // just emitted. A chunk is charged the virtual bytes it
+                // carries (capped by what remains of `vlen`), so for the
+                // fully-resident common case a downstream chunk's
+                // (vbytes, frame bytes) pair — and therefore its digest —
+                // is a pure function of its content, which is exactly the
+                // shift invariance the fixed grid cannot provide.
+                let nd = real_cuts.len();
+                let meta_end = start + 8 + 8 + 4 + r.name.len() + 1 + 4; // ..n_chunks
+                let mut remaining_vb = r.vlen;
+                let mut cursor = meta_end;
+                if nd == 0 {
+                    // Empty data: one chunk carries the whole record.
+                    let vb = remaining_vb.min(chunk_bytes as u64);
+                    remaining_vb -= vb;
+                    let (real_off, real_len) = span(start, end);
+                    rec.chunks.push(chunk::RecipeChunk {
+                        digest: chunk::chunk_digest(chunk::TAG_REAL, vb, &[], &out[start..end]),
+                        vbytes: vb,
+                        real_off,
+                        real_len,
+                    });
+                }
+                for (i, &clen) in real_cuts.iter().enumerate() {
                     let mut cend = cursor + 4 + clen + 4;
                     if i + 1 == nd {
                         cend += 4; // the last framed chunk carries the section CRC
                         debug_assert_eq!(cend, end);
                     }
                     let cstart = if i == 0 { start } else { cursor };
+                    let vb = remaining_vb.min(clen as u64);
+                    remaining_vb -= vb;
                     let (real_off, real_len) = span(cstart, cend);
                     rec.chunks.push(chunk::RecipeChunk {
                         digest: chunk::chunk_digest(
@@ -838,35 +952,31 @@ fn push_region_chunks(
                         real_len,
                     });
                     cursor = cend;
-                } else if nd == 0 && i == 0 {
-                    // Empty data: chunk 0 still carries the whole record.
-                    let (real_off, real_len) = span(start, end);
-                    rec.chunks.push(chunk::RecipeChunk {
-                        digest: chunk::chunk_digest(
-                            chunk::TAG_REAL,
-                            vb,
-                            &[],
-                            &out[start..end],
-                        ),
-                        vbytes: vb,
-                        real_off,
-                        real_len,
-                    });
-                } else {
-                    // Purely virtual tail (vlen exceeds the resident
-                    // bytes): dedup on the payload fingerprint + position.
-                    let mut extra = [0u8; 16];
-                    extra[..8].copy_from_slice(&fp.to_le_bytes());
-                    extra[8..].copy_from_slice(&(i as u64).to_le_bytes());
-                    rec.chunks.push(chunk::RecipeChunk {
-                        digest: chunk::chunk_digest(chunk::TAG_REAL, vb, &extra, &[]),
-                        vbytes: vb,
-                        real_off: 0,
-                        real_len: 0,
-                    });
+                }
+                // Purely virtual tail (vlen exceeds the resident bytes):
+                // no content to cut, so it tiles on the average grid and
+                // dedups on the payload fingerprint + position, exactly as
+                // under fixed tiling.
+                if remaining_vb > 0 {
+                    let fp = crate::util::fnv1a(data);
+                    let mut i = nd.max(1);
+                    while remaining_vb > 0 {
+                        let vb = remaining_vb.min(chunk_bytes as u64);
+                        remaining_vb -= vb;
+                        let mut extra = [0u8; 16];
+                        extra[..8].copy_from_slice(&fp.to_le_bytes());
+                        extra[8..].copy_from_slice(&(i as u64).to_le_bytes());
+                        rec.chunks.push(chunk::RecipeChunk {
+                            digest: chunk::chunk_digest(chunk::TAG_REAL, vb, &extra, &[]),
+                            vbytes: vb,
+                            real_off: 0,
+                            real_len: 0,
+                        });
+                        i += 1;
+                    }
                 }
             }
-        }
+        },
         PayloadSrc::ParentRef { fingerprint } => {
             // Zero virtual bytes (write_bytes excludes ParentRefs); one
             // chunk carrying the ~30-byte reference record.
@@ -1415,5 +1525,147 @@ mod tests {
             state_ptr,
             "the incremental's own dirty payload must stay in place"
         );
+    }
+
+    // ------------------------------------------ content-defined chunking
+
+    fn noisy(seed: u64, len: usize) -> Vec<u8> {
+        crate::util::prng::test_bytes(seed, len)
+    }
+
+    fn image_with_state(data: Vec<u8>) -> CkptImage {
+        CkptImage {
+            rank: RankId(2),
+            step: 9,
+            rng_state: [4u8; 32],
+            parent: None,
+            upper_fds: vec![(3, "traj.xtc".into())],
+            regions: vec![
+                SavedRegion {
+                    addr: 0x1000_0000_0000,
+                    vlen: data.len() as u64,
+                    name: "mana.state".into(),
+                    payload: SavedPayload::Full(Payload::Real(data)),
+                },
+                SavedRegion {
+                    addr: 0x2000_0000_0000,
+                    vlen: 1 << 20,
+                    name: "mana.heap".into(),
+                    payload: SavedPayload::Full(Payload::Pattern(77)),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn cdc_image_roundtrips_and_recipe_covers() {
+        // CDC-framed images decode with the unchanged reader (frames are
+        // self-describing), and the recipe tiles the encoded bytes.
+        let img = image_with_state(noisy(1, 48 << 10));
+        let chunking = Chunking::cdc(4096);
+        let mut bytes = Vec::new();
+        let rec = img.encode_with_recipe_chunked(&mut bytes, chunking);
+        assert_eq!(CkptImage::decode(&bytes).unwrap(), img);
+        assert!(rec.covers(bytes.len() as u64));
+        assert_eq!(
+            rec.chunks.iter().map(|c| c.vbytes).sum::<u64>(),
+            img.write_bytes()
+        );
+        assert_eq!(rec.chunk_bytes, 4096);
+        // Reassembly from real spans is byte-identical.
+        let mut rebuilt = Vec::new();
+        for c in &rec.chunks {
+            rebuilt.extend_from_slice(
+                &bytes[c.real_off as usize..(c.real_off + c.real_len) as usize],
+            );
+        }
+        assert_eq!(rebuilt, bytes);
+    }
+
+    #[test]
+    fn cdc_recipe_reuses_digests_across_a_region_insertion() {
+        // The tentpole claim at the image level: grow a Real region by a
+        // mid-region insertion; under CDC the recipe re-uses the digests
+        // of everything outside the edit window, while fixed tiling loses
+        // every downstream chunk.
+        let base = noisy(2, 96 << 10);
+        let ins_at = 16 << 10;
+        // Deliberately NOT a multiple of the chunk size: a stride-aligned
+        // insertion would let the fixed grid re-align by accident.
+        let mut edited = base[..ins_at].to_vec();
+        edited.extend_from_slice(&noisy(3, 3333));
+        edited.extend_from_slice(&base[ins_at..]);
+        let shared_fraction = |chunking: Chunking| {
+            let g0 = image_with_state(base.clone());
+            let g1 = image_with_state(edited.clone());
+            let (mut b0, mut b1) = (Vec::new(), Vec::new());
+            let r0 = g0.encode_with_recipe_chunked(&mut b0, chunking);
+            let r1 = g1.encode_with_recipe_chunked(&mut b1, chunking);
+            let old: std::collections::BTreeSet<u128> =
+                r0.chunks.iter().map(|c| c.digest).collect();
+            let shared: u64 = r1
+                .chunks
+                .iter()
+                .filter(|c| old.contains(&c.digest))
+                .map(|c| c.vbytes)
+                .sum();
+            shared as f64 / r1.file_vbytes as f64
+        };
+        let cdc = shared_fraction(Chunking::cdc(2048));
+        let fixed = shared_fraction(Chunking::Fixed(2048));
+        assert!(
+            cdc >= 0.7,
+            "CDC must re-use >= 70% of virtual bytes after an insertion (got {cdc:.2})"
+        );
+        assert!(
+            fixed < cdc,
+            "fixed tiling ({fixed:.2}) must lose more than CDC ({cdc:.2})"
+        );
+    }
+
+    #[test]
+    fn fixed_mode_recipe_is_unchanged_by_the_strategy_plumbing() {
+        // encode_with_recipe (fixed) and the strategy-generalized call
+        // with Chunking::Fixed must be bit-identical in bytes and recipe —
+        // the fixed-mode compatibility guarantee.
+        let img = sample_image();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        let ra = img.encode_with_recipe(&mut a, 4096);
+        let rb = img.encode_with_recipe_chunked(&mut b, Chunking::Fixed(4096));
+        assert_eq!(a, b);
+        assert_eq!(ra, rb);
+    }
+
+    #[test]
+    fn pattern_and_zero_domains_are_chunking_mode_independent() {
+        // Pattern/Zero/meta chunks keep their avg-grid domains: an image
+        // with no Real payload must produce the *identical* recipe under
+        // fixed and CDC — only Real payload bytes get content boundaries.
+        let img = CkptImage {
+            rank: RankId(1),
+            step: 4,
+            rng_state: [6u8; 32],
+            parent: None,
+            upper_fds: vec![],
+            regions: vec![
+                SavedRegion {
+                    addr: 0x1000_0000_0000,
+                    vlen: 1 << 20,
+                    name: "mana.heap".into(),
+                    payload: SavedPayload::Full(Payload::Pattern(99)),
+                },
+                SavedRegion {
+                    addr: 0x2000_0000_0000,
+                    vlen: (1 << 18) + 100,
+                    name: "mana.bss".into(),
+                    payload: SavedPayload::Full(Payload::Zero),
+                },
+            ],
+        };
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        let rf = img.encode_with_recipe(&mut a, 4096);
+        let rc = img.encode_with_recipe_chunked(&mut b, Chunking::cdc(4096));
+        assert_eq!(a, b, "pattern/zero encodings are chunking-independent");
+        assert_eq!(rf, rc, "pattern/zero recipes are chunking-independent");
     }
 }

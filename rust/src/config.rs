@@ -5,7 +5,7 @@
 //! 2019 MANA) and "production" mode (all on — this work), and per-fix
 //! ablations in between.
 
-use crate::ckpt::chunk::DEFAULT_CHUNK_BYTES;
+use crate::ckpt::chunk::{Chunking, DEFAULT_CHUNK_BYTES};
 use crate::faults::FaultPlan;
 use crate::fdreg::FdPolicy;
 use crate::fs::FsKind;
@@ -127,6 +127,36 @@ impl Fixes {
     }
 }
 
+/// Chunk-boundary strategy for image framing and content-addressed dedup
+/// (`--chunking fixed|cdc`). The actual size parameters ride
+/// `RunConfig::chunk_bytes`; [`RunConfig::chunking_strategy`] combines the
+/// two into the [`Chunking`] every encode layer consumes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChunkingMode {
+    /// Historical fixed-stride tiling (byte-identical to pre-CDC images).
+    Fixed,
+    /// Content-defined (gear rolling hash) boundaries: insertions and heap
+    /// growth no longer shift-invalidate downstream chunks.
+    Cdc,
+}
+
+impl ChunkingMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChunkingMode::Fixed => "fixed",
+            ChunkingMode::Cdc => "cdc",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "fixed" => Some(ChunkingMode::Fixed),
+            "cdc" | "content" | "content-defined" => Some(ChunkingMode::Cdc),
+            _ => None,
+        }
+    }
+}
+
 /// Tiered-storage staging (SCR-style asynchronous BB→Lustre drain):
 /// checkpoints complete when the fast-tier write lands, and images drain
 /// to the durable tier in the background across subsequent supersteps.
@@ -174,8 +204,14 @@ pub struct RunConfig {
     /// Chunk granularity (bytes) for image framing and content-addressed
     /// dedup (`--chunk-bytes`; power of two). Smaller chunks dedup finer
     /// but cost more index entries; the manifest records the value so a
-    /// restarted job keeps the granularity consistent.
+    /// restarted job keeps the granularity consistent. Under CDC this is
+    /// the *expected* (average) chunk size.
     pub chunk_bytes: usize,
+    /// Chunk-boundary strategy (`--chunking fixed|cdc`). Recorded in the
+    /// manifest with its derived CDC parameters so `restart_from` adopts
+    /// the writer's mode — mixing strategies across a job's lifetime would
+    /// stop unchanged regions from deduping against older generations.
+    pub chunking: ChunkingMode,
     /// Coordination plane: `None` = the flat DMTCP root (O(ranks) control
     /// messages at one endpoint per phase); `Some(f)` = the hierarchical
     /// plane (`--coord-fanout f`, f >= 2) — per-node sub-coordinators in a
@@ -209,6 +245,7 @@ impl RunConfig {
             mem_per_rank: None,
             incremental: false,
             chunk_bytes: DEFAULT_CHUNK_BYTES,
+            chunking: ChunkingMode::Fixed,
             coord_fanout: None,
             encode_threads: None,
         }
@@ -224,6 +261,16 @@ impl RunConfig {
     pub fn with_coord_tree(mut self, fanout: u32) -> Self {
         self.coord_fanout = Some(fanout.max(2));
         self
+    }
+
+    /// The chunk-boundary strategy every encode layer consumes: the mode
+    /// knob plus the size parameters derived from `chunk_bytes` (CDC:
+    /// `min = avg/4`, `max = 4*avg`, expected size = `chunk_bytes`).
+    pub fn chunking_strategy(&self) -> Chunking {
+        match self.chunking {
+            ChunkingMode::Fixed => Chunking::Fixed(self.chunk_bytes),
+            ChunkingMode::Cdc => Chunking::cdc(self.chunk_bytes),
+        }
     }
 }
 
@@ -259,6 +306,31 @@ mod tests {
         let c = RunConfig::new(AppKind::Synthetic, 4);
         assert_eq!(c.chunk_bytes, 1 << 20);
         assert!(c.chunk_bytes.is_power_of_two());
+    }
+
+    #[test]
+    fn chunking_defaults_fixed_and_strategy_tracks_chunk_bytes() {
+        let mut c = RunConfig::new(AppKind::Synthetic, 4);
+        assert_eq!(c.chunking, ChunkingMode::Fixed);
+        assert_eq!(c.chunking_strategy(), Chunking::Fixed(1 << 20));
+        c.chunking = ChunkingMode::Cdc;
+        c.chunk_bytes = 64 << 10;
+        let s = c.chunking_strategy();
+        assert_eq!(s, Chunking::cdc(64 << 10));
+        assert_eq!(s.avg_bytes(), 64 << 10);
+        assert!(s.is_valid());
+    }
+
+    #[test]
+    fn chunking_mode_parse() {
+        assert_eq!(ChunkingMode::parse("fixed"), Some(ChunkingMode::Fixed));
+        assert_eq!(ChunkingMode::parse("cdc"), Some(ChunkingMode::Cdc));
+        assert_eq!(
+            ChunkingMode::parse("content-defined"),
+            Some(ChunkingMode::Cdc)
+        );
+        assert_eq!(ChunkingMode::parse("rolling?"), None);
+        assert_eq!(ChunkingMode::Cdc.name(), "cdc");
     }
 
     #[test]

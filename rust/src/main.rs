@@ -124,9 +124,9 @@ USAGE: mana <command> [--flags]
 COMMANDS:
   run        --app gromacs|hpcg|vasp|synthetic --ranks N [--steps S]
              [--threads T] [--fs bb|lustre|staged] [--keep-fulls N]
-             [--chunk-bytes N] [--coord-fanout F] [--encode-threads N]
-             [--ckpt-at STEP] [--restart] [--real-compute]
-             [--fixes on|off] [--link static|dynamic]
+             [--chunk-bytes N] [--chunking fixed|cdc] [--coord-fanout F]
+             [--encode-threads N] [--ckpt-at STEP] [--restart]
+             [--real-compute] [--fixes on|off] [--link static|dynamic]
   usage      [--jobs N] print the Fig. 1 application census
   mapping    --ranks N [--threads T] print rank→node/pid mapping
   preempt    [--ranks N] run the preempt-queue scenario
@@ -185,6 +185,12 @@ fn build_config(args: &Args) -> Result<RunConfig> {
             );
         }
         cfg.chunk_bytes = n;
+    }
+    if let Some(m) = args.get("chunking") {
+        // Chunk-boundary strategy: fixed stride, or content-defined (gear
+        // rolling hash) boundaries whose expected size is --chunk-bytes.
+        cfg.chunking = mana::config::ChunkingMode::parse(m)
+            .with_context(|| format!("unknown --chunking {m} (fixed|cdc)"))?;
     }
     if let Some(v) = args.get("encode-threads") {
         // Checkpoint WRITE-path worker count; omit for the host's
@@ -259,6 +265,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let mut out = Json::obj()
         .set("job", cfg.job.as_str())
         .set("app", cfg.app.name())
+        .set("chunking", cfg.chunking.name())
         .set("ranks", cfg.ranks as u64)
         .set("steps", sim.step)
         .set("virtual_secs", sim.now().as_secs())

@@ -676,7 +676,7 @@ mod tests {
 
     fn dummy_cache() -> RegionDigestCache {
         RegionDigestCache {
-            chunk_bytes: 4096,
+            chunking: crate::ckpt::chunk::Chunking::Fixed(4096),
             vlen: 0x100,
             kind: 2,
             resident: 3,

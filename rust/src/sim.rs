@@ -644,7 +644,7 @@ impl JobSim {
             })
             .collect();
         let opts = datapath::EncodeOpts {
-            chunk_bytes: self.cfg.chunk_bytes,
+            chunking: self.cfg.chunking_strategy(),
             threads: datapath::resolve_threads(self.cfg.encode_threads),
             with_recipe: staged,
         };
@@ -709,6 +709,10 @@ impl JobSim {
         let mut manifest = CkptManifest::new(&self.cfg.job, self.step);
         manifest.gen = self.ckpt_gen;
         manifest.chunk_bytes = self.cfg.chunk_bytes as u64;
+        // Record the boundary strategy (mode + derived CDC parameters):
+        // restart must keep writing with the boundaries this set's chunk
+        // index was built from, or dedup collapses across the restart.
+        manifest.chunking = Some(self.cfg.chunking_strategy());
         manifest.full_gen = if incremental {
             self.last_full_gen
         } else {
@@ -915,6 +919,70 @@ impl JobSim {
                         cfg.job,
                         manifest.chunk_bytes
                     );
+                }
+            }
+            // Adopt the writer's chunk-boundary strategy the same way: a
+            // config defaulting to `fixed` must not re-tile a CDC-written
+            // set (or vice versa) — the durable chunk index was built on
+            // the writer's boundaries, and later generations only dedup
+            // against it if restart keeps cutting the same way. Validated
+            // like --chunk-bytes: the manifest is plain text with no CRC,
+            // so a corrupt value must not poison the encoder.
+            if manifest.chunking.is_none()
+                && cfg.chunking != crate::config::ChunkingMode::Fixed
+            {
+                // Pre-CDC manifest: the set was written by a build that
+                // only knew fixed tiling. A cdc-configured restart must
+                // not re-tile against its fixed-grid chunk index.
+                log_info!(
+                    "sim",
+                    "restart {}: manifest predates content-defined chunking; \
+                     forcing fixed tiling",
+                    cfg.job
+                );
+                cfg.chunking = crate::config::ChunkingMode::Fixed;
+            }
+            if let Some(mc) = manifest.chunking {
+                let want = cfg.chunking_strategy();
+                if mc != want {
+                    let avg = mc.avg_bytes();
+                    if mc.is_valid() && avg.is_power_of_two() {
+                        log_info!(
+                            "sim",
+                            "restart {}: adopting manifest chunking {} (cfg had {})",
+                            cfg.job,
+                            mc.describe(),
+                            want.describe()
+                        );
+                        cfg.chunk_bytes = avg;
+                        cfg.chunking = match mc {
+                            crate::ckpt::chunk::Chunking::Fixed(_) => {
+                                crate::config::ChunkingMode::Fixed
+                            }
+                            crate::ckpt::chunk::Chunking::Cdc(_) => {
+                                crate::config::ChunkingMode::Cdc
+                            }
+                        };
+                        // Parameters are re-derived from the average; a
+                        // manifest carrying a non-canonical triple is
+                        // honored in mode and granularity but normalized.
+                        if cfg.chunking_strategy() != mc {
+                            log_warn!(
+                                "sim",
+                                "restart {}: manifest CDC parameters were \
+                                 non-canonical; normalized to {}",
+                                cfg.job,
+                                cfg.chunking_strategy().describe()
+                            );
+                        }
+                    } else {
+                        log_warn!(
+                            "sim",
+                            "restart {}: ignoring invalid manifest chunking {}",
+                            cfg.job,
+                            mc.describe()
+                        );
+                    }
                 }
             }
             (0..cfg.ranks)
@@ -1757,6 +1825,112 @@ mod tests {
             64 << 10,
             "restart must keep the granularity the set was written with"
         );
+    }
+
+    #[test]
+    fn staged_restart_adopts_manifest_chunking_mode() {
+        // Mixed-mode restart: the image set was written under CDC, the
+        // restarting config defaults to fixed. Restart must adopt the
+        // writer's strategy — never mis-tile new generations against the
+        // CDC-built chunk index — resume bitwise, and keep deduping from
+        // the first post-restart checkpoint on.
+        let mut cfg = staged_cfg(4, 0);
+        cfg.chunking = crate::config::ChunkingMode::Cdc;
+        cfg.chunk_bytes = 64 << 10;
+        let mut sim = JobSim::launch(cfg, None).unwrap();
+        sim.run_steps(2).unwrap();
+        sim.checkpoint().unwrap();
+        sim.finish_drain();
+        let want = sim.fingerprint();
+
+        let mut restart_cfg = sim.cfg.clone();
+        restart_cfg.chunking = crate::config::ChunkingMode::Fixed;
+        restart_cfg.chunk_bytes = crate::ckpt::chunk::DEFAULT_CHUNK_BYTES;
+        let fs = sim.kill();
+        let (mut resumed, _) = JobSim::restart_from(restart_cfg, None, fs).unwrap();
+        assert_eq!(
+            resumed.cfg.chunking,
+            crate::config::ChunkingMode::Cdc,
+            "restart must adopt the manifest's chunking mode"
+        );
+        assert_eq!(
+            resumed.cfg.chunk_bytes,
+            64 << 10,
+            "restart must adopt the manifest's granularity"
+        );
+        assert_eq!(resumed.fingerprint(), want, "restart must be bitwise");
+
+        // Proof restart never mis-tiles: the next (mostly-clean) full
+        // checkpoint must cut the same boundaries the durable index was
+        // built on and dedup heavily against the pre-kill generation.
+        resumed.run_steps(1).unwrap();
+        let rep = resumed.checkpoint().unwrap();
+        assert!(
+            rep.dedup_ratio() > 0.5,
+            "post-restart generation must dedup against the pre-kill index \
+             (got {:.2})",
+            rep.dedup_ratio()
+        );
+    }
+
+    #[test]
+    fn restart_forces_fixed_for_pre_cdc_manifest() {
+        // A manifest with no chunking line (written by a pre-CDC build)
+        // implies fixed tiling: a cdc-configured restart must fall back to
+        // fixed rather than re-tile against the fixed-grid chunk index.
+        let cfg = staged_cfg(4, 0);
+        let mut sim = JobSim::launch(cfg, None).unwrap();
+        sim.run_steps(2).unwrap();
+        sim.checkpoint().unwrap();
+        let mpath = CkptManifest::manifest_path(&sim.cfg.job);
+        {
+            // Strip the chunking line in place, emulating the old format.
+            let ts = sim.fs.tiered_mut().unwrap();
+            let bytes = ts
+                .fast()
+                .peek(&mpath)
+                .map(|(_, b)| b.to_vec())
+                .expect("manifest on the fast tier");
+            let mut m = CkptManifest::decode(&bytes).unwrap();
+            assert!(m.chunking.is_some(), "current writer records chunking");
+            m.chunking = None;
+            let data = m.encode();
+            ts.fast_mut()
+                .insert_raw(&mpath, data.len() as u64, data)
+                .unwrap();
+        }
+        let mut restart_cfg = sim.cfg.clone();
+        restart_cfg.chunking = crate::config::ChunkingMode::Cdc;
+        let fs = sim.kill();
+        let (resumed, _) = JobSim::restart_from(restart_cfg, None, fs).unwrap();
+        assert_eq!(
+            resumed.cfg.chunking,
+            crate::config::ChunkingMode::Fixed,
+            "pre-CDC sets must restart in fixed mode regardless of cfg"
+        );
+    }
+
+    #[test]
+    fn cdc_staged_cr_is_bitwise_identical() {
+        // A full C/R cycle with CDC chunking end to end: checkpoints,
+        // durable drain, kill, restart, resume — bitwise identical to an
+        // uninterrupted run.
+        let mut cfg = staged_cfg(4, 0);
+        cfg.chunking = crate::config::ChunkingMode::Cdc;
+        cfg.chunk_bytes = 64 << 10;
+        let mut cont = JobSim::launch(cfg.clone(), None).unwrap();
+        cont.run_steps(4).unwrap();
+        let want = cont.fingerprint();
+
+        let mut sim = JobSim::launch(cfg.clone(), None).unwrap();
+        sim.run_steps(2).unwrap();
+        sim.checkpoint().unwrap();
+        sim.finish_drain();
+        let fs = sim.kill();
+        let (mut resumed, _) = JobSim::restart_from(cfg, None, fs).unwrap();
+        resumed.run_steps(2).unwrap();
+        assert_eq!(resumed.fingerprint(), want, "CDC C/R must be bitwise");
+        assert!(!resumed.any_corruption());
     }
 
     #[test]

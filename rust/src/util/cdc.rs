@@ -1,0 +1,298 @@
+//! Content-defined chunking (CDC): gear rolling-hash boundary finder.
+//!
+//! Fixed-stride chunk tiling breaks down the moment a rank's heap grows
+//! or shifts: one insertion re-keys every downstream chunk and the drain
+//! re-ships the whole region. CDC cuts chunk boundaries where the *content*
+//! says so — a position is a boundary iff a rolling hash of the preceding
+//! [`WINDOW`] bytes falls under a threshold — so an insertion disturbs only
+//! the chunks overlapping the edit window; boundaries downstream
+//! resynchronize and every later chunk keeps its old bytes (and therefore
+//! its old content digest, which is what makes the dedup survive growth).
+//!
+//! Properties the rest of the system leans on:
+//!
+//! * **Pure content markers** — whether byte position `j` ends a chunk
+//!   depends only on `data[j-63..=j]` (plus the min/max clamps walked from
+//!   the previous cut), never on absolute offsets. The warm-up window is
+//!   allowed to reach *across* the previous cut, which is what makes the
+//!   marker set shift-invariant.
+//! * **Normalized expected size** — the per-byte cut probability is
+//!   `1/(avg - min)` (a 64-bit threshold compare, not a power-of-two mask),
+//!   so the expected chunk size is `min + (avg - min) = avg`: the expected
+//!   granularity tracks `--chunk-bytes` exactly, not a power-of-two
+//!   approximation of it.
+//! * **Hard bounds** — every chunk is at most `max` bytes (a forced cut)
+//!   and, except the final chunk of a buffer, at least `min` bytes.
+//! * **Determinism** — the gear table derives from a fixed seed; the same
+//!   bytes cut identically on every host, build and run (chunk digests and
+//!   the durable chunk index depend on this).
+
+use std::sync::OnceLock;
+
+use crate::util::prng::SplitMix64;
+
+/// Rolling-hash window: the gear hash shifts one bit per byte, so after 64
+/// updates a byte has left the hash entirely.
+pub const WINDOW: usize = 64;
+
+/// Smallest permitted `min` chunk size (keeps the threshold math and the
+/// judged-region arithmetic sane).
+pub const MIN_FLOOR: usize = 16;
+
+/// CDC size parameters: `min <= expected(avg) <= max`, normalized so the
+/// expected chunk size equals `avg` (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CdcParams {
+    /// No cut is considered before `min` bytes into a chunk.
+    pub min: usize,
+    /// Expected (mean) chunk size; tracks `RunConfig::chunk_bytes`.
+    pub avg: usize,
+    /// Forced-cut ceiling.
+    pub max: usize,
+}
+
+impl CdcParams {
+    /// Derive the canonical parameter triple from a target average:
+    /// `min = avg/4` (floored at [`MIN_FLOOR`]), `max = 4*avg`. This is
+    /// the derivation the manifest records and restart re-validates.
+    pub fn from_avg(avg: usize) -> Self {
+        let avg = avg.max(MIN_FLOOR * 2);
+        CdcParams {
+            min: (avg / 4).max(MIN_FLOOR),
+            avg,
+            max: avg.saturating_mul(4),
+        }
+    }
+
+    /// Structural validity (the encoder asserts this; restart adoption
+    /// warns and ignores manifests that fail it).
+    pub fn is_valid(&self) -> bool {
+        self.min >= MIN_FLOOR && self.min < self.avg && self.avg <= self.max
+    }
+
+    /// Per-byte cut threshold: judged bytes cut with probability
+    /// `1/(avg - min)`, giving expected chunk size `avg`.
+    fn threshold(&self) -> u64 {
+        u64::MAX / ((self.avg - self.min).max(1) as u64)
+    }
+}
+
+/// 256-entry gear table from a fixed seed (deterministic across builds).
+fn gear() -> &'static [u64; 256] {
+    static TABLE: OnceLock<[u64; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut sm = SplitMix64::new(0x4d41_4e41_4344_4331); // "MANACDC1"
+        let mut t = [0u64; 256];
+        for e in t.iter_mut() {
+            *e = sm.next_u64();
+        }
+        t
+    })
+}
+
+/// Content-defined cut points of `data`: strictly increasing end offsets,
+/// the last equal to `data.len()`. Empty data has no cuts (zero chunks),
+/// mirroring fixed tiling.
+pub fn cut_points(data: &[u8], p: &CdcParams) -> Vec<usize> {
+    assert!(p.is_valid(), "invalid CDC params {p:?}");
+    let g = gear();
+    let thr = p.threshold();
+    let n = data.len();
+    let mut cuts = Vec::with_capacity(n / p.avg + 1);
+    let mut start = 0usize;
+    while start < n {
+        // First *judged* ingest position: min bytes into the chunk.
+        let first = start + p.min;
+        if first >= n {
+            cuts.push(n); // short final chunk
+            break;
+        }
+        let hard = (start + p.max).min(n);
+        // Warm the rolling window. The warm-up may reach across the
+        // previous cut (and, at the very front of the buffer, clamp to
+        // offset 0) — marker status must be a function of content alone.
+        let mut h = 0u64;
+        for &b in &data[first.saturating_sub(WINDOW)..first] {
+            h = (h << 1).wrapping_add(g[b as usize]);
+        }
+        let mut cut = hard;
+        for (j, &b) in data[first..hard].iter().enumerate() {
+            h = (h << 1).wrapping_add(g[b as usize]);
+            if h <= thr {
+                cut = first + j + 1;
+                break;
+            }
+        }
+        cuts.push(cut);
+        start = cut;
+    }
+    cuts
+}
+
+/// Chunk lengths tiling `data` exactly (differences of [`cut_points`]).
+pub fn cut_lengths(data: &[u8], p: &CdcParams) -> Vec<usize> {
+    let cuts = cut_points(data, p);
+    let mut prev = 0usize;
+    cuts.into_iter()
+        .map(|c| {
+            let len = c - prev;
+            prev = c;
+            len
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    fn params(avg: usize) -> CdcParams {
+        CdcParams::from_avg(avg)
+    }
+
+    fn random_bytes(seed: u64, len: usize) -> Vec<u8> {
+        crate::util::prng::test_bytes(seed, len)
+    }
+
+    #[test]
+    fn from_avg_derivation() {
+        let p = params(1 << 20);
+        assert_eq!(p.min, 1 << 18);
+        assert_eq!(p.avg, 1 << 20);
+        assert_eq!(p.max, 1 << 22);
+        assert!(p.is_valid());
+        // Tiny averages clamp min to the floor.
+        let tiny = params(64);
+        assert_eq!(tiny.min, MIN_FLOOR);
+        assert!(tiny.is_valid());
+    }
+
+    #[test]
+    fn cuts_tile_exactly_and_respect_bounds() {
+        let p = params(1 << 10);
+        let data = random_bytes(7, 100 * (1 << 10));
+        let cuts = cut_points(&data, &p);
+        assert_eq!(*cuts.last().unwrap(), data.len());
+        let mut prev = 0usize;
+        for (i, &c) in cuts.iter().enumerate() {
+            assert!(c > prev, "cut offsets strictly increase");
+            let len = c - prev;
+            assert!(len <= p.max, "chunk {i} exceeds max: {len}");
+            if i + 1 < cuts.len() {
+                assert!(len >= p.min, "non-final chunk {i} under min: {len}");
+            }
+            prev = c;
+        }
+        let lens = cut_lengths(&data, &p);
+        assert_eq!(lens.iter().sum::<usize>(), data.len());
+        assert_eq!(lens.len(), cuts.len());
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let p = params(256);
+        assert!(cut_points(&[], &p).is_empty());
+        assert!(cut_lengths(&[], &p).is_empty());
+        // Shorter than min: one chunk.
+        assert_eq!(cut_points(&[1, 2, 3], &p), vec![3]);
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let p = params(512);
+        let data = random_bytes(9, 64 << 10);
+        assert_eq!(cut_points(&data, &p), cut_points(&data, &p));
+    }
+
+    #[test]
+    fn expected_size_tracks_avg() {
+        // Mean chunk size over random data must land near avg (the
+        // threshold normalization), well within 2x either way.
+        let p = params(1 << 10);
+        let data = random_bytes(11, 512 << 10);
+        let cuts = cut_points(&data, &p);
+        let mean = data.len() / cuts.len();
+        assert!(
+            mean > p.avg / 2 && mean < p.avg * 2,
+            "mean chunk {mean} far from avg {}",
+            p.avg
+        );
+    }
+
+    #[test]
+    fn constant_data_hits_hard_cuts() {
+        // Pathological content (no marker ever fires, or one fires
+        // everywhere) must still respect the min/max clamps.
+        let p = params(512);
+        for fill in [0u8, 0xA5] {
+            let data = vec![fill; 10_000];
+            let cuts = cut_points(&data, &p);
+            let mut prev = 0;
+            for (i, &c) in cuts.iter().enumerate() {
+                let len = c - prev;
+                assert!(len <= p.max);
+                if i + 1 < cuts.len() {
+                    assert!(len >= p.min);
+                }
+                prev = c;
+            }
+            assert_eq!(prev, data.len());
+        }
+    }
+
+    #[test]
+    fn insertion_resynchronizes_boundaries() {
+        // The tentpole property, deterministic instance: insert a few
+        // hundred bytes mid-buffer; boundaries after the edit window must
+        // resynchronize with the old ones and then match exactly.
+        let p = params(1 << 10);
+        let base = random_bytes(21, 256 << 10);
+        let ins_at = 32 << 10;
+        let ins = random_bytes(22, 700);
+        let mut shifted = base[..ins_at].to_vec();
+        shifted.extend_from_slice(&ins);
+        shifted.extend_from_slice(&base[ins_at..]);
+
+        let old: Vec<usize> = cut_points(&base, &p);
+        let new: Vec<usize> = cut_points(&shifted, &p);
+        // Map new cuts past the insertion back into old coordinates.
+        let delta = ins.len();
+        let new_mapped: std::collections::BTreeSet<usize> = new
+            .iter()
+            .filter(|&&c| c > ins_at + delta)
+            .map(|&c| c - delta)
+            .collect();
+        let resync = old
+            .iter()
+            .copied()
+            .find(|c| *c > ins_at && new_mapped.contains(c))
+            .expect("boundaries must resynchronize after an insertion");
+        // Once resynchronized, every later old boundary reappears.
+        for &c in old.iter().filter(|&&c| c >= resync) {
+            assert!(
+                new_mapped.contains(&c),
+                "old boundary {c} lost after resync at {resync}"
+            );
+        }
+        // And resync happens promptly (well inside the untouched suffix).
+        assert!(
+            resync < ins_at + 8 * p.max,
+            "resync at {resync} too far past the edit at {ins_at}"
+        );
+    }
+
+    #[test]
+    fn prefix_before_insertion_is_untouched() {
+        let p = params(512);
+        let base = random_bytes(31, 64 << 10);
+        let ins_at = 40 << 10;
+        let mut shifted = base[..ins_at].to_vec();
+        shifted.extend_from_slice(&[9u8; 100]);
+        shifted.extend_from_slice(&base[ins_at..]);
+        let old = cut_points(&base, &p);
+        let new = cut_points(&shifted, &p);
+        // Every cut strictly before the insertion point is identical.
+        let old_pre: Vec<usize> = old.iter().copied().filter(|&c| c <= ins_at).collect();
+        let new_pre: Vec<usize> = new.iter().copied().filter(|&c| c <= ins_at).collect();
+        assert_eq!(old_pre, new_pre, "cuts before the edit must not move");
+    }
+}

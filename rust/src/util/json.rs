@@ -1,8 +1,11 @@
-//! Tiny JSON writer (no serde offline).
+//! Tiny JSON writer + reader (no serde offline).
 //!
 //! Benches and the CLI emit machine-readable reports (EXPERIMENTS.md is
 //! generated from them); this module provides just enough JSON to do that
-//! correctly, including string escaping and stable key order.
+//! correctly, including string escaping and stable key order. The reader
+//! ([`Json::parse`]) exists for the `bench_report` regression harness,
+//! which aggregates and validates the `BENCH_*.json` artifacts the benches
+//! write.
 
 use std::fmt::Write as _;
 
@@ -105,6 +108,231 @@ impl Json {
     }
 }
 
+// ------------------------------------------------------------- accessors
+
+impl Json {
+    /// Object field lookup (first match; our writer never duplicates keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(fields) => Some(fields),
+            _ => None,
+        }
+    }
+}
+
+// -------------------------------------------------------------- parsing
+
+impl Json {
+    /// Parse a complete JSON document. Strict enough for the artifacts
+    /// this crate writes (objects, arrays, strings with the escapes the
+    /// writer emits plus `\uXXXX`, numbers, booleans, null); returns
+    /// `None` on any syntax error or trailing garbage.
+    pub fn parse(s: &str) -> Option<Json> {
+        let b = s.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(b, &mut pos, 0)?;
+        skip_ws(b, &mut pos);
+        if pos == b.len() {
+            Some(v)
+        } else {
+            None
+        }
+    }
+}
+
+/// Nesting cap: parsing recurses per level, so a corrupt artifact made of
+/// repeated `[`s must become a clean parse error, not a stack overflow.
+const MAX_PARSE_DEPTH: u32 = 128;
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, c: u8) -> Option<()> {
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == c {
+        *pos += 1;
+        Some(())
+    } else {
+        None
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize, depth: u32) -> Option<Json> {
+    if depth > MAX_PARSE_DEPTH {
+        return None;
+    }
+    skip_ws(b, pos);
+    match *b.get(*pos)? {
+        b'{' => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Some(Json::Obj(fields));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos)?;
+                expect(b, pos, b':')?;
+                let val = parse_value(b, pos, depth + 1)?;
+                fields.push((key, val));
+                skip_ws(b, pos);
+                match b.get(*pos)? {
+                    b',' => *pos += 1,
+                    b'}' => {
+                        *pos += 1;
+                        return Some(Json::Obj(fields));
+                    }
+                    _ => return None,
+                }
+            }
+        }
+        b'[' => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Some(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(b, pos, depth + 1)?);
+                skip_ws(b, pos);
+                match b.get(*pos)? {
+                    b',' => *pos += 1,
+                    b']' => {
+                        *pos += 1;
+                        return Some(Json::Arr(items));
+                    }
+                    _ => return None,
+                }
+            }
+        }
+        b'"' => parse_string(b, pos).map(Json::Str),
+        b't' => {
+            if b.len() >= *pos + 4 && &b[*pos..*pos + 4] == b"true" {
+                *pos += 4;
+                Some(Json::Bool(true))
+            } else {
+                None
+            }
+        }
+        b'f' => {
+            if b.len() >= *pos + 5 && &b[*pos..*pos + 5] == b"false" {
+                *pos += 5;
+                Some(Json::Bool(false))
+            } else {
+                None
+            }
+        }
+        b'n' => {
+            if b.len() >= *pos + 4 && &b[*pos..*pos + 4] == b"null" {
+                *pos += 4;
+                Some(Json::Null)
+            } else {
+                None
+            }
+        }
+        b'-' | b'0'..=b'9' => {
+            let start = *pos;
+            *pos += 1;
+            while *pos < b.len()
+                && matches!(b[*pos], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+            {
+                *pos += 1;
+            }
+            std::str::from_utf8(&b[start..*pos])
+                .ok()?
+                .parse::<f64>()
+                .ok()
+                .map(Json::Num)
+        }
+        _ => None,
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Option<String> {
+    skip_ws(b, pos);
+    if *b.get(*pos)? != b'"' {
+        return None;
+    }
+    *pos += 1;
+    // Accumulate raw bytes and validate UTF-8 once at the end: the input
+    // came from a &str, so unescaped spans are valid by construction, and
+    // a single final check keeps parsing O(n).
+    let mut out: Vec<u8> = Vec::new();
+    loop {
+        match *b.get(*pos)? {
+            b'"' => {
+                *pos += 1;
+                return String::from_utf8(out).ok();
+            }
+            b'\\' => {
+                *pos += 1;
+                match *b.get(*pos)? {
+                    b'"' => out.push(b'"'),
+                    b'\\' => out.push(b'\\'),
+                    b'/' => out.push(b'/'),
+                    b'n' => out.push(b'\n'),
+                    b'r' => out.push(b'\r'),
+                    b't' => out.push(b'\t'),
+                    b'b' => out.push(8),
+                    b'f' => out.push(12),
+                    b'u' => {
+                        let hex = b.get(*pos + 1..*pos + 5)?;
+                        let code =
+                            u32::from_str_radix(std::str::from_utf8(hex).ok()?, 16).ok()?;
+                        // Surrogates (which our writer never emits) map to
+                        // the replacement character rather than failing.
+                        let c = char::from_u32(code).unwrap_or('\u{fffd}');
+                        let mut buf = [0u8; 4];
+                        out.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+                        *pos += 4;
+                    }
+                    _ => return None,
+                }
+                *pos += 1;
+            }
+            raw => {
+                out.push(raw);
+                *pos += 1;
+            }
+        }
+    }
+}
+
 impl From<bool> for Json {
     fn from(b: bool) -> Json {
         Json::Bool(b)
@@ -176,5 +404,76 @@ mod tests {
         arr.push("x");
         let j = Json::obj().set("xs", arr).set("ok", true);
         assert_eq!(j.to_string(), r#"{"xs":[1,"x"],"ok":true}"#);
+    }
+
+    // ------------------------------------------------------------ parsing
+
+    #[test]
+    fn parse_roundtrips_writer_output() {
+        let mut arr = Json::Arr(vec![]);
+        arr.push(Json::obj().set("ratio", 0.731).set("pass", true));
+        arr.push(Json::Null);
+        let j = Json::obj()
+            .set("bench", "staged_drain")
+            .set("rows", arr)
+            .set("count", 3u64)
+            .set("note", "a\"b\\c\nd\ttab");
+        let text = j.to_string();
+        let back = Json::parse(&text).expect("writer output must parse");
+        assert_eq!(back, j);
+        assert_eq!(back.to_string(), text, "parse/serialize is stable");
+    }
+
+    #[test]
+    fn parse_accessors() {
+        let j = Json::parse(r#"{"a": 1.5, "b": "x", "c": [1, 2], "d": {"e": null}}"#)
+            .unwrap();
+        assert_eq!(j.get("a").and_then(Json::as_f64), Some(1.5));
+        assert_eq!(j.get("b").and_then(Json::as_str), Some("x"));
+        assert_eq!(j.get("c").and_then(Json::as_arr).map(<[Json]>::len), Some(2));
+        assert_eq!(j.get("d").and_then(|d| d.get("e")), Some(&Json::Null));
+        assert_eq!(j.get("missing"), None);
+    }
+
+    #[test]
+    fn parse_numbers_and_literals() {
+        assert_eq!(Json::parse("-3.25e2"), Some(Json::Num(-325.0)));
+        assert_eq!(Json::parse(" true "), Some(Json::Bool(true)));
+        assert_eq!(Json::parse("false"), Some(Json::Bool(false)));
+        assert_eq!(Json::parse("null"), Some(Json::Null));
+        assert_eq!(Json::parse("[]"), Some(Json::Arr(vec![])));
+        assert_eq!(Json::parse("{}"), Some(Json::Obj(vec![])));
+    }
+
+    #[test]
+    fn parse_unicode_escape_and_multibyte_passthrough() {
+        // \uXXXX escape decodes; literal multi-byte UTF-8 passes through.
+        let escaped = "\"a\\u00e9b\"";
+        assert_eq!(Json::parse(escaped), Some(Json::Str("a\u{e9}b".into())));
+        assert_eq!(Json::parse("\"aéb\""), Some(Json::Str("aéb".into())));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in [
+            "",
+            "{",
+            "[1,",
+            "{\"a\"}",
+            "{\"a\":}",
+            "tru",
+            "1 2",
+            "{\"a\":1,}",
+            "\"unterminated",
+            "{'single': 1}",
+        ] {
+            assert_eq!(Json::parse(bad), None, "must reject {bad:?}");
+        }
+        // Nesting past the depth cap is a clean error, never a stack
+        // overflow (the bench-report binary parses untrusted artifacts).
+        let deep = "[".repeat(100_000);
+        assert_eq!(Json::parse(&deep), None);
+        let ok = format!("{}1{}", "[".repeat(64), "]".repeat(64));
+        assert!(Json::parse(&ok).is_some(), "shallow nesting still parses");
     }
 }

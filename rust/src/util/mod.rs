@@ -6,6 +6,7 @@
 //! the run config — never from the wall clock.
 
 pub mod bytes;
+pub mod cdc;
 pub mod crc32;
 pub mod digest;
 pub mod json;

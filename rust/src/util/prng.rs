@@ -112,6 +112,15 @@ impl Xoshiro256 {
     }
 }
 
+/// Deterministic pseudo-random bytes for tests: one shared generator so
+/// every chunking/dedup test draws from the same distribution (the CDC
+/// boundary tests are sensitive to byte statistics).
+#[cfg(test)]
+pub(crate) fn test_bytes(seed: u64, len: usize) -> Vec<u8> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..len).map(|_| (rng.next_u64() & 0xff) as u8).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -228,6 +228,13 @@ fn prop_parallel_datapath_bitwise_matches_serial_and_warm_matches_cold() {
     run("parallel datapath bitwise", 30, |g| {
         let ranks = g.range(1, 6) as usize;
         let chunk_bytes = 1usize << g.range(6, 13); // 64 B .. 8 KiB
+        // Sweep both boundary strategies: the byte-identity guarantee must
+        // hold for content-defined cuts exactly as for the fixed grid.
+        let chunking = if g.bool() {
+            mana::ckpt::Chunking::Fixed(chunk_bytes)
+        } else {
+            mana::ckpt::Chunking::cdc(chunk_bytes)
+        };
         let threads = g.range(2, 6) as usize;
         let with_recipe = g.bool();
         let incremental = g.bool();
@@ -275,7 +282,7 @@ fn prop_parallel_datapath_bitwise_matches_serial_and_warm_matches_cold() {
             })
             .collect();
         let opts_for = |threads: usize| EncodeOpts {
-            chunk_bytes,
+            chunking,
             threads,
             with_recipe,
         };
@@ -325,5 +332,129 @@ fn prop_parallel_datapath_bitwise_matches_serial_and_warm_matches_cold() {
                 "every clean region must hit on the warm pass"
             );
         }
+    });
+}
+
+/// Invariant (content-defined chunking): boundaries are shift-invariant.
+/// For any random min/avg/max parameters, inserting a random span into a
+/// buffer resynchronizes the cut points: boundaries before the edit are
+/// untouched, and from the first re-aligned boundary on, every old
+/// boundary reappears (equivalently, all chunks after the insertion
+/// window re-use their old digests — the exact failure mode fixed
+/// chunking has today).
+#[test]
+fn prop_cdc_boundaries_shift_invariant() {
+    use mana::util::cdc::{cut_points, CdcParams};
+    use std::collections::BTreeSet;
+
+    run("cdc boundaries shift invariant", 40, |g| {
+        // Random parameter triple: avg 256 B .. 4 KiB, min in
+        // [16, avg/2], max in [2*avg, 8*avg].
+        let avg = 1usize << g.range(8, 12);
+        let min = g.range(16, (avg / 2) as u64) as usize;
+        let max = (avg as u64 * g.range(2, 8)) as usize;
+        let p = CdcParams { min, avg, max };
+        assert!(p.is_valid(), "{p:?}");
+
+        let len = g.range(40 * avg as u64, 80 * avg as u64) as usize;
+        let base: Vec<u8> = (0..len).map(|_| g.range(0, 255) as u8).collect();
+        let ins_at = g.range(avg as u64, 8 * avg as u64) as usize;
+        let ins_len = g.range(1, 2 * avg as u64) as usize;
+        let ins: Vec<u8> = (0..ins_len).map(|_| g.range(0, 255) as u8).collect();
+        let mut edited = base[..ins_at].to_vec();
+        edited.extend_from_slice(&ins);
+        edited.extend_from_slice(&base[ins_at..]);
+
+        let old = cut_points(&base, &p);
+        let new = cut_points(&edited, &p);
+
+        // Structural sanity on both tilings.
+        for (cuts, total) in [(&old, base.len()), (&new, edited.len())] {
+            assert_eq!(*cuts.last().unwrap(), total);
+            let mut prev = 0usize;
+            for (i, &c) in cuts.iter().enumerate() {
+                assert!(c > prev);
+                assert!(c - prev <= p.max, "chunk over max");
+                if i + 1 < cuts.len() {
+                    assert!(c - prev >= p.min, "non-final chunk under min");
+                }
+                prev = c;
+            }
+        }
+
+        // Cuts strictly before the edit must be identical.
+        let old_pre: Vec<usize> = old.iter().copied().filter(|&c| c <= ins_at).collect();
+        let new_pre: Vec<usize> = new.iter().copied().filter(|&c| c <= ins_at).collect();
+        assert_eq!(old_pre, new_pre, "cuts before the edit moved");
+
+        // Map new cuts past the insertion back into old coordinates and
+        // find the first re-aligned boundary; after it, the boundary
+        // sequences must agree exactly in both directions.
+        let new_mapped: BTreeSet<usize> = new
+            .iter()
+            .filter(|&&c| c > ins_at + ins_len)
+            .map(|&c| c - ins_len)
+            .collect();
+        let resync = old
+            .iter()
+            .copied()
+            .find(|&c| c > ins_at && new_mapped.contains(&c))
+            .expect("boundaries must resynchronize after an insertion");
+        let old_set: BTreeSet<usize> =
+            old.iter().copied().filter(|&c| c >= resync).collect();
+        let new_set: BTreeSet<usize> =
+            new_mapped.into_iter().filter(|&c| c >= resync).collect();
+        assert_eq!(
+            old_set, new_set,
+            "boundary sequences must be identical from the resync point on"
+        );
+        assert!(
+            !old_set.is_empty(),
+            "the suffix must be long enough to make the check meaningful"
+        );
+    });
+}
+
+/// Invariant: raw CDC recipes re-use the digests of every chunk whose
+/// boundaries resynchronized — the dedup-level statement of the boundary
+/// property above, across random parameters.
+#[test]
+fn prop_cdc_recipes_reuse_digests_after_insertion() {
+    use mana::ckpt::{ChunkRecipe, Chunking};
+    use std::collections::BTreeSet;
+
+    run("cdc recipes reuse digests", 25, |g| {
+        let avg = 1usize << g.range(9, 12); // 512 B .. 4 KiB
+        let chunking = Chunking::cdc(avg);
+        let len = g.range(60 * avg as u64, 100 * avg as u64) as usize;
+        let base: Vec<u8> = (0..len).map(|_| g.range(0, 255) as u8).collect();
+        let ins_at = g.range(avg as u64, 8 * avg as u64) as usize;
+        let ins_len = g.range(1, 2 * avg as u64) as usize;
+        let ins: Vec<u8> = (0..ins_len).map(|_| g.range(0, 255) as u8).collect();
+        let mut edited = base[..ins_at].to_vec();
+        edited.extend_from_slice(&ins);
+        edited.extend_from_slice(&base[ins_at..]);
+
+        let old = ChunkRecipe::from_data_chunked(&base, &chunking, base.len() as u64);
+        let new = ChunkRecipe::from_data_chunked(&edited, &chunking, edited.len() as u64);
+        let old_digests: BTreeSet<u128> = old.chunks.iter().map(|c| c.digest).collect();
+        let shared: u64 = new
+            .chunks
+            .iter()
+            .filter(|c| old_digests.contains(&c.digest))
+            .map(|c| c.vbytes)
+            .sum();
+        // Everything outside the prefix-edit-resync window re-uses its
+        // digest. The window is bounded loosely (insertion + a handful of
+        // max-size chunks); the bulk of the buffer must dedup.
+        let lost_bound = (ins_at + ins_len + 16 * 4 * avg) as u64;
+        let total = edited.len() as u64;
+        if total > lost_bound {
+            assert!(
+                shared >= total - lost_bound,
+                "shared {shared} of {total} (window bound {lost_bound})"
+            );
+        }
+        assert!(shared > 0, "some chunks must always dedup");
     });
 }
