@@ -161,12 +161,16 @@ pub fn encoded_len_bound(data_len: usize, chunking: &Chunking) -> usize {
 /// frame metadata (but not the chunk bytes, which carry their own CRCs)
 /// into `section`. The frame is self-describing, so [`read_chunked`]
 /// decodes it without knowing the strategy that produced the cuts.
+///
+/// Returns the per-chunk CRC32s in cut order: the digest cache memoizes
+/// them so a later partial re-encode can re-frame clean chunks without
+/// re-hashing their bytes.
 pub(crate) fn write_chunked(
     out: &mut Vec<u8>,
     data: &[u8],
     cuts: &[usize],
     section: &mut crc32::Hasher,
-) {
+) -> Vec<u32> {
     debug_assert_eq!(
         cuts.iter().sum::<usize>(),
         data.len(),
@@ -175,6 +179,7 @@ pub(crate) fn write_chunked(
     let n = (cuts.len() as u32).to_le_bytes();
     out.extend_from_slice(&n);
     section.update(&n);
+    let mut crcs = Vec::with_capacity(cuts.len());
     let mut off = 0usize;
     for &clen in cuts {
         let chunk = &data[off..off + clen];
@@ -183,10 +188,13 @@ pub(crate) fn write_chunked(
         out.extend_from_slice(&len);
         section.update(&len);
         out.extend_from_slice(chunk);
-        let crc = crc32::hash(chunk).to_le_bytes();
+        let crc_val = crc32::hash(chunk);
+        crcs.push(crc_val);
+        let crc = crc_val.to_le_bytes();
         out.extend_from_slice(&crc);
         section.update(&crc);
     }
+    crcs
 }
 
 /// Parse a chunk-framed payload, verifying every chunk CRC and folding the

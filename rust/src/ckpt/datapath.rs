@@ -60,6 +60,19 @@ pub struct RegionDigestCache {
     /// when populated by a recipe-less encode; a recipe encode then
     /// treats the entry as a miss.
     pub rel_chunks: Vec<RecipeChunk>,
+    /// Payload cut lengths (chunk framing boundaries) at populate time.
+    /// Empty for non-Real payloads. The partial re-encode path keys chunk
+    /// reuse on these.
+    pub payload_cuts: Vec<u32>,
+    /// Per-chunk CRC32s matching `payload_cuts` — reused verbatim for
+    /// chunks no stale range touches.
+    pub chunk_crcs: Vec<u32>,
+    /// Coalesced, sorted `[off, off+len)` payload spans mutated since
+    /// populate time (recorded by `RegionTable::write_range`). Empty means
+    /// the entry describes the live bytes exactly; non-empty downgrades
+    /// the entry to chunk granularity: only chunks overlapping a stale
+    /// span are re-hashed.
+    pub stale_ranges: Vec<(u64, u64)>,
 }
 
 impl RegionDigestCache {
@@ -73,6 +86,29 @@ impl RegionDigestCache {
             && self.vlen == r.vlen
             && self.kind == r.payload.kind()
             && self.resident == r.payload.resident()
+    }
+
+    /// Record that payload bytes `[off, off+len)` were overwritten in
+    /// place: the entry stays alive at chunk granularity instead of being
+    /// discarded wholesale. Ranges are kept sorted and coalesced (touching
+    /// ranges merge) so the partial re-encode walks them in one pass.
+    pub fn note_stale(&mut self, off: u64, len: u64) {
+        if len == 0 {
+            return;
+        }
+        let (mut lo, mut hi) = (off, off + len);
+        let mut merged = Vec::with_capacity(self.stale_ranges.len() + 1);
+        for &(a, b) in &self.stale_ranges {
+            if b < lo || a > hi {
+                merged.push((a, b));
+            } else {
+                lo = lo.min(a);
+                hi = hi.max(b);
+            }
+        }
+        merged.push((lo, hi));
+        merged.sort_unstable();
+        self.stale_ranges = merged;
     }
 }
 
@@ -94,6 +130,14 @@ pub struct CacheStats {
     pub hit_regions: u64,
     /// Regions hashed fresh with their slots (re)populated.
     pub filled_regions: u64,
+    /// Virtual bytes actually run through the CRC/digest hash this encode
+    /// (misses charge the whole region; partial hits charge only the
+    /// chunks a stale range touched). The warm-generation bench gates on
+    /// this scaling with dirty *chunks*, not dirty regions.
+    pub fresh_hash_vbytes: u64,
+    /// Regions served at chunk granularity: clean chunks spliced from the
+    /// entry, stale chunks re-hashed.
+    pub partial_regions: u64,
 }
 
 /// Everything the encoder needs from one rank's live process state. The
@@ -146,6 +190,11 @@ pub struct DatapathStats {
     pub cache_hit_bytes: u64,
     pub cache_hit_regions: u64,
     pub cache_filled_regions: u64,
+    /// Regions encoded at chunk granularity (partial digest-cache hits).
+    pub cache_partial_regions: u64,
+    /// Virtual bytes hashed fresh across all ranks (see
+    /// [`CacheStats::fresh_hash_vbytes`]).
+    pub fresh_hash_bytes: u64,
     /// Encoded bytes produced across all ranks.
     pub encoded_bytes: u64,
 }
@@ -261,20 +310,37 @@ fn absorb(stats: &mut DatapathStats, req: &WriteReq, cs: CacheStats) {
     stats.cache_hit_bytes += cs.hit_vbytes;
     stats.cache_hit_regions += cs.hit_regions;
     stats.cache_filled_regions += cs.filled_regions;
+    stats.cache_partial_regions += cs.partial_regions;
+    stats.fresh_hash_bytes += cs.fresh_hash_vbytes;
     stats.encoded_bytes += req.data.len() as u64;
 }
 
-/// Encode every rank's image, fanning ranks across worker threads, and
-/// return the write wave **in rank order** — byte-for-byte identical to
-/// the serial path regardless of thread count. Each worker owns a
-/// contiguous chunk of ranks (per-rank encodes read only that rank's
-/// state), so concatenating worker outputs in spawn order restores the
-/// original ordering.
-pub fn encode_wave(
+/// One finished rank delivered over the pipelined encode channel.
+/// `index` is the rank's position in the wave (its manifest-level order);
+/// delivery order is *completion* order.
+pub struct RankEncode {
+    pub index: usize,
+    pub req: WriteReq,
+    pub stats: CacheStats,
+}
+
+/// Encode every rank's image, delivering each finished rank to `sink` in
+/// **completion order** through a bounded channel while later ranks are
+/// still encoding — the host-side half of the pipelined write path: BB
+/// writes for early ranks can start while late ranks still encode.
+///
+/// The sink runs on the calling thread and receives every rank exactly
+/// once; placing results by `RankEncode::index` reproduces the rank-ordered
+/// wave byte-for-byte (the ordered-wave contract holds at the manifest
+/// level, not the transport level). The channel is bounded at two entries
+/// per worker so a slow consumer backpressures the encoders instead of
+/// buffering the whole wave.
+pub fn encode_wave_streaming(
     sources: &mut [RankSource<'_>],
     jobs: &[RankJob],
     opts: &EncodeOpts,
-) -> (Vec<WriteReq>, DatapathStats) {
+    sink: &mut dyn FnMut(RankEncode),
+) -> DatapathStats {
     assert_eq!(sources.len(), jobs.len(), "one source per job");
     let t0 = Instant::now();
     let n = jobs.len();
@@ -283,46 +349,86 @@ pub fn encode_wave(
         threads,
         ..DatapathStats::default()
     };
-    let mut reqs: Vec<WriteReq> = Vec::with_capacity(n);
     if threads <= 1 {
-        for (src, job) in sources.iter_mut().zip(jobs) {
+        for (i, (src, job)) in sources.iter_mut().zip(jobs).enumerate() {
             let (req, cs) = encode_rank(src, job, opts);
             absorb(&mut stats, &req, cs);
-            reqs.push(req);
+            sink(RankEncode {
+                index: i,
+                req,
+                stats: cs,
+            });
         }
     } else {
         let per = n.div_ceil(threads);
-        let parts: Vec<Vec<(WriteReq, CacheStats)>> = std::thread::scope(|scope| {
+        let (tx, rx) = std::sync::mpsc::sync_channel::<RankEncode>(threads * 2);
+        std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(threads);
             let mut rest_src: &mut [RankSource<'_>] = sources;
             let mut rest_jobs: &[RankJob] = jobs;
+            let mut base = 0usize;
             while !rest_jobs.is_empty() {
                 let take = per.min(rest_jobs.len());
                 let (src_chunk, src_tail) = rest_src.split_at_mut(take);
                 let (job_chunk, job_tail) = rest_jobs.split_at(take);
                 rest_src = src_tail;
                 rest_jobs = job_tail;
+                let tx = tx.clone();
                 handles.push(scope.spawn(move || {
-                    src_chunk
-                        .iter_mut()
-                        .zip(job_chunk)
-                        .map(|(src, job)| encode_rank(src, job, opts))
-                        .collect::<Vec<_>>()
+                    for (k, (src, job)) in src_chunk.iter_mut().zip(job_chunk).enumerate() {
+                        let (req, cs) = encode_rank(src, job, opts);
+                        // A send only fails when the receiver is gone,
+                        // which means the consumer side already panicked.
+                        if tx
+                            .send(RankEncode {
+                                index: base + k,
+                                req,
+                                stats: cs,
+                            })
+                            .is_err()
+                        {
+                            return;
+                        }
+                    }
                 }));
+                base += take;
             }
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("encode worker panicked"))
-                .collect()
+            drop(tx); // workers hold the only remaining senders
+            let mut delivered = 0usize;
+            for enc in rx {
+                absorb(&mut stats, &enc.req, enc.stats);
+                sink(enc);
+                delivered += 1;
+            }
+            for h in handles {
+                h.join().expect("encode worker panicked");
+            }
+            assert_eq!(delivered, n, "every rank must be delivered exactly once");
         });
-        for part in parts {
-            for (req, cs) in part {
-                absorb(&mut stats, &req, cs);
-                reqs.push(req);
-            }
-        }
     }
     stats.host_secs = t0.elapsed().as_secs_f64();
+    stats
+}
+
+/// Encode every rank's image, fanning ranks across worker threads, and
+/// return the write wave **in rank order** — byte-for-byte identical to
+/// the serial path regardless of thread count. A thin reassembly wrapper
+/// over [`encode_wave_streaming`]: results arrive in completion order and
+/// are placed by index, so the ordered-wave contract costs nothing extra.
+pub fn encode_wave(
+    sources: &mut [RankSource<'_>],
+    jobs: &[RankJob],
+    opts: &EncodeOpts,
+) -> (Vec<WriteReq>, DatapathStats) {
+    let n = jobs.len();
+    let mut slots: Vec<Option<WriteReq>> = (0..n).map(|_| None).collect();
+    let stats = encode_wave_streaming(sources, jobs, opts, &mut |enc| {
+        slots[enc.index] = Some(enc.req);
+    });
+    let reqs = slots
+        .into_iter()
+        .map(|s| s.expect("every rank delivered"))
+        .collect();
     (reqs, stats)
 }
 
@@ -660,5 +766,145 @@ mod tests {
         let (fixed_again, fstats) = wave_chunked(&mut tables, &jobs, 1, fixed);
         assert_eq!(fstats.cache_hit_regions, 0, "mode flip invalidates again");
         assert_eq!(fixed_again[0].data, warm_fixed[0].data);
+    }
+
+    #[test]
+    fn streaming_sink_reassembles_the_rank_ordered_wave() {
+        // The pipelined transport delivers ranks in completion order; the
+        // manifest-level contract is that placing them by index rebuilds
+        // the rank-ordered wave bitwise.
+        let mk = || -> Vec<RegionTable> {
+            (0..11)
+                .map(|i| mk_table(vec![i as u8 + 1; 2000 + 13 * i]))
+                .collect()
+        };
+        let jobs = mk_jobs(11, None);
+        let (ordered, _) = wave(&mut mk(), &jobs, 1, true);
+
+        let mut tables = mk();
+        let mut sources: Vec<RankSource<'_>> = tables
+            .iter_mut()
+            .map(|t| RankSource {
+                table: t,
+                step: 7,
+                rng_state: [3u8; 32],
+                upper_fds: vec![(5, "out.log".into())],
+            })
+            .collect();
+        let mut slots: Vec<Option<WriteReq>> = (0..11).map(|_| None).collect();
+        let stats = encode_wave_streaming(
+            &mut sources,
+            &jobs,
+            &EncodeOpts {
+                chunking: Chunking::Fixed(CB),
+                threads: 4,
+                with_recipe: true,
+            },
+            &mut |enc| {
+                assert!(
+                    slots[enc.index].is_none(),
+                    "rank {} delivered twice",
+                    enc.index
+                );
+                slots[enc.index] = Some(enc.req);
+            },
+        );
+        assert_eq!(stats.threads, 4);
+        for (slot, want) in slots.into_iter().zip(&ordered) {
+            let got = slot.expect("every rank delivered");
+            assert_eq!(got.path, want.path);
+            assert_eq!(got.data, want.data, "reassembled wave must be bitwise");
+            assert_eq!(got.recipe, want.recipe);
+        }
+    }
+
+    #[test]
+    fn partial_hit_fixed_is_bitwise_and_chunk_proportional() {
+        // One hot page inside a multi-chunk region: the partial path must
+        // produce the cold encode bitwise while re-hashing only the
+        // touched chunk (plus the framing-forced last-chunk digest).
+        let state_len = 20000usize; // 5 fixed chunks at CB = 4096
+        let jobs = mk_jobs(1, None);
+        let mut tables = vec![mk_table(vec![1u8; state_len])];
+        wave(&mut tables, &jobs, 1, true); // cold (dirty, no populate)
+        tables[0].clear_dirty(Half::Upper);
+        wave(&mut tables, &jobs, 1, true); // populate clean entries
+
+        let patch = vec![9u8; 64];
+        assert!(tables[0].write_range("state", 4096 + 10, &patch));
+        let (got, stats) = wave(&mut tables, &jobs, 1, true);
+        assert_eq!(stats.cache_partial_regions, 1, "state must partial-hit");
+        assert_eq!(stats.cache_hit_regions, 1, "heap still fully hits");
+        assert!(
+            stats.fresh_hash_bytes >= 4096 && stats.fresh_hash_bytes < state_len as u64,
+            "re-hash must be chunk-proportional, got {}",
+            stats.fresh_hash_bytes
+        );
+
+        let mut want_state = vec![1u8; state_len];
+        want_state[4096 + 10..4096 + 10 + 64].copy_from_slice(&patch);
+        let mut fresh = vec![mk_table(want_state)];
+        let (want, _) = wave(&mut fresh, &jobs, 1, true);
+        assert_eq!(got[0].data, want[0].data, "partial encode must be bitwise");
+        assert_eq!(got[0].recipe, want[0].recipe, "recipes must be identical");
+
+        // The replanted entry serves the next clean generation fully warm.
+        tables[0].clear_dirty(Half::Upper);
+        let (again, wstats) = wave(&mut tables, &jobs, 1, true);
+        assert_eq!(wstats.cache_hit_regions, 2, "replant must run warm");
+        assert_eq!(wstats.fresh_hash_bytes, 0);
+        assert_eq!(again[0].data, want[0].data);
+    }
+
+    #[test]
+    fn partial_hit_cdc_is_bitwise_and_resyncs() {
+        // Content-defined grid: the rescan must resume with full-buffer
+        // windows and splice the old cut tail back once past the stale
+        // span, staying bitwise with a cold encode of the live bytes.
+        let state_len = 50_000usize;
+        let mk_data = || -> Vec<u8> { (0..state_len).map(|j| ((j * 131) % 251) as u8).collect() };
+        let cdc = Chunking::cdc(512);
+        let jobs = mk_jobs(1, None);
+        let mut tables = vec![mk_table(mk_data())];
+        tables[0].clear_dirty(Half::Upper);
+        wave_chunked(&mut tables, &jobs, 1, cdc); // populate clean entries
+
+        let patch: Vec<u8> = (0..100).map(|j| (j * 7 % 256) as u8).collect();
+        assert!(tables[0].write_range("state", 25_000, &patch));
+        let (got, stats) = wave_chunked(&mut tables, &jobs, 1, cdc);
+        assert_eq!(stats.cache_partial_regions, 1, "state must partial-hit");
+        assert!(
+            stats.fresh_hash_bytes < state_len as u64 / 2,
+            "rescan must resync instead of re-hashing the region, got {}",
+            stats.fresh_hash_bytes
+        );
+
+        let mut want_data = mk_data();
+        want_data[25_000..25_100].copy_from_slice(&patch);
+        let mut fresh = vec![mk_table(want_data)];
+        fresh[0].clear_dirty(Half::Upper);
+        let (want, _) = wave_chunked(&mut fresh, &jobs, 1, cdc);
+        assert_eq!(got[0].data, want[0].data, "CDC partial must be bitwise");
+        assert_eq!(got[0].recipe, want[0].recipe, "CDC recipes must match");
+    }
+
+    #[test]
+    fn partial_hit_survives_the_recipe_toggle() {
+        // A recipe-bearing entry must also serve a recipe-less encode, and
+        // both flavors must stay bitwise with their cold counterparts.
+        let state_len = 3 * 4096usize;
+        let jobs = mk_jobs(1, None);
+        let mut tables = vec![mk_table(vec![7u8; state_len])];
+        tables[0].clear_dirty(Half::Upper);
+        wave(&mut tables, &jobs, 1, true); // populate with recipe digests
+
+        assert!(tables[0].write_range("state", 100, &[0xEE; 32]));
+        let (got, stats) = wave(&mut tables, &jobs, 1, false);
+        assert_eq!(stats.cache_partial_regions, 1);
+
+        let mut want_state = vec![7u8; state_len];
+        want_state[100..132].copy_from_slice(&[0xEE; 32]);
+        let (want, _) = wave(&mut vec![mk_table(want_state)], &jobs, 1, false);
+        assert_eq!(got[0].data, want[0].data);
     }
 }

@@ -38,12 +38,13 @@ pub mod chunk;
 pub mod datapath;
 pub mod interval;
 pub mod manifest;
+pub mod pipeline;
 
 use std::fmt;
 
 use crate::mem::{Half, MemRegion, Payload, RegionTable};
 use crate::topology::RankId;
-use crate::util::crc32;
+use crate::util::{cdc, crc32};
 
 use self::datapath::{CacheSlot, CacheStats, RegionDigestCache};
 
@@ -224,9 +225,13 @@ fn encoded_size_src(
 /// no slot and always encode fresh; an empty slice disables memoization).
 /// A usable slot whose cached section still matches the region replays
 /// its encoded bytes, section CRC and chunk digests without re-hashing a
-/// single payload byte; a miss re-encodes and — for regions that were
-/// clean at harvest time — repopulates the slot (an entry built for a
-/// dirty region could never be consulted, so none is made).
+/// single payload byte. An entry downgraded to chunk granularity by
+/// tracked writes ([`crate::mem::RegionTable::write_range`]) takes the
+/// partial path instead: only chunks intersecting the recorded stale
+/// spans re-hash, and a fresh entry is replanted. A miss re-encodes and —
+/// for regions that were clean at harvest time — repopulates the slot (an
+/// entry built for a dirty region could never be consulted, so none is
+/// made).
 pub(crate) fn encode_stream(
     out: &mut Vec<u8>,
     meta: &ImageMeta<'_>,
@@ -273,8 +278,10 @@ pub(crate) fn encode_stream(
                 return None;
             }
             let c = slot.entry.as_deref()?;
-            (c.matches(r, chunking) && (!want_recipe || !c.rel_chunks.is_empty()))
-                .then_some(c)
+            (c.matches(r, chunking)
+                && c.stale_ranges.is_empty()
+                && (!want_recipe || !c.rel_chunks.is_empty()))
+            .then_some(c)
         });
         if let Some(c) = hit {
             out.extend_from_slice(&c.encoded);
@@ -289,6 +296,75 @@ pub(crate) fn encode_stream(
             stats.hit_regions += 1;
             continue;
         }
+        // Chunk-granular partial hit: the entry was downgraded by tracked
+        // in-place writes (`RegionTable::write_range` recorded the spans).
+        // Re-frame the record reusing the memoized CRC and digest of every
+        // chunk outside the stale spans — one hot page re-hashes one
+        // chunk, not the region. Usability is irrelevant here: the entry
+        // plus its spans describe the live bytes whether or not the dirty
+        // bit is set.
+        let partial = slots.get(i).and_then(|slot| {
+            let c = slot.entry.as_deref()?;
+            let PayloadSrc::Real(data) = r.payload else {
+                return None;
+            };
+            (!c.stale_ranges.is_empty()
+                && c.matches(r, chunking)
+                // No virtual tail: tail digests hash the whole payload,
+                // which would defeat the chunk-granular accounting.
+                && r.vlen == data.len() as u64
+                && !c.payload_cuts.is_empty()
+                && c.payload_cuts.len() == c.chunk_crcs.len()
+                && (!want_recipe || c.rel_chunks.len() == c.payload_cuts.len()))
+            .then_some(())
+        });
+        if partial.is_some() {
+            let slot = &mut slots[i];
+            let entry = slot.entry.take().expect("checked above");
+            let PayloadSrc::Real(data) = r.payload else {
+                unreachable!("checked above");
+            };
+            let k0 = recipe.as_deref().map(|rec| rec.chunks.len());
+            let part = encode_region_partial(
+                out,
+                r,
+                data,
+                &entry,
+                chunking,
+                base,
+                start,
+                recipe.as_deref_mut(),
+            );
+            trailer.update(&part.section_crc.to_le_bytes());
+            let rel_chunks: Vec<chunk::RecipeChunk> = match (k0, recipe.as_deref()) {
+                (Some(k0), Some(rec)) => {
+                    let delta = (start - base) as u64;
+                    rec.chunks[k0..]
+                        .iter()
+                        .map(|ch| ch.shifted_back(delta))
+                        .collect()
+                }
+                _ => Vec::new(),
+            };
+            stats.hit_vbytes += r.vlen.saturating_sub(part.fresh_hash_vbytes);
+            stats.fresh_hash_vbytes += part.fresh_hash_vbytes;
+            stats.partial_regions += 1;
+            // Replant a fresh entry (valid for the bytes just encoded, no
+            // stale spans) so the next generation starts warm again.
+            slot.entry = Some(Box::new(RegionDigestCache {
+                chunking,
+                vlen: r.vlen,
+                kind: r.payload.kind(),
+                resident: r.payload.resident(),
+                section_crc: part.section_crc,
+                encoded: out[start..].to_vec(),
+                rel_chunks,
+                payload_cuts: part.payload_cuts,
+                chunk_crcs: part.chunk_crcs,
+                stale_ranges: Vec::new(),
+            }));
+            continue;
+        }
         let chunks_before = recipe.as_deref().map(|rec| rec.chunks.len());
         put_u64(out, r.addr);
         put_u64(out, r.vlen);
@@ -297,6 +373,7 @@ pub(crate) fn encode_stream(
         // emission both walk it, which is what keeps them in agreement for
         // content-defined boundaries.
         let mut real_cuts: Vec<usize> = Vec::new();
+        let mut real_crcs: Vec<u32> = Vec::new();
         let crc = match r.payload {
             PayloadSrc::Zero => {
                 out.push(0);
@@ -315,7 +392,8 @@ pub(crate) fn encode_stream(
                 let mut sec = crc32::Hasher::new();
                 sec.update(&out[start..]);
                 real_cuts = chunking.cut_lengths(data);
-                chunk::write_chunked(out, data, &real_cuts, &mut sec);
+                real_crcs = chunk::write_chunked(out, data, &real_cuts, &mut sec);
+                stats.fresh_hash_vbytes += data.len() as u64;
                 sec.finalize()
             }
             PayloadSrc::ParentRef { fingerprint } => {
@@ -331,12 +409,15 @@ pub(crate) fn encode_stream(
         }
         // Populate the slot for the next generation — but only for a
         // region that was *clean* at harvest time: an entry built while
-        // dirty could never be consulted (unusable now, dropped by the
-        // dirty→clean transition in clear_dirty later), so cloning the
-        // section for it would be pure dead work. ParentRef records never
-        // clobber a cached Full section either: the full cache stays
-        // valid while the region stays clean, so it serves the next
-        // *full* checkpoint warm even across incremental ones.
+        // dirty has no record of which bytes may still change before the
+        // next harvest, so it could never be consulted and cloning the
+        // section for it would be pure dead work. (Regions dirtied through
+        // `write_range` keep their previous entry with stale spans and are
+        // served by the partial path above instead of landing here.)
+        // ParentRef records never clobber a cached Full section either:
+        // the full cache stays valid while the region stays clean, so it
+        // serves the next *full* checkpoint warm even across incremental
+        // ones.
         if !matches!(r.payload, PayloadSrc::ParentRef { .. }) {
             if let Some(slot) = slots.get_mut(i).filter(|s| s.usable) {
                 let rel_chunks: Vec<chunk::RecipeChunk> =
@@ -358,6 +439,9 @@ pub(crate) fn encode_stream(
                     section_crc: crc,
                     encoded: out[start..].to_vec(),
                     rel_chunks,
+                    payload_cuts: real_cuts.iter().map(|&c| c as u32).collect(),
+                    chunk_crcs: real_crcs,
+                    stale_ranges: Vec::new(),
                 }));
                 stats.filled_regions += 1;
             }
@@ -367,6 +451,202 @@ pub(crate) fn encode_stream(
     put_u32(out, trailer.finalize());
     if let Some(rec) = recipe.as_deref_mut() {
         push_meta_chunk(rec, base, tstart, out);
+    }
+}
+
+/// One region's chunk-granular partial re-encode: the pieces the caller
+/// needs to fold the record into the image trailer and replant the slot.
+struct PartialEncode {
+    section_crc: u32,
+    payload_cuts: Vec<u32>,
+    chunk_crcs: Vec<u32>,
+    /// Payload bytes whose CRC or digest had to be recomputed (the
+    /// chunk-proportional hash cost of this record).
+    fresh_hash_vbytes: u64,
+}
+
+/// Re-frame one fully-resident Real region from a digest-cache entry that
+/// was downgraded to chunk granularity by tracked in-place writes.
+///
+/// The chunk grid is re-derived so the emitted record is bitwise identical
+/// to a cold encode of the live bytes:
+///
+/// * `Fixed` — the grid is positional and the length is unchanged, so the
+///   tiling is unchanged; a chunk is recomputed iff its span intersects a
+///   stale range.
+/// * `Cdc` — cuts at or before the first stale byte are provably identical
+///   (every window the scanner judged lies strictly below the stale span).
+///   From the last such cut the scan resumes via [`cdc::next_cut`] — which
+///   uses full-buffer warm-up windows, so resuming mid-buffer is exact —
+///   until it lands on an old cut at least [`cdc::WINDOW`] bytes past the
+///   last stale byte. Beyond that point every window the old scan judged
+///   reads only unchanged bytes, so the old cut tail is spliced back
+///   verbatim and its chunks reused.
+///
+/// Reused chunks replay their memoized CRC32 (and recipe digest); only
+/// rescanned chunks re-hash payload bytes. Two framing subtleties force a
+/// digest recompute even for byte-identical payload chunks: the last framed
+/// chunk's digest span includes the section CRC (which changes whenever any
+/// chunk changed), and chunk 0's span includes the record header with the
+/// chunk count (which may change under CDC).
+#[allow(clippy::too_many_arguments)]
+fn encode_region_partial(
+    out: &mut Vec<u8>,
+    r: &RegionSrc<'_>,
+    data: &[u8],
+    c: &RegionDigestCache,
+    chunking: Chunking,
+    base: usize,
+    start: usize,
+    rec: Option<&mut ChunkRecipe>,
+) -> PartialEncode {
+    let n = data.len();
+    let mut old_ends: Vec<usize> = Vec::with_capacity(c.payload_cuts.len());
+    let mut acc = 0usize;
+    for &l in &c.payload_cuts {
+        acc += l as usize;
+        old_ends.push(acc);
+    }
+    debug_assert_eq!(acc, n, "cached cut layout must tile the payload");
+    let first_stale = c.stale_ranges[0].0 as usize;
+    let last_stale_end = c.stale_ranges[c.stale_ranges.len() - 1].1 as usize;
+    // New cut layout (as end offsets) plus, per new chunk, the old chunk
+    // index whose bytes and span it provably matches (None → recompute).
+    let (ends, reuse): (Vec<usize>, Vec<Option<usize>>) = match chunking {
+        Chunking::Fixed(_) => {
+            let reuse = old_ends
+                .iter()
+                .enumerate()
+                .map(|(i, &e)| {
+                    let s = if i == 0 { 0 } else { old_ends[i - 1] };
+                    let clean = !c
+                        .stale_ranges
+                        .iter()
+                        .any(|&(lo, hi)| (lo as usize) < e && (hi as usize) > s);
+                    clean.then_some(i)
+                })
+                .collect();
+            (old_ends.clone(), reuse)
+        }
+        Chunking::Cdc(p) => {
+            let mut ends = Vec::new();
+            let mut reuse = Vec::new();
+            let mut pi = 0;
+            while pi < old_ends.len() && old_ends[pi] <= first_stale {
+                ends.push(old_ends[pi]);
+                reuse.push(Some(pi));
+                pi += 1;
+            }
+            let resync_floor = last_stale_end + cdc::WINDOW;
+            let mut q = ends.last().copied().unwrap_or(0);
+            let mut spliced = None;
+            while q < n {
+                let cut = cdc::next_cut(data, &p, q);
+                ends.push(cut);
+                reuse.push(None);
+                q = cut;
+                if cut >= resync_floor {
+                    if let Ok(j) = old_ends.binary_search(&cut) {
+                        spliced = Some(j);
+                        break;
+                    }
+                }
+            }
+            if let Some(j) = spliced {
+                for (k, &e) in old_ends.iter().enumerate().skip(j + 1) {
+                    ends.push(e);
+                    reuse.push(Some(k));
+                }
+            }
+            (ends, reuse)
+        }
+    };
+    debug_assert_eq!(ends.last().copied().unwrap_or(0), n);
+    // Emit the record with the exact frame write_chunked produces.
+    let n_new = ends.len();
+    put_u64(out, r.addr);
+    put_u64(out, r.vlen);
+    put_str(out, r.name);
+    out.push(2);
+    let mut sec = crc32::Hasher::new();
+    sec.update(&out[start..]);
+    let nb = (n_new as u32).to_le_bytes();
+    out.extend_from_slice(&nb);
+    sec.update(&nb);
+    let mut hashed = vec![false; n_new];
+    let mut fresh = 0u64;
+    let mut chunk_crcs = Vec::with_capacity(n_new);
+    let mut payload_cuts = Vec::with_capacity(n_new);
+    let mut prev = 0usize;
+    for (k, &e) in ends.iter().enumerate() {
+        let bytes = &data[prev..e];
+        let lenb = (bytes.len() as u32).to_le_bytes();
+        out.extend_from_slice(&lenb);
+        sec.update(&lenb);
+        out.extend_from_slice(bytes);
+        let crc_val = match reuse[k] {
+            Some(j) => c.chunk_crcs[j],
+            None => {
+                hashed[k] = true;
+                fresh += bytes.len() as u64;
+                crc32::hash(bytes)
+            }
+        };
+        let crcb = crc_val.to_le_bytes();
+        out.extend_from_slice(&crcb);
+        sec.update(&crcb);
+        chunk_crcs.push(crc_val);
+        payload_cuts.push(bytes.len() as u32);
+        prev = e;
+    }
+    let section_crc = sec.finalize();
+    put_u32(out, section_crc);
+    if let Some(rec) = rec {
+        let end = out.len();
+        let meta_end = start + 8 + 8 + 4 + r.name.len() + 1 + 4;
+        let mut cursor = meta_end;
+        let mut prev = 0usize;
+        let same_grid = n_new == c.payload_cuts.len();
+        for (k, &e) in ends.iter().enumerate() {
+            let clen = e - prev;
+            let mut cend = cursor + 4 + clen + 4;
+            if k + 1 == n_new {
+                // Last chunk absorbs the section CRC.
+                cend += 4;
+                debug_assert_eq!(cend, end);
+            }
+            let cstart = if k == 0 { start } else { cursor };
+            let vb = clen as u64;
+            // Interior reused chunks map to interior old chunks with the
+            // same frame shape; chunk 0 additionally needs the header
+            // (chunk count included) unchanged; the last chunk never
+            // reuses (section CRC in its span).
+            let frame_stable = k + 1 < n_new && (k != 0 || same_grid);
+            let digest = match reuse[k] {
+                Some(j) if frame_stable => c.rel_chunks[j].digest,
+                _ => {
+                    if !hashed[k] {
+                        hashed[k] = true;
+                        fresh += clen as u64;
+                    }
+                    chunk::chunk_digest(chunk::TAG_REAL, vb, &[], &out[cstart..cend])
+                }
+            };
+            rec.chunks.push(chunk::RecipeChunk {
+                digest,
+                vbytes: vb,
+                real_off: (cstart - base) as u64,
+                real_len: (cend - cstart) as u64,
+            });
+            cursor = cend;
+            prev = e;
+        }
+    }
+    PartialEncode {
+        section_crc,
+        payload_cuts,
+        chunk_crcs,
+        fresh_hash_vbytes: fresh,
     }
 }
 

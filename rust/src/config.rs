@@ -223,6 +223,13 @@ pub struct RunConfig {
     /// the serial one). `None` = the host's available parallelism;
     /// `Some(1)` forces the serial path.
     pub encode_threads: Option<usize>,
+    /// Pipelined checkpoint path (`--pipeline on|off`, default on):
+    /// stream each rank's finished encode straight into the write wave
+    /// and overlap coordination phases, so stall approaches
+    /// `max(encode, write)` instead of their sum. Off = the historical
+    /// strictly-serial phase ordering. The stored bytes are identical
+    /// either way; only the simulated stall accounting changes.
+    pub pipeline: bool,
 }
 
 impl RunConfig {
@@ -248,6 +255,7 @@ impl RunConfig {
             chunking: ChunkingMode::Fixed,
             coord_fanout: None,
             encode_threads: None,
+            pipeline: true,
         }
     }
 
@@ -348,6 +356,12 @@ mod tests {
             c.encode_threads.is_none(),
             "None = fan out to the host's available parallelism"
         );
+    }
+
+    #[test]
+    fn pipeline_defaults_on() {
+        let c = RunConfig::new(AppKind::Synthetic, 4);
+        assert!(c.pipeline, "pipelined checkpoint path is the default");
     }
 
     #[test]

@@ -88,6 +88,11 @@ impl fmt::Display for Phase {
 pub struct PhaseIo {
     /// Wall-clock of the broadcast-down + reduce-up, seconds.
     pub secs: f64,
+    /// Seconds of the broadcast-down sweep alone (leaf fan-out included).
+    /// The overlapped exchange uses this split: the next phase's
+    /// broadcast can start down the tree while this phase's acks are
+    /// still reducing up, so only `max(up, next.down)` is serialized.
+    pub down_secs: f64,
     /// Control messages moved anywhere in the plane.
     pub msgs: u64,
     /// Messages the *root* endpoint sent or received — the scalability
@@ -97,6 +102,25 @@ pub struct PhaseIo {
     pub reparents: u32,
     /// Phase attempts retried after a sub-coordinator death.
     pub retries: u32,
+}
+
+/// Accounting of two protocol phases run overlapped (pipelined path).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OverlapIo {
+    /// The first phase's own accounting (messages, retries, sweeps).
+    pub first: PhaseIo,
+    /// The second phase's own accounting.
+    pub second: PhaseIo,
+    /// Fused wall-clock of the pair. With a healthy plane this is
+    /// `first.down + max(first.up, second.down) + second.up`; any
+    /// mid-overlap death forfeits the credit and the pair is charged
+    /// serially (`first.secs + second.secs`).
+    pub secs: f64,
+    /// Acks discarded because they carried a pre-re-parent epoch: when a
+    /// sub-coordinator dies mid-overlap, the acks its subtree had in
+    /// flight are stale and must be dropped — not folded into the second
+    /// phase's reduction — before the retry re-collects them.
+    pub stale_acks: u64,
 }
 
 /// Outcome of the DRAIN convergence reduction.
@@ -129,6 +153,30 @@ pub trait CoordPlane {
         phase: Phase,
         now: SimTime,
     ) -> Result<PhaseIo, CtrlError>;
+
+    /// Run two consecutive phases overlapped: the second phase's
+    /// broadcast enters the plane while the first phase's reduce is still
+    /// converging. The default is the serial fallback (no overlap
+    /// credit); planes that can pipeline their sweeps override it.
+    /// Implementations must keep the per-phase message and retry
+    /// accounting identical to two serial exchanges — overlap buys time,
+    /// never traffic.
+    fn exchange_overlapped(
+        &mut self,
+        ctrl: &mut ControlNet,
+        first: Phase,
+        second: Phase,
+        now: SimTime,
+    ) -> Result<OverlapIo, CtrlError> {
+        let a = self.exchange(ctrl, first, now)?;
+        let b = self.exchange(ctrl, second, now)?;
+        Ok(OverlapIo {
+            first: a,
+            second: b,
+            secs: a.secs + b.secs,
+            stale_acks: 0,
+        })
+    }
 
     /// DRAIN convergence: per-rank (sent, recv) byte counters enter at the
     /// leaves and are summed upward; the root sees one aggregate per
@@ -174,6 +222,7 @@ impl CoordPlane for FlatPlane {
         let up = ctrl.send_batch((0..self.ranks).map(RankId), now)?;
         Ok(PhaseIo {
             secs: down.secs + up.secs,
+            down_secs: down.secs,
             msgs: down.msgs + up.msgs,
             root_msgs: down.msgs + up.msgs,
             reparents: 0,
@@ -269,6 +318,8 @@ pub struct CoordStats {
     pub reparents: u64,
     /// Phase exchanges retried after a sub-coordinator death.
     pub phase_retries: u64,
+    /// Acks discarded as stale-epoch after a mid-overlap re-parent.
+    pub stale_acks: u64,
 }
 
 /// Why a checkpoint failed (the reliability bench's failure taxonomy).
@@ -361,6 +412,25 @@ pub struct CkptReport {
     /// digest cache ("didn't re-hash" — distinct from `deduped_bytes`,
     /// which counts "didn't re-ship").
     pub digest_cache_hit_bytes: u64,
+    // ---- pipelined checkpoint path ----
+    /// Modeled virtual seconds of the encode wave (slowest worker).
+    pub encode_stall_secs: f64,
+    /// Rank-visible encode+write stall: `encode + write` on the serial
+    /// path, the streamed-admission queue result on the pipelined path.
+    pub stall_secs: f64,
+    /// Virtual seconds the pipeline hid (phase fusion + streamed writes)
+    /// relative to the serial path.
+    pub overlap_saved_secs: f64,
+    /// Acks discarded as stale-epoch after a mid-overlap re-parent.
+    pub stale_acks: u64,
+    /// Payload bytes actually re-hashed this generation — with
+    /// chunk-granular dirty tracking this scales with dirty chunks, not
+    /// dirty regions.
+    pub fresh_hash_bytes: u64,
+    /// Regions served by the chunk-granular partial re-encode path.
+    pub cache_partial_regions: u64,
+    /// Whether this checkpoint ran the pipelined path.
+    pub pipelined: bool,
 }
 
 impl CkptReport {
@@ -438,6 +508,31 @@ impl Coordinator {
                 Ok(io)
             }
             Err(e) => Err(self.record_ctrl_error(e, phase)),
+        }
+    }
+
+    /// Run two consecutive protocol phases overlapped through the plane
+    /// (pipelined path). Fail-fast and unreachable bookkeeping mirror
+    /// [`Coordinator::phase_exchange`]; a failure is attributed to the
+    /// *first* phase of the pair (the broadcast that entered the plane
+    /// first).
+    pub fn phase_exchange_overlapped(
+        &mut self,
+        first: Phase,
+        second: Phase,
+        now: SimTime,
+    ) -> Result<OverlapIo, CkptFailure> {
+        if let Some((rank, f)) = self.unreachable {
+            return Err(CkptFailure::Unreachable { rank, phase: f });
+        }
+        match self.plane.exchange_overlapped(&mut self.ctrl, first, second, now) {
+            Ok(o) => {
+                self.absorb_io(o.first);
+                self.absorb_io(o.second);
+                self.stats.stale_acks += o.stale_acks;
+                Ok(o)
+            }
+            Err(e) => Err(self.record_ctrl_error(e, first)),
         }
     }
 
@@ -657,6 +752,21 @@ mod tests {
         assert_eq!(io.root_msgs, 8, "flat root touches 2 x ranks");
         let (unbalanced, _) = c.drain_reduce(&[(10, 0), (0, 5)], SimTime::ZERO).unwrap();
         assert!(!unbalanced);
+    }
+
+    #[test]
+    fn flat_overlap_is_the_serial_fallback() {
+        // The flat plane serializes both sweeps at one endpoint — no
+        // overlap credit, but full per-phase accounting.
+        let mut c = coord(64, true, 0.0, true);
+        let o = c
+            .phase_exchange_overlapped(Phase::Intent, Phase::SafePoint, SimTime::ZERO)
+            .unwrap();
+        assert_eq!(o.secs, o.first.secs + o.second.secs);
+        assert_eq!(o.stale_acks, 0);
+        assert_eq!(c.stats.stale_acks, 0);
+        assert_eq!(c.stats.ctrl_msgs, o.first.msgs + o.second.msgs);
+        assert!(o.first.down_secs > 0.0 && o.first.down_secs < o.first.secs);
     }
 
     #[test]

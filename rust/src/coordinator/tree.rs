@@ -30,7 +30,7 @@
 
 use std::collections::BTreeMap;
 
-use super::{CoordGroup, CoordPlane, CountReduce, Phase, PhaseIo};
+use super::{CoordGroup, CoordPlane, CountReduce, OverlapIo, Phase, PhaseIo};
 use crate::log_warn;
 use crate::simnet::control::{ControlNet, CtrlError};
 use crate::topology::{NodeId, RankId, Topology};
@@ -53,6 +53,10 @@ struct Sub {
 /// Outcome of one phase attempt over the current tree.
 struct Attempt {
     secs: f64,
+    /// Seconds until the broadcast-down sweep (leaf fan-out included)
+    /// finished — the point at which a second phase's broadcast could
+    /// enter the tree behind this one.
+    down_secs: f64,
     msgs: u64,
     root_msgs: u64,
     /// Sub-coordinator found dead mid-phase (re-parent and retry).
@@ -72,6 +76,12 @@ pub struct TreePlane {
     pending_death: Option<(u32, Phase)>,
     /// Sub-coordinator levels below the root (>= 1).
     levels: u32,
+    /// Tree-configuration epoch, bumped on every re-parent. Acks tagged
+    /// with an older epoch are stale: a reduce that overlapped a
+    /// re-parent must discard them (and retry) instead of folding them
+    /// in — otherwise an adopted subtree's counters would be counted
+    /// once under the dead parent and again under the adopter.
+    epoch: u64,
 }
 
 impl TreePlane {
@@ -110,6 +120,7 @@ impl TreePlane {
             root_ranks: Vec::new(),
             pending_death,
             levels: 1,
+            epoch: 0,
         };
         plane.recompute_depth();
         debug_assert_eq!(plane.levels, topo.coord_levels(f as u32));
@@ -119,6 +130,11 @@ impl TreePlane {
     /// Alive sub-coordinators.
     pub fn alive_subs(&self) -> usize {
         self.subs.iter().filter(|s| s.alive).count()
+    }
+
+    /// Current tree-configuration epoch (bumped on every re-parent).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     fn recompute_depth(&mut self) {
@@ -142,6 +158,7 @@ impl TreePlane {
     /// local ranks go to the first alive sibling, else to its parent, else
     /// (for an only root child) to the root itself.
     fn reparent(&mut self, dead: usize) {
+        self.epoch += 1;
         self.subs[dead].alive = false;
         let parent = self.subs[dead].parent;
         match parent {
@@ -191,6 +208,7 @@ impl TreePlane {
     ) -> Result<Attempt, CtrlError> {
         let mut a = Attempt {
             secs: 0.0,
+            down_secs: 0.0,
             msgs: 0,
             root_msgs: 0,
             died: None,
@@ -220,6 +238,10 @@ impl TreePlane {
                 if ph == phase && frontier.contains(&dead) && self.subs[dead].alive {
                     self.pending_death = None;
                     a.secs += ctrl.cfg.keepalive_interval;
+                    // The down sweep never completed: the whole aborted
+                    // attempt counts as broadcast time, so an overlapped
+                    // pair can claim no credit for it.
+                    a.down_secs = a.secs;
                     a.died = Some(dead);
                     return Ok(a);
                 }
@@ -253,6 +275,9 @@ impl TreePlane {
             a.msgs += io.msgs;
         }
         a.secs += leaf_secs;
+        // The broadcast has fully left the root and reached every rank;
+        // everything after this line is the reduce-up.
+        a.down_secs = a.secs;
 
         // --- reduce up ---
         // Local ranks ack their sub-coordinator (serialized receive)...
@@ -298,6 +323,40 @@ impl TreePlane {
         }
         Ok(a)
     }
+
+    /// Phase exchange that also reports how many rank acks went stale:
+    /// when an attempt aborts on a dead sub-coordinator, the acks its
+    /// subtree had in flight carry the pre-re-parent epoch and must be
+    /// discarded (never folded into a reduction) before the retry
+    /// re-collects them under the repaired tree.
+    fn exchange_counting_stale(
+        &mut self,
+        ctrl: &mut ControlNet,
+        phase: Phase,
+        now: SimTime,
+    ) -> Result<(PhaseIo, u64), CtrlError> {
+        let mut total = PhaseIo::default();
+        let mut stale_acks = 0u64;
+        loop {
+            let a = self.attempt(ctrl, phase, now)?;
+            total.secs += a.secs;
+            total.down_secs += a.down_secs;
+            total.msgs += a.msgs;
+            total.root_msgs += a.root_msgs;
+            let Some(dead) = a.died else {
+                return Ok((total, stale_acks));
+            };
+            log_warn!(
+                "coordinator",
+                "sub-coordinator sub{dead:03} died mid-{phase} — re-parenting its \
+                 subtree and retrying the phase"
+            );
+            stale_acks += self.subs[dead].ranks.len() as u64;
+            self.reparent(dead);
+            total.reparents += 1;
+            total.retries += 1;
+        }
+    }
 }
 
 impl CoordPlane for TreePlane {
@@ -307,24 +366,45 @@ impl CoordPlane for TreePlane {
         phase: Phase,
         now: SimTime,
     ) -> Result<PhaseIo, CtrlError> {
-        let mut total = PhaseIo::default();
-        loop {
-            let a = self.attempt(ctrl, phase, now)?;
-            total.secs += a.secs;
-            total.msgs += a.msgs;
-            total.root_msgs += a.root_msgs;
-            let Some(dead) = a.died else {
-                return Ok(total);
-            };
-            log_warn!(
-                "coordinator",
-                "sub-coordinator sub{dead:03} died mid-{phase} — re-parenting its \
-                 subtree and retrying the phase"
-            );
-            self.reparent(dead);
-            total.reparents += 1;
-            total.retries += 1;
-        }
+        let (io, _) = self.exchange_counting_stale(ctrl, phase, now)?;
+        Ok(io)
+    }
+
+    /// The plane can genuinely pipeline two phases: the second broadcast
+    /// enters the tree as soon as the first has fully left the root, so
+    /// with a healthy tree the pair costs
+    /// `first.down + max(first.up, second.down) + second.up` instead of
+    /// the serial sum. Any re-parent during the pair forfeits the credit:
+    /// recovery re-runs whole attempts, in-flight acks of the dead
+    /// subtree are stale-epoch and discarded (counted in `stale_acks`),
+    /// and the pair is charged serially. Message and retry accounting is
+    /// identical to two serial exchanges either way.
+    fn exchange_overlapped(
+        &mut self,
+        ctrl: &mut ControlNet,
+        first: Phase,
+        second: Phase,
+        now: SimTime,
+    ) -> Result<OverlapIo, CtrlError> {
+        let epoch_before = self.epoch;
+        let (a, stale_a) = self.exchange_counting_stale(ctrl, first, now)?;
+        let (b, stale_b) = self.exchange_counting_stale(ctrl, second, now)?;
+        let stale_acks = stale_a + stale_b;
+        let healthy = self.epoch == epoch_before;
+        debug_assert_eq!(healthy, a.retries == 0 && b.retries == 0);
+        let secs = if healthy {
+            let up_a = a.secs - a.down_secs;
+            let up_b = b.secs - b.down_secs;
+            a.down_secs + up_a.max(b.down_secs) + up_b
+        } else {
+            a.secs + b.secs
+        };
+        Ok(OverlapIo {
+            first: a,
+            second: b,
+            secs,
+            stale_acks,
+        })
     }
 
     fn reduce_counts(
@@ -500,6 +580,60 @@ mod tests {
         assert_eq!(red.sent, 640);
         assert_eq!(red.recv, 640);
         assert!(red.io.root_msgs <= 2 * 4, "one aggregate per root child");
+    }
+
+    #[test]
+    fn overlapped_phases_fuse_the_sweeps() {
+        let mut p = plane(512, 8, None);
+        let mut ctrl = net();
+        let o = p
+            .exchange_overlapped(&mut ctrl, Phase::Intent, Phase::SafePoint, SimTime::ZERO)
+            .unwrap();
+        // Accounting is identical to two serial exchanges...
+        let mut q = plane(512, 8, None);
+        let mut ctrl2 = net();
+        let a = q.exchange(&mut ctrl2, Phase::Intent, SimTime::ZERO).unwrap();
+        let b = q.exchange(&mut ctrl2, Phase::SafePoint, SimTime::ZERO).unwrap();
+        assert_eq!(o.first.msgs + o.second.msgs, a.msgs + b.msgs);
+        assert_eq!(
+            o.first.root_msgs + o.second.root_msgs,
+            a.root_msgs + b.root_msgs,
+            "overlap buys time, never traffic"
+        );
+        // ...but the fused pair beats the serial sum and respects the
+        // pipeline floor (neither phase can finish before its own work).
+        assert!(o.secs < a.secs + b.secs, "{} !< {}", o.secs, a.secs + b.secs);
+        assert!(o.secs >= o.first.secs.max(o.second.secs));
+        assert!(o.first.down_secs > 0.0 && o.first.down_secs < o.first.secs);
+        assert_eq!(o.stale_acks, 0);
+        assert_eq!(p.epoch(), 0);
+    }
+
+    #[test]
+    fn death_during_overlap_forfeits_credit_and_drops_stale_acks() {
+        // 32 ranks -> 4 nodes at fanout 2: sub 2 dies as the second
+        // phase's broadcast reaches it mid-overlap.
+        let mut p = plane(32, 2, Some((2, Phase::SafePoint)));
+        let mut ctrl = net();
+        let o = p
+            .exchange_overlapped(&mut ctrl, Phase::Intent, Phase::SafePoint, SimTime::ZERO)
+            .unwrap();
+        assert_eq!(o.first.reparents, 0, "first phase completed cleanly");
+        assert_eq!(o.second.reparents, 1);
+        assert_eq!(o.second.retries, 1);
+        // The dead node's 8 ranks had acks in flight — stale-epoch, all
+        // discarded and re-collected by the retry.
+        assert_eq!(o.stale_acks, 8);
+        assert_eq!(p.epoch(), 1, "re-parent bumped the epoch");
+        // Recovery forfeits the overlap credit: the pair charges serially.
+        assert_eq!(o.secs, o.first.secs + o.second.secs);
+        // The repaired tree covers every rank exactly once, so the drain
+        // reduction after the mid-overlap re-parent double-counts nothing.
+        assert_eq!(covered_ranks(&p), 32);
+        let counts: Vec<(u64, u64)> = (0..32).map(|_| (3, 3)).collect();
+        let red = p.reduce_counts(&mut ctrl, &counts, SimTime::ZERO).unwrap();
+        assert_eq!(red.sent, 96, "each rank folded exactly once");
+        assert_eq!(red.recv, 96);
     }
 
     #[test]

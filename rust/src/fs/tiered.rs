@@ -490,6 +490,22 @@ impl TieredStore {
         })
     }
 
+    /// [`TieredStore::write_wave`] for a wave collected in encode
+    /// *completion* order (the pipelined checkpoint path): each request is
+    /// tagged with its rank index, and the wave is restored to rank order
+    /// here before the ordered contract runs. This keeps tier accounting,
+    /// drain-queue order and the chunk-index walk byte-identical to the
+    /// serial path no matter which rank's encode finished first — the
+    /// ordered-wave contract is preserved at the manifest level, not by
+    /// constraining the transport.
+    pub fn write_wave_unordered(
+        &mut self,
+        mut tagged: Vec<(usize, WriteReq)>,
+    ) -> Result<StagedIo, FsError> {
+        tagged.sort_by_key(|(i, _)| *i);
+        self.write_wave(tagged.into_iter().map(|(_, r)| r).collect())
+    }
+
     /// Advance the background drain to virtual time `now`: node-local
     /// agents move queued physical bytes to the durable tier at chunk
     /// granularity. Fully-deduped items commit in zero simulated seconds.
@@ -1119,6 +1135,40 @@ mod tests {
             virtual_bytes: data.len() as u64,
             data: data.to_vec(),
             recipe: Some(ChunkRecipe::from_data(data, CHUNK, data.len() as u64)),
+        }
+    }
+
+    #[test]
+    fn unordered_wave_is_indistinguishable_from_rank_order() {
+        // Completion-order delivery (pipelined path) must leave tier
+        // accounting, stored bytes and drain-queue order identical to the
+        // rank-ordered wave.
+        let mut a = store(1024 * MIB, 2);
+        a.begin_ckpt(0.0);
+        let io_ordered = a.write_wave(wave("g0", 6, 16 * MIB)).unwrap();
+
+        let mut b = store(1024 * MIB, 2);
+        b.begin_ckpt(0.0);
+        let mut tagged: Vec<(usize, WriteReq)> =
+            wave("g0", 6, 16 * MIB).into_iter().enumerate().collect();
+        tagged.reverse();
+        tagged.swap(1, 4); // scrambled completion order
+        let io_unordered = b.write_wave_unordered(tagged).unwrap();
+
+        assert_eq!(io_ordered.fast_secs, io_unordered.fast_secs);
+        assert_eq!(io_ordered.fast_bytes, io_unordered.fast_bytes);
+        assert_eq!(io_ordered.pending_bytes, io_unordered.pending_bytes);
+        let paths = |ts: &TieredStore| -> Vec<String> {
+            ts.queue.iter().map(|i| i.path.clone()).collect::<Vec<_>>()
+        };
+        assert_eq!(paths(&a), paths(&b), "drain queue must be rank-ordered");
+        for i in 0..6u32 {
+            let p = format!("g0/f{i}");
+            assert_eq!(
+                a.fast().peek(&p).unwrap(),
+                b.fast().peek(&p).unwrap(),
+                "stored bytes must match for {p}"
+            );
         }
     }
 

@@ -125,8 +125,9 @@ COMMANDS:
   run        --app gromacs|hpcg|vasp|synthetic --ranks N [--steps S]
              [--threads T] [--fs bb|lustre|staged] [--keep-fulls N]
              [--chunk-bytes N] [--chunking fixed|cdc] [--coord-fanout F]
-             [--encode-threads N] [--ckpt-at STEP] [--restart]
-             [--real-compute] [--fixes on|off] [--link static|dynamic]
+             [--encode-threads N] [--pipeline on|off] [--ckpt-at STEP]
+             [--restart] [--real-compute] [--fixes on|off]
+             [--link static|dynamic]
   usage      [--jobs N] print the Fig. 1 application census
   mapping    --ranks N [--threads T] print rank→node/pid mapping
   preempt    [--ranks N] run the preempt-queue scenario
@@ -191,6 +192,16 @@ fn build_config(args: &Args) -> Result<RunConfig> {
         // rolling hash) boundaries whose expected size is --chunk-bytes.
         cfg.chunking = mana::config::ChunkingMode::parse(m)
             .with_context(|| format!("unknown --chunking {m} (fixed|cdc)"))?;
+    }
+    if let Some(v) = args.get("pipeline") {
+        // Fully pipelined checkpoint path (streamed encode→write
+        // admission, overlapped INTENT/SAFE-POINT): on by default;
+        // `--pipeline off` forces the serial phase-by-phase path.
+        match v {
+            "on" | "true" | "1" => cfg.pipeline = true,
+            "off" | "false" | "0" => cfg.pipeline = false,
+            other => bail!("unknown --pipeline {other} (on|off)"),
+        }
     }
     if let Some(v) = args.get("encode-threads") {
         // Checkpoint WRITE-path worker count; omit for the host's
@@ -296,7 +307,14 @@ fn cmd_run(args: &Args) -> Result<()> {
                 .set("image_bytes", c.image_bytes)
                 .set("encode_host_secs", c.encode_host_secs)
                 .set("encode_threads", c.encode_threads as u64)
+                .set("pipelined", c.pipelined)
+                .set("stall_secs", c.stall_secs)
+                .set("encode_stall_secs", c.encode_stall_secs)
+                .set("overlap_saved_secs", c.overlap_saved_secs)
+                .set("stale_acks", c.stale_acks)
                 .set("digest_cache_hit_bytes", c.digest_cache_hit_bytes)
+                .set("fresh_hash_bytes", c.fresh_hash_bytes)
+                .set("cache_partial_regions", c.cache_partial_regions)
                 .set("drain_pending_bytes", c.drain_pending_bytes)
                 .set("deduped_bytes", c.deduped_bytes)
                 .set("dedup_ratio", c.dedup_ratio())
@@ -312,7 +330,8 @@ fn cmd_run(args: &Args) -> Result<()> {
             .set("ctrl_msgs", sim.coord.stats.ctrl_msgs)
             .set("root_ctrl_msgs", sim.coord.stats.root_msgs)
             .set("reparents", sim.coord.stats.reparents)
-            .set("phase_retries", sim.coord.stats.phase_retries),
+            .set("phase_retries", sim.coord.stats.phase_retries)
+            .set("stale_acks", sim.coord.stats.stale_acks),
     );
     if let Some(r) = restart_report {
         out = out.set(

@@ -107,10 +107,11 @@ pub struct MemRegion {
     /// the page-level dirty bit, at region granularity).
     pub dirty: bool,
     /// Memoized checkpoint-section encode of this region (digest
-    /// memoization on the write path). Valid only while the content is
-    /// provably unchanged: dropped on any mutable access
-    /// ([`RegionTable::get_mut`]) and on any dirty-bit transition
-    /// ([`RegionTable::clear_dirty`]).
+    /// memoization on the write path). An entry, when present, describes
+    /// the live content exactly *outside* its recorded stale ranges:
+    /// untracked mutable access ([`RegionTable::get_mut`]) drops it;
+    /// tracked in-place writes ([`RegionTable::write_range`]) downgrade it
+    /// to chunk granularity by recording the overwritten span.
     pub(crate) digest_cache: Option<Box<RegionDigestCache>>,
 }
 
@@ -281,6 +282,37 @@ impl RegionTable {
         Some(r)
     }
 
+    /// Tracked in-place write into a [`Payload::Real`] region: copy
+    /// `bytes` at payload offset `off` and mark the region dirty. Unlike
+    /// [`Self::get_mut`] — which hands out the whole region and must
+    /// pessimistically drop the memoized encode — this path knows exactly
+    /// which span changed, so any digest-cache entry is *downgraded* to
+    /// chunk granularity ([`RegionDigestCache::note_stale`]) instead of
+    /// discarded: the next encode re-hashes only the chunks the span
+    /// touches.
+    ///
+    /// Returns `false` (writing nothing) when the region is missing, is
+    /// not Real-backed, or the span exceeds the resident payload; callers
+    /// fall back to the `get_mut` path in that case.
+    pub fn write_range(&mut self, name: &str, off: u64, bytes: &[u8]) -> bool {
+        let Some(r) = self.regions.iter_mut().find(|r| r.name == name) else {
+            return false;
+        };
+        let Payload::Real(data) = &mut r.payload else {
+            return false;
+        };
+        let end = off + bytes.len() as u64;
+        if end > data.len() as u64 {
+            return false;
+        }
+        data[off as usize..end as usize].copy_from_slice(bytes);
+        r.dirty = true;
+        if let Some(c) = r.digest_cache.as_deref_mut() {
+            c.note_stale(off, bytes.len() as u64);
+        }
+        true
+    }
+
     pub fn iter(&self) -> impl Iterator<Item = &MemRegion> {
         self.regions.iter()
     }
@@ -303,16 +335,18 @@ impl RegionTable {
     }
 
     /// Clear dirty bits on a half (done after a full checkpoint captures
-    /// everything). Cache validity is a pure function of the dirty bit,
-    /// so a dirty→clean transition drops the region's memoized section;
-    /// already-clean regions keep theirs (that entry was populated while
-    /// clean, so it still describes the current content — this is what
-    /// makes steady-state checkpoints warm).
+    /// everything). Digest-cache entries survive the dirty→clean
+    /// transition: every mutation path either drops the entry outright
+    /// ([`Self::get_mut`], the untracked gateway) or records the mutated
+    /// span in it ([`Self::write_range`]), and the encoder only (re)plants
+    /// entries describing the bytes it just encoded — so an entry present
+    /// here is valid modulo its recorded stale ranges, at worst downgraded
+    /// to chunk granularity rather than discarded wholesale. (Dropping on
+    /// the transition was the old behaviour; it threw away the whole
+    /// region entry when only a subset of cuts was invalidated, forcing a
+    /// full re-hash of a region with one hot page.)
     pub fn clear_dirty(&mut self, half: Half) {
         for r in self.regions.iter_mut().filter(|r| r.half == half) {
-            if r.dirty {
-                r.digest_cache = None;
-            }
             r.dirty = false;
         }
     }
@@ -683,6 +717,9 @@ mod tests {
             section_crc: 0,
             encoded: vec![1, 2, 3],
             rel_chunks: Vec::new(),
+            payload_cuts: Vec::new(),
+            chunk_crcs: Vec::new(),
+            stale_ranges: Vec::new(),
         }
     }
 
@@ -708,25 +745,86 @@ mod tests {
     }
 
     #[test]
-    fn clear_dirty_drops_only_transitioning_caches() {
+    fn clear_dirty_keeps_downgraded_caches() {
+        // The dirty→clean transition must not discard an entry that was
+        // downgraded to chunk granularity: get_mut (the untracked path)
+        // already dropped any entry it could invalidate, and write_range
+        // recorded its spans — so whatever is still planted here is valid
+        // modulo those spans.
         let mut t = RegionTable::new();
-        t.insert(region(0x1000, 0x100, "written")).unwrap();
+        t.insert(MemRegion::new(
+            0x1000,
+            0x100,
+            Half::Upper,
+            "written",
+            Payload::Real(vec![0u8; 0x100]),
+        ))
+        .unwrap();
         t.insert(region(0x4000, 0x100, "stable")).unwrap();
         t.clear_dirty(Half::Upper);
-        t.get_mut("written").unwrap().dirty = true;
         t.inject_digest_cache("written", dummy_cache());
         t.inject_digest_cache("stable", dummy_cache());
-        // clear_dirty after a full checkpoint: the dirty→clean transition
-        // drops the entry; untouched clean regions stay warm.
+        assert!(t.write_range("written", 0x20, &[7u8; 16]));
+        assert!(t.get("written").unwrap().dirty);
         t.clear_dirty(Half::Upper);
-        assert!(
-            t.get("written").unwrap().digest_cache().is_none(),
-            "clear_dirty must drop the cached recipe of a dirty region"
+        let c = t.get("written").unwrap().digest_cache().unwrap();
+        assert_eq!(
+            c.stale_ranges,
+            vec![(0x20, 0x30)],
+            "the downgraded entry survives clear_dirty with its spans"
         );
         assert!(
             t.get("stable").unwrap().digest_cache().is_some(),
             "steady-state clean regions keep their caches"
         );
+        // The untracked gateway still drops unconditionally.
+        t.get_mut("written").unwrap().dirty = true;
+        assert!(t.get("written").unwrap().digest_cache().is_none());
+    }
+
+    #[test]
+    fn write_range_records_and_coalesces_stale_spans() {
+        let mut t = RegionTable::new();
+        t.insert(MemRegion::new(
+            0x1000,
+            0x1000,
+            Half::Upper,
+            "a",
+            Payload::Real(vec![0u8; 0x1000]),
+        ))
+        .unwrap();
+        t.clear_dirty(Half::Upper);
+        t.inject_digest_cache("a", dummy_cache());
+        assert!(t.write_range("a", 0x100, &[1u8; 0x10]));
+        assert!(t.write_range("a", 0x800, &[2u8; 0x10]));
+        // Touching span merges with the first.
+        assert!(t.write_range("a", 0x110, &[3u8; 0x10]));
+        let r = t.get("a").unwrap();
+        assert!(r.dirty, "tracked writes still dirty the region");
+        assert_eq!(
+            r.digest_cache().unwrap().stale_ranges,
+            vec![(0x100, 0x120), (0x800, 0x810)]
+        );
+        // The bytes actually landed.
+        let Payload::Real(data) = &r.payload else {
+            panic!("payload must stay Real");
+        };
+        assert_eq!(data[0x100], 1);
+        assert_eq!(data[0x110], 3);
+        assert_eq!(data[0x800], 2);
+
+        // Out-of-bounds and non-Real targets refuse and write nothing.
+        assert!(!t.write_range("a", 0xFF8, &[9u8; 16]));
+        t.insert(MemRegion::new(
+            0x8000,
+            0x100,
+            Half::Upper,
+            "pat",
+            Payload::Pattern(5),
+        ))
+        .unwrap();
+        assert!(!t.write_range("pat", 0, &[1]));
+        assert!(!t.write_range("missing", 0, &[1]));
     }
 
     #[test]

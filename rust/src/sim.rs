@@ -22,13 +22,14 @@ use anyhow::Result;
 use crate::apps::{self, App, StepCtx, HALO_VIRTUAL_BYTES};
 use crate::ckpt::manifest::CkptManifest;
 use crate::ckpt::{
-    datapath, gen_image_path, gen_incr_image_path, image_path, CkptImage, ImageError,
+    datapath, gen_image_path, gen_incr_image_path, image_path, pipeline, CkptImage, ImageError,
     SavedPayload, SavedRegion,
 };
 use crate::config::{ComputeMode, RunConfig};
 use crate::coordinator::tree::TreePlane;
 use crate::coordinator::{
-    CkptFailure, CkptReport, CoordPlane, Coordinator, FlatPlane, Phase, PhaseIo, RankState,
+    CkptFailure, CkptReport, CoordPlane, Coordinator, FlatPlane, OverlapIo, Phase, PhaseIo,
+    RankState,
 };
 use crate::fs::{FileSystem, FsConfig, FsError, FsKind, Store, TieredStore, WriteReq};
 use crate::launcher::{self, LaunchError};
@@ -465,37 +466,74 @@ impl JobSim {
             ..CkptReport::default()
         };
         let t0 = self.now();
+        let pipelined = self.cfg.pipeline;
+        report.pipelined = pipelined;
 
-        // Phase 1: INTENT over the coordination plane.
-        let pio = self.coord.phase_exchange(Phase::Intent, t0)?;
-        absorb_phase(&mut report, pio);
-        report.intent_secs = pio.secs;
-        let mut t = t0.after(pio.secs);
-
-        // Fault window: a status update lands right here; without the
-        // locks fix it is interruptible.
+        // Phases 1+2: INTENT and SAFE-POINT. Pipelined, the SAFE-POINT
+        // broadcast starts down the tree while the INTENT reduce is still
+        // converging (the plane fuses the sweeps and the epoch rule keeps
+        // retries honest); serial, the two exchanges run back to back.
+        // Either way the rank-side work — the status-table update, the
+        // consistency check, and retiring outstanding converted requests —
+        // happens before the SAFE-POINT acks can flow, so it is hoisted in
+        // front of whichever exchange shape runs.
         let interrupt = self.cfg.faults.interrupt_status_update;
-        for r in 0..self.cfg.ranks {
-            self.coord
-                .set_rank_state(RankId(r), RankState::SafePoint, interrupt);
-        }
-        self.coord.check_status_consistent()?;
-
-        // Phase 2: safe points (no outstanding converted requests),
-        // confirmed over the plane.
-        for r in 0..self.cfg.ranks {
-            let rank = RankId(r);
-            if !self.wrappers.at_safe_point(rank, self.times[r as usize]) {
-                if let Some(done) = self.wrappers.next_completion(rank) {
-                    self.times[r as usize] = self.times[r as usize].max(done);
-                }
-                self.wrappers.retire_completed(rank, self.times[r as usize]);
+        let mut t;
+        if pipelined {
+            for r in 0..self.cfg.ranks {
+                self.coord
+                    .set_rank_state(RankId(r), RankState::SafePoint, interrupt);
             }
+            self.coord.check_status_consistent()?;
+            for r in 0..self.cfg.ranks {
+                let rank = RankId(r);
+                if !self.wrappers.at_safe_point(rank, self.times[r as usize]) {
+                    if let Some(done) = self.wrappers.next_completion(rank) {
+                        self.times[r as usize] = self.times[r as usize].max(done);
+                    }
+                    self.wrappers.retire_completed(rank, self.times[r as usize]);
+                }
+            }
+            let o = self
+                .coord
+                .phase_exchange_overlapped(Phase::Intent, Phase::SafePoint, t0)?;
+            absorb_overlap(&mut report, &o);
+            report.intent_secs = o.first.secs;
+            report.safepoint_secs = o.second.secs;
+            report.stale_acks = o.stale_acks;
+            report.overlap_saved_secs += (o.first.secs + o.second.secs) - o.secs;
+            t = t0.after(o.secs);
+        } else {
+            // Phase 1: INTENT over the coordination plane.
+            let pio = self.coord.phase_exchange(Phase::Intent, t0)?;
+            absorb_phase(&mut report, pio);
+            report.intent_secs = pio.secs;
+            t = t0.after(pio.secs);
+
+            // Fault window: a status update lands right here; without the
+            // locks fix it is interruptible.
+            for r in 0..self.cfg.ranks {
+                self.coord
+                    .set_rank_state(RankId(r), RankState::SafePoint, interrupt);
+            }
+            self.coord.check_status_consistent()?;
+
+            // Phase 2: safe points (no outstanding converted requests),
+            // confirmed over the plane.
+            for r in 0..self.cfg.ranks {
+                let rank = RankId(r);
+                if !self.wrappers.at_safe_point(rank, self.times[r as usize]) {
+                    if let Some(done) = self.wrappers.next_completion(rank) {
+                        self.times[r as usize] = self.times[r as usize].max(done);
+                    }
+                    self.wrappers.retire_completed(rank, self.times[r as usize]);
+                }
+            }
+            let pio = self.coord.phase_exchange(Phase::SafePoint, t)?;
+            absorb_phase(&mut report, pio);
+            report.safepoint_secs = pio.secs;
+            t = t.after(pio.secs);
         }
-        let pio = self.coord.phase_exchange(Phase::SafePoint, t)?;
-        absorb_phase(&mut report, pio);
-        report.safepoint_secs = pio.secs;
-        t = t.after(pio.secs);
 
         // Phase 3: DRAIN (or the legacy drop).
         let drain_t0 = self.now();
@@ -581,9 +619,16 @@ impl JobSim {
             self.coord
                 .set_rank_state(RankId(r), RankState::Writing, false);
         }
-        let pio = self.coord.phase_exchange(Phase::Write, t)?;
-        absorb_phase(&mut report, pio);
-        t = t.after(pio.secs);
+        let write_pio = self.coord.phase_exchange(Phase::Write, t)?;
+        absorb_phase(&mut report, write_pio);
+        if pipelined {
+            // Only the broadcast's down-sweep gates the wave; the ack
+            // reduce climbs back up while the ranks are already writing,
+            // so its cost is settled against the stall after the wave.
+            t = t.after(write_pio.down_secs);
+        } else {
+            t = t.after(write_pio.secs);
+        }
         let incremental = self.cfg.incremental
             && (self.last_full_gen.is_some()
                 || (self.cfg.staging.is_none()
@@ -648,14 +693,39 @@ impl JobSim {
             threads: datapath::resolve_threads(self.cfg.encode_threads),
             with_recipe: staged,
         };
-        let (reqs, dstats) = datapath::encode_wave(&mut sources, &jobs, &opts);
+        // The encoders deliver finished ranks in completion order over a
+        // bounded channel; each delivery is tagged with its wave index and
+        // costed for the stall model. Virtual time is charged from the
+        // *model* (deterministic), never from host completion order, so
+        // the report is reproducible across machines and schedules.
+        let n_jobs = jobs.len();
+        let mut costs = vec![pipeline::EncodeCost::default(); n_jobs];
+        let mut tagged: Vec<(usize, WriteReq)> = Vec::with_capacity(n_jobs);
+        let dstats = datapath::encode_wave_streaming(&mut sources, &jobs, &opts, &mut |enc| {
+            costs[enc.index] = pipeline::EncodeCost {
+                hash_vbytes: enc.stats.fresh_hash_vbytes,
+                copy_bytes: enc.req.data.len() as u64,
+            };
+            tagged.push((enc.index, enc.req));
+        });
         drop(sources);
-        let total_virtual: u64 = reqs.iter().map(|q| q.virtual_bytes).sum();
+        let total_virtual: u64 = tagged.iter().map(|(_, q)| q.virtual_bytes).sum();
+        let mut weights = vec![0u64; n_jobs];
+        for (i, q) in &tagged {
+            weights[*i] = q.virtual_bytes;
+        }
         report.encode_host_secs = dstats.host_secs;
         report.encode_threads = dstats.threads as u32;
         report.digest_cache_hit_bytes = dstats.cache_hit_bytes;
+        report.fresh_hash_bytes = dstats.fresh_hash_bytes;
+        report.cache_partial_regions = dstats.cache_partial_regions;
         let io = match &mut self.fs {
             Store::Single(fs) => {
+                // Single-tier stores model one aggregate wave; admission
+                // order does not change its duration, so both paths hand
+                // over the wave in rank order.
+                tagged.sort_by_key(|(i, _)| *i);
+                let reqs: Vec<WriteReq> = tagged.into_iter().map(|(_, q)| q).collect();
                 let io = match fs.write_parallel(reqs) {
                     Ok(io) => io,
                     Err(e @ FsError::InsufficientSpace { .. }) => {
@@ -677,9 +747,22 @@ impl JobSim {
             }
             Store::Tiered(ts) => {
                 ts.begin_ckpt(t.as_secs());
-                let sio = match ts.write_wave(reqs) {
-                    Ok(sio) => sio,
-                    Err(e) => return Err(CkptFailure::DiskFull(e.to_string())),
+                let sio = if pipelined {
+                    // Streamed admission: ranks enter the wave as their
+                    // encodes finish. The tier re-anchors the manifest
+                    // order internally, so the stored generation is
+                    // bitwise the rank-order wave.
+                    match ts.write_wave_unordered(tagged) {
+                        Ok(sio) => sio,
+                        Err(e) => return Err(CkptFailure::DiskFull(e.to_string())),
+                    }
+                } else {
+                    tagged.sort_by_key(|(i, _)| *i);
+                    let reqs: Vec<WriteReq> = tagged.into_iter().map(|(_, q)| q).collect();
+                    match ts.write_wave(reqs) {
+                        Ok(sio) => sio,
+                        Err(e) => return Err(CkptFailure::DiskFull(e.to_string())),
+                    }
                 };
                 report.fast_write_secs = sio.fast_secs;
                 report.fast_bytes = sio.fast_bytes;
@@ -691,7 +774,23 @@ impl JobSim {
         };
         report.write_secs = io.duration;
         report.image_bytes = total_virtual;
-        t = t.after(io.duration);
+        // Charge the stall from the model: serial pays encode-then-write;
+        // pipelined pays the streamed-admission stall, clamped into
+        // [max(encode, write), encode + write]. The WRITE ack reduce's
+        // up-sweep also hides under the pipelined stall.
+        let plan = pipeline::plan(&costs, &weights, dstats.threads.max(1), io.duration);
+        report.encode_stall_secs = plan.encode_secs;
+        if pipelined {
+            report.stall_secs = plan.pipelined_stall;
+            report.overlap_saved_secs += plan.overlap_saved();
+            let up = (write_pio.secs - write_pio.down_secs).max(0.0);
+            let hidden = up.min(plan.pipelined_stall);
+            report.overlap_saved_secs += hidden;
+            t = t.after(plan.pipelined_stall + (up - hidden));
+        } else {
+            report.stall_secs = plan.serial_stall;
+            t = t.after(plan.serial_stall);
+        }
         for tt in &mut self.times {
             *tt = t;
         }
@@ -1179,6 +1278,16 @@ fn absorb_phase(report: &mut CkptReport, io: PhaseIo) {
     report.reparents += io.reparents;
 }
 
+/// Fold an overlapped phase pair into the report: control seconds are
+/// the fused sweep, traffic is the per-phase sum — overlap buys time,
+/// never messages.
+fn absorb_overlap(report: &mut CkptReport, o: &OverlapIo) {
+    report.ctrl_secs += o.secs;
+    report.ctrl_msgs += o.first.msgs + o.second.msgs;
+    report.root_ctrl_msgs += o.first.root_msgs + o.second.root_msgs;
+    report.reparents += o.first.reparents + o.second.reparents;
+}
+
 /// Decode an image, and on CRC/decode failure of a fast-tier copy whose
 /// durable twin exists, re-read from the durable tier and retry (staged
 /// mode's cross-tier fallback). Charges the extra read to the report.
@@ -1581,6 +1690,132 @@ mod tests {
         assert!(rep.ctrl_msgs > rep.root_ctrl_msgs, "plane moves more than the root");
         assert_eq!(rep.coord_depth, 3, "8 nodes at fanout 4: two levels + leaf");
         assert!(rep.ctrl_secs > 0.0);
+    }
+
+    // --------------------------------------------- pipelined ckpt path
+
+    #[test]
+    fn pipelined_and_serial_checkpoints_are_bitwise_identical() {
+        let mut cont = JobSim::launch(quick_cfg(4, 0), None).unwrap();
+        cont.run_steps(6).unwrap();
+        let want = cont.fingerprint();
+
+        let run = |pipeline: bool| {
+            let mut cfg = quick_cfg(4, 0);
+            cfg.pipeline = pipeline;
+            cfg.encode_threads = Some(2);
+            let mut sim = JobSim::launch(cfg, None).unwrap();
+            sim.run_steps(3).unwrap();
+            let rep = sim.checkpoint().unwrap();
+            let images: Vec<Vec<u8>> = (0..4)
+                .map(|r| {
+                    sim.fs
+                        .read_parallel(&[(
+                            sim.topo.node_of(RankId(r)),
+                            image_path(&sim.cfg.job, RankId(r)),
+                        )])
+                        .unwrap()
+                        .0
+                        .remove(0)
+                })
+                .collect();
+            let cfg = sim.cfg.clone();
+            let fs = sim.kill();
+            let (mut resumed, _) = JobSim::restart_from(cfg, None, fs).unwrap();
+            resumed.run_steps(3).unwrap();
+            (rep, images, resumed.fingerprint())
+        };
+        let (srep, simgs, sfp) = run(false);
+        let (prep, pimgs, pfp) = run(true);
+        assert_eq!(simgs, pimgs, "stored images must be bitwise identical");
+        assert_eq!(sfp, want, "serial restart must be bitwise");
+        assert_eq!(pfp, want, "pipelined restart must be bitwise");
+        assert!(!srep.pipelined);
+        assert!(prep.pipelined);
+        assert_eq!(srep.image_bytes, prep.image_bytes);
+        // Identical bytes hit the same write model; only the stall shrinks.
+        assert_eq!(srep.write_secs, prep.write_secs);
+        assert!(
+            (srep.stall_secs - (srep.encode_stall_secs + srep.write_secs)).abs() < 1e-9,
+            "serial stall is encode-then-write"
+        );
+        assert!(prep.stall_secs <= srep.stall_secs);
+        assert!(
+            prep.stall_secs >= prep.encode_stall_secs.max(prep.write_secs) - 1e-12,
+            "no model can beat the slower side of the pipe"
+        );
+        assert!(
+            prep.overlap_saved_secs > 0.0,
+            "hiding the WRITE ack reduce alone must save time"
+        );
+        assert!(prep.total_secs <= srep.total_secs);
+    }
+
+    #[test]
+    fn pipelined_staged_wave_matches_serial_generation() {
+        // Streamed admission reorders the write wave at the host level;
+        // the stored generation (fast tier after drain, dedup accounting)
+        // must be indistinguishable from the rank-order wave.
+        let run = |pipeline: bool| {
+            let mut cfg = staged_cfg(4, 0);
+            cfg.pipeline = pipeline;
+            cfg.encode_threads = Some(4);
+            let mut sim = JobSim::launch(cfg, None).unwrap();
+            sim.run_steps(2).unwrap();
+            let rep = sim.checkpoint().unwrap();
+            sim.finish_drain();
+            let ts = sim.fs.tiered().unwrap();
+            let mut paths = ts.fast().paths();
+            paths.sort();
+            let images: Vec<(String, Vec<u8>)> = paths
+                .iter()
+                .map(|p| (p.clone(), ts.fast().peek(p).unwrap().1.to_vec()))
+                .collect();
+            (rep, images)
+        };
+        let (srep, simgs) = run(false);
+        let (prep, pimgs) = run(true);
+        assert_eq!(simgs, pimgs, "staged generation must be bitwise identical");
+        assert_eq!(srep.deduped_bytes, prep.deduped_bytes);
+        assert_eq!(srep.fast_bytes, prep.fast_bytes);
+        assert!(prep.stall_secs <= srep.stall_secs);
+    }
+
+    #[test]
+    fn subcoord_death_during_overlap_reparents_and_restores_bitwise() {
+        let mut cont = JobSim::launch(quick_cfg(16, 0), None).unwrap();
+        cont.run_steps(6).unwrap();
+        let want = cont.fingerprint();
+
+        // SAFE-POINT is the second phase of the fused INTENT/SAFE-POINT
+        // pair, so this death lands mid-overlap: the plane must re-parent,
+        // discard the dead sub's acks as stale, forfeit the fused-sweep
+        // credit — and the checkpoint must still converge (the DRAIN
+        // reduce balancing proves no drain counter was double-counted).
+        let mut cfg = quick_cfg(16, 0).with_coord_tree(2);
+        cfg.job = "tree-overlap-death".into();
+        cfg.faults.subcoord_death = Some((0, Phase::SafePoint));
+        let mut sim = JobSim::launch(cfg.clone(), None).unwrap();
+        sim.run_steps(3).unwrap();
+        let rep = sim.checkpoint().unwrap();
+        assert!(rep.pipelined);
+        assert_eq!(rep.reparents, 1, "death mid-overlap must re-parent once");
+        assert!(
+            rep.stale_acks > 0,
+            "the dead sub's in-flight acks must be counted out as stale"
+        );
+        assert_eq!(sim.coord.stats.stale_acks, rep.stale_acks);
+        assert!(sim.coord.stats.phase_retries >= 1);
+        let fs = sim.kill();
+        cfg.faults.subcoord_death = None; // the dead node stays gone
+        let (mut resumed, _) = JobSim::restart_from(cfg, None, fs).unwrap();
+        resumed.run_steps(3).unwrap();
+        assert_eq!(
+            resumed.fingerprint(),
+            want,
+            "overlap-interrupted ckpt must restore bitwise"
+        );
+        assert!(!resumed.any_corruption());
     }
 
     // --------------------------------------------- staged (tiered) mode

@@ -90,39 +90,50 @@ fn gear() -> &'static [u64; 256] {
     })
 }
 
+/// The cut that ends the chunk starting at `start` (`0` or a previous cut
+/// of the same buffer). The warm-up window indexes the **full buffer** —
+/// reaching back across `start` exactly as [`cut_points`] does mid-walk —
+/// so resuming a scan from any genuine cut position reproduces the full
+/// scan's suffix bit-for-bit. (Scanning a *slice* `&data[start..]` instead
+/// would clamp the warm-up at the slice front and move the first cuts:
+/// partial re-encode must use this, never a sliced rescan.)
+pub fn next_cut(data: &[u8], p: &CdcParams, start: usize) -> usize {
+    debug_assert!(p.is_valid(), "invalid CDC params {p:?}");
+    let n = data.len();
+    // First *judged* ingest position: min bytes into the chunk.
+    let first = start + p.min;
+    if first >= n {
+        return n; // short final chunk
+    }
+    let g = gear();
+    let thr = p.threshold();
+    let hard = (start + p.max).min(n);
+    // Warm the rolling window. The warm-up may reach across the
+    // previous cut (and, at the very front of the buffer, clamp to
+    // offset 0) — marker status must be a function of content alone.
+    let mut h = 0u64;
+    for &b in &data[first.saturating_sub(WINDOW)..first] {
+        h = (h << 1).wrapping_add(g[b as usize]);
+    }
+    for (j, &b) in data[first..hard].iter().enumerate() {
+        h = (h << 1).wrapping_add(g[b as usize]);
+        if h <= thr {
+            return first + j + 1;
+        }
+    }
+    hard
+}
+
 /// Content-defined cut points of `data`: strictly increasing end offsets,
 /// the last equal to `data.len()`. Empty data has no cuts (zero chunks),
 /// mirroring fixed tiling.
 pub fn cut_points(data: &[u8], p: &CdcParams) -> Vec<usize> {
     assert!(p.is_valid(), "invalid CDC params {p:?}");
-    let g = gear();
-    let thr = p.threshold();
     let n = data.len();
     let mut cuts = Vec::with_capacity(n / p.avg + 1);
     let mut start = 0usize;
     while start < n {
-        // First *judged* ingest position: min bytes into the chunk.
-        let first = start + p.min;
-        if first >= n {
-            cuts.push(n); // short final chunk
-            break;
-        }
-        let hard = (start + p.max).min(n);
-        // Warm the rolling window. The warm-up may reach across the
-        // previous cut (and, at the very front of the buffer, clamp to
-        // offset 0) — marker status must be a function of content alone.
-        let mut h = 0u64;
-        for &b in &data[first.saturating_sub(WINDOW)..first] {
-            h = (h << 1).wrapping_add(g[b as usize]);
-        }
-        let mut cut = hard;
-        for (j, &b) in data[first..hard].iter().enumerate() {
-            h = (h << 1).wrapping_add(g[b as usize]);
-            if h <= thr {
-                cut = first + j + 1;
-                break;
-            }
-        }
+        let cut = next_cut(data, p, start);
         cuts.push(cut);
         start = cut;
     }
@@ -278,6 +289,30 @@ mod tests {
             resync < ins_at + 8 * p.max,
             "resync at {resync} too far past the edit at {ins_at}"
         );
+    }
+
+    #[test]
+    fn next_cut_resumes_the_full_scan_from_any_cut() {
+        // The partial re-encode contract: restarting the walk at any cut
+        // (or 0) with full-buffer warm-up windows reproduces the full
+        // scan's suffix exactly.
+        let p = params(512);
+        let data = random_bytes(17, 96 << 10);
+        let cuts = cut_points(&data, &p);
+        let mut froms = vec![0usize];
+        froms.extend(cuts.iter().copied().filter(|&c| c < data.len()));
+        for from in froms {
+            let mut resumed = Vec::new();
+            let mut start = from;
+            while start < data.len() {
+                let c = next_cut(&data, &p, start);
+                resumed.push(c);
+                start = c;
+            }
+            let suffix: Vec<usize> =
+                cuts.iter().copied().filter(|&c| c > from).collect();
+            assert_eq!(resumed, suffix, "resume from {from} diverged");
+        }
     }
 
     #[test]

@@ -415,6 +415,143 @@ fn prop_cdc_boundaries_shift_invariant() {
     });
 }
 
+/// Invariant (pipelined checkpoint path): for any random job shape,
+/// thread count, chunking mode and storage tiering, the pipelined path
+/// (streamed encode→write admission + overlapped INTENT/SAFE-POINT)
+/// stores byte-identical images and manifests, restarts to the same
+/// fingerprint, and never stalls longer than the serial path.
+#[test]
+fn prop_pipelined_checkpoint_bitwise_matches_serial() {
+    use mana::ckpt::manifest::CkptManifest;
+    use mana::topology::NodeId;
+
+    run("pipelined ckpt bitwise", 10, |g| {
+        let ranks = g.range(1, 5) as u32;
+        let steps = g.range(1, 4);
+        let staged = g.bool();
+        let threads = g.range(1, 5) as usize;
+        let seed = g.range(0, u64::MAX - 1);
+        let cdc = g.bool();
+        let lane = |pipeline: bool| {
+            let mut cfg = RunConfig::new(AppKind::Synthetic, ranks);
+            cfg.job = format!("pipe-{ranks}-{steps}-{staged}");
+            cfg.mem_per_rank = Some(1 << 20);
+            cfg.seed = seed;
+            cfg.encode_threads = Some(threads);
+            cfg.pipeline = pipeline;
+            if cdc {
+                cfg.chunking = mana::config::ChunkingMode::Cdc;
+            }
+            if staged {
+                cfg = cfg.with_staging();
+            }
+            let mut sim = JobSim::launch(cfg.clone(), None).unwrap();
+            sim.run_steps(steps).unwrap();
+            let rep = sim.checkpoint().unwrap();
+            let paths: Vec<(NodeId, String)> = (0..ranks)
+                .map(|r| {
+                    let p = if staged {
+                        mana::ckpt::gen_image_path(&cfg.job, 0, RankId(r))
+                    } else {
+                        mana::ckpt::image_path(&cfg.job, RankId(r))
+                    };
+                    (sim.topo.node_of(RankId(r)), p)
+                })
+                .chain(std::iter::once((
+                    sim.topo.node_of(RankId(0)),
+                    CkptManifest::manifest_path(&cfg.job),
+                )))
+                .collect();
+            let (datas, _) = sim.fs.read_parallel(&paths).unwrap();
+            let fs = sim.kill();
+            let (mut resumed, _) = JobSim::restart_from(cfg, None, fs).unwrap();
+            resumed.run_steps(1).unwrap();
+            (rep, datas, resumed.fingerprint())
+        };
+        let (srep, simgs, sfp) = lane(false);
+        let (prep, pimgs, pfp) = lane(true);
+        assert_eq!(simgs, pimgs, "stored images + manifest must be bitwise");
+        assert_eq!(sfp, pfp, "restart fingerprints must agree");
+        assert!(!srep.pipelined);
+        assert!(prep.pipelined);
+        assert!(prep.stall_secs <= srep.stall_secs + 1e-12);
+        assert!(prep.stall_secs >= prep.encode_stall_secs.max(prep.write_secs) - 1e-12);
+    });
+}
+
+/// Invariant (sub-region dirty tracking): after any sequence of random
+/// in-place patches to a cached region, the chunk-granular partial
+/// re-encode is byte-identical (data and recipe) to a cold encode of the
+/// final contents — for fixed and content-defined grids alike.
+#[test]
+fn prop_partial_encode_bitwise_matches_cold() {
+    use mana::ckpt::datapath::{encode_wave, EncodeOpts, RankJob, RankSource};
+    use mana::topology::NodeId;
+
+    run("partial encode bitwise", 25, |g| {
+        let len = g.range(2000, 60_000) as usize;
+        let data: Vec<u8> = (0..len).map(|_| g.range(0, 255) as u8).collect();
+        let chunk_bytes = 1usize << g.range(8, 13); // 256 B .. 8 KiB
+        let chunking = if g.bool() {
+            mana::ckpt::Chunking::Fixed(chunk_bytes)
+        } else {
+            mana::ckpt::Chunking::cdc(chunk_bytes)
+        };
+        let with_recipe = g.bool();
+        let mk_table = |bytes: Vec<u8>| {
+            let mut t = RegionTable::new();
+            t.insert(MemRegion::new(
+                0x1000_0000_0000,
+                bytes.len() as u64,
+                Half::Upper,
+                "state",
+                Payload::Real(bytes),
+            ))
+            .unwrap();
+            t
+        };
+        let jobs = vec![RankJob {
+            rank: RankId(0),
+            node: NodeId(0),
+            path: "p/r00000.mana".into(),
+            parent: None,
+            extra_regions: Vec::new(),
+        }];
+        let opts = EncodeOpts {
+            chunking,
+            threads: 1,
+            with_recipe,
+        };
+        let encode = |t: &mut RegionTable| {
+            let mut sources = vec![RankSource {
+                table: t,
+                step: 7,
+                rng_state: [3u8; 32],
+                upper_fds: vec![(5, "out.log".into())],
+            }];
+            encode_wave(&mut sources, &jobs, &opts)
+        };
+
+        // Populate the digest cache, mark clean, patch random spans.
+        let mut live = mk_table(data.clone());
+        encode(&mut live);
+        live.clear_dirty(Half::Upper);
+        let mut want = data.clone();
+        for _ in 0..g.range(1, 4) {
+            let at = g.u64_below(len as u64) as usize;
+            let plen = (g.range(1, 300) as usize).min(len - at);
+            let patch: Vec<u8> = (0..plen).map(|_| g.range(0, 255) as u8).collect();
+            assert!(live.write_range("state", at as u64, &patch));
+            want[at..at + plen].copy_from_slice(&patch);
+        }
+        let (got, gstats) = encode(&mut live);
+        let (cold, _) = encode(&mut mk_table(want));
+        assert_eq!(got[0].data, cold[0].data, "patched encode must be bitwise");
+        assert_eq!(got[0].recipe, cold[0].recipe, "recipes must be identical");
+        assert!(gstats.fresh_hash_bytes <= len as u64);
+    });
+}
+
 /// Invariant: raw CDC recipes re-use the digests of every chunk whose
 /// boundaries resynchronized — the dedup-level statement of the boundary
 /// property above, across random parameters.
