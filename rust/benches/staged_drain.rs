@@ -132,6 +132,8 @@ fn restart_checks() {
     let (resumed, rrep) =
         JobSim::restart_from(cfg.clone(), None, fs).expect("restart from fast tier");
     assert_eq!(rrep.tier_fallbacks, 0, "clean fast tier needs no fallback");
+    assert_eq!(rrep.rebuilt_nodes, 0, "no-fault restart must not rebuild");
+    assert_eq!(rrep.generation_rewound, 0, "no-fault restart must not rewind");
     assert_eq!(resumed.fingerprint(), want, "fast-tier restart bitwise");
 
     let mut sim = JobSim::launch(cfg.clone(), None).expect("launch");
@@ -152,6 +154,8 @@ fn restart_checks() {
     let (resumed, rrep) = JobSim::restart_from(cfg, None, fs)
         .expect("restart must survive a corrupt fast-tier image");
     assert!(rrep.tier_fallbacks >= 1, "rank 3 must fall back to Lustre");
+    assert_eq!(rrep.rebuilt_nodes, 0, "no redundancy configured: no rebuild");
+    assert_eq!(rrep.generation_rewound, 0, "durable fallback must not rewind");
     assert_eq!(resumed.fingerprint(), want, "fallback restart bitwise");
     println!(
         "restart OK: fast-tier restart + CRC fallback to the durable tier \

@@ -11,6 +11,7 @@
 use std::collections::BTreeMap;
 
 use crate::ckpt::chunk::Chunking;
+use crate::fs::RedundancyScheme;
 use crate::topology::RankId;
 use crate::util::cdc::CdcParams;
 
@@ -36,6 +37,11 @@ pub struct CkptManifest {
     /// adopts it the same adopt-or-warn way as `chunk_bytes`, so a config
     /// defaulting to `fixed` never mis-tiles a CDC-written set.
     pub chunking: Option<Chunking>,
+    /// Fast-tier peer-redundancy scheme and set size the generation was
+    /// written with, so restart knows what rebuild to attempt before
+    /// falling back across tiers. `None` = unrecorded (pre-redundancy
+    /// manifest, implies `none`).
+    pub redundancy: Option<(RedundancyScheme, u32)>,
     entries: BTreeMap<u32, String>,
 }
 
@@ -48,6 +54,7 @@ impl CkptManifest {
             full_gen: None,
             chunk_bytes: 0,
             chunking: None,
+            redundancy: None,
             entries: BTreeMap::new(),
         }
     }
@@ -96,6 +103,9 @@ impl CkptManifest {
             }
             None => {}
         }
+        if let Some((scheme, set_size)) = &self.redundancy {
+            out.push_str(&format!("redundancy\t{}:{}\n", scheme.name(), set_size));
+        }
         for (rank, path) in &self.entries {
             out.push_str(&format!("{rank}\t{path}\n"));
         }
@@ -130,6 +140,13 @@ impl CkptManifest {
                         _ => return None,
                     });
                 }
+                // Must precede the numeric-rank fallback: a non-numeric
+                // key there fails the whole decode.
+                "redundancy" => {
+                    let (scheme, size) = v.split_once(':')?;
+                    m.redundancy =
+                        Some((RedundancyScheme::parse(scheme)?, size.parse().ok()?));
+                }
                 rank => {
                     m.entries.insert(rank.parse().ok()?, v.to_string());
                 }
@@ -155,6 +172,7 @@ mod tests {
         m.full_gen = Some(2);
         m.chunk_bytes = 1 << 20;
         m.chunking = Some(Chunking::cdc(1 << 20));
+        m.redundancy = Some((RedundancyScheme::Xor, 4));
         for r in 0..512u32 {
             m.add(RankId(r), crate::ckpt::image_path("job7", RankId(r)));
         }
@@ -209,6 +227,23 @@ mod tests {
         assert!(CkptManifest::decode(b"chunking\tcdc:1:2\n").is_none());
         assert!(CkptManifest::decode(b"chunking\tcdc:a:b:c\n").is_none());
         assert!(CkptManifest::decode(b"chunking\tfixed\n").is_none());
+    }
+
+    #[test]
+    fn redundancy_line_roundtrips_and_rejects_garbage() {
+        let mut m = CkptManifest::new("j", 1);
+        m.redundancy = Some((RedundancyScheme::Partner, 4));
+        let back = CkptManifest::decode(&m.encode()).unwrap();
+        assert_eq!(back.redundancy, Some((RedundancyScheme::Partner, 4)));
+
+        // Pre-redundancy manifests decode as unrecorded.
+        let plain = CkptManifest::new("j", 1);
+        let back = CkptManifest::decode(&plain.encode()).unwrap();
+        assert_eq!(back.redundancy, None);
+
+        assert!(CkptManifest::decode(b"redundancy\traid6:4\n").is_none());
+        assert!(CkptManifest::decode(b"redundancy\txor\n").is_none());
+        assert!(CkptManifest::decode(b"redundancy\txor:lots\n").is_none());
     }
 
     #[test]

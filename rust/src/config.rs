@@ -8,7 +8,8 @@
 use crate::ckpt::chunk::{Chunking, DEFAULT_CHUNK_BYTES};
 use crate::faults::FaultPlan;
 use crate::fdreg::FdPolicy;
-use crate::fs::FsKind;
+use crate::fs::redundancy::DEFAULT_SET_SIZE;
+use crate::fs::{FsKind, RedundancyScheme};
 use crate::mem::{AllocPolicy, OsVersion};
 
 /// Which analog application to run (see DESIGN.md §apps).
@@ -230,6 +231,14 @@ pub struct RunConfig {
     /// strictly-serial phase ordering. The stored bytes are identical
     /// either way; only the simulated stall accounting changes.
     pub pipeline: bool,
+    /// Fast-tier peer redundancy (`--redundancy none|partner|xor`): after
+    /// each checkpoint's write wave, nodes in a redundancy set exchange
+    /// partner copies or XOR parity over the fabric, so a single-node
+    /// fast-tier loss rebuilds from peers instead of falling back to the
+    /// durable tier. Staged mode only.
+    pub redundancy: RedundancyScheme,
+    /// Nodes per redundancy set (`--redundancy-set-size`, >= 2).
+    pub redundancy_set_size: u32,
 }
 
 impl RunConfig {
@@ -256,12 +265,24 @@ impl RunConfig {
             coord_fanout: None,
             encode_threads: None,
             pipeline: true,
+            redundancy: RedundancyScheme::None,
+            redundancy_set_size: DEFAULT_SET_SIZE,
         }
     }
 
     /// Enable the staged (tiered BB→Lustre) storage engine.
     pub fn with_staging(mut self) -> Self {
         self.staging = Some(StagingConfig::default());
+        self
+    }
+
+    /// Enable fast-tier peer redundancy (implies staged storage: the
+    /// redundancy layer protects the fast tier, so there must be one).
+    pub fn with_redundancy(mut self, scheme: RedundancyScheme) -> Self {
+        self.redundancy = scheme;
+        if self.staging.is_none() {
+            self.staging = Some(StagingConfig::default());
+        }
         self
     }
 
@@ -347,6 +368,16 @@ mod tests {
         assert!(c.staging.is_none());
         let s = c.with_staging();
         assert_eq!(s.staging.unwrap().keep_fulls, 2);
+    }
+
+    #[test]
+    fn redundancy_defaults_off_and_helper_implies_staging() {
+        let c = RunConfig::new(AppKind::Synthetic, 8);
+        assert_eq!(c.redundancy, RedundancyScheme::None);
+        assert_eq!(c.redundancy_set_size, DEFAULT_SET_SIZE);
+        let r = c.with_redundancy(RedundancyScheme::Xor);
+        assert_eq!(r.redundancy, RedundancyScheme::Xor);
+        assert!(r.staging.is_some(), "redundancy protects the fast tier");
     }
 
     #[test]

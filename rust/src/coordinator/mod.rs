@@ -431,6 +431,16 @@ pub struct CkptReport {
     pub cache_partial_regions: u64,
     /// Whether this checkpoint ran the pipelined path.
     pub pipelined: bool,
+    // ---- fast-tier peer redundancy ----
+    /// Scheme the post-wave peer exchange ran (`none` = no exchange).
+    pub redundancy_scheme: crate::fs::RedundancyScheme,
+    /// Virtual seconds the peer exchange added past the write wave (the
+    /// fabric transfer is pipelined behind the wave; this is the visible
+    /// residual).
+    pub exchange_secs: f64,
+    /// Redundancy artifact bytes (partner copies or parity blocks) the
+    /// exchange parked on the fast tier this checkpoint.
+    pub parity_bytes: u64,
 }
 
 impl CkptReport {

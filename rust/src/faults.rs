@@ -6,6 +6,7 @@
 //! their knobs from the plan at construction time.
 
 use crate::coordinator::Phase;
+use crate::topology::NodeId;
 
 /// What to break during a run.
 #[derive(Clone, Debug, Default)]
@@ -34,6 +35,15 @@ pub struct FaultPlan {
     /// growth that corrupts memory under the legacy allocator). Count of
     /// growth events.
     pub lower_half_growth_events: u32,
+    /// Lose a node's *entire* fast tier (Burst Buffer blade failure) at a
+    /// virtual time: `(node, at_secs)`. Applied declaratively by
+    /// `TieredStore` on its sim clock, so a loss can land mid-drain and
+    /// exercise partially-drained generations; losses scheduled at or
+    /// before a restart fire before the rebuild pass.
+    pub bb_node_loss: Vec<(NodeId, f64)>,
+    /// Lose a whole redundancy set's fast tiers at a virtual time:
+    /// `(set index, at_secs)`. The deterministic unrecoverable case.
+    pub bb_set_loss: Vec<(u32, f64)>,
 }
 
 impl FaultPlan {
@@ -67,6 +77,8 @@ impl FaultPlan {
             || self.fs_capacity_override.is_some()
             || self.interrupt_status_update
             || self.lower_half_growth_events > 0
+            || !self.bb_node_loss.is_empty()
+            || !self.bb_set_loss.is_empty()
     }
 }
 
@@ -77,6 +89,20 @@ mod tests {
     #[test]
     fn default_plan_is_clean() {
         assert!(!FaultPlan::none().any_active());
+    }
+
+    #[test]
+    fn node_loss_marks_plan_active() {
+        let p = FaultPlan {
+            bb_node_loss: vec![(NodeId(3), 0.0)],
+            ..FaultPlan::none()
+        };
+        assert!(p.any_active());
+        let s = FaultPlan {
+            bb_set_loss: vec![(0, 12.5)],
+            ..FaultPlan::none()
+        };
+        assert!(s.any_active());
     }
 
     #[test]

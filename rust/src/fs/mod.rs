@@ -24,6 +24,7 @@
 //! there is insufficient storage space … a system warning is needed").
 
 pub mod chunkstore;
+pub mod redundancy;
 pub mod tiered;
 
 use std::collections::BTreeMap;
@@ -34,6 +35,7 @@ use crate::topology::NodeId;
 use crate::{log_debug, log_warn};
 
 pub use chunkstore::ChunkStore;
+pub use redundancy::{RedundancyConfig, RedundancyScheme, DEFAULT_SET_SIZE};
 pub use tiered::{DrainStats, DrainTick, StagedIo, TieredStore};
 
 const GB: f64 = 1e9;

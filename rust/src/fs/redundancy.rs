@@ -1,0 +1,362 @@
+//! Fast-tier peer redundancy: SCR-style partner copies and XOR parity sets.
+//!
+//! The fast tier is per-node storage, so a node failure before the drain
+//! catches up loses every image that node wrote since the last complete
+//! durable generation. Multi-level checkpointing systems (SCR, FTI) close
+//! that window with *peer* redundancy: after the write wave, nodes in a
+//! small redundancy set exchange either full partner copies (2x capacity,
+//! survives any single loss per partner pair) or XOR parity blocks
+//! (1 + 1/(m-1) x capacity, survives any single loss per set of m). On
+//! restart a lost node's images are rebuilt from surviving peers over the
+//! fabric — never touching the durable tier — and only an unrecoverable
+//! set (>= 2 losses in an XOR set, a partner-pair loss) falls back to
+//! Lustre or to an older complete generation.
+//!
+//! This module is the pure layer: set layout, the XOR parity code, and the
+//! per-file records the rebuild planner consumes. The exchange/rebuild
+//! machinery that moves bytes and charges the sim clock lives in
+//! [`super::tiered::TieredStore`].
+//!
+//! ## XOR layout
+//!
+//! A set of `m` members protects each member's concatenated image bytes
+//! `C_i`, conceptually padded to `c * (m-1)` bytes where
+//! `c = ceil(maxlen / (m-1))`. Member `j` stores one parity block of `c`
+//! bytes:
+//!
+//! ```text
+//! P_j = XOR over i != j of chunk[((j - i + m) % m) - 1] of C_i
+//! ```
+//!
+//! For a fixed contributor `i`, the chunk index covers `0..m-1` bijectively
+//! as `j` ranges over the other members — every chunk of `C_i` lands in
+//! exactly one peer's parity block, so losing any single member `x` leaves,
+//! for each of its chunks `d`, exactly one parity block `P_j`
+//! (`j = (x + d + 1) % m`) plus `m-2` surviving plaintext chunks from which
+//! to XOR the chunk back. `m = 2` degenerates to a full mirrored copy.
+
+use crate::topology::NodeId;
+
+/// Default redundancy-set size (`--redundancy-set-size`), matching SCR's
+/// common small-set configuration.
+pub const DEFAULT_SET_SIZE: u32 = 4;
+
+/// Which peer-redundancy scheme the fast tier runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RedundancyScheme {
+    /// No peer redundancy: a node loss falls straight to the durable tier.
+    #[default]
+    None,
+    /// Full copy on the next node in the set (2x capacity, rebuild = one
+    /// fetch; a partner *pair* loss is unrecoverable).
+    Partner,
+    /// Rotated XOR parity across the set (1 + 1/(m-1) x capacity; any
+    /// single loss per set rebuilds, >= 2 losses are unrecoverable).
+    Xor,
+}
+
+impl RedundancyScheme {
+    /// CLI / manifest spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RedundancyScheme::None => "none",
+            RedundancyScheme::Partner => "partner",
+            RedundancyScheme::Xor => "xor",
+        }
+    }
+
+    /// Parse the CLI / manifest spelling.
+    pub fn parse(s: &str) -> Option<RedundancyScheme> {
+        match s {
+            "none" => Some(RedundancyScheme::None),
+            "partner" => Some(RedundancyScheme::Partner),
+            "xor" => Some(RedundancyScheme::Xor),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for RedundancyScheme {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Scheme + set size, threaded `RunConfig` -> `TieredStore`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RedundancyConfig {
+    pub scheme: RedundancyScheme,
+    /// Nodes per redundancy set (>= 2; a trailing singleton is folded into
+    /// the previous set so no node is ever unprotected).
+    pub set_size: u32,
+}
+
+impl Default for RedundancyConfig {
+    fn default() -> Self {
+        RedundancyConfig {
+            scheme: RedundancyScheme::None,
+            set_size: DEFAULT_SET_SIZE,
+        }
+    }
+}
+
+impl RedundancyConfig {
+    pub fn new(scheme: RedundancyScheme, set_size: u32) -> Self {
+        RedundancyConfig {
+            scheme,
+            set_size: set_size.max(2),
+        }
+    }
+
+    /// Does this configuration do any peer exchange at all?
+    pub fn active(&self) -> bool {
+        self.scheme != RedundancyScheme::None
+    }
+}
+
+/// Group `nodes` into contiguous redundancy sets of `set_size`. A trailing
+/// set of one node would be unprotectable (no peer to hold its copy or
+/// parity), so a lone tail is folded into the previous set; with a single
+/// node total there is nothing to fold into and the singleton set stands
+/// (exchange is then a no-op).
+pub fn node_sets(nodes: u32, set_size: u32) -> Vec<Vec<NodeId>> {
+    let k = set_size.max(2);
+    let mut sets: Vec<Vec<NodeId>> = Vec::new();
+    for n in 0..nodes {
+        let starts_set = n % k == 0;
+        let lone_tail = starts_set && n + 1 == nodes && !sets.is_empty();
+        if starts_set && !lone_tail {
+            sets.push(Vec::new());
+        }
+        sets.last_mut().expect("first node always starts a set").push(NodeId(n));
+    }
+    sets
+}
+
+/// Which member index holds member `i`'s partner copy (ring: next member).
+pub fn partner_holder(i: usize, m: usize) -> usize {
+    (i + 1) % m
+}
+
+/// XOR parity block length for a set of `m` members whose largest
+/// concatenated image is `maxlen` bytes: `c = ceil(maxlen / (m-1))`,
+/// never zero so an all-empty set still has well-formed parity.
+pub fn parity_block_len(maxlen: u64, m: usize) -> u64 {
+    maxlen.div_ceil((m.max(2) - 1) as u64).max(1)
+}
+
+/// Zero-padded chunk `d` view of `data` under chunk size `c` (may be short
+/// or empty at the tail; XOR treats missing bytes as zero).
+fn chunk_view(data: &[u8], d: usize, c: usize) -> &[u8] {
+    let lo = (d * c).min(data.len());
+    let hi = ((d + 1) * c).min(data.len());
+    &data[lo..hi]
+}
+
+/// Encode one parity block per member from the members' concatenated image
+/// bytes. `concats[i]` is member `i`'s concatenation; the returned
+/// `parities[j]` is the block member `j` stores.
+pub fn xor_encode(concats: &[&[u8]]) -> Vec<Vec<u8>> {
+    let m = concats.len();
+    assert!(m >= 2, "XOR set needs at least 2 members");
+    let maxlen = concats.iter().map(|c| c.len() as u64).max().unwrap_or(0);
+    let c = parity_block_len(maxlen, m) as usize;
+    (0..m)
+        .map(|j| {
+            let mut p = vec![0u8; c];
+            for (i, data) in concats.iter().enumerate() {
+                if i == j {
+                    continue;
+                }
+                let d = (j + m - i) % m - 1;
+                for (k, b) in chunk_view(data, d, c).iter().enumerate() {
+                    p[k] ^= b;
+                }
+            }
+            p
+        })
+        .collect()
+}
+
+/// Reconstruct lost member `x`'s concatenation (`len` bytes) from the
+/// survivors' concatenations and every member's parity block.
+/// `concats[x]` is ignored (pass an empty slice). The chunk size is
+/// recovered from the parity blocks themselves.
+pub fn xor_rebuild(x: usize, concats: &[&[u8]], parities: &[&[u8]], len: u64) -> Vec<u8> {
+    let m = concats.len();
+    assert!(m >= 2 && parities.len() == m && x < m);
+    let c = parities[(x + 1) % m].len();
+    let mut out = vec![0u8; c * (m - 1)];
+    for d in 0..m - 1 {
+        // The one parity block holding C_x's chunk d.
+        let j = (x + d + 1) % m;
+        out[d * c..(d + 1) * c].copy_from_slice(parities[j]);
+        for (i, data) in concats.iter().enumerate() {
+            if i == j || i == x {
+                continue;
+            }
+            let di = (j + m - i) % m - 1;
+            for (k, b) in chunk_view(data, di, c).iter().enumerate() {
+                out[d * c + k] ^= b;
+            }
+        }
+    }
+    out.truncate(len as usize);
+    out
+}
+
+/// One file a redundancy set protects: enough to locate it, slice it out
+/// of a member concatenation, and verify a rebuild bit-for-bit. The
+/// content digest also rejects *stale* survivors — a path (the manifest)
+/// rewritten by a later generation no longer XORs consistently with this
+/// record, and must be treated as lost rather than silently mis-rebuilt.
+#[derive(Clone, Debug)]
+pub struct ProtectedFile {
+    pub path: String,
+    /// Virtual (modeled) size; physical bytes are `plen`.
+    pub vbytes: u64,
+    /// Physical length of the stored data at exchange time.
+    pub plen: u64,
+    /// `digest128` of the stored data at exchange time.
+    pub digest: u128,
+    /// Partner scheme: fast-tier path of the peer-held copy.
+    pub copy: Option<String>,
+}
+
+/// One redundancy set's exchange record for one checkpoint generation:
+/// the rebuild planner's entire input.
+#[derive(Clone, Debug)]
+pub struct SetRecord {
+    pub scheme: RedundancyScheme,
+    pub members: Vec<NodeId>,
+    /// Per member (same order as `members`), the files its concatenation
+    /// covers, in concatenation order.
+    pub files: Vec<Vec<ProtectedFile>>,
+    /// XOR scheme: per member, the fast-tier path of its parity block.
+    pub parity: Vec<String>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_parse_roundtrip() {
+        for s in [
+            RedundancyScheme::None,
+            RedundancyScheme::Partner,
+            RedundancyScheme::Xor,
+        ] {
+            assert_eq!(RedundancyScheme::parse(s.name()), Some(s));
+        }
+        assert_eq!(RedundancyScheme::parse("raid6"), None);
+        assert_eq!(RedundancyScheme::default(), RedundancyScheme::None);
+    }
+
+    #[test]
+    fn config_clamps_set_size() {
+        let c = RedundancyConfig::new(RedundancyScheme::Xor, 0);
+        assert_eq!(c.set_size, 2);
+        assert!(c.active());
+        assert!(!RedundancyConfig::default().active());
+    }
+
+    fn flat(sets: &[Vec<NodeId>]) -> Vec<u32> {
+        sets.iter().flatten().map(|n| n.0).collect()
+    }
+
+    #[test]
+    fn set_layout_shapes() {
+        let s = node_sets(8, 4);
+        assert_eq!(s.len(), 2);
+        assert_eq!(flat(&s), (0..8).collect::<Vec<_>>());
+
+        // Lone tail folds into the previous set.
+        let s = node_sets(9, 4);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[1].len(), 5);
+        assert_eq!(flat(&s), (0..9).collect::<Vec<_>>());
+
+        let s = node_sets(5, 4);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].len(), 5);
+
+        // A single node has no peer: singleton set stands.
+        let s = node_sets(1, 4);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0], vec![NodeId(0)]);
+
+        // set_size below 2 is clamped.
+        let s = node_sets(4, 1);
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn partner_ring() {
+        assert_eq!(partner_holder(0, 4), 1);
+        assert_eq!(partner_holder(3, 4), 0);
+        assert_eq!(partner_holder(1, 2), 0);
+    }
+
+    #[test]
+    fn parity_len_math() {
+        assert_eq!(parity_block_len(0, 4), 1);
+        assert_eq!(parity_block_len(9, 4), 3);
+        assert_eq!(parity_block_len(10, 4), 4);
+        // m = 2: parity is a full copy.
+        assert_eq!(parity_block_len(7, 2), 7);
+    }
+
+    fn members(m: usize, seed: u64) -> Vec<Vec<u8>> {
+        (0..m)
+            .map(|i| {
+                let len = ((seed as usize * 37 + i * 101) % 300) + (i % 2) * 113;
+                (0..len)
+                    .map(|k| (k as u64 * 31 + i as u64 * 7 + seed) as u8)
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn xor_roundtrip_every_member() {
+        for m in 2..=5 {
+            let data = members(m, 42);
+            let views: Vec<&[u8]> = data.iter().map(|d| d.as_slice()).collect();
+            let parities = xor_encode(&views);
+            let pviews: Vec<&[u8]> = parities.iter().map(|p| p.as_slice()).collect();
+            for x in 0..m {
+                let mut survivors = views.clone();
+                survivors[x] = &[];
+                let got = xor_rebuild(x, &survivors, &pviews, data[x].len() as u64);
+                assert_eq!(got, data[x], "m={m} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn xor_pair_degenerates_to_copy() {
+        let a = b"hello fast tier".to_vec();
+        let b = b"bye".to_vec();
+        let parities = xor_encode(&[&a, &b]);
+        // Member 1's parity is member 0's data (zero-padded) and vice versa.
+        assert_eq!(&parities[1][..a.len()], a.as_slice());
+        assert_eq!(&parities[0][..b.len()], b.as_slice());
+    }
+
+    #[test]
+    fn xor_roundtrip_property() {
+        crate::proptest::run("xor_roundtrip_property", 64, |g| {
+            let m = g.range(2, 5) as usize;
+            let data: Vec<Vec<u8>> = (0..m).map(|_| g.bytes(2048)).collect();
+            let views: Vec<&[u8]> = data.iter().map(|d| d.as_slice()).collect();
+            let parities = xor_encode(&views);
+            let pviews: Vec<&[u8]> = parities.iter().map(|p| p.as_slice()).collect();
+            let x = g.u64_below(m as u64) as usize;
+            let mut survivors = views.clone();
+            survivors[x] = &[];
+            let got = xor_rebuild(x, &survivors, &pviews, data[x].len() as u64);
+            assert_eq!(got, data[x]);
+        });
+    }
+}

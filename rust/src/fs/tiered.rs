@@ -46,14 +46,20 @@
 //! across tiers lives in the restart engine (`sim::restart_from`), which
 //! re-reads a corrupt fast-tier image from the durable tier.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use super::chunkstore::{object_path, ChunkStore, INDEX_PATH, OBJECT_PREFIX};
+use super::redundancy::{self, ProtectedFile, RedundancyConfig, RedundancyScheme, SetRecord};
 use super::{FileSystem, FsError, IoReport, StorageTier, WriteReq};
 use crate::ckpt::chunk::{ChunkRecipe, DEFAULT_CHUNK_BYTES};
+use crate::simnet::fabric::Fabric;
 use crate::topology::NodeId;
 use crate::util::digest::digest128;
 use crate::{log_debug, log_info, log_warn};
+
+/// Bytes a peer exchange must land before it can pipeline behind the
+/// fast-tier write wave (the fabric pipeline-fill chunk).
+pub const EXCHANGE_PIPELINE_CHUNK: u64 = 4 << 20;
 
 /// Aggregate drain/eviction counters (reported by benches and `mana run`).
 #[derive(Clone, Copy, Debug, Default)]
@@ -77,6 +83,8 @@ pub struct DrainStats {
     pub gc_bytes: u64,
     /// Drain completions that failed (source vanished, durable tier full).
     pub drain_errors: u64,
+    /// Fast-tier files destroyed by injected node/set losses.
+    pub lost_files: u64,
 }
 
 impl DrainStats {
@@ -106,10 +114,38 @@ struct DrainItem {
     recipe: Option<ChunkRecipe>,
 }
 
-/// One checkpoint generation's fast-tier footprint (for eviction).
+/// One checkpoint generation's fast-tier footprint (for eviction), plus
+/// the peer-redundancy exchange records protecting it.
 #[derive(Clone, Debug, Default)]
 struct Generation {
     paths: Vec<String>,
+    /// One record per redundancy set that exchanged for this generation —
+    /// the rebuild planner's input on restart.
+    sets: Vec<SetRecord>,
+}
+
+/// Outcome of one post-wave peer exchange.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExchangeOutcome {
+    /// Virtual seconds visible past the write wave (slowest member).
+    pub exchange_secs: f64,
+    /// Redundancy artifact bytes (copies or parity) parked on the fast
+    /// tier by this exchange.
+    pub parity_bytes: u64,
+}
+
+/// Outcome of one restart-time peer-rebuild pass.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RebuildOutcome {
+    /// Distinct nodes whose fast-tier images were rebuilt from peers.
+    pub rebuilt_nodes: u32,
+    pub rebuilt_files: u32,
+    /// Virtual seconds of peer-fetch traffic (concurrent per member).
+    pub rebuild_secs: f64,
+    /// Set records that could not be rebuilt (>= 2 losses in an XOR set,
+    /// partner-pair loss, or stale survivors) — restart falls back across
+    /// tiers for their files.
+    pub unrecoverable_sets: u32,
 }
 
 /// Outcome of one checkpoint write wave on the tiered store.
@@ -174,6 +210,16 @@ pub struct TieredStore {
     /// was last persisted to the durable tier.
     index_dirty: bool,
     pub stats: DrainStats,
+    /// Fast-tier peer redundancy (partner copies / XOR parity sets).
+    redundancy: RedundancyConfig,
+    /// Which node wrote each fast-tier path (write waves and redundancy
+    /// artifacts alike) — drives loss injection and set grouping.
+    owners: BTreeMap<String, NodeId>,
+    /// Scheduled fast-tier node losses `(node, at virtual secs)` from the
+    /// fault plan; fired as the drain clock passes them.
+    pending_losses: Vec<(NodeId, f64)>,
+    /// Monotonic exchange counter (names redundancy artifact paths).
+    exchanges: u64,
 }
 
 impl TieredStore {
@@ -190,6 +236,10 @@ impl TieredStore {
             credit: 0.0,
             index_dirty: false,
             stats: DrainStats::default(),
+            redundancy: RedundancyConfig::default(),
+            owners: BTreeMap::new(),
+            pending_losses: Vec::new(),
+            exchanges: 0,
         }
     }
 
@@ -344,6 +394,7 @@ impl TieredStore {
     /// Open a new checkpoint generation and sync the drain clock (drain
     /// credit earned before `now` was already granted via `drain_to`).
     pub fn begin_ckpt(&mut self, now_secs: f64) {
+        self.apply_due_losses(now_secs);
         self.clock = self.clock.max(now_secs);
         self.generations.push_back(Generation::default());
     }
@@ -351,6 +402,7 @@ impl TieredStore {
     /// Advance the drain clock without granting drain credit (e.g. across
     /// the synchronous checkpoint stall, during which the agents hold off).
     pub fn sync_clock(&mut self, now_secs: f64) {
+        self.apply_due_losses(now_secs);
         self.clock = self.clock.max(now_secs);
     }
 
@@ -360,6 +412,499 @@ impl TieredStore {
     /// the new clock caught up with the dead job's).
     pub fn rebase_clock(&mut self, now_secs: f64) {
         self.clock = now_secs;
+    }
+
+    // ------------------------------------- fast-tier peer redundancy
+
+    /// Configure the peer-redundancy layer (threaded from `RunConfig`).
+    pub fn set_redundancy(&mut self, cfg: RedundancyConfig) {
+        self.redundancy = cfg;
+    }
+
+    pub fn redundancy(&self) -> RedundancyConfig {
+        self.redundancy
+    }
+
+    /// Schedule the loss of `node`'s entire fast tier at virtual time
+    /// `at_secs` (fault-plan driven; fires as the drain clock passes it).
+    pub fn schedule_node_loss(&mut self, node: NodeId, at_secs: f64) {
+        self.pending_losses.push((node, at_secs));
+    }
+
+    /// Schedule the loss of a whole redundancy set (by set index under the
+    /// configured layout) — the deterministic unrecoverable case.
+    pub fn schedule_set_loss(&mut self, set_idx: u32, at_secs: f64) {
+        let sets = redundancy::node_sets(self.nodes, self.redundancy.set_size);
+        if let Some(members) = sets.get(set_idx as usize) {
+            for n in members {
+                self.pending_losses.push((*n, at_secs));
+            }
+        } else {
+            log_warn!(
+                "fs",
+                "staged: set-loss index {set_idx} out of range ({} sets) — ignored",
+                sets.len()
+            );
+        }
+    }
+
+    /// Immediately lose a whole redundancy set (restart-time fault plans:
+    /// the loss happened while the job was down, so it fires before the
+    /// rebuild pass surveys the survivors).
+    pub fn lose_set_now(&mut self, set_idx: u32) {
+        let sets = redundancy::node_sets(self.nodes, self.redundancy.set_size);
+        match sets.get(set_idx as usize).cloned() {
+            Some(members) => {
+                for n in members {
+                    self.lose_node_now(n);
+                }
+            }
+            None => log_warn!(
+                "fs",
+                "staged: set-loss index {set_idx} out of range ({} sets) — ignored",
+                sets.len()
+            ),
+        }
+    }
+
+    /// Losses scheduled at or before `now_secs` whose time has come.
+    fn apply_due_losses(&mut self, now_secs: f64) {
+        if self.pending_losses.is_empty() {
+            return;
+        }
+        let mut due = Vec::new();
+        self.pending_losses.retain(|(n, at)| {
+            if *at <= now_secs {
+                due.push(*n);
+                false
+            } else {
+                true
+            }
+        });
+        for n in due {
+            self.lose_node_now(n);
+        }
+    }
+
+    /// Destroy every fast-tier file `node` owns — images, partner copies
+    /// and parity blocks alike — modeling a Burst Buffer blade failure.
+    /// Queued drains of the lost files die with them (their durable copies,
+    /// if any, are untouched).
+    pub fn lose_node_now(&mut self, node: NodeId) {
+        let victims: Vec<String> = self
+            .owners
+            .iter()
+            .filter(|(_, n)| **n == node)
+            .map(|(p, _)| p.clone())
+            .collect();
+        let mut lost = 0u64;
+        for path in victims {
+            if !self.fast.exists(&path) {
+                continue;
+            }
+            self.unclaim(&path);
+            if self.fast.delete(&path).is_ok() {
+                lost += 1;
+            }
+        }
+        self.stats.lost_files += lost;
+        log_warn!(
+            "fs",
+            "staged: node {} fast tier lost ({lost} files destroyed)",
+            node.0
+        );
+    }
+
+    /// Post-wave peer exchange: every node in a redundancy set ships this
+    /// generation's images to its peers — full copies to the partner, or
+    /// rotated XOR parity blocks across the set. The fabric transfer is
+    /// pipelined behind the just-finished write wave (`wave_secs`), so the
+    /// visible cost is the pipeline fill plus any serialization the wave
+    /// did not hide. Artifacts land on the fast tier (capacity-accounted:
+    /// partner 2x, XOR 1 + 1/(m-1) x) and the exchange record is attached
+    /// to the generation for the restart-time rebuild planner.
+    pub fn exchange_wave(&mut self, fabric: &Fabric, wave_secs: f64) -> ExchangeOutcome {
+        let mut out = ExchangeOutcome::default();
+        if !self.redundancy.active() || self.nodes < 2 {
+            return out;
+        }
+        let Some(gen_paths) = self.generations.back().map(|g| g.paths.clone()) else {
+            return out;
+        };
+        let seq = self.exchanges;
+        self.exchanges += 1;
+        let sets = redundancy::node_sets(self.nodes, self.redundancy.set_size);
+        let mut records: Vec<SetRecord> = Vec::new();
+        let mut slowest = 0.0f64;
+        for (si, members) in sets.iter().enumerate() {
+            let m = members.len();
+            if m < 2 {
+                continue;
+            }
+            // This generation's files, grouped by owning member, in wave
+            // order — the concatenation order the XOR code relies on.
+            let mut files: Vec<Vec<ProtectedFile>> = vec![Vec::new(); m];
+            for path in &gen_paths {
+                let Some(owner) = self.owners.get(path).copied() else {
+                    continue;
+                };
+                let Some(idx) = members.iter().position(|n| *n == owner) else {
+                    continue;
+                };
+                let Some((vbytes, data)) = self.fast.peek(path) else {
+                    continue;
+                };
+                files[idx].push(ProtectedFile {
+                    path: path.clone(),
+                    vbytes,
+                    plen: data.len() as u64,
+                    digest: digest128(data),
+                    copy: None,
+                });
+            }
+            if files.iter().all(|f| f.is_empty()) {
+                continue;
+            }
+            let mut parity_paths = vec![String::new(); m];
+            match self.redundancy.scheme {
+                RedundancyScheme::None => unreachable!("checked active() above"),
+                RedundancyScheme::Partner => {
+                    for i in 0..m {
+                        let holder = members[redundancy::partner_holder(i, m)];
+                        for f in files[i].iter_mut() {
+                            let Some(data) =
+                                self.fast.peek(&f.path).map(|(_, d)| d.to_vec())
+                            else {
+                                continue;
+                            };
+                            let copy_path = format!(
+                                ".redundancy/g{seq:04}/copy/n{}/{}",
+                                holder.0, f.path
+                            );
+                            match self.fast.insert_raw(&copy_path, f.vbytes, data) {
+                                Ok(()) => {
+                                    self.owners.insert(copy_path.clone(), holder);
+                                    out.parity_bytes += f.vbytes;
+                                    f.copy = Some(copy_path);
+                                }
+                                Err(e) => log_warn!(
+                                    "fs",
+                                    "staged: partner copy of {} failed: {e} \
+                                     (file unprotected this generation)",
+                                    f.path
+                                ),
+                            }
+                        }
+                    }
+                }
+                RedundancyScheme::Xor => {
+                    let concats: Vec<Vec<u8>> = files
+                        .iter()
+                        .map(|flist| {
+                            let mut c = Vec::new();
+                            for f in flist {
+                                if let Some((_, d)) = self.fast.peek(&f.path) {
+                                    c.extend_from_slice(d);
+                                }
+                            }
+                            c
+                        })
+                        .collect();
+                    let views: Vec<&[u8]> = concats.iter().map(|c| c.as_slice()).collect();
+                    let parities = redundancy::xor_encode(&views);
+                    let max_vb = files
+                        .iter()
+                        .map(|fl| fl.iter().map(|f| f.vbytes).sum::<u64>())
+                        .max()
+                        .unwrap_or(0);
+                    let parity_vbytes = redundancy::parity_block_len(max_vb, m);
+                    for (j, p) in parities.into_iter().enumerate() {
+                        let ppath =
+                            format!(".redundancy/g{seq:04}/parity/s{si}/n{}", members[j].0);
+                        match self.fast.insert_raw(&ppath, parity_vbytes, p) {
+                            Ok(()) => {
+                                self.owners.insert(ppath.clone(), members[j]);
+                                parity_paths[j] = ppath;
+                                out.parity_bytes += parity_vbytes;
+                            }
+                            Err(e) => log_warn!(
+                                "fs",
+                                "staged: parity block {ppath} failed: {e} \
+                                 (set degraded this generation)"
+                            ),
+                        }
+                    }
+                }
+            }
+            // Each member's outbound traffic rides the fabric concurrently
+            // with every other member's, pipelined behind the write wave.
+            for flist in &files {
+                let outbound: u64 = flist.iter().map(|f| f.vbytes).sum();
+                if outbound > 0 {
+                    slowest = slowest.max(fabric.overlapped_secs(
+                        outbound,
+                        wave_secs,
+                        EXCHANGE_PIPELINE_CHUNK,
+                    ));
+                }
+            }
+            records.push(SetRecord {
+                scheme: self.redundancy.scheme,
+                members: members.clone(),
+                files,
+                parity: parity_paths,
+            });
+        }
+        if let Some(g) = self.generations.back_mut() {
+            g.sets.extend(records);
+        }
+        out.exchange_secs = slowest;
+        log_debug!(
+            "fs",
+            "staged: {} exchange parked {} of redundancy artifacts in {:.3}s",
+            self.redundancy.scheme,
+            crate::util::bytes::human(out.parity_bytes),
+            out.exchange_secs
+        );
+        out
+    }
+
+    /// Does the current fast-tier copy of `f.path` match the exchange-time
+    /// record bit-for-bit? A mismatch means lost (absent) or *stale* (the
+    /// path — e.g. the per-job manifest — was rewritten by a later
+    /// generation); stale survivors must never feed a rebuild.
+    fn fast_matches(&self, f: &ProtectedFile) -> bool {
+        match self.fast.peek(&f.path) {
+            Some((_, data)) => data.len() as u64 == f.plen && digest128(data) == f.digest,
+            None => false,
+        }
+    }
+
+    /// Restart-time rebuild planner: walk every generation's exchange
+    /// records (newest first, so a path rewritten across generations —
+    /// the manifest — is restored from the newest record and left alone by
+    /// older ones) and restore files *absent* from the fast tier out of
+    /// surviving peer data. Partner: fetch the digest-verified copy. XOR:
+    /// reconstruct the lost member's concatenation from the survivors +
+    /// parity and verify every recovered file's content digest before it
+    /// lands. Never touches the durable tier. Rebuilt files re-enter the
+    /// drain queue at the back, preserving FIFO order for everything
+    /// already queued.
+    pub fn rebuild_missing(&mut self, fabric: &Fabric) -> RebuildOutcome {
+        let mut out = RebuildOutcome::default();
+        let mut rebuilt_nodes: BTreeSet<u32> = BTreeSet::new();
+        for gi in (0..self.generations.len()).rev() {
+            let records = self.generations[gi].sets.clone();
+            for rec in records {
+                let m = rec.members.len();
+                if m < 2 {
+                    continue;
+                }
+                // A member is a rebuild target when any of its recorded
+                // files is absent from the fast tier; a present-but-
+                // mismatched file is stale (rewritten later) and is never
+                // overwritten.
+                let absent: Vec<usize> = (0..m)
+                    .filter(|&i| {
+                        rec.files[i]
+                            .iter()
+                            .any(|f| !self.fast.exists(&f.path))
+                    })
+                    .collect();
+                if absent.is_empty() {
+                    continue;
+                }
+                match rec.scheme {
+                    RedundancyScheme::None => {}
+                    RedundancyScheme::Partner => {
+                        for &x in &absent {
+                            let mut inbound = 0u64;
+                            let mut restored = 0u32;
+                            let mut unrecoverable = false;
+                            for f in &rec.files[x] {
+                                if self.fast.exists(&f.path) {
+                                    continue;
+                                }
+                                let copy_data = f.copy.as_ref().and_then(|c| {
+                                    self.fast.peek(c).map(|(_, d)| d.to_vec())
+                                });
+                                match copy_data {
+                                    Some(data) if digest128(&data) == f.digest => {
+                                        if self
+                                            .fast
+                                            .insert_raw(&f.path, f.vbytes, data)
+                                            .is_ok()
+                                        {
+                                            inbound += f.vbytes;
+                                            restored += 1;
+                                            self.requeue_rebuilt(gi, &f.path, f.vbytes);
+                                        }
+                                    }
+                                    _ => {
+                                        // Copy lost with its holder (the
+                                        // partner-pair case) or corrupt.
+                                        unrecoverable = true;
+                                    }
+                                }
+                            }
+                            if restored > 0 {
+                                out.rebuilt_files += restored;
+                                out.rebuild_secs =
+                                    out.rebuild_secs.max(fabric.transfer_secs(inbound));
+                                rebuilt_nodes.insert(rec.members[x].0);
+                            }
+                            if unrecoverable {
+                                out.unrecoverable_sets += 1;
+                                log_warn!(
+                                    "fs",
+                                    "staged: partner-pair loss around node {} — \
+                                     falling back across tiers",
+                                    rec.members[x].0
+                                );
+                            }
+                        }
+                    }
+                    RedundancyScheme::Xor => {
+                        // >= 2 lost members, any stale/absent survivor
+                        // file, or a missing survivor parity block sinks
+                        // the whole set record.
+                        let survivors_ok = (0..m).all(|i| {
+                            absent.contains(&i)
+                                || rec.files[i].iter().all(|f| self.fast_matches(f))
+                        });
+                        let x = absent[0];
+                        let parity_ok = (0..m).all(|j| {
+                            j == x
+                                || (!rec.parity[j].is_empty()
+                                    && self.fast.exists(&rec.parity[j]))
+                        });
+                        if absent.len() >= 2 || !survivors_ok || !parity_ok {
+                            out.unrecoverable_sets += 1;
+                            log_warn!(
+                                "fs",
+                                "staged: XOR set unrecoverable ({} lost members, \
+                                 survivors_ok={survivors_ok}, parity_ok={parity_ok}) — \
+                                 falling back across tiers",
+                                absent.len()
+                            );
+                            continue;
+                        }
+                        let concats: Vec<Vec<u8>> = (0..m)
+                            .map(|i| {
+                                if i == x {
+                                    return Vec::new();
+                                }
+                                let mut c = Vec::new();
+                                for f in &rec.files[i] {
+                                    if let Some((_, d)) = self.fast.peek(&f.path) {
+                                        c.extend_from_slice(d);
+                                    }
+                                }
+                                c
+                            })
+                            .collect();
+                        let parities: Vec<Vec<u8>> = (0..m)
+                            .map(|j| {
+                                if j == x {
+                                    return Vec::new();
+                                }
+                                self.fast
+                                    .peek(&rec.parity[j])
+                                    .map(|(_, d)| d.to_vec())
+                                    .unwrap_or_default()
+                            })
+                            .collect();
+                        let lost_len: u64 = rec.files[x].iter().map(|f| f.plen).sum();
+                        let cviews: Vec<&[u8]> =
+                            concats.iter().map(|c| c.as_slice()).collect();
+                        let pviews: Vec<&[u8]> =
+                            parities.iter().map(|p| p.as_slice()).collect();
+                        let rebuilt = redundancy::xor_rebuild(x, &cviews, &pviews, lost_len);
+                        let mut off = 0usize;
+                        let inbound: u64 =
+                            concats.iter().map(|c| c.len() as u64).sum::<u64>()
+                                + parities.iter().map(|p| p.len() as u64).sum::<u64>();
+                        let mut restored = 0u32;
+                        for f in &rec.files[x] {
+                            let end = off + f.plen as usize;
+                            let slice = &rebuilt[off..end];
+                            off = end;
+                            if self.fast.exists(&f.path) {
+                                continue; // stale path rewritten later
+                            }
+                            if digest128(slice) != f.digest {
+                                out.unrecoverable_sets += 1;
+                                log_warn!(
+                                    "fs",
+                                    "staged: XOR rebuild of {} failed content \
+                                     verification — falling back across tiers",
+                                    f.path
+                                );
+                                continue;
+                            }
+                            if self
+                                .fast
+                                .insert_raw(&f.path, f.vbytes, slice.to_vec())
+                                .is_ok()
+                            {
+                                restored += 1;
+                                self.requeue_rebuilt(gi, &f.path, f.vbytes);
+                            }
+                        }
+                        if restored > 0 {
+                            out.rebuilt_files += restored;
+                            out.rebuild_secs =
+                                out.rebuild_secs.max(fabric.transfer_secs(inbound));
+                            rebuilt_nodes.insert(rec.members[x].0);
+                        }
+                    }
+                }
+            }
+        }
+        out.rebuilt_nodes = rebuilt_nodes.len() as u32;
+        if out.rebuilt_files > 0 {
+            log_info!(
+                "fs",
+                "staged: rebuilt {} files on {} nodes from peers in {:.3}s",
+                out.rebuilt_files,
+                out.rebuilt_nodes,
+                out.rebuild_secs
+            );
+        }
+        out
+    }
+
+    /// Re-claim a just-rebuilt file: back into its generation's path list
+    /// and — when no durable copy exists yet — onto the *back* of the
+    /// drain queue, so entries already queued keep their FIFO order.
+    fn requeue_rebuilt(&mut self, gi: usize, path: &str, vbytes: u64) {
+        if let Some(gen) = self.generations.get_mut(gi) {
+            if !gen.paths.iter().any(|p| p == path) {
+                gen.paths.push(path.to_string());
+            }
+        }
+        if !self.is_durable(path) && !self.queue.iter().any(|i| i.path == path) {
+            self.queue.push_back(DrainItem {
+                path: path.to_string(),
+                remaining: vbytes,
+                granularity: DEFAULT_CHUNK_BYTES as u64,
+                recipe: None,
+            });
+        }
+    }
+
+    /// Invalidate a corrupt fast-tier copy for the rest of the restart:
+    /// drop the file (and any queued drain of its bytes) so every later
+    /// read of the path goes to peer-rebuilt or durable data instead of
+    /// re-reading the bad copy per region.
+    pub fn mark_fast_invalid(&mut self, path: &str) -> bool {
+        if !self.fast.exists(path) {
+            return false;
+        }
+        self.unclaim(path);
+        let _ = self.fast.delete(path);
+        log_warn!("fs", "staged: fast-tier copy of {path} marked invalid");
+        true
     }
 
     /// Write one wave to the fast tier and queue it for background drain.
@@ -436,15 +981,16 @@ impl TieredStore {
             self.unclaim(&r.path);
         }
         let mut reqs = reqs;
-        let meta: Vec<(String, u64, Option<ChunkRecipe>)> = reqs
+        let meta: Vec<(String, u64, Option<ChunkRecipe>, NodeId)> = reqs
             .iter_mut()
-            .map(|r| (r.path.clone(), r.virtual_bytes, r.recipe.take()))
+            .map(|r| (r.path.clone(), r.virtual_bytes, r.recipe.take(), r.node))
             .collect();
         let io = self.fast.write_parallel(reqs)?;
 
         let mut gen_paths = Vec::with_capacity(meta.len());
         let mut deduped = 0u64;
-        for (path, virtual_bytes, recipe) in meta {
+        for (path, virtual_bytes, recipe, node) in meta {
+            self.owners.insert(path.clone(), node);
             gen_paths.push(path.clone());
             let (remaining, granularity) = match &recipe {
                 Some(rec) => {
@@ -510,6 +1056,10 @@ impl TieredStore {
     /// agents move queued physical bytes to the durable tier at chunk
     /// granularity. Fully-deduped items commit in zero simulated seconds.
     pub fn drain_to(&mut self, now_secs: f64) -> DrainTick {
+        // Scheduled node losses fire before the tick's drain work, so a
+        // loss landing mid-drain kills the victim's still-queued items —
+        // the partially-drained-generation case.
+        self.apply_due_losses(now_secs);
         let budget = (now_secs - self.clock).max(0.0);
         self.clock = self.clock.max(now_secs);
         if self.queue.is_empty() {
@@ -776,9 +1326,28 @@ impl TieredStore {
         self.stats.evicted_files += deleted as u64;
         if !kept.is_empty() {
             // Keep the survivors claimed (still the oldest generation) so
-            // a later pass can evict them once their drain succeeds.
-            self.generations.push_front(Generation { paths: kept });
+            // a later pass can evict them once their drain succeeds; the
+            // redundancy records ride along (their files may still need a
+            // peer rebuild before the drain can finish).
+            self.generations.push_front(Generation {
+                paths: kept,
+                sets: gen.sets,
+            });
         } else {
+            // Generation fully retired: its redundancy artifacts (partner
+            // copies, parity blocks) protect nothing any more — free the
+            // fast-tier space.
+            for rec in &gen.sets {
+                for p in rec
+                    .parity
+                    .iter()
+                    .filter(|p| !p.is_empty())
+                    .chain(rec.files.iter().flatten().filter_map(|f| f.copy.as_ref()))
+                {
+                    let _ = self.fast.delete(p);
+                    self.owners.remove(p);
+                }
+            }
             self.stats.evicted_generations += 1;
         }
         log_info!(
@@ -964,6 +1533,7 @@ impl TieredStore {
 
     pub fn delete(&mut self, path: &str) -> Result<(), FsError> {
         self.unclaim(path);
+        self.owners.remove(path);
         let fast = self.fast.delete(path).is_ok();
         let durable = self.durable.delete(path).is_ok();
         let recipe = match self.chunks.remove_recipe(path) {
@@ -1012,8 +1582,16 @@ impl TieredStore {
     }
 
     pub fn describe(&self) -> String {
+        let red = if self.redundancy.active() {
+            format!(
+                ", {}/{} redundancy",
+                self.redundancy.scheme, self.redundancy.set_size
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "staged({} → {}, {} pending, {} unique chunks, {:.0}% deduped)",
+            "staged({} → {}, {} pending, {} unique chunks, {:.0}% deduped{red})",
             self.fast.cfg.kind,
             self.durable.cfg.kind,
             crate::util::bytes::human(self.pending_bytes()),
@@ -1813,5 +2391,241 @@ mod tests {
         assert_eq!(ts.chunk_store().chunk_count(), 8);
         assert_eq!(ts.stats.gc_chunks, 8, "all of A's chunks reclaimed");
         assert_eq!(ts.file_count(), 1);
+    }
+
+    // ------------------------------------- fast-tier peer redundancy
+
+    fn rstore(nodes: u32, scheme: RedundancyScheme) -> TieredStore {
+        let mut ts = TieredStore::new(
+            FileSystem::new(FsConfig::burst_buffer(nodes)),
+            FileSystem::new(FsConfig::cscratch()),
+            2,
+            nodes,
+        );
+        ts.set_redundancy(RedundancyConfig::new(scheme, 4));
+        ts
+    }
+
+    /// A wave of distinct-content files round-robined across `nodes`.
+    fn nwave(tag: &str, files: u32, bytes_each: u64, nodes: u32) -> Vec<WriteReq> {
+        (0..files)
+            .map(|i| WriteReq {
+                node: NodeId(i % nodes),
+                path: format!("{tag}/f{i}"),
+                virtual_bytes: bytes_each,
+                data: patterned(96 + 17 * (i as usize % 3), i as u8 + 1),
+                recipe: None,
+            })
+            .collect()
+    }
+
+    fn fast_bytes_of(ts: &TieredStore, path: &str) -> Vec<u8> {
+        ts.fast().peek(path).expect("path on fast").1.to_vec()
+    }
+
+    #[test]
+    fn exchange_is_noop_without_redundancy() {
+        let mut ts = store(1024 * MIB, 2);
+        ts.begin_ckpt(0.0);
+        let io = ts.write_wave(wave("g0", 4, MIB)).unwrap();
+        let ex = ts.exchange_wave(&Fabric::default(), io.fast_secs);
+        assert_eq!(ex.exchange_secs, 0.0);
+        assert_eq!(ex.parity_bytes, 0);
+        assert_eq!(ts.used_bytes(), 4 * MIB, "no artifacts parked");
+    }
+
+    #[test]
+    fn partner_exchange_doubles_capacity_and_rebuilds_lost_node() {
+        let fabric = Fabric::default();
+        let mut ts = rstore(4, RedundancyScheme::Partner);
+        ts.begin_ckpt(0.0);
+        let io = ts.write_wave(nwave("g0", 8, 4 * MIB, 4)).unwrap();
+        let ex = ts.exchange_wave(&fabric, io.fast_secs);
+        assert_eq!(ex.parity_bytes, 8 * 4 * MIB, "partner = full copies");
+        assert_eq!(ts.used_bytes(), 2 * 8 * 4 * MIB, "2x capacity overhead");
+
+        // Node 1 owns f1 and f5; remember their bytes, then lose the node.
+        let f1 = fast_bytes_of(&ts, "g0/f1");
+        let f5 = fast_bytes_of(&ts, "g0/f5");
+        ts.lose_node_now(NodeId(1));
+        assert!(!ts.fast().exists("g0/f1"));
+        assert!(ts.stats.lost_files > 0);
+
+        let rb = ts.rebuild_missing(&fabric);
+        assert_eq!(rb.rebuilt_nodes, 1);
+        assert_eq!(rb.rebuilt_files, 2);
+        assert!(rb.rebuild_secs > 0.0);
+        assert_eq!(rb.unrecoverable_sets, 0);
+        assert_eq!(fast_bytes_of(&ts, "g0/f1"), f1, "bitwise-identical rebuild");
+        assert_eq!(fast_bytes_of(&ts, "g0/f5"), f5);
+        assert_eq!(ts.durable().file_count(), 0, "peers only, no durable reads");
+
+        // Drain-queue order: survivors keep their FIFO order, rebuilt
+        // entries re-enter at the back.
+        let order: Vec<String> = ts.queue.iter().map(|i| i.path.clone()).collect();
+        assert_eq!(
+            order,
+            vec![
+                "g0/f0", "g0/f2", "g0/f3", "g0/f4", "g0/f6", "g0/f7", "g0/f1", "g0/f5"
+            ]
+            .into_iter()
+            .map(String::from)
+            .collect::<Vec<_>>()
+        );
+        // The rebuilt files still drain to durable normally.
+        ts.drain_to(10_000.0);
+        assert!(ts.is_durable("g0/f1") && ts.is_durable("g0/f5"));
+    }
+
+    #[test]
+    fn xor_exchange_rebuilds_lost_node_bitwise() {
+        let fabric = Fabric::default();
+        let mut ts = rstore(4, RedundancyScheme::Xor);
+        ts.begin_ckpt(0.0);
+        let io = ts.write_wave(nwave("g0", 8, 4 * MIB, 4)).unwrap();
+        let ex = ts.exchange_wave(&fabric, io.fast_secs);
+        // XOR overhead: 1/(m-1) = one third of a member's vbytes per node.
+        assert!(ex.parity_bytes > 0);
+        assert!(
+            ex.parity_bytes < io.fast_bytes / 2,
+            "XOR parity ({}) must be far below partner's full copies",
+            ex.parity_bytes
+        );
+        assert_eq!(ts.used_bytes(), 8 * 4 * MIB + ex.parity_bytes);
+
+        let f2 = fast_bytes_of(&ts, "g0/f2");
+        let f6 = fast_bytes_of(&ts, "g0/f6");
+        ts.lose_node_now(NodeId(2));
+        assert!(!ts.fast().exists("g0/f2"));
+
+        let rb = ts.rebuild_missing(&fabric);
+        assert_eq!(rb.rebuilt_nodes, 1);
+        assert_eq!(rb.rebuilt_files, 2);
+        assert_eq!(rb.unrecoverable_sets, 0);
+        assert_eq!(fast_bytes_of(&ts, "g0/f2"), f2, "bitwise-identical rebuild");
+        assert_eq!(fast_bytes_of(&ts, "g0/f6"), f6);
+        assert_eq!(ts.durable().file_count(), 0, "peers only, no durable reads");
+    }
+
+    #[test]
+    fn two_xor_losses_are_unrecoverable() {
+        let fabric = Fabric::default();
+        let mut ts = rstore(4, RedundancyScheme::Xor);
+        ts.begin_ckpt(0.0);
+        let io = ts.write_wave(nwave("g0", 4, MIB, 4)).unwrap();
+        ts.exchange_wave(&fabric, io.fast_secs);
+        ts.lose_node_now(NodeId(1));
+        ts.lose_node_now(NodeId(2));
+        let rb = ts.rebuild_missing(&fabric);
+        assert_eq!(rb.rebuilt_files, 0, "2-of-k loss cannot rebuild");
+        assert!(rb.unrecoverable_sets >= 1);
+        assert!(!ts.fast().exists("g0/f1"));
+        assert!(!ts.fast().exists("g0/f2"));
+    }
+
+    #[test]
+    fn partner_pair_loss_is_unrecoverable_but_other_members_rebuild() {
+        let fabric = Fabric::default();
+        let mut ts = rstore(4, RedundancyScheme::Partner);
+        ts.begin_ckpt(0.0);
+        let io = ts.write_wave(nwave("g0", 4, MIB, 4)).unwrap();
+        ts.exchange_wave(&fabric, io.fast_secs);
+        // Node 0's copy lives on node 1: losing both is the pair loss.
+        ts.lose_node_now(NodeId(0));
+        ts.lose_node_now(NodeId(1));
+        let rb = ts.rebuild_missing(&fabric);
+        assert!(!ts.fast().exists("g0/f0"), "pair loss: f0 stays missing");
+        assert!(ts.fast().exists("g0/f1"), "node 1's copy on node 2 survives");
+        assert_eq!(rb.rebuilt_nodes, 1);
+        assert!(rb.unrecoverable_sets >= 1);
+    }
+
+    #[test]
+    fn scheduled_loss_fires_mid_drain_and_kills_queued_items() {
+        let mut ts = store(1024 * MIB, 2);
+        ts.begin_ckpt(0.0);
+        ts.write_wave(wave("g0", 2, 256 * MIB)).unwrap();
+        let bw = ts.drain_bandwidth();
+        let half_f0 = 128.0 * MIB as f64 / bw;
+        ts.schedule_node_loss(NodeId(1), half_f0 * 1.5);
+
+        // Before the loss time: f0 (node 0) drains partially.
+        let t1 = ts.drain_to(half_f0);
+        assert!(t1.drained_bytes > 0);
+        assert!(ts.fast().exists("g0/f1"), "loss not due yet");
+
+        // Past the loss time: node 1's fast tier dies mid-drain — its
+        // queued item is destroyed, the rest drains normally.
+        ts.drain_to(10_000.0);
+        assert!(ts.durable().exists("g0/f0"));
+        assert!(!ts.fast().exists("g0/f1"), "f1 lost with its node");
+        assert!(!ts.durable().exists("g0/f1"), "partially-drained f1 never lands");
+        assert_eq!(ts.stats.lost_files, 1);
+        assert_eq!(ts.pending_files(), 0, "no zombie queue entries");
+    }
+
+    #[test]
+    fn stale_record_never_overwrites_a_newer_generation() {
+        // The manifest path is rewritten every generation. An older
+        // generation's record must treat the newer content as stale and
+        // leave it alone — never "rebuild" old bytes over it.
+        let fabric = Fabric::default();
+        let mut ts = rstore(2, RedundancyScheme::Partner);
+        let manifest = |data: &[u8]| WriteReq {
+            node: NodeId(0),
+            path: "job/manifest.txt".to_string(),
+            virtual_bytes: MIB,
+            data: data.to_vec(),
+            recipe: None,
+        };
+        ts.begin_ckpt(0.0);
+        let io = ts.write_wave(vec![manifest(b"gen 0")]).unwrap();
+        ts.exchange_wave(&fabric, io.fast_secs);
+        ts.begin_ckpt(1.0);
+        let io = ts.write_wave(vec![manifest(b"gen 1")]).unwrap();
+        ts.exchange_wave(&fabric, io.fast_secs);
+
+        let rb = ts.rebuild_missing(&fabric);
+        assert_eq!(rb.rebuilt_files, 0, "nothing is missing");
+        assert_eq!(fast_bytes_of(&ts, "job/manifest.txt"), b"gen 1".to_vec());
+
+        // Lose the owner: the newest record restores the newest content.
+        ts.lose_node_now(NodeId(0));
+        let rb = ts.rebuild_missing(&fabric);
+        assert_eq!(rb.rebuilt_files, 1);
+        assert_eq!(fast_bytes_of(&ts, "job/manifest.txt"), b"gen 1".to_vec());
+    }
+
+    #[test]
+    fn evicting_a_generation_frees_its_redundancy_artifacts() {
+        let fabric = Fabric::default();
+        // Tight fast tier + keep_fulls = 1 so the second checkpoint must
+        // evict the first, artifacts included.
+        let mut bb = FsConfig::burst_buffer(2);
+        bb.capacity = 100 * MIB;
+        let mut ts = TieredStore::new(
+            FileSystem::new(bb),
+            FileSystem::new(FsConfig::cscratch()),
+            1,
+            2,
+        );
+        ts.set_redundancy(RedundancyConfig::new(RedundancyScheme::Partner, 4));
+        ts.begin_ckpt(0.0);
+        let io = ts.write_wave(nwave("g0", 2, 20 * MIB, 2)).unwrap();
+        ts.exchange_wave(&fabric, io.fast_secs);
+        assert_eq!(ts.used_bytes(), 80 * MIB, "g0 + its copies");
+        ts.drain_to(1.0e7); // g0 fully durable
+        // The next wave (40 MiB) cannot fit in the 20 MiB left: g0 is
+        // evicted and its partner copies must go with it.
+        ts.begin_ckpt(2.0);
+        let io = ts.write_wave(nwave("g1", 2, 20 * MIB, 2)).unwrap();
+        assert!(io.evicted_files > 0);
+        ts.exchange_wave(&fabric, io.fast_secs);
+        assert!(!ts.fast().exists("g0/f0"));
+        assert_eq!(
+            ts.used_bytes(),
+            80 * MIB,
+            "only g1 + its copies remain on the fast tier"
+        );
     }
 }

@@ -126,6 +126,7 @@ COMMANDS:
              [--threads T] [--fs bb|lustre|staged] [--keep-fulls N]
              [--chunk-bytes N] [--chunking fixed|cdc] [--coord-fanout F]
              [--encode-threads N] [--pipeline on|off] [--ckpt-at STEP]
+             [--redundancy none|partner|xor] [--redundancy-set-size N]
              [--restart] [--real-compute] [--fixes on|off]
              [--link static|dynamic]
   usage      [--jobs N] print the Fig. 1 application census
@@ -213,6 +214,27 @@ fn build_config(args: &Args) -> Result<RunConfig> {
             bail!("--encode-threads must be >= 1");
         }
         cfg.encode_threads = Some(n);
+    }
+    if let Some(r) = args.get("redundancy") {
+        // Fast-tier peer redundancy: after each checkpoint's write wave
+        // the redundancy sets exchange partner copies or XOR parity, so a
+        // lost BB blade rebuilds from surviving peers on restart instead
+        // of falling back to Lustre.
+        let scheme = mana::fs::RedundancyScheme::parse(r)
+            .with_context(|| format!("unknown --redundancy {r} (none|partner|xor)"))?;
+        if scheme != mana::fs::RedundancyScheme::None && cfg.staging.is_none() {
+            bail!("--redundancy {r} requires --fs staged");
+        }
+        cfg.redundancy = scheme;
+    }
+    if let Some(n) = args.get("redundancy-set-size") {
+        let size: u32 = n
+            .parse()
+            .with_context(|| format!("--redundancy-set-size={n}"))?;
+        if size < 2 {
+            bail!("--redundancy-set-size must be >= 2 (got {size})");
+        }
+        cfg.redundancy_set_size = size;
     }
     cfg.link = match args.get("link") {
         Some("dynamic") => LinkMode::Dynamic,
@@ -315,6 +337,9 @@ fn cmd_run(args: &Args) -> Result<()> {
                 .set("digest_cache_hit_bytes", c.digest_cache_hit_bytes)
                 .set("fresh_hash_bytes", c.fresh_hash_bytes)
                 .set("cache_partial_regions", c.cache_partial_regions)
+                .set("redundancy_scheme", c.redundancy_scheme.name())
+                .set("exchange_secs", c.exchange_secs)
+                .set("parity_bytes", c.parity_bytes)
                 .set("drain_pending_bytes", c.drain_pending_bytes)
                 .set("deduped_bytes", c.deduped_bytes)
                 .set("dedup_ratio", c.dedup_ratio())
@@ -340,7 +365,12 @@ fn cmd_run(args: &Args) -> Result<()> {
                 .set("total_secs", r.total_secs)
                 .set("read_secs", r.read_secs)
                 .set("startup_secs", r.startup_secs)
-                .set("tier_fallbacks", r.tier_fallbacks as u64),
+                .set("tier_fallbacks", r.tier_fallbacks as u64)
+                .set("rebuilt_nodes", r.rebuilt_nodes as u64)
+                .set("rebuilt_files", r.rebuilt_files as u64)
+                .set("rebuild_secs", r.rebuild_secs)
+                .set("durable_read_files", r.durable_read_files as u64)
+                .set("generation_rewound", r.generation_rewound),
         );
     }
     if let Some(ts) = sim.fs.tiered() {
@@ -359,6 +389,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                 )
                 .set("gc_chunks", ts.stats.gc_chunks)
                 .set("evicted_generations", ts.stats.evicted_generations)
+                .set("lost_files", ts.stats.lost_files)
                 .set("backpressure_secs", ts.stats.forced_secs),
         );
     }

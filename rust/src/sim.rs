@@ -31,7 +31,10 @@ use crate::coordinator::{
     CkptFailure, CkptReport, CoordPlane, Coordinator, FlatPlane, OverlapIo, Phase, PhaseIo,
     RankState,
 };
-use crate::fs::{FileSystem, FsConfig, FsError, FsKind, Store, TieredStore, WriteReq};
+use crate::fs::{
+    FileSystem, FsConfig, FsError, FsKind, RedundancyConfig, RedundancyScheme, Store,
+    TieredStore, WriteReq,
+};
 use crate::launcher::{self, LaunchError};
 use crate::mem::Payload;
 use crate::mpi::comm::{CommRegistry, COMM_WORLD};
@@ -94,6 +97,21 @@ pub struct RestartReport {
     /// Images whose fast-tier copy failed CRC and were re-read from the
     /// durable tier (staged mode).
     pub tier_fallbacks: u32,
+    /// Nodes whose fast-tier images were rebuilt from redundancy-set
+    /// peers before any image was read (staged mode with `--redundancy`).
+    pub rebuilt_nodes: u32,
+    pub rebuilt_files: u32,
+    /// Virtual seconds of peer-rebuild fabric traffic (charged to the
+    /// restart's total).
+    pub rebuild_secs: f64,
+    /// Image files that had to be read from the durable tier (no fast
+    /// copy after the rebuild pass). Zero = the restart was served
+    /// entirely from the fast tier.
+    pub durable_read_files: u32,
+    /// How many generations the restart rewound past an unrecoverable
+    /// newest generation (the SCR `complete_restart(valid)` loop);
+    /// 0 = the newest generation restarted.
+    pub generation_rewound: u64,
 }
 
 /// The live job.
@@ -225,12 +243,18 @@ impl JobSim {
             if let Some(cap) = cfg.faults.fs_capacity_override {
                 bb.capacity = cap;
             }
-            return Store::Tiered(TieredStore::new(
+            let mut ts = TieredStore::new(
                 FileSystem::new(bb),
                 FileSystem::new(FsConfig::cscratch()),
                 staging.keep_fulls,
                 topo.nodes(),
+            );
+            ts.set_redundancy(RedundancyConfig::new(
+                cfg.redundancy,
+                cfg.redundancy_set_size,
             ));
+            Self::schedule_fs_losses(cfg, &mut ts);
+            return Store::Tiered(ts);
         }
         let mut fscfg = match cfg.fs {
             FsKind::BurstBuffer => FsConfig::burst_buffer(topo.nodes()),
@@ -240,6 +264,18 @@ impl JobSim {
             fscfg.capacity = cap;
         }
         Store::Single(FileSystem::new(fscfg))
+    }
+
+    /// Wire the fault plan's declarative fast-tier losses into the store
+    /// (same pattern as `image_bitflip`: the subsystem reads its knobs at
+    /// construction time and fires them on its own clock).
+    fn schedule_fs_losses(cfg: &RunConfig, ts: &mut TieredStore) {
+        for (node, at) in &cfg.faults.bb_node_loss {
+            ts.schedule_node_loss(*node, *at);
+        }
+        for (set, at) in &cfg.faults.bb_set_loss {
+            ts.schedule_set_loss(*set, *at);
+        }
     }
 
     fn make_fabric(cfg: &RunConfig) -> Fabric {
@@ -826,6 +862,9 @@ impl JobSim {
             };
             manifest.add(rank, path);
         }
+        if self.cfg.redundancy != RedundancyScheme::None {
+            manifest.redundancy = Some((self.cfg.redundancy, self.cfg.redundancy_set_size));
+        }
         let mdata = manifest.encode();
         let mreq = WriteReq {
             node: self.topo.node_of(RankId(0)),
@@ -853,6 +892,23 @@ impl JobSim {
                     report.durable_bytes += msio.durable_bytes;
                     report.write_secs += msio.backpressure_secs;
                     t = t.after(msio.backpressure_secs);
+                    for tt in &mut self.times {
+                        *tt = t;
+                    }
+                }
+                // Redundancy exchange: after the manifest wave, so the
+                // manifest itself is in the generation's protected set. The
+                // exchange pipelines behind the BB write wave — only the
+                // residual (fill one chunk, plus whatever the fabric could
+                // not hide under the wave) lands on the rank critical path.
+                report.redundancy_scheme = ts.redundancy().scheme;
+                if ts.redundancy().active() {
+                    let fabric = Self::make_fabric(&self.cfg);
+                    let ex = ts.exchange_wave(&fabric, report.fast_write_secs);
+                    report.exchange_secs = ex.exchange_secs;
+                    report.parity_bytes = ex.parity_bytes;
+                    report.write_secs += ex.exchange_secs;
+                    t = t.after(ex.exchange_secs);
                     for tt in &mut self.times {
                         *tt = t;
                     }
@@ -972,6 +1028,32 @@ impl JobSim {
         if let Store::Tiered(ts) = &mut fs {
             ts.reload_index()
                 .map_err(|e| RestartError::Fs(e.to_string()))?;
+            // Future checkpoints of the resumed job keep the configured
+            // scheme; the rebuild below works off the per-generation
+            // exchange records, which carry their own.
+            ts.set_redundancy(RedundancyConfig::new(
+                cfg.redundancy,
+                cfg.redundancy_set_size,
+            ));
+            // Fast-tier losses in a restart's fault plan happened while
+            // the job was down — all of them fire before the rebuild pass
+            // surveys what survived.
+            for (node, _) in &cfg.faults.bb_node_loss {
+                ts.lose_node_now(*node);
+            }
+            for (set, _) in &cfg.faults.bb_set_loss {
+                ts.lose_set_now(*set);
+            }
+            // Peer rebuild: restore lost fast-tier images from partner
+            // copies / XOR parity before any read goes looking for them.
+            // The restart preference order is fast -> peer rebuild ->
+            // durable -> older generation; this step never touches the
+            // durable tier.
+            let fabric = Self::make_fabric(&cfg);
+            let rb = ts.rebuild_missing(&fabric);
+            report.rebuilt_nodes = rb.rebuilt_nodes;
+            report.rebuilt_files = rb.rebuilt_files;
+            report.rebuild_secs = rb.rebuild_secs;
         }
 
         // srun with the restart argv — the packet-limit crash lives here.
@@ -1084,6 +1166,27 @@ impl JobSim {
                     }
                 }
             }
+            // Adopt the writer's redundancy scheme when the restart config
+            // leaves it unset, so a resumed job keeps protecting its
+            // checkpoints the way the surviving set was written. An
+            // explicit config wins (the per-generation exchange records
+            // keep their own scheme either way).
+            if let Some((scheme, size)) = manifest.redundancy {
+                if cfg.redundancy == RedundancyScheme::None
+                    && scheme != RedundancyScheme::None
+                {
+                    log_info!(
+                        "sim",
+                        "restart {}: adopting manifest redundancy {scheme}/{size}",
+                        cfg.job
+                    );
+                    cfg.redundancy = scheme;
+                    cfg.redundancy_set_size = size;
+                    if let Store::Tiered(ts) = &mut fs {
+                        ts.set_redundancy(RedundancyConfig::new(scheme, size));
+                    }
+                }
+            }
             (0..cfg.ranks)
                 .map(|r| {
                     let rank = RankId(r);
@@ -1114,10 +1217,50 @@ impl JobSim {
             }
         }
 
-        let (datas, io) = fs
-            .read_parallel(&paths)
-            .map_err(|e| RestartError::Fs(e.to_string()))?;
-        report.read_secs = io.duration;
+        // Load the newest generation; if it is unrecoverable on *every*
+        // tier, walk back to the newest older generation that still fully
+        // decodes — SCR's `complete_restart(valid)` rewind. Only full
+        // (gen-stamped) image sets are candidates, so a rewound restart
+        // never resumes from a parentless incremental.
+        let images = match load_generation(&mut fs, &topo, &cfg, &paths, &mut report) {
+            Ok(imgs) => imgs,
+            Err(first_err) => {
+                let newest = ckpt_gen.saturating_sub(1);
+                let mut found = None;
+                if cfg.staging.is_some() && cfg.fixes.manifest_filenames {
+                    for g in (0..newest).rev() {
+                        let pg: Vec<(NodeId, String)> = (0..cfg.ranks)
+                            .map(|r| {
+                                let rank = RankId(r);
+                                (topo.node_of(rank), gen_image_path(&cfg.job, g, rank))
+                            })
+                            .collect();
+                        if let Ok(imgs) =
+                            load_generation(&mut fs, &topo, &cfg, &pg, &mut report)
+                        {
+                            report.generation_rewound = newest - g;
+                            ckpt_gen = g + 1;
+                            // The rewound set is a full checkpoint; newer
+                            // parents are not to be trusted.
+                            last_full_gen = Some(g);
+                            log_warn!(
+                                "sim",
+                                "restart {}: generation {newest} unrecoverable on \
+                                 every tier — rewound {} generation(s) to {g}",
+                                cfg.job,
+                                report.generation_rewound
+                            );
+                            found = Some(imgs);
+                            break;
+                        }
+                    }
+                }
+                match found {
+                    Some(imgs) => imgs,
+                    None => return Err(first_err),
+                }
+            }
+        };
 
         let split_cfg = SplitConfig {
             os: cfg.os,
@@ -1134,26 +1277,8 @@ impl JobSim {
         );
         let mut job_step = 0u64;
         let mut comms = CommRegistry::new(cfg.ranks);
-        for (r, data) in datas.iter().enumerate() {
+        for (r, img) in images.into_iter().enumerate() {
             let rank = RankId(r as u32);
-            let (node, path) = &paths[r];
-            let mut img = decode_with_tier_fallback(&fs, *node, path, data, rank, &mut report)?;
-            // Incremental image: pull and resolve its parent full image.
-            if let Some(parent_path) = img.parent.clone() {
-                let (pdatas, _) = fs
-                    .read_parallel(&[(topo.node_of(rank), parent_path.clone())])
-                    .map_err(|e| RestartError::Fs(e.to_string()))?;
-                let parent = decode_with_tier_fallback(
-                    &fs,
-                    topo.node_of(rank),
-                    &parent_path,
-                    &pdatas[0],
-                    rank,
-                    &mut report,
-                )?;
-                img = crate::ckpt::resolve_incremental(img, parent)
-                    .map_err(|e| RestartError::CorruptImage(rank, e))?;
-            }
             let mut proc = SplitProcess::restart(&img, split_cfg, cfg.seed)
                 .map_err(|e| RestartError::Proc(rank, e.to_string()))?;
             // Re-inflate the drain buffer and drop its pseudo-region.
@@ -1187,7 +1312,7 @@ impl JobSim {
         let world = MpiWorld::new(cfg.ranks, Self::make_fabric(&cfg));
         let mut coord = Self::make_coordinator(&cfg, &topo);
         coord.stats.restarts += 1;
-        report.total_secs = report.startup_secs + report.read_secs;
+        report.total_secs = report.startup_secs + report.read_secs + report.rebuild_secs;
         let t0 = SimTime::secs(report.total_secs);
         // The surviving store's drain clock sits on the killed job's
         // timeline; rebase it to the restarted clock so an interrupted
@@ -1288,39 +1413,127 @@ fn absorb_overlap(report: &mut CkptReport, o: &OverlapIo) {
     report.reparents += o.first.reparents + o.second.reparents;
 }
 
-/// Decode an image, and on CRC/decode failure of a fast-tier copy whose
-/// durable twin exists, re-read from the durable tier and retry (staged
-/// mode's cross-tier fallback). Charges the extra read to the report.
+/// Count the reads of `paths` that are about to miss the fast tier and go
+/// durable (staged mode). The acceptance telemetry for peer redundancy:
+/// a rebuilt restart shows zero of these for the lost node.
+fn count_durable_reads(fs: &Store, paths: &[(NodeId, String)], report: &mut RestartReport) {
+    if let Store::Tiered(ts) = fs {
+        report.durable_read_files += paths
+            .iter()
+            .filter(|(_, p)| !ts.fast().exists(p))
+            .count() as u32;
+    }
+}
+
+/// Read and decode one generation's images, resolving incremental parents.
+/// Reads prefer the fast tier per file; a file that fails validation walks
+/// the preference order fast -> peer rebuild -> durable inside
+/// [`decode_with_tier_fallback`]. Fails if any rank's image is
+/// unrecoverable on every tier (the caller may then rewind a generation).
+fn load_generation(
+    fs: &mut Store,
+    topo: &Topology,
+    cfg: &RunConfig,
+    paths: &[(NodeId, String)],
+    report: &mut RestartReport,
+) -> Result<Vec<CkptImage>, RestartError> {
+    let fabric = JobSim::make_fabric(cfg);
+    count_durable_reads(fs, paths, report);
+    let (datas, io) = fs
+        .read_parallel(paths)
+        .map_err(|e| RestartError::Fs(e.to_string()))?;
+    report.read_secs += io.duration;
+    let mut images = Vec::with_capacity(paths.len());
+    for (r, data) in datas.iter().enumerate() {
+        let rank = RankId(r as u32);
+        let (node, path) = &paths[r];
+        let mut img =
+            decode_with_tier_fallback(fs, *node, path, data, rank, &fabric, report)?;
+        // Incremental image: pull and resolve its parent full image.
+        if let Some(parent_path) = img.parent.clone() {
+            let ppaths = [(topo.node_of(rank), parent_path.clone())];
+            count_durable_reads(fs, &ppaths, report);
+            let (pdatas, _) = fs
+                .read_parallel(&ppaths)
+                .map_err(|e| RestartError::Fs(e.to_string()))?;
+            let parent = decode_with_tier_fallback(
+                fs,
+                topo.node_of(rank),
+                &parent_path,
+                &pdatas[0],
+                rank,
+                &fabric,
+                report,
+            )?;
+            img = crate::ckpt::resolve_incremental(img, parent)
+                .map_err(|e| RestartError::CorruptImage(rank, e))?;
+        }
+        images.push(img);
+    }
+    Ok(images)
+}
+
+/// Decode an image; on CRC/decode failure of a fast-tier copy, mark that
+/// copy invalid for the rest of the restart (no per-region re-reads of
+/// known-bad data), attempt a peer rebuild of the path, and only then fall
+/// back to the durable tier — staged mode's preference order. Charges the
+/// extra reads to the report.
 fn decode_with_tier_fallback(
-    fs: &Store,
+    fs: &mut Store,
     node: NodeId,
     path: &str,
     data: &[u8],
     rank: RankId,
+    fabric: &Fabric,
     report: &mut RestartReport,
 ) -> Result<CkptImage, RestartError> {
-    match CkptImage::decode(data) {
-        Ok(img) => Ok(img),
-        Err(e) => {
-            if let Store::Tiered(ts) = fs {
-                if ts.fast().exists(path) && ts.is_durable(path) {
-                    log_warn!(
-                        "sim",
-                        "{rank}: fast-tier image {path} failed validation ({e}) — \
-                         falling back to the durable tier"
-                    );
-                    let (datas, io) = ts
-                        .read_durable(&[(node, path.to_string())])
-                        .map_err(|e2| RestartError::Fs(e2.to_string()))?;
-                    report.read_secs += io.duration;
-                    report.tier_fallbacks += 1;
-                    return CkptImage::decode(&datas[0])
-                        .map_err(|e2| RestartError::CorruptImage(rank, e2));
-                }
+    let e = match CkptImage::decode(data) {
+        Ok(img) => return Ok(img),
+        Err(e) => e,
+    };
+    let Store::Tiered(ts) = fs else {
+        return Err(RestartError::CorruptImage(rank, e));
+    };
+    if !ts.mark_fast_invalid(path) {
+        // No fast-tier copy was involved: the failing bytes came from the
+        // durable tier (or nowhere), so there is nothing left to try.
+        return Err(RestartError::CorruptImage(rank, e));
+    }
+    log_warn!(
+        "sim",
+        "{rank}: fast-tier image {path} failed validation ({e}) — \
+         attempting peer rebuild, then the durable tier"
+    );
+    // Peer rebuild first: a partner copy or XOR reconstruction restores
+    // the invalidated file without touching the durable tier.
+    let rb = ts.rebuild_missing(fabric);
+    report.rebuilt_nodes += rb.rebuilt_nodes;
+    report.rebuilt_files += rb.rebuilt_files;
+    report.rebuild_secs += rb.rebuild_secs;
+    if ts.fast().exists(path) {
+        let (datas, io) = ts
+            .read_preferred(&[(node, path.to_string())])
+            .map_err(|e2| RestartError::Fs(e2.to_string()))?;
+        report.read_secs += io.duration;
+        match CkptImage::decode(&datas[0]) {
+            Ok(img) => return Ok(img),
+            // A rebuilt copy that still fails decode is invalid too.
+            Err(_) => {
+                ts.mark_fast_invalid(path);
             }
-            Err(RestartError::CorruptImage(rank, e))
         }
     }
+    if ts.is_durable(path) {
+        let (datas, io) = ts
+            .read_durable(&[(node, path.to_string())])
+            .map_err(|e2| RestartError::Fs(e2.to_string()))?;
+        report.read_secs += io.duration;
+        report.tier_fallbacks += 1;
+        report.durable_read_files += 1;
+        return CkptImage::decode(&datas[0])
+            .map_err(|e2| RestartError::CorruptImage(rank, e2));
+    }
+    Err(RestartError::CorruptImage(rank, e))
 }
 
 #[cfg(test)]
@@ -2193,5 +2406,203 @@ mod tests {
         resumed.run_steps(2).unwrap();
         assert_eq!(resumed.fingerprint(), want);
         assert!(!resumed.any_corruption());
+    }
+
+    // ------------------------------------------ fast-tier peer redundancy
+
+    /// Staged config spread over 4 nodes (32 threads/rank -> 2 ranks/node)
+    /// with a redundancy scheme — one full set of 4.
+    fn redundant_cfg(scheme: RedundancyScheme) -> RunConfig {
+        let mut cfg = staged_cfg(8, 0);
+        cfg.threads_per_rank = 32;
+        cfg.redundancy = scheme;
+        cfg
+    }
+
+    fn node_loss_cycle(scheme: RedundancyScheme) {
+        let mut cont = JobSim::launch(redundant_cfg(scheme), None).unwrap();
+        cont.run_steps(6).unwrap();
+        let want = cont.fingerprint();
+
+        let mut sim = JobSim::launch(redundant_cfg(scheme), None).unwrap();
+        sim.run_steps(3).unwrap();
+        let rep = sim.checkpoint().unwrap();
+        assert_eq!(rep.redundancy_scheme, scheme);
+        assert!(rep.exchange_secs > 0.0, "exchange must be charged");
+        assert!(rep.parity_bytes > 0);
+        // Kill with the drain still pending, then lose one node's entire
+        // fast tier while the job is down.
+        assert!(sim.fs.tiered().unwrap().pending_files() > 0);
+        let mut cfg = sim.cfg.clone();
+        cfg.faults.bb_node_loss = vec![(NodeId(3), 0.0)];
+        let fs = sim.kill();
+        let (mut resumed, rrep) = JobSim::restart_from(cfg, None, fs).unwrap();
+        assert_eq!(rrep.rebuilt_nodes, 1);
+        assert!(
+            rrep.rebuilt_files >= 2,
+            "both of node 3's rank images must come back from peers"
+        );
+        assert!(rrep.rebuild_secs > 0.0);
+        assert_eq!(
+            rrep.durable_read_files, 0,
+            "peer rebuild must keep the restart off the durable tier"
+        );
+        assert_eq!(rrep.generation_rewound, 0);
+        assert_eq!(rrep.tier_fallbacks, 0);
+        resumed.run_steps(3).unwrap();
+        assert_eq!(
+            resumed.fingerprint(),
+            want,
+            "peer-rebuilt restart must be bitwise identical"
+        );
+        assert!(!resumed.any_corruption());
+    }
+
+    #[test]
+    fn partner_restart_rebuilds_lost_node_from_peers() {
+        node_loss_cycle(RedundancyScheme::Partner);
+    }
+
+    #[test]
+    fn xor_restart_rebuilds_lost_node_from_peers() {
+        node_loss_cycle(RedundancyScheme::Xor);
+    }
+
+    #[test]
+    fn unprotected_node_loss_falls_back_to_durable_tier() {
+        let mut cont = JobSim::launch(redundant_cfg(RedundancyScheme::None), None).unwrap();
+        cont.run_steps(6).unwrap();
+        let want = cont.fingerprint();
+
+        let mut sim = JobSim::launch(redundant_cfg(RedundancyScheme::None), None).unwrap();
+        sim.run_steps(3).unwrap();
+        let rep = sim.checkpoint().unwrap();
+        assert_eq!(rep.exchange_secs, 0.0, "no scheme, no exchange");
+        assert_eq!(rep.parity_bytes, 0);
+        sim.finish_drain();
+        let mut cfg = sim.cfg.clone();
+        cfg.faults.bb_node_loss = vec![(NodeId(3), 0.0)];
+        let fs = sim.kill();
+        let (mut resumed, rrep) = JobSim::restart_from(cfg, None, fs).unwrap();
+        assert_eq!(rrep.rebuilt_nodes, 0, "nothing to rebuild from");
+        assert!(
+            rrep.durable_read_files >= 2,
+            "the lost node's images must be served from Lustre"
+        );
+        resumed.run_steps(3).unwrap();
+        assert_eq!(resumed.fingerprint(), want);
+        assert!(!resumed.any_corruption());
+    }
+
+    #[test]
+    fn unrecoverable_xor_set_rewinds_to_older_generation() {
+        let mut cont = JobSim::launch(redundant_cfg(RedundancyScheme::Xor), None).unwrap();
+        cont.run_steps(4).unwrap();
+        let want = cont.fingerprint();
+
+        let mut sim = JobSim::launch(redundant_cfg(RedundancyScheme::Xor), None).unwrap();
+        sim.run_steps(2).unwrap();
+        sim.checkpoint().unwrap();
+        sim.finish_drain(); // generation 0 is fully durable
+        sim.run_steps(2).unwrap();
+        sim.checkpoint().unwrap(); // generation 1 exists on the fast tier only
+        assert!(sim.fs.tiered().unwrap().pending_files() > 0);
+        // Two lost members sink the XOR set: generation 1 is gone from the
+        // fast tier AND never reached Lustre, so the restart must rewind.
+        let mut cfg = sim.cfg.clone();
+        cfg.faults.bb_node_loss = vec![(NodeId(2), 0.0), (NodeId(3), 0.0)];
+        let fs = sim.kill();
+        let (mut resumed, rrep) = JobSim::restart_from(cfg, None, fs).unwrap();
+        assert_eq!(rrep.generation_rewound, 1, "must rewind exactly one generation");
+        assert_eq!(resumed.step, 2, "resumed from the older full checkpoint");
+        resumed.run_steps(2).unwrap();
+        assert_eq!(resumed.fingerprint(), want);
+        assert!(!resumed.any_corruption());
+    }
+
+    #[test]
+    fn scheduled_node_loss_mid_drain_recovers_via_partner() {
+        let mut cont = JobSim::launch(redundant_cfg(RedundancyScheme::Partner), None).unwrap();
+        cont.run_steps(6).unwrap();
+        let want = cont.fingerprint();
+
+        let mut sim = JobSim::launch(redundant_cfg(RedundancyScheme::Partner), None).unwrap();
+        sim.run_steps(3).unwrap();
+        sim.checkpoint().unwrap();
+        // The blade dies on the next drain tick, with the queue mid-flight.
+        let at = sim.now().as_secs() + 1e-6;
+        sim.fs
+            .tiered_mut()
+            .unwrap()
+            .schedule_node_loss(NodeId(3), at);
+        sim.run_steps(1).unwrap();
+        assert!(
+            sim.fs.tiered().unwrap().stats.lost_files > 0,
+            "the scheduled loss must have fired mid-drain"
+        );
+        let cfg = sim.cfg.clone();
+        let fs = sim.kill();
+        let (mut resumed, rrep) = JobSim::restart_from(cfg, None, fs).unwrap();
+        assert_eq!(rrep.rebuilt_nodes, 1);
+        assert_eq!(rrep.durable_read_files, 0);
+        resumed.run_steps(3).unwrap();
+        assert_eq!(resumed.fingerprint(), want);
+        assert!(!resumed.any_corruption());
+        // The rebuilt files re-entered the drain queue and go durable.
+        resumed.finish_drain();
+        let ts = resumed.fs.tiered().unwrap();
+        assert!(ts.is_durable(&gen_image_path("synthetic-8r", 0, RankId(6))));
+        assert!(ts.is_durable(&gen_image_path("synthetic-8r", 0, RankId(7))));
+    }
+
+    #[test]
+    fn corrupt_fast_image_rebuilds_from_partner_before_durable() {
+        let mut cont = JobSim::launch(redundant_cfg(RedundancyScheme::Partner), None).unwrap();
+        cont.run_steps(4).unwrap();
+        let want = cont.fingerprint();
+
+        let mut sim = JobSim::launch(redundant_cfg(RedundancyScheme::Partner), None).unwrap();
+        sim.run_steps(2).unwrap();
+        sim.checkpoint().unwrap();
+        // Corrupt a fast copy while its drain is still pending: the bad
+        // bytes exist nowhere else but the partner copy.
+        assert!(sim.fs.tiered().unwrap().pending_files() > 0);
+        let path = gen_image_path("synthetic-8r", 0, RankId(6));
+        assert!(sim
+            .fs
+            .tiered_mut()
+            .unwrap()
+            .fast_mut()
+            .corrupt_byte(&path, 150));
+        let cfg = sim.cfg.clone();
+        let fs = sim.kill();
+        let (mut resumed, rrep) = JobSim::restart_from(cfg, None, fs).unwrap();
+        assert_eq!(
+            rrep.tier_fallbacks, 0,
+            "the partner copy must beat the durable tier"
+        );
+        assert!(rrep.rebuilt_files >= 1);
+        assert_eq!(rrep.rebuilt_nodes, 1);
+        assert_eq!(rrep.durable_read_files, 0);
+        resumed.run_steps(2).unwrap();
+        assert_eq!(resumed.fingerprint(), want);
+        assert!(!resumed.any_corruption());
+    }
+
+    #[test]
+    fn restart_adopts_manifest_redundancy_scheme() {
+        let mut sim = JobSim::launch(redundant_cfg(RedundancyScheme::Xor), None).unwrap();
+        sim.run_steps(2).unwrap();
+        sim.checkpoint().unwrap();
+        let mut cfg = sim.cfg.clone();
+        cfg.redundancy = RedundancyScheme::None; // restart config left unset
+        let fs = sim.kill();
+        let (resumed, _) = JobSim::restart_from(cfg, None, fs).unwrap();
+        assert_eq!(
+            resumed.cfg.redundancy,
+            RedundancyScheme::Xor,
+            "restart must adopt the scheme the set was written with"
+        );
+        assert_eq!(resumed.cfg.redundancy_set_size, 4);
     }
 }

@@ -68,6 +68,24 @@ impl Fabric {
             .any(|&(s, e)| t.as_secs() >= s && t.as_secs() < e)
     }
 
+    /// Plain window-free transfer time for `bytes`: latency + serialization.
+    /// Used by the redundancy layer to charge peer-exchange and rebuild
+    /// traffic on the sim clock without the quiescence machinery (the
+    /// exchange runs after the write wave, outside any MPI drain window).
+    pub fn transfer_secs(&self, bytes: u64) -> f64 {
+        self.cfg.latency + bytes as f64 / self.cfg.bandwidth
+    }
+
+    /// Transfer time for `bytes` when the send is pipelined behind some
+    /// other `overlap_secs`-long activity (e.g. the fast-tier write wave):
+    /// only the first `chunk` bytes must land before the overlap begins,
+    /// and the residual serialization beyond the overlap window is what
+    /// the ranks actually observe.
+    pub fn overlapped_secs(&self, bytes: u64, overlap_secs: f64, chunk: u64) -> f64 {
+        self.transfer_secs(bytes.min(chunk))
+            + (bytes as f64 / self.cfg.bandwidth - overlap_secs.max(0.0)).max(0.0)
+    }
+
     /// End of the quiescence window covering `t`, if any.
     pub fn quiescence_end(&self, t: SimTime) -> Option<SimTime> {
         self.cfg
@@ -120,6 +138,26 @@ mod tests {
         // Message arriving before the window is unaffected.
         let t2 = f.delivery_time(SimTime::secs(0.5), 8);
         assert!(t2.as_secs() < 1.0);
+    }
+
+    #[test]
+    fn transfer_secs_is_latency_plus_serialization() {
+        let f = Fabric::default();
+        assert!((f.transfer_secs(8_000_000_000) - 1.0).abs() < 0.01);
+        assert!(f.transfer_secs(0) >= f.cfg.latency);
+    }
+
+    #[test]
+    fn overlapped_transfer_hides_behind_wave() {
+        let f = Fabric::default();
+        let chunk = 4 << 20;
+        // 8 GB behind a 2 s wave: serialization (~1 s) fully hidden, only
+        // the pipeline-fill chunk remains visible.
+        let hidden = f.overlapped_secs(8_000_000_000, 2.0, chunk);
+        assert!(hidden < 0.01, "{hidden}");
+        // No overlap: at least the plain transfer (fill chunk + residual).
+        let plain = f.overlapped_secs(8_000_000_000, 0.0, chunk);
+        assert!(plain >= f.transfer_secs(8_000_000_000) - 1e-9, "{plain}");
     }
 
     #[test]
