@@ -37,6 +37,7 @@ use mana::fs::{FileSystem, FsConfig, WriteReq};
 use mana::mem::{Half, MemRegion, Payload, RegionTable};
 use mana::sim::JobSim;
 use mana::topology::{NodeId, RankId};
+use mana::trace::critical_path::{critical_path, top_k_summary};
 use mana::util::json::Json;
 
 const CHUNK: usize = 1 << 20;
@@ -240,6 +241,7 @@ fn staged_4096() -> Json {
     cfg.job = "datapath-4096".into();
     cfg.mem_per_rank = Some(1 << 20);
     cfg.steps = 0;
+    cfg.trace = true;
     let mut sim = JobSim::launch(cfg, None).expect("4096-rank staged launch");
     sim.run_steps(1).expect("step");
     let g1 = sim.checkpoint().expect("ckpt gen 1");
@@ -251,8 +253,12 @@ fn staged_4096() -> Json {
         g3.digest_cache_hit_bytes > 0,
         "4096-rank staged generation 3 must serve clean regions from cache"
     );
+    // What the warm generation's stall actually waited on, from the span
+    // record of the third checkpoint (generation index 2).
+    let top3 = top_k_summary(&critical_path(&sim.tracer.spans(), 2), 3);
     println!(
-        "staged 4096: gen1 encode {:.3}s, gen3 encode {:.3}s ({} cache-hit bytes, {} threads)",
+        "staged 4096: gen1 encode {:.3}s, gen3 encode {:.3}s ({} cache-hit bytes, {} threads)\n\
+         staged 4096 gen3 critical path: {top3}",
         g1.encode_host_secs, g3.encode_host_secs, g3.digest_cache_hit_bytes, g3.encode_threads
     );
     Json::obj()
@@ -261,6 +267,7 @@ fn staged_4096() -> Json {
         .set("gen1_encode_host_secs", g1.encode_host_secs)
         .set("gen3_encode_host_secs", g3.encode_host_secs)
         .set("gen3_digest_cache_hit_bytes", g3.digest_cache_hit_bytes)
+        .set("gen3_critical_path_top3", top3.as_str())
 }
 
 fn main() {

@@ -35,6 +35,7 @@ use mana::config::{AppKind, RunConfig};
 use mana::fs::{FileSystem, FsConfig, FsKind, TieredStore, WriteReq};
 use mana::sim::JobSim;
 use mana::topology::{NodeId, RankId};
+use mana::trace::critical_path::{critical_path, top_k_summary};
 use mana::util::bytes::human;
 use mana::util::json::Json;
 use mana::util::prng::SplitMix64;
@@ -62,6 +63,9 @@ fn cfg_for(ranks: u32, mode: &Mode) -> RunConfig {
     let mut cfg = RunConfig::new(AppKind::Synthetic, ranks);
     cfg.job = format!("staged-{ranks}-{}", mode.tag());
     cfg.mem_per_rank = Some(MEM_PER_RANK);
+    // Span tracing on, so the stall rows can name what gated them (the
+    // trace bench gates the overhead at <= 3%).
+    cfg.trace = true;
     match mode {
         Mode::Bb => cfg.fs = FsKind::BurstBuffer,
         Mode::Lustre => cfg.fs = FsKind::Lustre,
@@ -82,6 +86,8 @@ struct Point {
     stall: f64,
     /// Durable-tier busy seconds spent off the critical path.
     drain_bg: f64,
+    /// Top-3 critical-path charges of the checkpoint, from the span record.
+    top3: String,
 }
 
 fn measure(ranks: u32, mode: Mode) -> Point {
@@ -89,6 +95,7 @@ fn measure(ranks: u32, mode: Mode) -> Point {
     let mut sim = JobSim::launch(cfg, None).expect("launch");
     sim.run_steps(2).expect("steps");
     let rep = sim.checkpoint().expect("ckpt");
+    let top3 = top_k_summary(&critical_path(&sim.tracer.spans(), 0), 3);
     let mut drain_bg = 0.0;
     if matches!(mode, Mode::Staged) {
         assert!(rep.drain_pending_bytes > 0, "staged ckpt must queue a drain");
@@ -117,6 +124,7 @@ fn measure(ranks: u32, mode: Mode) -> Point {
     Point {
         stall: rep.write_secs,
         drain_bg,
+        top3,
     }
 }
 
@@ -486,6 +494,7 @@ fn main() {
             "staged/bb",
             "lustre/staged",
             "bg_drain_s",
+            "staged_critical_path_top3",
         ],
     );
     let mut rows = Vec::new();
@@ -504,6 +513,7 @@ fn main() {
             format!("{:.2}x", staged.stall / bb.stall),
             format!("{:.1}x", lustre.stall / staged.stall),
             fsecs(staged.drain_bg),
+            staged.top3.clone(),
         ]);
     }
     let stall_table = rep.finish_json();

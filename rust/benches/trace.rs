@@ -1,0 +1,192 @@
+//! TRACE — observability acceptance: tracing overhead + reconciliation.
+//!
+//! The span recorder is only trustworthy if (a) it is cheap enough to
+//! leave on for production-sized jobs and (b) the timeline it records is
+//! the timeline the checkpoint actually took. Asserted here:
+//!
+//!   * **overhead**: a 512-rank staged checkpoint with `cfg.trace` on
+//!     must stay within 3% of the untraced wall-clock (min-of-N);
+//!   * **reconciliation**: every `CkptReport` timing field re-derives
+//!     from the span record within `RECONCILE_EPS` across
+//!     flat/tree x serial/pipelined shapes at 512 ranks, and the
+//!     recorder's own self-check emitted no `trace.reconcile` events;
+//!   * **critical path**: the extracted chain's charges sum to the
+//!     checkpoint wall time (the walk telescopes, nothing is dropped);
+//!   * a Perfetto/chrome://tracing export of the traced run is written
+//!     to `trace.json` for the CI artifact upload.
+//!
+//! Results land in BENCH_trace.json; the CI bench-report job gates on
+//! `trace_overhead_512` and `trace_reconcile_mismatches`.
+
+use mana::benchkit::{fsecs, time, Report};
+use mana::config::{AppKind, RunConfig};
+use mana::coordinator::CkptReport;
+use mana::sim::JobSim;
+use mana::trace;
+use mana::trace::critical_path::{critical_path, top_k_summary};
+use mana::util::json::Json;
+
+const RANKS: u32 = 512;
+/// ~32 GB aggregate: big enough that the encode/write model dominates,
+/// small enough for a min-of-N wall-clock loop.
+const MEM_PER_RANK: u64 = 64 << 20;
+
+fn base_cfg(tag: &str, traced: bool) -> RunConfig {
+    let mut cfg = RunConfig::new(AppKind::Synthetic, RANKS).with_staging();
+    cfg.job = format!("trace-{tag}");
+    cfg.mem_per_rank = Some(MEM_PER_RANK);
+    cfg.trace = traced;
+    cfg
+}
+
+/// Launch, run one superstep, checkpoint. Returns the sim (for its
+/// tracer) and the checkpoint report; the overhead loop discards both.
+fn one_run(cfg: &RunConfig) -> (JobSim, CkptReport) {
+    let mut sim = JobSim::launch(cfg.clone(), None).expect("launch");
+    sim.run_steps(1).expect("steps");
+    let rep = sim.checkpoint().expect("ckpt");
+    (sim, rep)
+}
+
+/// Traced-vs-untraced host wall-clock at 512 ranks. Min-of-N on both
+/// sides so scheduler noise cancels; the ratio is the gated overhead.
+fn overhead_512(rep: &mut Report) -> f64 {
+    let off = base_cfg("overhead-off", false);
+    let on = base_cfg("overhead-on", true);
+    let (off_mean, off_min) = time(1, 5, || {
+        let _ = one_run(&off);
+    });
+    let (on_mean, on_min) = time(1, 5, || {
+        let _ = one_run(&on);
+    });
+    let ratio = on_min / off_min;
+    rep.row(vec![
+        "untraced".into(),
+        fsecs(off_min),
+        fsecs(off_mean),
+        "1.00x".into(),
+    ]);
+    rep.row(vec![
+        "traced".into(),
+        fsecs(on_min),
+        fsecs(on_mean),
+        format!("{ratio:.3}x"),
+    ]);
+    ratio
+}
+
+/// One traced checkpoint per coordination/pipeline shape; returns the
+/// number of report fields the span record failed to reproduce, plus any
+/// self-check events the recorder logged during the run.
+fn reconcile_shapes() -> (u64, Json) {
+    let shapes: [(&str, Option<u32>, bool); 4] = [
+        ("flat-serial", None, false),
+        ("flat-pipelined", None, true),
+        ("tree4-serial", Some(4), false),
+        ("tree4-pipelined", Some(4), true),
+    ];
+    let mut mismatches = 0u64;
+    let mut rows = Json::Arr(vec![]);
+    for (tag, fanout, pipelined) in shapes {
+        let mut cfg = base_cfg(tag, true);
+        cfg.pipeline = pipelined;
+        if let Some(f) = fanout {
+            cfg = cfg.with_coord_tree(f);
+        }
+        let (sim, rep) = one_run(&cfg);
+        let spans = sim.tracer.spans();
+        // Re-derive the report from spans; the checkpoint path also runs
+        // this check itself and logs trace.reconcile events on failure.
+        let errs = trace::reconcile(&spans, 0, &rep);
+        for e in &errs {
+            eprintln!("{tag}: reconcile mismatch: {e}");
+        }
+        mismatches += errs.len() as u64;
+        mismatches += sim.tracer.event_count("trace.reconcile:g0");
+
+        // The critical path must telescope to the checkpoint wall time.
+        let path = critical_path(&spans, 0);
+        assert!(!path.is_empty(), "{tag}: traced ckpt has no critical path");
+        let sum: f64 = path.iter().map(|e| e.secs).sum();
+        if (sum - rep.total_secs).abs() > 1e-6 * rep.total_secs.max(1.0) {
+            eprintln!(
+                "{tag}: critical path sums to {sum:.6}s, report says {:.6}s",
+                rep.total_secs
+            );
+            mismatches += 1;
+        }
+        rows.push(
+            Json::obj()
+                .set("shape", tag)
+                .set("spans", spans.len() as u64)
+                .set("total_secs", rep.total_secs)
+                .set("critical_path_secs", sum)
+                .set("report_mismatches", errs.len() as u64)
+                .set("critical_path_top3", top_k_summary(&path, 3).as_str()),
+        );
+        println!(
+            "{tag}: {} spans, critical path: {}",
+            spans.len(),
+            top_k_summary(&path, 3)
+        );
+    }
+    (mismatches, rows)
+}
+
+fn main() {
+    let mut rep = Report::new(
+        "TRACE: 512-rank staged checkpoint, traced vs untraced wall-clock",
+        vec!["mode", "wall_min", "wall_mean", "overhead"],
+    );
+    let overhead = overhead_512(&mut rep);
+    let overhead_table = rep.finish_json();
+
+    let (mismatches, shape_rows) = reconcile_shapes();
+
+    // Perfetto export of a full traced run (checkpoint + restart) for the
+    // CI artifact: open in https://ui.perfetto.dev or chrome://tracing.
+    let cfg = base_cfg("export", true);
+    let (mut sim, _) = one_run(&cfg);
+    sim.run_steps(1).expect("post-ckpt step");
+    let pre = sim.tracer.clone();
+    let fs = sim.kill();
+    let (resumed, _rrep) =
+        JobSim::restart_from(cfg, None, fs).expect("traced restart");
+    resumed.tracer.adopt(&pre);
+    let spans = resumed.tracer.spans();
+    let counters = resumed.tracer.counters();
+    let json = trace::perfetto::export(&spans, &counters);
+    std::fs::write("trace.json", json.to_string()).expect("write trace.json");
+    println!(
+        "perfetto export: {} spans, {} counter samples -> trace.json",
+        spans.len(),
+        counters.len()
+    );
+
+    assert!(
+        mismatches == 0,
+        "span record failed to reproduce the checkpoint report \
+         ({mismatches} mismatches; see stderr)"
+    );
+    assert!(
+        overhead <= 1.03,
+        "tracing overhead {overhead:.3}x exceeds the 3% budget"
+    );
+
+    let out = Json::obj()
+        .set("bench", "trace")
+        .set(
+            "gates",
+            Json::obj()
+                .set("trace_overhead_512", overhead)
+                .set("trace_reconcile_mismatches", mismatches),
+        )
+        .set("rows", shape_rows)
+        .set("series", Json::Arr(vec![overhead_table]));
+    std::fs::write("BENCH_trace.json", out.to_string())
+        .expect("write BENCH_trace.json");
+    println!(
+        "TRACE OK: {overhead:.3}x overhead at 512 ranks, every report field \
+         re-derived from spans (results in BENCH_trace.json)"
+    );
+}

@@ -96,6 +96,64 @@ pub fn pipelined_write_stall(finish: &[f64], weights: &[u64], write_secs: f64) -
     t_free
 }
 
+/// The full per-rank timetable of one wave, for span tracing: the same
+/// arithmetic as [`finish_times`] + [`pipelined_write_stall`], but keeping
+/// every intermediate instant instead of only the final stall. All times
+/// are relative to the wave start.
+#[derive(Clone, Debug, Default)]
+pub struct WriteSchedule {
+    /// Per-rank encode interval `(start, finish)` on its worker's lane.
+    pub encode: Vec<(f64, f64)>,
+    /// Write-queue service slots in admission order:
+    /// `(rank, service_start, service_end)`.
+    pub service: Vec<(usize, f64, f64)>,
+}
+
+/// Replay the wave and return its timetable. Bitwise-consistent with the
+/// stall model: the last service slot's end equals
+/// [`pipelined_write_stall`] for the same inputs (asserted in tests), so
+/// spans emitted from this schedule reconcile exactly with the report.
+pub fn schedule(
+    costs: &[EncodeCost],
+    weights: &[u64],
+    workers: usize,
+    write_secs: f64,
+) -> WriteSchedule {
+    let n = costs.len();
+    let mut encode = vec![(0.0f64, 0.0f64); n];
+    if n == 0 {
+        return WriteSchedule::default();
+    }
+    let workers = workers.max(1);
+    let per = n.div_ceil(workers);
+    let mut finish = vec![0.0f64; n];
+    for (w, block) in costs.chunks(per).enumerate() {
+        let mut t = 0.0f64;
+        for (k, c) in block.iter().enumerate() {
+            let start = t;
+            t += encode_secs(c);
+            encode[w * per + k] = (start, t);
+            finish[w * per + k] = t;
+        }
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| finish[a].total_cmp(&finish[b]).then(a.cmp(&b)));
+    let total_w: u64 = weights.iter().sum();
+    let mut service = Vec::with_capacity(n);
+    let mut t_free = 0.0f64;
+    for &i in &order {
+        let share = if total_w == 0 {
+            write_secs / n as f64
+        } else {
+            write_secs * weights[i] as f64 / total_w as f64
+        };
+        let start = t_free.max(finish[i]);
+        t_free = start + share;
+        service.push((i, start, t_free));
+    }
+    WriteSchedule { encode, service }
+}
+
 /// The stall breakdown for one checkpoint wave.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct StallPlan {
@@ -196,6 +254,43 @@ mod tests {
         assert!(finish[0] > 1.0 && finish[2] > finish[1]);
         assert!(finish[3] < finish[0], "worker 1 is independent of rank 0");
         assert!((wall - finish[2]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn schedule_is_bitwise_consistent_with_the_stall_model() {
+        let c: Vec<EncodeCost> = (0..24)
+            .map(|i| EncodeCost {
+                hash_vbytes: ((i * 37) % 11 + 1) as u64 * 40_000_000,
+                copy_bytes: (i as u64 + 1) * 5_000_000,
+            })
+            .collect();
+        let w: Vec<u64> = (0..24u64).map(|i| (i % 5) * 1_000_000 + 1).collect();
+        for workers in [1usize, 3, 8, 24] {
+            let (finish, wall) = finish_times(&c, workers);
+            let stall = pipelined_write_stall(&finish, &w, 0.42);
+            let sched = schedule(&c, &w, workers, 0.42);
+            for (i, &(s, f)) in sched.encode.iter().enumerate() {
+                assert_eq!(f, finish[i], "finish {i} at {workers} workers");
+                assert!(s <= f);
+            }
+            let enc_wall = sched.encode.iter().map(|&(_, f)| f).fold(0.0, f64::max);
+            assert_eq!(enc_wall, wall);
+            // Admission order is non-decreasing in service start, every
+            // slot starts at/after its encode, and the tail IS the stall.
+            let mut prev_end = 0.0f64;
+            for &(rank, s, e) in &sched.service {
+                assert!(s >= prev_end - 1e-15);
+                assert!(s >= finish[rank]);
+                prev_end = e;
+            }
+            assert_eq!(prev_end, stall, "tail vs stall at {workers} workers");
+        }
+    }
+
+    #[test]
+    fn schedule_of_empty_wave_is_empty() {
+        let s = schedule(&[], &[], 4, 1.0);
+        assert!(s.encode.is_empty() && s.service.is_empty());
     }
 
     #[test]

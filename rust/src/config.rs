@@ -239,6 +239,12 @@ pub struct RunConfig {
     pub redundancy: RedundancyScheme,
     /// Nodes per redundancy set (`--redundancy-set-size`, >= 2).
     pub redundancy_set_size: u32,
+    /// Virtual-time span tracing (`--trace` / `--trace-out FILE`): record
+    /// a span per phase/encode/wave/drain into the job's
+    /// [`crate::trace::Tracer`], reconcile them against every
+    /// `CkptReport` timing field, and expose the critical path. The
+    /// structured event log is always on; this gates only spans/counters.
+    pub trace: bool,
 }
 
 impl RunConfig {
@@ -267,6 +273,7 @@ impl RunConfig {
             pipeline: true,
             redundancy: RedundancyScheme::None,
             redundancy_set_size: DEFAULT_SET_SIZE,
+            trace: false,
         }
     }
 

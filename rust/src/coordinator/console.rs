@@ -92,7 +92,8 @@ pub fn execute(sim: &mut JobSim, cmd: &Command) -> Reply {
                 )
                 .set("storage", sim.fs.describe())
                 .set("corruption", sim.any_corruption())
-                .set("metrics", sim.metrics.snapshot());
+                .set("metrics", sim.metrics.snapshot())
+                .set("events", sim.tracer.events_json());
             Reply::Text(j.to_string())
         }
         Command::Checkpoint => match sim.checkpoint() {
@@ -230,6 +231,7 @@ mod tests {
         assert!(t.contains("console-test"));
         assert!(t.contains("\"coord\":\"flat"), "{t}");
         assert!(t.contains("drain_counts_balanced"), "{t}");
+        assert!(t.contains("\"events\""), "{t}");
     }
 
     #[test]

@@ -37,10 +37,10 @@ pub mod tree;
 
 use std::fmt;
 
-use crate::log_warn;
 use crate::mem::guard::Guarded;
 use crate::simnet::control::{ControlNet, CtrlError};
 use crate::topology::RankId;
+use crate::trace::{EventCtx, Tracer};
 use crate::util::simclock::SimTime;
 
 /// The six checkpoint-protocol phases, in order.
@@ -187,6 +187,10 @@ pub trait CoordPlane {
         counts: &[(u64, u64)],
         now: SimTime,
     ) -> Result<CountReduce, CtrlError>;
+
+    /// Adopt the owning job's tracer so plane-internal fault paths
+    /// (re-parents, retries) emit structured events. Default: no-op.
+    fn set_tracer(&mut self, _tracer: Tracer) {}
 
     /// Tree depth in hops from root to a leaf rank (flat = 1).
     fn depth(&self) -> u32;
@@ -468,6 +472,8 @@ pub struct Coordinator {
     /// First rank found unreachable, with the phase that detected it.
     /// Once set, every later phase fails fast instead of re-timing-out.
     pub unreachable: Option<(RankId, Phase)>,
+    /// Shared span/event recorder (the owning job's).
+    pub tracer: Tracer,
 }
 
 impl Coordinator {
@@ -493,7 +499,14 @@ impl Coordinator {
             stats: CoordStats::default(),
             locks_fix,
             unreachable: None,
+            tracer: Tracer::disabled(),
         }
+    }
+
+    /// Adopt the owning job's tracer (and hand it to the plane too).
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.plane.set_tracer(tracer.clone());
+        self.tracer = tracer;
     }
 
     /// Flat-plane coordinator (the pre-tree default).
@@ -575,9 +588,11 @@ impl Coordinator {
 
     fn record_ctrl_error(&mut self, e: CtrlError, phase: Phase) -> CkptFailure {
         if let CtrlError::Unreachable { rank, .. } = e {
-            log_warn!(
+            self.tracer.warn(
                 "coordinator",
-                "{rank} unreachable in {phase} phase — marked; later phases fail fast"
+                format!("coord.unreachable:r{}", rank.0),
+                EventCtx::rank(rank.0),
+                format!("{rank} unreachable in {phase} phase — marked; later phases fail fast"),
             );
             self.unreachable = Some((rank, phase));
             return CkptFailure::Unreachable { rank, phase };

@@ -31,9 +31,9 @@
 use std::collections::BTreeMap;
 
 use super::{CoordGroup, CoordPlane, CountReduce, OverlapIo, Phase, PhaseIo};
-use crate::log_warn;
 use crate::simnet::control::{ControlNet, CtrlError};
 use crate::topology::{NodeId, RankId, Topology};
+use crate::trace::{EventCtx, Tracer};
 use crate::util::simclock::SimTime;
 
 /// One sub-coordinator (one per compute node at construction).
@@ -82,6 +82,8 @@ pub struct TreePlane {
     /// in — otherwise an adopted subtree's counters would be counted
     /// once under the dead parent and again under the adopter.
     epoch: u64,
+    /// Shared event recorder (the owning job's).
+    tracer: Tracer,
 }
 
 impl TreePlane {
@@ -121,6 +123,7 @@ impl TreePlane {
             pending_death,
             levels: 1,
             epoch: 0,
+            tracer: Tracer::disabled(),
         };
         plane.recompute_depth();
         debug_assert_eq!(plane.levels, topo.coord_levels(f as u32));
@@ -346,10 +349,14 @@ impl TreePlane {
             let Some(dead) = a.died else {
                 return Ok((total, stale_acks));
             };
-            log_warn!(
+            self.tracer.warn(
                 "coordinator",
-                "sub-coordinator sub{dead:03} died mid-{phase} — re-parenting its \
-                 subtree and retrying the phase"
+                format!("coord.reparent:sub{dead:03}"),
+                EventCtx::node(dead as u32),
+                format!(
+                    "sub-coordinator sub{dead:03} died mid-{phase} — re-parenting its \
+                     subtree and retrying the phase"
+                ),
             );
             stale_acks += self.subs[dead].ranks.len() as u64;
             self.reparent(dead);
@@ -434,6 +441,10 @@ impl CoordPlane for TreePlane {
             recv += cr;
         }
         Ok(CountReduce { sent, recv, io })
+    }
+
+    fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
     }
 
     fn depth(&self) -> u32 {

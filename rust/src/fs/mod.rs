@@ -496,6 +496,14 @@ impl Store {
         }
     }
 
+    /// Hand the owning job's tracer to the staged engine (drain ticks and
+    /// fault events join the job timeline). No-op for a single tier.
+    pub fn set_tracer(&mut self, tracer: crate::trace::Tracer) {
+        if let Store::Tiered(t) = self {
+            t.set_tracer(tracer);
+        }
+    }
+
     /// The active tier, viewed through the [`StorageTier`] trait — every
     /// generic operation below dispatches through this single point.
     fn tier(&self) -> &dyn StorageTier {

@@ -54,8 +54,9 @@ use super::{FileSystem, FsError, IoReport, StorageTier, WriteReq};
 use crate::ckpt::chunk::{ChunkRecipe, DEFAULT_CHUNK_BYTES};
 use crate::simnet::fabric::Fabric;
 use crate::topology::NodeId;
+use crate::trace::{EventCtx, Lane, Span, Tracer};
 use crate::util::digest::digest128;
-use crate::{log_debug, log_info, log_warn};
+use crate::{log_debug, log_info};
 
 /// Bytes a peer exchange must land before it can pipeline behind the
 /// fast-tier write wave (the fabric pipeline-fill chunk).
@@ -220,6 +221,9 @@ pub struct TieredStore {
     pending_losses: Vec<(NodeId, f64)>,
     /// Monotonic exchange counter (names redundancy artifact paths).
     exchanges: u64,
+    /// Shared span/event recorder (the owning job's; event-log-only until
+    /// [`TieredStore::set_tracer`] hands over the job's tracer).
+    tracer: Tracer,
 }
 
 impl TieredStore {
@@ -240,7 +244,20 @@ impl TieredStore {
             owners: BTreeMap::new(),
             pending_losses: Vec::new(),
             exchanges: 0,
+            tracer: Tracer::disabled(),
         }
+    }
+
+    /// Adopt the owning job's tracer: drain ticks and fault events land in
+    /// the same timeline as the checkpoint phases.
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
+    }
+
+    /// Handle on the store's tracer (shared state — clones are cheap), for
+    /// callers that hold the store but not the job.
+    pub fn tracer(&self) -> Tracer {
+        self.tracer.clone()
     }
 
     /// Rebuild a tiered store around surviving tiers — e.g. a durable tier
@@ -347,7 +364,12 @@ impl TieredStore {
         match self.durable.insert_raw(INDEX_PATH, vbytes, data) {
             Ok(()) => self.index_dirty = false,
             Err(e) => {
-                log_warn!("fs", "staged: chunk-index persist failed: {e} (will retry)");
+                self.tracer.warn(
+                    "fs",
+                    "fs.index_persist_failed",
+                    EventCtx::default().with_t(self.clock),
+                    format!("staged: chunk-index persist failed: {e} (will retry)"),
+                );
             }
         }
     }
@@ -440,10 +462,14 @@ impl TieredStore {
                 self.pending_losses.push((*n, at_secs));
             }
         } else {
-            log_warn!(
+            self.tracer.warn(
                 "fs",
-                "staged: set-loss index {set_idx} out of range ({} sets) — ignored",
-                sets.len()
+                format!("fs.set_loss_oob:s{set_idx}"),
+                EventCtx::default(),
+                format!(
+                    "staged: set-loss index {set_idx} out of range ({} sets) — ignored",
+                    sets.len()
+                ),
             );
         }
     }
@@ -459,10 +485,14 @@ impl TieredStore {
                     self.lose_node_now(n);
                 }
             }
-            None => log_warn!(
+            None => self.tracer.warn(
                 "fs",
-                "staged: set-loss index {set_idx} out of range ({} sets) — ignored",
-                sets.len()
+                format!("fs.set_loss_oob:s{set_idx}"),
+                EventCtx::default(),
+                format!(
+                    "staged: set-loss index {set_idx} out of range ({} sets) — ignored",
+                    sets.len()
+                ),
             ),
         }
     }
@@ -508,10 +538,14 @@ impl TieredStore {
             }
         }
         self.stats.lost_files += lost;
-        log_warn!(
+        self.tracer.error(
             "fs",
-            "staged: node {} fast tier lost ({lost} files destroyed)",
-            node.0
+            format!("fs.fast_tier_lost:n{}", node.0),
+            EventCtx::node(node.0).with_t(self.clock),
+            format!(
+                "staged: node {} fast tier lost ({lost} files destroyed)",
+                node.0
+            ),
         );
     }
 
@@ -587,11 +621,15 @@ impl TieredStore {
                                     out.parity_bytes += f.vbytes;
                                     f.copy = Some(copy_path);
                                 }
-                                Err(e) => log_warn!(
+                                Err(e) => self.tracer.warn(
                                     "fs",
-                                    "staged: partner copy of {} failed: {e} \
-                                     (file unprotected this generation)",
-                                    f.path
+                                    format!("fs.partner_copy_failed:{}", f.path),
+                                    EventCtx::node(holder.0),
+                                    format!(
+                                        "staged: partner copy of {} failed: {e} \
+                                         (file unprotected this generation)",
+                                        f.path
+                                    ),
                                 ),
                             }
                         }
@@ -627,10 +665,14 @@ impl TieredStore {
                                 parity_paths[j] = ppath;
                                 out.parity_bytes += parity_vbytes;
                             }
-                            Err(e) => log_warn!(
+                            Err(e) => self.tracer.warn(
                                 "fs",
-                                "staged: parity block {ppath} failed: {e} \
-                                 (set degraded this generation)"
+                                format!("fs.parity_failed:s{si}"),
+                                EventCtx::node(members[j].0),
+                                format!(
+                                    "staged: parity block {ppath} failed: {e} \
+                                     (set degraded this generation)"
+                                ),
                             ),
                         }
                     }
@@ -755,11 +797,18 @@ impl TieredStore {
                             }
                             if unrecoverable {
                                 out.unrecoverable_sets += 1;
-                                log_warn!(
+                                self.tracer.error(
                                     "fs",
-                                    "staged: partner-pair loss around node {} — \
-                                     falling back across tiers",
-                                    rec.members[x].0
+                                    format!(
+                                        "fs.rebuild_unrecoverable:n{}",
+                                        rec.members[x].0
+                                    ),
+                                    EventCtx::node(rec.members[x].0),
+                                    format!(
+                                        "staged: partner-pair loss around node {} — \
+                                         falling back across tiers",
+                                        rec.members[x].0
+                                    ),
                                 );
                             }
                         }
@@ -780,12 +829,16 @@ impl TieredStore {
                         });
                         if absent.len() >= 2 || !survivors_ok || !parity_ok {
                             out.unrecoverable_sets += 1;
-                            log_warn!(
+                            self.tracer.error(
                                 "fs",
-                                "staged: XOR set unrecoverable ({} lost members, \
-                                 survivors_ok={survivors_ok}, parity_ok={parity_ok}) — \
-                                 falling back across tiers",
-                                absent.len()
+                                format!("fs.rebuild_unrecoverable:n{}", rec.members[x].0),
+                                EventCtx::node(rec.members[x].0),
+                                format!(
+                                    "staged: XOR set unrecoverable ({} lost members, \
+                                     survivors_ok={survivors_ok}, parity_ok={parity_ok}) — \
+                                     falling back across tiers",
+                                    absent.len()
+                                ),
                             );
                             continue;
                         }
@@ -834,11 +887,15 @@ impl TieredStore {
                             }
                             if digest128(slice) != f.digest {
                                 out.unrecoverable_sets += 1;
-                                log_warn!(
+                                self.tracer.error(
                                     "fs",
-                                    "staged: XOR rebuild of {} failed content \
-                                     verification — falling back across tiers",
-                                    f.path
+                                    format!("fs.rebuild_verify_failed:{}", f.path),
+                                    EventCtx::node(rec.members[x].0),
+                                    format!(
+                                        "staged: XOR rebuild of {} failed content \
+                                         verification — falling back across tiers",
+                                        f.path
+                                    ),
                                 );
                                 continue;
                             }
@@ -902,8 +959,18 @@ impl TieredStore {
             return false;
         }
         self.unclaim(path);
+        let node = self.owners.get(path).map(|n| n.0);
         let _ = self.fast.delete(path);
-        log_warn!("fs", "staged: fast-tier copy of {path} marked invalid");
+        self.tracer.warn(
+            "fs",
+            format!("fs.fast_invalid:{path}"),
+            EventCtx {
+                node,
+                t: Some(self.clock),
+                ..Default::default()
+            },
+            format!("staged: fast-tier copy of {path} marked invalid"),
+        );
         true
     }
 
@@ -957,12 +1024,16 @@ impl TieredStore {
                 {
                     self.generations.pop_back();
                 }
-                log_warn!(
+                self.tracer.error(
                     "fs",
-                    "staged: insufficient fast-tier space even after eviction: \
-                     need {}, free {}",
-                    crate::util::bytes::human(needed),
-                    crate::util::bytes::human(self.fast.free_bytes())
+                    "fs.insufficient_space",
+                    EventCtx::default().with_t(self.clock),
+                    format!(
+                        "staged: insufficient fast-tier space even after eviction: \
+                         need {}, free {}",
+                        crate::util::bytes::human(needed),
+                        crate::util::bytes::human(self.fast.free_bytes())
+                    ),
                 );
                 // Forced drains during the failed eviction pass may have
                 // committed recipes — keep the persisted index current.
@@ -1061,10 +1132,12 @@ impl TieredStore {
         // the partially-drained-generation case.
         self.apply_due_losses(now_secs);
         let budget = (now_secs - self.clock).max(0.0);
+        let tick_t0 = self.clock.min(now_secs);
         self.clock = self.clock.max(now_secs);
         if self.queue.is_empty() {
             self.credit = 0.0;
             self.maybe_persist_index(); // retry a previously failed persist
+            self.sample_drain_gauges(now_secs);
             return DrainTick {
                 queue_empty: true,
                 ..DrainTick::default()
@@ -1124,7 +1197,24 @@ impl TieredStore {
             }
         }
         self.maybe_persist_index();
+        if tick.drained_bytes > 0 || tick.completed_files > 0 {
+            let _ = self.tracer.record(
+                Span::new("drain.tick", Lane::Drain, tick_t0, now_secs.max(tick_t0))
+                    .attr("drained_bytes", tick.drained_bytes)
+                    .attr("completed_files", tick.completed_files),
+            );
+        }
+        self.sample_drain_gauges(now_secs);
         tick
+    }
+
+    /// Sample the drain-backlog time series for the trace (no-ops unless
+    /// span recording is on).
+    fn sample_drain_gauges(&self, t: f64) {
+        self.tracer
+            .counter("drain.backlog_bytes", t, self.pending_bytes() as f64);
+        self.tracer
+            .counter("drain.queue_depth", t, self.queue.len() as f64);
     }
 
     /// Drain everything now; returns the durable-tier busy seconds.
@@ -1134,6 +1224,7 @@ impl TieredStore {
     pub fn drain_sync(&mut self) -> f64 {
         let bw = self.drain_bandwidth();
         let mut secs = 0.0;
+        let mut synced = 0u64;
         let mut failed = Vec::new();
         while let Some(item) = self.queue.pop_front() {
             if !self.complete_drain(&item) {
@@ -1141,12 +1232,20 @@ impl TieredStore {
                 continue;
             }
             secs += item.remaining as f64 / bw;
+            synced += item.remaining;
             self.stats.drained_bytes += item.remaining;
         }
         self.queue.extend(failed);
         self.credit = 0.0;
         self.stats.busy_secs += secs;
         self.maybe_persist_index();
+        if secs > 0.0 {
+            let _ = self.tracer.record(
+                Span::new("drain.sync", Lane::Drain, self.clock, self.clock + secs)
+                    .attr("drained_bytes", synced),
+            );
+        }
+        self.sample_drain_gauges(self.clock + secs);
         secs
     }
 
@@ -1157,10 +1256,11 @@ impl TieredStore {
     /// replaces. Returns whether a durable copy now exists.
     fn complete_drain(&mut self, item: &DrainItem) -> bool {
         let Some((virtual_bytes, data)) = self.fast.peek(&item.path) else {
-            log_warn!(
+            self.tracer.warn(
                 "fs",
-                "staged: drain source {} vanished — skipped",
-                item.path
+                format!("fs.drain_lost_source:{}", item.path),
+                EventCtx::default().with_t(self.clock),
+                format!("staged: drain source {} vanished — skipped", item.path),
             );
             self.stats.drain_errors += 1;
             return false;
@@ -1179,7 +1279,12 @@ impl TieredStore {
                     true
                 }
                 Err(e) => {
-                    log_warn!("fs", "staged: drain of {} failed: {e}", item.path);
+                    self.tracer.warn(
+                        "fs",
+                        format!("fs.drain_error:{}", item.path),
+                        EventCtx::default().with_t(self.clock),
+                        format!("staged: drain of {} failed: {e}", item.path),
+                    );
                     self.stats.drain_errors += 1;
                     false
                 }
@@ -1196,10 +1301,11 @@ impl TieredStore {
                         self.durable
                             .insert_raw(&object_path(c.digest), c.vbytes, bytes)
                     {
-                        log_warn!(
+                        self.tracer.warn(
                             "fs",
-                            "staged: chunk store object for {} failed: {e}",
-                            item.path
+                            format!("fs.drain_error:{}", item.path),
+                            EventCtx::default().with_t(self.clock),
+                            format!("staged: chunk store object for {} failed: {e}", item.path),
                         );
                         self.stats.drain_errors += 1;
                         return false;
@@ -1218,11 +1324,15 @@ impl TieredStore {
                 if self.durable.exists(&item.path) {
                     self.maybe_persist_index();
                     if self.index_dirty {
-                        log_warn!(
+                        self.tracer.warn(
                             "fs",
-                            "staged: keeping superseded plain copy of {} until the \
-                             chunk index persists",
-                            item.path
+                            format!("fs.superseded_kept:{}", item.path),
+                            EventCtx::default().with_t(self.clock),
+                            format!(
+                                "staged: keeping superseded plain copy of {} until the \
+                                 chunk index persists",
+                                item.path
+                            ),
                         );
                     } else {
                         let _ = self.durable.delete(&item.path);
@@ -1311,9 +1421,13 @@ impl TieredStore {
                 // or the recipe exists only in the unpersisted in-memory
                 // index: keep the fast copy rather than drop the only
                 // restart-reachable one.
-                log_warn!(
+                self.tracer.warn(
                     "fs",
-                    "staged: evictee {path} has no durable copy — kept on the fast tier"
+                    format!("fs.evictee_kept:{path}"),
+                    EventCtx::default().with_t(self.clock),
+                    format!(
+                        "staged: evictee {path} has no durable copy — kept on the fast tier"
+                    ),
                 );
                 kept.push(path.clone());
                 continue;

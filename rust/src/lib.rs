@@ -42,6 +42,7 @@ pub mod sim;
 pub mod simnet;
 pub mod splitproc;
 pub mod topology;
+pub mod trace;
 pub mod usage;
 pub mod util;
 pub mod wrappers;

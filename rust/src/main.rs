@@ -128,7 +128,11 @@ COMMANDS:
              [--encode-threads N] [--pipeline on|off] [--ckpt-at STEP]
              [--redundancy none|partner|xor] [--redundancy-set-size N]
              [--restart] [--real-compute] [--fixes on|off]
-             [--link static|dynamic]
+             [--link static|dynamic] [--trace] [--trace-out FILE]
+             --trace records virtual-time spans; the run JSON gains a
+             critical_path breakdown and the structured event log.
+             --trace-out (implies --trace) also writes a Perfetto /
+             chrome://tracing JSON file.
   usage      [--jobs N] print the Fig. 1 application census
   mapping    --ranks N [--threads T] print rank→node/pid mapping
   preempt    [--ranks N] run the preempt-queue scenario
@@ -253,6 +257,11 @@ fn build_config(args: &Args) -> Result<RunConfig> {
         cfg.mem_per_rank =
             Some(mana::util::bytes::parse(mem).context("bad --mem-per-rank")?);
     }
+    // Span tracing on the virtual clock; --trace-out implies --trace since
+    // there is nothing to export otherwise.
+    if args.get_bool("trace") || args.get("trace-out").is_some() {
+        cfg.trace = true;
+    }
     Ok(cfg)
 }
 
@@ -284,11 +293,15 @@ fn cmd_run(args: &Args) -> Result<()> {
                 .map_err(|e| anyhow::anyhow!("checkpoint failed: {e}"))?;
             ckpt_report = Some(rep);
             if do_restart {
+                // The restarted job gets a fresh tracer; adopt the pre-kill
+                // spans/events so the exported trace covers the whole run.
+                let pre = sim.tracer.clone();
                 let fs = sim.kill();
                 let (resumed, rrep) = JobSim::restart_from(cfg.clone(), engine, fs)
                     .map_err(|e| anyhow::anyhow!("restart failed: {e}"))?;
                 restart_report = Some(rrep);
                 sim = resumed;
+                sim.tracer.adopt(&pre);
             }
             sim.run_steps(cfg.steps - at)?;
         }
@@ -392,6 +405,31 @@ fn cmd_run(args: &Args) -> Result<()> {
                 .set("lost_files", ts.stats.lost_files)
                 .set("backpressure_secs", ts.stats.forced_secs),
         );
+    }
+    if cfg.trace {
+        let spans = sim.tracer.spans();
+        // Critical path of the most recent checkpoint generation: which
+        // spans the stall actually waited on, as [{span, secs, pct}].
+        if let Some(last_gen) = spans.iter().filter_map(|s| s.gen).max() {
+            let path = mana::trace::critical_path::critical_path(&spans, last_gen);
+            let mut arr = Json::Arr(vec![]);
+            for e in &path {
+                arr.push(
+                    Json::obj()
+                        .set("span", e.span.as_str())
+                        .set("count", e.count as u64)
+                        .set("secs", e.secs)
+                        .set("pct", e.pct),
+                );
+            }
+            out = out.set("critical_path", arr);
+        }
+        out = out.set("events", sim.tracer.events_json());
+        if let Some(path) = args.get("trace-out") {
+            let j = mana::trace::perfetto::export(&spans, &sim.tracer.counters());
+            std::fs::write(path, j.to_string())
+                .with_context(|| format!("writing --trace-out {path}"))?;
+        }
     }
     println!("{}", out.to_string());
     Ok(())

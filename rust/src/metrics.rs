@@ -10,13 +10,36 @@ use std::collections::BTreeMap;
 
 use crate::util::json::Json;
 
-/// Summary statistics of a repeatedly-observed duration/size.
+/// Number of power-of-two histogram buckets per [`Summary`]. Bucket `i`
+/// covers `[2^(i-32), 2^(i-31))` seconds/bytes — from sub-nanosecond to
+/// ~2 G, which brackets every duration and size the simulator observes.
+pub const HIST_BUCKETS: usize = 64;
+const HIST_EXP_BIAS: i32 = 32;
+
+fn bucket_of(v: f64) -> usize {
+    if !v.is_finite() || v <= 0.0 {
+        return 0;
+    }
+    let e = v.log2().floor() as i32;
+    (e + HIST_EXP_BIAS).clamp(0, HIST_BUCKETS as i32 - 1) as usize
+}
+
+/// Geometric midpoint of a bucket (the quantile estimate it contributes).
+fn bucket_mid(i: usize) -> f64 {
+    let e = i as i32 - HIST_EXP_BIAS;
+    2f64.powi(e) * std::f64::consts::SQRT_2
+}
+
+/// Summary statistics of a repeatedly-observed duration/size, with a
+/// fixed-bucket log2 histogram for streaming quantile estimates — no
+/// allocation on the observe path, constant memory per series.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Summary {
     pub count: u64,
     pub sum: f64,
     pub min: f64,
     pub max: f64,
+    hist: [u32; HIST_BUCKETS],
 }
 
 impl Summary {
@@ -30,6 +53,7 @@ impl Summary {
         }
         self.count += 1;
         self.sum += v;
+        self.hist[bucket_of(v)] += 1;
     }
 
     pub fn mean(&self) -> f64 {
@@ -38,6 +62,32 @@ impl Summary {
         } else {
             self.sum / self.count as f64
         }
+    }
+
+    /// Streaming quantile estimate (`q` in 0..=1) from the log2 histogram:
+    /// exact to within a factor of √2, clamped into the observed
+    /// `[min, max]` so small-count series stay sensible.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.hist.iter().enumerate() {
+            seen += c as u64;
+            if seen >= target {
+                return bucket_mid(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
     }
 }
 
@@ -92,7 +142,9 @@ impl Metrics {
                     .set("count", s.count)
                     .set("mean", s.mean())
                     .set("min", s.min)
-                    .set("max", s.max),
+                    .set("max", s.max)
+                    .set("p50", s.p50())
+                    .set("p99", s.p99()),
             );
         }
         Json::obj()
@@ -126,6 +178,37 @@ mod tests {
         assert_eq!(s.min, 2.0);
         assert_eq!(s.max, 8.0);
         assert!((s.mean() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles_estimate_within_a_bucket() {
+        let mut m = Metrics::new();
+        // 98 fast observations around 1 ms, two slow outliers at ~1 s.
+        for _ in 0..98 {
+            m.observe("t", 1.0e-3);
+        }
+        m.observe("t", 1.3);
+        m.observe("t", 1.3);
+        let s = m.summary("t");
+        // p50 lands in the 1 ms bucket (within the √2 bucket factor)…
+        assert!(s.p50() >= 0.5e-3 && s.p50() <= 2.0e-3, "p50 {}", s.p50());
+        // …and p99 must see the tail, not the median.
+        assert!(s.p99() >= 0.5, "p99 {}", s.p99());
+        // Quantiles clamp into the observed range.
+        assert!(s.quantile(0.0) >= s.min && s.quantile(1.0) <= s.max);
+        assert_eq!(Summary::default().p99(), 0.0);
+    }
+
+    #[test]
+    fn quantile_handles_nonpositive_and_huge_values() {
+        let mut m = Metrics::new();
+        m.observe("t", 0.0);
+        m.observe("t", -5.0);
+        m.observe("t", 1.0e30);
+        let s = m.summary("t");
+        assert_eq!(s.count, 3);
+        // Degenerate inputs stay clamped to the observed range.
+        assert!(s.p50() >= s.min && s.p50() <= s.max);
     }
 
     #[test]

@@ -44,10 +44,11 @@ use crate::simnet::control::{ControlNet, CtrlConfig};
 use crate::simnet::fabric::{Fabric, FabricConfig};
 use crate::splitproc::{SplitConfig, SplitProcess};
 use crate::topology::{NodeId, RankId, Topology};
+use crate::trace::{self, EventCtx, Lane, Span, SpanId, Tracer};
 use crate::util::hash_combine;
 use crate::util::simclock::SimTime;
 use crate::wrappers::{ManaWrappers, WrapperConfig};
-use crate::{log_info, log_warn};
+use crate::log_info;
 
 /// Synthetic high address where the drained-message buffer region lives.
 const MSG_BUFFER_BASE: u64 = 0x6f00_0000_0000;
@@ -130,6 +131,9 @@ pub struct JobSim {
     pub comms: CommRegistry,
     /// Observability registry (counters/gauges/summaries).
     pub metrics: crate::metrics::Metrics,
+    /// Span recorder + structured event log on the virtual clock. Events
+    /// are always captured; spans/counters only when `cfg.trace` is on.
+    pub tracer: Tracer,
     /// Supersteps completed (all ranks agree outside a superstep).
     pub step: u64,
     /// Halo messages that were expected but lost (undrained checkpoint).
@@ -155,7 +159,7 @@ impl JobSim {
     pub fn launch_with_fs(
         cfg: RunConfig,
         engine: Option<Arc<Engine>>,
-        fs: Store,
+        mut fs: Store,
     ) -> Result<JobSim> {
         if cfg.compute == ComputeMode::Real {
             anyhow::ensure!(
@@ -200,7 +204,10 @@ impl JobSim {
             },
             cfg.ranks,
         );
-        let coord = Self::make_coordinator(&cfg, &topo);
+        let tracer = Tracer::new(cfg.trace);
+        fs.set_tracer(tracer.clone());
+        let mut coord = Self::make_coordinator(&cfg, &topo);
+        coord.set_tracer(tracer.clone());
         let times = vec![SimTime::secs(launch.startup_secs); cfg.ranks as usize];
 
         // Applications dup WORLD and split node-local communicators at
@@ -227,6 +234,7 @@ impl JobSim {
             engine,
             comms,
             metrics: crate::metrics::Metrics::new(),
+            tracer,
             step: 0,
             lost_halo_events: 0,
             launch_startup_secs: launch.startup_secs,
@@ -343,10 +351,14 @@ impl JobSim {
                         None => {
                             self.lost_halo_events += 1;
                             self.procs[r as usize].corrupted = true;
-                            log_warn!(
+                            self.tracer.warn(
                                 "sim",
-                                "{rank}: halo of step {} lost (undrained checkpoint?) — data loss",
-                                step - 1
+                                "sim.halo_lost",
+                                EventCtx::rank(r).with_t(self.times[r as usize].as_secs()),
+                                format!(
+                                    "{rank}: halo of step {} lost (undrained checkpoint?) — data loss",
+                                    step - 1
+                                ),
                             );
                         }
                     }
@@ -416,6 +428,10 @@ impl JobSim {
         let now = self.now().as_secs();
         if let Store::Tiered(ts) = &mut self.fs {
             let tick = ts.drain_to(now);
+            let backlog = ts.pending_bytes();
+            let depth = ts.pending_files();
+            self.metrics.gauge("drain.backlog_bytes", backlog as f64);
+            self.metrics.gauge("drain.queue_depth", depth as f64);
             if tick.drained_bytes > 0 {
                 self.coord.stats.staged_bytes += tick.drained_bytes;
                 self.metrics.inc("drain.bytes", tick.drained_bytes);
@@ -504,6 +520,12 @@ impl JobSim {
         let t0 = self.now();
         let pipelined = self.cfg.pipeline;
         report.pipelined = pipelined;
+        let gen = self.ckpt_gen;
+        let tr = self.tracer.clone();
+        // Span chain: each protocol step depends on the previous one, so
+        // the critical-path walk can telescope the whole checkpoint stall.
+        // Assigned on both arms of the intent/safepoint split below.
+        let mut prev: Option<SpanId>;
 
         // Phases 1+2: INTENT and SAFE-POINT. Pipelined, the SAFE-POINT
         // broadcast starts down the tree while the INTENT reduce is still
@@ -539,12 +561,33 @@ impl JobSim {
             report.stale_acks = o.stale_acks;
             report.overlap_saved_secs += (o.first.secs + o.second.secs) - o.secs;
             t = t0.after(o.secs);
+            let intent_id = tr.record(
+                Span::new("intent", Lane::Ctrl, t0.as_secs(), t0.as_secs() + o.first.secs)
+                    .gen(gen)
+                    .attr("fused", true),
+            );
+            prev = tr
+                .record(
+                    Span::new(
+                        "safepoint",
+                        Lane::Ctrl,
+                        t.as_secs() - o.second.secs,
+                        t.as_secs(),
+                    )
+                    .gen(gen)
+                    .dep_opt(intent_id)
+                    .attr("fused", true),
+                )
+                .or(intent_id);
         } else {
             // Phase 1: INTENT over the coordination plane.
             let pio = self.coord.phase_exchange(Phase::Intent, t0)?;
             absorb_phase(&mut report, pio);
             report.intent_secs = pio.secs;
             t = t0.after(pio.secs);
+            let intent_id = tr.record(
+                Span::new("intent", Lane::Ctrl, t0.as_secs(), t.as_secs()).gen(gen),
+            );
 
             // Fault window: a status update lands right here; without the
             // locks fix it is interruptible.
@@ -565,10 +608,18 @@ impl JobSim {
                     self.wrappers.retire_completed(rank, self.times[r as usize]);
                 }
             }
+            let sp_t0 = t.as_secs();
             let pio = self.coord.phase_exchange(Phase::SafePoint, t)?;
             absorb_phase(&mut report, pio);
             report.safepoint_secs = pio.secs;
             t = t.after(pio.secs);
+            prev = tr
+                .record(
+                    Span::new("safepoint", Lane::Ctrl, sp_t0, t.as_secs())
+                        .gen(gen)
+                        .dep_opt(intent_id),
+                )
+                .or(intent_id);
         }
 
         // Phase 3: DRAIN (or the legacy drop).
@@ -596,9 +647,11 @@ impl JobSim {
             report.lost_messages = lost;
             self.coord.stats.lost_messages += lost as u64;
             if lost > 0 {
-                log_warn!(
+                tr.warn(
                     "coordinator",
-                    "checkpoint without drain dropped {lost} in-flight messages"
+                    "ckpt.undrained_drop",
+                    EventCtx::default().with_gen(gen).with_t(t.as_secs()),
+                    format!("checkpoint without drain dropped {lost} in-flight messages"),
                 );
             }
         }
@@ -608,6 +661,15 @@ impl JobSim {
             *tt = t_sync;
         }
         t = t.max(t_sync);
+        prev = tr
+            .record(
+                Span::new("drain.msgs", Lane::Phase, drain_t0.as_secs(), t_sync.as_secs())
+                    .gen(gen)
+                    .dep_opt(prev)
+                    .attr("rounds", report.drain_rounds)
+                    .attr("buffered_msgs", report.buffered_msgs),
+            )
+            .or(prev);
         let mut drain_secs = t_sync.as_secs() - drain_t0.as_secs();
         if self.cfg.fixes.drain {
             // The paper's convergence test over the plane: Σsent == Σrecv,
@@ -619,6 +681,7 @@ impl JobSim {
                 .iter()
                 .map(|c| (c.sent_bytes, c.recv_bytes))
                 .collect();
+            let t_red0 = t.as_secs();
             let (balanced, pio) = self.coord.drain_reduce(&counts, t)?;
             absorb_phase(&mut report, pio);
             if !balanced {
@@ -630,21 +693,43 @@ impl JobSim {
                 *tt = t;
             }
             drain_secs += pio.secs;
+            prev = tr
+                .record(
+                    Span::new("drain.reduce", Lane::Ctrl, t_red0, t.as_secs())
+                        .gen(gen)
+                        .dep_opt(prev),
+                )
+                .or(prev);
         }
         report.drain_secs = drain_secs;
 
         // Phase 4: GNI quiescence wait, then the all-clear over the plane.
         if let Some(end) = self.world.fabric.quiescence_end(t) {
             report.quiesce_secs = end.as_secs() - t.as_secs();
+            prev = tr
+                .record(
+                    Span::new("quiesce.fabric", Lane::Phase, t.as_secs(), end.as_secs())
+                        .gen(gen)
+                        .dep_opt(prev),
+                )
+                .or(prev);
             t = end;
             for tt in &mut self.times {
                 *tt = t;
             }
         }
+        let t_q0 = t.as_secs();
         let pio = self.coord.phase_exchange(Phase::Quiesce, t)?;
         absorb_phase(&mut report, pio);
         report.quiesce_secs += pio.secs;
         t = t.after(pio.secs);
+        prev = tr
+            .record(
+                Span::new("quiesce", Lane::Ctrl, t_q0, t.as_secs())
+                    .gen(gen)
+                    .dep_opt(prev),
+            )
+            .or(prev);
 
         // Phase 5: WRITE the image wave. Incremental mode: once a full
         // image exists, write only dirty regions (ParentRef the rest) to a
@@ -655,8 +740,10 @@ impl JobSim {
             self.coord
                 .set_rank_state(RankId(r), RankState::Writing, false);
         }
+        let t_w0 = t.as_secs();
         let write_pio = self.coord.phase_exchange(Phase::Write, t)?;
         absorb_phase(&mut report, write_pio);
+        let ack_up = (write_pio.secs - write_pio.down_secs).max(0.0);
         if pipelined {
             // Only the broadcast's down-sweep gates the wave; the ack
             // reduce climbs back up while the ranks are already writing,
@@ -665,6 +752,31 @@ impl JobSim {
         } else {
             t = t.after(write_pio.secs);
         }
+        // Virtual instant the write wave opens (and, pipelined, the ack
+        // up-sweep starts climbing concurrently with it).
+        let t_wave = t.as_secs();
+        let (wctrl_id, ack_id) = if pipelined {
+            let bcast = tr.record(
+                Span::new("write.bcast", Lane::Ctrl, t_w0, t_wave)
+                    .gen(gen)
+                    .dep_opt(prev),
+            );
+            let ack = tr.record(
+                Span::new("write.ack", Lane::Ctrl, t_wave, t_wave + ack_up)
+                    .gen(gen)
+                    .dep_opt(bcast),
+            );
+            (bcast, ack)
+        } else {
+            (
+                tr.record(
+                    Span::new("write.ctrl", Lane::Ctrl, t_w0, t_wave)
+                        .gen(gen)
+                        .dep_opt(prev),
+                ),
+                None,
+            )
+        };
         let incremental = self.cfg.incremental
             && (self.last_full_gen.is_some()
                 || (self.cfg.staging.is_none()
@@ -819,16 +931,124 @@ impl JobSim {
         if pipelined {
             report.stall_secs = plan.pipelined_stall;
             report.overlap_saved_secs += plan.overlap_saved();
-            let up = (write_pio.secs - write_pio.down_secs).max(0.0);
-            let hidden = up.min(plan.pipelined_stall);
+            let hidden = ack_up.min(plan.pipelined_stall);
             report.overlap_saved_secs += hidden;
-            t = t.after(plan.pipelined_stall + (up - hidden));
+            t = t.after(plan.pipelined_stall + (ack_up - hidden));
         } else {
             report.stall_secs = plan.serial_stall;
             t = t.after(plan.serial_stall);
         }
         for tt in &mut self.times {
             *tt = t;
+        }
+
+        // Trace the data path: per-rank encode slots and the write-queue
+        // service timeline come from the same deterministic schedule that
+        // charged the stall, so spans and report agree to within a few
+        // ulps of float re-association (absorbed by RECONCILE_EPS).
+        let mut wtail: Vec<SpanId> = Vec::new();
+        if tr.spans_on() {
+            let sched =
+                pipeline::schedule(&costs, &weights, dstats.threads.max(1), io.duration);
+            let mut enc_ids: Vec<Option<SpanId>> = vec![None; n_jobs];
+            let mut enc_last: Option<SpanId> = None;
+            let mut enc_end = f64::NEG_INFINITY;
+            for (i, &(s, f)) in sched.encode.iter().enumerate() {
+                let rank = RankId(i as u32);
+                let id = tr.record(
+                    Span::new("encode", Lane::Encode, t_wave + s, t_wave + f)
+                        .gen(gen)
+                        .rank(i as u32)
+                        .node(self.topo.node_of(rank).0)
+                        .dep_opt(wctrl_id),
+                );
+                enc_ids[i] = id;
+                if f >= enc_end {
+                    enc_end = f;
+                    enc_last = id;
+                }
+            }
+            // Serial mode, the wave only opens once every encode is done.
+            let wave_t0 = if pipelined {
+                t_wave
+            } else {
+                t_wave + plan.encode_secs
+            };
+            let wave_id = tr.record(
+                Span::new("write.wave", Lane::Storage, wave_t0, wave_t0 + io.duration)
+                    .gen(gen)
+                    .dep_opt(if pipelined { wctrl_id } else { enc_last })
+                    .attr("bytes", total_virtual),
+            );
+            if staged {
+                let _ = tr.record(
+                    Span::new(
+                        "write.wave.fast",
+                        Lane::Storage,
+                        wave_t0,
+                        wave_t0 + report.fast_write_secs,
+                    )
+                    .gen(gen)
+                    .dep_opt(wave_id),
+                );
+                if report.durable_write_secs > 0.0 {
+                    let _ = tr.record(
+                        Span::new(
+                            "write.wave.backpressure",
+                            Lane::Storage,
+                            wave_t0 + report.fast_write_secs,
+                            wave_t0 + report.fast_write_secs + report.durable_write_secs,
+                        )
+                        .gen(gen)
+                        .dep_opt(wave_id),
+                    );
+                }
+            } else if report.durable_write_secs > 0.0 {
+                let _ = tr.record(
+                    Span::new("write.wave.durable", Lane::Storage, wave_t0, wave_t0 + io.duration)
+                        .gen(gen)
+                        .dep_opt(wave_id),
+                );
+            } else {
+                let _ = tr.record(
+                    Span::new("write.wave.fast", Lane::Storage, wave_t0, wave_t0 + io.duration)
+                        .gen(gen)
+                        .dep_opt(wave_id),
+                );
+            }
+            let stall_dep = if pipelined {
+                // Write-queue service slots in admission order; the last
+                // slot's end snaps onto the stall envelope's clamp so the
+                // queue timeline and the charged stall meet exactly.
+                let mut q_prev = wctrl_id;
+                let n_srv = sched.service.len();
+                for (j, &(ri, s, e)) in sched.service.iter().enumerate() {
+                    let t1 = if j + 1 == n_srv {
+                        t_wave + plan.pipelined_stall
+                    } else {
+                        t_wave + e
+                    };
+                    q_prev = tr
+                        .record(
+                            Span::new("write.q", Lane::WriteQueue, t_wave + s, t1)
+                                .gen(gen)
+                                .rank(ri as u32)
+                                .dep_opt(enc_ids[ri])
+                                .dep_opt(q_prev),
+                        )
+                        .or(q_prev);
+                }
+                q_prev
+            } else {
+                wave_id
+            };
+            let stall_id = tr.record(
+                Span::new("write.stall", Lane::Phase, t_wave, t_wave + report.stall_secs)
+                    .gen(gen)
+                    .dep_opt(stall_dep)
+                    .dep_opt(if pipelined { enc_last } else { None }),
+            );
+            wtail = ack_id.into_iter().chain(stall_id).collect();
         }
 
         // Full checkpoints reset the dirty tracking (incrementals are
@@ -891,9 +1111,17 @@ impl JobSim {
                     report.durable_write_secs += msio.backpressure_secs;
                     report.durable_bytes += msio.durable_bytes;
                     report.write_secs += msio.backpressure_secs;
+                    let tm0 = t.as_secs();
                     t = t.after(msio.backpressure_secs);
                     for tt in &mut self.times {
                         *tt = t;
+                    }
+                    if let Some(id) = tr.record(
+                        Span::new("write.manifest", Lane::Storage, tm0, t.as_secs())
+                            .gen(gen)
+                            .deps(&wtail),
+                    ) {
+                        wtail = vec![id];
                     }
                 }
                 // Redundancy exchange: after the manifest wave, so the
@@ -908,9 +1136,18 @@ impl JobSim {
                     report.exchange_secs = ex.exchange_secs;
                     report.parity_bytes = ex.parity_bytes;
                     report.write_secs += ex.exchange_secs;
+                    let tx0 = t.as_secs();
                     t = t.after(ex.exchange_secs);
                     for tt in &mut self.times {
                         *tt = t;
+                    }
+                    if let Some(id) = tr.record(
+                        Span::new("write.exchange", Lane::Exchange, tx0, t.as_secs())
+                            .gen(gen)
+                            .deps(&wtail)
+                            .attr("parity_bytes", ex.parity_bytes),
+                    ) {
+                        wtail = vec![id];
                     }
                 }
             }
@@ -922,10 +1159,16 @@ impl JobSim {
 
         // Phase 6: RESUME — in staged mode, into the async Drain-to-PFS
         // phase: ranks compute again while their images go durable.
+        let t_r0 = t.as_secs();
         let pio = self.coord.phase_exchange(Phase::Resume, t)?;
         absorb_phase(&mut report, pio);
         report.resume_secs = pio.secs;
         t = t.after(pio.secs);
+        let _ = tr.record(
+            Span::new("resume", Lane::Ctrl, t_r0, t.as_secs())
+                .gen(gen)
+                .deps(&wtail),
+        );
         let pending = self.fs.tiered().map_or(0, |ts| ts.pending_bytes());
         report.drain_pending_bytes = pending;
         // A fully-deduped generation can have zero pending *bytes* while
@@ -952,6 +1195,24 @@ impl JobSim {
         self.coord.stats.buffered_msgs += report.buffered_msgs as u64;
         self.coord.stats.deduped_bytes += report.deduped_bytes;
         report.total_secs = t.as_secs() - t0.as_secs();
+        let _ = tr.record(
+            Span::new("ckpt", Lane::Phase, t0.as_secs(), t.as_secs())
+                .gen(gen)
+                .attr("ranks", self.cfg.ranks)
+                .attr("pipelined", pipelined),
+        );
+        // Reconcile the report against its own trace; a mismatch is an
+        // accounting bug and surfaces as a structured error event.
+        if tr.spans_on() {
+            for m in trace::reconcile(&tr.spans(), gen, &report) {
+                tr.error(
+                    "trace",
+                    format!("trace.reconcile:g{gen}"),
+                    EventCtx::default().with_gen(gen),
+                    m,
+                );
+            }
+        }
         self.metrics.inc("checkpoints", 1);
         self.metrics.observe("ckpt.total_secs", report.total_secs);
         self.metrics.observe("ckpt.write_secs", report.write_secs);
@@ -1021,6 +1282,10 @@ impl JobSim {
     ) -> Result<(JobSim, RestartReport), RestartError> {
         let topo = Topology::new(cfg.ranks, cfg.threads_per_rank);
         let mut report = RestartReport::default();
+        // The tracer goes onto the store before the loss/rebuild pass so
+        // restart-time fault events land in the job's event log.
+        let tracer = Tracer::new(cfg.trace);
+        fs.set_tracer(tracer.clone());
 
         // Staged mode: reload + verify the persisted durable-tier chunk
         // index before any recipe-backed read — durable-only restart must
@@ -1094,11 +1359,14 @@ impl JobSim {
                     );
                     cfg.chunk_bytes = mb;
                 } else {
-                    log_warn!(
+                    tracer.warn(
                         "sim",
-                        "restart {}: ignoring invalid manifest chunk granularity {}",
-                        cfg.job,
-                        manifest.chunk_bytes
+                        "restart.bad_manifest_chunk",
+                        EventCtx::default(),
+                        format!(
+                            "restart {}: ignoring invalid manifest chunk granularity {}",
+                            cfg.job, manifest.chunk_bytes
+                        ),
                     );
                 }
             }
@@ -1148,20 +1416,28 @@ impl JobSim {
                         // manifest carrying a non-canonical triple is
                         // honored in mode and granularity but normalized.
                         if cfg.chunking_strategy() != mc {
-                            log_warn!(
+                            tracer.warn(
                                 "sim",
-                                "restart {}: manifest CDC parameters were \
-                                 non-canonical; normalized to {}",
-                                cfg.job,
-                                cfg.chunking_strategy().describe()
+                                "restart.noncanonical_cdc",
+                                EventCtx::default(),
+                                format!(
+                                    "restart {}: manifest CDC parameters were \
+                                     non-canonical; normalized to {}",
+                                    cfg.job,
+                                    cfg.chunking_strategy().describe()
+                                ),
                             );
                         }
                     } else {
-                        log_warn!(
+                        tracer.warn(
                             "sim",
-                            "restart {}: ignoring invalid manifest chunking {}",
-                            cfg.job,
-                            mc.describe()
+                            "restart.bad_manifest_chunking",
+                            EventCtx::default(),
+                            format!(
+                                "restart {}: ignoring invalid manifest chunking {}",
+                                cfg.job,
+                                mc.describe()
+                            ),
                         );
                     }
                 }
@@ -1243,12 +1519,15 @@ impl JobSim {
                             // The rewound set is a full checkpoint; newer
                             // parents are not to be trusted.
                             last_full_gen = Some(g);
-                            log_warn!(
+                            tracer.error(
                                 "sim",
-                                "restart {}: generation {newest} unrecoverable on \
-                                 every tier — rewound {} generation(s) to {g}",
-                                cfg.job,
-                                report.generation_rewound
+                                "restart.gen_rewind",
+                                EventCtx::default().with_gen(g),
+                                format!(
+                                    "restart {}: generation {newest} unrecoverable on \
+                                     every tier — rewound {} generation(s) to {g}",
+                                    cfg.job, report.generation_rewound
+                                ),
                             );
                             found = Some(imgs);
                             break;
@@ -1311,8 +1590,39 @@ impl JobSim {
         let app = apps::make_app(cfg.app);
         let world = MpiWorld::new(cfg.ranks, Self::make_fabric(&cfg));
         let mut coord = Self::make_coordinator(&cfg, &topo);
+        coord.set_tracer(tracer.clone());
         coord.stats.restarts += 1;
         report.total_secs = report.startup_secs + report.read_secs + report.rebuild_secs;
+        // Restart timeline spans: rebuild → startup → read, summing to the
+        // restart's total (the virtual clock starts at 0 for a fresh job).
+        if tracer.spans_on() {
+            let rb = tracer.record(
+                Span::new("restart.rebuild", Lane::Restart, 0.0, report.rebuild_secs)
+                    .attr("files", report.rebuilt_files),
+            );
+            let st = tracer.record(
+                Span::new(
+                    "restart.startup",
+                    Lane::Restart,
+                    report.rebuild_secs,
+                    report.rebuild_secs + report.startup_secs,
+                )
+                .dep_opt(rb),
+            );
+            let rd = tracer.record(
+                Span::new(
+                    "restart.read",
+                    Lane::Restart,
+                    report.rebuild_secs + report.startup_secs,
+                    report.total_secs,
+                )
+                .dep_opt(st)
+                .attr("tier_fallbacks", report.tier_fallbacks),
+            );
+            let _ = tracer.record(
+                Span::new("restart", Lane::Restart, 0.0, report.total_secs).dep_opt(rd),
+            );
+        }
         let t0 = SimTime::secs(report.total_secs);
         // The surviving store's drain clock sits on the killed job's
         // timeline; rebase it to the restarted clock so an interrupted
@@ -1353,6 +1663,7 @@ impl JobSim {
                     m.observe("restart.read_secs", report.read_secs);
                     m
                 },
+                tracer,
                 step: job_step,
                 lost_halo_events: 0,
                 launch_startup_secs: report.startup_secs,
@@ -1499,10 +1810,14 @@ fn decode_with_tier_fallback(
         // durable tier (or nowhere), so there is nothing left to try.
         return Err(RestartError::CorruptImage(rank, e));
     }
-    log_warn!(
+    ts.tracer().warn(
         "sim",
-        "{rank}: fast-tier image {path} failed validation ({e}) — \
-         attempting peer rebuild, then the durable tier"
+        format!("restart.crc_fallback:r{}", rank.0),
+        EventCtx::rank(rank.0),
+        format!(
+            "{rank}: fast-tier image {path} failed validation ({e}) — \
+             attempting peer rebuild, then the durable tier"
+        ),
     );
     // Peer rebuild first: a partner copy or XOR reconstruction restores
     // the invalidated file without touching the durable tier.
@@ -2604,5 +2919,104 @@ mod tests {
             "restart must adopt the scheme the set was written with"
         );
         assert_eq!(resumed.cfg.redundancy_set_size, 4);
+    }
+
+    // ------------------------------------------------------------ tracing
+
+    #[test]
+    fn trace_reconciles_report_across_random_shapes() {
+        crate::proptest::run("trace reconciles report", 10, |g| {
+            let mut cfg = match g.u64_below(3) {
+                1 => staged_cfg([2u32, 4, 8][g.u64_below(3) as usize], 0),
+                2 => redundant_cfg(*g.choose(&[
+                    RedundancyScheme::Partner,
+                    RedundancyScheme::Xor,
+                ])),
+                _ => quick_cfg([2u32, 4, 8][g.u64_below(3) as usize], 0),
+            };
+            cfg.trace = true;
+            cfg.pipeline = g.bool();
+            if g.bool() {
+                cfg = cfg.with_coord_tree(2 + g.u64_below(3) as u32);
+            }
+            if g.bool() {
+                cfg.fixes.drain = false;
+            }
+            let mut sim = JobSim::launch(cfg, None).unwrap();
+            sim.run_steps(1 + g.u64_below(2)).unwrap();
+            let rep = sim.checkpoint().unwrap();
+            let spans = sim.tracer.spans();
+            let mismatches = crate::trace::reconcile(&spans, 0, &rep);
+            assert!(mismatches.is_empty(), "trace/report drift: {mismatches:?}");
+            assert_eq!(sim.tracer.event_count("trace.reconcile:g0"), 0);
+            // The critical path's charges telescope to the whole stall.
+            let path = crate::trace::critical_path::critical_path(&spans, 0);
+            assert!(!path.is_empty());
+            let sum: f64 = path.iter().map(|p| p.secs).sum();
+            assert!(
+                (sum - rep.total_secs).abs() < 1e-6,
+                "critical path sums to {sum}, checkpoint took {}",
+                rep.total_secs
+            );
+        });
+    }
+
+    #[test]
+    fn trace_off_records_no_spans_but_events_still_flow() {
+        let mut cfg = quick_cfg(4, 0);
+        cfg.fixes.drain = false;
+        let mut sim = JobSim::launch(cfg, None).unwrap();
+        sim.run_steps(3).unwrap();
+        let rep = sim.checkpoint().unwrap();
+        assert!(rep.lost_messages > 0);
+        assert_eq!(sim.tracer.span_count(), 0, "tracing defaults off");
+        assert!(
+            sim.tracer.event_count("ckpt.undrained_drop") > 0,
+            "structured events are always on"
+        );
+    }
+
+    #[test]
+    fn traced_restart_records_timeline_spans() {
+        let mut cfg = staged_cfg(4, 0);
+        cfg.trace = true;
+        let mut sim = JobSim::launch(cfg, None).unwrap();
+        sim.run_steps(2).unwrap();
+        sim.checkpoint().unwrap();
+        sim.finish_drain();
+        let cfg2 = sim.cfg.clone();
+        let fs = sim.kill();
+        let (resumed, rrep) = JobSim::restart_from(cfg2, None, fs).unwrap();
+        let spans = resumed.tracer.spans();
+        let restart: Vec<_> = spans.iter().filter(|s| s.name == "restart").collect();
+        assert_eq!(restart.len(), 1);
+        assert!((restart[0].duration() - rrep.total_secs).abs() < 1e-9);
+        assert!(spans.iter().any(|s| s.name == "restart.read"));
+        assert!(spans.iter().any(|s| s.name == "restart.startup"));
+    }
+
+    #[test]
+    fn traced_drain_emits_ticks_and_gauges() {
+        let mut cfg = staged_cfg(4, 0);
+        cfg.trace = true;
+        let mut sim = JobSim::launch(cfg, None).unwrap();
+        sim.run_steps(2).unwrap();
+        sim.checkpoint().unwrap();
+        sim.run_steps(6).unwrap();
+        sim.finish_drain();
+        let spans = sim.tracer.spans();
+        assert!(
+            spans
+                .iter()
+                .any(|s| s.name == "drain.tick" || s.name == "drain.sync"),
+            "background drain must appear in the trace"
+        );
+        assert!(
+            sim.tracer
+                .counters()
+                .iter()
+                .any(|c| c.name == "drain.backlog_bytes"),
+            "drain gauges must be sampled as counter series"
+        );
     }
 }

@@ -1,0 +1,189 @@
+//! Critical-path extraction over the span DAG.
+//!
+//! The checkpoint's bench gate ("stall ≤ 1.15 × max(encode, write)") says
+//! *whether* the pipeline is healthy; this module says *why not* when it
+//! isn't. Starting from the terminal span of a generation (RESUME), walk
+//! the dependency edges backwards, always following the predecessor that
+//! finished last — the one that actually gated progress — and charge each
+//! hop the wall-clock between its predecessor's finish and its own. The
+//! charges telescope: they sum to exactly the generation's `total_secs`,
+//! so the output is a complete attribution of the checkpoint stall, not a
+//! sample of it.
+
+use super::{Span, SpanId};
+
+/// One hop of the critical path, in timeline order.
+#[derive(Clone, Debug)]
+pub struct PathEntry {
+    /// Span name, with a repeat marker when consecutive same-name hops
+    /// collapse (e.g. the write-queue admission chain: `write.q ×512`).
+    pub span: String,
+    /// How many raw hops collapsed into this entry.
+    pub count: usize,
+    /// Virtual seconds this entry gated the checkpoint.
+    pub secs: f64,
+    /// Share of the generation total, 0..=100.
+    pub pct: f64,
+}
+
+/// Walk generation `gen`'s DAG backwards from its terminal span and return
+/// the gating chain in timeline order. Empty when the generation recorded
+/// no spans (tracing off).
+pub fn critical_path(spans: &[Span], gen: u64) -> Vec<PathEntry> {
+    // Terminal: the RESUME exchange ends the checkpoint; fall back to the
+    // latest-finishing non-root span if a partial trace has no resume.
+    let terminal = spans
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.gen == Some(gen))
+        .filter(|(_, s)| s.name == "resume")
+        .max_by(|a, b| a.1.t1.total_cmp(&b.1.t1))
+        .or_else(|| {
+            spans
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.gen == Some(gen) && s.name != "ckpt")
+                .max_by(|a, b| a.1.t1.total_cmp(&b.1.t1))
+        });
+    let Some((mut cur, _)) = terminal else {
+        return Vec::new();
+    };
+
+    // anchor = the instant the current hop delivered; each hop is charged
+    // anchor − pred.t1 (the time only it could have been running).
+    let mut anchor = spans[cur].t1;
+    let mut raw: Vec<(String, f64)> = Vec::new();
+    let mut hops = 0usize;
+    loop {
+        hops += 1;
+        if hops > spans.len() + 1 {
+            break; // cycle guard: malformed hand-built DAGs terminate.
+        }
+        let s = &spans[cur];
+        let pred = s
+            .deps
+            .iter()
+            .filter_map(|&SpanId(d)| {
+                let d = d as usize;
+                spans.get(d).map(|p| (d, p))
+            })
+            .max_by(|a, b| a.1.t1.total_cmp(&b.1.t1));
+        match pred {
+            Some((p, ps)) => {
+                raw.push((label(s), (anchor - ps.t1).max(0.0)));
+                anchor = ps.t1.min(anchor);
+                cur = p;
+            }
+            None => {
+                raw.push((label(s), (anchor - s.t0).max(0.0)));
+                break;
+            }
+        }
+    }
+    raw.reverse();
+
+    // Collapse consecutive same-name hops (per-rank encode ladders and the
+    // write-queue admission chain would otherwise dominate the listing).
+    let mut merged: Vec<(String, usize, f64)> = Vec::new();
+    for (name, secs) in raw {
+        match merged.last_mut() {
+            Some((n, c, s)) if *n == name => {
+                *c += 1;
+                *s += secs;
+            }
+            _ => merged.push((name, 1, secs)),
+        }
+    }
+    let total: f64 = merged.iter().map(|(_, _, s)| s).sum();
+    merged
+        .into_iter()
+        .map(|(name, count, secs)| PathEntry {
+            span: if count > 1 {
+                format!("{name} ×{count}")
+            } else {
+                name
+            },
+            count,
+            secs,
+            pct: if total > 0.0 { 100.0 * secs / total } else { 0.0 },
+        })
+        .collect()
+}
+
+fn label(s: &Span) -> String {
+    s.name.to_string()
+}
+
+/// The top-k entries by charge, rendered one-line for bench annotations:
+/// `"write.wave 62.1% · encode ×512 21.4% · drain.msgs 9.0%"`.
+pub fn top_k_summary(path: &[PathEntry], k: usize) -> String {
+    let mut by_charge: Vec<&PathEntry> = path.iter().collect();
+    by_charge.sort_by(|a, b| b.secs.total_cmp(&a.secs));
+    by_charge
+        .iter()
+        .take(k)
+        .map(|e| format!("{} {:.1}%", e.span, e.pct))
+        .collect::<Vec<_>>()
+        .join(" · ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Lane, Span};
+
+    /// Hand-built DAG with a known answer:
+    ///
+    /// ```text
+    ///   a: [0,2] ──┬── c: [3,10]  (dep a, b — b finishes last)
+    ///   b: [1,5] ──┘        │
+    ///                 d: [10,11]  (dep c)   terminal (named resume)
+    /// ```
+    ///
+    /// Walk: d charged 11−10 = 1, c charged 10−5 = 5 (gated by b), b
+    /// charged 5−1 = 4 (no deps → its own duration). a never appears —
+    /// it was off the gating chain. Total = 10 = d.t1 − b.t0.
+    #[test]
+    fn known_dag_attributes_correctly() {
+        let a = Span::new("a", Lane::Ctrl, 0.0, 2.0).gen(0);
+        let b = Span::new("b", Lane::Phase, 1.0, 5.0).gen(0);
+        let c = Span::new("c", Lane::Storage, 3.0, 10.0)
+            .gen(0)
+            .dep(SpanId(0))
+            .dep(SpanId(1));
+        let d = Span::new("resume", Lane::Ctrl, 10.0, 11.0).gen(0).dep(SpanId(2));
+        let spans = vec![a, b, c, d];
+        let path = critical_path(&spans, 0);
+        let names: Vec<&str> = path.iter().map(|e| e.span.as_str()).collect();
+        assert_eq!(names, vec!["b", "c", "resume"]);
+        let secs: Vec<f64> = path.iter().map(|e| e.secs).collect();
+        assert!((secs[0] - 4.0).abs() < 1e-12, "{secs:?}");
+        assert!((secs[1] - 5.0).abs() < 1e-12, "{secs:?}");
+        assert!((secs[2] - 1.0).abs() < 1e-12, "{secs:?}");
+        let total: f64 = secs.iter().sum();
+        assert!((total - 10.0).abs() < 1e-12);
+        let pct: f64 = path.iter().map(|e| e.pct).sum();
+        assert!((pct - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn consecutive_same_name_hops_collapse() {
+        // q0 → q1 → q2 chain feeding resume.
+        let q0 = Span::new("write.q", Lane::WriteQueue, 0.0, 1.0).gen(0);
+        let q1 = Span::new("write.q", Lane::WriteQueue, 1.0, 2.0).gen(0).dep(SpanId(0));
+        let q2 = Span::new("write.q", Lane::WriteQueue, 2.0, 3.0).gen(0).dep(SpanId(1));
+        let r = Span::new("resume", Lane::Ctrl, 3.0, 4.0).gen(0).dep(SpanId(2));
+        let path = critical_path(&[q0, q1, q2, r], 0);
+        assert_eq!(path.len(), 2, "{path:?}");
+        assert_eq!(path[0].span, "write.q ×3");
+        assert_eq!(path[0].count, 3);
+        assert!((path[0].secs - 3.0).abs() < 1e-12);
+        let s = top_k_summary(&path, 3);
+        assert!(s.contains("write.q ×3 75.0%"), "{s}");
+    }
+
+    #[test]
+    fn empty_for_untraced_generation() {
+        assert!(critical_path(&[], 7).is_empty());
+    }
+}

@@ -1,0 +1,714 @@
+//! Virtual-time span tracing, structured events, and report reconciliation.
+//!
+//! The paper's Lesson 4 — *better attention to warnings and error messages
+//! from the beginning* — is a tooling lesson: at NERSC scale you debug a
+//! checkpoint stall from a timeline, not from twenty scattered scalars.
+//! This module is that timeline. Every phase of the checkpoint protocol,
+//! every per-rank encode, every write-queue admission, the BB wave, the
+//! redundancy exchange, and the background drain record a [`Span`] on the
+//! **virtual sim clock** into a shared [`Tracer`]. On top of the raw spans
+//! sit three consumers:
+//!
+//! * [`perfetto`] — a Chrome-trace JSON exporter (`--trace-out`), loadable
+//!   in `ui.perfetto.dev`, one track per node / phase lane;
+//! * [`critical_path`] — walks the span dependency DAG backwards from
+//!   RESUME and attributes every virtual second of the checkpoint to the
+//!   span that gated it;
+//! * [`reconcile`] — re-derives every `CkptReport` timing field from the
+//!   spans and reports any field that drifted beyond epsilon. The report
+//!   and the trace can never silently disagree.
+//!
+//! Spans and counters are recorded only when tracing is enabled
+//! (`--trace` / `--trace-out`); the **event log** is always on. Events are
+//! structured warn/error records with a dedup key (node / rank / path
+//! baked in), a repeat count, and rank/node/generation context — the first
+//! few occurrences per key still go through the normal logger (so existing
+//! log-capture tests and operators see them), repeats only bump the count.
+//!
+//! Clock domains: span times are virtual sim-seconds (deterministic,
+//! reproducible across machines). The one host-clock quantity in the
+//! report, `encode_host_secs`, is deliberately *not* reconciled — it
+//! measures this machine, not the modeled system.
+
+pub mod critical_path;
+pub mod perfetto;
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::CkptReport;
+use crate::util::json::Json;
+use crate::util::logging::{self, Level};
+
+/// Index of a recorded span inside its tracer (stable for the tracer's
+/// lifetime; `adopt` remaps them when merging tracers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SpanId(pub u64);
+
+/// Which display lane (Perfetto track) a span belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lane {
+    /// Whole-checkpoint phases (ckpt root, drain barrier, stall window).
+    Phase,
+    /// Coordination-plane control traffic (broadcast/reduce sweeps).
+    Ctrl,
+    /// Storage waves (BB write wave, manifest, restart reads).
+    Storage,
+    /// Redundancy-set exchange traffic.
+    Exchange,
+    /// Background BB→Lustre drain service.
+    Drain,
+    /// Streamed write-queue admission slots.
+    WriteQueue,
+    /// Per-rank encode work (one Perfetto process per node).
+    Encode,
+    /// Restart timeline (rebuild / startup / image reads).
+    Restart,
+}
+
+impl Lane {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Lane::Phase => "phase",
+            Lane::Ctrl => "ctrl",
+            Lane::Storage => "storage",
+            Lane::Exchange => "exchange",
+            Lane::Drain => "drain",
+            Lane::WriteQueue => "write-queue",
+            Lane::Encode => "encode",
+            Lane::Restart => "restart",
+        }
+    }
+}
+
+/// One interval on the virtual clock, with attribution and DAG edges.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub name: &'static str,
+    pub lane: Lane,
+    /// Checkpoint generation the span belongs to (None = outside any).
+    pub gen: Option<u64>,
+    pub rank: Option<u32>,
+    pub node: Option<u32>,
+    /// Virtual start/end, sim-seconds.
+    pub t0: f64,
+    pub t1: f64,
+    /// Spans that had to finish before this one could produce its result
+    /// (the critical-path DAG edges).
+    pub deps: Vec<SpanId>,
+    pub attrs: Vec<(&'static str, String)>,
+}
+
+impl Span {
+    pub fn new(name: &'static str, lane: Lane, t0: f64, t1: f64) -> Self {
+        Span {
+            name,
+            lane,
+            gen: None,
+            rank: None,
+            node: None,
+            t0,
+            t1,
+            deps: Vec::new(),
+            attrs: Vec::new(),
+        }
+    }
+
+    pub fn gen(mut self, gen: u64) -> Self {
+        self.gen = Some(gen);
+        self
+    }
+
+    pub fn rank(mut self, rank: u32) -> Self {
+        self.rank = Some(rank);
+        self
+    }
+
+    pub fn node(mut self, node: u32) -> Self {
+        self.node = Some(node);
+        self
+    }
+
+    pub fn dep(mut self, id: SpanId) -> Self {
+        self.deps.push(id);
+        self
+    }
+
+    pub fn dep_opt(mut self, id: Option<SpanId>) -> Self {
+        if let Some(id) = id {
+            self.deps.push(id);
+        }
+        self
+    }
+
+    pub fn deps(mut self, ids: &[SpanId]) -> Self {
+        self.deps.extend_from_slice(ids);
+        self
+    }
+
+    pub fn attr(mut self, key: &'static str, value: impl ToString) -> Self {
+        self.attrs.push((key, value.to_string()));
+        self
+    }
+
+    pub fn duration(&self) -> f64 {
+        (self.t1 - self.t0).max(0.0)
+    }
+}
+
+/// One sample of a traced time series (drain backlog, queue depth).
+#[derive(Clone, Copy, Debug)]
+pub struct CounterSample {
+    pub name: &'static str,
+    /// Virtual time of the sample.
+    pub t: f64,
+    pub value: f64,
+}
+
+/// Context a structured event carries (everything optional: fault paths
+/// fire from layers that know different subsets).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EventCtx {
+    pub rank: Option<u32>,
+    pub node: Option<u32>,
+    pub gen: Option<u64>,
+    /// Virtual time, if the call site has a clock.
+    pub t: Option<f64>,
+}
+
+impl EventCtx {
+    pub fn rank(rank: u32) -> Self {
+        EventCtx {
+            rank: Some(rank),
+            ..Default::default()
+        }
+    }
+
+    pub fn node(node: u32) -> Self {
+        EventCtx {
+            node: Some(node),
+            ..Default::default()
+        }
+    }
+
+    pub fn with_gen(mut self, gen: u64) -> Self {
+        self.gen = Some(gen);
+        self
+    }
+
+    pub fn with_t(mut self, t: f64) -> Self {
+        self.t = Some(t);
+        self
+    }
+}
+
+/// A deduplicated warn/error event: one entry per key, counted.
+#[derive(Clone, Debug)]
+pub struct EventEntry {
+    pub level: Level,
+    pub target: &'static str,
+    /// Message of the most recent occurrence.
+    pub message: String,
+    pub count: u64,
+    pub ctx: EventCtx,
+    pub t_first: Option<f64>,
+    pub t_last: Option<f64>,
+}
+
+/// Occurrences per dedup key that still go through the normal logger
+/// before repeats only bump the count.
+pub const EVENT_LOG_FIRST: u64 = 3;
+/// Distinct dedup keys kept before overflow events are only counted.
+const MAX_EVENT_KEYS: usize = 512;
+
+#[derive(Debug, Default)]
+struct TraceState {
+    spans_on: bool,
+    spans: Vec<Span>,
+    counters: Vec<CounterSample>,
+    events: BTreeMap<String, EventEntry>,
+    dropped_events: u64,
+}
+
+/// Shared recorder. Cheap to clone (Arc); every subsystem of a job holds
+/// the same tracer, so restart rebuilds and coordinator re-parents land in
+/// the same event log as the checkpoint path.
+#[derive(Clone, Debug, Default)]
+pub struct Tracer {
+    inner: Arc<Mutex<TraceState>>,
+}
+
+impl Tracer {
+    /// A tracer with span/counter recording switched on (`--trace`).
+    /// Events are collected either way.
+    pub fn new(spans_on: bool) -> Self {
+        Tracer {
+            inner: Arc::new(Mutex::new(TraceState {
+                spans_on,
+                ..Default::default()
+            })),
+        }
+    }
+
+    /// Event-log-only tracer (the default for standalone subsystems).
+    pub fn disabled() -> Self {
+        Self::new(false)
+    }
+
+    pub fn spans_on(&self) -> bool {
+        self.inner.lock().unwrap().spans_on
+    }
+
+    /// Record a span; returns its id, or None when span recording is off.
+    pub fn record(&self, span: Span) -> Option<SpanId> {
+        let mut st = self.inner.lock().unwrap();
+        if !st.spans_on {
+            return None;
+        }
+        let id = SpanId(st.spans.len() as u64);
+        st.spans.push(span);
+        Some(id)
+    }
+
+    /// Sample a traced time series at virtual time `t`.
+    pub fn counter(&self, name: &'static str, t: f64, value: f64) {
+        let mut st = self.inner.lock().unwrap();
+        if st.spans_on {
+            st.counters.push(CounterSample { name, t, value });
+        }
+    }
+
+    pub fn warn(
+        &self,
+        target: &'static str,
+        key: impl Into<String>,
+        ctx: EventCtx,
+        msg: impl Into<String>,
+    ) {
+        let _ = self.event(Level::Warn, target, key.into(), ctx, msg.into());
+    }
+
+    pub fn error(
+        &self,
+        target: &'static str,
+        key: impl Into<String>,
+        ctx: EventCtx,
+        msg: impl Into<String>,
+    ) {
+        let _ = self.event(Level::Error, target, key.into(), ctx, msg.into());
+    }
+
+    /// Record a structured event. The first [`EVENT_LOG_FIRST`] occurrences
+    /// per key also go through the normal logger (same text as the ad-hoc
+    /// warning this replaces); repeats only bump the count. Returns whether
+    /// this occurrence reached the logger (tests probe the rate limit
+    /// through this instead of the global capture buffer).
+    pub fn event(
+        &self,
+        level: Level,
+        target: &'static str,
+        key: String,
+        ctx: EventCtx,
+        msg: String,
+    ) -> bool {
+        let log_it;
+        {
+            let mut st = self.inner.lock().unwrap();
+            if let Some(e) = st.events.get_mut(&key) {
+                e.count += 1;
+                e.message = msg.clone();
+                e.t_last = ctx.t.or(e.t_last);
+                if level > e.level {
+                    e.level = level;
+                }
+                log_it = e.count <= EVENT_LOG_FIRST;
+            } else if st.events.len() >= MAX_EVENT_KEYS {
+                st.dropped_events += 1;
+                log_it = true; // overflow: still log, just don't track.
+            } else {
+                st.events.insert(
+                    key,
+                    EventEntry {
+                        level,
+                        target,
+                        message: msg.clone(),
+                        count: 1,
+                        ctx,
+                        t_first: ctx.t,
+                        t_last: ctx.t,
+                    },
+                );
+                log_it = true;
+            }
+        }
+        if log_it {
+            logging::log(level, target, &msg);
+        }
+        log_it
+    }
+
+    /// Snapshot of all recorded spans.
+    pub fn spans(&self) -> Vec<Span> {
+        self.inner.lock().unwrap().spans.clone()
+    }
+
+    pub fn span_count(&self) -> usize {
+        self.inner.lock().unwrap().spans.len()
+    }
+
+    /// Snapshot of all counter samples.
+    pub fn counters(&self) -> Vec<CounterSample> {
+        self.inner.lock().unwrap().counters.clone()
+    }
+
+    /// Occurrence count for an event key (0 = never fired).
+    pub fn event_count(&self, key: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .events
+            .get(key)
+            .map_or(0, |e| e.count)
+    }
+
+    /// Total distinct event keys recorded.
+    pub fn event_key_count(&self) -> usize {
+        self.inner.lock().unwrap().events.len()
+    }
+
+    /// Absorb another tracer's record (used when a restart's fresh job
+    /// adopts the pre-kill trace so one export covers the whole lifetime).
+    /// Span ids are remapped; event counts merge by key.
+    pub fn adopt(&self, other: &Tracer) {
+        if Arc::ptr_eq(&self.inner, &other.inner) {
+            return;
+        }
+        let o = other.inner.lock().unwrap();
+        let mut st = self.inner.lock().unwrap();
+        let offset = st.spans.len() as u64;
+        if st.spans_on {
+            for s in &o.spans {
+                let mut s = s.clone();
+                for d in &mut s.deps {
+                    *d = SpanId(d.0 + offset);
+                }
+                st.spans.push(s);
+            }
+            st.counters.extend_from_slice(&o.counters);
+        }
+        for (k, e) in &o.events {
+            match st.events.get_mut(k) {
+                Some(mine) => {
+                    mine.count += e.count;
+                    mine.t_last = e.t_last.or(mine.t_last);
+                    if e.level > mine.level {
+                        mine.level = e.level;
+                    }
+                }
+                None => {
+                    if st.events.len() < MAX_EVENT_KEYS {
+                        st.events.insert(k.clone(), e.clone());
+                    } else {
+                        st.dropped_events += e.count;
+                    }
+                }
+            }
+        }
+        st.dropped_events += o.dropped_events;
+    }
+
+    /// The event log as a stable-ordered JSON array (console `s` command
+    /// and `mana run` output).
+    pub fn events_json(&self) -> Json {
+        let st = self.inner.lock().unwrap();
+        let mut arr = Vec::with_capacity(st.events.len());
+        for (key, e) in &st.events {
+            let mut j = Json::obj()
+                .set("key", key.as_str())
+                .set(
+                    "level",
+                    match e.level {
+                        Level::Error => "error",
+                        Level::Warn => "warn",
+                        _ => "info",
+                    },
+                )
+                .set("target", e.target)
+                .set("count", e.count)
+                .set("message", e.message.as_str());
+            if let Some(r) = e.ctx.rank {
+                j = j.set("rank", r as u64);
+            }
+            if let Some(n) = e.ctx.node {
+                j = j.set("node", n as u64);
+            }
+            if let Some(g) = e.ctx.gen {
+                j = j.set("gen", g);
+            }
+            if let Some(t) = e.t_first {
+                j = j.set("t_first", t);
+            }
+            if let Some(t) = e.t_last {
+                j = j.set("t_last", t);
+            }
+            arr.push(j);
+        }
+        Json::Arr(arr)
+    }
+
+    pub fn dropped_events(&self) -> u64 {
+        self.inner.lock().unwrap().dropped_events
+    }
+}
+
+// ------------------------------------------------------- reconciliation
+
+/// Epsilon for span-vs-report agreement, in virtual seconds. Spans and the
+/// report are computed from the same f64 quantities in a different order,
+/// so disagreement is bounded by a few ulps of accumulated rounding —
+/// anything past 1e-9 s is a real accounting bug.
+pub const RECONCILE_EPS: f64 = 1e-9;
+
+fn sum_dur(spans: &[Span], gen: u64, name: &str) -> f64 {
+    spans
+        .iter()
+        .filter(|s| s.gen == Some(gen) && s.name == name)
+        .map(|s| s.duration())
+        .sum()
+}
+
+/// Measure of the union of a set of intervals (overlapping control sweeps
+/// — the fused INTENT/SAFE-POINT pair — count once, matching how the
+/// coordinator charges `ctrl_secs` for an overlapped exchange).
+fn union_measure(mut iv: Vec<(f64, f64)>) -> f64 {
+    iv.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut total = 0.0;
+    let mut cur: Option<(f64, f64)> = None;
+    for (a, b) in iv {
+        match cur {
+            Some((ca, cb)) if a <= cb + RECONCILE_EPS => {
+                cur = Some((ca, cb.max(b)));
+            }
+            Some((ca, cb)) => {
+                total += cb - ca;
+                cur = Some((a, b));
+            }
+            None => cur = Some((a, b)),
+        }
+    }
+    if let Some((ca, cb)) = cur {
+        total += cb - ca;
+    }
+    total
+}
+
+/// Re-derive every virtual-time `CkptReport` field from generation `gen`'s
+/// spans and return a human-readable mismatch per field that disagrees
+/// beyond [`RECONCILE_EPS`]. Empty = the trace and the report agree.
+///
+/// `encode_host_secs` (host clock) and `overlap_saved_secs` (a
+/// counterfactual — time that *didn't* pass) are excluded by design.
+pub fn reconcile(spans: &[Span], gen: u64, rep: &CkptReport) -> Vec<String> {
+    let mut out = Vec::new();
+    let in_gen: Vec<&Span> = spans.iter().filter(|s| s.gen == Some(gen)).collect();
+    if in_gen.is_empty() {
+        return vec![format!("no spans recorded for generation {gen}")];
+    }
+    let mut check = |field: &str, from_spans: f64, reported: f64| {
+        if (from_spans - reported).abs() > RECONCILE_EPS {
+            out.push(format!(
+                "{field}: spans say {from_spans:.12}, report says {reported:.12} \
+                 (Δ {:.3e})",
+                (from_spans - reported).abs()
+            ));
+        }
+    };
+    check("intent_secs", sum_dur(spans, gen, "intent"), rep.intent_secs);
+    check(
+        "safepoint_secs",
+        sum_dur(spans, gen, "safepoint"),
+        rep.safepoint_secs,
+    );
+    check(
+        "drain_secs",
+        sum_dur(spans, gen, "drain.msgs") + sum_dur(spans, gen, "drain.reduce"),
+        rep.drain_secs,
+    );
+    check(
+        "quiesce_secs",
+        sum_dur(spans, gen, "quiesce.fabric") + sum_dur(spans, gen, "quiesce"),
+        rep.quiesce_secs,
+    );
+    check(
+        "write_secs",
+        sum_dur(spans, gen, "write.wave")
+            + sum_dur(spans, gen, "write.manifest")
+            + sum_dur(spans, gen, "write.exchange"),
+        rep.write_secs,
+    );
+    check(
+        "fast_write_secs",
+        sum_dur(spans, gen, "write.wave.fast"),
+        rep.fast_write_secs,
+    );
+    check(
+        "durable_write_secs",
+        sum_dur(spans, gen, "write.wave.backpressure")
+            + sum_dur(spans, gen, "write.wave.durable")
+            + sum_dur(spans, gen, "write.manifest"),
+        rep.durable_write_secs,
+    );
+    check(
+        "exchange_secs",
+        sum_dur(spans, gen, "write.exchange"),
+        rep.exchange_secs,
+    );
+    check("resume_secs", sum_dur(spans, gen, "resume"), rep.resume_secs);
+    check(
+        "stall_secs",
+        sum_dur(spans, gen, "write.stall"),
+        rep.stall_secs,
+    );
+    // Encode stall: wave start to last rank's encode completion.
+    let enc: Vec<&&Span> = in_gen.iter().filter(|s| s.name == "encode").collect();
+    if !enc.is_empty() {
+        let lo = enc.iter().map(|s| s.t0).fold(f64::INFINITY, f64::min);
+        let hi = enc.iter().map(|s| s.t1).fold(f64::NEG_INFINITY, f64::max);
+        check("encode_stall_secs", hi - lo, rep.encode_stall_secs);
+    }
+    // Control plane: the union of all control-lane sweeps. Overlapped
+    // sweeps (fused INTENT/SAFE-POINT, WRITE bcast + hidden ack) merge
+    // into one interval, exactly how the coordinator charges them.
+    let ctrl: Vec<(f64, f64)> = in_gen
+        .iter()
+        .filter(|s| s.lane == Lane::Ctrl)
+        .map(|s| (s.t0, s.t1))
+        .collect();
+    check("ctrl_secs", union_measure(ctrl), rep.ctrl_secs);
+    check("total_secs", sum_dur(spans, gen, "ckpt"), rep.total_secs);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_record_only_when_enabled() {
+        let off = Tracer::disabled();
+        assert!(off.record(Span::new("x", Lane::Phase, 0.0, 1.0)).is_none());
+        assert_eq!(off.span_count(), 0);
+        let on = Tracer::new(true);
+        let id = on.record(Span::new("x", Lane::Phase, 0.0, 1.0)).unwrap();
+        assert_eq!(id, SpanId(0));
+        assert_eq!(on.span_count(), 1);
+        on.counter("c", 1.0, 2.0);
+        assert_eq!(on.counters().len(), 1);
+        off.counter("c", 1.0, 2.0);
+        assert!(off.counters().is_empty());
+    }
+
+    #[test]
+    fn events_dedup_and_rate_limit_logging() {
+        let tr = Tracer::disabled();
+        let mut logged = 0u64;
+        for i in 0..10 {
+            if tr.event(
+                Level::Warn,
+                "fs",
+                "fs.fast_invalid:n0".into(),
+                EventCtx::node(0).with_t(i as f64),
+                format!("copy {i} invalid"),
+            ) {
+                logged += 1;
+            }
+        }
+        // Only the first EVENT_LOG_FIRST occurrences reach the logger…
+        assert_eq!(logged, EVENT_LOG_FIRST);
+        // …but the event log counted all of them, keeping the latest text.
+        assert_eq!(tr.event_count("fs.fast_invalid:n0"), 10);
+        let j = tr.events_json().to_string();
+        assert!(j.contains(r#""count":10"#), "{j}");
+        assert!(j.contains("copy 9 invalid"), "{j}");
+        assert!(j.contains(r#""node":0"#), "{j}");
+    }
+
+    #[test]
+    fn distinct_keys_log_separately() {
+        let tr = Tracer::disabled();
+        let a = tr.event(Level::Warn, "fs", "k:a".into(), EventCtx::default(), "a".into());
+        let b = tr.event(Level::Warn, "fs", "k:b".into(), EventCtx::default(), "b".into());
+        assert!(a && b, "each fresh key logs its first occurrence");
+        assert_eq!(tr.event_key_count(), 2);
+    }
+
+    #[test]
+    fn error_upgrades_level() {
+        let tr = Tracer::disabled();
+        tr.warn("sim", "k", EventCtx::default(), "warned");
+        tr.error("sim", "k", EventCtx::default(), "then errored");
+        let j = tr.events_json().to_string();
+        assert!(j.contains(r#""level":"error""#), "{j}");
+        assert!(j.contains(r#""count":2"#), "{j}");
+    }
+
+    #[test]
+    fn adopt_remaps_span_deps_and_merges_events() {
+        let a = Tracer::new(true);
+        let b = Tracer::new(true);
+        a.record(Span::new("pre", Lane::Phase, 0.0, 1.0)).unwrap();
+        let b0 = b.record(Span::new("x", Lane::Phase, 0.0, 1.0)).unwrap();
+        b.record(Span::new("y", Lane::Phase, 1.0, 2.0).dep(b0))
+            .unwrap();
+        b.warn("sim", "k", EventCtx::default(), "m");
+        a.warn("sim", "k", EventCtx::default(), "m");
+        a.adopt(&b);
+        let spans = a.spans();
+        assert_eq!(spans.len(), 3);
+        // y's dep now points at x's new slot (offset 1).
+        assert_eq!(spans[2].deps, vec![SpanId(1)]);
+        assert_eq!(a.event_count("k"), 2);
+    }
+
+    #[test]
+    fn union_measure_merges_overlaps() {
+        // Disjoint.
+        assert!((union_measure(vec![(0.0, 1.0), (2.0, 3.0)]) - 2.0).abs() < 1e-12);
+        // Overlapping pair counts once.
+        assert!((union_measure(vec![(0.0, 2.0), (1.0, 3.0)]) - 3.0).abs() < 1e-12);
+        // Touching intervals merge without double-count.
+        assert!((union_measure(vec![(0.0, 1.0), (1.0, 2.0)]) - 2.0).abs() < 1e-12);
+        assert_eq!(union_measure(vec![]), 0.0);
+    }
+
+    #[test]
+    fn reconcile_flags_missing_generation() {
+        let rep = CkptReport::default();
+        let out = reconcile(&[], 0, &rep);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].contains("no spans"));
+    }
+
+    #[test]
+    fn reconcile_catches_a_drifted_field() {
+        let spans = vec![
+            Span::new("ckpt", Lane::Phase, 0.0, 10.0).gen(0),
+            Span::new("intent", Lane::Ctrl, 0.0, 1.0).gen(0),
+        ];
+        let rep = CkptReport {
+            intent_secs: 2.0, // drifted: span says 1.0
+            total_secs: 10.0,
+            ctrl_secs: 1.0,
+            ..CkptReport::default()
+        };
+        let out = reconcile(&spans, 0, &rep);
+        assert!(
+            out.iter().any(|m| m.contains("intent_secs")),
+            "missing intent mismatch: {out:?}"
+        );
+        assert!(
+            !out.iter().any(|m| m.contains("total_secs")),
+            "total agreed but was flagged: {out:?}"
+        );
+    }
+}
