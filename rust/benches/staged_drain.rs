@@ -137,7 +137,7 @@ fn restart_checks() {
     sim.checkpoint().expect("ckpt");
     let want = sim.fingerprint();
     let fs = sim.kill();
-    let (resumed, rrep) =
+    let (mut resumed, rrep) =
         JobSim::restart_from(cfg.clone(), None, fs).expect("restart from fast tier");
     assert_eq!(rrep.tier_fallbacks, 0, "clean fast tier needs no fallback");
     assert_eq!(rrep.rebuilt_nodes, 0, "no-fault restart must not rebuild");
@@ -159,7 +159,7 @@ fn restart_checks() {
         "corruption target must exist on the fast tier"
     );
     let fs = sim.kill();
-    let (resumed, rrep) = JobSim::restart_from(cfg, None, fs)
+    let (mut resumed, rrep) = JobSim::restart_from(cfg, None, fs)
         .expect("restart must survive a corrupt fast-tier image");
     assert!(rrep.tier_fallbacks >= 1, "rank 3 must fall back to Lustre");
     assert_eq!(rrep.rebuilt_nodes, 0, "no redundancy configured: no rebuild");

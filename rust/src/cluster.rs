@@ -1,0 +1,805 @@
+//! Multi-job tenancy: N concurrent jobs, ONE shared storage pair.
+//!
+//! A [`Cluster`] owns a single [`TieredStore`] — one burst-buffer fast
+//! tier, one Lustre durable tier, one cross-job content-addressed chunk
+//! index — and runs several [`JobSim`]s against it on a common virtual
+//! timeline. This models the production reality the single-job sim
+//! abstracts away: NERSC's burst buffer and `cscratch` are shared
+//! facilities, and one job's checkpoint traffic contends with (and dedups
+//! against) everyone else's.
+//!
+//! ## Sharing model
+//!
+//! * **Storage.** The shared [`Store`] lives in the cluster and is
+//!   `mem::swap`ped into whichever job is being advanced; parked jobs hold
+//!   a zero-byte placeholder tier. Since every path a job writes is
+//!   prefixed `{job}/…`, tenants cannot collide in the namespace, and the
+//!   chunk store attributes references per job (see
+//!   [`ChunkStore::reference_for`](crate::fs::ChunkStore)), so one
+//!   tenant's GC never reclaims a chunk another tenant still needs while
+//!   identical content written by two jobs ships to Lustre once.
+//! * **Drain QoS.** Each tenant gets a weighted fair share of the
+//!   BB→Lustre link ([`TieredStore::set_drain_weight`]); a job with a deep
+//!   backlog cannot starve a light one (the drain loop round-robins
+//!   per-job credit, FIFO within a job).
+//! * **Virtual time.** Jobs advance under conservative min-`now`
+//!   scheduling: the job whose clock is furthest behind runs next, in
+//!   quanta that end at its next checkpoint boundary. On top of the
+//!   event-driven [`LazyWindow`](crate::sim::JobSim) core each quantum is
+//!   O(1) host work regardless of length, so the cluster driver stays
+//!   O(events), not O(steps x jobs).
+//!
+//! ## Preemption storms
+//!
+//! Scheduler preemptions ([`ClusterEvent::Preempt`]) arrive through the
+//! same event queue as everything else: the victim checkpoints at its next
+//! safepoint at-or-after the preemption time, is killed (its queued drains
+//! survive in the shared store and keep shipping on other tenants' turns),
+//! and a matching [`ClusterEvent::Restart`] relaunches it from the shared
+//! tier. `restart_from` rebases the drain clock onto the restarted job's
+//! young timeline; the cluster immediately re-syncs it to the cluster-wide
+//! high-water mark, because other tenants have already been granted drain
+//! credit up to that point and a rewound clock would double-grant the
+//! interval.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::mem;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::console;
+use crate::fs::{FileSystem, FsConfig, RedundancyConfig, Store, TieredStore};
+use crate::sim::JobSim;
+use crate::topology::Topology;
+use crate::util::json::Json;
+
+/// One tenant's description: the job config plus its cluster-level knobs.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub cfg: RunConfig,
+    /// Drain-QoS weight (share of the BB->Lustre link relative to the
+    /// other tenants; 1.0 = equal share).
+    pub weight: f64,
+    /// Checkpoint every this many supersteps (0 = never; the job still
+    /// checkpoints when preempted).
+    pub ckpt_every: u64,
+}
+
+impl JobSpec {
+    pub fn new(cfg: RunConfig) -> Self {
+        JobSpec {
+            cfg,
+            weight: 1.0,
+            ckpt_every: 0,
+        }
+    }
+
+    pub fn weight(mut self, w: f64) -> Self {
+        self.weight = w;
+        self
+    }
+
+    pub fn ckpt_every(mut self, n: u64) -> Self {
+        self.ckpt_every = n;
+        self
+    }
+}
+
+/// A timed arrival on the cluster's event queue.
+#[derive(Clone, Debug)]
+pub enum ClusterEvent {
+    /// Checkpoint-and-kill job `job` at its next safepoint at-or-after
+    /// the event time.
+    Preempt { job: usize },
+    /// Relaunch a previously preempted job from the shared tier.
+    Restart { job: usize },
+}
+
+#[derive(Clone, Debug)]
+struct Ev {
+    t: f64,
+    seq: u64,
+    kind: ClusterEvent,
+}
+
+// BinaryHeap is a max-heap; reverse the comparison so the earliest
+// (then lowest-seq, for FIFO among ties) arrival pops first.
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Ev {}
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .t
+            .total_cmp(&self.t)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Where one tenant currently stands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Running,
+    /// Killed by a preemption; waiting for its Restart arrival.
+    Preempted,
+    Finished,
+}
+
+struct Slot {
+    spec: JobSpec,
+    /// `None` while preempted (the processes are dead; only the shared
+    /// store remembers the job).
+    sim: Option<JobSim>,
+    state: JobState,
+    steps_done: u64,
+    /// Step count captured at the kill so the restart resumes the
+    /// remaining work (the checkpoint preserved everything up to here).
+    steps_at_kill: u64,
+    checkpoints: u64,
+    preemptions: u64,
+    restarts: u64,
+    /// Virtual seconds this tenant's own clock reached at completion.
+    finished_secs: f64,
+    fingerprint: Option<u64>,
+}
+
+/// Per-tenant slice of the final report.
+#[derive(Clone, Debug)]
+pub struct JobSummary {
+    pub job: String,
+    pub steps: u64,
+    pub checkpoints: u64,
+    pub preemptions: u64,
+    pub restarts: u64,
+    pub virtual_secs: f64,
+    pub fingerprint: u64,
+}
+
+/// What a full cluster run produced.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterReport {
+    /// Max over tenants of their own virtual completion time.
+    pub virtual_makespan_secs: f64,
+    pub checkpoints: u64,
+    pub preemptions: u64,
+    pub restarts: u64,
+    /// Fraction of dedup savings that crossed a job boundary
+    /// ([`crate::fs::DrainStats::cross_job_dedup_ratio`]).
+    pub cross_job_dedup_ratio: f64,
+    pub cross_job_deduped_bytes: u64,
+    pub drained_bytes: u64,
+    pub deduped_bytes: u64,
+    pub per_job: Vec<JobSummary>,
+}
+
+impl ClusterReport {
+    pub fn to_json(&self) -> Json {
+        let mut rows = Vec::with_capacity(self.per_job.len());
+        for j in &self.per_job {
+            rows.push(
+                Json::obj()
+                    .set("job", j.job.as_str())
+                    .set("steps", j.steps)
+                    .set("checkpoints", j.checkpoints)
+                    .set("preemptions", j.preemptions)
+                    .set("restarts", j.restarts)
+                    .set("virtual_secs", j.virtual_secs)
+                    .set("fingerprint", format!("{:016x}", j.fingerprint).as_str()),
+            );
+        }
+        Json::obj()
+            .set("virtual_makespan_secs", self.virtual_makespan_secs)
+            .set("checkpoints", self.checkpoints)
+            .set("preemptions", self.preemptions)
+            .set("restarts", self.restarts)
+            .set("cross_job_dedup_ratio", self.cross_job_dedup_ratio)
+            .set("cross_job_deduped_bytes", self.cross_job_deduped_bytes)
+            .set("drained_bytes", self.drained_bytes)
+            .set("deduped_bytes", self.deduped_bytes)
+            .set("jobs", Json::Arr(rows))
+    }
+}
+
+/// N jobs, one shared tiered store, one virtual timeline.
+pub struct Cluster {
+    /// The real shared store while no job is being advanced; swapped into
+    /// the active job's `fs` slot for the duration of its turn.
+    store: Store,
+    jobs: Vec<Slot>,
+    events: BinaryHeap<Ev>,
+    seq: u64,
+    /// Cluster-wide virtual high-water mark: max over every `now()`
+    /// observed at the end of a turn. The shared drain clock never runs
+    /// ahead of this, and restarts re-sync to it.
+    high_water_secs: f64,
+}
+
+impl Cluster {
+    /// Placeholder tier a parked job holds while the real store is
+    /// elsewhere. Any touch of it would be a tenancy bug, so make it as
+    /// small as possible.
+    fn parked() -> Store {
+        Store::Single(FileSystem::new(FsConfig::burst_buffer(1)))
+    }
+
+    /// Build the shared store and launch every tenant against it.
+    ///
+    /// All jobs must be staged (`cfg.staging = Some(..)`) — the shared
+    /// burst-buffer/Lustre pair *is* the tenancy model — and job names
+    /// must be unique (they are the namespace and QoS key).
+    pub fn launch(specs: Vec<JobSpec>) -> Result<Cluster> {
+        ensure!(!specs.is_empty(), "cluster needs at least one job");
+        for (i, a) in specs.iter().enumerate() {
+            ensure!(
+                a.cfg.staging.is_some(),
+                "cluster job '{}' is not staged; multi-job tenancy shares a tiered store",
+                a.cfg.job
+            );
+            for b in specs.iter().skip(i + 1) {
+                ensure!(
+                    a.cfg.job != b.cfg.job,
+                    "duplicate job name '{}' (names are the tenancy namespace)",
+                    a.cfg.job
+                );
+            }
+        }
+
+        // The shared pair is sized for the co-located tenants: the fast
+        // tier spans the largest job's node set (jobs time-share nodes in
+        // this model), the durable tier is the site-wide Lustre.
+        let nodes = specs
+            .iter()
+            .map(|s| Topology::new(s.cfg.ranks, s.cfg.threads_per_rank).nodes())
+            .max()
+            .unwrap_or(1);
+        let staging = specs[0].cfg.staging.expect("checked above");
+        let mut ts = TieredStore::new(
+            FileSystem::new(FsConfig::burst_buffer(nodes)),
+            FileSystem::new(FsConfig::cscratch()),
+            staging.keep_fulls,
+            nodes,
+        );
+        ts.set_redundancy(RedundancyConfig::new(
+            specs[0].cfg.redundancy,
+            specs[0].cfg.redundancy_set_size,
+        ));
+        ts.set_early_admission(staging.early_admission);
+        for s in &specs {
+            ts.set_drain_weight(&s.cfg.job, s.weight);
+        }
+        let mut store = Store::Tiered(ts);
+
+        let mut jobs = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let sim = JobSim::launch_with_fs(spec.cfg.clone(), None, store)?;
+            jobs.push(Slot {
+                spec,
+                sim: Some(sim),
+                state: JobState::Running,
+                steps_done: 0,
+                steps_at_kill: 0,
+                checkpoints: 0,
+                preemptions: 0,
+                restarts: 0,
+                finished_secs: 0.0,
+                fingerprint: None,
+            });
+            // Park: take the shared store back, leave a placeholder.
+            let slot = jobs.last_mut().expect("just pushed");
+            let sim = slot.sim.as_mut().expect("just launched");
+            store = mem::replace(&mut sim.fs, Self::parked());
+        }
+
+        Ok(Cluster {
+            store,
+            jobs,
+            events: BinaryHeap::new(),
+            seq: 0,
+            high_water_secs: 0.0,
+        })
+    }
+
+    /// Number of tenants.
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Index of the tenant named `job`.
+    pub fn job_index(&self, job: &str) -> Option<usize> {
+        self.jobs.iter().position(|s| s.spec.cfg.job == job)
+    }
+
+    /// Schedule a preemption of job `job` at virtual time `t`; the victim
+    /// comes back `down_secs` later.
+    pub fn schedule_preemption(&mut self, job: usize, t: f64, down_secs: f64) {
+        self.push_event(t, ClusterEvent::Preempt { job });
+        self.push_event(t + down_secs.max(0.0), ClusterEvent::Restart { job });
+    }
+
+    fn push_event(&mut self, t: f64, kind: ClusterEvent) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.events.push(Ev { t, seq, kind });
+    }
+
+    // -------------------------------------------------------- store swap
+
+    /// Swap the shared store into job `i`'s fs slot (and point its tracer
+    /// at the tenant whose turn it is). Caller must swap back via
+    /// [`Self::park_store`] before touching another job.
+    fn lend_store(&mut self, i: usize) {
+        let sim = self.jobs[i].sim.as_mut().expect("lend to a dead job");
+        mem::swap(&mut sim.fs, &mut self.store);
+        sim.fs.set_tracer(sim.tracer.clone());
+    }
+
+    /// Inverse of [`Self::lend_store`]; also advances the cluster
+    /// high-water mark past everything the job just did.
+    fn park_store(&mut self, i: usize) {
+        let sim = self.jobs[i].sim.as_mut().expect("park from a dead job");
+        mem::swap(&mut sim.fs, &mut self.store);
+        let now = sim.now().as_secs();
+        if now > self.high_water_secs {
+            self.high_water_secs = now;
+        }
+    }
+
+    // -------------------------------------------------------- scheduling
+
+    /// The runnable tenant whose clock is furthest behind (ties broken by
+    /// index, deterministically).
+    fn next_job(&self) -> Option<usize> {
+        let mut best: Option<(f64, usize)> = None;
+        for (i, slot) in self.jobs.iter().enumerate() {
+            if slot.state != JobState::Running {
+                continue;
+            }
+            let now = slot.sim.as_ref().expect("running").now().as_secs();
+            match best {
+                Some((t, _)) if now >= t => {}
+                _ => best = Some((now, i)),
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
+    /// Steps until job `i`'s next interesting boundary: its periodic
+    /// checkpoint mark or the end of its step budget, whichever is first.
+    /// While arrivals are pending, quanta are additionally capped so a
+    /// preemption lands near its scheduled time instead of after the
+    /// victim's whole remaining budget; steps map to virtual time only
+    /// approximately, so arrival precision is "next safepoint at-or-after
+    /// t". Once the queue is empty the cap lifts and steady state runs in
+    /// maximal bulk-advance windows.
+    fn quantum(&self, i: usize) -> u64 {
+        let slot = &self.jobs[i];
+        let mut q = slot.spec.cfg.steps.saturating_sub(slot.steps_done);
+        if slot.spec.ckpt_every != 0 {
+            let to_mark = slot.spec.ckpt_every - (slot.steps_done % slot.spec.ckpt_every);
+            q = q.min(to_mark);
+        }
+        if !self.events.is_empty() {
+            q = q.min(16);
+        }
+        q
+    }
+
+    /// First pending event whose time is at-or-before `frontier`.
+    fn pop_due_event(&mut self, frontier: f64) -> Option<Ev> {
+        if self.events.peek().is_some_and(|ev| ev.t <= frontier) {
+            return self.events.pop();
+        }
+        None
+    }
+
+    // ------------------------------------------------------------- turns
+
+    /// Advance job `i` by `steps`, checkpointing at its periodic mark.
+    fn run_turn(&mut self, i: usize, steps: u64) -> Result<()> {
+        self.lend_store(i);
+        let res = (|| -> Result<()> {
+            let slot = &mut self.jobs[i];
+            let sim = slot.sim.as_mut().expect("running");
+            sim.run_steps(steps)?;
+            slot.steps_done += steps;
+            let at_mark =
+                slot.spec.ckpt_every != 0 && slot.steps_done % slot.spec.ckpt_every == 0;
+            let done = slot.steps_done >= slot.spec.cfg.steps;
+            if at_mark && !done {
+                sim.checkpoint().map_err(|e| {
+                    anyhow!("job {}: periodic checkpoint failed: {e}", slot.spec.cfg.job)
+                })?;
+                slot.checkpoints += 1;
+            }
+            if done {
+                slot.fingerprint = Some(sim.fingerprint());
+                slot.finished_secs = sim.now().as_secs();
+                slot.state = JobState::Finished;
+            }
+            Ok(())
+        })();
+        self.park_store(i);
+        res
+    }
+
+    /// Fire one arrival. Preempting a finished/already-preempted job and
+    /// restarting a job that was never killed are no-ops (storm plans are
+    /// allowed to be sloppy about completion races).
+    fn fire(&mut self, ev: Ev) -> Result<()> {
+        match ev.kind {
+            ClusterEvent::Preempt { job } => {
+                if self.jobs[job].state != JobState::Running {
+                    return Ok(());
+                }
+                self.preempt_now(job)
+            }
+            ClusterEvent::Restart { job } => {
+                if self.jobs[job].state != JobState::Preempted {
+                    return Ok(());
+                }
+                self.restart_now(job)
+            }
+        }
+    }
+
+    /// Checkpoint-and-kill: the victim writes a final checkpoint through
+    /// the shared store, then dies. Its queued drains stay in the shared
+    /// queue — killing the processes does not cancel the drain agents.
+    fn preempt_now(&mut self, i: usize) -> Result<()> {
+        self.lend_store(i);
+        let ck = {
+            let slot = &mut self.jobs[i];
+            let sim = slot.sim.as_mut().expect("running");
+            sim.checkpoint()
+        };
+        self.park_store(i);
+        let slot = &mut self.jobs[i];
+        ck.map_err(|e| anyhow!("job {}: preemption checkpoint failed: {e}", slot.spec.cfg.job))?;
+        slot.checkpoints += 1;
+        slot.preemptions += 1;
+        slot.steps_at_kill = slot.steps_done;
+        slot.state = JobState::Preempted;
+        // kill() hands back the placeholder store (the real one is
+        // already parked); drop it.
+        let _ = slot.sim.take().expect("running").kill();
+        Ok(())
+    }
+
+    /// Relaunch a preempted tenant from the shared tier and resume its
+    /// remaining steps.
+    fn restart_now(&mut self, i: usize) -> Result<()> {
+        let spec = self.jobs[i].spec.clone();
+        let store = mem::replace(&mut self.store, Self::parked());
+        let (sim, _report) = match JobSim::restart_from(spec.cfg.clone(), None, store) {
+            Ok(ok) => ok,
+            Err(e) => bail!("job {}: restart failed: {e}", spec.cfg.job),
+        };
+        let slot = &mut self.jobs[i];
+        slot.sim = Some(sim);
+        slot.state = JobState::Running;
+        slot.restarts += 1;
+        // The restart resumes from the preemption checkpoint: everything
+        // up to the kill is preserved state, and the step budget continues
+        // from there on the restarted sim's own step counter.
+        slot.steps_done = slot.steps_at_kill;
+        // Park the store again — and undo restart_from's clock rebase.
+        // rebase_clock rewound the shared drain clock onto this job's
+        // young timeline; the other tenants were already granted credit up
+        // to the cluster high-water mark, so a rewound clock would
+        // double-grant that interval on the next drain_to.
+        let sim = slot.sim.as_mut().expect("just restarted");
+        mem::swap(&mut sim.fs, &mut self.store);
+        if let Store::Tiered(ts) = &mut self.store {
+            ts.sync_clock(self.high_water_secs);
+        }
+        Ok(())
+    }
+
+    // --------------------------------------------------------------- run
+
+    /// Drive every tenant to completion: conservative min-`now` turns,
+    /// arrivals fired as the frontier passes them, and a final drain of
+    /// whatever is still queued for Lustre.
+    pub fn run(&mut self) -> Result<ClusterReport> {
+        loop {
+            // The scheduling frontier is the lagging runnable job's clock;
+            // with nobody runnable, time jumps to the next arrival.
+            let job = self.next_job();
+            let frontier = match job {
+                Some(i) => self.jobs[i]
+                    .sim
+                    .as_ref()
+                    .expect("running")
+                    .now()
+                    .as_secs(),
+                None => match self.events.peek() {
+                    Some(ev) => ev.t,
+                    None => break,
+                },
+            };
+            if let Some(ev) = self.pop_due_event(frontier) {
+                self.fire(ev)?;
+                continue;
+            }
+            // No due arrival: with nobody runnable the frontier IS the
+            // next arrival's time, so that case fired above.
+            let Some(i) = job else { break };
+            let steps = self.quantum(i);
+            if steps == 0 {
+                // Zero-step tenant: finish it without a turn.
+                self.lend_store(i);
+                let slot = &mut self.jobs[i];
+                let sim = slot.sim.as_mut().expect("running");
+                slot.fingerprint = Some(sim.fingerprint());
+                slot.finished_secs = sim.now().as_secs();
+                slot.state = JobState::Finished;
+                self.park_store(i);
+                continue;
+            }
+            self.run_turn(i, steps)?;
+        }
+        self.drain_remaining();
+        Ok(self.report())
+    }
+
+    /// Ship everything still queued to the durable tier (end-of-run
+    /// background drain, on the cluster's own clock).
+    pub fn drain_remaining(&mut self) {
+        if let Store::Tiered(ts) = &mut self.store {
+            let bw = ts.drain_bandwidth();
+            let mut deadline = self.high_water_secs;
+            // Budget for the queued bytes plus slack for granularity
+            // rounding; loop in case failed items re-queue.
+            for _ in 0..4 {
+                if ts.pending_files() == 0 {
+                    break;
+                }
+                deadline += ts.pending_bytes() as f64 / bw + 1.0;
+                let _ = ts.drain_to(deadline);
+            }
+            self.high_water_secs = self.high_water_secs.max(deadline);
+        }
+    }
+
+    // --------------------------------------------------------- reporting
+
+    /// The shared store's drain statistics.
+    pub fn drain_stats(&self) -> Option<&crate::fs::DrainStats> {
+        match &self.store {
+            Store::Tiered(ts) => Some(&ts.stats),
+            Store::Single(_) => None,
+        }
+    }
+
+    /// Borrow the shared tiered store (tests / observability).
+    pub fn shared_store(&self) -> Option<&TieredStore> {
+        match &self.store {
+            Store::Tiered(ts) => Some(ts),
+            Store::Single(_) => None,
+        }
+    }
+
+    fn report(&self) -> ClusterReport {
+        let mut rep = ClusterReport::default();
+        for slot in &self.jobs {
+            rep.virtual_makespan_secs = rep.virtual_makespan_secs.max(slot.finished_secs);
+            rep.checkpoints += slot.checkpoints;
+            rep.preemptions += slot.preemptions;
+            rep.restarts += slot.restarts;
+            rep.per_job.push(JobSummary {
+                job: slot.spec.cfg.job.clone(),
+                steps: slot.steps_done,
+                checkpoints: slot.checkpoints,
+                preemptions: slot.preemptions,
+                restarts: slot.restarts,
+                virtual_secs: slot.finished_secs,
+                fingerprint: slot.fingerprint.unwrap_or(0),
+            });
+        }
+        if let Store::Tiered(ts) = &self.store {
+            let stats = &ts.stats;
+            rep.cross_job_dedup_ratio = stats.cross_job_dedup_ratio();
+            rep.cross_job_deduped_bytes = stats.cross_job_deduped_bytes;
+            rep.drained_bytes = stats.drained_bytes;
+            rep.deduped_bytes = stats.deduped_bytes;
+        }
+        rep
+    }
+
+    /// Per-tenant status rows (the multi-job face of the console's
+    /// single-job `status`). Swaps the shared store through each live job
+    /// so `pending_drain_bytes` reflects the real queue.
+    pub fn status_json(&mut self) -> Json {
+        let mut rows = Vec::with_capacity(self.jobs.len());
+        for i in 0..self.jobs.len() {
+            let state = self.jobs[i].state;
+            if self.jobs[i].sim.is_some() {
+                self.lend_store(i);
+                let row = {
+                    let sim = self.jobs[i].sim.as_ref().expect("checked");
+                    console::job_row(sim)
+                };
+                self.park_store(i);
+                rows.push(row.set("state", format!("{state:?}").to_lowercase().as_str()));
+            } else {
+                let slot = &self.jobs[i];
+                let pending = match &self.store {
+                    Store::Tiered(ts) => ts.pending_bytes_for(&slot.spec.cfg.job),
+                    Store::Single(_) => 0,
+                };
+                rows.push(
+                    Json::obj()
+                        .set("job", slot.spec.cfg.job.as_str())
+                        .set("app", slot.spec.cfg.app.name())
+                        .set("ranks", slot.spec.cfg.ranks as u64)
+                        .set("step", slot.steps_done)
+                        .set("checkpoints", slot.checkpoints)
+                        .set("pending_drain_bytes", pending)
+                        .set("state", format!("{state:?}").to_lowercase().as_str()),
+                );
+            }
+        }
+        Json::obj().set("jobs", Json::Arr(rows))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AppKind;
+
+    fn spec(name: &str, ranks: u32, steps: u64) -> JobSpec {
+        let mut cfg = RunConfig::new(AppKind::Synthetic, ranks).with_staging();
+        cfg.job = name.to_string();
+        cfg.steps = steps;
+        cfg.mem_per_rank = Some(1 << 20); // keep tests light
+        JobSpec::new(cfg)
+    }
+
+    #[test]
+    fn two_tenants_share_one_store_and_both_finish() {
+        let mut cl = Cluster::launch(vec![
+            spec("jobA", 4, 6).ckpt_every(3),
+            spec("jobB", 2, 4).ckpt_every(2),
+        ])
+        .unwrap();
+        let rep = cl.run().unwrap();
+        assert_eq!(rep.per_job.len(), 2);
+        assert_eq!(rep.per_job[0].steps, 6);
+        assert_eq!(rep.per_job[1].steps, 4);
+        // Periodic marks that coincide with the end of the step budget are
+        // skipped, so each tenant checkpoints exactly once mid-run.
+        assert_eq!(rep.checkpoints, 2);
+        assert_eq!(rep.preemptions, 0);
+        assert!(rep.virtual_makespan_secs > 0.0);
+        for j in &rep.per_job {
+            assert_ne!(j.fingerprint, 0, "{} never finished", j.job);
+        }
+        // Everything queued for Lustre shipped by the end-of-run drain,
+        // and both tenants' generations live side by side in one store.
+        let ts = cl.shared_store().unwrap();
+        assert_eq!(ts.pending_files(), 0);
+        assert!(ts.is_durable("jobA/gen0000/ckpt_rank00000.mana"));
+        assert!(ts.is_durable("jobB/gen0000/ckpt_rank00000.mana"));
+        assert!(ts.is_durable("jobA/ckpt_manifest.txt"));
+        assert!(ts.is_durable("jobB/ckpt_manifest.txt"));
+    }
+
+    #[test]
+    fn preempted_tenants_drains_survive_and_it_resumes() {
+        let mut cl = Cluster::launch(vec![
+            spec("victim", 4, 12).ckpt_every(4),
+            spec("peer", 2, 8).ckpt_every(4),
+        ])
+        .unwrap();
+        // Preempt the victim immediately (checkpoint + kill at its first
+        // safepoint); it comes back once the frontier passes t=5.0.
+        cl.schedule_preemption(0, 0.0, 5.0);
+        let rep = cl.run().unwrap();
+        assert_eq!(rep.preemptions, 1);
+        assert_eq!(rep.restarts, 1);
+        let v = &rep.per_job[0];
+        assert_eq!(v.steps, 12, "victim resumed and finished its budget");
+        assert_ne!(v.fingerprint, 0);
+        // Preemption checkpoint + periodic marks after the restart.
+        assert!(v.checkpoints >= 2);
+        let p = &rep.per_job[1];
+        assert_eq!(p.steps, 8, "peer unaffected by the storm");
+        // The kill did not cancel the victim's queued drains: the shared
+        // store shipped every byte, including the preemption generation.
+        let ts = cl.shared_store().unwrap();
+        assert_eq!(ts.pending_files(), 0);
+        assert!(ts.stats.drained_bytes > 0);
+        assert!(ts.is_durable("victim/gen0000/ckpt_rank00000.mana"));
+    }
+
+    #[test]
+    fn identical_tenants_dedup_across_jobs() {
+        // Twin jobs: same app, seed, ranks, and footprint — only the name
+        // (and so the namespace prefix) differs. Their rank images are
+        // bitwise identical, so the second tenant's chunks are already in
+        // the shared index and ship to Lustre once.
+        let mut cl = Cluster::launch(vec![
+            spec("twinA", 4, 4).ckpt_every(2),
+            spec("twinB", 4, 4).ckpt_every(2),
+        ])
+        .unwrap();
+        let rep = cl.run().unwrap();
+        assert_eq!(
+            rep.per_job[0].fingerprint, rep.per_job[1].fingerprint,
+            "twin tenants evolve identically"
+        );
+        assert!(
+            rep.cross_job_deduped_bytes > 0,
+            "twin images should dedup across the job boundary"
+        );
+        assert!(rep.cross_job_dedup_ratio > 0.0);
+        // Both tenants' checkpoints restore independently of each other.
+        let ts = cl.shared_store().unwrap();
+        assert!(ts.is_durable("twinA/gen0000/ckpt_rank00000.mana"));
+        assert!(ts.is_durable("twinB/gen0000/ckpt_rank00000.mana"));
+    }
+
+    #[test]
+    fn qos_weights_thread_through_to_the_shared_store() {
+        let mut cl = Cluster::launch(vec![
+            spec("heavy", 4, 4).ckpt_every(2).weight(3.0),
+            spec("light", 2, 4).ckpt_every(2).weight(1.0),
+        ])
+        .unwrap();
+        let rep = cl.run().unwrap();
+        // The light tenant is never starved out of the shared link: both
+        // finish, and nothing is left queued.
+        assert_eq!(rep.per_job[0].steps, 4);
+        assert_eq!(rep.per_job[1].steps, 4);
+        assert_eq!(cl.shared_store().unwrap().pending_files(), 0);
+    }
+
+    #[test]
+    fn status_rows_attribute_pending_bytes_per_tenant() {
+        let mut cl = Cluster::launch(vec![spec("jobA", 2, 2), spec("jobB", 2, 2)]).unwrap();
+        let j = cl.status_json();
+        let rows = match j.get("jobs") {
+            Some(Json::Arr(rows)) => rows.clone(),
+            other => panic!("expected jobs array, got {other:?}"),
+        };
+        assert_eq!(rows.len(), 2);
+        for (row, name) in rows.iter().zip(["jobA", "jobB"]) {
+            assert_eq!(
+                row.get("job").and_then(Json::as_str),
+                Some(name),
+                "row order follows tenancy order"
+            );
+        }
+    }
+
+    #[test]
+    fn duplicate_job_names_are_rejected() {
+        let err = Cluster::launch(vec![spec("same", 2, 2), spec("same", 2, 2)])
+            .err()
+            .expect("duplicate names must not launch");
+        assert!(err.to_string().contains("duplicate job name"));
+    }
+
+    #[test]
+    fn unstaged_jobs_are_rejected() {
+        let mut s = spec("flat", 2, 2);
+        s.cfg.staging = None;
+        let err = Cluster::launch(vec![s]).err().expect("tenancy requires staging");
+        assert!(err.to_string().contains("not staged"));
+    }
+}

@@ -167,11 +167,18 @@ pub struct StagingConfig {
     /// the one being written); older drained generations are evicted when
     /// the fast tier runs short.
     pub keep_fulls: usize,
+    /// Admit a file to the background drain as soon as its own fast-tier
+    /// WRITE completes instead of after the whole wave lands (default on).
+    /// Off restores the historical whole-wave barrier.
+    pub early_admission: bool,
 }
 
 impl Default for StagingConfig {
     fn default() -> Self {
-        StagingConfig { keep_fulls: 2 }
+        StagingConfig {
+            keep_fulls: 2,
+            early_admission: true,
+        }
     }
 }
 
@@ -245,6 +252,14 @@ pub struct RunConfig {
     /// `CkptReport` timing field, and expose the critical path. The
     /// structured event log is always on; this gates only spans/counters.
     pub trace: bool,
+    /// Event-driven driver (`--event-core on|off`, default on): steady-
+    /// state supersteps between interesting boundaries (checkpoints,
+    /// fault-plan marks, drain completions, console polls) advance through
+    /// an O(1) analytic recurrence per step; per-rank state is deferred
+    /// and replayed bit-exactly when an observer needs it. Off forces the
+    /// historical O(ranks)-per-superstep loop. Virtual time, stored
+    /// generations and fingerprints are identical either way.
+    pub event_driven: bool,
 }
 
 impl RunConfig {
@@ -274,6 +289,7 @@ impl RunConfig {
             redundancy: RedundancyScheme::None,
             redundancy_set_size: DEFAULT_SET_SIZE,
             trace: false,
+            event_driven: true,
         }
     }
 

@@ -70,9 +70,35 @@ pub enum Reply {
     Killed(crate::fs::Store),
 }
 
+/// One per-job status row: the shape shared by the single-job console
+/// status reply and the multi-job [`crate::cluster::Cluster`] status.
+pub fn job_row(sim: &JobSim) -> Json {
+    Json::obj()
+        .set("job", sim.cfg.job.as_str())
+        .set("app", sim.cfg.app.name())
+        .set("ranks", sim.cfg.ranks as u64)
+        .set("step", sim.step)
+        .set("virtual_secs", sim.now().as_secs())
+        .set("checkpoints", sim.coord.stats.checkpoints)
+        .set(
+            "pending_drain_bytes",
+            // On a shared multi-tenant store only this job's queued bytes
+            // count; path prefixes attribute them.
+            sim.fs
+                .tiered()
+                .map_or(0, |t| t.pending_bytes_for(&sim.cfg.job)),
+        )
+}
+
 /// Execute a command against a live job. `Kill` consumes the sim, so it is
 /// handled by [`run_script`] / the caller; this executes everything else.
 pub fn execute(sim: &mut JobSim, cmd: &Command) -> Reply {
+    // A console poll is an "interesting boundary" for the event-driven
+    // core: any open bulk-advance window must collapse so per-rank state
+    // (steps, in-flight messages) is concrete before we report on it.
+    if let Err(e) = sim.materialize() {
+        return Reply::Text(format!("console replay FAILED: {e}"));
+    }
     match cmd {
         Command::Status => {
             let j = Json::obj()
@@ -93,7 +119,8 @@ pub fn execute(sim: &mut JobSim, cmd: &Command) -> Reply {
                 .set("storage", sim.fs.describe())
                 .set("corruption", sim.any_corruption())
                 .set("metrics", sim.metrics.snapshot())
-                .set("events", sim.tracer.events_json());
+                .set("events", sim.tracer.events_json())
+                .set("jobs", Json::Arr(vec![job_row(sim)]));
             Reply::Text(j.to_string())
         }
         Command::Checkpoint => match sim.checkpoint() {
@@ -232,6 +259,8 @@ mod tests {
         assert!(t.contains("\"coord\":\"flat"), "{t}");
         assert!(t.contains("drain_counts_balanced"), "{t}");
         assert!(t.contains("\"events\""), "{t}");
+        assert!(t.contains("\"jobs\":["), "per-job status rows: {t}");
+        assert!(t.contains("pending_drain_bytes"), "{t}");
     }
 
     #[test]

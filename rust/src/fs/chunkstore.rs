@@ -64,6 +64,10 @@ pub struct RefOutcome {
     pub ship_vbytes: u64,
     /// Virtual bytes satisfied by reference to already-indexed chunks.
     pub deduped_vbytes: u64,
+    /// Subset of `deduped_vbytes` satisfied by chunks the referencing job
+    /// held no reference to — the dedup credit one tenant earns from
+    /// another tenant's checkpoints (multi-job shared chunk store).
+    pub cross_job_vbytes: u64,
 }
 
 /// A chunk whose last reference was just dropped (GC candidate).
@@ -77,22 +81,56 @@ pub struct DeadChunk {
 
 /// The index + recipe table. Rides [`crate::fs::TieredStore`] (and so
 /// survives a job kill alongside the file systems).
+///
+/// Multi-job tenancy: references are attributed to the owning *job* (the
+/// first path component of the referencing file). `job_refs` tracks how
+/// many of each chunk's references each job holds, so (a) a dedup hit
+/// against a chunk only *other* jobs hold is reported as cross-job
+/// dedup, and (b) one job releasing its last reference can never reclaim
+/// an object another job still needs — the total refcount stays the
+/// single source of GC truth and only hits zero when every job let go.
 #[derive(Clone, Debug, Default)]
 pub struct ChunkStore {
     index: BTreeMap<u128, ChunkEntry>,
     recipes: BTreeMap<String, ChunkRecipe>,
+    /// Per-chunk, per-job reference counts (GC-isolation observability;
+    /// rebuilt from recipe paths on index decode).
+    job_refs: BTreeMap<u128, BTreeMap<String, u64>>,
+}
+
+/// Job a path belongs to: its first `/`-separated component (the run
+/// config's job name prefixes every path a job writes).
+pub fn job_of(path: &str) -> &str {
+    match path.find('/') {
+        Some(i) => &path[..i],
+        None => path,
+    }
 }
 
 impl ChunkStore {
-    /// Take one reference per chunk occurrence in `recipe`. Chunks seen
-    /// for the first time are the caller's to ship; the rest dedup.
+    /// Take one reference per chunk occurrence in `recipe`, unattributed
+    /// (single-tenant callers and unit tests; equivalent to
+    /// [`ChunkStore::reference_for`] with an empty job name).
     pub fn reference(&mut self, recipe: &ChunkRecipe) -> RefOutcome {
+        self.reference_for("", recipe)
+    }
+
+    /// Take one reference per chunk occurrence in `recipe` on behalf of
+    /// `job`. Chunks seen for the first time are the caller's to ship;
+    /// the rest dedup — and a hit against a chunk `job` itself holds no
+    /// reference to is additionally counted as cross-job dedup.
+    pub fn reference_for(&mut self, job: &str, recipe: &ChunkRecipe) -> RefOutcome {
         let mut out = RefOutcome::default();
         for c in &recipe.chunks {
             match self.index.get_mut(&c.digest) {
                 Some(e) => {
                     e.refs += 1;
                     out.deduped_vbytes += c.vbytes;
+                    let holders = self.job_refs.entry(c.digest).or_default();
+                    if !holders.contains_key(job) {
+                        out.cross_job_vbytes += c.vbytes;
+                    }
+                    *holders.entry(job.to_string()).or_insert(0) += 1;
                 }
                 None => {
                     self.index.insert(
@@ -104,6 +142,10 @@ impl ChunkStore {
                             content: 0,
                         },
                     );
+                    self.job_refs
+                        .entry(c.digest)
+                        .or_default()
+                        .insert(job.to_string(), 1);
                     out.ship_vbytes += c.vbytes;
                 }
             }
@@ -111,18 +153,37 @@ impl ChunkStore {
         out
     }
 
-    /// Drop one reference per chunk occurrence in `recipe`. Returns every
-    /// chunk whose refcount hit zero — the caller deletes the stored
-    /// objects from the durable tier.
+    /// Drop one reference per chunk occurrence in `recipe`, unattributed
+    /// (see [`ChunkStore::release_for`]).
     pub fn release(&mut self, recipe: &ChunkRecipe) -> Vec<DeadChunk> {
+        self.release_for("", recipe)
+    }
+
+    /// Drop one of `job`'s references per chunk occurrence in `recipe`.
+    /// Returns every chunk whose *total* refcount hit zero — the caller
+    /// deletes the stored objects from the durable tier. A chunk another
+    /// job still references survives regardless of what `job` releases.
+    pub fn release_for(&mut self, job: &str, recipe: &ChunkRecipe) -> Vec<DeadChunk> {
         let mut dead = Vec::new();
         for c in &recipe.chunks {
             if let Some(e) = self.index.get_mut(&c.digest) {
                 e.refs = e.refs.saturating_sub(1);
+                if let Some(holders) = self.job_refs.get_mut(&c.digest) {
+                    if let Some(n) = holders.get_mut(job) {
+                        *n = n.saturating_sub(1);
+                        if *n == 0 {
+                            holders.remove(job);
+                        }
+                    }
+                    if holders.is_empty() {
+                        self.job_refs.remove(&c.digest);
+                    }
+                }
                 if e.refs == 0 {
                     let stored = e.stored;
                     let vbytes = e.vbytes;
                     self.index.remove(&c.digest);
+                    self.job_refs.remove(&c.digest);
                     dead.push(DeadChunk {
                         digest: c.digest,
                         stored,
@@ -132,6 +193,15 @@ impl ChunkStore {
             }
         }
         dead
+    }
+
+    /// References `job` holds on `digest` (GC-isolation observability).
+    pub fn job_refs(&self, digest: u128, job: &str) -> u64 {
+        self.job_refs
+            .get(&digest)
+            .and_then(|h| h.get(job))
+            .copied()
+            .unwrap_or(0)
     }
 
     /// Record that a chunk's object bytes are durable, with the content
@@ -330,13 +400,26 @@ impl ChunkStore {
         }
         // Recompute committed refcounts; a recipe chunk the entry table
         // does not describe is an inconsistency, not a zero-ref chunk.
-        for rec in recipes.values() {
+        // Job attribution comes back from the recipe paths (job = first
+        // path component), so per-job GC isolation survives a restart.
+        let mut job_refs: BTreeMap<u128, BTreeMap<String, u64>> = BTreeMap::new();
+        for (path, rec) in &recipes {
+            let job = job_of(path);
             for c in &rec.chunks {
                 index.get_mut(&c.digest)?.refs += 1;
+                *job_refs
+                    .entry(c.digest)
+                    .or_default()
+                    .entry(job.to_string())
+                    .or_insert(0) += 1;
             }
         }
         index.retain(|_, e| e.refs > 0);
-        Some(ChunkStore { index, recipes })
+        Some(ChunkStore {
+            index,
+            recipes,
+            job_refs,
+        })
     }
 }
 
@@ -463,6 +546,53 @@ mod tests {
         // Truncation -> framing failure.
         assert!(ChunkStore::decode_index(&enc[..enc.len() - 5]).is_none());
         assert!(ChunkStore::decode_index(b"short").is_none());
+    }
+
+    #[test]
+    fn cross_job_dedup_and_gc_isolation() {
+        let mut cs = ChunkStore::default();
+        let r = recipe(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let a = cs.reference_for("jobA", &r);
+        assert_eq!(a.ship_vbytes, 8);
+        assert_eq!(a.cross_job_vbytes, 0);
+        // Same job referencing again: dedup, but not cross-job dedup.
+        let a2 = cs.reference_for("jobA", &r);
+        assert_eq!(a2.deduped_vbytes, 8);
+        assert_eq!(a2.cross_job_vbytes, 0);
+        // Another tenant hits jobA's chunks: full cross-job credit.
+        let b = cs.reference_for("jobB", &r);
+        assert_eq!(b.deduped_vbytes, 8);
+        assert_eq!(b.cross_job_vbytes, 8);
+        assert_eq!(cs.job_refs(r.chunks[0].digest, "jobA"), 2);
+        assert_eq!(cs.job_refs(r.chunks[0].digest, "jobB"), 1);
+        // jobA releasing everything it holds reclaims nothing while
+        // jobB's reference is live.
+        assert!(cs.release_for("jobA", &r).is_empty());
+        assert!(cs.release_for("jobA", &r).is_empty());
+        assert_eq!(cs.job_refs(r.chunks[0].digest, "jobA"), 0);
+        assert_eq!(cs.chunk_count(), 2, "jobB keeps the chunks alive");
+        let dead = cs.release_for("jobB", &r);
+        assert_eq!(dead.len(), 2, "last job out reclaims");
+        assert_eq!(cs.chunk_count(), 0);
+    }
+
+    #[test]
+    fn decode_rebuilds_job_attribution_from_recipe_paths() {
+        let mut cs = ChunkStore::default();
+        let r = recipe(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        cs.reference_for("j1", &r);
+        cs.reference_for("j2", &r);
+        cs.mark_stored(r.chunks[0].digest, 1);
+        cs.mark_stored(r.chunks[1].digest, 2);
+        cs.commit("j1/ckpt/g0/f", r.clone());
+        cs.commit("j2/ckpt/g0/f", r.clone());
+        let back = ChunkStore::decode_index(&cs.encode_index()).unwrap();
+        assert_eq!(back.job_refs(r.chunks[0].digest, "j1"), 1);
+        assert_eq!(back.job_refs(r.chunks[0].digest, "j2"), 1);
+        // A third job hitting the rebuilt index earns cross-job credit.
+        let mut back = back;
+        let o = back.reference_for("j3", &r);
+        assert_eq!(o.cross_job_vbytes, 8);
     }
 
     #[test]

@@ -34,7 +34,7 @@ use crate::ckpt::chunk::ChunkRecipe;
 use crate::topology::NodeId;
 use crate::{log_debug, log_warn};
 
-pub use chunkstore::ChunkStore;
+pub use chunkstore::{job_of, ChunkStore};
 pub use redundancy::{RedundancyConfig, RedundancyScheme, DEFAULT_SET_SIZE};
 pub use tiered::{DrainStats, DrainTick, StagedIo, TieredStore};
 

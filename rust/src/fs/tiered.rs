@@ -48,9 +48,9 @@
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
-use super::chunkstore::{object_path, ChunkStore, INDEX_PATH, OBJECT_PREFIX};
+use super::chunkstore::{job_of, object_path, ChunkStore, INDEX_PATH, OBJECT_PREFIX};
 use super::redundancy::{self, ProtectedFile, RedundancyConfig, RedundancyScheme, SetRecord};
-use super::{FileSystem, FsError, IoReport, StorageTier, WriteReq};
+use super::{FileSystem, FsError, FsKind, IoReport, StorageTier, WriteReq};
 use crate::ckpt::chunk::{ChunkRecipe, DEFAULT_CHUNK_BYTES};
 use crate::simnet::fabric::Fabric;
 use crate::topology::NodeId;
@@ -73,6 +73,10 @@ pub struct DrainStats {
     /// Logical drain bytes satisfied by reference to chunks the durable
     /// index already held — never shipped to the PFS.
     pub deduped_bytes: u64,
+    /// Subset of `deduped_bytes` satisfied by chunks the writing job held
+    /// no reference of its own to — dedup credit earned from *other*
+    /// tenants of a shared chunk store.
+    pub cross_job_deduped_bytes: u64,
     /// Durable-tier seconds spent draining (background + forced).
     pub busy_secs: f64,
     /// Subset of `busy_secs` charged synchronously as backpressure.
@@ -99,6 +103,17 @@ impl DrainStats {
             self.deduped_bytes as f64 / logical as f64
         }
     }
+
+    /// Fraction of logical drain traffic satisfied by *other* jobs'
+    /// chunks (the multi-tenancy dedup win; zero for a single job).
+    pub fn cross_job_dedup_ratio(&self) -> f64 {
+        let logical = self.deduped_bytes + self.drained_bytes;
+        if logical == 0 {
+            0.0
+        } else {
+            self.cross_job_deduped_bytes as f64 / logical as f64
+        }
+    }
 }
 
 /// One file queued for staging to the durable tier.
@@ -113,6 +128,13 @@ struct DrainItem {
     granularity: u64,
     /// Content recipe (referenced into the chunk index at queue time).
     recipe: Option<ChunkRecipe>,
+    /// Virtual time at which this file's own fast-tier write landed —
+    /// the moment the early-admission drain may start on it. Stamped
+    /// wave-relative (`<= 0`, offset from the wave's end) by
+    /// [`TieredStore::write_wave`], resolved to absolute time by
+    /// [`TieredStore::admit_wave`], and consumed (set to `INFINITY`)
+    /// once its stall-window credit has been granted.
+    ready_at: f64,
 }
 
 /// One checkpoint generation's fast-tier footprint (for eviction), plus
@@ -204,9 +226,18 @@ pub struct TieredStore {
     nodes: u32,
     /// Virtual time up to which the background drain has already worked.
     clock: f64,
-    /// Fractional-byte credit carried between ticks (chunk-granular
-    /// draining would otherwise lose sub-chunk budgets).
-    credit: f64,
+    /// Per-job fractional-byte credit carried between ticks (chunk-
+    /// granular draining would otherwise lose sub-chunk budgets). Keyed
+    /// by the job prefix of the queued paths; single-tenant stores only
+    /// ever hold one entry and behave exactly like a scalar credit.
+    credit: BTreeMap<String, f64>,
+    /// Drain-bandwidth QoS weights per job (weighted fair share of the
+    /// BB→PFS link among jobs with queued work; default weight 1.0).
+    drain_weights: BTreeMap<String, f64>,
+    /// Admit a file to the background drain as soon as its own fast-tier
+    /// write lands, instead of holding the whole wave back until the
+    /// checkpoint stall ends (the PR-6 whole-wave barrier).
+    early_admission: bool,
     /// Committed chunk state changed since the `.chunkstore/INDEX` object
     /// was last persisted to the durable tier.
     index_dirty: bool,
@@ -237,7 +268,9 @@ impl TieredStore {
             keep_fulls: keep_fulls.max(1),
             nodes: nodes.max(1),
             clock: 0.0,
-            credit: 0.0,
+            credit: BTreeMap::new(),
+            drain_weights: BTreeMap::new(),
+            early_admission: false,
             index_dirty: false,
             stats: DrainStats::default(),
             redundancy: RedundancyConfig::default(),
@@ -310,7 +343,7 @@ impl TieredStore {
         let mut chunks = decoded;
         for item in &self.queue {
             if let Some(rec) = &item.recipe {
-                chunks.reference(rec);
+                chunks.reference_for(job_of(&item.path), rec);
             }
         }
         self.chunks = chunks;
@@ -400,6 +433,16 @@ impl TieredStore {
         self.queue.iter().map(|i| i.remaining).sum()
     }
 
+    /// Physical bytes still queued for shipping that belong to one
+    /// tenant (first path component = job name; multi-job observability).
+    pub fn pending_bytes_for(&self, job: &str) -> u64 {
+        self.queue
+            .iter()
+            .filter(|i| job_of(&i.path) == job)
+            .map(|i| i.remaining)
+            .sum()
+    }
+
     /// Files whose durable copy is not committed yet (a fully-deduped
     /// file can be pending with zero `pending_bytes`).
     pub fn pending_files(&self) -> usize {
@@ -421,11 +464,76 @@ impl TieredStore {
         self.generations.push_back(Generation::default());
     }
 
-    /// Advance the drain clock without granting drain credit (e.g. across
-    /// the synchronous checkpoint stall, during which the agents hold off).
+    /// Advance the drain clock across the synchronous checkpoint stall.
+    /// Without early admission the agents hold off entirely and no credit
+    /// is granted; with it, each queued file earns credit for the part of
+    /// the stall window after its own fast-tier write landed.
     pub fn sync_clock(&mut self, now_secs: f64) {
         self.apply_due_losses(now_secs);
+        if self.early_admission && now_secs > self.clock {
+            self.admit_early(now_secs);
+        }
         self.clock = self.clock.max(now_secs);
+    }
+
+    /// Turn on early drain admission (threaded from
+    /// `StagingConfig::early_admission`).
+    pub fn set_early_admission(&mut self, on: bool) {
+        self.early_admission = on;
+    }
+
+    /// Set `job`'s drain-bandwidth QoS weight (weighted fair share of the
+    /// BB→PFS link among jobs with queued work; unset jobs weigh 1.0).
+    pub fn set_drain_weight(&mut self, job: &str, weight: f64) {
+        self.drain_weights.insert(job.to_string(), weight.max(0.0));
+    }
+
+    fn drain_weight(&self, job: &str) -> f64 {
+        self.drain_weights.get(job).copied().unwrap_or(1.0)
+    }
+
+    /// Grant stall-window drain credit for files whose own fast-tier
+    /// write already landed: a serial-service walk per job, from the
+    /// drain clock to `now`, each file usable only after its `ready_at`.
+    /// The grant is bounded by the walked files' remaining bytes, so the
+    /// drain can never ship bytes "before they were written".
+    fn admit_early(&mut self, now_secs: f64) {
+        let c0 = self.clock;
+        let bw = self.drain_bandwidth();
+        let mut grants: BTreeMap<String, f64> = BTreeMap::new();
+        let mut cursors: BTreeMap<String, f64> = BTreeMap::new();
+        for item in &mut self.queue {
+            if !item.ready_at.is_finite() {
+                continue;
+            }
+            let job = job_of(&item.path).to_string();
+            let t = cursors.entry(job.clone()).or_insert(c0);
+            *t = t.max(item.ready_at);
+            if *t < now_secs {
+                let service = item.remaining as f64 / bw;
+                let used = service.min(now_secs - *t);
+                *grants.entry(job).or_insert(0.0) += used * bw;
+                *t += used;
+            }
+            item.ready_at = f64::INFINITY; // credit granted once
+        }
+        for (job, g) in grants {
+            if g > 0.0 {
+                *self.credit.entry(job).or_insert(0.0) += g;
+            }
+        }
+    }
+
+    /// Resolve the wave-relative `ready_at` stamps of just-queued items
+    /// against the wave's absolute end time on the virtual timeline
+    /// (callers place the wave; the store only knows its duration).
+    /// No-op unless early admission is on.
+    pub fn admit_wave(&mut self, wave_end_secs: f64) {
+        for item in &mut self.queue {
+            if item.ready_at <= 0.0 {
+                item.ready_at = (wave_end_secs + item.ready_at).max(0.0);
+            }
+        }
     }
 
     /// Rebase the drain clock onto a fresh timeline (restart: the store
@@ -946,6 +1054,7 @@ impl TieredStore {
                 remaining: vbytes,
                 granularity: DEFAULT_CHUNK_BYTES as u64,
                 recipe: None,
+                ready_at: f64::INFINITY,
             });
         }
     }
@@ -1060,22 +1169,50 @@ impl TieredStore {
 
         let mut gen_paths = Vec::with_capacity(meta.len());
         let mut deduped = 0u64;
+        let mut cross_job = 0u64;
+        // Per-file fast-tier completion offsets: each node lands its own
+        // files serially at node bandwidth (the write_parallel model), so
+        // file f on node n is on the fast tier at meta_latency + (n's
+        // cumulative bytes through f) / per-node bandwidth — the moment
+        // the early-admission drain may pick it up.
+        let mut node_cum: BTreeMap<NodeId, u64> = BTreeMap::new();
         for (path, virtual_bytes, recipe, node) in meta {
             self.owners.insert(path.clone(), node);
             gen_paths.push(path.clone());
             let (remaining, granularity) = match &recipe {
                 Some(rec) => {
-                    let out = self.chunks.reference(rec);
+                    let out = self.chunks.reference_for(job_of(&path), rec);
                     deduped += out.deduped_vbytes;
+                    cross_job += out.cross_job_vbytes;
                     (out.ship_vbytes, rec.chunk_bytes.max(1))
                 }
                 None => (virtual_bytes, DEFAULT_CHUNK_BYTES as u64),
+            };
+            let ready_at = if self.early_admission {
+                let cum = node_cum.entry(node).or_insert(0);
+                *cum += virtual_bytes;
+                let off = match self.fast.cfg.kind {
+                    FsKind::BurstBuffer => {
+                        self.fast.cfg.meta_latency
+                            + *cum as f64 / self.fast.cfg.per_node_write_bw
+                    }
+                    // A pool-limited fast tier models one aggregate wave —
+                    // no per-file completion to admit against.
+                    FsKind::Lustre => io.duration,
+                };
+                // Wave-relative stamp (<= 0, offset from the wave's end);
+                // `admit_wave` resolves it once the caller has placed the
+                // wave on the virtual timeline.
+                off.min(io.duration) - io.duration
+            } else {
+                f64::INFINITY
             };
             self.queue.push_back(DrainItem {
                 path,
                 remaining,
                 granularity,
                 recipe,
+                ready_at,
             });
         }
         self.generations
@@ -1084,6 +1221,7 @@ impl TieredStore {
             .paths
             .extend(gen_paths);
         self.stats.deduped_bytes += deduped;
+        self.stats.cross_job_deduped_bytes += cross_job;
         let pending = self.pending_bytes();
         log_debug!(
             "fs",
@@ -1135,7 +1273,7 @@ impl TieredStore {
         let tick_t0 = self.clock.min(now_secs);
         self.clock = self.clock.max(now_secs);
         if self.queue.is_empty() {
-            self.credit = 0.0;
+            self.credit.clear();
             self.maybe_persist_index(); // retry a previously failed persist
             self.sample_drain_gauges(now_secs);
             return DrainTick {
@@ -1144,33 +1282,61 @@ impl TieredStore {
             };
         }
         let bw = self.drain_bandwidth();
-        self.credit += budget * bw;
+        // Weighted fair share of the BB→PFS link: the tick's byte budget
+        // splits across the jobs with queued work by drain weight. A lone
+        // job's share is exactly 1.0, so single-tenant arithmetic is
+        // bit-identical to an unshared link.
+        let jobs: BTreeSet<String> = self
+            .queue
+            .iter()
+            .map(|i| job_of(&i.path).to_string())
+            .collect();
+        let total_w: f64 = jobs.iter().map(|j| self.drain_weight(j)).sum();
+        for job in &jobs {
+            let share = if total_w > 0.0 {
+                self.drain_weight(job) / total_w
+            } else {
+                1.0 / jobs.len() as f64
+            };
+            *self.credit.entry(job.clone()).or_insert(0.0) += budget * bw * share;
+        }
         let mut tick = DrainTick::default();
         let mut failed: Vec<DrainItem> = Vec::new();
-        loop {
-            let Some(item) = self.queue.front_mut() else {
-                break;
-            };
+        // Per-job FIFO service: a job whose head-of-line item stalls
+        // (out of credit mid-file) stops draining for the tick, but the
+        // scan continues so other tenants' queued items still progress.
+        let mut stalled: BTreeSet<String> = BTreeSet::new();
+        let mut idx = 0;
+        while idx < self.queue.len() {
+            let job = job_of(&self.queue[idx].path).to_string();
+            if stalled.contains(&job) {
+                idx += 1;
+                continue;
+            }
+            let item = &mut self.queue[idx];
             // (Zero-byte items — a fully-deduped generation, or a clean
             // incremental rank — skip straight to completion below.)
             if item.remaining > 0 {
+                let credit = self.credit.entry(job.clone()).or_insert(0.0);
                 let whole = item.remaining as f64;
-                let take = if self.credit >= whole {
+                let take = if *credit >= whole {
                     whole
                 } else {
                     // Partial drains stop on a chunk boundary.
                     let g = item.granularity.max(1) as f64;
-                    (self.credit / g).floor() * g
+                    (*credit / g).floor() * g
                 };
                 if take <= 0.0 {
-                    break;
+                    stalled.insert(job);
+                    idx += 1;
+                    continue;
                 }
                 item.remaining -= take as u64;
-                self.credit -= take;
+                *credit -= take;
                 tick.drained_bytes += take as u64;
             }
-            if item.remaining == 0 {
-                let done = self.queue.pop_front().expect("front exists");
+            if self.queue[idx].remaining == 0 {
+                let done = self.queue.remove(idx).expect("index valid");
                 if self.complete_drain(&done) {
                     tick.completed_files += 1;
                 } else {
@@ -1180,7 +1346,8 @@ impl TieredStore {
                     failed.push(done);
                 }
             } else {
-                break;
+                stalled.insert(job);
+                idx += 1;
             }
         }
         self.queue.extend(failed);
@@ -1188,7 +1355,7 @@ impl TieredStore {
         self.stats.busy_secs += tick.drained_bytes as f64 / bw;
         tick.queue_empty = self.queue.is_empty();
         if tick.queue_empty {
-            self.credit = 0.0;
+            self.credit.clear();
             if tick.completed_files > 0 {
                 log_info!(
                     "fs",
@@ -1236,7 +1403,7 @@ impl TieredStore {
             self.stats.drained_bytes += item.remaining;
         }
         self.queue.extend(failed);
-        self.credit = 0.0;
+        self.credit.clear();
         self.stats.busy_secs += secs;
         self.maybe_persist_index();
         if secs > 0.0 {
@@ -1273,7 +1440,7 @@ impl TieredStore {
                     // plain copy supersedes any stale committed recipe
                     // (whose chunk references would otherwise leak).
                     if let Some(old) = self.chunks.remove_recipe(&item.path) {
-                        self.release_and_gc(&old);
+                        self.release_and_gc(job_of(&item.path), &old);
                     }
                     self.stats.drained_files += 1;
                     true
@@ -1314,7 +1481,7 @@ impl TieredStore {
                 }
                 self.index_dirty = true;
                 if let Some(old) = self.chunks.commit(&item.path, rec.clone()) {
-                    self.release_and_gc(&old);
+                    self.release_and_gc(job_of(&item.path), &old);
                 }
                 // The recipe supersedes any stale plain durable copy.
                 // Persist the index naming it BEFORE dropping that copy,
@@ -1350,9 +1517,9 @@ impl TieredStore {
     /// stale persisted index must never name a missing object (reload
     /// would report corruption); on a failed persist the objects are kept
     /// and reclaimed by a later reload's orphan sweep.
-    fn release_and_gc(&mut self, recipe: &ChunkRecipe) {
+    fn release_and_gc(&mut self, job: &str, recipe: &ChunkRecipe) {
         self.index_dirty = true;
-        let dead = self.chunks.release(recipe);
+        let dead = self.chunks.release_for(job, recipe);
         if dead.iter().any(|d| d.stored) {
             self.maybe_persist_index();
         }
@@ -1490,7 +1657,7 @@ impl TieredStore {
         for item in queue {
             if item.path == path {
                 if let Some(rec) = &item.recipe {
-                    self.release_and_gc(rec);
+                    self.release_and_gc(job_of(&item.path), rec);
                 }
             } else {
                 self.queue.push_back(item);
@@ -1652,7 +1819,7 @@ impl TieredStore {
         let durable = self.durable.delete(path).is_ok();
         let recipe = match self.chunks.remove_recipe(path) {
             Some(old) => {
-                self.release_and_gc(&old);
+                self.release_and_gc(job_of(path), &old);
                 true
             }
             None => false,
@@ -2741,5 +2908,179 @@ mod tests {
             80 * MIB,
             "only g1 + its copies remain on the fast tier"
         );
+    }
+
+    #[test]
+    fn early_admission_strictly_improves_drain_start() {
+        // Same wave, same stall window; the only difference is whether
+        // files are admitted to the drain as their own fast-tier writes
+        // land. The legacy store has earned zero budget when the stall
+        // ends; the early-admission store has already been draining.
+        // (The rank-visible stall itself is untouched — admission only
+        // grants background-drain credit, so the pipelined stall gate
+        // asserted at the sim level is unaffected.)
+        let mk = |early: bool| {
+            let mut ts = store(2048 * MIB, 2);
+            ts.set_early_admission(early);
+            ts.begin_ckpt(0.0);
+            let io = ts.write_wave(wave("g0", 4, 64 * MIB)).unwrap();
+            // The caller (sim) places the wave at [0, fast_secs] and the
+            // stall runs 5 virtual seconds past it (exchange, resume...).
+            ts.admit_wave(io.fast_secs);
+            ts.sync_clock(io.fast_secs + 5.0);
+            (ts, io.fast_secs + 5.0)
+        };
+        let (mut legacy, t_resume) = mk(false);
+        let (mut early, t_resume2) = mk(true);
+        assert_eq!(t_resume, t_resume2);
+        // Zero further budget: any progress at resume time came from the
+        // stall window itself.
+        let lt = legacy.drain_to(t_resume);
+        let et = early.drain_to(t_resume);
+        assert_eq!(lt.drained_bytes, 0, "legacy drain starts at resume");
+        assert!(
+            et.drained_bytes > 0,
+            "early admission must have drained inside the stall window"
+        );
+        // ...but never ahead of physics: credit is bounded by the stall
+        // window at drain bandwidth.
+        let bound = (t_resume * early.drain_bandwidth()).ceil() as u64;
+        assert!(et.drained_bytes <= bound, "{} > {bound}", et.drained_bytes);
+        assert!(early.pending_bytes() < legacy.pending_bytes());
+    }
+
+    #[test]
+    fn early_admission_skips_stale_backlog() {
+        // Only files of the current wave earn stall-window credit; an
+        // older generation's still-queued backlog keeps holding off
+        // (its ready stamps were consumed by the previous sync).
+        let mut ts = store(2048 * MIB, 3);
+        ts.set_early_admission(true);
+        ts.begin_ckpt(0.0);
+        let io0 = ts.write_wave(wave("g0", 2, 64 * MIB)).unwrap();
+        ts.admit_wave(io0.fast_secs);
+        ts.sync_clock(io0.fast_secs); // zero-width stall: no credit
+        assert_eq!(ts.pending_bytes(), 2 * 64 * MIB);
+        // Second wave with a stall long enough to cover its own bytes:
+        // g1's files earn stall credit, g0's backlog does not.
+        ts.begin_ckpt(io0.fast_secs);
+        let io1 = ts.write_wave(wave("g1", 2, 64 * MIB)).unwrap();
+        let wave_end = io0.fast_secs + io1.fast_secs;
+        ts.admit_wave(wave_end);
+        ts.sync_clock(wave_end + 1000.0);
+        let tick = ts.drain_to(wave_end + 1000.0);
+        // The stall credit covers exactly one wave's bytes (g1's own);
+        // g0's backlog earned nothing, so the drained total is one wave,
+        // never two.
+        assert_eq!(tick.drained_bytes, 2 * 64 * MIB);
+        assert_eq!(ts.pending_bytes(), 2 * 64 * MIB);
+    }
+
+    #[test]
+    fn drain_qos_shares_link_without_starvation() {
+        // Two tenants with queued work: the tick's budget splits 3:1 by
+        // drain weight, and the lighter job still progresses even though
+        // its item sits *behind* the heavier job's in the FIFO queue.
+        let mut ts = store(4096 * MIB, 2);
+        ts.set_drain_weight("jobA", 3.0);
+        ts.set_drain_weight("jobB", 1.0);
+        ts.begin_ckpt(0.0);
+        ts.write_wave(vec![
+            WriteReq {
+                node: NodeId(0),
+                path: "jobA/f0".into(),
+                virtual_bytes: 512 * MIB,
+                data: vec![1; 8],
+                recipe: None,
+            },
+            WriteReq {
+                node: NodeId(1),
+                path: "jobB/f0".into(),
+                virtual_bytes: 512 * MIB,
+                data: vec![2; 8],
+                recipe: None,
+            },
+        ])
+        .unwrap();
+        let tick = ts.drain_to(1.0);
+        assert!(tick.drained_bytes > 0);
+        let rem = |ts: &TieredStore, job: &str| -> u64 {
+            ts.queue
+                .iter()
+                .filter(|i| job_of(&i.path) == job)
+                .map(|i| i.remaining)
+                .sum()
+        };
+        let done_a = 512 * MIB - rem(&ts, "jobA");
+        let done_b = 512 * MIB - rem(&ts, "jobB");
+        assert!(done_a > 0, "heavy job progresses");
+        assert!(done_b > 0, "light job must not starve behind the heavy one");
+        // 3:1 share within chunk-granularity slack.
+        let g = 2 * DEFAULT_CHUNK_BYTES as u64;
+        assert!(
+            done_a + g >= 3 * done_b && 3 * done_b + 3 * g >= done_a,
+            "weighted shares off: a={done_a} b={done_b}"
+        );
+    }
+
+    #[test]
+    fn cross_job_dedup_counts_other_tenants_chunks_once() {
+        // Two jobs checkpoint the same region template into one shared
+        // chunk store: the second job's drain is satisfied entirely by
+        // the first's chunks, ships nothing, and is attributed as
+        // cross-job dedup.
+        let mut ts = store(1024 * MIB, 4);
+        let data = patterned(256 * 1024, 11);
+        ts.begin_ckpt(0.0);
+        ts.write_wave(vec![recipe_req(0, "jobA/f0", &data)]).unwrap();
+        ts.drain_to(1000.0);
+        assert_eq!(ts.stats.cross_job_deduped_bytes, 0);
+        let shipped = ts.stats.drained_bytes;
+        assert_eq!(shipped, data.len() as u64);
+
+        ts.begin_ckpt(1001.0);
+        let io = ts.write_wave(vec![recipe_req(1, "jobB/f0", &data)]).unwrap();
+        assert_eq!(io.deduped_bytes, data.len() as u64);
+        assert_eq!(ts.stats.cross_job_deduped_bytes, data.len() as u64);
+        ts.drain_to(2000.0);
+        assert_eq!(
+            ts.stats.drained_bytes, shipped,
+            "shared chunks drain once across jobs"
+        );
+        assert!(ts.stats.cross_job_dedup_ratio() > 0.49);
+        // Both jobs' files are independently restorable from the store.
+        let (datas, _) = ts
+            .read_durable(&[
+                (NodeId(0), "jobA/f0".to_string()),
+                (NodeId(1), "jobB/f0".to_string()),
+            ])
+            .unwrap();
+        assert_eq!(datas[0], data);
+        assert_eq!(datas[1], data);
+    }
+
+    #[test]
+    fn per_job_gc_is_isolated() {
+        // One tenant deleting its generation never reclaims chunk objects
+        // another tenant's committed recipes still reference.
+        let mut ts = store(1024 * MIB, 4);
+        let data = patterned(128 * 1024, 23);
+        ts.begin_ckpt(0.0);
+        ts.write_wave(vec![recipe_req(0, "jobA/f0", &data)]).unwrap();
+        ts.drain_to(1000.0);
+        ts.begin_ckpt(1001.0);
+        ts.write_wave(vec![recipe_req(1, "jobB/f0", &data)]).unwrap();
+        ts.drain_to(2000.0);
+
+        ts.delete("jobA/f0").unwrap();
+        assert_eq!(ts.stats.gc_bytes, 0, "jobB's chunks must survive");
+        let (datas, _) = ts
+            .read_durable(&[(NodeId(1), "jobB/f0".to_string())])
+            .unwrap();
+        assert_eq!(datas[0], data, "jobB unaffected by jobA's GC");
+
+        ts.delete("jobB/f0").unwrap();
+        assert!(ts.stats.gc_chunks > 0, "last tenant out reclaims");
+        assert!(ts.stats.gc_bytes > 0);
     }
 }

@@ -25,6 +25,7 @@
 pub mod apps;
 pub mod benchkit;
 pub mod ckpt;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod faults;

@@ -101,6 +101,7 @@ fn run() -> Result<()> {
 
     match cmd {
         "run" => cmd_run(&args),
+        "cluster" => cmd_cluster(&args),
         "usage" => cmd_usage(&args),
         "mapping" => cmd_mapping(&args),
         "preempt" => cmd_preempt(&args),
@@ -133,6 +134,14 @@ COMMANDS:
              critical_path breakdown and the structured event log.
              --trace-out (implies --trace) also writes a Perfetto /
              chrome://tracing JSON file.
+             [--event-core on|off] toggles the event-driven virtual-time
+             driver (on by default; off = concrete per-rank loop).
+  cluster    --jobs N [--drain-qos w1,w2,..] [--ckpt-every S]
+             [--preempt-storm H] [--storm-window SECS] [--storm-down SECS]
+             [--seed N] (plus usual run flags) run N tenants against ONE
+             shared BB+Lustre pair: cross-job chunk dedup, per-job drain
+             QoS, and an optional preemption storm through the shared
+             event queue.
   usage      [--jobs N] print the Fig. 1 application census
   mapping    --ranks N [--threads T] print rank→node/pid mapping
   preempt    [--ranks N] run the preempt-queue scenario
@@ -261,6 +270,16 @@ fn build_config(args: &Args) -> Result<RunConfig> {
     // there is nothing to export otherwise.
     if args.get_bool("trace") || args.get("trace-out").is_some() {
         cfg.trace = true;
+    }
+    if let Some(v) = args.get("event-core") {
+        // Event-driven virtual-time driver: bulk-advance steady-state
+        // supersteps in O(1) host work each. `off` forces the concrete
+        // per-rank loop for every step (the historical driver).
+        match v {
+            "on" | "true" | "1" => cfg.event_driven = true,
+            "off" | "false" | "0" => cfg.event_driven = false,
+            other => bail!("unknown --event-core {other} (on|off)"),
+        }
     }
     Ok(cfg)
 }
@@ -403,7 +422,9 @@ fn cmd_run(args: &Args) -> Result<()> {
                 .set("gc_chunks", ts.stats.gc_chunks)
                 .set("evicted_generations", ts.stats.evicted_generations)
                 .set("lost_files", ts.stats.lost_files)
-                .set("backpressure_secs", ts.stats.forced_secs),
+                .set("backpressure_secs", ts.stats.forced_secs)
+                .set("cross_job_deduped_bytes", ts.stats.cross_job_deduped_bytes)
+                .set("cross_job_dedup_ratio", ts.stats.cross_job_dedup_ratio()),
         );
     }
     if cfg.trace {
@@ -432,6 +453,54 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
     }
     println!("{}", out.to_string());
+    Ok(())
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    use mana::cluster::JobSpec;
+
+    let mut base = build_config(args)?;
+    if base.staging.is_none() {
+        // Multi-job tenancy IS the shared tiered store; staging is implied.
+        base.staging = Some(StagingConfig::default());
+    }
+    let n = args.get_u64("jobs", 2)? as usize;
+    if n == 0 {
+        bail!("--jobs must be >= 1");
+    }
+    let ckpt_every = args.get_u64("ckpt-every", 4)?;
+    let weights: Vec<f64> = match args.get("drain-qos") {
+        Some(spec) => {
+            let ws: Vec<f64> = spec
+                .split(',')
+                .map(|w| w.trim().parse::<f64>())
+                .collect::<Result<_, _>>()
+                .with_context(|| format!("--drain-qos={spec}"))?;
+            if ws.len() != n {
+                bail!("--drain-qos lists {} weights for --jobs {n}", ws.len());
+            }
+            if ws.iter().any(|w| *w <= 0.0) {
+                bail!("--drain-qos weights must be > 0");
+            }
+            ws
+        }
+        None => vec![1.0; n],
+    };
+
+    let mut specs = Vec::with_capacity(n);
+    for (i, w) in weights.iter().enumerate() {
+        let mut cfg = base.clone();
+        cfg.job = format!("{}-t{i}", base.job);
+        specs.push(JobSpec::new(cfg).weight(*w).ckpt_every(ckpt_every));
+    }
+
+    let hits = args.get_u64("preempt-storm", 0)? as u32;
+    let window: f64 = args.get("storm-window").unwrap_or("30").parse()?;
+    let down: f64 = args.get("storm-down").unwrap_or("10").parse()?;
+    let seed = args.get_u64("seed", 42)?;
+    let plan = preempt::storm_plan(n, hits, window, down, seed);
+    let report = preempt::run_preemption_storm(specs, &plan)?;
+    println!("{}", report.to_json().to_string());
     Ok(())
 }
 

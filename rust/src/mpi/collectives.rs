@@ -29,11 +29,11 @@ pub fn barrier(world: &mut MpiWorld, times: &mut [SimTime]) -> SimTime {
     done
 }
 
-/// Allreduce of `bytes` per rank: reduce-scatter + allgather cost model.
-/// Charges 2*bytes sent/received per rank.
-pub fn allreduce(world: &mut MpiWorld, times: &mut [SimTime], bytes: u64) -> SimTime {
-    assert_eq!(times.len(), world.size as usize);
-    let enter = times.iter().fold(SimTime::ZERO, |a, &t| a.max(t));
+/// Scalar cost of one allreduce of `bytes` per rank: the wire bytes each
+/// rank moves and the virtual duration past the entry time. Shared by the
+/// per-rank collective below and the event core's bulk-advance recurrence,
+/// so both paths compute bit-identical completion times.
+pub(crate) fn allreduce_cost(world: &MpiWorld, bytes: u64) -> (u64, f64) {
     let p = world.size as f64;
     let hops = log2_ceil(world.size).max(1) as f64;
     let bw = world.fabric.cfg.bandwidth;
@@ -44,14 +44,29 @@ pub fn allreduce(world: &mut MpiWorld, times: &mut [SimTime], bytes: u64) -> Sim
         0
     };
     let dur = hops * world.fabric.cfg.latency + wire_bytes as f64 / bw;
+    (wire_bytes, dur)
+}
+
+/// Per-rank message-count charge of one allreduce, each direction.
+pub(crate) fn allreduce_msgs(size: u32) -> u64 {
+    2 * log2_ceil(size) as u64
+}
+
+/// Allreduce of `bytes` per rank: reduce-scatter + allgather cost model.
+/// Charges 2*bytes sent/received per rank.
+pub fn allreduce(world: &mut MpiWorld, times: &mut [SimTime], bytes: u64) -> SimTime {
+    assert_eq!(times.len(), world.size as usize);
+    let enter = times.iter().fold(SimTime::ZERO, |a, &t| a.max(t));
+    let (wire_bytes, dur) = allreduce_cost(world, bytes);
+    let msgs = allreduce_msgs(world.size);
     let done = enter.after(dur);
     for (i, t) in times.iter_mut().enumerate() {
         *t = done;
         if world.size > 1 {
             world.counters[i].sent_bytes += wire_bytes;
             world.counters[i].recv_bytes += wire_bytes;
-            world.counters[i].sent_msgs += 2 * log2_ceil(world.size) as u64;
-            world.counters[i].recv_msgs += 2 * log2_ceil(world.size) as u64;
+            world.counters[i].sent_msgs += msgs;
+            world.counters[i].recv_msgs += msgs;
         }
     }
     let _ = RankId(0);

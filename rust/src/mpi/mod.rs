@@ -155,6 +155,39 @@ impl MpiWorld {
         self.inflight[dst.0 as usize].front().map(|m| m.deliver_at)
     }
 
+    /// Pop the front in-flight message queued for `dst` WITHOUT touching
+    /// the receive counters. The event core's materialize consumes the
+    /// window-entry messages whose byte accounting was already applied in
+    /// closed form during the bulk advance.
+    pub(crate) fn pop_inflight_raw(&mut self, dst: RankId) -> Option<Message> {
+        self.inflight[dst.0 as usize].pop_front()
+    }
+
+    /// Sorted-insert a message WITHOUT touching the send counters (the
+    /// event core rebuilding the steady-state in-flight window at
+    /// materialize time; accounting was applied in closed form).
+    pub(crate) fn push_inflight_raw(&mut self, msg: Message) {
+        let q = &mut self.inflight[msg.dst.0 as usize];
+        let pos = q.partition_point(|m| m.deliver_at <= msg.deliver_at);
+        q.insert(pos, msg);
+    }
+
+    /// Read-only view of `dst`'s in-flight queue (event-core eligibility
+    /// inspection).
+    pub(crate) fn inflight_for(&self, dst: RankId) -> &VecDeque<Message> {
+        &self.inflight[dst.0 as usize]
+    }
+
+    /// Apply a closed-form counter delta to one rank (bulk-advance
+    /// accounting for steps that were never individually simulated).
+    pub(crate) fn add_counters(&mut self, rank: RankId, d: RankCounters) {
+        let c = &mut self.counters[rank.0 as usize];
+        c.sent_bytes += d.sent_bytes;
+        c.recv_bytes += d.recv_bytes;
+        c.sent_msgs += d.sent_msgs;
+        c.recv_msgs += d.recv_msgs;
+    }
+
     /// Is any message (delivered-or-not) in flight matching the filter?
     pub fn has_matching_inflight(
         &self,

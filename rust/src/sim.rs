@@ -37,8 +37,9 @@ use crate::fs::{
 };
 use crate::launcher::{self, LaunchError};
 use crate::mem::Payload;
+use crate::mpi::collectives;
 use crate::mpi::comm::{CommRegistry, COMM_WORLD};
-use crate::mpi::MpiWorld;
+use crate::mpi::{Message, MpiWorld, RankCounters};
 use crate::runtime::Engine;
 use crate::simnet::control::{ControlNet, CtrlConfig};
 use crate::simnet::fabric::{Fabric, FabricConfig};
@@ -115,6 +116,41 @@ pub struct RestartReport {
     pub generation_rewound: u64,
 }
 
+/// Deferred steady-state supersteps (the event core's bulk advance).
+///
+/// While a window is open, `times`, `procs`, the in-flight queues, and the
+/// wrapper request sets are **stale**: the window holds the analytically
+/// advanced uniform rank clock plus the wire shape of the *last* deferred
+/// step, and [`JobSim::materialize`] replays the application state and
+/// rebuilds the wire bit-exactly before any observer looks. The recurrence
+/// repeats the concrete superstep's exact f64 operation sequence (f64
+/// addition is non-associative, so no closed form is possible for times —
+/// only for the u64 counters), which is what makes the equivalence bar
+/// bitwise rather than approximate.
+struct LazyWindow {
+    /// `procs[r].step` at window open (the first deferred superstep).
+    start_step: u64,
+    /// Deferred supersteps accumulated so far.
+    steps: u64,
+    /// Uniform post-allreduce rank clock after the last deferred step.
+    t_cur: SimTime,
+    /// Arrival times of the current in-flight halo pair (every rank's
+    /// inbound queue holds exactly two messages with these stamps).
+    d0: SimTime,
+    d1: SimTime,
+    /// Last deferred step's send chronology: post-compute time (chunk 0's
+    /// `sent_at`), chunk 1's send time after the careful-nonblocking wait,
+    /// and the two delivery stamps — everything materialize needs to
+    /// reconstruct the in-flight messages and the outstanding request.
+    c_final: SimTime,
+    t_sent_final: SimTime,
+    d0_final: SimTime,
+    d1_final: SimTime,
+    /// Per-rank MPI counter delta across the whole window (halo sends and
+    /// receives plus allreduce wire traffic; identical on every rank).
+    delta: RankCounters,
+}
+
 /// The live job.
 pub struct JobSim {
     pub cfg: RunConfig,
@@ -143,6 +179,8 @@ pub struct JobSim {
     ckpt_gen: u64,
     /// Generation of the last full checkpoint (the incremental parent).
     last_full_gen: Option<u64>,
+    /// Open bulk-advance window (event-driven driver), if any.
+    lazy: Option<LazyWindow>,
 }
 
 impl JobSim {
@@ -205,6 +243,7 @@ impl JobSim {
             cfg.ranks,
         );
         let tracer = Tracer::new(cfg.trace);
+        tracer.set_job(&cfg.job);
         fs.set_tracer(tracer.clone());
         let mut coord = Self::make_coordinator(&cfg, &topo);
         coord.set_tracer(tracer.clone());
@@ -240,6 +279,7 @@ impl JobSim {
             launch_startup_secs: launch.startup_secs,
             ckpt_gen: 0,
             last_full_gen: None,
+            lazy: None,
         })
     }
 
@@ -261,6 +301,7 @@ impl JobSim {
                 cfg.redundancy,
                 cfg.redundancy_set_size,
             ));
+            ts.set_early_admission(staging.early_admission);
             Self::schedule_fs_losses(cfg, &mut ts);
             return Store::Tiered(ts);
         }
@@ -315,10 +356,320 @@ impl JobSim {
 
     // -------------------------------------------------------------- steps
 
-    /// Run `n` supersteps.
+    /// Run `n` supersteps. With the event-driven driver (default),
+    /// steady-state steps between interesting boundaries collapse into the
+    /// bulk-advance recurrence — O(1) host work per step instead of
+    /// O(ranks) — and the concrete loop only runs when the wire shape is
+    /// not steady (step 0, post-restart replays, lower-half growth).
     pub fn run_steps(&mut self, n: u64) -> Result<()> {
         for _ in 0..n {
+            if self.bulk_step()? {
+                continue;
+            }
+            self.materialize()?;
             self.superstep()?;
+        }
+        Ok(())
+    }
+
+    /// Advance one superstep analytically if the job is in (or can enter)
+    /// the steady-state window. Returns `false` when the step must run
+    /// through the concrete per-rank loop instead.
+    fn bulk_step(&mut self) -> Result<bool> {
+        if !self.cfg.event_driven || self.cfg.ranks == 0 {
+            return Ok(false);
+        }
+        // Lower-half growth events mutate address spaces per step; run
+        // those steps concretely.
+        if self.step < self.cfg.faults.lower_half_growth_events as u64 {
+            return Ok(false);
+        }
+        if self.lazy.is_none() {
+            if !self.window_eligible() {
+                return Ok(false);
+            }
+            self.open_window();
+        }
+        let ranks = self.cfg.ranks;
+        let compute_secs = self.app.compute_secs();
+        let t_now = {
+            let w = self.lazy.as_mut().expect("window just ensured");
+            if ranks > 1 {
+                // Exact f64 op sequence of the concrete superstep on the
+                // uniform rank clock: recv chunk 0/1, compute, send chunk 0
+                // (no wait), send chunk 1 (careful-nonblocking wait for
+                // chunk 0), then the wrapped allreduce.
+                let t1 = w.t_cur.max(w.d0);
+                let t2 = t1.max(w.d1);
+                let mut c = t2;
+                c.advance(compute_secs);
+                let d0n = self.world.fabric.delivery_time(c, HALO_VIRTUAL_BYTES);
+                let ts = c.max(d0n);
+                let d1n = self.world.fabric.delivery_time(ts, HALO_VIRTUAL_BYTES);
+                // collectives::allreduce folds the (uniform) clocks from
+                // SimTime::ZERO; replicate that fold bit-for-bit.
+                let enter = SimTime::ZERO.max(ts);
+                let (wire, dur) = collectives::allreduce_cost(&self.world, ALLREDUCE_BYTES);
+                let msgs = collectives::allreduce_msgs(ranks);
+                w.t_cur = enter.after(dur);
+                w.d0 = d0n;
+                w.d1 = d1n;
+                w.c_final = c;
+                w.t_sent_final = ts;
+                w.d0_final = d0n;
+                w.d1_final = d1n;
+                w.delta.sent_bytes += 2 * HALO_VIRTUAL_BYTES + wire;
+                w.delta.recv_bytes += 2 * HALO_VIRTUAL_BYTES + wire;
+                w.delta.sent_msgs += 2 + msgs;
+                w.delta.recv_msgs += 2 + msgs;
+            } else {
+                w.t_cur.advance(compute_secs);
+            }
+            w.steps += 1;
+            w.t_cur
+        };
+        self.step += 1;
+        self.metrics.inc("supersteps", 1);
+        self.metrics.gauge("virtual_secs", t_now.as_secs());
+
+        // Same background-drain tick as the concrete superstep (identical
+        // `now`, so DrainStats and drain spans stay bitwise-identical).
+        let now = t_now.as_secs();
+        if let Store::Tiered(ts) = &mut self.fs {
+            let tick = ts.drain_to(now);
+            let backlog = ts.pending_bytes();
+            let depth = ts.pending_files();
+            self.metrics.gauge("drain.backlog_bytes", backlog as f64);
+            self.metrics.gauge("drain.queue_depth", depth as f64);
+            if tick.drained_bytes > 0 {
+                self.coord.stats.staged_bytes += tick.drained_bytes;
+                self.metrics.inc("drain.bytes", tick.drained_bytes);
+            }
+            if tick.queue_empty && tick.completed_files > 0 {
+                for r in 0..self.cfg.ranks {
+                    self.coord
+                        .set_rank_state(RankId(r), RankState::Resumed, false);
+                }
+            }
+        }
+        Ok(true)
+    }
+
+    /// Is the job in the steady-state shape the bulk recurrence models?
+    /// One O(ranks) scan, run once per window (not per step): uniform
+    /// clocks, every rank one step past its sends, exactly one outstanding
+    /// converted send and exactly two in-flight halo chunks per rank, all
+    /// with uniform timestamps.
+    fn window_eligible(&self) -> bool {
+        let ranks = self.cfg.ranks;
+        if ranks == 1 {
+            // Single rank: compute-only supersteps, trivially steady.
+            return true;
+        }
+        // The recurrence models the careful-nonblocking wait; the buggy
+        // clobber path must keep running concretely.
+        if !self.cfg.fixes.careful_nonblocking {
+            return false;
+        }
+        let step0 = self.procs[0].step;
+        if step0 == 0 || step0 != self.step {
+            return false;
+        }
+        let tag = (step0 - 1) as u32;
+        let t0 = self.times[0];
+        let mut shape: Option<(SimTime, SimTime)> = None;
+        for r in 0..ranks {
+            let rank = RankId(r);
+            let prev = RankId((r + ranks - 1) % ranks);
+            let next = RankId((r + 1) % ranks);
+            if self.procs[r as usize].step != step0 {
+                return false;
+            }
+            if self.times[r as usize] != t0 {
+                return false;
+            }
+            if self.wrappers.in_collective(rank) {
+                return false;
+            }
+            if self.wrappers.buffered_count(rank) != 0 {
+                return false;
+            }
+            let Some((odst, otag, od)) = self.wrappers.steady_outstanding(rank) else {
+                return false;
+            };
+            if odst != next || otag != tag {
+                return false;
+            }
+            let q = self.world.inflight_for(rank);
+            if q.len() != 2 {
+                return false;
+            }
+            let (m0, m1) = (&q[0], &q[1]);
+            if m0.src != prev
+                || m1.src != prev
+                || m0.tag != tag
+                || m1.tag != tag
+                || m0.bytes != HALO_VIRTUAL_BYTES
+                || m1.bytes != HALO_VIRTUAL_BYTES
+            {
+                return false;
+            }
+            match shape {
+                None => shape = Some((m0.deliver_at, m1.deliver_at)),
+                Some((d0, d1)) => {
+                    if m0.deliver_at != d0 || m1.deliver_at != d1 {
+                        return false;
+                    }
+                }
+            }
+            // Symmetry: the rank's outstanding send completes exactly when
+            // its inbound chunk 1 arrives (uniform state).
+            if od != m1.deliver_at {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Open a bulk-advance window over the current (verified-steady) state.
+    fn open_window(&mut self) {
+        let t = self.times[0];
+        let (d0, d1) = if self.cfg.ranks > 1 {
+            let q = self.world.inflight_for(RankId(0));
+            (q[0].deliver_at, q[1].deliver_at)
+        } else {
+            (SimTime::ZERO, SimTime::ZERO)
+        };
+        self.lazy = Some(LazyWindow {
+            start_step: self.procs[0].step,
+            steps: 0,
+            t_cur: t,
+            d0,
+            d1,
+            c_final: t,
+            t_sent_final: t,
+            d0_final: d0,
+            d1_final: d1,
+            delta: RankCounters::default(),
+        });
+    }
+
+    /// Close the bulk-advance window: replay the deferred supersteps'
+    /// application state (folds + computes, payloads regenerated from the
+    /// sender's state hash exactly as the concrete loop builds them),
+    /// rebuild the last step's in-flight messages and outstanding
+    /// requests, apply the counter delta, and land every rank clock on the
+    /// analytically advanced time. After this, the job state is
+    /// bitwise-indistinguishable from having run every superstep
+    /// concretely. No-op when no window is open. Public because external
+    /// observers that reach into `procs`/`times`/`world` directly (tests,
+    /// the console, benches) must close the window first.
+    pub fn materialize(&mut self) -> Result<()> {
+        let Some(w) = self.lazy.take() else {
+            return Ok(());
+        };
+        if w.steps == 0 {
+            return Ok(());
+        }
+        let ranks = self.cfg.ranks;
+        if ranks == 1 {
+            for _ in 0..w.steps {
+                let proc = &mut self.procs[0];
+                let mut ctx = StepCtx {
+                    rank: RankId(0),
+                    ranks,
+                    proc,
+                    engine: self.engine.as_deref(),
+                    mode: self.cfg.compute,
+                };
+                self.app.compute(&mut ctx)?;
+                self.procs[0].step += 1;
+            }
+            self.times[0] = w.t_cur;
+            return Ok(());
+        }
+
+        // The first replayed step folds the real in-flight payloads (they
+        // were on the wire when the window opened); later steps regenerate
+        // them from the sender's previous-step state hash — the same
+        // construction the concrete sender used.
+        let mut first_msgs: Vec<[Vec<u8>; 2]> = Vec::with_capacity(ranks as usize);
+        for r in 0..ranks {
+            let rank = RankId(r);
+            let m0 = self
+                .world
+                .pop_inflight_raw(rank)
+                .expect("window invariant: two in-flight halos");
+            let m1 = self
+                .world
+                .pop_inflight_raw(rank)
+                .expect("window invariant: two in-flight halos");
+            first_msgs.push([m0.payload, m1.payload]);
+        }
+        let mut prev_hash = vec![0u64; ranks as usize];
+        for k in 0..w.steps {
+            let step = w.start_step + k;
+            for r in 0..ranks {
+                let prev = RankId((r + ranks - 1) % ranks);
+                if k == 0 {
+                    let [p0, p1] = std::mem::take(&mut first_msgs[r as usize]);
+                    apps::fold_halo(&mut self.procs[r as usize], &p0)?;
+                    apps::fold_halo(&mut self.procs[r as usize], &p1)?;
+                } else {
+                    for chunk in 0..2u8 {
+                        let payload = apps::halo_payload_from_hash(
+                            prev_hash[prev.0 as usize],
+                            step - 1,
+                            chunk,
+                        );
+                        apps::fold_halo(&mut self.procs[r as usize], &payload)?;
+                    }
+                }
+                let proc = &mut self.procs[r as usize];
+                let mut ctx = StepCtx {
+                    rank: RankId(r),
+                    ranks,
+                    proc,
+                    engine: self.engine.as_deref(),
+                    mode: self.cfg.compute,
+                };
+                self.app.compute(&mut ctx)?;
+                self.procs[r as usize].step += 1;
+            }
+            // A rank's primary state only mutates in its own iteration, so
+            // hashing after the loop equals hashing at each rank's send.
+            for r in 0..ranks {
+                prev_hash[r as usize] = self.primary_state_hash(r);
+            }
+        }
+
+        // Rebuild the wire: the last deferred step's two halo chunks per
+        // rank, with the analytically derived chronology, plus the single
+        // outstanding converted send and the counter delta.
+        let last_step = w.start_step + w.steps - 1;
+        let last_tag = last_step as u32;
+        for r in 0..ranks {
+            let rank = RankId(r);
+            let next = RankId((r + 1) % ranks);
+            let h = prev_hash[r as usize];
+            for (chunk, sent_at, deliver_at) in [
+                (0u8, w.c_final, w.d0_final),
+                (1u8, w.t_sent_final, w.d1_final),
+            ] {
+                self.world.push_inflight_raw(Message {
+                    src: rank,
+                    dst: next,
+                    tag: last_tag,
+                    bytes: HALO_VIRTUAL_BYTES,
+                    payload: apps::halo_payload_from_hash(h, last_step, chunk),
+                    sent_at,
+                    deliver_at,
+                });
+            }
+            self.wrappers
+                .set_steady_outstanding(rank, next, last_tag, w.d1_final);
+            self.world.add_counters(rank, w.delta);
+            self.times[r as usize] = w.t_cur;
         }
         Ok(())
     }
@@ -513,6 +864,10 @@ impl JobSim {
     /// traffic moves through the configured coordination plane (flat root
     /// or sub-coordinator tree) as a broadcast-down + reduce-up.
     pub fn checkpoint(&mut self) -> Result<CkptReport, CkptFailure> {
+        // A checkpoint observes everything: close any bulk-advance window
+        // so rank clocks, wire state, and app state are concrete.
+        self.materialize()
+            .expect("deferred superstep replay failed");
         let mut report = CkptReport {
             coord_depth: self.coord.plane.depth(),
             ..CkptReport::default()
@@ -928,6 +1283,18 @@ impl JobSim {
         // up-sweep also hides under the pipelined stall.
         let plan = pipeline::plan(&costs, &weights, dstats.threads.max(1), io.duration);
         report.encode_stall_secs = plan.encode_secs;
+        // Early drain admission: resolve the wave's per-file ready stamps
+        // against its position on the virtual timeline (the same placement
+        // the trace uses) — each file may start draining the moment its
+        // own fast-tier write lands, not when the whole stall ends.
+        if let Store::Tiered(ts) = &mut self.fs {
+            let wave_t0 = if pipelined {
+                t_wave
+            } else {
+                t_wave + plan.encode_secs
+            };
+            ts.admit_wave(wave_t0 + io.duration);
+        }
         if pipelined {
             report.stall_secs = plan.pipelined_stall;
             report.overlap_saved_secs += plan.overlap_saved();
@@ -1124,6 +1491,9 @@ impl JobSim {
                         wtail = vec![id];
                     }
                 }
+                // The manifest's wave lands here on the timeline (its BB
+                // write hides under the rank stall already charged).
+                ts.admit_wave(t.as_secs());
                 // Redundancy exchange: after the manifest wave, so the
                 // manifest itself is in the generation's protected set. The
                 // exchange pipelines behind the BB write wave — only the
@@ -1285,6 +1655,7 @@ impl JobSim {
         // The tracer goes onto the store before the loss/rebuild pass so
         // restart-time fault events land in the job's event log.
         let tracer = Tracer::new(cfg.trace);
+        tracer.set_job(&cfg.job);
         fs.set_tracer(tracer.clone());
 
         // Staged mode: reload + verify the persisted durable-tier chunk
@@ -1669,6 +2040,7 @@ impl JobSim {
                 launch_startup_secs: report.startup_secs,
                 ckpt_gen,
                 last_full_gen,
+                lazy: None,
                 cfg,
             },
             report,
@@ -1677,15 +2049,22 @@ impl JobSim {
 
     // ------------------------------------------------------------ queries
 
-    /// Global virtual time (slowest rank).
+    /// Global virtual time (slowest rank). Inside a bulk-advance window
+    /// the rank clocks are uniform at `t_cur`, so the fold collapses.
     pub fn now(&self) -> SimTime {
+        if let Some(w) = &self.lazy {
+            return w.t_cur;
+        }
         self.times
             .iter()
             .fold(SimTime::ZERO, |a, &t| a.max(t))
     }
 
     /// Combined checkpointable-state fingerprint (C/R determinism checks).
-    pub fn fingerprint(&self) -> u64 {
+    /// An observation: closes any open bulk-advance window first.
+    pub fn fingerprint(&mut self) -> u64 {
+        self.materialize()
+            .expect("deferred superstep replay failed");
         let mut h = 0x4d414e41u64; // "MANA"
         for p in &self.procs {
             h = hash_combine(h, p.fingerprint());

@@ -90,6 +90,10 @@ pub struct Span {
     pub gen: Option<u64>,
     pub rank: Option<u32>,
     pub node: Option<u32>,
+    /// Tenant the span belongs to. Usually stamped by the tracer's job
+    /// context ([`Tracer::set_job`]) rather than per call site; multi-job
+    /// traces group Perfetto tracks by it.
+    pub job: Option<String>,
     /// Virtual start/end, sim-seconds.
     pub t0: f64,
     pub t1: f64,
@@ -107,11 +111,17 @@ impl Span {
             gen: None,
             rank: None,
             node: None,
+            job: None,
             t0,
             t1,
             deps: Vec::new(),
             attrs: Vec::new(),
         }
+    }
+
+    pub fn job(mut self, job: impl Into<String>) -> Self {
+        self.job = Some(job.into());
+        self
     }
 
     pub fn gen(mut self, gen: u64) -> Self {
@@ -224,6 +234,11 @@ const MAX_EVENT_KEYS: usize = 512;
 #[derive(Debug, Default)]
 struct TraceState {
     spans_on: bool,
+    /// Job context: spans recorded without an explicit job are stamped
+    /// with this, so a tracer owned by one tenant attributes everything
+    /// it sees (including shared-store drain spans during that tenant's
+    /// turn) to that tenant.
+    job: Option<String>,
     spans: Vec<Span>,
     counters: Vec<CounterSample>,
     events: BTreeMap<String, EventEntry>,
@@ -259,11 +274,21 @@ impl Tracer {
         self.inner.lock().unwrap().spans_on
     }
 
+    /// Set the job context every subsequently recorded span is stamped
+    /// with (unless the span already carries one).
+    pub fn set_job(&self, job: &str) {
+        self.inner.lock().unwrap().job = Some(job.to_string());
+    }
+
     /// Record a span; returns its id, or None when span recording is off.
     pub fn record(&self, span: Span) -> Option<SpanId> {
+        let mut span = span;
         let mut st = self.inner.lock().unwrap();
         if !st.spans_on {
             return None;
+        }
+        if span.job.is_none() {
+            span.job = st.job.clone();
         }
         let id = SpanId(st.spans.len() as u64);
         st.spans.push(span);
@@ -606,6 +631,19 @@ mod tests {
         assert_eq!(on.counters().len(), 1);
         off.counter("c", 1.0, 2.0);
         assert!(off.counters().is_empty());
+    }
+
+    #[test]
+    fn job_context_stamps_recorded_spans() {
+        let tr = Tracer::new(true);
+        tr.set_job("tenantX");
+        tr.record(Span::new("a", Lane::Phase, 0.0, 1.0)).unwrap();
+        // An explicit stamp wins over the context.
+        tr.record(Span::new("b", Lane::Phase, 1.0, 2.0).job("other"))
+            .unwrap();
+        let spans = tr.spans();
+        assert_eq!(spans[0].job.as_deref(), Some("tenantX"));
+        assert_eq!(spans[1].job.as_deref(), Some("other"));
     }
 
     #[test]

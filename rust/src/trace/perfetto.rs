@@ -15,7 +15,7 @@
 //! Timestamps are virtual sim-time in microseconds (the format's unit),
 //! so one trace from any machine renders identically.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 
 use super::{CounterSample, Lane, Span};
 use crate::util::json::Json;
@@ -24,6 +24,10 @@ const PID_COORD: u64 = 0;
 const PID_STORAGE: u64 = 1;
 const PID_RESTART: u64 = 2;
 const PID_NODE_BASE: u64 = 100;
+/// Pid stride between tenants in a multi-job trace: each job gets its own
+/// copy of the coordinator/storage/node process blocks. Large enough that
+/// the node block of one tenant can never collide with the next tenant.
+const JOB_PID_STRIDE: u64 = 1_000_000;
 
 fn track(span: &Span) -> (u64, u64) {
     match span.lane {
@@ -78,34 +82,67 @@ fn meta(name: &str, pid: u64, tid: Option<u64>, label: String) -> Json {
 const SECS_TO_US: f64 = 1e6;
 
 /// Render spans + counters into one Perfetto-loadable JSON document.
+///
+/// Multi-job traces (two or more distinct `Span::job` values) group
+/// tracks per tenant: each job's spans land in its own pid block, offset
+/// by [`JOB_PID_STRIDE`], with the job name prefixed onto the process
+/// labels. Traces from a single job — with or without a job stamp — keep
+/// the historical layout byte for byte.
 pub fn export(spans: &[Span], counters: &[CounterSample]) -> Json {
     let mut events = Vec::with_capacity(spans.len() + counters.len() + 16);
 
-    // Name every track that will appear, once.
-    let mut pids = BTreeSet::new();
+    // Per-tenant pid blocks only when tenants can actually interleave.
+    let job_names: BTreeSet<&str> = spans.iter().filter_map(|s| s.job.as_deref()).collect();
+    let grouped = job_names.len() >= 2;
+    let job_block: BTreeMap<&str, u64> = job_names
+        .iter()
+        .enumerate()
+        .map(|(i, j)| (*j, (i as u64 + 1) * JOB_PID_STRIDE))
+        .collect();
+    let shift = |s: &Span| -> u64 {
+        if !grouped {
+            return 0;
+        }
+        s.job
+            .as_deref()
+            .and_then(|j| job_block.get(j).copied())
+            .unwrap_or(0)
+    };
+
+    // Name every track that will appear, once. In a grouped trace the
+    // label carries the tenant, so "jobA: storage" and "jobB: storage"
+    // sit side by side.
+    let mut pids = BTreeMap::new();
     let mut tids = BTreeSet::new();
     for s in spans {
         let (pid, tid) = track(s);
-        pids.insert(pid);
-        tids.insert((pid, tid));
+        let off = shift(s);
+        let label = match (grouped, s.job.as_deref()) {
+            (true, Some(j)) => format!("{j}: {}", process_label(pid)),
+            _ => process_label(pid),
+        };
+        pids.insert(pid + off, label);
+        tids.insert((pid + off, tid, pid));
     }
     if !counters.is_empty() {
-        pids.insert(PID_STORAGE);
+        pids.entry(PID_STORAGE)
+            .or_insert_with(|| process_label(PID_STORAGE));
     }
-    for pid in &pids {
-        events.push(meta("process_name", *pid, None, process_label(*pid)));
+    for (pid, label) in &pids {
+        events.push(meta("process_name", *pid, None, label.clone()));
     }
-    for (pid, tid) in &tids {
+    for (pid, tid, base_pid) in &tids {
         events.push(meta(
             "thread_name",
             *pid,
             Some(*tid),
-            thread_label(*pid, *tid),
+            thread_label(*base_pid, *tid),
         ));
     }
 
     for s in spans {
         let (pid, tid) = track(s);
+        let pid = pid + shift(s);
         let mut args = Json::obj();
         if let Some(g) = s.gen {
             args = args.set("gen", g);
@@ -115,6 +152,11 @@ pub fn export(spans: &[Span], counters: &[CounterSample]) -> Json {
         }
         if let Some(n) = s.node {
             args = args.set("node", n as u64);
+        }
+        if grouped {
+            if let Some(j) = s.job.as_deref() {
+                args = args.set("job", j);
+            }
         }
         for (k, v) in &s.attrs {
             args = args.set(k, v.as_str());
@@ -221,6 +263,42 @@ mod tests {
         assert_eq!(complete, 4);
         assert_eq!(counter, 1);
         assert!(metadata >= 4, "process + thread names expected");
+    }
+
+    #[test]
+    fn single_job_stamps_keep_the_historical_layout() {
+        // A trace where every span carries the SAME job must render
+        // byte-identically to one with no job stamps at all — grouping
+        // only kicks in when tenants can interleave.
+        let plain = vec![
+            Span::new("ckpt", Lane::Phase, 0.0, 2.0).gen(0),
+            Span::new("write.wave", Lane::Storage, 1.0, 2.0).gen(0),
+        ];
+        let stamped: Vec<Span> = plain.iter().map(|s| s.clone().job("solo")).collect();
+        assert_eq!(
+            export(&plain, &[]).to_string(),
+            export(&stamped, &[]).to_string()
+        );
+    }
+
+    #[test]
+    fn multi_job_traces_group_tracks_per_tenant() {
+        let spans = vec![
+            Span::new("ckpt", Lane::Phase, 0.0, 2.0).gen(0).job("jobA"),
+            Span::new("ckpt", Lane::Phase, 0.5, 2.5).gen(0).job("jobB"),
+            Span::new("write.wave", Lane::Storage, 1.0, 2.0)
+                .gen(0)
+                .job("jobA"),
+        ];
+        let s = export(&spans, &[]).to_string();
+        // Each tenant gets its own labelled process block...
+        assert!(s.contains(r#""name":"jobA: coordinator""#), "{s}");
+        assert!(s.contains(r#""name":"jobB: coordinator""#), "{s}");
+        assert!(s.contains(r#""name":"jobA: storage""#), "{s}");
+        // ...in distinct pid ranges, with the job echoed in span args.
+        assert!(s.contains(&format!(r#""pid":{}"#, JOB_PID_STRIDE)), "{s}");
+        assert!(s.contains(&format!(r#""pid":{}"#, 2 * JOB_PID_STRIDE)), "{s}");
+        assert!(s.contains(r#""job":"jobA""#), "{s}");
     }
 
     #[test]

@@ -324,6 +324,46 @@ impl ManaWrappers {
     pub fn outstanding_total(&self) -> usize {
         self.outstanding.iter().map(|q| q.len()).sum()
     }
+
+    // ---------------------------------------- event-core introspection
+    //
+    // The bulk-advance driver (sim's event core) needs to recognize and
+    // rebuild the steady-state wrapper shape — exactly one outstanding
+    // converted send per rank — without going through the per-call paths.
+
+    /// The rank's single outstanding request as `(dst, tag, deliver_at)`,
+    /// or `None` when it has zero or more than one (not steady state).
+    pub(crate) fn steady_outstanding(&self, rank: RankId) -> Option<(RankId, u32, SimTime)> {
+        let q = &self.outstanding[rank.0 as usize];
+        if q.len() != 1 {
+            return None;
+        }
+        let p = &q[0];
+        Some((p.dst, p.tag, p.deliver_at))
+    }
+
+    /// Is the rank inside a wrapped collective right now?
+    pub(crate) fn in_collective(&self, rank: RankId) -> bool {
+        self.in_collective[rank.0 as usize]
+    }
+
+    /// Replace the rank's outstanding set with the single steady-state
+    /// entry the bulk advance derived analytically (materialize path).
+    pub(crate) fn set_steady_outstanding(
+        &mut self,
+        rank: RankId,
+        dst: RankId,
+        tag: u32,
+        deliver_at: SimTime,
+    ) {
+        let q = &mut self.outstanding[rank.0 as usize];
+        q.clear();
+        q.push_back(PendingSend {
+            dst,
+            tag,
+            deliver_at,
+        });
+    }
 }
 
 #[cfg(test)]

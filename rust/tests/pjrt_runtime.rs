@@ -81,6 +81,7 @@ fn cg_step_reduces_residual_over_iterations() {
     let mut sim = JobSim::launch(cfg, Some(e)).unwrap();
     let r0 = Hpcg::residual(&sim.procs[0]).unwrap();
     sim.run_steps(10).unwrap();
+    sim.materialize().unwrap();
     let r10 = Hpcg::residual(&sim.procs[0]).unwrap();
     assert!(
         r10 < r0 * 0.01,
@@ -98,6 +99,7 @@ fn rpa_energy_accumulates_monotonically() {
     let mut last = 0.0f32;
     for _ in 0..3 {
         sim.run_steps(1).unwrap();
+        sim.materialize().unwrap();
         let ec = VaspRpa::ecorr(&sim.procs[0]).unwrap();
         assert!(ec > last, "sum of squares grows with quadrature points");
         last = ec;
@@ -148,6 +150,7 @@ fn checkpointed_state_is_the_pjrt_output() {
     cfg.job = "pjrt-bytes".into();
     let mut sim = JobSim::launch(cfg, Some(e)).unwrap();
     sim.run_steps(1).unwrap();
+    sim.materialize().unwrap();
     let pos_live = bytes_to_f32(sim.procs[0].app_state("pos").unwrap());
     sim.checkpoint().unwrap();
     let c = sim.cfg.clone();

@@ -595,3 +595,159 @@ fn prop_cdc_recipes_reuse_digests_after_insertion() {
         assert!(shared > 0, "some chunks must always dedup");
     });
 }
+
+/// Invariant (event-driven sim core): for any random job shape — rank
+/// count, coordination plane (flat/tree), pipeline mode, chunking mode
+/// (fixed/cdc), staging and redundancy scheme — the O(events)
+/// bulk-advance driver produces bitwise-identical stored generations,
+/// identical live and post-restart fingerprints, and bit-identical
+/// virtual-time CkptReport fields vs. the concrete per-rank superstep
+/// loop, and its trace still reconciles with zero mismatches.
+#[test]
+fn prop_event_core_bitwise_matches_superstep_loop() {
+    use mana::ckpt::manifest::CkptManifest;
+    use mana::coordinator::CkptReport;
+    use mana::fs::RedundancyScheme;
+    use mana::topology::NodeId;
+
+    run("event core bitwise", 8, |g| {
+        let variant = g.u64_below(3); // 0 plain, 1 staged, 2 staged+redundancy
+        let staged = variant > 0;
+        let redundancy = match (variant, g.bool()) {
+            (2, false) => RedundancyScheme::Partner,
+            (2, true) => RedundancyScheme::Xor,
+            _ => RedundancyScheme::None,
+        };
+        // Redundancy sets span nodes, so that variant forces the 4-node
+        // shape (8 ranks x 32 threads -> 2 ranks/node); otherwise any
+        // small job exercises the window machinery.
+        let (ranks, threads) = if variant == 2 {
+            (8u32, 32u32)
+        } else {
+            (g.range(1, 5) as u32, 8u32)
+        };
+        let pre = g.range(1, 5);
+        let post = g.range(1, 4);
+        let tree = g.bool();
+        let pipeline = g.bool();
+        let cdc = g.bool();
+        let seed = g.range(0, u64::MAX - 1);
+
+        let lane = |event_driven: bool| {
+            let mut cfg = RunConfig::new(AppKind::Synthetic, ranks);
+            cfg.job = format!("evc-{variant}-{ranks}-{pre}-{post}-{tree}");
+            cfg.threads_per_rank = threads;
+            cfg.mem_per_rank = Some(1 << 20);
+            cfg.seed = seed;
+            cfg.pipeline = pipeline;
+            cfg.trace = true;
+            cfg.event_driven = event_driven;
+            if cdc {
+                cfg.chunking = mana::config::ChunkingMode::Cdc;
+            }
+            if tree {
+                cfg = cfg.with_coord_tree(2);
+            }
+            if staged {
+                cfg = cfg.with_staging();
+            }
+            cfg.redundancy = redundancy;
+
+            let mut sim = JobSim::launch(cfg.clone(), None).unwrap();
+            sim.run_steps(pre).unwrap();
+            let rep = sim.checkpoint().unwrap();
+            assert_eq!(
+                sim.tracer.event_count("trace.reconcile:g0"),
+                0,
+                "trace must reconcile (event_driven={event_driven})"
+            );
+            sim.run_steps(post).unwrap();
+            let live_fp = sim.fingerprint();
+            let live_now = sim.now().as_secs();
+            let paths: Vec<(NodeId, String)> = (0..ranks)
+                .map(|r| {
+                    let p = if staged {
+                        mana::ckpt::gen_image_path(&cfg.job, 0, RankId(r))
+                    } else {
+                        mana::ckpt::image_path(&cfg.job, RankId(r))
+                    };
+                    (sim.topo.node_of(RankId(r)), p)
+                })
+                .chain(std::iter::once((
+                    sim.topo.node_of(RankId(0)),
+                    CkptManifest::manifest_path(&cfg.job),
+                )))
+                .collect();
+            let (datas, _) = sim.fs.read_parallel(&paths).unwrap();
+            let fs = sim.kill();
+            let (mut resumed, rrep) = JobSim::restart_from(cfg, None, fs).unwrap();
+            resumed.run_steps(post).unwrap();
+            let resumed_fp = resumed.fingerprint();
+            (rep, datas, live_fp, live_now, resumed_fp, rrep.total_secs)
+        };
+
+        let (crep, cimgs, cfp, cnow, crfp, crsecs) = lane(false);
+        let (erep, eimgs, efp, enow, erfp, ersecs) = lane(true);
+
+        assert_eq!(cimgs, eimgs, "stored generation must be bitwise identical");
+        assert_eq!(cfp, efp, "live fingerprints must agree");
+        assert_eq!(crfp, erfp, "post-restart fingerprints must agree");
+        assert_eq!(cfp, crfp, "restart must land on the live trajectory");
+        assert_eq!(
+            cnow.to_bits(),
+            enow.to_bits(),
+            "virtual clocks must agree bit-for-bit ({cnow} vs {enow})"
+        );
+        assert_eq!(
+            crsecs.to_bits(),
+            ersecs.to_bits(),
+            "restart timing must agree bit-for-bit"
+        );
+
+        // Every virtual-time CkptReport field must be bit-identical; the
+        // host-clock encode_host_secs is excluded by design.
+        let times = |r: &CkptReport| {
+            [
+                ("intent_secs", r.intent_secs),
+                ("safepoint_secs", r.safepoint_secs),
+                ("drain_secs", r.drain_secs),
+                ("quiesce_secs", r.quiesce_secs),
+                ("write_secs", r.write_secs),
+                ("resume_secs", r.resume_secs),
+                ("total_secs", r.total_secs),
+                ("ctrl_secs", r.ctrl_secs),
+                ("fast_write_secs", r.fast_write_secs),
+                ("durable_write_secs", r.durable_write_secs),
+                ("encode_stall_secs", r.encode_stall_secs),
+                ("stall_secs", r.stall_secs),
+                ("overlap_saved_secs", r.overlap_saved_secs),
+                ("exchange_secs", r.exchange_secs),
+            ]
+        };
+        for ((name, c), (_, e)) in times(&crep).iter().zip(times(&erep).iter()) {
+            assert_eq!(
+                c.to_bits(),
+                e.to_bits(),
+                "CkptReport.{name} must be bit-identical ({c} vs {e})"
+            );
+        }
+        let counts = |r: &CkptReport| {
+            [
+                ("ctrl_msgs", r.ctrl_msgs),
+                ("root_ctrl_msgs", r.root_ctrl_msgs),
+                ("image_bytes", r.image_bytes),
+                ("buffered_msgs", r.buffered_msgs as u64),
+                ("fast_bytes", r.fast_bytes),
+                ("durable_bytes", r.durable_bytes),
+                ("drain_pending_bytes", r.drain_pending_bytes),
+                ("deduped_bytes", r.deduped_bytes),
+                ("parity_bytes", r.parity_bytes),
+            ]
+        };
+        for ((name, c), (_, e)) in counts(&crep).iter().zip(counts(&erep).iter()) {
+            assert_eq!(c, e, "CkptReport.{name} must match");
+        }
+        assert_eq!(crep.pipelined, erep.pipelined);
+        assert_eq!(crep.coord_depth, erep.coord_depth);
+    });
+}
