@@ -1,0 +1,186 @@
+//! COLLECTIVE_DRAIN — drain-strategy scaling under a collective-heavy
+//! workload.
+//!
+//! The colheavy app (HPCG's dot-product cadence pushed to the limit)
+//! leaves a nonblocking allreduce pending across every superstep
+//! boundary, so each checkpoint request lands *inside* a collective.
+//! Counter drain completes the op (MANA's trivial barrier) and then pays
+//! a per-rank counter reduce whose cost grows with the plane's fan-in;
+//! topological-sort drain (arXiv:2408.02218) orders ranks by their round
+//! cursor and ships the wave schedule down the plane as one bounded
+//! object — per-hop cost, flat in the fan-in. Asserted here:
+//!
+//!   * **counter scaling**: counter drain virtual seconds grow with the
+//!     fan-in sweep (64 → 512 ranks, flat plane);
+//!   * **topo flatness**: topo drain at 512 ranks stays within 1.2x of
+//!     its own 64-rank cost (the `collective_drain_topo_growth` gate);
+//!   * **crossover**: at 512 ranks topo drain costs at most half of
+//!     counter drain (the `collective_drain_topo_over_counter_512` gate);
+//!   * **correctness**: counter and topo checkpoint/restart cycles — on
+//!     the flat plane and the sub-coordinator tree — all resume to the
+//!     fingerprint of the uninterrupted run.
+//!
+//! All times are *virtual* seconds from the deterministic cost model, so
+//! the series is reproducible across machines. Results land in
+//! BENCH_collective_drain.json for the CI bench-report gates.
+
+use mana::benchkit::Report;
+use mana::config::{AppKind, DrainStrategy, RunConfig};
+use mana::sim::JobSim;
+use mana::util::json::Json;
+
+/// Fan-in sweep (flat plane: the root reduces one row per rank).
+const FAN_IN: [u32; 4] = [64, 128, 256, 512];
+/// Tiny address spaces: the series isolates drain coordination cost from
+/// encode/write work.
+const MEM_PER_RANK: u64 = 64 << 10;
+/// Steps before the checkpoint — enough for the cadence to reach steady
+/// state with an allreduce pending at the boundary.
+const WARM_STEPS: u64 = 3;
+
+fn base_cfg(tag: &str, ranks: u32, strategy: DrainStrategy) -> RunConfig {
+    let mut cfg = RunConfig::new(AppKind::CollectiveHeavy, ranks);
+    cfg.job = format!("coldrain-{tag}");
+    cfg.mem_per_rank = Some(MEM_PER_RANK);
+    cfg.drain_strategy = strategy;
+    cfg
+}
+
+/// Virtual drain seconds of one checkpoint taken inside the pending
+/// collective, on the flat plane.
+fn drain_secs(tag: &str, ranks: u32, strategy: DrainStrategy) -> f64 {
+    let mut sim =
+        JobSim::launch(base_cfg(tag, ranks, strategy), None).expect("launch");
+    sim.run_steps(WARM_STEPS).expect("warmup");
+    let rep = sim.checkpoint().expect("checkpoint");
+    assert_eq!(rep.drain_strategy, strategy);
+    assert_eq!(
+        rep.collectives_interrupted, 1,
+        "{tag}: the checkpoint must land inside a pending collective"
+    );
+    if strategy == DrainStrategy::Topo {
+        assert!(
+            rep.topo_waves >= 2,
+            "{tag}: staggered cursors must form multiple waves"
+        );
+    }
+    rep.drain_secs
+}
+
+/// Fan-in sweep, both strategies. Returns (counter series, topo series).
+fn sweep(rep: &mut Report) -> (Vec<f64>, Vec<f64>) {
+    let mut counter = Vec::new();
+    let mut topo = Vec::new();
+    for &ranks in &FAN_IN {
+        let c = drain_secs("ctr", ranks, DrainStrategy::Counter);
+        let t = drain_secs("topo", ranks, DrainStrategy::Topo);
+        rep.row(vec![
+            format!("{ranks}"),
+            format!("{:.3}", c * 1e3),
+            format!("{:.3}", t * 1e3),
+            format!("{:.3}x", t / c),
+        ]);
+        counter.push(c);
+        topo.push(t);
+    }
+    (counter, topo)
+}
+
+/// The acceptance matrix: counter|topo x flat|tree checkpoint/restart
+/// cycles must all land on the uninterrupted run's fingerprint.
+fn cr_matrix(rep: &mut Report) {
+    let ranks = 64u32;
+    let mut cont = JobSim::launch(
+        base_cfg("cr-cont", ranks, DrainStrategy::Counter),
+        None,
+    )
+    .expect("launch");
+    cont.run_steps(2 * WARM_STEPS).expect("steps");
+    let want = cont.fingerprint();
+
+    for (tag, strategy, fanout) in [
+        ("cr-ctr-flat", DrainStrategy::Counter, None),
+        ("cr-ctr-tree", DrainStrategy::Counter, Some(8)),
+        ("cr-topo-flat", DrainStrategy::Topo, None),
+        ("cr-topo-tree", DrainStrategy::Topo, Some(8)),
+    ] {
+        let mut cfg = base_cfg(tag, ranks, strategy);
+        cfg.coord_fanout = fanout;
+        let mut sim = JobSim::launch(cfg.clone(), None).expect("launch");
+        sim.run_steps(WARM_STEPS).expect("steps");
+        let crep = sim.checkpoint().expect("checkpoint");
+        let fs = sim.kill();
+        let (mut resumed, _) =
+            JobSim::restart_from(cfg, None, fs).expect("restart");
+        resumed.run_steps(WARM_STEPS).expect("resume steps");
+        let fp = resumed.fingerprint();
+        assert!(!resumed.any_corruption(), "{tag}: corruption after restart");
+        assert_eq!(
+            fp, want,
+            "{tag}: restart fingerprint must match the uninterrupted run"
+        );
+        rep.row(vec![
+            tag.into(),
+            strategy.name().into(),
+            if fanout.is_some() { "tree".into() } else { "flat".into() },
+            format!("{:.3}", crep.drain_secs * 1e3),
+            format!("{fp:016x}"),
+        ]);
+    }
+}
+
+fn main() {
+    let mut sweep_rep = Report::new(
+        "COLLECTIVE_DRAIN: virtual drain seconds vs fan-in (flat plane)",
+        vec!["ranks", "counter_ms", "topo_ms", "topo/counter"],
+    );
+    let (counter, topo) = sweep(&mut sweep_rep);
+    let sweep_table = sweep_rep.finish_json();
+
+    let mut cr_rep = Report::new(
+        "COLLECTIVE_DRAIN: C/R fingerprint matrix (strategy x plane)",
+        vec!["job", "strategy", "plane", "drain_ms", "fingerprint"],
+    );
+    cr_matrix(&mut cr_rep);
+    let cr_table = cr_rep.finish_json();
+
+    let n = FAN_IN.len();
+    let counter_growth = counter[n - 1] / counter[0];
+    let topo_growth = topo[n - 1] / topo[0];
+    let topo_over_counter_512 = topo[n - 1] / counter[n - 1];
+
+    assert!(
+        counter_growth > 2.0,
+        "counter drain grew only {counter_growth:.2}x from 64 to 512 ranks; \
+         the fan-in sweep no longer discriminates"
+    );
+    assert!(
+        topo_growth <= 1.2,
+        "topo drain grew {topo_growth:.2}x across the fan-in sweep; the wave \
+         schedule must stay flat"
+    );
+    assert!(
+        topo_over_counter_512 <= 0.5,
+        "topo drain is {topo_over_counter_512:.3}x of counter at 512 ranks; \
+         it must cost at most half"
+    );
+
+    let out = Json::obj()
+        .set("bench", "collective_drain")
+        .set(
+            "gates",
+            Json::obj()
+                .set("collective_drain_topo_over_counter_512", topo_over_counter_512)
+                .set("collective_drain_topo_growth", topo_growth),
+        )
+        .set("counter_growth_64_to_512", counter_growth)
+        .set("series", Json::Arr(vec![sweep_table, cr_table]));
+    std::fs::write("BENCH_collective_drain.json", out.to_string())
+        .expect("write BENCH_collective_drain.json");
+    println!(
+        "COLLECTIVE_DRAIN OK: counter drain grew {counter_growth:.2}x over the \
+         64->512 fan-in sweep, topo {topo_growth:.2}x; topo costs \
+         {topo_over_counter_512:.3}x of counter at 512 ranks (results in \
+         BENCH_collective_drain.json)"
+    );
+}

@@ -1,0 +1,72 @@
+//! Collective-heavy workload: HPCG's allreduce cadence pushed to the
+//! limit.
+//!
+//! Real HPCG runs a dot-product allreduce (a few doubles) every CG
+//! iteration — thousands of tiny collectives per checkpoint interval. At
+//! that cadence the interesting checkpoint requests land *inside* a
+//! collective, which the counter-drain path can only handle by completing
+//! the op first (MANA's trivial-barrier) and then paying a full
+//! counter reduce. This app models that regime: a small per-superstep
+//! state evolution plus a **nonblocking** 256-byte allreduce posted at
+//! every superstep boundary, so the topological-sort drain strategy
+//! always has a pending collective to order ranks by.
+
+use anyhow::{Context, Result};
+
+use super::{map_common_regions, synth_evolve, App, CollectiveCadence, StepCtx};
+use crate::config::AppKind;
+use crate::mem::Payload;
+use crate::splitproc::SplitProcess;
+
+const STATE_BYTES: usize = 2048;
+
+/// Payload of the per-superstep residual allreduce: a CG dot product is a
+/// handful of doubles; 256 B is generous.
+pub const ALLREDUCE_BYTES: u64 = 256;
+
+pub struct CollectiveHeavy;
+
+impl App for CollectiveHeavy {
+    fn kind(&self) -> AppKind {
+        AppKind::CollectiveHeavy
+    }
+
+    fn artifact(&self) -> Option<&'static str> {
+        None
+    }
+
+    fn default_mem_per_rank(&self) -> u64 {
+        16 << 20 // 16 MiB: latency-bound, not footprint-bound
+    }
+
+    fn compute_secs(&self) -> f64 {
+        // Short iterations: the collective cadence dominates the timeline
+        // the way it does for strong-scaled CG.
+        0.002
+    }
+
+    fn collective_cadence(&self) -> CollectiveCadence {
+        CollectiveCadence {
+            bytes: ALLREDUCE_BYTES,
+            nonblocking: true,
+        }
+    }
+
+    fn init(&self, proc: &mut SplitProcess, _ranks: u32, mem_per_rank: u64) -> Result<()> {
+        let mut state = vec![0u8; STATE_BYTES];
+        for b in state.iter_mut() {
+            *b = (proc.rng.next_u64() & 0xff) as u8;
+        }
+        proc.map_app_region("state", STATE_BYTES as u64, Payload::Real(state))?;
+        map_common_regions(proc, mem_per_rank, STATE_BYTES as u64)?;
+        proc.open_app_fd("residuals.log");
+        Ok(())
+    }
+
+    fn compute(&self, ctx: &mut StepCtx) -> Result<()> {
+        let mut b = ctx.proc.app_state("state").context("state")?.to_vec();
+        synth_evolve(&mut b);
+        ctx.proc.store_app_state("state", b)?;
+        Ok(())
+    }
+}

@@ -12,6 +12,7 @@
 //! drain protocol, and the halo fold makes lost or clobbered messages
 //! corrupt the final state fingerprint (detectably).
 
+pub mod colheavy;
 pub mod gromacs;
 pub mod hpcg;
 pub mod synthetic;
@@ -31,6 +32,20 @@ pub const HALO_BYTES: usize = 64;
 /// halos are MBs; the payload we carry is a digest of it).
 pub const HALO_VIRTUAL_BYTES: u64 = 2 << 20;
 
+/// How an app drives the end-of-superstep allreduce (the residual-norm
+/// reduction every iterative solver runs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CollectiveCadence {
+    /// Payload bytes per rank of the per-superstep allreduce.
+    pub bytes: u64,
+    /// Post the allreduce nonblocking at the end of the superstep (an
+    /// MPI_Iallreduce waited on at the start of the next) instead of
+    /// blocking in place. Nonblocking cadence leaves a pending collective
+    /// across every superstep boundary, which is where checkpoint
+    /// requests land — the collective-aware drain stressor.
+    pub nonblocking: bool,
+}
+
 /// One application = init + compute rules.
 pub trait App: Send + Sync {
     fn kind(&self) -> AppKind;
@@ -40,6 +55,15 @@ pub trait App: Send + Sync {
     fn default_mem_per_rank(&self) -> u64;
     /// Modeled compute time per superstep (virtual seconds).
     fn compute_secs(&self) -> f64;
+    /// The per-superstep allreduce shape. The default matches the
+    /// historical hardcoded cadence (4 KiB, blocking) so existing apps
+    /// keep bit-identical timelines.
+    fn collective_cadence(&self) -> CollectiveCadence {
+        CollectiveCadence {
+            bytes: 4096,
+            nonblocking: false,
+        }
+    }
     /// Map the app's regions into a fresh rank process and set initial state.
     fn init(&self, proc: &mut SplitProcess, ranks: u32, mem_per_rank: u64) -> Result<()>;
     /// Advance one rank's state by one superstep.
@@ -70,6 +94,7 @@ pub fn make_app(kind: AppKind) -> Box<dyn App> {
         AppKind::Hpcg => Box::new(hpcg::Hpcg),
         AppKind::VaspRpa => Box::new(vasp_rpa::VaspRpa),
         AppKind::Synthetic => Box::new(synthetic::Synthetic),
+        AppKind::CollectiveHeavy => Box::new(colheavy::CollectiveHeavy),
     }
 }
 
@@ -192,11 +217,27 @@ mod tests {
             AppKind::Hpcg,
             AppKind::VaspRpa,
             AppKind::Synthetic,
+            AppKind::CollectiveHeavy,
         ] {
             let app = make_app(kind);
             assert_eq!(app.kind(), kind);
             assert!(app.default_mem_per_rank() > 0);
             assert!(app.compute_secs() > 0.0);
         }
+    }
+
+    #[test]
+    fn cadence_default_matches_historical_allreduce() {
+        // The default cadence must stay 4 KiB blocking: the event core's
+        // bulk-advance recurrence and every recorded fingerprint baseline
+        // assume it.
+        for kind in [AppKind::Gromacs, AppKind::Hpcg, AppKind::Synthetic] {
+            let c = make_app(kind).collective_cadence();
+            assert_eq!(c.bytes, 4096);
+            assert!(!c.nonblocking);
+        }
+        let c = make_app(AppKind::CollectiveHeavy).collective_cadence();
+        assert!(c.nonblocking, "colheavy posts nonblocking allreduces");
+        assert!(c.bytes < 4096, "small payloads at high frequency");
     }
 }

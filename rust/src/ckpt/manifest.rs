@@ -11,9 +11,12 @@
 use std::collections::BTreeMap;
 
 use crate::ckpt::chunk::Chunking;
+use crate::config::DrainStrategy;
 use crate::fs::RedundancyScheme;
+use crate::mpi::collectives::{CollectiveKind, InflightCollective};
 use crate::topology::RankId;
 use crate::util::cdc::CdcParams;
+use crate::util::simclock::SimTime;
 
 /// A restart manifest: rank -> image path, plus job metadata.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -42,6 +45,16 @@ pub struct CkptManifest {
     /// falling back across tiers. `None` = unrecorded (pre-redundancy
     /// manifest, implies `none`).
     pub redundancy: Option<(RedundancyScheme, u32)>,
+    /// Drain strategy the checkpoint was taken with. `None` = unrecorded
+    /// (pre-collective-aware manifest, implies counter).
+    pub drain_strategy: Option<DrainStrategy>,
+    /// The collective the checkpoint interrupted (topo drain only): the
+    /// op's full schedule plus each rank's round cursor, so restart
+    /// resumes the op from the recorded round instead of replaying it.
+    /// Times are stored as f64 bit patterns — restart re-anchors the
+    /// schedule on the fresh clock, but the *duration* must survive
+    /// bitwise for the resumed timeline to stay deterministic.
+    pub collective: Option<InflightCollective>,
     entries: BTreeMap<u32, String>,
 }
 
@@ -55,6 +68,8 @@ impl CkptManifest {
             chunk_bytes: 0,
             chunking: None,
             redundancy: None,
+            drain_strategy: None,
+            collective: None,
             entries: BTreeMap::new(),
         }
     }
@@ -106,6 +121,23 @@ impl CkptManifest {
         if let Some((scheme, set_size)) = &self.redundancy {
             out.push_str(&format!("redundancy\t{}:{}\n", scheme.name(), set_size));
         }
+        if let Some(ds) = self.drain_strategy {
+            out.push_str(&format!("drainstrategy\t{}\n", ds.name()));
+        }
+        if let Some(c) = &self.collective {
+            out.push_str(&format!(
+                "collective\t{}:{}:{}:{}:{}:{:016x}:{:016x}\n",
+                c.kind.name(),
+                c.root,
+                c.bytes,
+                c.size,
+                c.rounds,
+                c.enter.as_secs().to_bits(),
+                c.done.as_secs().to_bits(),
+            ));
+            let csv: Vec<String> = c.cursor.iter().map(|v| v.to_string()).collect();
+            out.push_str(&format!("colcursor\t{}\n", csv.join(",")));
+        }
         for (rank, path) in &self.entries {
             out.push_str(&format!("{rank}\t{path}\n"));
         }
@@ -146,6 +178,36 @@ impl CkptManifest {
                     let (scheme, size) = v.split_once(':')?;
                     m.redundancy =
                         Some((RedundancyScheme::parse(scheme)?, size.parse().ok()?));
+                }
+                "drainstrategy" => m.drain_strategy = Some(DrainStrategy::parse(v)?),
+                "collective" => {
+                    // `<kind>:<root>:<bytes>:<size>:<rounds>:<enter>:<done>`
+                    // with the two times as f64 bit patterns in hex.
+                    let mut it = v.splitn(7, ':');
+                    let kind = CollectiveKind::parse(it.next()?)?;
+                    let root = it.next()?.parse().ok()?;
+                    let bytes = it.next()?.parse().ok()?;
+                    let size = it.next()?.parse().ok()?;
+                    let rounds = it.next()?.parse().ok()?;
+                    let enter = f64::from_bits(u64::from_str_radix(it.next()?, 16).ok()?);
+                    let done = f64::from_bits(u64::from_str_radix(it.next()?, 16).ok()?);
+                    m.collective = Some(InflightCollective {
+                        kind,
+                        root,
+                        bytes,
+                        size,
+                        rounds,
+                        enter: SimTime::secs(enter),
+                        done: SimTime::secs(done),
+                        cursor: Vec::new(),
+                    });
+                }
+                // The cursor line always follows its collective line.
+                "colcursor" => {
+                    let c = m.collective.as_mut()?;
+                    for tok in v.split(',') {
+                        c.cursor.push(tok.parse().ok()?);
+                    }
                 }
                 rank => {
                     m.entries.insert(rank.parse().ok()?, v.to_string());
@@ -244,6 +306,43 @@ mod tests {
         assert!(CkptManifest::decode(b"redundancy\traid6:4\n").is_none());
         assert!(CkptManifest::decode(b"redundancy\txor\n").is_none());
         assert!(CkptManifest::decode(b"redundancy\txor:lots\n").is_none());
+    }
+
+    #[test]
+    fn collective_lines_roundtrip_bitwise() {
+        let mut m = CkptManifest::new("j", 1);
+        m.drain_strategy = Some(DrainStrategy::Topo);
+        m.collective = Some(InflightCollective {
+            kind: CollectiveKind::Allreduce,
+            root: 0,
+            bytes: 256,
+            size: 8,
+            rounds: 6,
+            // Deliberately non-round values: the f64 bit patterns must
+            // survive the text manifest exactly.
+            enter: SimTime::secs(0.1 + 0.2),
+            done: SimTime::secs(1.000_000_000_000_000_2),
+            cursor: vec![3, 4, 5, 3, 4, 5, 3, 4],
+        });
+        let back = CkptManifest::decode(&m.encode()).unwrap();
+        assert_eq!(back.drain_strategy, Some(DrainStrategy::Topo));
+        assert_eq!(back.collective, m.collective);
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn collective_lines_reject_garbage_and_default_unrecorded() {
+        assert!(CkptManifest::decode(b"drainstrategy\tquantum\n").is_none());
+        assert!(CkptManifest::decode(b"collective\tallreduce:0:256:8\n").is_none());
+        assert!(CkptManifest::decode(b"collective\talltoall:0:1:2:3:0:0\n").is_none());
+        assert!(CkptManifest::decode(b"collective\tbcast:0:1:2:3:xyz:0\n").is_none());
+        // A cursor line with no collective to attach to fails the decode.
+        assert!(CkptManifest::decode(b"colcursor\t1,2,3\n").is_none());
+        // Pre-collective manifests decode as unrecorded.
+        let plain = CkptManifest::new("j", 1);
+        let back = CkptManifest::decode(&plain.encode()).unwrap();
+        assert_eq!(back.drain_strategy, None);
+        assert_eq!(back.collective, None);
     }
 
     #[test]

@@ -23,6 +23,11 @@ pub enum AppKind {
     VaspRpa,
     /// Pure-synthetic state evolution (substrate tests, big-scale benches).
     Synthetic,
+    /// Collective-heavy analog (HPCG's allreduce cadence pushed to the
+    /// limit): small payloads at high frequency posted *nonblocking* at
+    /// every superstep boundary, so a checkpoint request nearly always
+    /// lands inside a pending collective — the drain-strategy stressor.
+    CollectiveHeavy,
 }
 
 impl AppKind {
@@ -32,6 +37,7 @@ impl AppKind {
             AppKind::Hpcg => "hpcg",
             AppKind::VaspRpa => "vasp-rpa",
             AppKind::Synthetic => "synthetic",
+            AppKind::CollectiveHeavy => "colheavy",
         }
     }
 
@@ -41,6 +47,7 @@ impl AppKind {
             "hpcg" => Some(AppKind::Hpcg),
             "vasp" | "vasp-rpa" => Some(AppKind::VaspRpa),
             "synthetic" => Some(AppKind::Synthetic),
+            "colheavy" | "collective-heavy" => Some(AppKind::CollectiveHeavy),
             _ => None,
         }
     }
@@ -158,6 +165,44 @@ impl ChunkingMode {
     }
 }
 
+/// How the DRAIN phase quiesces in-flight traffic before the image is
+/// taken (`--drain-strategy counter|topo`), orthogonal to the
+/// coordination plane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum DrainStrategy {
+    /// The paper's counter convergence: complete any pending collective
+    /// (MANA's trivial-barrier), then reduce per-rank sent/recv counters
+    /// over the control plane until Σsent == Σrecv. Drain cost scales
+    /// with the plane's reduce fan-in.
+    #[default]
+    Counter,
+    /// Topological-sort ordering (arXiv:2408.02218): checkpoint *inside*
+    /// the pending collective. Ranks are ordered by their round cursor
+    /// (deepest first), the per-collective progress cursor is recorded in
+    /// the image manifest, and restart resumes the collective from the
+    /// recorded round. No counter reduce — the wave schedule ships down
+    /// the plane as one bounded object, so drain cost stops scaling with
+    /// fan-in.
+    Topo,
+}
+
+impl DrainStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DrainStrategy::Counter => "counter",
+            DrainStrategy::Topo => "topo",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "counter" => Some(DrainStrategy::Counter),
+            "topo" | "topological" | "topo-sort" => Some(DrainStrategy::Topo),
+            _ => None,
+        }
+    }
+}
+
 /// Tiered-storage staging (SCR-style asynchronous BB→Lustre drain):
 /// checkpoints complete when the fast-tier write lands, and images drain
 /// to the durable tier in the background across subsequent supersteps.
@@ -260,6 +305,11 @@ pub struct RunConfig {
     /// historical O(ranks)-per-superstep loop. Virtual time, stored
     /// generations and fingerprints are identical either way.
     pub event_driven: bool,
+    /// DRAIN-phase quiescing strategy (`--drain-strategy counter|topo`).
+    /// Counter is the paper's Σsent == Σrecv convergence; topo checkpoints
+    /// inside pending collectives in round-cursor order. Final application
+    /// fingerprints are identical either way (property-tested).
+    pub drain_strategy: DrainStrategy,
 }
 
 impl RunConfig {
@@ -290,6 +340,7 @@ impl RunConfig {
             redundancy_set_size: DEFAULT_SET_SIZE,
             trace: false,
             event_driven: true,
+            drain_strategy: DrainStrategy::default(),
         }
     }
 
@@ -383,6 +434,33 @@ mod tests {
         );
         assert_eq!(ChunkingMode::parse("rolling?"), None);
         assert_eq!(ChunkingMode::Cdc.name(), "cdc");
+    }
+
+    #[test]
+    fn drain_strategy_parse_and_default() {
+        assert_eq!(DrainStrategy::parse("counter"), Some(DrainStrategy::Counter));
+        assert_eq!(DrainStrategy::parse("topo"), Some(DrainStrategy::Topo));
+        assert_eq!(
+            DrainStrategy::parse("topological"),
+            Some(DrainStrategy::Topo)
+        );
+        assert_eq!(DrainStrategy::parse("eager"), None);
+        assert_eq!(DrainStrategy::Topo.name(), "topo");
+        let c = RunConfig::new(AppKind::Synthetic, 4);
+        assert_eq!(c.drain_strategy, DrainStrategy::Counter, "paper default");
+    }
+
+    #[test]
+    fn collective_heavy_app_parses() {
+        assert_eq!(
+            AppKind::parse("colheavy"),
+            Some(AppKind::CollectiveHeavy)
+        );
+        assert_eq!(
+            AppKind::parse("collective-heavy"),
+            Some(AppKind::CollectiveHeavy)
+        );
+        assert_eq!(AppKind::CollectiveHeavy.name(), "colheavy");
     }
 
     #[test]

@@ -188,6 +188,19 @@ pub trait CoordPlane {
         now: SimTime,
     ) -> Result<CountReduce, CtrlError>;
 
+    /// Topo-drain scheduling: ship the wave schedule (rank → wave index,
+    /// one bounded object — the same idiom the paper recommends for the
+    /// statically linked restart executable) down the plane. Ranks
+    /// execute their waves locally and piggyback completion on the next
+    /// phase's acks, so the cost is per *hop*, never per rank or per
+    /// wave — this is what keeps topo drain flat as fan-in grows.
+    fn drain_schedule(
+        &mut self,
+        ctrl: &mut ControlNet,
+        waves: u32,
+        now: SimTime,
+    ) -> Result<PhaseIo, CtrlError>;
+
     /// Adopt the owning job's tracer so plane-internal fault paths
     /// (re-parents, retries) emit structured events. Default: no-op.
     fn set_tracer(&mut self, _tracer: Tracer) {}
@@ -244,6 +257,25 @@ impl CoordPlane for FlatPlane {
         let sent = counts.iter().map(|c| c.0).sum();
         let recv = counts.iter().map(|c| c.1).sum();
         Ok(CountReduce { sent, recv, io })
+    }
+
+    fn drain_schedule(
+        &mut self,
+        ctrl: &mut ControlNet,
+        _waves: u32,
+        now: SimTime,
+    ) -> Result<PhaseIo, CtrlError> {
+        // One schedule object leaves the root; the scalable broadcast
+        // fans it out without touching the root again.
+        let secs = ctrl.send(RankId(0), now)?;
+        Ok(PhaseIo {
+            secs,
+            down_secs: secs,
+            msgs: 1,
+            root_msgs: 1,
+            reparents: 0,
+            retries: 0,
+        })
     }
 
     fn depth(&self) -> u32 {
@@ -445,6 +477,20 @@ pub struct CkptReport {
     /// Redundancy artifact bytes (partner copies or parity blocks) the
     /// exchange parked on the fast tier this checkpoint.
     pub parity_bytes: u64,
+    // ---- collective-aware drain ----
+    /// Which DRAIN strategy this checkpoint ran.
+    pub drain_strategy: crate::config::DrainStrategy,
+    /// Checkpoint waves the topo drain ordered ranks into (distinct
+    /// round-cursor values of the pending collective; 0 on the counter
+    /// path).
+    pub topo_waves: u32,
+    /// Collectives the checkpoint request landed inside of (0 or 1: at
+    /// most one allreduce pends per superstep boundary).
+    pub collectives_interrupted: u32,
+    /// Virtual seconds the counter path spent completing the pending
+    /// collective before it could start draining (MANA's trivial-barrier;
+    /// 0 on the topo path, which checkpoints inside the collective).
+    pub collective_drain_secs: f64,
 }
 
 impl CkptReport {
@@ -574,6 +620,35 @@ impl Coordinator {
             Ok(red) => {
                 self.absorb_io(red.io);
                 Ok((red.sent == red.recv, red.io))
+            }
+            Err(e) => Err(self.record_ctrl_error(e, Phase::Drain)),
+        }
+    }
+
+    /// Topological-sort drain (arXiv:2408.02218): instead of reducing
+    /// byte counters to convergence, order ranks by their round cursor in
+    /// the pending collective — deepest cursor first, so every rank's
+    /// image is cut at a point consistent with the rounds its peers have
+    /// already contributed — and checkpoint them wave by wave. The wave
+    /// schedule ships down the plane as one bounded object, so the
+    /// control cost is per hop, independent of the counter-reduce fan-in.
+    /// Returns the wave count and the exchange accounting.
+    pub fn topo_drain(
+        &mut self,
+        cursors: &[u32],
+        now: SimTime,
+    ) -> Result<(u32, PhaseIo), CkptFailure> {
+        if let Some((rank, first)) = self.unreachable {
+            return Err(CkptFailure::Unreachable { rank, phase: first });
+        }
+        let mut waves: Vec<u32> = cursors.to_vec();
+        waves.sort_unstable_by(|a, b| b.cmp(a));
+        waves.dedup();
+        let nwaves = waves.len().max(1) as u32;
+        match self.plane.drain_schedule(&mut self.ctrl, nwaves, now) {
+            Ok(io) => {
+                self.absorb_io(io);
+                Ok((nwaves, io))
             }
             Err(e) => Err(self.record_ctrl_error(e, Phase::Drain)),
         }
@@ -777,6 +852,39 @@ mod tests {
         assert_eq!(io.root_msgs, 8, "flat root touches 2 x ranks");
         let (unbalanced, _) = c.drain_reduce(&[(10, 0), (0, 5)], SimTime::ZERO).unwrap();
         assert!(!unbalanced);
+    }
+
+    #[test]
+    fn topo_drain_cost_is_independent_of_rank_count() {
+        // The wave schedule is one bounded object: the flat plane's topo
+        // drain charges the same control cost at 8 and 4096 ranks, while
+        // the counter reduce pays O(ranks) at the root.
+        let mut small = coord(8, true, 0.0, true);
+        let mut big = coord(4096, true, 0.0, true);
+        let cursors_small: Vec<u32> = (0..8).map(|i: u32| i % 3).collect();
+        let cursors_big: Vec<u32> = (0..4096).map(|i: u32| i % 3).collect();
+        let (w_s, io_s) = small.topo_drain(&cursors_small, SimTime::ZERO).unwrap();
+        let (w_b, io_b) = big.topo_drain(&cursors_big, SimTime::ZERO).unwrap();
+        assert_eq!(w_s, 3);
+        assert_eq!(w_b, 3);
+        assert_eq!(io_s.root_msgs, 1);
+        assert_eq!(io_b.root_msgs, 1);
+        assert!((io_s.secs - io_b.secs).abs() < 1e-12);
+        let counts: Vec<(u64, u64)> = vec![(1, 1); 4096];
+        let (_, reduce_io) = big.drain_reduce(&counts, SimTime::ZERO).unwrap();
+        assert!(
+            reduce_io.secs > 10.0 * io_b.secs,
+            "counter reduce {} should dwarf topo schedule {}",
+            reduce_io.secs,
+            io_b.secs
+        );
+    }
+
+    #[test]
+    fn topo_drain_empty_cursors_degenerates_to_one_wave() {
+        let mut c = coord(4, true, 0.0, true);
+        let (waves, _) = c.topo_drain(&[], SimTime::ZERO).unwrap();
+        assert_eq!(waves, 1, "no pending collective = a single wave");
     }
 
     #[test]

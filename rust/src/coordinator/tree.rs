@@ -443,6 +443,33 @@ impl CoordPlane for TreePlane {
         Ok(CountReduce { sent, recv, io })
     }
 
+    fn drain_schedule(
+        &mut self,
+        ctrl: &mut ControlNet,
+        _waves: u32,
+        now: SimTime,
+    ) -> Result<PhaseIo, CtrlError> {
+        // The wave schedule is one bounded object relayed down the tree:
+        // one hop per level plus the leaf hop, each a single forward of
+        // the same object (no per-rank fan-out — sub-coordinators pass it
+        // to their node's shared memory). Cost scales with depth, never
+        // with rank count or wave count.
+        let mut secs = 0.0f64;
+        let mut msgs = 0u64;
+        for _level in 0..self.depth() {
+            secs += ctrl.send(RankId(0), now)?;
+            msgs += 1;
+        }
+        Ok(PhaseIo {
+            secs,
+            down_secs: secs,
+            msgs,
+            root_msgs: 1,
+            reparents: 0,
+            retries: 0,
+        })
+    }
+
     fn set_tracer(&mut self, tracer: Tracer) {
         self.tracer = tracer;
     }
@@ -645,6 +672,26 @@ mod tests {
         let red = p.reduce_counts(&mut ctrl, &counts, SimTime::ZERO).unwrap();
         assert_eq!(red.sent, 96, "each rank folded exactly once");
         assert_eq!(red.recv, 96);
+    }
+
+    #[test]
+    fn drain_schedule_costs_depth_not_ranks() {
+        let mut small = plane(64, 8, None);
+        let mut big = plane(4096, 8, None);
+        let mut ctrl = net();
+        let s = small
+            .drain_schedule(&mut ctrl, 4, SimTime::ZERO)
+            .unwrap();
+        let b = big.drain_schedule(&mut ctrl, 9, SimTime::ZERO).unwrap();
+        assert_eq!(s.root_msgs, 1);
+        assert_eq!(b.root_msgs, 1);
+        assert_eq!(s.msgs, u64::from(small.depth()));
+        assert_eq!(b.msgs, u64::from(big.depth()));
+        // Cost is a few hop latencies — orders of magnitude under the
+        // counter reduce at the same scale.
+        let counts: Vec<(u64, u64)> = vec![(1, 1); 4096];
+        let red = big.reduce_counts(&mut ctrl, &counts, SimTime::ZERO).unwrap();
+        assert!(red.io.secs > 2.0 * b.secs);
     }
 
     #[test]

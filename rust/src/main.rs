@@ -123,13 +123,18 @@ fn print_help() {
 USAGE: mana <command> [--flags]
 
 COMMANDS:
-  run        --app gromacs|hpcg|vasp|synthetic --ranks N [--steps S]
+  run        --app gromacs|hpcg|vasp|synthetic|colheavy --ranks N [--steps S]
              [--threads T] [--fs bb|lustre|staged] [--keep-fulls N]
              [--chunk-bytes N] [--chunking fixed|cdc] [--coord-fanout F]
-             [--encode-threads N] [--pipeline on|off] [--ckpt-at STEP]
+             [--drain-strategy counter|topo] [--encode-threads N]
+             [--pipeline on|off] [--ckpt-at STEP]
              [--redundancy none|partner|xor] [--redundancy-set-size N]
              [--restart] [--real-compute] [--fixes on|off]
              [--link static|dynamic] [--trace] [--trace-out FILE]
+             --drain-strategy: counter reduces per-rank byte counters to
+             convergence (the paper's DRAIN); topo checkpoints inside a
+             pending collective, ordering ranks by round cursor (the
+             cursor rides the manifest and resumes on restart).
              --trace records virtual-time spans; the run JSON gains a
              critical_path breakdown and the structured event log.
              --trace-out (implies --trace) also writes a Perfetto /
@@ -206,6 +211,13 @@ fn build_config(args: &Args) -> Result<RunConfig> {
         // rolling hash) boundaries whose expected size is --chunk-bytes.
         cfg.chunking = mana::config::ChunkingMode::parse(m)
             .with_context(|| format!("unknown --chunking {m} (fixed|cdc)"))?;
+    }
+    if let Some(m) = args.get("drain-strategy") {
+        // DRAIN-phase coordinator strategy, orthogonal to the plane:
+        // counter convergence (the paper's protocol) or topological-sort
+        // ordering over a pending collective's round cursors.
+        cfg.drain_strategy = mana::config::DrainStrategy::parse(m)
+            .with_context(|| format!("unknown --drain-strategy {m} (counter|topo)"))?;
     }
     if let Some(v) = args.get("pipeline") {
         // Fully pipelined checkpoint path (streamed encode→write
@@ -376,7 +388,11 @@ fn cmd_run(args: &Args) -> Result<()> {
                 .set("deduped_bytes", c.deduped_bytes)
                 .set("dedup_ratio", c.dedup_ratio())
                 .set("buffered_msgs", c.buffered_msgs)
-                .set("lost_messages", c.lost_messages),
+                .set("lost_messages", c.lost_messages)
+                .set("drain_strategy", c.drain_strategy.name())
+                .set("topo_waves", c.topo_waves as u64)
+                .set("collectives_interrupted", c.collectives_interrupted as u64)
+                .set("collective_drain_secs", c.collective_drain_secs),
         );
     }
     out = out.set(

@@ -5,6 +5,14 @@
 //! standard log-tree models (latency * ceil(log2 P) + bytes/bandwidth per
 //! hop), and every collective also updates the per-rank byte counters so
 //! the drain condition sees collective traffic too.
+//!
+//! Beyond the one-shot operations, [`InflightCollective`] models the same
+//! log-tree schedules **round by round**: a checkpoint request can land
+//! while ranks sit at different rounds of an allreduce/barrier/bcast, the
+//! per-rank progress cursor survives in the image manifest, and resuming
+//! from the cursor completes with times and counters bitwise-identical to
+//! the uninterrupted op (property-tested). This is the substrate of the
+//! topological-sort drain strategy (arXiv:2408.02218).
 
 use crate::topology::RankId;
 use crate::util::simclock::SimTime;
@@ -73,7 +81,30 @@ pub fn allreduce(world: &mut MpiWorld, times: &mut [SimTime], bytes: u64) -> Sim
     done
 }
 
+/// Number of binomial-tree children of `rank` in a bcast rooted at
+/// `root` over `size` ranks — the messages this rank *relays* (the root
+/// included). Relative rank j = (rank - root) mod size; in round r the
+/// ranks j < 2^r forward to j + 2^r when that target exists.
+fn bcast_children(size: u32, root: RankId, rank: RankId) -> u64 {
+    let p = size as u64;
+    let j = (u64::from(rank.0) + p - u64::from(root.0)) % p;
+    let mut children = 0;
+    for r in 0..log2_ceil(size) {
+        let stride = 1u64 << r;
+        if j < stride && j + stride < p {
+            children += 1;
+        }
+    }
+    children
+}
+
 /// Broadcast `bytes` from `root` to everyone (binomial tree).
+///
+/// Accounting follows the relay structure: every non-root rank receives
+/// the payload exactly once, and every rank (root included) is charged a
+/// send per binomial-tree child it forwards to — so sent == recv holds
+/// per collective op (`size - 1` messages total) and the drain condition
+/// stays balanced after any bcast.
 pub fn bcast(
     world: &mut MpiWorld,
     times: &mut [SimTime],
@@ -90,10 +121,11 @@ pub fn bcast(
     for (i, t) in times.iter_mut().enumerate() {
         *t = done;
         if world.size > 1 {
-            if i as u32 == root.0 {
-                world.counters[i].sent_bytes += bytes * (world.size as u64 - 1).min(hops as u64);
-                world.counters[i].sent_msgs += 1;
-            } else {
+            let rank = RankId(i as u32);
+            let children = bcast_children(world.size, root, rank);
+            world.counters[i].sent_bytes += bytes * children;
+            world.counters[i].sent_msgs += children;
+            if rank != root {
                 world.counters[i].recv_bytes += bytes;
                 world.counters[i].recv_msgs += 1;
             }
@@ -109,6 +141,305 @@ pub fn bcast(
 /// for bcast this is root-sends == sum of receives).
 pub fn accounting_balanced(world: &MpiWorld) -> bool {
     world.total_sent_bytes() == world.total_recv_bytes()
+}
+
+// ---------------------------------------------------------------------------
+// Partial-progress collectives
+// ---------------------------------------------------------------------------
+
+/// Which collective operation an [`InflightCollective`] is running.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollectiveKind {
+    Barrier,
+    Allreduce,
+    Bcast,
+}
+
+impl CollectiveKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            CollectiveKind::Barrier => "barrier",
+            CollectiveKind::Allreduce => "allreduce",
+            CollectiveKind::Bcast => "bcast",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "barrier" => Some(CollectiveKind::Barrier),
+            "allreduce" => Some(CollectiveKind::Allreduce),
+            "bcast" => Some(CollectiveKind::Bcast),
+            _ => None,
+        }
+    }
+}
+
+/// Integer split of `total` into `parts` pieces that sum exactly to
+/// `total`: piece `idx` gets `total/parts`, plus one unit of the
+/// remainder for the first `total % parts` pieces. Exactness is what
+/// makes resumed collectives land on counters bitwise-identical to the
+/// one-shot ops.
+fn share(total: u64, parts: u32, idx: u32) -> u64 {
+    debug_assert!(parts > 0 && idx < parts);
+    total / u64::from(parts) + u64::from(u64::from(idx) < total % u64::from(parts))
+}
+
+/// A collective caught mid-flight: the same log-tree schedule as the
+/// one-shot ops above, unrolled round by round so each rank carries its
+/// own progress cursor. A checkpoint request can land while ranks sit at
+/// different rounds; the cursor vector is recorded in the image manifest
+/// and resuming from it completes the op with times and byte counters
+/// bitwise-identical to running it uninterrupted.
+///
+/// Two invariants hold at **any** interleaving of per-rank advances:
+///
+/// * global sent == recv (the drain condition). Allreduce rounds charge a
+///   symmetric sent+recv share on the advancing rank; bcast charges are
+///   atomic message pairs — when a receiver advances through its receive
+///   round, both its recv **and its binomial-tree parent's sent** are
+///   charged in the same step; barrier charges nothing.
+/// * completing every cursor reproduces the one-shot op exactly: the
+///   per-round integer shares sum to the full wire totals, and the final
+///   round of each rank lands on the stored `done` time verbatim (not a
+///   re-derived float).
+#[derive(Clone, Debug, PartialEq)]
+pub struct InflightCollective {
+    pub kind: CollectiveKind,
+    /// Root rank (bcast only; 0 otherwise).
+    pub root: u32,
+    /// Per-rank payload bytes the application passed to the op.
+    pub bytes: u64,
+    /// Number of participants (== world size at begin time).
+    pub size: u32,
+    /// Total rounds in the unrolled schedule (>= 1).
+    pub rounds: u32,
+    /// Entry time: max of all participant clocks at begin.
+    pub enter: SimTime,
+    /// Completion time; the final round of every rank lands here exactly.
+    pub done: SimTime,
+    /// Per-rank progress: rounds completed so far (0..=rounds).
+    pub cursor: Vec<u32>,
+}
+
+/// Begin a barrier without running it: all clocks are noted (entry is
+/// their max) but nothing advances until ranks step through rounds.
+pub fn begin_barrier(world: &MpiWorld, times: &[SimTime]) -> InflightCollective {
+    assert_eq!(times.len(), world.size as usize);
+    let enter = times.iter().fold(SimTime::ZERO, |a, &t| a.max(t));
+    let hops = log2_ceil(world.size).max(1);
+    let done = enter.after(2.0 * hops as f64 * world.fabric.cfg.latency);
+    InflightCollective {
+        kind: CollectiveKind::Barrier,
+        root: 0,
+        bytes: 0,
+        size: world.size,
+        rounds: (2 * hops).max(1),
+        enter,
+        done,
+        cursor: vec![0; world.size as usize],
+    }
+}
+
+/// Begin an allreduce without running it. Completing all cursors charges
+/// exactly what [`allreduce`] charges and lands every clock on the same
+/// completion time.
+pub fn begin_allreduce(world: &MpiWorld, times: &[SimTime], bytes: u64) -> InflightCollective {
+    assert_eq!(times.len(), world.size as usize);
+    let enter = times.iter().fold(SimTime::ZERO, |a, &t| a.max(t));
+    let (_, dur) = allreduce_cost(world, bytes);
+    InflightCollective {
+        kind: CollectiveKind::Allreduce,
+        root: 0,
+        bytes,
+        size: world.size,
+        rounds: (2 * log2_ceil(world.size)).max(1),
+        enter,
+        done: enter.after(dur),
+        cursor: vec![0; world.size as usize],
+    }
+}
+
+/// Begin a binomial-tree bcast without running it.
+pub fn begin_bcast(
+    world: &MpiWorld,
+    times: &[SimTime],
+    root: RankId,
+    bytes: u64,
+) -> InflightCollective {
+    assert_eq!(times.len(), world.size as usize);
+    assert!(root.0 < world.size);
+    let enter = times.iter().fold(SimTime::ZERO, |a, &t| a.max(t));
+    let hops = log2_ceil(world.size).max(1);
+    let dur = hops as f64 * (world.fabric.cfg.latency + bytes as f64 / world.fabric.cfg.bandwidth);
+    InflightCollective {
+        kind: CollectiveKind::Bcast,
+        root: root.0,
+        bytes,
+        size: world.size,
+        rounds: log2_ceil(world.size).max(1),
+        enter,
+        done: enter.after(dur),
+        cursor: vec![0; world.size as usize],
+    }
+}
+
+impl InflightCollective {
+    /// True once every rank has stepped through every round.
+    pub fn finished(&self) -> bool {
+        self.cursor.iter().all(|&c| c >= self.rounds)
+    }
+
+    /// Wire bytes not yet charged anywhere — the "bytes outstanding"
+    /// column of the in-flight record. Zero once finished.
+    pub fn bytes_outstanding(&self, world: &MpiWorld) -> u64 {
+        match self.kind {
+            CollectiveKind::Barrier => 0,
+            CollectiveKind::Allreduce => {
+                if self.size <= 1 {
+                    return 0;
+                }
+                let (wire, _) = allreduce_cost(world, self.bytes);
+                self.cursor
+                    .iter()
+                    .map(|&c| (c..self.rounds).map(|r| share(wire, self.rounds, r)).sum::<u64>())
+                    .sum()
+            }
+            CollectiveKind::Bcast => {
+                // Each receiver that has not yet passed its receive round
+                // still has one payload in flight.
+                (0..self.size)
+                    .filter(|&i| {
+                        bcast_recv_round(self.size, self.root, i)
+                            .is_some_and(|r| self.cursor[i as usize] <= r)
+                    })
+                    .count() as u64
+                    * self.bytes
+            }
+        }
+    }
+
+    /// Distinct in-progress cursor values, descending — the wave order a
+    /// topological drain checkpoints ranks in (deepest-in-the-collective
+    /// ranks first, so every rank's image is taken at a cut consistent
+    /// with its pending dependencies).
+    pub fn waves(&self) -> Vec<u32> {
+        let mut w: Vec<u32> = self.cursor.to_vec();
+        w.sort_unstable_by(|a, b| b.cmp(a));
+        w.dedup();
+        w
+    }
+
+    /// Virtual time at which round `r` (1-based count of completed
+    /// rounds) lands. The final round returns the stored `done` verbatim
+    /// so resume is bitwise-identical to the one-shot op.
+    fn round_time(&self, completed: u32) -> SimTime {
+        if completed >= self.rounds {
+            return self.done;
+        }
+        let dur = self.done.as_secs() - self.enter.as_secs();
+        self.enter
+            .after(dur * f64::from(completed) / f64::from(self.rounds))
+    }
+
+    /// Step `rank` through its next round: charge that round's balanced
+    /// byte/message deltas and advance its clock. Returns false if the
+    /// rank has already completed all rounds.
+    pub fn advance_rank(
+        &mut self,
+        world: &mut MpiWorld,
+        times: &mut [SimTime],
+        rank: RankId,
+    ) -> bool {
+        assert_eq!(self.size, world.size);
+        assert_eq!(times.len(), self.cursor.len());
+        let i = rank.0 as usize;
+        let r = self.cursor[i];
+        if r >= self.rounds {
+            return false;
+        }
+        if self.size > 1 {
+            match self.kind {
+                CollectiveKind::Barrier => {}
+                CollectiveKind::Allreduce => {
+                    let (wire, _) = allreduce_cost(world, self.bytes);
+                    let msgs = allreduce_msgs(self.size);
+                    let b = share(wire, self.rounds, r);
+                    let m = share(msgs, self.rounds, r);
+                    world.counters[i].sent_bytes += b;
+                    world.counters[i].recv_bytes += b;
+                    world.counters[i].sent_msgs += m;
+                    world.counters[i].recv_msgs += m;
+                }
+                CollectiveKind::Bcast => {
+                    // One message = one atomic charge pair: when the
+                    // receiver steps through its receive round, its recv
+                    // AND its binomial-tree parent's sent are both
+                    // recorded, keeping the world balanced at any cut.
+                    if bcast_recv_round(self.size, self.root, rank.0) == Some(r) {
+                        let p = u64::from(self.size);
+                        let j = (u64::from(rank.0) + p - u64::from(self.root)) % p;
+                        let parent_rel = j - (1u64 << (63 - j.leading_zeros()));
+                        let parent = ((parent_rel + u64::from(self.root)) % p) as usize;
+                        world.counters[i].recv_bytes += self.bytes;
+                        world.counters[i].recv_msgs += 1;
+                        world.counters[parent].sent_bytes += self.bytes;
+                        world.counters[parent].sent_msgs += 1;
+                    }
+                }
+            }
+        }
+        self.cursor[i] = r + 1;
+        let t = self.round_time(r + 1);
+        times[i] = times[i].max(t);
+        true
+    }
+
+    /// Run every rank to completion. After this, counters and clocks are
+    /// bitwise-identical to having called the one-shot op instead.
+    pub fn finish(&mut self, world: &mut MpiWorld, times: &mut [SimTime]) -> SimTime {
+        for i in 0..self.size {
+            while self.advance_rank(world, times, RankId(i)) {}
+        }
+        self.done
+    }
+
+    /// Re-anchor the schedule on a fresh timeline (restart): the virtual
+    /// clock restarts near zero and the world's counters are zeroed, so
+    /// the stored enter/done stamps are meaningless. Keep the cursors —
+    /// the progress is real — but replay the **remaining** fraction of
+    /// the original duration from `now`.
+    pub fn rebase(&mut self, now: SimTime) {
+        let dur = self.done.as_secs() - self.enter.as_secs();
+        let min_cursor = self.cursor.iter().copied().min().unwrap_or(0);
+        let elapsed = dur * f64::from(min_cursor) / f64::from(self.rounds);
+        self.enter = SimTime::secs(now.as_secs() - elapsed);
+        self.done = self.enter.after(dur);
+    }
+}
+
+/// Round in which relative receiver `rank` gets the bcast payload, or
+/// None for the root (which receives nothing).
+fn bcast_recv_round(size: u32, root: u32, rank: u32) -> Option<u32> {
+    let p = u64::from(size);
+    let j = (u64::from(rank) + p - u64::from(root)) % p;
+    if j == 0 {
+        None
+    } else {
+        Some(63 - j.leading_zeros())
+    }
+}
+
+/// Staggered starting cursor for rank `i` of an interrupted collective:
+/// ranks sit at varied depths (~log2(size) distinct wave values) and none
+/// has completed, which is the worst case a topological drain must order.
+/// Deterministic in (i, rounds) so runs are reproducible.
+pub fn stagger_cursor(i: u32, rounds: u32) -> u32 {
+    if rounds <= 1 {
+        return 0;
+    }
+    let base = rounds / 2;
+    let tz = i.trailing_zeros().min(31);
+    base + tz.min(rounds - 1 - base)
 }
 
 #[cfg(test)]
@@ -178,5 +509,172 @@ mod tests {
         allreduce(&mut w, &mut times, 4096);
         barrier(&mut w, &mut times);
         assert!(w.drained());
+    }
+
+    #[test]
+    fn bcast_then_drain_condition_holds() {
+        // Regression: the root used to charge bytes * min(size-1, hops)
+        // sent while receivers collectively recorded bytes * (size-1), so
+        // the world was never drained after a bcast. With relay charging
+        // the op is balanced for any size and any root.
+        for &n in &[2u32, 3, 5, 16, 17, 64] {
+            let (mut w, mut times) = world(n);
+            bcast(&mut w, &mut times, RankId(0), 4096);
+            assert!(accounting_balanced(&w), "size {n} root 0");
+            assert!(w.drained(), "size {n} root 0");
+            assert_eq!(w.total_sent_bytes(), 4096 * u64::from(n - 1));
+            // Non-zero root exercises the relative-rank rotation.
+            let root = RankId(n - 1);
+            bcast(&mut w, &mut times, root, 1 << 20);
+            assert!(w.drained(), "size {n} root {}", root.0);
+        }
+    }
+
+    #[test]
+    fn bcast_relay_counts_cover_tree() {
+        // Exactly size-1 messages total, root relays ceil(log2 n) of them.
+        let n = 16u32;
+        let (mut w, mut times) = world(n);
+        bcast(&mut w, &mut times, RankId(0), 100);
+        let total_msgs: u64 = w.counters.iter().map(|c| c.sent_msgs).sum();
+        assert_eq!(total_msgs, u64::from(n) - 1);
+        assert_eq!(w.counters[0].sent_msgs, u64::from(log2_ceil(n)));
+    }
+
+    #[test]
+    fn inflight_allreduce_finish_matches_oneshot() {
+        let (mut w1, mut t1) = world(12);
+        t1[3] = SimTime::secs(2.5);
+        let (mut w2, mut t2) = (MpiWorld::new(12, Fabric::default()), t1.clone());
+        let done1 = allreduce(&mut w1, &mut t1, 4096);
+        let mut infl = begin_allreduce(&w2, &t2, 4096);
+        let done2 = infl.finish(&mut w2, &mut t2);
+        assert_eq!(done1, done2);
+        assert_eq!(t1, t2);
+        for (a, b) in w1.counters.iter().zip(&w2.counters) {
+            assert_eq!((a.sent_bytes, a.recv_bytes), (b.sent_bytes, b.recv_bytes));
+            assert_eq!((a.sent_msgs, a.recv_msgs), (b.sent_msgs, b.recv_msgs));
+        }
+    }
+
+    #[test]
+    fn inflight_bcast_finish_matches_oneshot() {
+        for &(n, root) in &[(2u32, 0u32), (9, 4), (16, 15)] {
+            let (mut w1, mut t1) = world(n);
+            let (mut w2, mut t2) = world(n);
+            let done1 = bcast(&mut w1, &mut t1, RankId(root), 8192);
+            let mut infl = begin_bcast(&w2, &t2, RankId(root), 8192);
+            let done2 = infl.finish(&mut w2, &mut t2);
+            assert_eq!(done1, done2, "size {n} root {root}");
+            assert_eq!(t1, t2);
+            for (a, b) in w1.counters.iter().zip(&w2.counters) {
+                assert_eq!(a.sent_bytes, b.sent_bytes);
+                assert_eq!(a.recv_bytes, b.recv_bytes);
+            }
+        }
+    }
+
+    #[test]
+    fn inflight_barrier_finish_matches_oneshot() {
+        let (mut w1, mut t1) = world(7);
+        t1[5] = SimTime::secs(9.0);
+        let (mut w2, mut t2) = (MpiWorld::new(7, Fabric::default()), t1.clone());
+        let done1 = barrier(&mut w1, &mut t1);
+        let mut infl = begin_barrier(&w2, &t2);
+        let done2 = infl.finish(&mut w2, &mut t2);
+        assert_eq!(done1, done2);
+        assert_eq!(t1, t2);
+        assert_eq!(w2.total_sent_bytes(), 0);
+    }
+
+    #[test]
+    fn inflight_balanced_at_every_interleaved_cut() {
+        // Advance ranks in a skewed round-robin and check the global
+        // drain condition after every single step: allreduce and bcast
+        // charges must be balanced at ANY cut, not just at completion.
+        let n = 16u32;
+        let (mut w, mut t) = world(n);
+        let mut infl = begin_allreduce(&w, &t, 4096);
+        let mut moved = true;
+        while moved {
+            moved = false;
+            for i in (0..n).rev() {
+                if infl.advance_rank(&mut w, &mut t, RankId(i)) {
+                    assert!(accounting_balanced(&w), "allreduce cut");
+                    moved = true;
+                }
+            }
+        }
+        assert!(infl.finished());
+        let (mut w, mut t) = world(n);
+        let mut infl = begin_bcast(&w, &t, RankId(3), 512);
+        for i in 0..n {
+            // Deepest receivers first: the sender's sent is charged by
+            // the receiver's advance even though the sender hasn't moved.
+            for _ in 0..infl.rounds {
+                infl.advance_rank(&mut w, &mut t, RankId((n - 1 - i) % n));
+                assert!(accounting_balanced(&w), "bcast cut");
+            }
+        }
+        assert!(infl.finished());
+        assert_eq!(w.total_recv_bytes(), 512 * u64::from(n - 1));
+    }
+
+    #[test]
+    fn stagger_spreads_ranks_without_finishing_any() {
+        let rounds = 10;
+        let cursors: Vec<u32> = (0..512).map(|i| stagger_cursor(i, rounds)).collect();
+        assert!(cursors.iter().all(|&c| c < rounds));
+        let mut distinct = cursors.clone();
+        distinct.sort_unstable();
+        distinct.dedup();
+        assert!(distinct.len() >= 3, "want several waves, got {distinct:?}");
+    }
+
+    #[test]
+    fn resume_from_cursor_completes_bitwise_identical() {
+        // Interrupt an allreduce at a staggered cut, clone the record (as
+        // the manifest would), and finish both copies: identical times
+        // and counters.
+        let (mut w, mut t) = world(8);
+        let mut infl = begin_allreduce(&w, &t, 4096);
+        for i in 0..8u32 {
+            for _ in 0..stagger_cursor(i, infl.rounds) {
+                infl.advance_rank(&mut w, &mut t, RankId(i));
+            }
+        }
+        let mut resumed = infl.clone();
+        let (mut w2, mut t2) = (w.clone(), t.clone());
+        let d1 = infl.finish(&mut w, &mut t);
+        let d2 = resumed.finish(&mut w2, &mut t2);
+        assert_eq!(d1, d2);
+        assert_eq!(t, t2);
+        for (a, b) in w.counters.iter().zip(&w2.counters) {
+            assert_eq!(a.sent_bytes, b.sent_bytes);
+            assert_eq!(a.recv_bytes, b.recv_bytes);
+        }
+    }
+
+    #[test]
+    fn rebase_moves_schedule_to_new_timeline() {
+        let (w, t) = world(8);
+        let mut infl = begin_allreduce(&w, &t, 1 << 20);
+        let dur = infl.done.as_secs() - infl.enter.as_secs();
+        let (mut wx, mut tx) = world(8);
+        for i in 0..8u32 {
+            infl.advance_rank(&mut wx, &mut tx, RankId(i));
+        }
+        infl.rebase(SimTime::secs(100.0));
+        assert!(infl.done.as_secs() > 100.0);
+        let dur2 = infl.done.as_secs() - infl.enter.as_secs();
+        assert!((dur - dur2).abs() < 1e-12);
+        // Finishing on the new timeline still balances the fresh world.
+        let (mut w2, mut t2) = (
+            MpiWorld::new(8, Fabric::default()),
+            vec![SimTime::secs(100.0); 8],
+        );
+        infl.finish(&mut w2, &mut t2);
+        assert!(accounting_balanced(&w2));
+        assert!(t2.iter().all(|&x| x >= SimTime::secs(100.0)));
     }
 }

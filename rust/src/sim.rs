@@ -25,7 +25,7 @@ use crate::ckpt::{
     datapath, gen_image_path, gen_incr_image_path, image_path, pipeline, CkptImage, ImageError,
     SavedPayload, SavedRegion,
 };
-use crate::config::{ComputeMode, RunConfig};
+use crate::config::{ComputeMode, DrainStrategy, RunConfig};
 use crate::coordinator::tree::TreePlane;
 use crate::coordinator::{
     CkptFailure, CkptReport, CoordPlane, Coordinator, FlatPlane, OverlapIo, Phase, PhaseIo,
@@ -37,7 +37,7 @@ use crate::fs::{
 };
 use crate::launcher::{self, LaunchError};
 use crate::mem::Payload;
-use crate::mpi::collectives;
+use crate::mpi::collectives::{self, InflightCollective};
 use crate::mpi::comm::{CommRegistry, COMM_WORLD};
 use crate::mpi::{Message, MpiWorld, RankCounters};
 use crate::runtime::Engine;
@@ -55,8 +55,6 @@ use crate::log_info;
 const MSG_BUFFER_BASE: u64 = 0x6f00_0000_0000;
 /// Address of the communicator replay log pseudo-region (rank 0 only).
 const COMM_LOG_ADDR: u64 = 0x6e00_0000_0000;
-/// Bytes reduced by the per-superstep wrapped allreduce (energy/dot).
-const ALLREDUCE_BYTES: u64 = 4096;
 
 /// Path of a rank's *incremental* image (full images use
 /// [`crate::ckpt::image_path`]).
@@ -392,6 +390,11 @@ impl JobSim {
         }
         let ranks = self.cfg.ranks;
         let compute_secs = self.app.compute_secs();
+        // The recurrence folds the app's blocking allreduce cadence; the
+        // default (4 KiB) reproduces the historical hardcoded reduction
+        // bit-for-bit. Nonblocking cadences never reach here — a pending
+        // collective makes the window ineligible.
+        let coll_bytes = self.app.collective_cadence().bytes;
         let t_now = {
             let w = self.lazy.as_mut().expect("window just ensured");
             if ranks > 1 {
@@ -409,7 +412,7 @@ impl JobSim {
                 // collectives::allreduce folds the (uniform) clocks from
                 // SimTime::ZERO; replicate that fold bit-for-bit.
                 let enter = SimTime::ZERO.max(ts);
-                let (wire, dur) = collectives::allreduce_cost(&self.world, ALLREDUCE_BYTES);
+                let (wire, dur) = collectives::allreduce_cost(&self.world, coll_bytes);
                 let msgs = collectives::allreduce_msgs(ranks);
                 w.t_cur = enter.after(dur);
                 w.d0 = d0n;
@@ -469,6 +472,13 @@ impl JobSim {
         // The recurrence models the careful-nonblocking wait; the buggy
         // clobber path must keep running concretely.
         if !self.cfg.fixes.careful_nonblocking {
+            return false;
+        }
+        // A pending nonblocking collective straddles the boundary the
+        // window would open on, and the recurrence folds the *blocking*
+        // allreduce only — the per-rank `in_collective` scan below would
+        // also veto, but the pending record is the authoritative guard.
+        if self.wrappers.pending_collective().is_some() {
             return false;
         }
         let step0 = self.procs[0].step;
@@ -676,6 +686,14 @@ impl JobSim {
 
     fn superstep(&mut self) -> Result<()> {
         let ranks = self.cfg.ranks;
+        // Wait on the previous boundary's nonblocking allreduce first (the
+        // MPI_Wait of an MPI_Iallreduce): the remaining rounds charge their
+        // counters and every rank lands on the op's completion time.
+        if ranks > 1 {
+            let _ = self
+                .wrappers
+                .finish_pending_collective(&mut self.world, &mut self.times);
+        }
         for r in 0..ranks {
             let rank = RankId(r);
             let prev = RankId((r + ranks - 1) % ranks);
@@ -755,10 +773,20 @@ impl JobSim {
 
         // Every superstep ends with the application's wrapped global
         // reduction (energy / dot product) — a two-phase collective the
-        // checkpoint protocol must respect.
+        // checkpoint protocol must respect. The app's cadence picks the
+        // shape: blocking completes in place (the historical behavior);
+        // nonblocking posts the op staggered and leaves it pending across
+        // the superstep boundary — where checkpoint requests land — to be
+        // waited on at the top of the next superstep.
         if ranks > 1 {
-            self.wrappers
-                .allreduce(&mut self.world, &mut self.times, ALLREDUCE_BYTES);
+            let cad = self.app.collective_cadence();
+            if cad.nonblocking {
+                self.wrappers
+                    .begin_allreduce_staggered(&mut self.world, &mut self.times, cad.bytes);
+            } else {
+                self.wrappers
+                    .allreduce(&mut self.world, &mut self.times, cad.bytes);
+            }
         }
 
         // Injected lower-half growth events (the large-scale MPI-library
@@ -979,6 +1007,26 @@ impl JobSim {
 
         // Phase 3: DRAIN (or the legacy drop).
         let drain_t0 = self.now();
+        report.drain_strategy = self.cfg.drain_strategy;
+        let topo = self.cfg.drain_strategy == DrainStrategy::Topo;
+        // A checkpoint request that lands inside a pending collective:
+        // counter drain completes the op first (MANA's trivial barrier —
+        // the remaining rounds are charged to drain time); topo drain
+        // checkpoints *inside* the op, carrying each rank's round cursor
+        // into the manifest so restart resumes from the recorded round.
+        let mut pending_collective: Option<InflightCollective> = None;
+        if self.wrappers.pending_collective().is_some() {
+            report.collectives_interrupted = 1;
+            if topo {
+                pending_collective = self.wrappers.pending_collective().cloned();
+            } else {
+                let _ = self
+                    .wrappers
+                    .finish_pending_collective(&mut self.world, &mut self.times);
+                report.collective_drain_secs =
+                    self.now().as_secs() - drain_t0.as_secs();
+            }
+        }
         if self.cfg.fixes.drain {
             let drep = self.wrappers.drain_all(&mut self.world, &mut self.times);
             report.drain_rounds = drep.rounds;
@@ -1026,7 +1074,34 @@ impl JobSim {
             )
             .or(prev);
         let mut drain_secs = t_sync.as_secs() - drain_t0.as_secs();
-        if self.cfg.fixes.drain {
+        if self.cfg.fixes.drain && topo {
+            // Topological-sort drain: no counter convergence reduce. The
+            // ranks are ordered by their round cursor in the pending
+            // collective (deepest first) and the wave schedule ships down
+            // the plane as one bounded object — per-hop cost, flat in the
+            // fan-in where the counter reduce pays O(ranks) at the root.
+            let cursors: Vec<u32> = pending_collective
+                .as_ref()
+                .map(|c| c.cursor.clone())
+                .unwrap_or_default();
+            let t_topo0 = t.as_secs();
+            let (waves, pio) = self.coord.topo_drain(&cursors, t)?;
+            absorb_phase(&mut report, pio);
+            report.topo_waves = waves;
+            t = t.after(pio.secs);
+            for tt in &mut self.times {
+                *tt = t;
+            }
+            drain_secs += pio.secs;
+            prev = tr
+                .record(
+                    Span::new("drain.topo", Lane::Ctrl, t_topo0, t.as_secs())
+                        .gen(gen)
+                        .dep_opt(prev)
+                        .attr("waves", waves),
+                )
+                .or(prev);
+        } else if self.cfg.fixes.drain {
             // The paper's convergence test over the plane: Σsent == Σrecv,
             // with the counters summed up the tree — the root sees one
             // aggregate per child, never one row per rank.
@@ -1435,6 +1510,12 @@ impl JobSim {
         // restart must keep writing with the boundaries this set's chunk
         // index was built from, or dedup collapses across the restart.
         manifest.chunking = Some(self.cfg.chunking_strategy());
+        // Collective-aware drain: stamp the strategy, and — topo only —
+        // the interrupted collective's record (kind, schedule, per-rank
+        // round cursors) so restart resumes the op from the recorded
+        // round instead of replaying it.
+        manifest.drain_strategy = Some(self.cfg.drain_strategy);
+        manifest.collective = pending_collective;
         manifest.full_gen = if incremental {
             self.last_full_gen
         } else {
@@ -1702,6 +1783,10 @@ impl JobSim {
         // generation, so they are only reachable through the manifest.
         let mut ckpt_gen = 0u64;
         let mut last_full_gen = None;
+        // Topo-drain checkpoints land inside a collective; the manifest
+        // carries its record so the resumed job can finish the op from
+        // each rank's recorded round cursor.
+        let mut restored_collective: Option<InflightCollective> = None;
         let paths: Vec<(NodeId, String)> = if cfg.fixes.manifest_filenames {
             let (datas, _) = fs
                 .read_parallel(&[(
@@ -1713,6 +1798,7 @@ impl JobSim {
                 .ok_or_else(|| RestartError::Fs("bad manifest".into()))?;
             ckpt_gen = manifest.gen + 1;
             last_full_gen = manifest.full_gen;
+            restored_collective = manifest.collective.clone();
             // Keep the dedup granularity the checkpoint set was written
             // with: mixing chunk sizes across a job's lifetime would stop
             // unchanged regions from deduping against older generations.
@@ -1995,6 +2081,32 @@ impl JobSim {
             );
         }
         let t0 = SimTime::secs(report.total_secs);
+        // Resume the interrupted collective (topo-drain checkpoint): the
+        // schedule is re-anchored on the fresh clock with the recorded
+        // per-rank progress preserved; the first superstep's wait then
+        // completes it — charging exactly the remaining rounds — before
+        // any new communication. Validated like the other manifest fields
+        // (plain text, no CRC): a record whose shape does not match the
+        // job is dropped with a warning, not trusted.
+        if let Some(infl) = restored_collective {
+            if infl.size == cfg.ranks
+                && infl.cursor.len() == cfg.ranks as usize
+                && infl.rounds >= 1
+            {
+                wrappers.restore_pending_collective(infl, t0);
+            } else {
+                tracer.warn(
+                    "sim",
+                    "restart.bad_manifest_collective",
+                    EventCtx::default(),
+                    format!(
+                        "restart {}: ignoring collective record sized for {} ranks \
+                         (job has {})",
+                        cfg.job, infl.size, cfg.ranks
+                    ),
+                );
+            }
+        }
         // The surviving store's drain clock sits on the killed job's
         // timeline; rebase it to the restarted clock so an interrupted
         // background drain resumes instead of waiting for the new clock
@@ -2489,6 +2601,119 @@ mod tests {
         let sim = JobSim::launch(quick_cfg(8, 0), None).unwrap();
         let agg = sim.aggregate_memory();
         assert!(agg >= 8 * (1 << 20));
+    }
+
+    // -------------------------------------------- collective-aware drain
+
+    fn colheavy_cfg(job: &str, ranks: u32) -> RunConfig {
+        let mut cfg = RunConfig::new(AppKind::CollectiveHeavy, ranks);
+        cfg.steps = 0;
+        cfg.mem_per_rank = Some(1 << 20);
+        cfg.job = job.into();
+        cfg
+    }
+
+    #[test]
+    fn counter_drain_completes_the_pending_collective_first() {
+        let mut sim = JobSim::launch(colheavy_cfg("cd-counter", 8), None).unwrap();
+        sim.run_steps(2).unwrap();
+        assert!(
+            sim.wrappers.pending_collective().is_some(),
+            "colheavy leaves an allreduce pending across the boundary"
+        );
+        let sent_before = sim.world.total_sent_bytes();
+        let rep = sim.checkpoint().unwrap();
+        assert_eq!(rep.drain_strategy, DrainStrategy::Counter);
+        assert_eq!(rep.collectives_interrupted, 1);
+        // The trivial barrier charged the op's remaining rounds (its time
+        // may hide under the safe-point advance, but never its bytes).
+        assert!(sim.world.total_sent_bytes() > sent_before);
+        assert!(rep.collective_drain_secs >= 0.0);
+        assert_eq!(rep.topo_waves, 0);
+        assert!(
+            sim.wrappers.pending_collective().is_none(),
+            "counter drain completed the op before the image was cut"
+        );
+    }
+
+    #[test]
+    fn topo_manifest_records_and_restores_the_collective() {
+        let mut cfg = colheavy_cfg("cd-manifest", 8);
+        cfg.drain_strategy = DrainStrategy::Topo;
+        let mut sim = JobSim::launch(cfg, None).unwrap();
+        sim.run_steps(2).unwrap();
+        let saved = sim.wrappers.pending_collective().unwrap().clone();
+        let rep = sim.checkpoint().unwrap();
+        assert_eq!(rep.drain_strategy, DrainStrategy::Topo);
+        assert_eq!(rep.collectives_interrupted, 1);
+        assert!(rep.topo_waves >= 2, "stagger spreads the round cursors");
+        assert!(
+            sim.wrappers.pending_collective().is_some(),
+            "topo drain checkpoints inside the op"
+        );
+        let bytes = match &sim.fs {
+            Store::Single(f) => f
+                .peek(&CkptManifest::manifest_path(&sim.cfg.job))
+                .expect("manifest written")
+                .1
+                .to_vec(),
+            Store::Tiered(_) => unreachable!(),
+        };
+        let m = CkptManifest::decode(&bytes).unwrap();
+        assert_eq!(m.drain_strategy, Some(DrainStrategy::Topo));
+        let rec = m.collective.expect("interrupted collective recorded");
+        assert_eq!(rec, saved, "progress cursors survive the manifest");
+        assert_eq!(rec.cursor.len(), 8);
+    }
+
+    #[test]
+    fn topo_drain_cr_matches_counter_across_planes() {
+        // The acceptance property: for the same collective-heavy job, a
+        // counter-drain C/R and a topo-drain C/R — on the flat plane and
+        // the sub-coordinator tree — all resume to the same final
+        // fingerprint as the uninterrupted run.
+        let mut cont = JobSim::launch(colheavy_cfg("cd-cont", 16), None).unwrap();
+        cont.run_steps(6).unwrap();
+        let want = cont.fingerprint();
+
+        let run = |cfg: RunConfig| {
+            let mut sim = JobSim::launch(cfg, None).unwrap();
+            sim.run_steps(3).unwrap();
+            let rep = sim.checkpoint().unwrap();
+            let cfg = sim.cfg.clone();
+            let fs = sim.kill();
+            let (mut resumed, _) = JobSim::restart_from(cfg, None, fs).unwrap();
+            let resumed_pending = resumed.wrappers.pending_collective().is_some();
+            resumed.run_steps(3).unwrap();
+            assert!(!resumed.any_corruption());
+            (rep, resumed_pending, resumed.fingerprint())
+        };
+        for (job, strategy, tree) in [
+            ("cd-ctr-flat", DrainStrategy::Counter, false),
+            ("cd-ctr-tree", DrainStrategy::Counter, true),
+            ("cd-topo-flat", DrainStrategy::Topo, false),
+            ("cd-topo-tree", DrainStrategy::Topo, true),
+        ] {
+            let mut cfg = colheavy_cfg(job, 16);
+            cfg.drain_strategy = strategy;
+            if tree {
+                cfg = cfg.with_coord_tree(4);
+            }
+            let (rep, resumed_pending, fp) = run(cfg);
+            assert_eq!(fp, want, "{job}: C/R must be bitwise-identical");
+            assert_eq!(rep.drain_strategy, strategy, "{job}");
+            assert_eq!(rep.collectives_interrupted, 1, "{job}");
+            if strategy == DrainStrategy::Topo {
+                assert!(rep.topo_waves >= 2, "{job}: cursors form multiple waves");
+                assert!(
+                    resumed_pending,
+                    "{job}: the interrupted op must resume from its cursors"
+                );
+            } else {
+                assert_eq!(rep.topo_waves, 0, "{job}");
+                assert!(!resumed_pending, "{job}");
+            }
+        }
     }
 
     // ------------------------------------------- coordination plane

@@ -556,7 +556,9 @@ pub fn reconcile(spans: &[Span], gen: u64, rep: &CkptReport) -> Vec<String> {
     );
     check(
         "drain_secs",
-        sum_dur(spans, gen, "drain.msgs") + sum_dur(spans, gen, "drain.reduce"),
+        sum_dur(spans, gen, "drain.msgs")
+            + sum_dur(spans, gen, "drain.reduce")
+            + sum_dur(spans, gen, "drain.topo"),
         rep.drain_secs,
     );
     check(

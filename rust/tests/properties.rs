@@ -596,6 +596,139 @@ fn prop_cdc_recipes_reuse_digests_after_insertion() {
     });
 }
 
+/// Invariant (partial-progress collectives): for any collective kind,
+/// world size, payload and entry-clock skew, the global drain condition
+/// Σsent == Σrecv holds after EVERY per-rank round advance — any
+/// interruption point is a balanced cut — and once interrupted, the
+/// remaining rounds complete with clocks and counters bitwise-identical
+/// to the uninterrupted one-shot op, even when the progress cursor rides
+/// through a manifest encode/decode as it does on a real restart.
+#[test]
+fn prop_inflight_collective_balanced_and_resumes_bitwise() {
+    use mana::ckpt::manifest::CkptManifest;
+    use mana::mpi::collectives::{self, accounting_balanced, CollectiveKind};
+
+    run("inflight collective balanced + bitwise resume", 150, |g| {
+        let size = g.range(2, 32) as u32;
+        let bytes = g.range(1, 1 << 20);
+        let kind = *g.choose(&[
+            CollectiveKind::Barrier,
+            CollectiveKind::Allreduce,
+            CollectiveKind::Bcast,
+        ]);
+        let root = RankId(g.u64_below(u64::from(size)) as u32);
+        let times: Vec<SimTime> = (0..size)
+            .map(|_| SimTime::secs(g.range(0, 1000) as f64 * 1e-3))
+            .collect();
+
+        // Reference lane: the one-shot op on a fresh world.
+        let mut ref_world = MpiWorld::new(size, Fabric::default());
+        let mut ref_times = times.clone();
+        let ref_done = match kind {
+            CollectiveKind::Barrier => collectives::barrier(&mut ref_world, &mut ref_times),
+            CollectiveKind::Allreduce => {
+                collectives::allreduce(&mut ref_world, &mut ref_times, bytes)
+            }
+            CollectiveKind::Bcast => collectives::bcast(&mut ref_world, &mut ref_times, root, bytes),
+        };
+
+        // Round-by-round lane: random interleaving of per-rank advances;
+        // every prefix is a legal interruption point.
+        let mut world = MpiWorld::new(size, Fabric::default());
+        let mut times = times;
+        let mut infl = match kind {
+            CollectiveKind::Barrier => collectives::begin_barrier(&world, &times),
+            CollectiveKind::Allreduce => collectives::begin_allreduce(&world, &times, bytes),
+            CollectiveKind::Bcast => collectives::begin_bcast(&world, &times, root, bytes),
+        };
+        for _ in 0..g.range(0, u64::from(size) * u64::from(infl.rounds)) {
+            let r = RankId(g.u64_below(u64::from(size)) as u32);
+            infl.advance_rank(&mut world, &mut times, r);
+            assert!(
+                accounting_balanced(&world),
+                "unbalanced cut: {} size {size} cursor {:?}",
+                kind.name(),
+                infl.cursor
+            );
+        }
+
+        // The cursor rides through the manifest, as on a real restart.
+        let mut m = CkptManifest::new("prop-coll", 0);
+        m.collective = Some(infl.clone());
+        let decoded = CkptManifest::decode(&m.encode()).expect("manifest roundtrip");
+        let mut resumed = decoded.collective.expect("collective record must survive");
+        assert_eq!(resumed, infl);
+
+        // Completing the remaining rounds must land exactly on the
+        // one-shot op: same completion time, bit-identical clocks,
+        // identical byte/message counters, nothing outstanding.
+        let done = resumed.finish(&mut world, &mut times);
+        assert_eq!(done.as_secs().to_bits(), ref_done.as_secs().to_bits());
+        for (a, b) in times.iter().zip(&ref_times) {
+            assert_eq!(a.as_secs().to_bits(), b.as_secs().to_bits());
+        }
+        for (a, b) in world.counters.iter().zip(&ref_world.counters) {
+            assert_eq!(a.sent_bytes, b.sent_bytes);
+            assert_eq!(a.recv_bytes, b.recv_bytes);
+            assert_eq!(a.sent_msgs, b.sent_msgs);
+            assert_eq!(a.recv_msgs, b.recv_msgs);
+        }
+        assert!(resumed.finished());
+        assert_eq!(resumed.bytes_outstanding(&world), 0);
+    });
+}
+
+/// Invariant (drain strategies): for any collective-heavy job shape,
+/// coordination plane and checkpoint position — the checkpoint always
+/// lands inside a pending nonblocking allreduce — counter drain and
+/// topological-sort drain both restart onto the uninterrupted run's
+/// trajectory.
+#[test]
+fn prop_drain_strategies_agree_on_fingerprint() {
+    use mana::config::DrainStrategy;
+
+    run("drain strategies agree on fingerprint", 12, |g| {
+        let ranks = g.range(2, 10) as u32;
+        let total = g.range(2, 6);
+        let ckpt_at = g.range(1, total);
+        let seed = g.range(0, u64::MAX - 1);
+        let fanout = if g.bool() { Some(g.range(2, 4) as u32) } else { None };
+        let mk = |strategy: DrainStrategy| {
+            let mut cfg = RunConfig::new(AppKind::CollectiveHeavy, ranks);
+            cfg.job = format!("prop-coldrain-{ranks}-{total}-{ckpt_at}");
+            cfg.mem_per_rank = Some(1 << 20);
+            cfg.seed = seed;
+            cfg.drain_strategy = strategy;
+            if let Some(f) = fanout {
+                cfg = cfg.with_coord_tree(f);
+            }
+            cfg
+        };
+
+        let mut cont = JobSim::launch(mk(DrainStrategy::Counter), None).unwrap();
+        cont.run_steps(total).unwrap();
+        let want = cont.fingerprint();
+
+        for strategy in [DrainStrategy::Counter, DrainStrategy::Topo] {
+            let cfg = mk(strategy);
+            let mut sim = JobSim::launch(cfg.clone(), None).unwrap();
+            sim.run_steps(ckpt_at).unwrap();
+            let rep = sim.checkpoint().unwrap();
+            assert_eq!(rep.collectives_interrupted, 1);
+            let fs = sim.kill();
+            let (mut resumed, _) = JobSim::restart_from(cfg, None, fs).unwrap();
+            resumed.run_steps(total - ckpt_at).unwrap();
+            assert_eq!(
+                resumed.fingerprint(),
+                want,
+                "{} drain diverged from the uninterrupted run",
+                strategy.name()
+            );
+            assert!(!resumed.any_corruption());
+        }
+    });
+}
+
 /// Invariant (event-driven sim core): for any random job shape — rank
 /// count, coordination plane (flat/tree), pipeline mode, chunking mode
 /// (fixed/cdc), staging and redundancy scheme — the O(events)
